@@ -1,0 +1,81 @@
+//! Communication-budget planner: a deployment-facing tool built on the
+//! paper's overhead model (Remark 1 + eq. 17 + the intro's latency math).
+//!
+//! Given a wireless link capacity and an SL deployment (devices, batch,
+//! feature dim, rounds), it reports wall-clock transfer time for vanilla SL
+//! and for SplitFC at several (R, C_e) operating points — including the
+//! paper's intro example (10 Mbps, B=256, Dbar=8192, T=100, K=100
+//! => ~1.34e5 s uncompressed).
+//!
+//! It also *measures* the real encoded sizes by running the actual codec on
+//! a synthetic feature matrix with the requested dimensions, so the plan is
+//! based on true frame bits, not just the formula.
+//!
+//! Run:  cargo run --release --example comm_budget_planner -- \
+//!           [--capacity-bps 10e6 --batch 256 --dbar 8192 --devices 100 --iters 100]
+
+use splitfc::bench::print_table;
+use splitfc::compression::{encode_uplink, CodecParams, Scheme};
+use splitfc::tensor::{column_stats, normalized_sigma, Matrix};
+use splitfc::transport::channel::vanilla_sl_transfer_time_s;
+use splitfc::util::{Args, Rng};
+
+fn main() {
+    let args = Args::from_env();
+    let cap = args.get_f64("capacity-bps", 10e6);
+    let batch = args.get_usize("batch", 256);
+    let dbar = args.get_usize("dbar", 8192);
+    let devices = args.get_usize("devices", 100);
+    let iters = args.get_usize("iters", 100);
+
+    let vanilla_s = vanilla_sl_transfer_time_s(cap, batch, dbar, iters, devices);
+    println!(
+        "deployment: {devices} devices x {iters} iterations, B={batch}, Dbar={dbar}, \
+         link {:.1} Mbps",
+        cap / 1e6
+    );
+    println!("vanilla SL total transfer time: {vanilla_s:.3e} s (paper intro: ~1.34e5 s)");
+
+    // synth features with realistic heterogeneous dispersion
+    let mut rng = Rng::new(7);
+    let f = Matrix::from_fn(batch, dbar, |_, c| {
+        let scale = match c % 5 {
+            0 => 4.0,
+            1 => 1.0,
+            2 => 0.2,
+            3 => 0.02,
+            _ => 0.0,
+        };
+        scale * rng.normal_f32(0.0, 1.0) + (c % 17) as f32 * 0.05
+    });
+    let sigma = normalized_sigma(&column_stats(&f), 64.min(dbar));
+
+    let mut rows = Vec::new();
+    for (r, ce) in [(8.0, 0.4), (16.0, 0.2), (16.0, 0.133), (16.0, 0.1)] {
+        let params = CodecParams::new(batch, dbar, ce);
+        let mut rng = Rng::new(1);
+        let enc = encode_uplink(&Scheme::splitfc(r), &f, &sigma, &params, &mut rng);
+        let per_step_bits = enc.frame.payload_bits as f64;
+        // downlink approximated as the same budget (paper Table II couples them)
+        let total_s = 2.0 * per_step_bits * (iters * devices) as f64 / cap;
+        rows.push((
+            format!("SplitFC R={r} C_e={ce}"),
+            vec![
+                format!("{:.0}x", 32.0 / ce),
+                format!("{:.2}", per_step_bits / 1e6),
+                format!("{:.3e}", total_s),
+                format!("{:.0}x", vanilla_s / total_s),
+            ],
+        ));
+    }
+    print_table(
+        "SplitFC operating points (measured frame bits)",
+        &[
+            "target ratio".into(),
+            "Mbit/step".into(),
+            "total time s".into(),
+            "speedup".into(),
+        ],
+        &rows,
+    );
+}

@@ -1,0 +1,148 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* + dump params.
+
+Emits, per preset, into ``artifacts/<preset>/``:
+  device_fwd.hlo.txt, server_fwd_bwd.hlo.txt, device_bwd.hlo.txt,
+  eval_fwd.hlo.txt, feature_stats.hlo.txt, params.bin
+plus a global ``artifacts/manifest.json`` describing shapes/layouts for the
+Rust runtime.
+
+HLO *text* (NOT ``lowered.compile().serialize()`` and NOT serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the published
+``xla`` 0.1.6 crate) rejects (``proto.id() <= INT_MAX``). The text parser
+reassigns ids, so text round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Python runs ONLY here (``make artifacts``); the Rust binary is self-contained
+afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def build_preset(p: M.Preset, out_dir: str) -> dict:
+    os.makedirs(os.path.join(out_dir, p.name), exist_ok=True)
+    d_specs = M.device_param_specs(p)
+    s_specs = M.server_param_specs(p)
+    nd, ns = len(d_specs), len(s_specs)
+
+    x_s = _sds((p.batch, *p.in_shape))
+    f_s = _sds((p.batch, p.dbar))
+    y_s = _sds((p.batch, p.classes))
+    g_s = _sds((p.batch, p.dbar))
+    wd_s = [_sds(s) for _, s in d_specs]
+    ws_s = [_sds(s) for _, s in s_specs]
+
+    # Flat-argument wrappers: the Rust side passes a flat &[Literal].
+    def e_device_fwd(*a):
+        return (M.device_fwd(a[:nd], a[nd], p),)
+
+    def e_server_fwd_bwd(*a):
+        return M.server_fwd_bwd(a[:ns], a[ns], a[ns + 1])
+
+    def e_device_bwd(*a):
+        return M.device_bwd(a[:nd], a[nd], a[nd + 1], p)
+
+    def e_eval_fwd(*a):
+        return (M.eval_fwd(a[:nd], a[nd : nd + ns], a[nd + ns], p),)
+
+    def e_feature_stats(f):
+        return M.stats_entry(f, p)
+
+    entries = {
+        "device_fwd": (e_device_fwd, [*wd_s, x_s], 1),
+        "server_fwd_bwd": (e_server_fwd_bwd, [*ws_s, f_s, y_s], 2 + ns + 1),
+        "device_bwd": (e_device_bwd, [*wd_s, x_s, g_s], nd),
+        "eval_fwd": (e_eval_fwd, [*wd_s, *ws_s, x_s], 1),
+        "feature_stats": (e_feature_stats, [f_s], 4),
+    }
+
+    man_entries = {}
+    for name, (fn, args, nout) in entries.items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        rel = f"{p.name}/{name}.hlo.txt"
+        with open(os.path.join(out_dir, rel), "w") as fh:
+            fh.write(text)
+        man_entries[name] = {
+            "file": rel,
+            "num_inputs": len(args),
+            "num_outputs": nout,
+            "input_shapes": [list(a.shape) for a in args],
+        }
+        print(f"  {p.name}/{name}: {len(text)} chars, {len(args)} in, {nout} out")
+
+    # Initial parameters: device then server, concatenated f32 little-endian.
+    wd, ws = M.init_params(p)
+    import numpy as np
+
+    blob = b"".join(
+        np.asarray(a, dtype="<f4").tobytes() for a in (*wd, *ws)
+    )
+    rel_params = f"{p.name}/params.bin"
+    with open(os.path.join(out_dir, rel_params), "wb") as fh:
+        fh.write(blob)
+
+    c, fh_, fw_ = p.feat_map
+    return {
+        "batch": p.batch,
+        "dbar": p.dbar,
+        "num_channels": p.num_channels,
+        "chan_size": fh_ * fw_,
+        "classes": p.classes,
+        "in_shape": list(p.in_shape),
+        "hidden": p.hidden,
+        "nd_params": M.param_count(d_specs),
+        "ns_params": M.param_count(s_specs),
+        "device_params": [{"name": n, "shape": list(s)} for n, s in d_specs],
+        "server_params": [{"name": n, "shape": list(s)} for n, s in s_specs],
+        "params_file": rel_params,
+        "entries": man_entries,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--presets", default="tiny,mnist,cifar,celeba", help="comma-separated"
+    )
+    args = ap.parse_args()
+
+    manifest = {"format": 1, "presets": {}}
+    for name in args.presets.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        print(f"[aot] building preset {name!r}")
+        manifest["presets"][name] = build_preset(M.PRESETS[name], args.out_dir)
+
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as fh:
+        json.dump(manifest, fh, indent=1, sort_keys=True)
+    print(f"[aot] wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+from .matmul_fused import matmul_fused, default_tiles, vmem_bytes  # noqa: F401
+from .feature_stats import column_stats, feature_stats  # noqa: F401

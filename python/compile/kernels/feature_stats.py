@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: fused per-column statistics of the intermediate feature matrix.
+
+FWDP (paper Alg. 2, eqs. 9-10) needs, for F in R^{B x Dbar}:
+  * per-column min / max          (feeds channel normalization + FWQ ranges),
+  * per-column mean,
+  * per-column stddev of the *channel-normalized* features.
+
+A naive port would make four separate passes over F (HBM-bound). This kernel
+computes sum, sum-of-squares, min and max in a single VMEM-resident sweep per
+column tile — the TPU rethink of the paper's GPU reference, where the stats
+were separate torch reductions (see DESIGN.md §Hardware-Adaptation).
+
+Grid: one program per column tile of width TD; the full batch dimension B is
+resident in VMEM (B*TD*4 bytes, e.g. 256*256*4 = 256 KiB << 16 MiB).
+
+interpret=True: the CPU PJRT plugin cannot execute Mosaic custom-calls; the
+interpret path lowers the same schedule to plain HLO.
+
+The channel-level reduction (eq. 9's per-channel min/max) and the normalized
+sigma (eq. 10) are algebraic post-processing on the per-column stats and are
+done in the surrounding jax function `feature_stats` so everything lowers into
+one HLO module (`feature_stats.hlo.txt`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _stats_kernel(f_ref, sum_ref, sumsq_ref, min_ref, max_ref):
+    f = f_ref[...]  # (B, TD) block, VMEM-resident
+    sum_ref[...] = jnp.sum(f, axis=0, keepdims=True)
+    sumsq_ref[...] = jnp.sum(f * f, axis=0, keepdims=True)
+    min_ref[...] = jnp.min(f, axis=0, keepdims=True)
+    max_ref[...] = jnp.max(f, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("td",))
+def column_stats(f, td: int = 256):
+    """Single-pass per-column (sum, sumsq, min, max) of f: (B, D) f32."""
+    b, d = f.shape
+    td = min(td, _ceil_to(d, 8))
+    dp = _ceil_to(d, td)
+    # Pad columns so padding never wins min/max: pad with the first row's
+    # value replicated (neutral for min/max, excluded later by slicing).
+    fp = jnp.pad(f, ((0, 0), (0, dp - d)), mode="edge") if dp != d else f
+    grid = (dp // td,)
+    spec1 = pl.BlockSpec((1, td), lambda j: (0, j))
+    s, ss, mn, mx = pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((b, td), lambda j: (0, j))],
+        out_specs=[spec1, spec1, spec1, spec1],
+        out_shape=[jax.ShapeDtypeStruct((1, dp), jnp.float32)] * 4,
+        interpret=True,
+    )(fp)
+    return s[0, :d], ss[0, :d], mn[0, :d], mx[0, :d]
+
+
+def feature_stats(f, *, num_channels: int):
+    """Everything FWDP/FWQ needs from F, in one lowered module.
+
+    f: (B, Dbar) f32 with channel-major layout — column j belongs to channel
+    h = j // (Dbar/num_channels), i.e. the paper's index sets I_h are the
+    contiguous blocks of size Dbar/H (the flattened (C, H*W) feature map).
+
+    Returns (col_min, col_max, col_mean, sigma_norm) where sigma_norm is the
+    stddev of the channel-normalized features (paper eq. 10):
+        sigma_norm_i = sigma_raw_i / (f^max_{I_h} - f^min_{I_h})
+    using the algebraic identity that min-max normalization is affine, so the
+    normalized stddev is the raw stddev scaled by the channel range.
+    """
+    b, dbar = f.shape
+    assert dbar % num_channels == 0, (dbar, num_channels)
+    chan = dbar // num_channels
+
+    s, ss, mn, mx = column_stats(f)
+    mean = s / b
+    var = jnp.maximum(ss / b - mean * mean, 0.0)
+    sigma_raw = jnp.sqrt(var)
+
+    ch_min = jnp.min(mn.reshape(num_channels, chan), axis=1)
+    ch_max = jnp.max(mx.reshape(num_channels, chan), axis=1)
+    ch_range = ch_max - ch_min
+    # degenerate channel (constant values): normalized column is constant, so
+    # its normalized stddev is 0 — guard the division.
+    safe = jnp.where(ch_range > 0.0, ch_range, 1.0)
+    sigma_norm = sigma_raw / jnp.repeat(safe, chan)
+    sigma_norm = jnp.where(jnp.repeat(ch_range, chan) > 0.0, sigma_norm, 0.0)
+    return mn, mx, mean, sigma_norm

@@ -1,0 +1,151 @@
+"""L1 Pallas kernel: tiled matmul + bias + activation (the model's compute hot-spot).
+
+Every convolution (via im2col) and every dense layer in the L2 model funnels
+through this kernel, so it dominates the lowered HLO's FLOPs.
+
+TPU-style design (see DESIGN.md §Hardware-Adaptation):
+  * the (TM, TK) x (TK, TN) block schedule is expressed with BlockSpec index
+    maps — the Pallas analogue of the HBM->VMEM staging a CUDA kernel would do
+    with threadblocks + shared memory;
+  * tiles default to MXU-friendly multiples of 128 (capped by the problem
+    size) and are chosen so the working set  (TM*TK + TK*TN + TM*TN) * 4B
+    stays far below a 16 MiB VMEM budget;
+  * the accumulator lives in the output block across the K grid dimension
+    (sequential innermost grid axis), with bias + activation fused into the
+    final K step — one HBM write per output tile.
+
+The kernel is lowered with ``interpret=True``: on this image only the CPU PJRT
+plugin is available and real TPU lowering would emit a Mosaic custom-call the
+CPU client cannot execute.  The interpret path lowers to plain HLO
+(while-loop over the grid + dynamic slices), which is exactly what the Rust
+runtime loads.
+
+The backward pass is wired with ``jax.custom_vjp`` so that autodiff of the L2
+model *also* runs through this kernel (dx = g @ w.T and dw = x.T @ g are
+expressed as two more fused-matmul calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget used for tile selection (bytes). Real TPUv4 cores have ~16 MiB;
+# we keep the working set under half of it to leave room for double-buffering.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+_ACTIVATIONS = ("none", "relu")
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def default_tiles(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """Pick (TM, TK, TN): VMEM-bounded with a small grid.
+
+    On a real TPU the MXU wants TN/TK as multiples of 128 (lane width); the
+    CPU interpret path that this image can actually execute pays dearly for
+    lane padding (the grid loop copies whole padded blocks), so we align to
+    the 8-wide sublane only and cap at the MXU-friendly sizes. The VMEM
+    working-set bound below is the constraint that transfers to real
+    hardware; see DESIGN.md §Perf for the per-preset footprint estimates.
+    """
+    tm = min(_ceil_to(m, 8), 4096)
+    tn = min(_ceil_to(n, 8), 128)
+    tk = min(_ceil_to(k, 8), 2048)
+    # shrink TM if the working set exceeds the VMEM budget
+    while tm > 8 and 4 * (tm * tk + tk * tn + tm * tn) > VMEM_BUDGET_BYTES:
+        tm //= 2
+    return tm, tk, tn
+
+
+def vmem_bytes(tm: int, tk: int, tn: int) -> int:
+    """Working-set estimate for one grid step (x, w, o blocks, f32)."""
+    return 4 * (tm * tk + tk * tn + tm * tn)
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, activation: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        r = o_ref[...] + b_ref[...]
+        if activation == "relu":
+            r = jnp.maximum(r, 0.0)
+        o_ref[...] = r
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "tiles"))
+def _matmul_fused_fwd_impl(x, w, b, *, activation: str, tiles=None):
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert b.shape == (n,), (b.shape, n)
+    tm, tk, tn = tiles or default_tiles(m, k, n)
+
+    mp, kp, np_ = _ceil_to(m, tm), _ceil_to(k, tk), _ceil_to(n, tn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n)).reshape(1, np_)
+    nk = kp // tk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk, activation=activation),
+        grid=(mp // tm, np_ // tn, nk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, tn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def matmul_fused(x, w, b, activation="none"):
+    """``activation(x @ w + b)`` computed by the Pallas tile kernel.
+
+    x: (M, K) f32, w: (K, N) f32, b: (N,) f32. Returns (M, N) f32.
+    Differentiable (custom VJP; backward also runs through the kernel).
+    """
+    return _matmul_fused_fwd_impl(x, w, b, activation=activation)
+
+
+def _mm_fwd(x, w, b, activation):
+    out = _matmul_fused_fwd_impl(x, w, b, activation=activation)
+    return out, (x, w, out)
+
+
+def _mm_bwd(activation, res, g):
+    x, w, out = res
+    if activation == "relu":
+        g = g * (out > 0.0).astype(g.dtype)
+    # dx = g @ w.T ; dw = x.T @ g  — both through the same Pallas kernel.
+    dx = _matmul_fused_fwd_impl(
+        g, w.T, jnp.zeros((w.shape[0],), jnp.float32), activation="none"
+    )
+    dw = _matmul_fused_fwd_impl(
+        x.T, g, jnp.zeros((g.shape[1],), jnp.float32), activation="none"
+    )
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+matmul_fused.defvjp(_mm_fwd, _mm_bwd)

@@ -1,0 +1,268 @@
+"""L2: the paper's split model (device-side CNN + server-side MLP head) in JAX.
+
+Every conv (via explicit im2col) and dense layer calls the L1 Pallas kernel
+``kernels.matmul_fused``, so the whole fwd/bwd lowers into HLO whose FLOPs run
+through the kernel. Entry points lowered by aot.py (one HLO module each):
+
+  device_fwd(wd..., x)            -> F (B, Dbar)        — paper eq. (3)
+  server_fwd_bwd(ws..., F, y)     -> (loss, correct, grad_ws..., G) — eqs. (4),(5)
+  device_bwd(wd..., x, G)         -> grad_wd...          — chain rule, Alg. 1 l.20
+  eval_fwd(wd..., ws..., x)       -> logits              — test-set evaluation
+  feature_stats(F)                -> (col_min, col_max, col_mean, sigma_norm)
+
+Presets mirror the paper's three scenarios plus a `tiny` preset used by the
+Rust integration tests. `mnist` matches the paper exactly: the LeNet variant
+of Sec. VII with N_d = 4,800 and N_s = 148,874 parameters and Dbar = 1,152.
+`cifar` / `celeba` substitute from-scratch CNNs for the pretrained
+ConvNeXt / MobileNetV3 backbones (no ImageNet weights offline — DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_fused
+from .kernels.feature_stats import feature_stats
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class Preset:
+    name: str
+    in_shape: Tuple[int, int, int]  # (C, H, W)
+    convs: Tuple[Tuple[int, int], ...]  # ((out_ch, pad), ...) 3x3 kernels, pool-2 after each
+    hidden: int
+    classes: int
+    batch: int
+    seed: int = 0
+
+    @property
+    def feat_map(self) -> Tuple[int, int, int]:
+        """Shape (C_out, H_out, W_out) of the device-side output feature map."""
+        c, h, w = self.in_shape
+        for oc, pad in self.convs:
+            h = h + 2 * pad - 2  # 3x3 conv
+            w = w + 2 * pad - 2
+            h //= 2  # 2x2 max-pool stride 2
+            w //= 2
+            c = oc
+        return c, h, w
+
+    @property
+    def dbar(self) -> int:
+        c, h, w = self.feat_map
+        return c * h * w
+
+    @property
+    def num_channels(self) -> int:
+        """H in eq. (9): channel count of the intermediate feature map."""
+        return self.feat_map[0]
+
+
+PRESETS = {
+    # Rust integration tests: small + fast.
+    "tiny": Preset("tiny", (1, 8, 8), ((4, 1), (8, 1)), 16, 4, 8, seed=7),
+    # Paper Sec. VII MNIST scenario (exact LeNet-variant split).
+    "mnist": Preset("mnist", (1, 28, 28), ((16, 1), (32, 0)), 128, 10, 64, seed=1),
+    # CIFAR-100-like scenario (ConvNeXt substituted; Dbar 4096 vs paper 6144).
+    "cifar": Preset("cifar", (3, 32, 32), ((32, 1), (64, 1)), 256, 100, 32, seed=2),
+    # CelebA-like scenario (MobileNetV3 substituted; binary attribute task).
+    "celeba": Preset("celeba", (3, 32, 32), ((24, 1), (40, 1)), 128, 2, 32, seed=3),
+}
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def im2col(x, pad: int):
+    """Explicit 3x3 im2col with a deterministic (C, KH, KW) column layout.
+
+    x: (B, C, H, W) -> patches (B*OH*OW, C*9), OH = H + 2*pad - 2.
+    """
+    b, c, h, w = x.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh, ow = h + 2 * pad - 2, w + 2 * pad - 2
+    cols = []
+    for di in range(3):
+        for dj in range(3):
+            cols.append(x[:, :, di : di + oh, dj : dj + ow])
+    # (9, B, C, OH, OW) -> (B, OH, OW, C, 9) -> (B*OH*OW, C*9)
+    p = jnp.stack(cols, axis=0)
+    p = p.transpose(1, 3, 4, 2, 0)
+    return p.reshape(b * oh * ow, c * 9), (b, oh, ow)
+
+
+def conv3x3_relu(x, w, bias, pad: int, mm=matmul_fused):
+    """3x3 conv + bias + ReLU through the Pallas matmul. w: (C*9, OC)."""
+    patches, (b, oh, ow) = im2col(x, pad)
+    out = mm(patches, w, bias, "relu")
+    oc = w.shape[1]
+    return out.reshape(b, oh, ow, oc).transpose(0, 3, 1, 2)
+
+
+def maxpool2(x):
+    """2x2 max-pool, stride 2, NCHW."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def _softmax_xent(logits, y_onehot):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=-1) == jnp.argmax(y_onehot, axis=-1)).astype(
+            jnp.float32
+        )
+    )
+    return loss, correct
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def device_param_specs(p: Preset) -> List[Tuple[str, Tuple[int, ...]]]:
+    specs = []
+    c = p.in_shape[0]
+    for i, (oc, _pad) in enumerate(p.convs, 1):
+        specs.append((f"conv{i}_w", (c * 9, oc)))
+        specs.append((f"conv{i}_b", (oc,)))
+        c = oc
+    return specs
+
+
+def server_param_specs(p: Preset) -> List[Tuple[str, Tuple[int, ...]]]:
+    return [
+        ("fc1_w", (p.dbar, p.hidden)),
+        ("fc1_b", (p.hidden,)),
+        ("fc2_w", (p.hidden, p.classes)),
+        ("fc2_b", (p.classes,)),
+    ]
+
+
+def init_params(p: Preset):
+    """He-normal weights / zero biases, deterministic per preset seed."""
+    key = jax.random.PRNGKey(p.seed)
+
+    def init(specs):
+        nonlocal key
+        out = []
+        for name, shape in specs:
+            if name.endswith("_b"):
+                out.append(jnp.zeros(shape, jnp.float32))
+            else:
+                key, sub = jax.random.split(key)
+                fan_in = shape[0]
+                std = (2.0 / fan_in) ** 0.5
+                out.append(std * jax.random.normal(sub, shape, jnp.float32))
+        return out
+
+    return init(device_param_specs(p)), init(server_param_specs(p))
+
+
+def param_count(specs) -> int:
+    n = 0
+    for _, shape in specs:
+        sz = 1
+        for d in shape:
+            sz *= d
+        n += sz
+    return n
+
+
+# ---------------------------------------------------------------------------
+# model functions (Pallas path and pure-jnp reference path)
+# ---------------------------------------------------------------------------
+
+def _device_fwd(wd: list, x, p: Preset, mm):
+    i = 0
+    for _, pad in p.convs:
+        x = conv3x3_relu(x, wd[i], wd[i + 1], pad, mm=mm)
+        x = maxpool2(x)
+        i += 2
+    b = x.shape[0]
+    # channel-major flatten: column j belongs to channel j // (h*w) — the
+    # paper's contiguous index sets I_h (eq. 9).
+    return x.reshape(b, p.dbar)
+
+
+def _server_fwd(ws: list, f, mm):
+    h = mm(f, ws[0], ws[1], "relu")
+    return mm(h, ws[2], ws[3], "none")
+
+
+def device_fwd(wd, x, p: Preset):
+    return _device_fwd(list(wd), x, p, matmul_fused)
+
+
+def server_fwd(ws, f):
+    return _server_fwd(list(ws), f, matmul_fused)
+
+
+def server_fwd_bwd(ws, f, y, _p: Preset = None):
+    """PS side of one step: loss, correct count, ∇w_s, and G = ∇_F h (eq. 5)."""
+    ws = list(ws)
+
+    def lf(ws_, f_):
+        logits = _server_fwd(ws_, f_, matmul_fused)
+        loss, correct = _softmax_xent(logits, y)
+        return loss, correct
+
+    (loss, correct), (gws, gf) = jax.value_and_grad(
+        lf, argnums=(0, 1), has_aux=True
+    )(ws, f)
+    return (loss, correct, *gws, gf)
+
+
+def device_bwd(wd, x, g, p: Preset):
+    """Device backward: VJP of device_fwd with the (reconstructed) cotangent Ĝ."""
+    wd = list(wd)
+    _, vjp = jax.vjp(lambda wd_: _device_fwd(wd_, x, p, matmul_fused), wd)
+    (gwd,) = vjp(g)
+    return tuple(gwd)
+
+
+def eval_fwd(wd, ws, x, p: Preset):
+    return _server_fwd(list(ws), _device_fwd(list(wd), x, p, matmul_fused), matmul_fused)
+
+
+def stats_entry(f, p: Preset):
+    return feature_stats(f, num_channels=p.num_channels)
+
+
+# pure-jnp reference path (tests only; never lowered) ------------------------
+
+def device_fwd_ref(wd, x, p: Preset):
+    return _device_fwd(list(wd), x, p, kref.matmul_fused_ref)
+
+
+def server_fwd_ref(ws, f):
+    return _server_fwd(list(ws), f, kref.matmul_fused_ref)
+
+
+def server_fwd_bwd_ref(ws, f, y):
+    ws = list(ws)
+
+    def lf(ws_, f_):
+        logits = _server_fwd(ws_, f_, kref.matmul_fused_ref)
+        loss, correct = _softmax_xent(logits, y)
+        return loss, correct
+
+    (loss, correct), (gws, gf) = jax.value_and_grad(
+        lf, argnums=(0, 1), has_aux=True
+    )(ws, f)
+    return (loss, correct, *gws, gf)
+
+
+def device_bwd_ref(wd, x, g, p: Preset):
+    wd = list(wd)
+    _, vjp = jax.vjp(lambda wd_: _device_fwd(wd_, x, p, kref.matmul_fused_ref), wd)
+    (gwd,) = vjp(g)
+    return tuple(gwd)

@@ -1,0 +1,99 @@
+"""TPU roofline / VMEM-footprint estimator for the L1 Pallas kernels.
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so per the
+session contract the real-hardware story is *estimated structurally* from
+the BlockSpec schedule: VMEM working set per grid step, MXU utilization
+(fraction of each (TM,TK)x(TK,TN) block that is real work vs padding), and
+arithmetic intensity (FLOPs per HBM byte) against a TPUv4-like roofline
+(275 TF/s bf16 ≈ 137 TF/s f32-ish MXU, 1200 GB/s HBM).
+
+Usage:  python -m compile.roofline [--out ../artifacts/roofline.json]
+The numbers land in DESIGN.md §Perf / EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from . import model as M
+from .kernels.matmul_fused import default_tiles, vmem_bytes
+
+VMEM_LIMIT = 16 * 1024 * 1024  # bytes per TPUv4 core
+PEAK_FLOPS = 137e12  # f32-through-MXU ballpark
+HBM_BW = 1.2e12  # bytes/s
+
+
+def matmul_shapes(p: M.Preset) -> list[tuple[str, int, int, int]]:
+    """Every (M, K, N) the model pushes through the Pallas matmul (fwd)."""
+    shapes = []
+    c, h, w = p.in_shape
+    for i, (oc, pad) in enumerate(p.convs, 1):
+        oh, ow = h + 2 * pad - 2, w + 2 * pad - 2
+        shapes.append((f"conv{i}", p.batch * oh * ow, c * 9, oc))
+        h, w, c = oh // 2, ow // 2, oc
+    shapes.append(("fc1", p.batch, p.dbar, p.hidden))
+    shapes.append(("fc2", p.batch, p.hidden, p.classes))
+    return shapes
+
+
+def analyze(name: str, m: int, k: int, n: int) -> dict:
+    tm, tk, tn = default_tiles(m, k, n)
+    ceil = lambda a, b: -(-a // b)
+    grid = (ceil(m, tm), ceil(n, tn), ceil(k, tk))
+    vmem = vmem_bytes(tm, tk, tn)
+    # MXU utilization: useful fraction of the padded block volume
+    mp, kp, np_ = ceil(m, tm) * tm, ceil(k, tk) * tk, ceil(n, tn) * tn
+    util = (m * k * n) / (mp * kp * np_)
+    flops = 2.0 * m * k * n
+    # HBM traffic: x read once per j-tile, w once per i-tile, o written once
+    bytes_hbm = 4.0 * (m * k * grid[1] + k * n * grid[0] + m * n)
+    intensity = flops / bytes_hbm
+    # roofline: attainable = min(peak * util, intensity * BW)
+    attainable = min(PEAK_FLOPS * util, intensity * HBM_BW)
+    return {
+        "op": name,
+        "mkn": [m, k, n],
+        "tiles": [tm, tk, tn],
+        "grid": list(grid),
+        "vmem_bytes": vmem,
+        "vmem_ok": vmem <= VMEM_LIMIT,
+        "mxu_utilization": round(util, 4),
+        "arithmetic_intensity": round(intensity, 2),
+        "attainable_tflops": round(attainable / 1e12, 2),
+        "bound": "compute" if PEAK_FLOPS * util <= intensity * HBM_BW else "memory",
+    }
+
+
+def report(presets: list[str]) -> dict:
+    out = {}
+    for name in presets:
+        p = M.PRESETS[name]
+        ops = [analyze(n, m, k, nn) for (n, m, k, nn) in matmul_shapes(p)]
+        total_flops = sum(2.0 * m * k * nn for (_, m, k, nn) in matmul_shapes(p))
+        out[name] = {
+            "ops": ops,
+            "fwd_gflops_per_step": round(total_flops / 1e9, 3),
+            "worst_vmem_bytes": max(o["vmem_bytes"] for o in ops),
+            "min_mxu_utilization": min(o["mxu_utilization"] for o in ops),
+        }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/roofline.json")
+    ap.add_argument("--presets", default="tiny,mnist,cifar,celeba")
+    args = ap.parse_args()
+    rep = report([s for s in args.presets.split(",") if s])
+    with open(args.out, "w") as fh:
+        json.dump(rep, fh, indent=1)
+    for name, r in rep.items():
+        print(f"[roofline] {name}: fwd {r['fwd_gflops_per_step']} GFLOP/step, "
+              f"worst VMEM {r['worst_vmem_bytes']/1e6:.2f} MB, "
+              f"min MXU util {r['min_mxu_utilization']:.2%}")
+    print(f"[roofline] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

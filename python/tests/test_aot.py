@@ -1,0 +1,80 @@
+"""AOT pipeline checks: HLO text is parseable-looking, manifest is consistent
+with the model presets, params.bin has the right byte length."""
+
+import json
+import os
+
+import pytest
+
+from compile import model as M
+from compile import aot
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as fh:
+        return json.load(fh)
+
+
+class TestHloText:
+    def test_lower_tiny_entry_produces_hlo_text(self):
+        import jax, jax.numpy as jnp
+
+        p = M.PRESETS["tiny"]
+        f_s = jax.ShapeDtypeStruct((p.batch, p.dbar), jnp.float32)
+        lowered = jax.jit(lambda f: M.stats_entry(f, p)).lower(f_s)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_manifest_entries_exist_on_disk(self):
+        man = _manifest()
+        for preset in man["presets"].values():
+            for e in preset["entries"].values():
+                path = os.path.join(ART, e["file"])
+                assert os.path.exists(path), path
+                with open(path) as fh:
+                    head = fh.read(64)
+                assert head.startswith("HloModule")
+
+
+class TestManifestConsistency:
+    def test_presets_match_model(self):
+        man = _manifest()
+        for name, mp in man["presets"].items():
+            p = M.PRESETS[name]
+            assert mp["batch"] == p.batch
+            assert mp["dbar"] == p.dbar
+            assert mp["num_channels"] == p.num_channels
+            assert mp["classes"] == p.classes
+            assert mp["nd_params"] == M.param_count(M.device_param_specs(p))
+            assert mp["ns_params"] == M.param_count(M.server_param_specs(p))
+
+    def test_params_bin_length(self):
+        man = _manifest()
+        for name, mp in man["presets"].items():
+            n_floats = mp["nd_params"] + mp["ns_params"]
+            path = os.path.join(ART, mp["params_file"])
+            assert os.path.getsize(path) == 4 * n_floats
+
+    def test_entry_arity(self):
+        man = _manifest()
+        for name, mp in man["presets"].items():
+            nd = len(mp["device_params"])
+            ns = len(mp["server_params"])
+            e = mp["entries"]
+            assert e["device_fwd"]["num_inputs"] == nd + 1
+            assert e["server_fwd_bwd"]["num_inputs"] == ns + 2
+            assert e["server_fwd_bwd"]["num_outputs"] == 2 + ns + 1
+            assert e["device_bwd"]["num_outputs"] == nd
+            assert e["feature_stats"]["num_outputs"] == 4
+
+    def test_input_shapes_recorded(self):
+        man = _manifest()
+        mp = man["presets"]["tiny"]
+        df = mp["entries"]["device_fwd"]
+        assert df["input_shapes"][-1] == [mp["batch"], *mp["in_shape"]]

@@ -1,0 +1,141 @@
+"""Kernel-vs-oracle correctness: hypothesis sweeps of shapes and values.
+
+This is the L1 correctness gate: the Pallas kernels (interpret=True) must
+match the pure-jnp oracles in kernels/ref.py over a broad random family of
+shapes, paddings (non-tile-multiple dims), activations, and value ranges.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_fused, column_stats, feature_stats, default_tiles, vmem_bytes
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.integers(min_value=1, max_value=70)
+small_dims = st.integers(min_value=1, max_value=33)
+scales = st.sampled_from([1e-3, 1.0, 37.5, 1e3])
+
+
+def _arr(rng, shape, scale):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+class TestMatmulFused:
+    @settings(max_examples=25, deadline=None)
+    @given(m=dims, k=dims, n=small_dims, act=st.sampled_from(["none", "relu"]),
+           scale=scales, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, m, k, n, act, scale, seed):
+        rng = np.random.default_rng(seed)
+        x, w, b = _arr(rng, (m, k), scale), _arr(rng, (k, n), scale), _arr(rng, (n,), scale)
+        out = matmul_fused(x, w, b, act)
+        ref = R.matmul_fused_ref(x, w, b, act)
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4 * scale * scale * k)
+
+    def test_exact_tile_multiple(self):
+        rng = np.random.default_rng(0)
+        x, w, b = _arr(rng, (256, 512), 1.0), _arr(rng, (512, 128), 1.0), _arr(rng, (128,), 1.0)
+        np.testing.assert_allclose(
+            matmul_fused(x, w, b, "none"), R.matmul_fused_ref(x, w, b, "none"),
+            rtol=1e-4, atol=1e-3,
+        )
+
+    def test_relu_clamps(self):
+        rng = np.random.default_rng(1)
+        x, w = _arr(rng, (16, 8), 1.0), _arr(rng, (8, 4), 1.0)
+        b = jnp.full((4,), -100.0)
+        out = matmul_fused(x, w, b, "relu")
+        assert float(jnp.min(out)) == 0.0
+
+    def test_grad_matches_ref(self):
+        """custom_vjp path: autodiff through the kernel equals jnp autodiff."""
+        rng = np.random.default_rng(2)
+        x, w, b = _arr(rng, (9, 7), 1.0), _arr(rng, (7, 5), 1.0), _arr(rng, (5,), 1.0)
+        for act in ("none", "relu"):
+            def f_kernel(x, w, b):
+                return jnp.sum(matmul_fused(x, w, b, act) ** 2)
+
+            def f_ref(x, w, b):
+                return jnp.sum(R.matmul_fused_ref(x, w, b, act) ** 2)
+
+            gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+            gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+            for a, r in zip(gk, gr):
+                np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-4)
+
+    def test_default_tiles_vmem_budget(self):
+        """Chosen tiles keep the working set under the VMEM budget."""
+        for m, k, n in [(50176, 144, 16), (64, 1152, 128), (8192, 512, 512), (1, 1, 1)]:
+            tm, tk, tn = default_tiles(m, k, n)
+            assert vmem_bytes(tm, tk, tn) <= 8 * 1024 * 1024
+            assert tm >= 1 and tk >= 1 and tn >= 1
+
+    def test_mxu_alignment_when_large(self):
+        tm, tk, tn = default_tiles(4096, 4096, 4096)
+        assert tn % 128 == 0 and tk % 128 == 0
+
+
+class TestColumnStats:
+    @settings(max_examples=25, deadline=None)
+    @given(b=st.integers(1, 64), d=st.integers(1, 300),
+           scale=scales, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, b, d, scale, seed):
+        rng = np.random.default_rng(seed)
+        f = _arr(rng, (b, d), scale)
+        out = column_stats(f)
+        ref = R.column_stats_ref(f)
+        for a, r in zip(out, ref):
+            np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-4 * scale * scale * b)
+
+    def test_constant_columns(self):
+        f = jnp.ones((8, 40)) * 3.0
+        s, ss, mn, mx = column_stats(f)
+        np.testing.assert_allclose(mn, mx)
+        np.testing.assert_allclose(s, jnp.full((40,), 24.0))
+
+    def test_single_column(self):
+        f = jnp.arange(5.0).reshape(5, 1)
+        s, ss, mn, mx = column_stats(f)
+        assert float(s[0]) == 10.0 and float(mn[0]) == 0.0 and float(mx[0]) == 4.0
+
+
+class TestFeatureStats:
+    @settings(max_examples=25, deadline=None)
+    @given(b=st.integers(2, 32), chan=st.integers(1, 16), h=st.integers(1, 12),
+           scale=scales, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, b, chan, h, scale, seed):
+        rng = np.random.default_rng(seed)
+        f = _arr(rng, (b, h * chan), scale)
+        out = feature_stats(f, num_channels=h)
+        ref = R.feature_stats_ref(f, num_channels=h)
+        for a, r in zip(out, ref):
+            np.testing.assert_allclose(a, r, rtol=2e-3, atol=2e-3)
+
+    def test_degenerate_channel(self):
+        """A constant channel must produce sigma_norm = 0, not NaN (eq. 9 guard)."""
+        rng = np.random.default_rng(3)
+        f = jnp.concatenate(
+            [jnp.full((8, 4), 2.5), _arr(rng, (8, 4), 1.0)], axis=1
+        )
+        mn, mx, mean, sigma = feature_stats(f, num_channels=2)
+        assert not bool(jnp.any(jnp.isnan(sigma)))
+        np.testing.assert_allclose(sigma[:4], jnp.zeros(4))
+
+    def test_sigma_normalized_range(self):
+        """Normalized features live in [0,1] so sigma_norm <= 0.5 (paper Fig. 1b)."""
+        rng = np.random.default_rng(4)
+        f = _arr(rng, (64, 48), 123.0)
+        *_, sigma = feature_stats(f, num_channels=6)
+        assert float(jnp.max(sigma)) <= 0.5 + 1e-6
+
+    def test_scale_invariance_of_sigma_norm(self):
+        """sigma_norm is invariant to per-channel affine rescaling of F."""
+        rng = np.random.default_rng(5)
+        f = _arr(rng, (16, 20), 1.0)
+        *_, s1 = feature_stats(f, num_channels=4)
+        *_, s2 = feature_stats(f * 500.0 + 3.0, num_channels=4)
+        np.testing.assert_allclose(s1, s2, rtol=1e-3, atol=1e-5)

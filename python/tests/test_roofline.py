@@ -1,0 +1,53 @@
+"""Roofline estimator checks: VMEM bounds, utilization sanity, shape math."""
+
+from compile import model as M
+from compile import roofline as R
+
+
+class TestMatmulShapes:
+    def test_mnist_conv_shapes(self):
+        p = M.PRESETS["mnist"]
+        shapes = dict((n, (m, k, nn)) for n, m, k, nn in R.matmul_shapes(p))
+        # conv1: B*28*28 patches of 1*9 -> 16 channels
+        assert shapes["conv1"] == (p.batch * 28 * 28, 9, 16)
+        # conv2 (pad 0 on 14x14): B*12*12 patches of 16*9 -> 32
+        assert shapes["conv2"] == (p.batch * 12 * 12, 144, 32)
+        assert shapes["fc1"] == (p.batch, 1152, 128)
+        assert shapes["fc2"] == (p.batch, 128, 10)
+
+    def test_every_preset_covered(self):
+        for name, p in M.PRESETS.items():
+            shapes = R.matmul_shapes(p)
+            assert len(shapes) == len(p.convs) + 2
+
+
+class TestAnalyze:
+    def test_vmem_within_budget_for_all_presets(self):
+        rep = R.report(list(M.PRESETS))
+        for name, r in rep.items():
+            assert r["worst_vmem_bytes"] <= R.VMEM_LIMIT, name
+            for op in r["ops"]:
+                assert op["vmem_ok"], (name, op)
+
+    def test_utilization_in_unit_interval(self):
+        rep = R.report(["mnist"])
+        for op in rep["mnist"]["ops"]:
+            assert 0.0 < op["mxu_utilization"] <= 1.0
+
+    def test_attainable_below_peak(self):
+        rep = R.report(["cifar"])
+        for op in rep["cifar"]["ops"]:
+            assert op["attainable_tflops"] <= R.PEAK_FLOPS / 1e12 + 1e-9
+
+    def test_flop_count_matches_hand_calc(self):
+        # tiny fc2: 2 * B * hidden * classes
+        p = M.PRESETS["tiny"]
+        a = R.analyze("fc2", p.batch, p.hidden, p.classes)
+        assert a["mkn"] == [p.batch, p.hidden, p.classes]
+
+    def test_bound_classification(self):
+        a = R.analyze("big", 8192, 8192, 8192)
+        assert a["bound"] in ("compute", "memory")
+        # a tiny op is always memory-bound
+        b = R.analyze("small", 8, 8, 8)
+        assert b["bound"] == "memory"

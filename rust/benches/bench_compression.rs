@@ -1,0 +1,83 @@
+//! Hot-path microbenchmarks: the FWDP/FWQ codec and every baseline on an
+//! MNIST-shaped intermediate matrix (B=64, Dbar=1152). This is the L3
+//! perf gate: codec throughput must far exceed the simulated link rate so
+//! the coordinator is never the bottleneck (DESIGN.md §Perf).
+
+use splitfc::bench::{Bencher, BenchStats};
+use splitfc::compression::{
+    encode_downlink, encode_uplink, CodecParams, DropKind, FwqMode, ScalarKind, Scheme,
+};
+use splitfc::tensor::{column_stats, normalized_sigma, Matrix};
+use splitfc::util::Rng;
+
+fn main() {
+    let (b, d) = (64usize, 1152usize);
+    let mut rng = Rng::new(3);
+    let f = Matrix::from_fn(b, d, |_, c| {
+        let scale = [4.0, 1.0, 0.2, 0.02, 0.0][c % 5];
+        scale * rng.normal_f32(0.0, 1.0) + (c % 13) as f32 * 0.1
+    });
+    let sigma = normalized_sigma(&column_stats(&f), 36);
+    let entries = (b * d) as f64;
+
+    let bench = Bencher::default();
+    let mut all: Vec<BenchStats> = Vec::new();
+    let schemes: Vec<(&str, Scheme, f64)> = vec![
+        ("uplink/vanilla-dump", Scheme::Vanilla, 32.0),
+        ("uplink/splitfc-R16@0.2", Scheme::splitfc(16.0), 0.2),
+        ("uplink/splitfc-R8@0.4", Scheme::splitfc(8.0), 0.4),
+        (
+            "uplink/splitfc-ad-only",
+            Scheme::SplitFc { drop: Some(DropKind::Adaptive), r: 16.0, quant: FwqMode::NoQuant },
+            32.0,
+        ),
+        (
+            "uplink/ad+eq@0.2",
+            Scheme::SplitFc {
+                drop: Some(DropKind::Adaptive),
+                r: 16.0,
+                quant: FwqMode::Scalar(ScalarKind::Eq),
+            },
+            0.2,
+        ),
+        ("uplink/tops@0.2", Scheme::TopS { theta: 0.0, quant: None }, 0.2),
+        ("uplink/randtops@0.2", Scheme::TopS { theta: 0.2, quant: None }, 0.2),
+        ("uplink/fedlite@0.2", Scheme::FedLite { num_subvectors: 16 }, 0.2),
+    ];
+    for (name, scheme, bpe) in &schemes {
+        let params = CodecParams::new(b, d, *bpe);
+        let mut rng = Rng::new(11);
+        let mut st = bench.run(name, || {
+            encode_uplink(scheme, &f, &sigma, &params, &mut rng).frame.payload_bits
+        });
+        st.throughput = Some((entries / st.p50_s / 1e6, "Mentries/s"));
+        println!("{}", st.report());
+        all.push(st);
+    }
+
+    // downlink with column mask (SplitFC path)
+    let params = CodecParams::new(b, d, 0.2);
+    let mut rng2 = Rng::new(5);
+    let enc = encode_uplink(&Scheme::splitfc(16.0), &f, &sigma, &params, &mut rng2);
+    let g = Matrix::from_fn(b, d, |r, c| ((r * 31 + c) % 11) as f32 * 0.01 - 0.05);
+    let mut st = bench.run("downlink/splitfc-R16@0.2", || {
+        encode_downlink(&Scheme::splitfc(16.0), &g, &enc.mask, &params).frame.payload_bits
+    });
+    st.throughput = Some((entries / st.p50_s / 1e6, "Mentries/s"));
+    println!("{}", st.report());
+
+    // coordinator-not-the-bottleneck check: the codec must cost far less
+    // wall time than the transfer time it *saves* (uncompressed-vs-
+    // compressed at a 10 Mbps device uplink, the paper's link).
+    let splitfc = &all[1];
+    let uncompressed_s = (32.0 * entries) / 10e6;
+    let compressed_s = (0.2 * entries) / 10e6;
+    let saved = uncompressed_s - compressed_s;
+    println!(
+        "\nsplitfc encode p50 {:.2}ms vs transfer-time saved {:.0}ms/step on a 10 Mbps link \
+         => codec overhead is {:.2}% of the saving",
+        splitfc.p50_s * 1e3,
+        saved * 1e3,
+        100.0 * splitfc.p50_s / saved
+    );
+}

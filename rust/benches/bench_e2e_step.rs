@@ -1,0 +1,27 @@
+//! End-to-end step latency: one full (t, k) protocol step (device_fwd ->
+//! stats -> FWDP/FWQ -> server_fwd_bwd -> downlink -> device_bwd -> ADAM)
+//! through the PJRT runtime, per preset and scheme. Requires artifacts.
+
+use splitfc::bench::Bencher;
+use splitfc::config::{parse_scheme, TrainConfig};
+use splitfc::coordinator::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bencher { min_time_s: 2.0, warmup_s: 0.3, max_iters: 200 };
+    for preset in ["tiny", "mnist"] {
+        for (scheme, bpe) in [("vanilla", 32.0), ("splitfc", 0.2), ("tops", 0.2)] {
+            let mut cfg = TrainConfig::for_preset(preset);
+            cfg.scheme = parse_scheme(scheme, 16.0);
+            cfg.up_bits_per_entry = bpe;
+            cfg.down_bits_per_entry = 32.0;
+            let mut tr = Trainer::new(cfg)?;
+            let mut t = 0usize;
+            let st = bench.run(&format!("step/{preset}/{scheme}"), || {
+                t += 1;
+                tr.step(t, t % 2).expect("step")
+            });
+            println!("{}", st.report());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Regenerates the paper's Table III (component ablation) at bench scale (shrunken rounds/devices; the
+//! same rows/series as the paper — run `splitfc experiment table3` with
+//! --rounds/--devices/--presets for fuller scales).
+
+use splitfc::coordinator::experiments;
+use splitfc::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let mut args = Args::parse(&argv);
+    for (k, v) in [("rounds", "5"), ("devices", "4"), ("n-train", "1024"), ("n-test", "256")] {
+        args.options.entry(k.to_string()).or_insert_with(|| v.to_string());
+    }
+    let t0 = std::time::Instant::now();
+    experiments::run("table3", &args)?;
+    println!("\n[bench_table3 completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    Ok(())
+}

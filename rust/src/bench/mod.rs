@@ -1,0 +1,156 @@
+//! Criterion-style micro-benchmark harness (criterion is not in the offline
+//! registry). Provides warmup, timed iterations, and robust summary stats
+//! (mean / p50 / p95 / MAD), plus a table printer shared by the paper-table
+//! benches in `rust/benches/`.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub mad_s: f64,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        let tp = self
+            .throughput
+            .map(|(v, unit)| format!("  {:.3} {unit}", v))
+            .unwrap_or_default();
+        format!(
+            "{:<44} {:>10}/iter  p50 {:>10}  p95 {:>10}  ±{:>9}{tp}",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p95_s),
+            fmt_time(self.mad_s),
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+pub struct Bencher {
+    /// minimum wall time to spend measuring each benchmark
+    pub min_time_s: f64,
+    pub warmup_s: f64,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { min_time_s: 1.0, warmup_s: 0.2, max_iters: 10_000 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Bencher {
+        Bencher { min_time_s: 0.3, warmup_s: 0.05, max_iters: 2_000 }
+    }
+
+    /// Time `f` repeatedly; the closure's return value is black-boxed.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed().as_secs_f64() < self.warmup_s {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed().as_secs_f64() < self.min_time_s && samples.len() < self.max_iters {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            samples.push(s.elapsed().as_secs_f64());
+        }
+        Self::stats(name, samples)
+    }
+
+    fn stats(name: &str, mut samples: Vec<f64>) -> BenchStats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let p50 = samples[n / 2];
+        let p95 = samples[(n * 95 / 100).min(n - 1)];
+        let mut dev: Vec<f64> = samples.iter().map(|&x| (x - p50).abs()).collect();
+        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        BenchStats {
+            name: name.to_string(),
+            iters: n,
+            mean_s: mean,
+            p50_s: p50,
+            p95_s: p95,
+            mad_s: dev[n / 2],
+            throughput: None,
+        }
+    }
+}
+
+/// Print a paper-style table (rows of label + columns).
+pub fn print_table(title: &str, header: &[String], rows: &[(String, Vec<String>)]) {
+    println!("\n=== {title} ===");
+    let w0 = rows.iter().map(|(l, _)| l.len()).chain([16]).max().unwrap();
+    print!("{:<w0$}", "");
+    for h in header {
+        print!(" | {h:>12}");
+    }
+    println!();
+    println!("{}", "-".repeat(w0 + header.len() * 15));
+    for (label, cols) in rows {
+        print!("{label:<w0$}");
+        for c in cols {
+            print!(" | {c:>12}");
+        }
+        println!();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_positive_stats() {
+        let b = Bencher { min_time_s: 0.02, warmup_s: 0.0, max_iters: 100 };
+        let st = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i * i);
+            }
+            x
+        });
+        assert!(st.iters > 0);
+        assert!(st.mean_s > 0.0);
+        assert!(st.p95_s >= st.p50_s);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-6).ends_with("µs"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with('s'));
+    }
+
+    #[test]
+    fn stats_sorted_quantiles() {
+        let st = Bencher::stats("x", vec![3.0, 1.0, 2.0, 10.0]);
+        assert_eq!(st.p50_s, 3.0);
+        assert!(st.p95_s >= st.p50_s);
+    }
+}

@@ -1,0 +1,179 @@
+//! Bit-granular serialization substrate.
+//!
+//! Every "transmitted" object in the simulator is a real byte buffer built
+//! here, so reported communication overheads are *measured*, not estimated.
+//!
+//! `write_radix` / `read_radix` implement near-entropy packing of symbols
+//! drawn from an alphabet of arbitrary (non-power-of-2) size `q`: groups of
+//! `k = floor(64 / log2 q)` symbols are combined into one base-q integer and
+//! written in `ceil(k*log2 q)` bits, wasting < 1 bit per group. This matters
+//! because the paper's optimal quantization levels (Theorem 1) are integers
+//! like 3 or 5 whose ideal cost `log2 Q` is fractional.
+
+pub mod reader;
+pub mod writer;
+
+pub use reader::BitReader;
+pub use writer::BitWriter;
+
+/// Symbols per 64-bit group for radix packing of base-`q` digits.
+pub fn radix_group_len(q: u64) -> usize {
+    assert!(q >= 2);
+    let mut k = 0usize;
+    let mut acc: u128 = 1;
+    while acc * (q as u128) <= (u64::MAX as u128) + 1 {
+        acc *= q as u128;
+        k += 1;
+    }
+    k.max(1)
+}
+
+/// Bits needed to store one group of `k` base-`q` digits.
+pub fn radix_group_bits(q: u64, k: usize) -> u32 {
+    // ceil(log2(q^k)) computed exactly in u128
+    let mut acc: u128 = 1;
+    for _ in 0..k {
+        acc *= q as u128;
+    }
+    128 - (acc - 1).leading_zeros()
+}
+
+/// Effective bits/symbol achieved by radix packing (for budget checks).
+pub fn radix_bits_per_symbol(q: u64) -> f64 {
+    let k = radix_group_len(q);
+    radix_group_bits(q, k) as f64 / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn writer_reader_roundtrip_bits() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0xFFFF, 16);
+        w.write_bits(0, 1);
+        w.write_bits(0x1234_5678_9ABC_DEF0, 64);
+        let bits = w.bit_len();
+        let buf = w.into_bytes();
+        assert_eq!(bits, 3 + 16 + 1 + 64);
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_bits(3), 0b101);
+        assert_eq!(r.read_bits(16), 0xFFFF);
+        assert_eq!(r.read_bits(1), 0);
+        assert_eq!(r.read_bits(64), 0x1234_5678_9ABC_DEF0);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let vals = [0.0f32, -1.5, f32::MAX, f32::MIN_POSITIVE, 3.14159];
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            w.write_f32(v);
+        }
+        let buf = w.into_bytes();
+        let mut r = BitReader::new(&buf);
+        for &v in &vals {
+            assert_eq!(r.read_f32().to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn unaligned_f32_roundtrip() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b11, 2);
+        w.write_f32(-42.25);
+        let buf = w.into_bytes();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_bits(2), 0b11);
+        assert_eq!(r.read_f32(), -42.25);
+    }
+
+    #[test]
+    fn property_random_bit_sequences_roundtrip() {
+        let mut rng = Rng::new(99);
+        for _case in 0..50 {
+            let n = 1 + rng.gen_range(64);
+            let items: Vec<(u64, u32)> = (0..n)
+                .map(|_| {
+                    let bits = 1 + rng.gen_range(64) as u32;
+                    let v = rng.next_u64() & if bits == 64 { u64::MAX } else { (1 << bits) - 1 };
+                    (v, bits)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, b) in &items {
+                w.write_bits(v, b);
+            }
+            let buf = w.into_bytes();
+            let mut r = BitReader::new(&buf);
+            for &(v, b) in &items {
+                assert_eq!(r.read_bits(b), v, "bits={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn radix_group_len_examples() {
+        assert_eq!(radix_group_len(2), 64);
+        assert_eq!(radix_group_len(3), 40); // 3^40 < 2^64 < 3^41
+        assert_eq!(radix_group_len(256), 8);
+        assert_eq!(radix_group_len(5), 27);
+    }
+
+    #[test]
+    fn radix_efficiency_close_to_entropy() {
+        for q in [2u64, 3, 5, 6, 7, 9, 100, 1000] {
+            let ideal = (q as f64).log2();
+            let eff = radix_bits_per_symbol(q);
+            assert!(eff >= ideal - 1e-9, "q={q}");
+            assert!(eff <= ideal + 0.05, "q={q} eff={eff} ideal={ideal}");
+        }
+    }
+
+    #[test]
+    fn radix_roundtrip_random() {
+        let mut rng = Rng::new(5);
+        for &q in &[2u64, 3, 5, 17, 200, 65536] {
+            for _ in 0..5 {
+                let n = rng.gen_range(200);
+                let syms: Vec<u64> = (0..n).map(|_| rng.next_u64() % q).collect();
+                let mut w = BitWriter::new();
+                w.write_radix(&syms, q);
+                let nominal = n as f64 * (q as f64).log2();
+                let actual = w.bit_len() as f64;
+                assert!(actual <= nominal + 65.0, "q={q} n={n} actual={actual} nominal={nominal}");
+                let buf = w.into_bytes();
+                let mut r = BitReader::new(&buf);
+                assert_eq!(r.read_radix(n, q), syms, "q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn radix_empty() {
+        let mut w = BitWriter::new();
+        w.write_radix(&[], 7);
+        assert_eq!(w.bit_len(), 0);
+        let buf = w.into_bytes();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_radix(0, 7), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn mixed_stream_roundtrip() {
+        let mut w = BitWriter::new();
+        w.write_bits(5, 4);
+        w.write_radix(&[0, 1, 2, 1, 0, 2, 2], 3);
+        w.write_f32(1.25);
+        w.write_bits(1, 1);
+        let buf = w.into_bytes();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_bits(4), 5);
+        assert_eq!(r.read_radix(7, 3), vec![0, 1, 2, 1, 0, 2, 2]);
+        assert_eq!(r.read_f32(), 1.25);
+        assert_eq!(r.read_bits(1), 1);
+    }
+}

@@ -1,0 +1,72 @@
+//! Bit-level reader mirroring `BitWriter`'s layout.
+
+use super::{radix_group_bits, radix_group_len};
+
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    byte: usize,
+    bitpos: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, byte: 0, bitpos: 0 }
+    }
+
+    pub fn bits_consumed(&self) -> u64 {
+        self.byte as u64 * 8 + self.bitpos as u64
+    }
+
+    pub fn read_bits(&mut self, nbits: u32) -> u64 {
+        debug_assert!(nbits <= 64);
+        let mut out: u64 = 0;
+        let mut got = 0u32;
+        while got < nbits {
+            assert!(self.byte < self.buf.len(), "BitReader: out of data");
+            let avail = 8 - self.bitpos;
+            let take = avail.min(nbits - got);
+            let mask = if take == 8 { 0xFFu8 } else { (1u8 << take) - 1 };
+            let chunk = (self.buf[self.byte] >> self.bitpos) & mask;
+            out |= (chunk as u64) << got;
+            got += take;
+            self.bitpos += take;
+            if self.bitpos == 8 {
+                self.bitpos = 0;
+                self.byte += 1;
+            }
+        }
+        out
+    }
+
+    pub fn read_f32(&mut self) -> f32 {
+        f32::from_bits(self.read_bits(32) as u32)
+    }
+
+    pub fn read_u32(&mut self) -> u32 {
+        self.read_bits(32) as u32
+    }
+
+    pub fn read_radix(&mut self, n: usize, q: u64) -> Vec<u64> {
+        assert!(q >= 2);
+        if q.is_power_of_two() {
+            let bits = q.trailing_zeros();
+            return (0..n).map(|_| self.read_bits(bits)).collect();
+        }
+        let k = radix_group_len(q);
+        let gbits = radix_group_bits(q, k);
+        let mut out = Vec::with_capacity(n);
+        let mut remaining = n;
+        while remaining > 0 {
+            let glen = remaining.min(k);
+            let bits = if glen == k { gbits } else { radix_group_bits(q, glen) };
+            let mut acc = self.read_bits(bits) as u128;
+            for _ in 0..glen {
+                out.push((acc % q as u128) as u64);
+                acc /= q as u128;
+            }
+            remaining -= glen;
+        }
+        out
+    }
+}

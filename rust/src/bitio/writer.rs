@@ -1,0 +1,94 @@
+//! Bit-level writer: MSB-first within each appended field, LSB-packed bytes.
+
+use super::{radix_group_bits, radix_group_len};
+
+#[derive(Default, Debug, Clone)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Number of valid bits in the last byte (0 when aligned).
+    bitpos: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        Self { buf: Vec::with_capacity(bytes), bitpos: 0 }
+    }
+
+    /// Total bits written so far.
+    pub fn bit_len(&self) -> u64 {
+        if self.bitpos == 0 {
+            self.buf.len() as u64 * 8
+        } else {
+            (self.buf.len() as u64 - 1) * 8 + self.bitpos as u64
+        }
+    }
+
+    /// Append the low `nbits` of `value` (nbits in 0..=64).
+    pub fn write_bits(&mut self, value: u64, nbits: u32) {
+        debug_assert!(nbits <= 64);
+        debug_assert!(nbits == 64 || value < (1u64 << nbits) || nbits == 0);
+        let mut remaining = nbits;
+        let mut v = value;
+        while remaining > 0 {
+            if self.bitpos == 0 {
+                self.buf.push(0);
+            }
+            let free = 8 - self.bitpos;
+            let take = free.min(remaining);
+            let chunk = (v & ((1u64 << take) - 1)) as u8; // take <= 8 here
+            let last = self.buf.len() - 1;
+            self.buf[last] |= chunk << self.bitpos;
+            self.bitpos = (self.bitpos + take) % 8;
+            v >>= take;
+            remaining -= take;
+        }
+    }
+
+    pub fn write_f32(&mut self, x: f32) {
+        self.write_bits(x.to_bits() as u64, 32);
+    }
+
+    pub fn write_u32(&mut self, x: u32) {
+        self.write_bits(x as u64, 32);
+    }
+
+    /// Near-entropy packing of base-`q` symbols (see module docs).
+    pub fn write_radix(&mut self, symbols: &[u64], q: u64) {
+        assert!(q >= 2);
+        debug_assert!(symbols.iter().all(|&s| s < q));
+        if q.is_power_of_two() {
+            let bits = q.trailing_zeros();
+            for &s in symbols {
+                self.write_bits(s, bits);
+            }
+            return;
+        }
+        let k = radix_group_len(q);
+        let gbits = radix_group_bits(q, k);
+        for group in symbols.chunks(k) {
+            // little-endian base-q: group[0] is the least-significant digit
+            let mut acc: u128 = 0;
+            for &s in group.iter().rev() {
+                acc = acc * q as u128 + s as u128;
+            }
+            let bits = if group.len() == k {
+                gbits
+            } else {
+                radix_group_bits(q, group.len())
+            };
+            self.write_bits(acc as u64, bits);
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}

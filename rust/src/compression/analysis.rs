@@ -1,0 +1,119 @@
+//! Analysis replication: the paper's Remark-1 overhead model and the
+//! Remark-2 convergence-bound machinery (eqs. 13-14), evaluated empirically
+//! so tests can confirm the identities the proofs rely on.
+
+use crate::compression::dropout::{dropout_mse, sample_mask};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// Remark 1: average uplink overhead of FWDP at ratio R (bits):
+/// C_d = 32·B·D̄/R + D̄ (the second term is the index vector δ).
+pub fn remark1_uplink_bits(batch: usize, dbar: usize, r: f64) -> f64 {
+    32.0 * (batch * dbar) as f64 / r + dbar as f64
+}
+
+/// Remark 1: downlink overhead C_s = 32·B·D̄/R.
+pub fn remark1_downlink_bits(batch: usize, dbar: usize, r: f64) -> f64 {
+    32.0 * (batch * dbar) as f64 / r
+}
+
+/// The compression-error term of the convergence bound (eq. 14, last line):
+/// Σ_i p_i/(1-p_i)·||f_i||² — identical to the dropout MSE of eq. (13).
+pub fn eq14_error_term(f: &Matrix, p: &[f64]) -> f64 {
+    let col_sq: Vec<f64> = (0..f.cols)
+        .map(|c| (0..f.rows).map(|r| (f.at(r, c) as f64).powi(2)).sum())
+        .collect();
+    dropout_mse(p, &col_sq)
+}
+
+/// Monte-Carlo estimate of E‖F̂−F‖²_F under FWDP — must match eq. (13).
+pub fn empirical_dropout_mse(f: &Matrix, p: &[f64], trials: usize, rng: &mut Rng) -> f64 {
+    let mut total = 0.0;
+    for _ in 0..trials {
+        let mask = sample_mask(p, rng);
+        let mut err = 0.0;
+        for c in 0..f.cols {
+            if mask[c] {
+                let s = 1.0 / (1.0 - p[c]);
+                for r in 0..f.rows {
+                    let d = (s - 1.0) * f.at(r, c) as f64;
+                    err += d * d;
+                }
+            } else {
+                for r in 0..f.rows {
+                    err += (f.at(r, c) as f64).powi(2);
+                }
+            }
+        }
+        total += err;
+    }
+    total / trials as f64
+}
+
+/// O(1/√(TK)) convergence-rate envelope of eq. (14) — the non-compression
+/// part — for plotting/diagnostic purposes.
+pub fn eq14_envelope(f_gap: f64, l_smooth: f64, sigma_sq: f64, t: usize, k: usize) -> f64 {
+    let tk = (t * k) as f64;
+    4.0 * f_gap / tk.sqrt() + 4.0 * l_smooth * sigma_sq / tk.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::dropout::adaptive_probs;
+    use crate::tensor::{column_stats, normalized_sigma};
+
+    fn feature_matrix(b: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(b, d, |_, c| (0.2 + (c % 5) as f32) * rng.normal_f32(0.0, 1.0))
+    }
+
+    #[test]
+    fn remark1_matches_paper_intro_numbers() {
+        // B=256, D̄=8192, R=1: 32·B·D̄ bits per matrix
+        let c = remark1_uplink_bits(256, 8192, 1.0);
+        assert!((c - (32.0 * 256.0 * 8192.0 + 8192.0)).abs() < 1.0);
+        // R halves → bits halve (minus the constant δ term)
+        let a = remark1_uplink_bits(64, 1152, 8.0) - 1152.0;
+        let b = remark1_uplink_bits(64, 1152, 16.0) - 1152.0;
+        assert!((a / b - 2.0).abs() < 1e-9);
+        assert!(remark1_downlink_bits(64, 1152, 8.0) < remark1_uplink_bits(64, 1152, 8.0));
+    }
+
+    #[test]
+    fn eq13_identity_matches_monte_carlo() {
+        let f = feature_matrix(12, 24, 1);
+        let sigma = normalized_sigma(&column_stats(&f), 4);
+        let p = adaptive_probs(&sigma, 4.0);
+        let analytic = eq14_error_term(&f, &p);
+        let mut rng = Rng::new(2);
+        let empirical = empirical_dropout_mse(&f, &p, 4000, &mut rng);
+        let rel = (analytic - empirical).abs() / analytic.max(1e-9);
+        assert!(rel < 0.08, "analytic {analytic} vs empirical {empirical}");
+    }
+
+    #[test]
+    fn error_term_zero_without_dropout() {
+        let f = feature_matrix(6, 10, 3);
+        assert_eq!(eq14_error_term(&f, &vec![0.0; 10]), 0.0);
+    }
+
+    #[test]
+    fn error_term_grows_with_r() {
+        let f = feature_matrix(16, 32, 4);
+        let sigma = normalized_sigma(&column_stats(&f), 4);
+        let mut last = 0.0;
+        for r in [2.0, 4.0, 8.0, 16.0] {
+            let e = eq14_error_term(&f, &adaptive_probs(&sigma, r));
+            assert!(e > last, "r={r}: {e} <= {last}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn envelope_decays_with_tk() {
+        let e1 = eq14_envelope(1.0, 1.0, 1.0, 10, 10);
+        let e2 = eq14_envelope(1.0, 1.0, 1.0, 40, 10);
+        assert!((e1 / e2 - 2.0).abs() < 1e-9); // √4 = 2
+    }
+}

@@ -1,0 +1,273 @@
+//! FedLite baseline [18]: K-means product (subvector) quantization of the
+//! intermediate feature matrix.
+//!
+//! Each per-sample feature row (D̄ entries) is split into `s` subvectors of
+//! length L = D̄/s; all B·s subvectors are clustered into q centroids with
+//! K-means (one group, as in the paper's setup). The wire carries the q×L
+//! f32 codebook + one ⌈log2 q⌉-symbol index per subvector. q is the largest
+//! power of two whose codebook + indices fit the bit budget.
+
+use crate::bitio::{BitReader, BitWriter};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct FedLiteConfig {
+    /// number of subvectors per row (divides the matrix width)
+    pub num_subvectors: usize,
+    /// k-means iterations
+    pub iters: usize,
+}
+
+impl Default for FedLiteConfig {
+    fn default() -> Self {
+        FedLiteConfig { num_subvectors: 16, iters: 12 }
+    }
+}
+
+/// Largest centroid count q (power of two, >= 2) such that
+/// q*L*32 + n_sub*log2(q) <= budget_bits. None if even q=2 doesn't fit.
+pub fn pick_q(budget_bits: f64, sub_len: usize, n_subvectors_total: usize) -> Option<u64> {
+    let mut best = None;
+    for m in 1..=16u32 {
+        let q = 1u64 << m;
+        let cost = q as f64 * sub_len as f64 * 32.0 + n_subvectors_total as f64 * m as f64;
+        if cost <= budget_bits {
+            best = Some(q);
+        } else {
+            break;
+        }
+    }
+    best
+}
+
+/// Standard K-means with k-means++ seeding and empty-cluster reseeding.
+pub fn kmeans(
+    points: &[Vec<f32>],
+    k: usize,
+    iters: usize,
+    rng: &mut Rng,
+) -> (Vec<Vec<f32>>, Vec<usize>) {
+    assert!(!points.is_empty());
+    let k = k.min(points.len()).max(1);
+    let dim = points[0].len();
+    let d2 = |a: &[f32], b: &[f32]| -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| ((x - y) as f64).powi(2)).sum()
+    };
+    // k-means++ init
+    let mut centroids: Vec<Vec<f32>> = Vec::with_capacity(k);
+    centroids.push(points[rng.gen_range(points.len())].clone());
+    let mut dist: Vec<f64> = points.iter().map(|p| d2(p, &centroids[0])).collect();
+    while centroids.len() < k {
+        let total: f64 = dist.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.gen_range(points.len())
+        } else {
+            let mut target = rng.next_f64() * total;
+            let mut idx = 0;
+            for (i, &d) in dist.iter().enumerate() {
+                target -= d;
+                if target <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            idx
+        };
+        centroids.push(points[pick].clone());
+        let c = centroids.last().unwrap();
+        for (i, p) in points.iter().enumerate() {
+            let d = d2(p, c);
+            if d < dist[i] {
+                dist[i] = d;
+            }
+        }
+    }
+    let mut assign = vec![0usize; points.len()];
+    for _ in 0..iters {
+        // assignment
+        for (i, p) in points.iter().enumerate() {
+            let mut best = 0;
+            let mut bd = f64::INFINITY;
+            for (c, cent) in centroids.iter().enumerate() {
+                let d = d2(p, cent);
+                if d < bd {
+                    bd = d;
+                    best = c;
+                }
+            }
+            assign[i] = best;
+        }
+        // update
+        let mut sums = vec![vec![0.0f64; dim]; centroids.len()];
+        let mut counts = vec![0usize; centroids.len()];
+        for (i, p) in points.iter().enumerate() {
+            counts[assign[i]] += 1;
+            for (j, &v) in p.iter().enumerate() {
+                sums[assign[i]][j] += v as f64;
+            }
+        }
+        for c in 0..centroids.len() {
+            if counts[c] == 0 {
+                centroids[c] = points[rng.gen_range(points.len())].clone();
+            } else {
+                for j in 0..dim {
+                    centroids[c][j] = (sums[c][j] / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+    // final assignment
+    for (i, p) in points.iter().enumerate() {
+        let mut best = 0;
+        let mut bd = f64::INFINITY;
+        for (c, cent) in centroids.iter().enumerate() {
+            let d = d2(p, cent);
+            if d < bd {
+                bd = d;
+                best = c;
+            }
+        }
+        assign[i] = best;
+    }
+    (centroids, assign)
+}
+
+/// Encode F with subvector K-means under `budget_bits`. Returns (bytes, bits).
+pub fn fedlite_encode(
+    f: &Matrix,
+    cfg: &FedLiteConfig,
+    budget_bits: f64,
+    rng: &mut Rng,
+) -> (Vec<u8>, u64) {
+    let d = f.cols;
+    let s = cfg.num_subvectors.clamp(1, d);
+    // force divisibility: shrink s to the nearest divisor of d
+    let s = (1..=s).rev().find(|x| d % x == 0).unwrap_or(1);
+    let sub_len = d / s;
+    let n_sub = f.rows * s;
+    let q = pick_q(budget_bits - 96.0, sub_len, n_sub).unwrap_or(2);
+
+    let mut points = Vec::with_capacity(n_sub);
+    for r in 0..f.rows {
+        let row = f.row(r);
+        for j in 0..s {
+            points.push(row[j * sub_len..(j + 1) * sub_len].to_vec());
+        }
+    }
+    let (centroids, assign) = kmeans(&points, q as usize, cfg.iters, rng);
+
+    let mut w = BitWriter::new();
+    w.write_u32(f.rows as u32);
+    w.write_u32(s as u32);
+    w.write_u32(sub_len as u32);
+    w.write_bits(centroids.len() as u64, 17);
+    for c in &centroids {
+        for &v in c {
+            w.write_f32(v);
+        }
+    }
+    let syms: Vec<u64> = assign.iter().map(|&a| a as u64).collect();
+    w.write_radix(&syms, centroids.len().max(2) as u64);
+    let bits = w.bit_len();
+    (w.into_bytes(), bits)
+}
+
+pub fn fedlite_decode(bytes: &[u8]) -> Matrix {
+    let mut r = BitReader::new(bytes);
+    let rows = r.read_u32() as usize;
+    let s = r.read_u32() as usize;
+    let sub_len = r.read_u32() as usize;
+    let q = r.read_bits(17) as usize;
+    let mut centroids = Vec::with_capacity(q);
+    for _ in 0..q {
+        centroids.push((0..sub_len).map(|_| r.read_f32()).collect::<Vec<f32>>());
+    }
+    let assign = r.read_radix(rows * s, q.max(2) as u64);
+    let mut out = Matrix::zeros(rows, s * sub_len);
+    for row in 0..rows {
+        for j in 0..s {
+            let cent = &centroids[assign[row * s + j] as usize];
+            for (t, &v) in cent.iter().enumerate() {
+                *out.at_mut(row, j * sub_len + t) = v;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kmeans_separates_clear_clusters() {
+        let mut rng = Rng::new(0);
+        let mut pts = Vec::new();
+        for i in 0..60 {
+            let center = if i % 3 == 0 { 0.0 } else if i % 3 == 1 { 10.0 } else { -10.0 };
+            pts.push(vec![center + rng.normal_f32(0.0, 0.1), center]);
+        }
+        let (cents, assign) = kmeans(&pts, 3, 15, &mut rng);
+        assert_eq!(cents.len(), 3);
+        // points in the same true cluster share an assignment
+        for i in (0..60).step_by(3) {
+            assert_eq!(assign[i], assign[(i + 3) % 60]);
+        }
+    }
+
+    #[test]
+    fn kmeans_handles_k_ge_n() {
+        let mut rng = Rng::new(1);
+        let pts = vec![vec![1.0], vec![2.0]];
+        let (cents, assign) = kmeans(&pts, 8, 5, &mut rng);
+        assert!(cents.len() <= 2);
+        assert_eq!(assign.len(), 2);
+    }
+
+    #[test]
+    fn pick_q_respects_budget() {
+        // sub_len 8, 100 subvectors: q=2 costs 2*8*32+100 = 612
+        assert_eq!(pick_q(611.0, 8, 100), None);
+        assert_eq!(pick_q(612.0, 8, 100), Some(2));
+        // generous budget should allow larger q
+        assert!(pick_q(1e6, 8, 100).unwrap() >= 256);
+    }
+
+    #[test]
+    fn roundtrip_shapes_and_compression() {
+        let mut rng = Rng::new(2);
+        let f = Matrix::from_fn(16, 32, |r, c| ((r + c) % 5) as f32 + 0.1 * rng.next_f32());
+        let budget = 0.5 * 16.0 * 32.0 * 32.0; // half the raw size
+        let (bytes, bits, ) = {
+            let (b, bits) = fedlite_encode(&f, &FedLiteConfig { num_subvectors: 8, iters: 8 }, budget, &mut rng);
+            (b, bits, )
+        };
+        assert!((bits as f64) <= budget + 256.0, "bits={bits}");
+        let out = fedlite_decode(&bytes);
+        assert_eq!((out.rows, out.cols), (16, 32));
+        // structured data should compress with modest error
+        let rel = (f.sq_dist(&out) / f.sq_norm()).sqrt();
+        assert!(rel < 0.6, "rel={rel}");
+    }
+
+    #[test]
+    fn subvector_count_snaps_to_divisor() {
+        let mut rng = Rng::new(3);
+        let f = Matrix::from_fn(4, 30, |_, c| c as f32);
+        // 16 doesn't divide 30 -> snaps to 15
+        let (bytes, _) = fedlite_encode(&f, &FedLiteConfig { num_subvectors: 16, iters: 2 }, 1e6, &mut rng);
+        let out = fedlite_decode(&bytes);
+        assert_eq!(out.cols, 30);
+    }
+
+    #[test]
+    fn identical_rows_reconstruct_well() {
+        let mut rng = Rng::new(4);
+        let f = Matrix::from_fn(8, 16, |_, c| (c % 4) as f32);
+        let (bytes, _) = fedlite_encode(&f, &FedLiteConfig::default(), 1e5, &mut rng);
+        let out = fedlite_decode(&bytes);
+        let rel = f.sq_dist(&out) / f.sq_norm().max(1.0);
+        assert!(rel < 1e-3, "rel={rel}");
+    }
+}

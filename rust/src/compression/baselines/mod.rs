@@ -1,0 +1,9 @@
+//! Baseline compressors the paper compares against (Table I/II).
+
+pub mod fedlite;
+pub mod scalarq;
+pub mod topk;
+
+pub use fedlite::{fedlite_decode, fedlite_encode, FedLiteConfig};
+pub use scalarq::{qbar_levels, scalar_decode, scalar_encode, ScalarKind};
+pub use topk::{sparsity_level, top_s_decode, top_s_encode, TopSConfig};

@@ -1,0 +1,262 @@
+//! Top-S and RandTop-S sparsification baselines ([16], [17]).
+//!
+//! Per paper Sec. VII: each *per-sample* intermediate feature vector (a row
+//! of F, D̄ entries) keeps only S entries; RandTop-S picks S uniformly from
+//! the top ⌈(1+θ)S⌉ magnitudes (the randomization of [17]). The budget rule
+//! is the paper's: largest S with  S·v + log2(C(D̄, S)) ≤ D̄·C_e  where v is
+//! the per-value cost (32 for raw floats, log2 Q̄ when composed with a scalar
+//! quantizer).
+//!
+//! Wire format per row: kept indices (bitmap or fixed-width list, whichever
+//! is smaller — real bits, slightly above the combinatorial bound the paper
+//! accounts) + values.
+
+use crate::bitio::{BitReader, BitWriter};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// ln C(n, k) via lgamma-free Stirling-exact sum (exact enough for budgets).
+pub fn log2_binomial(n: usize, k: usize) -> f64 {
+    if k == 0 || k >= n {
+        return 0.0;
+    }
+    let k = k.min(n - k);
+    let mut s = 0.0f64;
+    for i in 0..k {
+        s += ((n - i) as f64).log2() - ((i + 1) as f64).log2();
+    }
+    s
+}
+
+/// Paper's sparsification-level rule: largest S with
+/// S*value_bits + log2 C(d, S) <= d * bits_per_entry.
+pub fn sparsity_level(d: usize, bits_per_entry: f64, value_bits: f64) -> usize {
+    let budget = d as f64 * bits_per_entry;
+    let mut lo = 0usize;
+    let mut hi = d;
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        let cost = mid as f64 * value_bits + log2_binomial(d, mid);
+        if cost <= budget {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+#[derive(Debug, Clone)]
+pub struct TopSConfig {
+    /// kept entries per row
+    pub s: usize,
+    /// RandTop-S randomization θ (0 = plain Top-S) [17]
+    pub theta: f64,
+}
+
+/// Row-wise top-S mask of |value| (with optional RandTop-S randomization).
+pub fn top_s_mask(f: &Matrix, cfg: &TopSConfig, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let s = cfg.s.min(f.cols).max(1);
+    let mut out = Vec::with_capacity(f.rows);
+    for r in 0..f.rows {
+        let row = f.row(r);
+        let pool = if cfg.theta > 0.0 {
+            ((1.0 + cfg.theta) * s as f64).ceil() as usize
+        } else {
+            s
+        }
+        .min(f.cols);
+        let mut idx: Vec<usize> = (0..f.cols).collect();
+        // partial selection of the top `pool` by |v|
+        idx.select_nth_unstable_by(pool.saturating_sub(1), |&a, &b| {
+            row[b].abs().partial_cmp(&row[a].abs()).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx.truncate(pool);
+        let mut kept: Vec<usize> = if pool > s {
+            // RandTop-S: uniform S-subset of the top pool
+            let chosen = rng.sample_indices(pool, s);
+            chosen.into_iter().map(|i| idx[i]).collect()
+        } else {
+            idx
+        };
+        kept.sort_unstable();
+        out.push(kept);
+    }
+    out
+}
+
+/// Index coding cost decision: bitmap (d bits) vs fixed-width list.
+fn index_bits(d: usize, s: usize) -> (bool, u32) {
+    let iw = (usize::BITS - (d.max(2) - 1).leading_zeros()).max(1);
+    let list = s as u64 * iw as u64;
+    if (d as u64) <= list {
+        (true, iw)
+    } else {
+        (false, iw)
+    }
+}
+
+/// Encode: per row [index block][values f32]. Returns (bytes, bits, masks).
+pub fn top_s_encode(
+    f: &Matrix,
+    cfg: &TopSConfig,
+    rng: &mut Rng,
+) -> (Vec<u8>, u64, Vec<Vec<usize>>) {
+    let masks = top_s_mask(f, cfg, rng);
+    let mut w = BitWriter::new();
+    w.write_u32(f.rows as u32);
+    w.write_u32(f.cols as u32);
+    w.write_u32(cfg.s.min(f.cols).max(1) as u32);
+    let (bitmap, iw) = index_bits(f.cols, cfg.s.min(f.cols).max(1));
+    w.write_bits(bitmap as u64, 1);
+    for (r, kept) in masks.iter().enumerate() {
+        if bitmap {
+            let mut flags = vec![false; f.cols];
+            for &c in kept {
+                flags[c] = true;
+            }
+            for &fl in &flags {
+                w.write_bits(fl as u64, 1);
+            }
+        } else {
+            for &c in kept {
+                w.write_bits(c as u64, iw);
+            }
+        }
+        for &c in kept {
+            w.write_f32(f.at(r, c));
+        }
+    }
+    let bits = w.bit_len();
+    (w.into_bytes(), bits, masks)
+}
+
+pub fn top_s_decode(bytes: &[u8]) -> Matrix {
+    let mut r = BitReader::new(bytes);
+    let rows = r.read_u32() as usize;
+    let cols = r.read_u32() as usize;
+    let s = r.read_u32() as usize;
+    let bitmap = r.read_bits(1) == 1;
+    let iw = (usize::BITS - (cols.max(2) - 1).leading_zeros()).max(1);
+    let mut out = Matrix::zeros(rows, cols);
+    for row in 0..rows {
+        let kept: Vec<usize> = if bitmap {
+            let mut v = Vec::with_capacity(s);
+            for c in 0..cols {
+                if r.read_bits(1) == 1 {
+                    v.push(c);
+                }
+            }
+            v
+        } else {
+            (0..s).map(|_| r.read_bits(iw) as usize).collect()
+        };
+        for &c in &kept {
+            *out.at_mut(row, c) = r.read_f32();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(seed: u64, rows: usize, cols: usize) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(rows, cols, |_, _| rng.normal_f32(0.0, 1.0))
+    }
+
+    #[test]
+    fn log2_binomial_matches_small_cases() {
+        // C(5,2)=10, C(10,3)=120
+        assert!((log2_binomial(5, 2) - 10f64.log2()).abs() < 1e-9);
+        assert!((log2_binomial(10, 3) - 120f64.log2()).abs() < 1e-9);
+        assert_eq!(log2_binomial(7, 0), 0.0);
+        assert_eq!(log2_binomial(7, 7), 0.0);
+    }
+
+    #[test]
+    fn sparsity_level_respects_budget() {
+        for &(d, bpe, vb) in &[(1152usize, 0.2, 32.0), (1152, 0.1, 32.0), (4096, 0.133, 8.0)] {
+            let s = sparsity_level(d, bpe, vb);
+            let cost = s as f64 * vb + log2_binomial(d, s);
+            assert!(cost <= d as f64 * bpe + 1e-6, "d={d} s={s}");
+            // maximality: s+1 must exceed
+            let cost1 = (s + 1) as f64 * vb + log2_binomial(d, s + 1);
+            assert!(cost1 > d as f64 * bpe, "s not maximal");
+        }
+    }
+
+    #[test]
+    fn top_s_keeps_largest_magnitudes() {
+        let f = Matrix::from_vec(1, 6, vec![0.1, -5.0, 2.0, -0.2, 3.0, 0.05]);
+        let mut rng = Rng::new(0);
+        let masks = top_s_mask(&f, &TopSConfig { s: 3, theta: 0.0 }, &mut rng);
+        assert_eq!(masks[0], vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn rand_top_s_subset_of_pool() {
+        let f = mat(1, 4, 100);
+        let mut rng = Rng::new(2);
+        let cfg = TopSConfig { s: 10, theta: 0.3 };
+        let masks = top_s_mask(&f, &cfg, &mut rng);
+        for (r, kept) in masks.iter().enumerate() {
+            assert_eq!(kept.len(), 10);
+            // kept entries are within the top 13 by magnitude
+            let row = f.row(r);
+            let mut idx: Vec<usize> = (0..100).collect();
+            idx.sort_by(|&a, &b| row[b].abs().partial_cmp(&row[a].abs()).unwrap());
+            let top13: Vec<usize> = idx[..13].to_vec();
+            for &c in kept {
+                assert!(top13.contains(&c), "row {r}: {c} not in top pool");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_values_exact() {
+        let f = mat(3, 8, 64);
+        let mut rng = Rng::new(4);
+        let cfg = TopSConfig { s: 6, theta: 0.0 };
+        let (bytes, bits, masks) = top_s_encode(&f, &cfg, &mut rng);
+        assert!(bits > 0);
+        let out = top_s_decode(&bytes);
+        assert_eq!((out.rows, out.cols), (8, 64));
+        for (r, kept) in masks.iter().enumerate() {
+            for c in 0..64 {
+                if kept.contains(&c) {
+                    assert_eq!(out.at(r, c), f.at(r, c));
+                } else {
+                    assert_eq!(out.at(r, c), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bitmap_vs_list_picks_smaller() {
+        // dense: s*iw > d -> bitmap; sparse: list
+        let (bm_dense, _) = index_bits(64, 32); // 32*6=192 > 64
+        assert!(bm_dense);
+        let (bm_sparse, _) = index_bits(1024, 8); // 8*10=80 < 1024
+        assert!(!bm_sparse);
+    }
+
+    #[test]
+    fn mask_rows_sorted_unique() {
+        let f = mat(5, 16, 40);
+        let mut rng = Rng::new(6);
+        for theta in [0.0, 0.2] {
+            let masks = top_s_mask(&f, &TopSConfig { s: 5, theta }, &mut rng);
+            for kept in &masks {
+                let mut s = kept.clone();
+                s.sort_unstable();
+                s.dedup();
+                assert_eq!(&s, kept);
+                assert_eq!(kept.len(), 5);
+            }
+        }
+    }
+}

@@ -1,0 +1,301 @@
+//! Adaptive feature-wise dropout — FWDP (paper Sec. V, Algorithm 2).
+//!
+//! Columns of the intermediate feature matrix are dropped with probabilities
+//! that *decrease* with the column's channel-normalized standard deviation
+//! (eqs. 9-12), so high-dispersion (informative) features survive. Kept
+//! columns are scaled by 1/(1-p_i) (eq. 7) to keep the compression unbiased:
+//! E[F_hat] = F. The Bernoulli index vector δ is transmitted (D̄ bits) so the
+//! PS can place the D̂ received columns; by the chain rule the PS only returns
+//! gradient columns in the kept set I (eq. 8).
+//!
+//! `Random` (p_i = 1-1/R) and `Deterministic` (drop the D̄-D smallest-σ
+//! columns) are the paper's Fig.-3 ablation variants.
+
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropKind {
+    Adaptive,
+    Random,
+    Deterministic,
+}
+
+/// Everything the device derives before transmitting: probabilities, the
+/// sampled mask, kept indices and the per-kept-column scale factors.
+#[derive(Debug, Clone)]
+pub struct DropoutPlan {
+    pub p: Vec<f64>,
+    pub delta: Vec<bool>,
+    pub kept: Vec<usize>,
+    /// 1/(1-p_j) for each kept column j (aligned with `kept`).
+    pub scale: Vec<f32>,
+}
+
+impl DropoutPlan {
+    /// No-dropout plan (R = 1 or vanilla frameworks).
+    pub fn keep_all(dbar: usize) -> DropoutPlan {
+        DropoutPlan {
+            p: vec![0.0; dbar],
+            delta: vec![true; dbar],
+            kept: (0..dbar).collect(),
+            scale: vec![1.0; dbar],
+        }
+    }
+
+    pub fn dhat(&self) -> usize {
+        self.kept.len()
+    }
+
+    fn from_mask(p: Vec<f64>, delta: Vec<bool>) -> DropoutPlan {
+        let mut kept = Vec::new();
+        let mut scale = Vec::new();
+        for (i, &d) in delta.iter().enumerate() {
+            if d {
+                kept.push(i);
+                scale.push((1.0 / (1.0 - p[i])) as f32);
+            }
+        }
+        DropoutPlan { p, delta, kept, scale }
+    }
+}
+
+/// Adaptive dropout probabilities (eqs. 11-12).
+///
+/// `sigma_norm` — per-column stddev of the channel-normalized features
+/// (eq. 10, produced by the `feature_stats` artifact on the hot path);
+/// `r` — dimensionality-reduction ratio R = D̄/D > 1.
+pub fn adaptive_probs(sigma_norm: &[f32], r: f64) -> Vec<f64> {
+    let dbar = sigma_norm.len();
+    assert!(dbar > 0);
+    assert!(r >= 1.0, "R must be >= 1 (got {r})");
+    let d_target = dbar as f64 / r;
+    let sum_sigma: f64 = sigma_norm.iter().map(|&s| s as f64).sum();
+    if sum_sigma <= 0.0 || r <= 1.0 {
+        // all-constant features (degenerate) or no reduction: uniform keep.
+        let p = (1.0 - d_target / dbar as f64).max(0.0);
+        return vec![p; dbar];
+    }
+    let q: Vec<f64> = sigma_norm
+        .iter()
+        .map(|&s| s as f64 * d_target / sum_sigma)
+        .collect();
+    let q_max = q.iter().cloned().fold(0.0, f64::max);
+    if q_max <= 1.0 {
+        q.iter().map(|&qi| (1.0 - qi).clamp(0.0, 1.0)).collect()
+    } else {
+        // eq. (12) second branch with the paper's minimal C_bias
+        // C = (sigma_max * D - sum_sigma) / (Dbar - D)  (Sec. VII setup)
+        let sigma_max = sigma_norm.iter().cloned().fold(0.0f32, f32::max) as f64;
+        let denom = dbar as f64 - d_target;
+        if denom <= 0.0 {
+            return vec![0.0; dbar];
+        }
+        let c_bias = ((sigma_max * d_target - sum_sigma) / denom).max(0.0);
+        let adj_sum = sum_sigma + dbar as f64 * c_bias;
+        sigma_norm
+            .iter()
+            .map(|&s| (1.0 - (s as f64 + c_bias) * d_target / adj_sum).clamp(0.0, 1.0))
+            .collect()
+    }
+}
+
+/// Fig.-3 "SplitFC-Rand": uniform p_i = 1 - 1/R.
+pub fn random_probs(dbar: usize, r: f64) -> Vec<f64> {
+    vec![(1.0 - 1.0 / r).clamp(0.0, 1.0); dbar]
+}
+
+/// Sample the Bernoulli index vector δ (Alg. 2 line 10).
+pub fn sample_mask(p: &[f64], rng: &mut Rng) -> Vec<bool> {
+    p.iter().map(|&pi| !rng.bernoulli(pi)).collect()
+}
+
+/// Build a full plan for the given variant.
+pub fn plan(kind: DropKind, sigma_norm: &[f32], r: f64, rng: &mut Rng) -> DropoutPlan {
+    let dbar = sigma_norm.len();
+    if r <= 1.0 {
+        return DropoutPlan::keep_all(dbar);
+    }
+    match kind {
+        DropKind::Adaptive => {
+            let p = adaptive_probs(sigma_norm, r);
+            let delta = sample_mask(&p, rng);
+            DropoutPlan::from_mask(p, delta)
+        }
+        DropKind::Random => {
+            let p = random_probs(dbar, r);
+            let delta = sample_mask(&p, rng);
+            DropoutPlan::from_mask(p, delta)
+        }
+        DropKind::Deterministic => {
+            // Fig.-3 "SplitFC-Deterministic": drop the (D̄ - D) columns with
+            // the smallest normalized stddev; no stochastic scaling (p=0 on
+            // kept columns so scale = 1; dropped have p = 1 conceptually).
+            let d_keep = (dbar as f64 / r).round().max(1.0) as usize;
+            let mut idx: Vec<usize> = (0..dbar).collect();
+            idx.sort_by(|&a, &b| {
+                sigma_norm[b]
+                    .partial_cmp(&sigma_norm[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            let mut delta = vec![false; dbar];
+            for &i in idx.iter().take(d_keep) {
+                delta[i] = true;
+            }
+            let p = delta
+                .iter()
+                .map(|&d| if d { 0.0 } else { 1.0 })
+                .collect();
+            DropoutPlan::from_mask(p, delta)
+        }
+    }
+}
+
+/// MSE of the dropout estimator (paper eq. 13):
+/// E||F_hat - F||_F^2 = Σ_i p_i/(1-p_i) ||f_i||².
+pub fn dropout_mse(p: &[f64], col_sq_norms: &[f64]) -> f64 {
+    p.iter()
+        .zip(col_sq_norms)
+        .map(|(&pi, &n2)| {
+            if pi >= 1.0 {
+                n2 // dropped surely: error is ||f||^2 (limit)
+            } else {
+                pi / (1.0 - pi) * n2
+            }
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sigma_ramp(d: usize) -> Vec<f32> {
+        (0..d).map(|i| 0.01 + 0.49 * i as f32 / (d - 1) as f32).collect()
+    }
+
+    #[test]
+    fn probs_are_valid_and_sum_matches_d() {
+        let sigma = sigma_ramp(128);
+        for &r in &[2.0, 4.0, 16.0, 64.0] {
+            let p = adaptive_probs(&sigma, r);
+            assert!(p.iter().all(|&x| (0.0..=1.0).contains(&x)), "r={r}");
+            // E[D̂] = Σ(1-p_i) = D = D̄/R (Remark 1)
+            let e_keep: f64 = p.iter().map(|&x| 1.0 - x).sum();
+            let d = 128.0 / r;
+            assert!((e_keep - d).abs() < d * 0.05 + 1e-6, "r={r} E={e_keep} D={d}");
+        }
+    }
+
+    #[test]
+    fn higher_sigma_lower_dropout() {
+        let sigma = sigma_ramp(64);
+        let p = adaptive_probs(&sigma, 8.0);
+        for i in 1..64 {
+            assert!(p[i] <= p[i - 1] + 1e-12, "monotone in sigma");
+        }
+    }
+
+    #[test]
+    fn cbias_branch_when_qmax_exceeds_one() {
+        // One dominant sigma makes q_max > 1 at moderate R.
+        let mut sigma = vec![0.001f32; 64];
+        sigma[0] = 0.5;
+        let p = adaptive_probs(&sigma, 4.0); // D = 16, q_0 = 0.5*16/0.563 >> 1
+        assert!(p.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        // dominant column must never be dropped more than the others
+        assert!(p[0] < p[1]);
+        // with the paper's minimal C_bias the max-σ column gets p = 0
+        assert!(p[0] < 1e-9, "p0={}", p[0]);
+    }
+
+    #[test]
+    fn degenerate_all_zero_sigma_uniform() {
+        let p = adaptive_probs(&vec![0.0f32; 32], 4.0);
+        assert!(p.iter().all(|&x| (x - 0.75).abs() < 1e-12));
+    }
+
+    #[test]
+    fn r_one_keeps_all() {
+        let mut rng = Rng::new(0);
+        let plan = plan(DropKind::Adaptive, &sigma_ramp(16), 1.0, &mut rng);
+        assert_eq!(plan.dhat(), 16);
+        assert!(plan.scale.iter().all(|&s| s == 1.0));
+    }
+
+    #[test]
+    fn sampled_dhat_concentrates_around_d() {
+        let sigma = sigma_ramp(512);
+        let mut rng = Rng::new(1);
+        let p = adaptive_probs(&sigma, 16.0);
+        let mut total = 0usize;
+        let trials = 200;
+        for _ in 0..trials {
+            total += sample_mask(&p, &mut rng).iter().filter(|&&d| d).count();
+        }
+        let mean = total as f64 / trials as f64;
+        assert!((mean - 32.0).abs() < 2.0, "mean D̂ = {mean}, expected ~32");
+    }
+
+    #[test]
+    fn scale_is_inverse_keep_probability() {
+        let sigma = sigma_ramp(64);
+        let mut rng = Rng::new(2);
+        let pl = plan(DropKind::Adaptive, &sigma, 4.0, &mut rng);
+        for (j, &col) in pl.kept.iter().enumerate() {
+            let expect = 1.0 / (1.0 - pl.p[col]);
+            assert!((pl.scale[j] as f64 - expect).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn deterministic_keeps_top_sigma() {
+        let sigma = sigma_ramp(32);
+        let mut rng = Rng::new(3);
+        let pl = plan(DropKind::Deterministic, &sigma, 4.0, &mut rng);
+        assert_eq!(pl.dhat(), 8);
+        // top-8 sigmas are indices 24..32
+        assert_eq!(pl.kept, (24..32).collect::<Vec<_>>());
+        assert!(pl.scale.iter().all(|&s| s == 1.0));
+    }
+
+    #[test]
+    fn random_probs_uniform() {
+        let p = random_probs(10, 8.0);
+        assert!(p.iter().all(|&x| (x - 0.875).abs() < 1e-12));
+    }
+
+    #[test]
+    fn dropout_mse_eq13() {
+        let p = vec![0.5, 0.0, 0.75];
+        let n2 = vec![4.0, 100.0, 8.0];
+        // 0.5/0.5*4 + 0 + 0.75/0.25*8 = 4 + 24
+        assert!((dropout_mse(&p, &n2) - 28.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unbiasedness_monte_carlo() {
+        // E[δ/(1-p) f] = f: average reconstruction over many masks ≈ column.
+        let sigma = sigma_ramp(16);
+        let p = adaptive_probs(&sigma, 4.0);
+        let f: Vec<f64> = (0..16).map(|i| (i as f64) - 8.0).collect();
+        let mut rng = Rng::new(7);
+        let mut acc = vec![0.0f64; 16];
+        let trials = 30_000;
+        for _ in 0..trials {
+            let mask = sample_mask(&p, &mut rng);
+            for i in 0..16 {
+                if mask[i] {
+                    acc[i] += f[i] / (1.0 - p[i]);
+                }
+            }
+        }
+        for i in 0..16 {
+            let est = acc[i] / trials as f64;
+            assert!(
+                (est - f[i]).abs() < 0.35 + 0.05 * f[i].abs(),
+                "i={i} est={est} f={}",
+                f[i]
+            );
+        }
+    }
+}

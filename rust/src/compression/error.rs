@@ -1,0 +1,69 @@
+//! Quantization/compression error identities used across the crate and by
+//! the analysis-replication tests (eqs. 13, 19-21).
+
+use crate::tensor::Matrix;
+
+/// Relative Frobenius error ||A - Â||_F / ||A||_F.
+pub fn relative_error(a: &Matrix, a_hat: &Matrix) -> f64 {
+    let n = a.sq_norm();
+    if n == 0.0 {
+        return a_hat.sq_norm().sqrt();
+    }
+    (a.sq_dist(a_hat) / n).sqrt()
+}
+
+/// Uniform-quantizer worst-case squared error per entry: (Δ/2)² with
+/// Δ = range/(Q-1) — the bound behind eqs. (19)-(20) [44].
+pub fn uniform_sq_err_bound(range: f64, q: u64) -> f64 {
+    if q < 2 {
+        return range * range;
+    }
+    let d = range / (q as f64 - 1.0);
+    d * d / 4.0
+}
+
+/// eq. (21): ||a - ā·1||² ≤ (a_max - a_min)²·B/4 for any B-vector.
+pub fn mean_residual_bound(range: f64, batch: usize) -> f64 {
+    range * range * batch as f64 / 4.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn relative_error_zero_for_identical() {
+        let a = Matrix::from_fn(3, 3, |r, c| (r + c) as f32);
+        assert_eq!(relative_error(&a, &a.clone()), 0.0);
+    }
+
+    #[test]
+    fn uniform_bound_holds_empirically() {
+        let mut rng = Rng::new(0);
+        for &q in &[2u64, 5, 16, 200] {
+            let (lo, hi) = (-3.0f64, 5.0f64);
+            let bound = uniform_sq_err_bound(hi - lo, q);
+            for _ in 0..500 {
+                let v = lo + rng.next_f64() * (hi - lo);
+                let code = ((v - lo) / (hi - lo) * (q as f64 - 1.0)).round();
+                let dq = lo + code * (hi - lo) / (q as f64 - 1.0);
+                assert!((v - dq).powi(2) <= bound + 1e-12, "q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn mean_residual_bound_eq21_holds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let b = 2 + rng.gen_range(30);
+            let col: Vec<f64> = (0..b).map(|_| rng.normal()).collect();
+            let mean = col.iter().sum::<f64>() / b as f64;
+            let resid: f64 = col.iter().map(|&v| (v - mean).powi(2)).sum();
+            let mn = col.iter().cloned().fold(f64::INFINITY, f64::min);
+            let mx = col.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            assert!(resid <= mean_residual_bound(mx - mn, b) + 1e-9);
+        }
+    }
+}

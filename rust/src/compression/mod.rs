@@ -1,0 +1,26 @@
+//! The paper's contribution: adaptive feature-wise compression.
+//!
+//! * `dropout` — FWDP, Algorithm 2 (Sec. V)
+//! * `quant` — FWQ, Algorithm 3 (Sec. VI) over real bit streams
+//! * `waterfill` — problem (P) + Theorem 1 level allocation (Sec. VI-B/C)
+//! * `error` — the error identities/bounds (eqs. 13, 19-21)
+//! * `baselines` — Top-S [16], RandTop-S [17], FedLite [18], PQ/EQ/NQ [23-25]
+//! * `pipeline` — framework-level uplink/downlink codecs for every row of
+//!   Tables I-III and Figs. 3-5
+
+pub mod analysis;
+pub mod baselines;
+pub mod dropout;
+pub mod error;
+pub mod feedback;
+pub mod pipeline;
+pub mod quant;
+pub mod waterfill;
+
+pub use baselines::ScalarKind;
+pub use dropout::DropKind;
+pub use pipeline::{
+    encode_downlink, encode_uplink, CodecParams, EncodedDownlink, EncodedUplink, FwqMode,
+    GradMask, Scheme,
+};
+pub use quant::{fwq_decode, fwq_encode, FwqConfig};

@@ -1,0 +1,658 @@
+//! Adaptive feature-wise quantization — FWQ (paper Sec. VI, Algorithm 3).
+//!
+//! The columns of a (compressed) intermediate matrix A ∈ R^{B×D̂} are split by
+//! range: the M largest-range columns go through the **two-stage quantizer**
+//! (endpoint quantizer with shared Q_ep levels → per-column uniform entry
+//! quantizer with optimized Q_j levels); the remaining D̂-M columns are
+//! collapsed to their means, quantized by the shared **mean-value quantizer**
+//! (Q_0 levels). Levels solve problem (P) via `waterfill` (Theorem 1), and
+//! M* is found by scanning a candidate set with the early-stop rule
+//! (Alg. 3 lines 12-21).
+//!
+//! Everything is serialized to a real bit buffer; the decoder reconstructs
+//! the matrix from the buffer and the *shared configuration only* (Q_ep,
+//! C_ava, B — paper Sec. VI-B: both sides regenerate identical quantizers by
+//! re-running the allocation on the transmitted endpoints/means, so no
+//! codebooks are exchanged).
+
+use crate::bitio::{BitReader, BitWriter};
+use crate::compression::waterfill::{self, LevelSpec};
+use crate::tensor::{column_stats, Matrix};
+
+/// Shared FWQ configuration — identical at device and PS.
+#[derive(Debug, Clone)]
+pub struct FwqConfig {
+    /// Endpoint-quantizer levels Q_ep (paper Sec. VII: 200).
+    pub q_ep: u64,
+    /// Total bit budget C_ava for this matrix (eq. after (21)).
+    pub c_ava: f64,
+    pub batch: usize,
+    /// false ⇒ ablation Case 3: no mean-value quantizer — columns beyond M*
+    /// are not transmitted at all (reconstructed as zero).
+    pub use_mean: bool,
+    /// Some(q) ⇒ Fig. 5: fixed level q for every quantizer, no optimization.
+    pub q_fixed: Option<u64>,
+    /// Candidate-set size N (paper: 10, M = {D^max n/N}).
+    pub n_candidates: usize,
+}
+
+impl FwqConfig {
+    pub fn paper_default(batch: usize, c_ava: f64) -> FwqConfig {
+        FwqConfig {
+            q_ep: 200,
+            c_ava,
+            batch,
+            use_mean: true,
+            q_fixed: None,
+            n_candidates: 10,
+        }
+    }
+}
+
+/// Encoder-side report (levels, M*, nominal bits per eq. 17).
+#[derive(Debug, Clone)]
+pub struct FwqInfo {
+    pub m_star: usize,
+    pub dhat: usize,
+    /// nominal overhead per the paper's accounting (eq. 17), in bits
+    pub nominal_bits: f64,
+    /// objective value f(Q̂_0..Q̂_M) at the chosen solution
+    pub objective: f64,
+    pub q0: Option<u64>,
+    pub candidates_tried: usize,
+}
+
+const HEADER_BITS: f64 = 32.0 + 32.0 + 4.0 * 32.0; // D̂, M, 4 range floats
+
+struct Plan {
+    m: usize,
+    /// columns (original indices) using the two-stage quantizer, column order
+    two_stage: Vec<usize>,
+    /// remaining columns, column order
+    mean_cols: Vec<usize>,
+    a_min: f32,
+    a_max: f32,
+    abar_min: f32,
+    abar_max: f32,
+    /// endpoint codes per two-stage column (aligned with `two_stage`)
+    ep_codes: Vec<(u64, u64)>,
+    /// integer levels: entry levels aligned with `two_stage`, then the mean
+    /// level (if any) last.
+    levels: Vec<u64>,
+    objective: f64,
+}
+
+fn delta_ep(a_min: f32, a_max: f32, q_ep: u64) -> f64 {
+    (a_max as f64 - a_min as f64) / (q_ep as f64 - 1.0)
+}
+
+/// Endpoint quantizer (eq. 15-16). Floor for the minimum, ceil for the
+/// maximum so the decoded interval encloses the column:
+/// â_{u_min} ≤ a_{b,j} ≤ â_{u_max} (the containment Sec. VI-A claims).
+fn quantize_endpoints(
+    lo: f32,
+    hi: f32,
+    a_min: f32,
+    d_ep: f64,
+    q_ep: u64,
+) -> (u64, u64) {
+    if d_ep <= 0.0 {
+        return (0, 0);
+    }
+    let umin = (((lo as f64 - a_min as f64) / d_ep).floor() as i64).clamp(0, q_ep as i64 - 1);
+    let umax = (((hi as f64 - a_min as f64) / d_ep).ceil() as i64).clamp(0, q_ep as i64 - 1);
+    (umin as u64, umax.max(umin) as u64)
+}
+
+/// Build the quantization plan for one candidate M (levels + objective).
+#[allow(clippy::too_many_arguments)]
+fn plan_for_m(
+    cfg: &FwqConfig,
+    order: &[usize], // columns sorted by range descending
+    mins: &[f32],
+    maxs: &[f32],
+    means: &[f32],
+    m: usize,
+) -> Option<Plan> {
+    let dhat = order.len();
+    let b = cfg.batch as f64;
+    let mut two_stage: Vec<usize> = order[..m].to_vec();
+    let mut mean_cols: Vec<usize> = order[m..].to_vec();
+    two_stage.sort_unstable(); // column order for a canonical wire layout
+    mean_cols.sort_unstable();
+
+    // global endpoint range over the two-stage set (eq. 15)
+    let (mut a_min, mut a_max) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &c in &two_stage {
+        a_min = a_min.min(mins[c]);
+        a_max = a_max.max(maxs[c]);
+    }
+    if two_stage.is_empty() {
+        a_min = 0.0;
+        a_max = 0.0;
+    }
+    let d_ep = delta_ep(a_min, a_max, cfg.q_ep);
+    let ep_codes: Vec<(u64, u64)> = two_stage
+        .iter()
+        .map(|&c| quantize_endpoints(mins[c], maxs[c], a_min, d_ep, cfg.q_ep))
+        .collect();
+
+    // mean range over the mean set
+    let (mut abar_min, mut abar_max) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &c in &mean_cols {
+        abar_min = abar_min.min(means[c]);
+        abar_max = abar_max.max(means[c]);
+    }
+    if mean_cols.is_empty() {
+        abar_min = 0.0;
+        abar_max = 0.0;
+    }
+
+    // constant overhead C_const (eq. 17 minus the level-dependent terms)
+    let c_const = 2.0 * m as f64 * (cfg.q_ep as f64).log2() + dhat as f64 + HEADER_BITS;
+    let c_levels = cfg.c_ava - c_const;
+
+    // level specs in canonical order: entries (column order), then mean
+    let mut specs: Vec<LevelSpec> = ep_codes
+        .iter()
+        .map(|&(umin, umax)| LevelSpec::entry((umax - umin) as f64 * d_ep, cfg.batch))
+        .collect();
+    let use_mean_q = cfg.use_mean && !mean_cols.is_empty();
+    if use_mean_q {
+        specs.push(LevelSpec::mean(
+            (abar_max - abar_min) as f64,
+            cfg.batch,
+            mean_cols.len(),
+        ));
+    }
+
+    let levels = match cfg.q_fixed {
+        Some(q) => vec![q.max(2); specs.len()],
+        None => match waterfill::solve(&specs, c_levels) {
+            Some(l) => l,
+            // degenerate budget (< header + flags): fall back to minimum
+            // levels for the all-means plan so a frame can always be built;
+            // the overshoot shows up in the measured bits.
+            None if m == 0 => vec![2; specs.len()],
+            None => return None,
+        },
+    };
+
+    // objective (eq. 22): level terms + the constant mean-residual term,
+    // which *does* depend on M and must participate in the M* scan.
+    let mut obj = waterfill::objective(&specs, &levels);
+    if cfg.use_mean {
+        for &c in &mean_cols {
+            let r = (maxs[c] - mins[c]) as f64;
+            obj += r * r * b / 2.0;
+        }
+    } else {
+        // untransmitted columns reconstruct to 0: count their full energy
+        // proxy via range² (upper bound flavour, keeps the scan meaningful)
+        for &c in &mean_cols {
+            let r = (maxs[c] - mins[c]).max(means[c].abs()) as f64;
+            obj += r * r * b;
+        }
+    }
+
+    Some(Plan {
+        m,
+        two_stage,
+        mean_cols,
+        a_min,
+        a_max,
+        abar_min,
+        abar_max,
+        ep_codes,
+        levels,
+        objective: obj,
+    })
+}
+
+/// Largest feasible M for the budget (the paper's D^max in Sec. VII):
+/// all-minimum allocation must fit: M(B + 2log2Qep - 1) ≤ C_ava - 2D̂ - 128.
+fn d_max(cfg: &FwqConfig, dhat: usize) -> usize {
+    let lg_ep = (cfg.q_ep as f64).log2();
+    match cfg.q_fixed {
+        None => {
+            let num = cfg.c_ava - 2.0 * dhat as f64 - HEADER_BITS;
+            let den = cfg.batch as f64 + 2.0 * lg_ep - 1.0;
+            ((num / den).floor().max(0.0) as usize).min(dhat)
+        }
+        Some(q) => {
+            // Fig. 5 formula with fixed level q
+            let lq = (q.max(2) as f64).log2();
+            let num = cfg.c_ava - dhat as f64 - HEADER_BITS - dhat as f64 * lq;
+            let den = cfg.batch as f64 * lq + 2.0 * lg_ep - lq;
+            ((num / den).floor().max(0.0) as usize).min(dhat)
+        }
+    }
+}
+
+/// Algorithm 3: scan the candidate set in descending order of M with the
+/// early-stop rule, returning the best plan.
+fn search_m(
+    cfg: &FwqConfig,
+    order: &[usize],
+    mins: &[f32],
+    maxs: &[f32],
+    means: &[f32],
+) -> (Plan, usize) {
+    let dhat = order.len();
+    let dmax = d_max(cfg, dhat);
+    let mut candidates: Vec<usize> = if cfg.use_mean {
+        (1..=cfg.n_candidates)
+            .map(|n| (dmax * n + cfg.n_candidates - 1) / cfg.n_candidates)
+            .collect()
+    } else {
+        vec![dmax] // Case 3: as many two-stage columns as the budget allows
+    };
+    candidates.push(0); // pure mean-value fallback is always feasible-ish
+    candidates.sort_unstable();
+    candidates.dedup();
+
+    let mut best: Option<Plan> = None;
+    let mut prev_obj = f64::INFINITY;
+    let mut tried = 0;
+    // descending scan + stop when the objective turns worse (Alg. 3 l.12-21)
+    for &m in candidates.iter().rev() {
+        let Some(p) = plan_for_m(cfg, order, mins, maxs, means, m) else {
+            continue;
+        };
+        tried += 1;
+        let obj = p.objective;
+        if best.as_ref().map(|b| obj < b.objective).unwrap_or(true) {
+            best = Some(p);
+        }
+        if obj > prev_obj {
+            break; // early stop
+        }
+        prev_obj = obj;
+    }
+    let best = best.unwrap_or_else(|| {
+        // degenerate budget: transmit means only at Q0 = 2 (or nothing)
+        plan_for_m(cfg, order, mins, maxs, means, 0)
+            .expect("M = 0 plan must always construct")
+    });
+    (best, tried)
+}
+
+/// Quantize + serialize A (Alg. 3 lines 19-23 + the paper's overhead terms).
+pub fn fwq_encode(a: &Matrix, cfg: &FwqConfig) -> (Vec<u8>, u64, FwqInfo) {
+    let dhat = a.cols;
+    assert_eq!(a.rows, cfg.batch);
+    if dhat == 0 {
+        let w = BitWriter::new();
+        return (
+            w.into_bytes(),
+            0,
+            FwqInfo { m_star: 0, dhat: 0, nominal_bits: 0.0, objective: 0.0, q0: None, candidates_tried: 0 },
+        );
+    }
+    let st = column_stats(a);
+    let ranges: Vec<f32> = st.ranges();
+    let mut order: Vec<usize> = (0..dhat).collect();
+    order.sort_by(|&x, &y| ranges[y].partial_cmp(&ranges[x]).unwrap_or(std::cmp::Ordering::Equal));
+
+    let (plan, tried) = search_m(cfg, &order, &st.min, &st.max, &st.mean);
+
+    // ---- serialize ----
+    let mut w = BitWriter::with_capacity((cfg.c_ava / 8.0) as usize + 64);
+    w.write_u32(dhat as u32);
+    w.write_u32(plan.m as u32);
+    w.write_f32(plan.a_min);
+    w.write_f32(plan.a_max);
+    w.write_f32(plan.abar_min);
+    w.write_f32(plan.abar_max);
+    // flags in column order
+    let mut is_two = vec![false; dhat];
+    for &c in &plan.two_stage {
+        is_two[c] = true;
+    }
+    for &f in &is_two {
+        w.write_bits(f as u64, 1);
+    }
+    // endpoint codes (column order, min then max), radix base Q_ep
+    let mut ep_syms = Vec::with_capacity(2 * plan.m);
+    for &(umin, umax) in &plan.ep_codes {
+        ep_syms.push(umin);
+        ep_syms.push(umax);
+    }
+    w.write_radix(&ep_syms, cfg.q_ep);
+
+    let d_ep = delta_ep(plan.a_min, plan.a_max, cfg.q_ep);
+    let use_mean_q = cfg.use_mean && !plan.mean_cols.is_empty();
+    let q0 = if use_mean_q { Some(*plan.levels.last().unwrap()) } else { None };
+
+    // mean codes
+    if let Some(q0v) = q0 {
+        let lo = plan.abar_min as f64;
+        let span = (plan.abar_max - plan.abar_min) as f64;
+        let syms: Vec<u64> = plan
+            .mean_cols
+            .iter()
+            .map(|&c| quant_code(st.mean[c] as f64, lo, span, q0v))
+            .collect();
+        w.write_radix(&syms, q0v);
+    }
+    // entry codes per two-stage column
+    for (j, &c) in plan.two_stage.iter().enumerate() {
+        let (umin, umax) = plan.ep_codes[j];
+        let lo = plan.a_min as f64 + umin as f64 * d_ep;
+        let span = (umax - umin) as f64 * d_ep;
+        let qj = plan.levels[j];
+        let col = a.col(c);
+        let syms: Vec<u64> = col.iter().map(|&v| quant_code(v as f64, lo, span, qj)).collect();
+        w.write_radix(&syms, qj);
+    }
+
+    // nominal accounting (eq. 17): 2M log2 Qep + B Σ log2 Qj
+    //   + (D̂-M) log2 Q0 + D̂ + 32*4
+    let lg_ep = (cfg.q_ep as f64).log2();
+    let mut nominal = 2.0 * plan.m as f64 * lg_ep + dhat as f64 + 128.0;
+    for (j, _) in plan.two_stage.iter().enumerate() {
+        nominal += cfg.batch as f64 * (plan.levels[j] as f64).log2();
+    }
+    if let Some(q0v) = q0 {
+        nominal += plan.mean_cols.len() as f64 * (q0v as f64).log2();
+    }
+
+    let bits = w.bit_len();
+    let info = FwqInfo {
+        m_star: plan.m,
+        dhat,
+        nominal_bits: nominal,
+        objective: plan.objective,
+        q0,
+        candidates_tried: tried,
+    };
+    (w.into_bytes(), bits, info)
+}
+
+#[inline]
+fn quant_code(v: f64, lo: f64, span: f64, q: u64) -> u64 {
+    if span <= 0.0 || q < 2 {
+        return 0;
+    }
+    let t = ((v - lo) / span * (q as f64 - 1.0)).round();
+    (t.max(0.0) as u64).min(q - 1)
+}
+
+#[inline]
+fn dequant(code: u64, lo: f64, span: f64, q: u64) -> f32 {
+    if q < 2 || span <= 0.0 {
+        return lo as f32;
+    }
+    (lo + code as f64 * span / (q as f64 - 1.0)) as f32
+}
+
+/// Decode a FWQ frame back to a B×D̂ matrix. Needs only the shared config:
+/// levels are re-derived by re-running the allocation on the decoded
+/// endpoints/means (Sec. VI-B — both sides build identical quantizers).
+pub fn fwq_decode(bytes: &[u8], cfg: &FwqConfig) -> Matrix {
+    if bytes.is_empty() {
+        return Matrix::zeros(cfg.batch, 0);
+    }
+    let mut r = BitReader::new(bytes);
+    let dhat = r.read_u32() as usize;
+    let m = r.read_u32() as usize;
+    let a_min = r.read_f32();
+    let a_max = r.read_f32();
+    let abar_min = r.read_f32();
+    let abar_max = r.read_f32();
+    let is_two: Vec<bool> = (0..dhat).map(|_| r.read_bits(1) == 1).collect();
+    let ep_syms = r.read_radix(2 * m, cfg.q_ep);
+    let d_ep = delta_ep(a_min, a_max, cfg.q_ep);
+
+    let two_stage: Vec<usize> = (0..dhat).filter(|&c| is_two[c]).collect();
+    assert_eq!(two_stage.len(), m, "flag/M mismatch in frame");
+    let mean_cols: Vec<usize> = (0..dhat).filter(|&c| !is_two[c]).collect();
+
+    // re-derive the levels exactly as the encoder did
+    let c_const = 2.0 * m as f64 * (cfg.q_ep as f64).log2() + dhat as f64 + HEADER_BITS;
+    let c_levels = cfg.c_ava - c_const;
+    let mut specs: Vec<LevelSpec> = (0..m)
+        .map(|j| {
+            let (umin, umax) = (ep_syms[2 * j], ep_syms[2 * j + 1]);
+            LevelSpec::entry((umax - umin) as f64 * d_ep, cfg.batch)
+        })
+        .collect();
+    let use_mean_q = cfg.use_mean && !mean_cols.is_empty();
+    if use_mean_q {
+        specs.push(LevelSpec::mean(
+            (abar_max - abar_min) as f64,
+            cfg.batch,
+            mean_cols.len(),
+        ));
+    }
+    let levels = match cfg.q_fixed {
+        Some(q) => vec![q.max(2); specs.len()],
+        // mirrors the encoder exactly, including the degenerate-budget
+        // minimum-level fallback for the all-means plan
+        None => waterfill::solve(&specs, c_levels).unwrap_or_else(|| vec![2; specs.len()]),
+    };
+
+    let mut out = Matrix::zeros(cfg.batch, dhat);
+    // mean codes
+    if use_mean_q {
+        let q0 = *levels.last().unwrap();
+        let lo = abar_min as f64;
+        let span = (abar_max - abar_min) as f64;
+        let syms = r.read_radix(mean_cols.len(), q0);
+        for (k, &c) in mean_cols.iter().enumerate() {
+            let v = dequant(syms[k], lo, span, q0);
+            for b in 0..cfg.batch {
+                *out.at_mut(b, c) = v;
+            }
+        }
+    }
+    // entry codes
+    for (j, &c) in two_stage.iter().enumerate() {
+        let (umin, umax) = (ep_syms[2 * j], ep_syms[2 * j + 1]);
+        let lo = a_min as f64 + umin as f64 * d_ep;
+        let span = (umax - umin) as f64 * d_ep;
+        let qj = levels[j];
+        let syms = r.read_radix(cfg.batch, qj);
+        for b in 0..cfg.batch {
+            *out.at_mut(b, c) = dequant(syms[b], lo, span, qj);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Matrix with heterogeneous column ranges (the paper's Fig.-1 regime).
+    fn hetero(b: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let scales: Vec<f32> = (0..d)
+            .map(|i| if i % 3 == 0 { 10.0 } else if i % 3 == 1 { 0.5 } else { 0.01 })
+            .collect();
+        Matrix::from_fn(b, d, |_r, c| {
+            scales[c] * rng.normal_f32(0.0, 1.0) + c as f32 * 0.1
+        })
+    }
+
+    fn cfg(b: usize, d: usize, bits_per_entry: f64) -> FwqConfig {
+        FwqConfig::paper_default(b, bits_per_entry * b as f64 * d as f64)
+    }
+
+    #[test]
+    fn roundtrip_within_budget() {
+        let a = hetero(32, 64, 1);
+        let c = cfg(32, 64, 2.0);
+        let (bytes, bits, info) = fwq_encode(&a, &c);
+        // measured bits within budget (+ radix slack < 1 bit/group)
+        assert!(bits as f64 <= c.c_ava * 1.02 + 256.0, "bits={bits} c_ava={}", c.c_ava);
+        assert!(info.nominal_bits <= c.c_ava + 1e-6);
+        let out = fwq_decode(&bytes, &c);
+        assert_eq!((out.rows, out.cols), (32, 64));
+        // two-stage columns should be far more accurate than raw range
+        let rel = (a.sq_dist(&out) / a.sq_norm()).sqrt();
+        assert!(rel < 0.5, "relative error {rel}");
+    }
+
+    #[test]
+    fn decode_is_exact_inverse_of_encode_quantization() {
+        // re-encoding the decoded matrix must be a fixed point (codes stable)
+        let a = hetero(16, 24, 2);
+        let c = cfg(16, 24, 3.0);
+        let (bytes, _, _) = fwq_encode(&a, &c);
+        let out1 = fwq_decode(&bytes, &c);
+        let (bytes2, _, _) = fwq_encode(&out1, &c);
+        let out2 = fwq_decode(&bytes2, &c);
+        let d = out1.sq_dist(&out2).sqrt();
+        let scale = out1.sq_norm().sqrt().max(1.0);
+        // second pass re-derives grids from decoded (already on-grid) stats,
+        // so it should move the matrix far less than the first quantization
+        assert!(d < 0.05 * scale, "not a near-fixed-point: {d} vs {scale}");
+    }
+
+    #[test]
+    fn error_bound_eq19_holds_per_two_stage_column() {
+        let a = hetero(24, 32, 3);
+        let c = cfg(24, 32, 4.0);
+        let (bytes, _, info) = fwq_encode(&a, &c);
+        let out = fwq_decode(&bytes, &c);
+        // total error is bounded by the objective at the solution (eqs. 19-21
+        // are upper bounds, and the objective adds the mean-residual term)
+        let err: f64 = a.sq_dist(&out);
+        assert!(
+            err <= info.objective * 1.5 + 1e-6,
+            "err={err} bound={}",
+            info.objective
+        );
+    }
+
+    #[test]
+    fn more_budget_less_error() {
+        let a = hetero(32, 48, 4);
+        let mut last = f64::INFINITY;
+        for bpe in [0.5, 1.0, 2.0, 4.0, 8.0] {
+            let c = cfg(32, 48, bpe);
+            let (bytes, _, _) = fwq_encode(&a, &c);
+            let out = fwq_decode(&bytes, &c);
+            let err = a.sq_dist(&out);
+            assert!(
+                err <= last * 1.3 + 1e-9,
+                "bpe={bpe}: err={err} prev={last}"
+            );
+            last = err.min(last);
+        }
+    }
+
+    #[test]
+    fn small_range_columns_use_mean_quantizer() {
+        let a = hetero(16, 30, 5);
+        let c = cfg(16, 30, 1.0); // tight budget forces mean usage
+        let (_, _, info) = fwq_encode(&a, &c);
+        assert!(info.m_star < 30, "M*={} should leave mean columns", info.m_star);
+        assert!(info.q0.is_some());
+    }
+
+    #[test]
+    fn sub_one_bit_per_entry_regime() {
+        // the paper's headline: < 1 bit/entry uplink. 0.2 bits/entry here.
+        let a = hetero(64, 128, 6);
+        let c = cfg(64, 128, 0.2);
+        let (bytes, bits, info) = fwq_encode(&a, &c);
+        assert!(bits as f64 <= c.c_ava * 1.05 + 512.0, "bits={bits}");
+        let out = fwq_decode(&bytes, &c);
+        assert_eq!(out.cols, 128);
+        assert!(info.m_star <= 128);
+        // constant columns must reconstruct near-exactly via means
+        let rel = (a.sq_dist(&out) / a.sq_norm()).sqrt();
+        assert!(rel < 1.0, "rel={rel}");
+    }
+
+    #[test]
+    fn constant_matrix_reconstructs_exactly() {
+        let a = Matrix::from_fn(8, 16, |_, _| 3.25);
+        let c = cfg(8, 16, 1.0);
+        let (bytes, _, _) = fwq_encode(&a, &c);
+        let out = fwq_decode(&bytes, &c);
+        for v in &out.data {
+            assert!((v - 3.25).abs() < 1e-5, "v={v}");
+        }
+    }
+
+    #[test]
+    fn fixed_q_mode_fig5() {
+        let a = hetero(32, 64, 7);
+        for q in [2u64, 4, 8, 32] {
+            let mut c = cfg(32, 64, 2.0);
+            c.q_fixed = Some(q);
+            let (bytes, bits, info) = fwq_encode(&a, &c);
+            let out = fwq_decode(&bytes, &c);
+            assert_eq!(out.cols, 64);
+            assert!(bits > 0);
+            assert!(info.m_star <= 64);
+        }
+    }
+
+    #[test]
+    fn optimized_beats_worst_fixed_q() {
+        // Fig. 5's claim at matrix level: optimal levels ≤ error of Q=32.
+        let a = hetero(32, 96, 8);
+        let c_opt = cfg(32, 96, 1.0);
+        let (b1, _, _) = fwq_encode(&a, &c_opt);
+        let e_opt = a.sq_dist(&fwq_decode(&b1, &c_opt));
+        let mut c_fix = cfg(32, 96, 1.0);
+        c_fix.q_fixed = Some(32);
+        let (b2, _, _) = fwq_encode(&a, &c_fix);
+        let e_fix = a.sq_dist(&fwq_decode(&b2, &c_fix));
+        assert!(e_opt <= e_fix * 1.05, "opt={e_opt} fixed32={e_fix}");
+    }
+
+    #[test]
+    fn no_mean_mode_case3() {
+        let a = hetero(16, 40, 9);
+        let mut c = cfg(16, 40, 1.0);
+        c.use_mean = false;
+        let (bytes, _, info) = fwq_encode(&a, &c);
+        let out = fwq_decode(&bytes, &c);
+        assert!(info.q0.is_none());
+        // untransmitted columns are zero
+        let mut is_zero_col = 0;
+        for col in 0..40 {
+            if (0..16).all(|r| out.at(r, col) == 0.0) {
+                is_zero_col += 1;
+            }
+        }
+        assert_eq!(is_zero_col, 40 - info.m_star);
+    }
+
+    #[test]
+    fn radix_packing_close_to_nominal() {
+        let a = hetero(64, 64, 10);
+        let c = cfg(64, 64, 2.0);
+        let (_, bits, info) = fwq_encode(&a, &c);
+        // measured bits ≤ nominal + (per-symbol packing slack ≈ eps) + header
+        let slack = 0.05 * info.nominal_bits + 512.0;
+        assert!(
+            (bits as f64) <= info.nominal_bits + slack,
+            "bits={bits} nominal={}",
+            info.nominal_bits
+        );
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let a = Matrix::zeros(8, 0);
+        let c = cfg(8, 1, 1.0);
+        let (bytes, bits, _) = fwq_encode(&a, &c);
+        assert_eq!(bits, 0);
+        let out = fwq_decode(&bytes, &c);
+        assert_eq!(out.cols, 0);
+    }
+
+    #[test]
+    fn radix_bits_helper_sane() {
+        use crate::bitio::radix_bits_per_symbol;
+        // Q_ep = 200 packs 8 symbols/62 bits: 7.75 vs ideal 7.64 bits/symbol
+        assert!((radix_bits_per_symbol(200) - (200f64).log2()).abs() < 0.15);
+    }
+}

@@ -1,0 +1,351 @@
+//! Quantization-level allocation — problem (P) (eqs. 22-24) and Theorem 1.
+//!
+//! Minimize   Σ_{j=1..M} ã_j² B / (4 (Q_j - 1)²)  +  ã_0² B (D̂-M) / (2 (Q_0 - 1)²)
+//! subject to B Σ log2 Q_j + (D̂-M) log2 Q_0  ≤  C_target,  2 ≤ Q_l ≤ 2^32.
+//!
+//! The KKT stationarity condition gives the paper's cubic (eq. 40)
+//!     (Q - 1)³ = u · Q,   u_j = ã_j² ln2 / (2ν),  u_0 = ã_0² B ln2 / ν,
+//! whose positive root (eq. 41 / Theorem 1) we compute with a robust cubic
+//! solver (Cardano one-real-root branch == the paper's closed form; the
+//! trigonometric branch covers u > 27/4 where eq. 41's inner sqrt goes
+//! negative). The Lagrange multiplier ν is found by bisection — bits(ν) is
+//! monotone non-increasing — and real integer levels are obtained by
+//! flooring + greedy residual-bit redistribution (the Chow-style adjust the
+//! paper cites [48]).
+
+pub const Q_MIN: f64 = 2.0;
+pub const Q_MAX: f64 = 4294967296.0; // 2^32
+
+/// Per-quantizer inputs: the error-weight constant ã and the bit multiplier
+/// (B for entry quantizers, D̂-M for the shared mean quantizer).
+#[derive(Debug, Clone, Copy)]
+pub struct LevelSpec {
+    /// ã_l — quantization range constant from eq. (19)/(20).
+    pub a_tilde: f64,
+    /// error coefficient: err = coeff / (Q-1)^2  (ã²B/4 or ã²B(D̂-M)/2)
+    pub err_coeff: f64,
+    /// bits used = bit_weight * log2(Q)
+    pub bit_weight: f64,
+}
+
+impl LevelSpec {
+    /// Entry quantizer for a two-stage column (eq. 19): err = ã²B/4(Q-1)².
+    pub fn entry(a_tilde: f64, batch: usize) -> LevelSpec {
+        LevelSpec {
+            a_tilde,
+            err_coeff: a_tilde * a_tilde * batch as f64 / 4.0,
+            bit_weight: batch as f64,
+        }
+    }
+
+    /// Shared mean-value quantizer (eq. 20): err = ã_0²B(D̂-M)/2(Q_0-1)².
+    pub fn mean(a_tilde0: f64, batch: usize, n_mean_cols: usize) -> LevelSpec {
+        LevelSpec {
+            a_tilde: a_tilde0,
+            err_coeff: a_tilde0 * a_tilde0 * batch as f64 * n_mean_cols as f64 / 2.0,
+            bit_weight: n_mean_cols as f64,
+        }
+    }
+
+    /// The paper's u_l(ν): stationarity constant of the cubic (eq. 40).
+    /// Derived generically: d/dQ [coeff/(Q-1)²] + ν·w/(Q ln2) = 0
+    ///   ⇒ (Q-1)³ = (2 coeff ln2 / (ν w)) · Q.
+    fn u(&self, nu: f64) -> f64 {
+        2.0 * self.err_coeff * std::f64::consts::LN_2 / (nu * self.bit_weight)
+    }
+}
+
+/// Largest real root of (Q-1)^3 = u*Q for u > 0 (always > 1).
+pub fn cubic_root(u: f64) -> f64 {
+    debug_assert!(u > 0.0, "cubic_root needs u > 0 (got {u}); level_at guards this");
+    // x = Q-1: x³ - u x - u = 0, depressed cubic p = -u, q = -u.
+    let p = -u;
+    let q = -u;
+    let disc = -4.0 * p * p * p - 27.0 * q * q; // Δ = 4u³ - 27u²
+    let x = if disc > 0.0 {
+        // three real roots (u > 27/4): trigonometric method, take largest.
+        let m = 2.0 * (-p / 3.0).sqrt();
+        let theta = (3.0 * q / (p * m)).clamp(-1.0, 1.0).acos() / 3.0;
+        m * theta.cos()
+    } else {
+        // one real root — Cardano; algebraically equal to the paper's
+        // closed form (eq. 41) on its valid domain.
+        let t = (q * q / 4.0 + p * p * p / 27.0).sqrt();
+        let c1 = -q / 2.0 + t;
+        let c2 = -q / 2.0 - t;
+        c1.cbrt() + c2.cbrt()
+    };
+    1.0 + x
+}
+
+/// The paper's Theorem-1 closed form (eq. 25 / 41) on its valid domain —
+/// used by tests to cross-check `cubic_root`.
+pub fn theorem1_closed_form(u: f64) -> Option<f64> {
+    let inner = 81.0 - 12.0 * u;
+    if inner < 0.0 {
+        return None;
+    }
+    let v = (u * inner.sqrt() + 9.0 * u).cbrt();
+    Some((2.0f64 / 3.0).cbrt() * u / v + v / (2.0f64.cbrt() * 3.0f64.powf(2.0 / 3.0)) + 1.0)
+}
+
+/// Continuous optimal level for one quantizer at multiplier ν (eq. 42/43).
+pub fn level_at(spec: &LevelSpec, nu: f64) -> f64 {
+    let u = spec.u(nu);
+    if !(u > 0.0) {
+        // zero-range quantizer: any level is exact — use the minimum
+        return Q_MIN;
+    }
+    // (Q-1)³ = uQ crosses Q_MAX at u = (Q_MAX-1)³/Q_MAX ≈ 1.85e19; beyond
+    // that (or at f64 overflow territory) the clamp is the answer.
+    if u >= 1.8e19 {
+        return Q_MAX;
+    }
+    let q = cubic_root(u);
+    if !q.is_finite() {
+        return Q_MAX;
+    }
+    q.clamp(Q_MIN, Q_MAX)
+}
+
+fn total_bits(specs: &[LevelSpec], nu: f64) -> f64 {
+    specs
+        .iter()
+        .map(|s| s.bit_weight * level_at(s, nu).log2())
+        .sum()
+}
+
+/// Solve (P): continuous levels via ν-bisection, then integer rounding with
+/// greedy redistribution. Returns integer levels (aligned with `specs`) or
+/// None when even all-minimum levels (Q=2) exceed the budget.
+pub fn solve(specs: &[LevelSpec], c_target: f64) -> Option<Vec<u64>> {
+    if specs.is_empty() {
+        return Some(Vec::new());
+    }
+    let min_bits: f64 = specs.iter().map(|s| s.bit_weight).sum(); // all Q=2
+    if min_bits > c_target + 1e-9 {
+        return None;
+    }
+    // Degenerate: all ranges zero -> minimum levels everywhere.
+    if specs.iter().all(|s| s.a_tilde <= 0.0) {
+        return Some(vec![2; specs.len()]);
+    }
+
+    // Bisection bounds: bits(ν) is non-increasing. Bracket from the data:
+    // at ν ≥ max_l u_l(ν)=... every level hits Q=2 (eq. 36), so ν_hi =
+    // 4·max_l(2·coeff·ln2/w) forces the all-minimum allocation; ν_lo scaled
+    // down to where every level saturates at Q_MAX (eq. 39). A fixed
+    // iteration count then resolves ν* to ~1e-20 relative — this bracket
+    // (vs a blind 1e-300..1e300 sweep) is perf iteration L3-1 in
+    // EXPERIMENTS.md §Perf.
+    let qmax_bits: f64 = specs.iter().map(|s| s.bit_weight * Q_MAX.log2()).sum();
+    if qmax_bits <= c_target {
+        // even the most generous allocation fits: everything at Q_MAX
+        return Some(round_and_redistribute(specs, &vec![Q_MAX; specs.len()], c_target));
+    }
+    let u_max = specs
+        .iter()
+        .map(|s| 2.0 * s.err_coeff * std::f64::consts::LN_2 / s.bit_weight.max(1e-300))
+        .fold(f64::MIN_POSITIVE, f64::max);
+    let mut hi: f64 = 4.0 * u_max;
+    let mut lo: f64 = hi * 1e-25;
+    // ensure the bracket actually spans the target (a handful of widenings
+    // at most — bits(ν) saturates at both ends)
+    for _ in 0..12 {
+        if total_bits(specs, lo) >= c_target {
+            break;
+        }
+        lo *= 1e-20;
+    }
+    for _ in 0..90 {
+        let mid = (lo.ln() * 0.5 + hi.ln() * 0.5).exp(); // geometric midpoint
+        if total_bits(specs, mid) > c_target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let nu = hi;
+    let cont: Vec<f64> = specs.iter().map(|s| level_at(s, nu)).collect();
+    Some(round_and_redistribute(specs, &cont, c_target))
+}
+
+/// Floor the continuous levels to integers (>= 2), then greedily spend the
+/// residual bit budget on the increments with the best error-reduction /
+/// bit-cost ratio — Chow-style bit reuse [48].
+fn round_and_redistribute(specs: &[LevelSpec], cont: &[f64], c_target: f64) -> Vec<u64> {
+    let mut q: Vec<u64> = cont
+        .iter()
+        .map(|&c| (c.floor() as u64).clamp(2, Q_MAX as u64))
+        .collect();
+    let bits = |q: &[u64]| -> f64 {
+        specs
+            .iter()
+            .zip(q)
+            .map(|(s, &qi)| s.bit_weight * (qi as f64).log2())
+            .sum()
+    };
+    let mut used = bits(&q);
+    // Greedy improvement: each step, the +1-level move with the best
+    // Δerror/Δbits that still fits. Flooring loses < 1 level per quantizer,
+    // so a handful of rounds recovers the residual budget; the step cap
+    // guards against the near-free increments at very large Q (where the
+    // marginal error gain is negligible anyway).
+    let max_steps = 8 * specs.len() + 16;
+    for _ in 0..max_steps {
+        let mut best: Option<(usize, f64, f64)> = None; // (idx, gain_per_bit, cost)
+        for (i, s) in specs.iter().enumerate() {
+            if q[i] >= Q_MAX as u64 {
+                continue;
+            }
+            let cost = s.bit_weight * ((q[i] + 1) as f64).log2() - s.bit_weight * (q[i] as f64).log2();
+            if used + cost > c_target + 1e-9 {
+                continue;
+            }
+            let e_now = s.err_coeff / ((q[i] as f64 - 1.0) * (q[i] as f64 - 1.0));
+            let e_next = s.err_coeff / ((q[i] as f64) * (q[i] as f64));
+            let gain = (e_now - e_next) / cost.max(1e-12);
+            if best.map(|(_, g, _)| gain > g).unwrap_or(true) && gain > 0.0 {
+                best = Some((i, gain, cost));
+            }
+        }
+        match best {
+            Some((i, _, cost)) => {
+                q[i] += 1;
+                used += cost;
+            }
+            None => break,
+        }
+    }
+    let _ = used;
+    q
+}
+
+/// Objective f(Q_0..Q_M) of (P) for given integer levels (eq. 22, without the
+/// constant middle term which doesn't depend on the levels).
+pub fn objective(specs: &[LevelSpec], q: &[u64]) -> f64 {
+    specs
+        .iter()
+        .zip(q)
+        .map(|(s, &qi)| s.err_coeff / (((qi - 1) as f64) * ((qi - 1) as f64)))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cubic_root_satisfies_cubic() {
+        for &u in &[1e-6, 0.1, 0.5, 1.0, 6.0, 6.75, 7.0, 100.0, 1e6, 1e12] {
+            let q = cubic_root(u);
+            assert!(q > 1.0, "u={u} q={q}");
+            let lhs = (q - 1.0).powi(3);
+            let rhs = u * q;
+            assert!(
+                (lhs - rhs).abs() <= 1e-6 * rhs.max(1.0),
+                "u={u}: {lhs} vs {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn cubic_root_matches_theorem1_closed_form() {
+        for &u in &[0.01, 0.3, 1.0, 3.0, 6.0, 6.74] {
+            let ours = cubic_root(u);
+            let paper = theorem1_closed_form(u).unwrap();
+            assert!((ours - paper).abs() < 1e-9 * paper, "u={u}: {ours} vs {paper}");
+        }
+    }
+
+    #[test]
+    fn larger_range_gets_more_levels() {
+        // Theorem 1 discussion: bigger ã ⇒ higher Q at the same ν.
+        let nu = 0.01;
+        let a = level_at(&LevelSpec::entry(10.0, 64), nu);
+        let b = level_at(&LevelSpec::entry(0.1, 64), nu);
+        assert!(a > b, "{a} vs {b}");
+    }
+
+    #[test]
+    fn solve_meets_budget_exactly_enough() {
+        let specs: Vec<LevelSpec> = (0..16)
+            .map(|i| LevelSpec::entry(0.1 * (i + 1) as f64, 32))
+            .collect();
+        let target = 3200.0; // ~6.25 bits/entry avg
+        let q = solve(&specs, target).unwrap();
+        let bits: f64 = specs
+            .iter()
+            .zip(&q)
+            .map(|(s, &qi)| s.bit_weight * (qi as f64).log2())
+            .sum();
+        assert!(bits <= target + 1e-6, "bits={bits}");
+        // Should use most of the budget (within one max increment).
+        assert!(bits >= target - 32.0 * 17.0_f64.log2(), "bits={bits} target={target}");
+        // Monotone: larger ã gets >= levels
+        for i in 1..16 {
+            assert!(q[i] >= q[i - 1], "{q:?}");
+        }
+    }
+
+    #[test]
+    fn solve_infeasible_returns_none() {
+        let specs = vec![LevelSpec::entry(1.0, 64); 4];
+        // all-minimum needs 4*64 = 256 bits
+        assert!(solve(&specs, 100.0).is_none());
+        assert!(solve(&specs, 256.0).is_some());
+    }
+
+    #[test]
+    fn solve_with_mean_quantizer_balances() {
+        let mut specs: Vec<LevelSpec> =
+            (0..8).map(|i| LevelSpec::entry(0.5 + i as f64, 16)).collect();
+        specs.push(LevelSpec::mean(2.0, 16, 100));
+        let q = solve(&specs, 2000.0).unwrap();
+        assert_eq!(q.len(), 9);
+        assert!(q.iter().all(|&x| (2..=(Q_MAX as u64)).contains(&x)));
+    }
+
+    #[test]
+    fn abundant_budget_caps_at_qmax() {
+        let specs = vec![LevelSpec::entry(1.0, 2); 2];
+        let q = solve(&specs, 1e9).unwrap();
+        assert!(q.iter().all(|&x| x == Q_MAX as u64));
+    }
+
+    #[test]
+    fn zero_ranges_minimum_levels() {
+        let specs = vec![LevelSpec::entry(0.0, 8); 3];
+        let q = solve(&specs, 1000.0).unwrap();
+        assert!(q.iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    fn optimal_beats_uniform_allocation() {
+        // Fig.-5 claim: optimized levels yield lower total error than any
+        // fixed Q with the same bit budget.
+        let specs: Vec<LevelSpec> = [20.0, 8.0, 1.0, 0.4, 0.1, 0.05]
+            .iter()
+            .map(|&a| LevelSpec::entry(a, 64))
+            .collect();
+        let budget = 6.0 * 64.0 * 4.0; // avg 4 bits/level
+        let opt = solve(&specs, budget).unwrap();
+        let err_opt = objective(&specs, &opt);
+        let fixed = vec![16u64; 6]; // exactly 4 bits each
+        let err_fixed = objective(&specs, &fixed);
+        assert!(err_opt < err_fixed, "opt={err_opt} fixed={err_fixed}");
+    }
+
+    #[test]
+    fn objective_decreases_with_budget() {
+        let specs: Vec<LevelSpec> =
+            (0..10).map(|i| LevelSpec::entry(0.2 * (i + 1) as f64, 32)).collect();
+        let mut last = f64::INFINITY;
+        for &budget in &[320.0, 640.0, 1280.0, 2560.0] {
+            let q = solve(&specs, budget).unwrap();
+            let e = objective(&specs, &q);
+            assert!(e <= last + 1e-9, "budget={budget}: {e} > {last}");
+            last = e;
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! Run configuration: scenario presets mirroring Sec. VII plus CLI overrides.
+
+use crate::compression::{DropKind, FwqMode, ScalarKind, Scheme};
+use crate::util::{Args, Json};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionKind {
+    /// MNIST: 2 shards of distinct labels per device [52]
+    LabelShards,
+    /// CIFAR-100: Dirichlet(0.3) [52]
+    Dirichlet,
+    /// CelebA: writer grouping [36]
+    Writers,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub preset: String,
+    pub artifacts_dir: String,
+    /// K — number of devices
+    pub devices: usize,
+    /// T — communication rounds (each round visits every device once)
+    pub rounds: usize,
+    pub partition: PartitionKind,
+    pub seed: u64,
+    pub lr: f32,
+    /// uplink budget C_e,d in bits/entry (32 = lossless)
+    pub up_bits_per_entry: f64,
+    /// downlink budget C_e,s in bits/entry (32 = lossless)
+    pub down_bits_per_entry: f64,
+    pub scheme: Scheme,
+    pub n_train: usize,
+    pub n_test: usize,
+    /// evaluate every this many rounds (0 = only at the end)
+    pub eval_every: usize,
+    pub link_capacity_bps: f64,
+    pub link_latency_s: f64,
+    /// metrics JSONL output ("" = none)
+    pub metrics_path: String,
+}
+
+impl TrainConfig {
+    /// Scenario defaults per preset. Scales (K, T, n) are CPU-feasible
+    /// stand-ins for the paper's (30/50/100 devices, 200/100/40 rounds);
+    /// paper scales remain reachable via overrides (DESIGN.md §3).
+    pub fn for_preset(preset: &str) -> TrainConfig {
+        let (devices, rounds, partition, lr, n_train, n_test) = match preset {
+            "mnist" => (8, 12, PartitionKind::LabelShards, 1e-3, 4096, 512),
+            "cifar" => (8, 10, PartitionKind::Dirichlet, 1e-3, 2048, 256),
+            "celeba" => (10, 8, PartitionKind::Writers, 1e-3, 2048, 256),
+            _ => (4, 6, PartitionKind::LabelShards, 3e-3, 512, 64),
+        };
+        TrainConfig {
+            preset: preset.to_string(),
+            artifacts_dir: "artifacts".to_string(),
+            devices,
+            rounds,
+            partition,
+            seed: 0,
+            lr,
+            up_bits_per_entry: 32.0,
+            down_bits_per_entry: 32.0,
+            scheme: Scheme::Vanilla,
+            n_train,
+            n_test,
+            eval_every: 0,
+            link_capacity_bps: 10e6,
+            link_latency_s: 0.0,
+            metrics_path: String::new(),
+        }
+    }
+
+    /// Apply `--key value` CLI overrides.
+    pub fn apply_overrides(&mut self, args: &Args) {
+        if let Some(v) = args.get("artifacts") {
+            self.artifacts_dir = v.to_string();
+        }
+        self.devices = args.get_usize("devices", self.devices);
+        self.rounds = args.get_usize("rounds", self.rounds);
+        self.seed = args.get_u64("seed", self.seed);
+        self.lr = args.get_f64("lr", self.lr as f64) as f32;
+        self.up_bits_per_entry = args.get_f64("up-bpe", self.up_bits_per_entry);
+        self.down_bits_per_entry = args.get_f64("down-bpe", self.down_bits_per_entry);
+        self.n_train = args.get_usize("n-train", self.n_train);
+        self.n_test = args.get_usize("n-test", self.n_test);
+        self.eval_every = args.get_usize("eval-every", self.eval_every);
+        self.link_capacity_bps = args.get_f64("capacity-bps", self.link_capacity_bps);
+        if let Some(v) = args.get("metrics") {
+            self.metrics_path = v.to_string();
+        }
+        if let Some(v) = args.get("partition") {
+            self.partition = match v {
+                "shards" => PartitionKind::LabelShards,
+                "dirichlet" => PartitionKind::Dirichlet,
+                "writers" => PartitionKind::Writers,
+                other => panic!("unknown partition {other:?}"),
+            };
+        }
+        if let Some(s) = args.get("scheme") {
+            self.scheme = parse_scheme(s, args.get_f64("r", 16.0));
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("preset", Json::str(self.preset.clone())),
+            ("devices", Json::num(self.devices as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("lr", Json::num(self.lr as f64)),
+            ("up_bpe", Json::num(self.up_bits_per_entry)),
+            ("down_bpe", Json::num(self.down_bits_per_entry)),
+            ("scheme", Json::str(self.scheme.name())),
+            ("n_train", Json::num(self.n_train as f64)),
+            ("n_test", Json::num(self.n_test as f64)),
+        ])
+    }
+}
+
+/// Parse a framework name (the rows of Tables I-III) into a `Scheme`.
+pub fn parse_scheme(name: &str, r: f64) -> Scheme {
+    match name {
+        "vanilla" => Scheme::Vanilla,
+        "splitfc" => Scheme::splitfc(r),
+        "splitfc-ad" => Scheme::SplitFc {
+            drop: Some(DropKind::Adaptive),
+            r,
+            quant: FwqMode::NoQuant,
+        },
+        "splitfc-rand" => Scheme::SplitFc {
+            drop: Some(DropKind::Random),
+            r,
+            quant: FwqMode::NoQuant,
+        },
+        "splitfc-det" => Scheme::SplitFc {
+            drop: Some(DropKind::Deterministic),
+            r,
+            quant: FwqMode::NoQuant,
+        },
+        "splitfc-quant-only" => Scheme::SplitFc {
+            drop: None,
+            r: 1.0,
+            quant: FwqMode::Optimal { use_mean: true },
+        },
+        "splitfc-no-mean" => Scheme::SplitFc {
+            drop: Some(DropKind::Adaptive),
+            r,
+            quant: FwqMode::Optimal { use_mean: false },
+        },
+        "splitfc-ad+pq" => Scheme::SplitFc {
+            drop: Some(DropKind::Adaptive),
+            r,
+            quant: FwqMode::Scalar(ScalarKind::Pq),
+        },
+        "splitfc-ad+eq" => Scheme::SplitFc {
+            drop: Some(DropKind::Adaptive),
+            r,
+            quant: FwqMode::Scalar(ScalarKind::Eq),
+        },
+        "splitfc-ad+nq" => Scheme::SplitFc {
+            drop: Some(DropKind::Adaptive),
+            r,
+            quant: FwqMode::Scalar(ScalarKind::Nq),
+        },
+        "tops" => Scheme::TopS { theta: 0.0, quant: None },
+        "randtops" => Scheme::TopS { theta: 0.2, quant: None },
+        "tops+pq" => Scheme::TopS { theta: 0.0, quant: Some(ScalarKind::Pq) },
+        "tops+eq" => Scheme::TopS { theta: 0.0, quant: Some(ScalarKind::Eq) },
+        "tops+nq" => Scheme::TopS { theta: 0.0, quant: Some(ScalarKind::Nq) },
+        "fedlite" => Scheme::FedLite { num_subvectors: 16 },
+        other => panic!("unknown scheme {other:?}"),
+    }
+}
+
+/// The framework lineup of Table I (uplink compression comparison).
+pub fn table1_frameworks() -> Vec<&'static str> {
+    vec![
+        "splitfc",
+        "fedlite",
+        "randtops",
+        "tops",
+        "splitfc-ad+pq",
+        "splitfc-ad+eq",
+        "splitfc-ad+nq",
+        "tops+pq",
+        "tops+eq",
+        "tops+nq",
+    ]
+}
+
+/// Table II lineup (uplink + downlink compression).
+pub fn table2_frameworks() -> Vec<&'static str> {
+    vec![
+        "splitfc",
+        "splitfc-ad+pq",
+        "splitfc-ad+eq",
+        "splitfc-ad+nq",
+        "tops+pq",
+        "tops+eq",
+        "tops+nq",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_defaults() {
+        let c = TrainConfig::for_preset("mnist");
+        assert_eq!(c.partition, PartitionKind::LabelShards);
+        assert_eq!(TrainConfig::for_preset("cifar").partition, PartitionKind::Dirichlet);
+        assert_eq!(TrainConfig::for_preset("celeba").partition, PartitionKind::Writers);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = TrainConfig::for_preset("tiny");
+        let args = Args::parse(
+            &"x --rounds 3 --devices 2 --scheme splitfc --r 8 --up-bpe 0.2"
+                .split_whitespace()
+                .map(String::from)
+                .collect::<Vec<_>>(),
+        );
+        c.apply_overrides(&args);
+        assert_eq!(c.rounds, 3);
+        assert_eq!(c.devices, 2);
+        assert_eq!(c.up_bits_per_entry, 0.2);
+        assert_eq!(c.scheme, Scheme::splitfc(8.0));
+    }
+
+    #[test]
+    fn all_table_frameworks_parse() {
+        for name in table1_frameworks().iter().chain(table2_frameworks().iter()) {
+            let _ = parse_scheme(name, 16.0); // must not panic
+        }
+        for extra in ["vanilla", "splitfc-ad", "splitfc-rand", "splitfc-det",
+                      "splitfc-quant-only", "splitfc-no-mean"] {
+            let _ = parse_scheme(extra, 8.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_scheme_panics() {
+        parse_scheme("nope", 1.0);
+    }
+
+    #[test]
+    fn config_json_roundtrip_fields() {
+        let c = TrainConfig::for_preset("mnist");
+        let j = c.to_json();
+        assert_eq!(j.req("preset").as_str(), Some("mnist"));
+        assert_eq!(j.req("devices").as_usize(), Some(8));
+    }
+}

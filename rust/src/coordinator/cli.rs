@@ -1,0 +1,120 @@
+//! The `splitfc` command-line interface (leader entrypoint).
+
+use crate::config::TrainConfig;
+use crate::coordinator::{experiments, trainer::Trainer};
+use crate::transport::channel::vanilla_sl_transfer_time_s;
+use crate::util::Args;
+
+const HELP: &str = "\
+splitfc — communication-efficient split learning (SplitFC reproduction)
+
+USAGE:
+  splitfc train --preset <tiny|mnist|cifar|celeba> [--scheme S] [--r R]
+                [--up-bpe X] [--down-bpe X] [--rounds T] [--devices K]
+                [--seed N] [--eval-every E] [--metrics file.jsonl]
+  splitfc experiment <fig1|fig3|fig4|fig5|table1|table2|table3|all>
+                [--presets mnist,cifar,celeba] [--rounds T] [--devices K] ...
+  splitfc latency-calc [--capacity-bps 10e6 --batch 256 --dbar 8192
+                --iters 100 --devices 100]
+  splitfc inspect [--artifacts artifacts]
+  splitfc help
+
+SCHEMES:
+  vanilla | splitfc | splitfc-ad | splitfc-rand | splitfc-det |
+  splitfc-quant-only | splitfc-no-mean | splitfc-ad+{pq,eq,nq} |
+  tops | randtops | tops+{pq,eq,nq} | fedlite
+";
+
+pub fn main() {
+    let args = Args::from_env();
+    if args.has_flag("debug") {
+        crate::util::logging::set_level(3);
+    }
+    let code = match args.subcommand() {
+        Some("train") => cmd_train(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("latency-calc") => cmd_latency(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let preset = args.get_or("preset", "mnist").to_string();
+    let mut cfg = TrainConfig::for_preset(&preset);
+    cfg.apply_overrides(args);
+    println!("config: {}", cfg.to_json().to_string_compact());
+    let mut tr = Trainer::new(cfg)?;
+    let summary = tr.run()?;
+    println!("summary: {}", summary.to_json().to_string_pretty());
+    let rep = tr.link.report();
+    println!(
+        "link: up {} bits, down {} bits, modeled transfer time {:.2}s @ {} bps",
+        rep.up_bits, rep.down_bits, rep.elapsed_s, tr.link.capacity_bps
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    experiments::run(id, args)
+}
+
+fn cmd_latency(args: &Args) -> anyhow::Result<()> {
+    // the paper's intro example by default: ~1.34e5 seconds
+    let cap = args.get_f64("capacity-bps", 10e6);
+    let batch = args.get_usize("batch", 256);
+    let dbar = args.get_usize("dbar", 8192);
+    let iters = args.get_usize("iters", 100);
+    let devices = args.get_usize("devices", 100);
+    let t = vanilla_sl_transfer_time_s(cap, batch, dbar, iters, devices);
+    println!(
+        "vanilla SL transfer time: {t:.3e} s  (capacity {cap:.3e} bps, B={batch}, \
+         Dbar={dbar}, T={iters}, K={devices})"
+    );
+    for ratio in [160.0, 240.0, 320.0] {
+        println!("  at {ratio:>4}x compression: {:.3e} s", t / ratio);
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let m = crate::runtime::Manifest::load(&dir)?;
+    println!("manifest format {} — {} presets", m.format, m.presets.len());
+    for (name, p) in &m.presets {
+        println!(
+            "  {name}: B={} Dbar={} H={} classes={} N_d={} N_s={} entries={}",
+            p.batch,
+            p.dbar,
+            p.num_channels,
+            p.classes,
+            p.nd_params,
+            p.ns_params,
+            p.entries.len()
+        );
+        for (ename, e) in &p.entries {
+            let sz = std::fs::metadata(dir.join(&e.file)).map(|m| m.len()).unwrap_or(0);
+            println!(
+                "      {ename}: {} in -> {} out ({} bytes HLO)",
+                e.num_inputs, e.num_outputs, sz
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,358 @@
+//! Experiment harness: one function per paper table/figure (DESIGN.md §5).
+//!
+//! Each regenerates the corresponding artifact — same rows/series as the
+//! paper — at a configurable scale (`--rounds/--devices/--n-train` shrink the
+//! runs for CI; paper scales remain reachable). Results are printed as a
+//! table and appended to `results/<id>.json`.
+
+use anyhow::Result;
+
+use crate::bench::print_table;
+use crate::config::{parse_scheme, table1_frameworks, table2_frameworks, TrainConfig};
+use crate::coordinator::trainer::Trainer;
+use crate::log_info;
+use crate::tensor::{column_stats, dispersion_summary, normalized_sigma};
+use crate::util::{Args, Json};
+
+/// Build a config for (preset, scheme, budgets) with CLI overrides applied.
+fn cfg_for(
+    preset: &str,
+    scheme_name: &str,
+    r: f64,
+    up_bpe: f64,
+    down_bpe: f64,
+    args: &Args,
+) -> TrainConfig {
+    let mut cfg = TrainConfig::for_preset(preset);
+    cfg.scheme = parse_scheme(scheme_name, r);
+    cfg.up_bits_per_entry = up_bpe;
+    cfg.down_bits_per_entry = down_bpe;
+    cfg.apply_overrides(args);
+    // scheme/up/down were explicit: re-pin them over generic overrides
+    cfg.scheme = parse_scheme(scheme_name, args.get_f64("r", r));
+    cfg.up_bits_per_entry = up_bpe;
+    cfg.down_bits_per_entry = down_bpe;
+    cfg
+}
+
+fn run_one(cfg: TrainConfig) -> Result<(f32, f64, f64)> {
+    let name = cfg.scheme.name();
+    let preset = cfg.preset.clone();
+    let (batch, dbar);
+    let mut tr = Trainer::new(cfg)?;
+    batch = tr.rt.preset.batch;
+    dbar = tr.rt.preset.dbar;
+    let s = tr.run()?;
+    let up_bpe = s.uplink_bits_per_entry(batch, dbar);
+    let down_bpe = s.total_down_bits as f64 / (s.steps as f64 * (batch * dbar) as f64);
+    log_info!(
+        "{preset}/{name}: acc={:.4} measured-up={:.4}b/e down={:.4}b/e wall={:.1}s",
+        s.final_acc,
+        up_bpe,
+        down_bpe,
+        s.wall_s
+    );
+    Ok((s.final_acc, up_bpe, down_bpe))
+}
+
+fn save_results(id: &str, j: Json) {
+    std::fs::create_dir_all("results").ok();
+    let path = format!("results/{id}.json");
+    std::fs::write(&path, j.to_string_pretty()).expect("write results");
+    println!("[saved {path}]");
+}
+
+fn presets_from(args: &Args, default: &str) -> Vec<String> {
+    args.get_or("presets", default)
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+/// Fig. 1 — dispersion of intermediate feature columns, raw vs normalized.
+pub fn fig1(args: &Args) -> Result<()> {
+    let preset = args.get_or("presets", "mnist").split(',').next().unwrap().to_string();
+    let mut cfg = cfg_for(&preset, "vanilla", 1.0, 32.0, 32.0, args);
+    cfg.rounds = args.get_usize("rounds", 3); // short warmup like the paper's T
+    let mut tr = Trainer::new(cfg)?;
+    tr.run()?;
+    let (f, sigma_norm) = tr.probe_features(0)?;
+    let st = column_stats(&f);
+    let raw = dispersion_summary(&st.std, &st.ranges());
+    // normalized ranges: per-column range / channel range
+    let chan = tr.rt.preset.chan_size;
+    let sig2 = normalized_sigma(&st, chan);
+    let (cmn, cmx) = crate::tensor::channel_min_max(&st, chan);
+    let nranges: Vec<f32> = (0..f.cols)
+        .map(|c| {
+            let r = cmx[c / chan] - cmn[c / chan];
+            if r > 0.0 {
+                st.range(c) / r
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let norm = dispersion_summary(&sig2, &nranges);
+    // cross-check: artifact σ (Pallas kernel) vs host σ
+    let max_dev = sigma_norm
+        .iter()
+        .zip(&sig2)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+
+    let rows = vec![
+        (
+            "std (min / max / max-SNV ratio)".to_string(),
+            vec![
+                format!("{:.4} / {:.4} / {:.1}x", raw.std_min, raw.std_max, raw.std_snv_ratio),
+                format!("{:.4} / {:.4} / {:.1}x", norm.std_min, norm.std_max, norm.std_snv_ratio),
+            ],
+        ),
+        (
+            "range (min / max / max-SNV ratio)".to_string(),
+            vec![
+                format!("{:.4} / {:.4} / {:.1}x", raw.range_min, raw.range_max, raw.range_snv_ratio),
+                format!(
+                    "{:.4} / {:.4} / {:.1}x",
+                    norm.range_min, norm.range_max, norm.range_snv_ratio
+                ),
+            ],
+        ),
+    ];
+    print_table(
+        &format!("Fig. 1 — feature dispersion, {preset} (B={}, Dbar={})", f.rows, f.cols),
+        &["original".into(), "normalized".into()],
+        &rows,
+    );
+    println!(
+        "kernel-vs-host sigma max deviation: {max_dev:.2e} (feature_stats artifact agrees)"
+    );
+    println!(
+        "paper shape check: normalization shrinks the std SNV ratio ({:.1}x -> {:.1}x)",
+        raw.std_snv_ratio, norm.std_snv_ratio
+    );
+    save_results(
+        "fig1",
+        Json::obj(vec![
+            ("preset", Json::str(preset)),
+            ("raw_std_snv", Json::num(raw.std_snv_ratio as f64)),
+            ("norm_std_snv", Json::num(norm.std_snv_ratio as f64)),
+            ("raw_range_snv", Json::num(raw.range_snv_ratio as f64)),
+            ("norm_range_snv", Json::num(norm.range_snv_ratio as f64)),
+            ("kernel_sigma_max_dev", Json::num(max_dev as f64)),
+        ]),
+    );
+    Ok(())
+}
+
+/// Fig. 3 — dropout variants (AD / Rand / Deterministic) vs R, no quantization.
+pub fn fig3(args: &Args) -> Result<()> {
+    let preset = presets_from(args, "mnist")[0].clone();
+    let rs: Vec<f64> = args
+        .get_or("rs", "4,8,16,32,64")
+        .split(',')
+        .map(|s| s.trim().parse().unwrap())
+        .collect();
+    let schemes = ["splitfc-ad", "splitfc-rand", "splitfc-det"];
+    let vanilla = run_one(cfg_for(&preset, "vanilla", 1.0, 32.0, 32.0, args))?.0;
+    let mut rows = Vec::new();
+    let mut out = vec![("vanilla".to_string(), Json::num(vanilla as f64))];
+    for scheme in schemes {
+        let mut cols = Vec::new();
+        for &r in &rs {
+            let (acc, _, _) = run_one(cfg_for(&preset, scheme, r, 32.0, 32.0, args))?;
+            cols.push(format!("{:.2}", acc * 100.0));
+            out.push((format!("{scheme}@R{r}"), Json::num(acc as f64)));
+        }
+        rows.push((scheme.to_string(), cols));
+    }
+    rows.push((
+        "vanilla (R=1)".to_string(),
+        vec![format!("{:.2}", vanilla * 100.0); rs.len()],
+    ));
+    print_table(
+        &format!("Fig. 3 — accuracy vs R, {preset} (dropout only)"),
+        &rs.iter().map(|r| format!("R={r}")).collect::<Vec<_>>(),
+        &rows,
+    );
+    save_results("fig3", Json::Obj(out.into_iter().map(|(k, v)| (k, v)).collect()));
+    Ok(())
+}
+
+/// Table I — accuracy vs uplink compression (downlink lossless).
+pub fn table1(args: &Args) -> Result<()> {
+    let budgets: Vec<(String, f64)> = vec![
+        ("160x".into(), 0.2),
+        ("240x".into(), 32.0 / 240.0),
+        ("320x".into(), 0.1),
+    ];
+    let r = args.get_f64("r", 16.0);
+    let mut results = Vec::new();
+    for preset in presets_from(args, "mnist") {
+        let vanilla = run_one(cfg_for(&preset, "vanilla", 1.0, 32.0, 32.0, args))?.0;
+        let mut rows = vec![(
+            "vanilla (1x)".to_string(),
+            vec![format!("{:.2}", vanilla * 100.0); budgets.len()],
+        )];
+        results.push((format!("{preset}/vanilla"), Json::num(vanilla as f64)));
+        for fw in table1_frameworks() {
+            let mut cols = Vec::new();
+            for (_, bpe) in &budgets {
+                let (acc, _, _) = run_one(cfg_for(&preset, fw, r, *bpe, 32.0, args))?;
+                cols.push(format!("{:.2}", acc * 100.0));
+                results.push((format!("{preset}/{fw}@{bpe:.4}"), Json::num(acc as f64)));
+            }
+            rows.push((fw.to_string(), cols));
+        }
+        print_table(
+            &format!("Table I — accuracy vs uplink compression, {preset}"),
+            &budgets.iter().map(|(n, b)| format!("{n} ({b:.3}b)")).collect::<Vec<_>>(),
+            &rows,
+        );
+    }
+    save_results("table1", Json::Obj(results.into_iter().collect()));
+    Ok(())
+}
+
+/// Table II — accuracy vs downlink compression with C_e,d = C_e,s / 2.
+pub fn table2(args: &Args) -> Result<()> {
+    let budgets: Vec<(String, f64)> = vec![
+        ("80x".into(), 0.4),
+        ("120x".into(), 32.0 / 120.0),
+        ("160x".into(), 0.2),
+    ];
+    let r = args.get_f64("r", 16.0);
+    let mut results = Vec::new();
+    for preset in presets_from(args, "mnist") {
+        let vanilla = run_one(cfg_for(&preset, "vanilla", 1.0, 32.0, 32.0, args))?.0;
+        let mut rows = vec![(
+            "vanilla (1x)".to_string(),
+            vec![format!("{:.2}", vanilla * 100.0); budgets.len()],
+        )];
+        results.push((format!("{preset}/vanilla"), Json::num(vanilla as f64)));
+        for fw in table2_frameworks() {
+            let mut cols = Vec::new();
+            for (_, down_bpe) in &budgets {
+                let up_bpe = down_bpe / 2.0;
+                let (acc, _, _) = run_one(cfg_for(&preset, fw, r, up_bpe, *down_bpe, args))?;
+                cols.push(format!("{:.2}", acc * 100.0));
+                results
+                    .push((format!("{preset}/{fw}@dn{down_bpe:.4}"), Json::num(acc as f64)));
+            }
+            rows.push((fw.to_string(), cols));
+        }
+        print_table(
+            &format!("Table II — accuracy vs downlink compression, {preset} (C_e,d = C_e,s/2)"),
+            &budgets.iter().map(|(n, b)| format!("{n} ({b:.3}b)")).collect::<Vec<_>>(),
+            &rows,
+        );
+    }
+    save_results("table2", Json::Obj(results.into_iter().collect()));
+    Ok(())
+}
+
+/// Fig. 4 — accuracy of full SplitFC vs R at fixed C_e,d = 0.4.
+pub fn fig4(args: &Args) -> Result<()> {
+    let preset = presets_from(args, "mnist")[0].clone();
+    let rs: Vec<f64> = args
+        .get_or("rs", "2,4,8,16,32")
+        .split(',')
+        .map(|s| s.trim().parse().unwrap())
+        .collect();
+    let bpe = args.get_f64("ce", 0.4);
+    let mut rows = Vec::new();
+    let mut cols = Vec::new();
+    let mut results = Vec::new();
+    for &r in &rs {
+        let (acc, _, _) = run_one(cfg_for(&preset, "splitfc", r, bpe, 32.0, args))?;
+        cols.push(format!("{:.2}", acc * 100.0));
+        results.push((format!("R{r}"), Json::num(acc as f64)));
+    }
+    rows.push(("SplitFC".to_string(), cols));
+    print_table(
+        &format!("Fig. 4 — accuracy vs R at C_e,d={bpe}, {preset}"),
+        &rs.iter().map(|r| format!("R={r}")).collect::<Vec<_>>(),
+        &rows,
+    );
+    save_results("fig4", Json::Obj(results.into_iter().collect()));
+    Ok(())
+}
+
+/// Fig. 5 — optimal level allocation vs fixed Q at C_e,d = 0.2, R = 8.
+pub fn fig5(args: &Args) -> Result<()> {
+    let preset = presets_from(args, "mnist")[0].clone();
+    let bpe = args.get_f64("ce", 0.2);
+    let r = args.get_f64("r", 8.0);
+    let mut results = Vec::new();
+    let (opt_acc, _, _) = run_one(cfg_for(&preset, "splitfc", r, bpe, 32.0, args))?;
+    results.push(("optimal".to_string(), Json::num(opt_acc as f64)));
+    let mut rows = vec![("optimal levels".to_string(), vec![format!("{:.2}", opt_acc * 100.0)])];
+    for q in [2u64, 4, 8, 16, 32] {
+        let mut cfg = cfg_for(&preset, "splitfc", r, bpe, 32.0, args);
+        cfg.scheme = crate::compression::Scheme::SplitFc {
+            drop: Some(crate::compression::DropKind::Adaptive),
+            r,
+            quant: crate::compression::FwqMode::Fixed { q },
+        };
+        let (acc, _, _) = run_one(cfg)?;
+        rows.push((format!("fixed Q={q}"), vec![format!("{:.2}", acc * 100.0)]));
+        results.push((format!("fixedQ{q}"), Json::num(acc as f64)));
+    }
+    print_table(
+        &format!("Fig. 5 — level optimization ablation, {preset} (C_e,d={bpe}, R={r})"),
+        &["accuracy %".into()],
+        &rows,
+    );
+    save_results("fig5", Json::Obj(results.into_iter().collect()));
+    Ok(())
+}
+
+/// Table III — ablation: dropout / quantizers on-off (4 cases).
+pub fn table3(args: &Args) -> Result<()> {
+    let r = args.get_f64("r", 16.0);
+    let mut results = Vec::new();
+    for preset in presets_from(args, "mnist") {
+        let cases: Vec<(&str, &str, f64, f64)> = vec![
+            // (label, scheme, R, bits/entry for both links)
+            ("case1: AD only (65x)", "splitfc-ad", 65.0, 32.0 / 65.0),
+            ("case2: FWQ only (260x)", "splitfc-quant-only", 1.0, 32.0 / 260.0),
+            ("case3: AD + two-stage (260x)", "splitfc-no-mean", r, 32.0 / 260.0),
+            ("case4: full SplitFC (260x)", "splitfc", r, 32.0 / 260.0),
+        ];
+        let mut rows = Vec::new();
+        for (label, scheme, rr, bpe) in cases {
+            let (acc, _, _) = run_one(cfg_for(&preset, scheme, rr, bpe, bpe, args))?;
+            rows.push((label.to_string(), vec![format!("{:.2}", acc * 100.0)]));
+            results.push((format!("{preset}/{label}"), Json::num(acc as f64)));
+        }
+        print_table(
+            &format!("Table III — ablation, {preset}"),
+            &["accuracy %".into()],
+            &rows,
+        );
+    }
+    save_results("table3", Json::Obj(results.into_iter().collect()));
+    Ok(())
+}
+
+/// Dispatch by experiment id.
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "fig1" => fig1(args),
+        "fig3" => fig3(args),
+        "fig4" => fig4(args),
+        "fig5" => fig5(args),
+        "table1" => table1(args),
+        "table2" => table2(args),
+        "table3" => table3(args),
+        "all" => {
+            for id in ["fig1", "fig3", "fig4", "fig5", "table1", "table2", "table3"] {
+                run(id, args)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment {other:?} (fig1|fig3|fig4|fig5|table1|table2|table3|all)"),
+    }
+}

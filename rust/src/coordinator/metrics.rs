@@ -1,0 +1,165 @@
+//! Per-step metrics, summaries and JSONL emission.
+
+use std::io::Write;
+
+use crate::util::Json;
+
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub round: usize,
+    pub device: usize,
+    pub loss: f32,
+    pub train_acc: f32,
+    /// measured payload bits
+    pub up_bits: u64,
+    pub down_bits: u64,
+    /// paper-formula bits (for cross-checking the accounting)
+    pub up_nominal: f64,
+    pub down_nominal: f64,
+    /// host wall time of the whole step / of PJRT execution within it
+    pub step_s: f64,
+    pub exec_s: f64,
+}
+
+impl StepRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("t", Json::num(self.round as f64)),
+            ("k", Json::num(self.device as f64)),
+            ("loss", Json::num(self.loss as f64)),
+            ("train_acc", Json::num(self.train_acc as f64)),
+            ("up_bits", Json::num(self.up_bits as f64)),
+            ("down_bits", Json::num(self.down_bits as f64)),
+            ("up_nominal", Json::num(self.up_nominal)),
+            ("down_nominal", Json::num(self.down_nominal)),
+            ("step_s", Json::num(self.step_s)),
+            ("exec_s", Json::num(self.exec_s)),
+        ])
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TrainSummary {
+    pub final_acc: f32,
+    pub eval_history: Vec<(usize, f32)>,
+    pub mean_loss_last_round: f32,
+    pub total_up_bits: u64,
+    pub total_down_bits: u64,
+    pub steps: usize,
+    pub wall_s: f64,
+    pub exec_s: f64,
+    /// modeled transfer time over the simulated link
+    pub link_s: f64,
+}
+
+impl TrainSummary {
+    pub fn uplink_bits_per_entry(&self, batch: usize, dbar: usize) -> f64 {
+        self.total_up_bits as f64 / (self.steps as f64 * (batch * dbar) as f64)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("final_acc", Json::num(self.final_acc as f64)),
+            ("mean_loss_last_round", Json::num(self.mean_loss_last_round as f64)),
+            ("total_up_bits", Json::num(self.total_up_bits as f64)),
+            ("total_down_bits", Json::num(self.total_down_bits as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("exec_s", Json::num(self.exec_s)),
+            ("link_s", Json::num(self.link_s)),
+            (
+                "eval_history",
+                Json::Arr(
+                    self.eval_history
+                        .iter()
+                        .map(|&(t, a)| {
+                            Json::Arr(vec![Json::num(t as f64), Json::num(a as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Line-per-record JSONL writer (metrics stream).
+pub struct MetricsWriter {
+    out: Option<std::io::BufWriter<std::fs::File>>,
+}
+
+impl MetricsWriter {
+    pub fn create(path: &str) -> MetricsWriter {
+        if path.is_empty() {
+            return MetricsWriter { out: None };
+        }
+        let f = std::fs::File::create(path)
+            .unwrap_or_else(|e| panic!("cannot create metrics file {path:?}: {e}"));
+        MetricsWriter { out: Some(std::io::BufWriter::new(f)) }
+    }
+
+    pub fn write(&mut self, j: &Json) {
+        if let Some(out) = &mut self.out {
+            writeln!(out, "{}", j.to_string_compact()).expect("metrics write");
+        }
+    }
+
+    pub fn flush(&mut self) {
+        if let Some(out) = &mut self.out {
+            out.flush().ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_json_fields() {
+        let r = StepRecord {
+            round: 3,
+            device: 1,
+            loss: 0.5,
+            train_acc: 0.75,
+            up_bits: 1000,
+            down_bits: 2000,
+            up_nominal: 990.0,
+            down_nominal: 1990.0,
+            step_s: 0.1,
+            exec_s: 0.08,
+        };
+        let j = r.to_json();
+        assert_eq!(j.req("t").as_usize(), Some(3));
+        assert_eq!(j.req("up_bits").as_f64(), Some(1000.0));
+    }
+
+    #[test]
+    fn summary_bits_per_entry() {
+        let s = TrainSummary {
+            total_up_bits: 64_000,
+            steps: 10,
+            ..Default::default()
+        };
+        // 64000 bits / (10 steps * 100*20 entries) = 3.2 bits/entry
+        assert!((s.uplink_bits_per_entry(100, 20) - 3.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jsonl_writer_to_file() {
+        let path = std::env::temp_dir().join("splitfc_metrics_test.jsonl");
+        let mut w = MetricsWriter::create(path.to_str().unwrap());
+        w.write(&Json::obj(vec![("a", Json::num(1.0))]));
+        w.write(&Json::obj(vec![("a", Json::num(2.0))]));
+        w.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn empty_path_is_noop() {
+        let mut w = MetricsWriter::create("");
+        w.write(&Json::Null);
+        w.flush();
+    }
+}

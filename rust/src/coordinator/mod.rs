@@ -1,0 +1,14 @@
+//! L3 coordinator — the paper's Algorithm 1 plus the experiment harness.
+//!
+//! * `trainer` — round-robin split-learning protocol over PJRT artifacts
+//! * `metrics` — per-step records, summaries, JSONL
+//! * `experiments` — one entry per paper table/figure
+//! * `cli` — the `splitfc` binary front-end
+
+pub mod cli;
+pub mod experiments;
+pub mod metrics;
+pub mod trainer;
+
+pub use metrics::{StepRecord, TrainSummary};
+pub use trainer::Trainer;

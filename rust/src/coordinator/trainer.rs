@@ -1,0 +1,324 @@
+//! The paper's Algorithm 1: round-robin split-learning training with
+//! adaptive feature-wise compression on both links.
+//!
+//! One step (t, k):
+//!   1. device k draws a minibatch, runs `device_fwd` (PJRT) → F        (eq. 3)
+//!   2. `feature_stats` (the L1 Pallas kernel, via PJRT) → σ_norm       (eq. 10)
+//!   3. FWDP + FWQ encode → uplink frame → PS decodes F̂            (Alg. 2/3)
+//!   4. PS runs `server_fwd_bwd` → loss, ∇w_s, G = ∇_F̂ h          (eqs. 4, 5)
+//!   5. PS ADAM-steps w_s; PS drops non-kept gradient columns, FWQ-encodes,
+//!      downlink frame → device decodes Ĝ                             (eq. 8)
+//!   6. device applies the chain-rule scale δ_j/(1-p_j) to Ĝ, runs
+//!      `device_bwd` → ∇w_d; the (PS-held) device ADAM steps w_d (Sec. III-A)
+//!
+//! Python never runs here: every model computation is a pre-compiled HLO
+//! artifact executed through the PJRT CPU client.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::compression::{
+    encode_downlink, encode_uplink, CodecParams, DropKind, GradMask, Scheme,
+};
+use crate::config::{PartitionKind, TrainConfig};
+use crate::coordinator::metrics::{MetricsWriter, StepRecord, TrainSummary};
+use crate::data::{
+    dirichlet_partition, label_shards, writer_groups, Dataset, MiniBatchLoader, SynthSpec,
+};
+use crate::optim::{Adam, Optimizer};
+use crate::runtime::{literal_to_vec_f32, matrix_to_literal, vec_to_literal, Runtime};
+use crate::tensor::Matrix;
+use crate::transport::{Direction, Link};
+use crate::util::Rng;
+use crate::{log_debug, log_info};
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub rt: Runtime,
+    wd: crate::model::ParamSet,
+    ws: crate::model::ParamSet,
+    opt_d: Adam,
+    opt_s: Adam,
+    train: Dataset,
+    test: Dataset,
+    loaders: Vec<MiniBatchLoader>,
+    pub link: Link,
+    rng: Rng,
+    metrics: MetricsWriter,
+    exec_s: f64,
+}
+
+fn synth_spec_for(preset: &str) -> SynthSpec {
+    match preset {
+        "mnist" => SynthSpec::mnist_like(),
+        "cifar" => SynthSpec::cifar_like(),
+        "celeba" => SynthSpec::celeba_like(),
+        _ => SynthSpec::tiny(),
+    }
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Result<Trainer> {
+        let rt = Runtime::load(Path::new(&cfg.artifacts_dir), &cfg.preset)?;
+        let (wd, ws) = rt.load_params()?;
+        anyhow::ensure!(wd.n_params() == rt.preset.nd_params);
+        anyhow::ensure!(ws.n_params() == rt.preset.ns_params);
+
+        let mut rng = Rng::new(cfg.seed.wrapping_mul(0x9E3779B9).wrapping_add(7));
+        let spec = synth_spec_for(&cfg.preset);
+        // consistency between model input shape and dataset spec
+        anyhow::ensure!(
+            spec.sample_dim() == rt.preset.sample_dim(),
+            "dataset spec {:?} vs model input {:?}",
+            (spec.channels, spec.height, spec.width),
+            rt.preset.in_shape
+        );
+        let train = Dataset::generate(&spec, cfg.n_train, cfg.seed);
+        let test = Dataset::generate(&spec, cfg.n_test, cfg.seed.wrapping_add(0xE7A1));
+
+        let parts = match cfg.partition {
+            PartitionKind::LabelShards => label_shards(&train, cfg.devices, 2, &mut rng),
+            PartitionKind::Dirichlet => dirichlet_partition(&train, cfg.devices, 0.3, &mut rng),
+            PartitionKind::Writers => writer_groups(&train, cfg.devices, &mut rng),
+        };
+        let loaders = parts
+            .into_iter()
+            .enumerate()
+            .map(|(k, mut p)| {
+                if p.is_empty() {
+                    // degenerate partition (tiny runs): give it one sample
+                    p.push(k % train.n);
+                }
+                MiniBatchLoader::new(p, rt.preset.batch, rng.fork(k as u64))
+            })
+            .collect();
+
+        let opt_d = Adam::new(cfg.lr, wd.n_params());
+        let opt_s = Adam::new(cfg.lr, ws.n_params());
+        let link = Link::new(cfg.link_capacity_bps, cfg.link_latency_s);
+        let metrics = MetricsWriter::create(&cfg.metrics_path);
+        Ok(Trainer {
+            rng: rng.fork(0xFFFF),
+            cfg,
+            rt,
+            wd,
+            ws,
+            opt_d,
+            opt_s,
+            train,
+            test,
+            loaders,
+            link,
+            metrics,
+            exec_s: 0.0,
+        })
+    }
+
+    fn exec(&mut self, entry: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let out = self.rt.exec(entry, inputs);
+        self.exec_s += t0.elapsed().as_secs_f64();
+        out
+    }
+
+    fn param_literals(set: &crate::model::ParamSet) -> Result<Vec<xla::Literal>> {
+        (0..set.n_tensors())
+            .map(|i| vec_to_literal(set.tensor(i), &set.specs[i].shape))
+            .collect()
+    }
+
+    /// Does the current scheme need σ statistics (the feature_stats artifact)?
+    fn needs_sigma(scheme: &Scheme) -> bool {
+        matches!(
+            scheme,
+            Scheme::SplitFc { drop: Some(DropKind::Adaptive), .. }
+                | Scheme::SplitFc { drop: Some(DropKind::Deterministic), .. }
+        )
+    }
+
+    /// Run one (t, k) protocol step.
+    pub fn step(&mut self, round: usize, device: usize) -> Result<StepRecord> {
+        let t_step = Instant::now();
+        let exec_before = self.exec_s;
+        let p = self.rt.preset.clone();
+        let scheme = self.cfg.scheme.clone();
+
+        // 1. device forward
+        let (x, y, _) = self.loaders[device].next_batch(&self.train, p.classes);
+        let x_lit = vec_to_literal(&x, &[p.batch, p.in_shape[0], p.in_shape[1], p.in_shape[2]])?;
+        let y_lit = vec_to_literal(&y, &[p.batch, p.classes])?;
+        let mut inputs = Self::param_literals(&self.wd)?;
+        let f_lit_in = x_lit;
+        inputs.push(f_lit_in);
+        let outs = self.exec("device_fwd", &inputs)?;
+        let x_lit = inputs.pop().unwrap(); // reuse for device_bwd
+        let f_vec = literal_to_vec_f32(&outs[0])?;
+        let f = Matrix::from_vec(p.batch, p.dbar, f_vec);
+
+        // 2. feature statistics (L1 Pallas kernel artifact)
+        let sigma: Vec<f32> = if Self::needs_sigma(&scheme) {
+            let st = self.exec("feature_stats", &[matrix_to_literal(&f)?])?;
+            literal_to_vec_f32(&st[3])?
+        } else {
+            vec![0.0; p.dbar]
+        };
+
+        // 3. uplink compression + transmit
+        let up_params = CodecParams::new(p.batch, p.dbar, self.cfg.up_bits_per_entry);
+        let enc = encode_uplink(&scheme, &f, &sigma, &up_params, &mut self.rng);
+        self.link.transmit(Direction::Uplink, &enc.frame);
+
+        // 4. server forward/backward
+        let mut s_inputs = Self::param_literals(&self.ws)?;
+        s_inputs.push(matrix_to_literal(&enc.f_hat)?);
+        s_inputs.push(y_lit);
+        let s_outs = self.exec("server_fwd_bwd", &s_inputs)?;
+        let loss = literal_to_vec_f32(&s_outs[0])?[0];
+        let correct = literal_to_vec_f32(&s_outs[1])?[0];
+        let ns = self.ws.n_tensors();
+        let mut grad_ws = Vec::with_capacity(self.ws.n_params());
+        for i in 0..ns {
+            grad_ws.extend(literal_to_vec_f32(&s_outs[2 + i])?);
+        }
+        let g_vec = literal_to_vec_f32(&s_outs[2 + ns])?;
+        let g = Matrix::from_vec(p.batch, p.dbar, g_vec);
+
+        // 5. server update + downlink compression
+        self.opt_s.step(&mut self.ws.data, &grad_ws);
+        let down_params = CodecParams::new(p.batch, p.dbar, self.cfg.down_bits_per_entry);
+        let dn = encode_downlink(&scheme, &g, &enc.mask, &down_params);
+        self.link.transmit(Direction::Downlink, &dn.frame);
+
+        // 6. device backward with the chain-rule scale (eq. 7 backward path)
+        let mut g_hat = dn.g_hat;
+        if let GradMask::Columns { kept, scale } = &enc.mask {
+            for (j, &c) in kept.iter().enumerate() {
+                if scale[j] != 1.0 {
+                    g_hat.scale_col(c, scale[j]);
+                }
+            }
+        }
+        let mut d_inputs = Self::param_literals(&self.wd)?;
+        d_inputs.push(x_lit);
+        d_inputs.push(matrix_to_literal(&g_hat)?);
+        let d_outs = self.exec("device_bwd", &d_inputs)?;
+        let mut grad_wd = Vec::with_capacity(self.wd.n_params());
+        for o in &d_outs {
+            grad_wd.extend(literal_to_vec_f32(o)?);
+        }
+        self.opt_d.step(&mut self.wd.data, &grad_wd);
+
+        let rec = StepRecord {
+            round,
+            device,
+            loss,
+            train_acc: correct / p.batch as f32,
+            up_bits: enc.frame.payload_bits,
+            down_bits: dn.frame.payload_bits,
+            up_nominal: enc.nominal_bits,
+            down_nominal: dn.nominal_bits,
+            step_s: t_step.elapsed().as_secs_f64(),
+            exec_s: self.exec_s - exec_before,
+        };
+        self.metrics.write(&rec.to_json());
+        Ok(rec)
+    }
+
+    /// Test-set accuracy via the `eval_fwd` artifact.
+    pub fn evaluate(&mut self) -> Result<f32> {
+        let p = self.rt.preset.clone();
+        let dim = p.sample_dim();
+        let n_batches = (self.test.n / p.batch).max(1);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for bi in 0..n_batches {
+            let mut x = Vec::with_capacity(p.batch * dim);
+            let mut labels = Vec::with_capacity(p.batch);
+            for j in 0..p.batch {
+                let i = (bi * p.batch + j) % self.test.n;
+                x.extend_from_slice(self.test.sample(i));
+                labels.push(self.test.y[i]);
+            }
+            let mut inputs = Self::param_literals(&self.wd)?;
+            inputs.extend(Self::param_literals(&self.ws)?);
+            inputs.push(vec_to_literal(
+                &x,
+                &[p.batch, p.in_shape[0], p.in_shape[1], p.in_shape[2]],
+            )?);
+            let outs = self.exec("eval_fwd", &inputs)?;
+            let logits = literal_to_vec_f32(&outs[0])?;
+            for (j, &lab) in labels.iter().enumerate() {
+                let row = &logits[j * p.classes..(j + 1) * p.classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                correct += (pred == lab as usize) as usize;
+                total += 1;
+            }
+        }
+        Ok(correct as f32 / total as f32)
+    }
+
+    /// Full training run: T rounds of round-robin over K devices (Alg. 1).
+    pub fn run(&mut self) -> Result<TrainSummary> {
+        let t0 = Instant::now();
+        let mut summary = TrainSummary::default();
+        let mut last_round_losses = Vec::new();
+        for t in 1..=self.cfg.rounds {
+            last_round_losses.clear();
+            for k in 0..self.cfg.devices {
+                let rec = self
+                    .step(t, k)
+                    .with_context(|| format!("step t={t} k={k}"))?;
+                summary.total_up_bits += rec.up_bits;
+                summary.total_down_bits += rec.down_bits;
+                summary.steps += 1;
+                last_round_losses.push(rec.loss);
+                log_debug!(
+                    "t={t} k={k} loss={:.4} acc={:.3} up={}b down={}b",
+                    rec.loss,
+                    rec.train_acc,
+                    rec.up_bits,
+                    rec.down_bits
+                );
+            }
+            if self.cfg.eval_every > 0 && t % self.cfg.eval_every == 0 {
+                let acc = self.evaluate()?;
+                summary.eval_history.push((t, acc));
+                log_info!("round {t}: eval acc {:.4}", acc);
+            }
+        }
+        summary.final_acc = self.evaluate()?;
+        summary.eval_history.push((self.cfg.rounds, summary.final_acc));
+        summary.mean_loss_last_round = if last_round_losses.is_empty() {
+            f32::NAN
+        } else {
+            last_round_losses.iter().sum::<f32>() / last_round_losses.len() as f32
+        };
+        summary.wall_s = t0.elapsed().as_secs_f64();
+        summary.exec_s = self.exec_s;
+        summary.link_s = self.link.report().elapsed_s;
+        self.metrics.write(&summary.to_json());
+        self.metrics.flush();
+        Ok(summary)
+    }
+
+    /// The features + σ stats of one fresh batch (Fig.-1 dispersion bench).
+    pub fn probe_features(&mut self, device: usize) -> Result<(Matrix, Vec<f32>)> {
+        let p = self.rt.preset.clone();
+        let (x, _, _) = self.loaders[device].next_batch(&self.train, p.classes);
+        let x_lit = vec_to_literal(&x, &[p.batch, p.in_shape[0], p.in_shape[1], p.in_shape[2]])?;
+        let mut inputs = Self::param_literals(&self.wd)?;
+        inputs.push(x_lit);
+        let outs = self.exec("device_fwd", &inputs)?;
+        let f = Matrix::from_vec(p.batch, p.dbar, literal_to_vec_f32(&outs[0])?);
+        let st = self.exec("feature_stats", &[matrix_to_literal(&f)?])?;
+        let sigma = literal_to_vec_f32(&st[3])?;
+        Ok((f, sigma))
+    }
+}

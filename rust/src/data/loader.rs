@@ -1,0 +1,110 @@
+//! Per-device minibatch loader: shuffled cycling over the device's partition,
+//! producing NCHW f32 batches and one-hot label matrices ready for PJRT.
+//! The loader owns only indices + RNG; the dataset is passed per call so one
+//! dataset can back all K device loaders.
+
+use super::synth::Dataset;
+use crate::util::Rng;
+
+pub struct MiniBatchLoader {
+    indices: Vec<usize>,
+    cursor: usize,
+    batch: usize,
+    rng: Rng,
+}
+
+impl MiniBatchLoader {
+    pub fn new(partition: Vec<usize>, batch: usize, rng: Rng) -> Self {
+        assert!(!partition.is_empty(), "empty device partition");
+        let mut s = Self { indices: partition, cursor: 0, batch, rng };
+        s.reshuffle();
+        s
+    }
+
+    fn reshuffle(&mut self) {
+        let mut idx = std::mem::take(&mut self.indices);
+        self.rng.shuffle(&mut idx);
+        self.indices = idx;
+        self.cursor = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Next minibatch: (x: batch * C*H*W, y_onehot: batch * classes, labels).
+    /// Wraps around (with reshuffle) when the partition is exhausted.
+    pub fn next_batch(&mut self, ds: &Dataset, classes: usize) -> (Vec<f32>, Vec<f32>, Vec<u32>) {
+        let dim = ds.spec.sample_dim();
+        let mut x = Vec::with_capacity(self.batch * dim);
+        let mut y = vec![0.0f32; self.batch * classes];
+        let mut labels = Vec::with_capacity(self.batch);
+        for b in 0..self.batch {
+            if self.cursor >= self.indices.len() {
+                self.reshuffle();
+            }
+            let i = self.indices[self.cursor];
+            self.cursor += 1;
+            x.extend_from_slice(ds.sample(i));
+            let c = ds.y[i];
+            y[b * classes + c as usize] = 1.0;
+            labels.push(c);
+        }
+        (x, y, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn batch_shapes_and_onehot() {
+        let ds = Dataset::generate(&SynthSpec::tiny(), 64, 0);
+        let mut loader = MiniBatchLoader::new((0..64).collect(), 8, Rng::new(0));
+        let (x, y, labels) = loader.next_batch(&ds, 4);
+        assert_eq!(x.len(), 8 * ds.spec.sample_dim());
+        assert_eq!(y.len(), 8 * 4);
+        assert_eq!(labels.len(), 8);
+        for (b, &c) in labels.iter().enumerate() {
+            let row = &y[b * 4..(b + 1) * 4];
+            assert_eq!(row[c as usize], 1.0);
+            assert_eq!(row.iter().sum::<f32>(), 1.0);
+        }
+    }
+
+    #[test]
+    fn cycles_through_all_samples() {
+        let ds = Dataset::generate(&SynthSpec::tiny(), 20, 0);
+        let mut loader = MiniBatchLoader::new((0..20).collect(), 5, Rng::new(1));
+        let mut seen = vec![0usize; 4];
+        for _ in 0..4 {
+            let (_, _, labels) = loader.next_batch(&ds, 4);
+            for &c in &labels {
+                seen[c as usize] += 1;
+            }
+        }
+        // one full epoch: balanced tiny dataset has 5 samples/class
+        assert_eq!(seen.iter().sum::<usize>(), 20);
+        assert!(seen.iter().all(|&c| c == 5), "{seen:?}");
+    }
+
+    #[test]
+    fn partition_smaller_than_batch_repeats() {
+        let ds = Dataset::generate(&SynthSpec::tiny(), 12, 0);
+        let mut loader = MiniBatchLoader::new(vec![0, 1, 2], 8, Rng::new(2));
+        let (x, _, _) = loader.next_batch(&ds, 4);
+        assert_eq!(x.len(), 8 * ds.spec.sample_dim());
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_partition_panics() {
+        MiniBatchLoader::new(vec![], 2, Rng::new(0));
+    }
+}

@@ -1,0 +1,12 @@
+//! Dataset substrate: procedural class-structured image datasets standing in
+//! for MNIST / CIFAR-100 / CelebA (no dataset downloads offline — see
+//! DESIGN.md §3), plus the paper's three non-IID partitioners and a
+//! per-device minibatch loader.
+
+pub mod loader;
+pub mod partition;
+pub mod synth;
+
+pub use loader::MiniBatchLoader;
+pub use partition::{dirichlet_partition, label_shards, writer_groups};
+pub use synth::{Dataset, SynthSpec};

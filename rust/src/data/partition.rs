@@ -1,0 +1,188 @@
+//! Non-IID partitioners from Sec. VII:
+//!   * MNIST: label-sharding — samples of each label split into shards, each
+//!     device gets `shards_per_device` shards of different labels [52];
+//!   * CIFAR-100: Dirichlet(beta) label distribution per device [52];
+//!   * CelebA: grouping by writer identity [36].
+
+use super::synth::Dataset;
+use crate::util::Rng;
+
+/// MNIST-style: 2 shards of distinct labels per device.
+pub fn label_shards(
+    ds: &Dataset,
+    devices: usize,
+    shards_per_device: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    let total_shards = devices * shards_per_device;
+    // group sample indices by label
+    let mut by_label: Vec<Vec<usize>> = vec![Vec::new(); ds.spec.classes];
+    for (i, &c) in ds.y.iter().enumerate() {
+        by_label[c as usize].push(i);
+    }
+    // build shards: split each label's pool into equal chunks
+    let shards_per_label = (total_shards + ds.spec.classes - 1) / ds.spec.classes;
+    let mut shards: Vec<Vec<usize>> = Vec::with_capacity(total_shards);
+    for pool in &by_label {
+        let chunk = (pool.len() / shards_per_label).max(1);
+        for s in 0..shards_per_label {
+            let lo = s * chunk;
+            let hi = if s == shards_per_label - 1 { pool.len() } else { ((s + 1) * chunk).min(pool.len()) };
+            if lo < hi {
+                shards.push(pool[lo..hi].to_vec());
+            }
+        }
+    }
+    rng.shuffle(&mut shards);
+    let mut out = vec![Vec::new(); devices];
+    for (si, shard) in shards.into_iter().enumerate() {
+        out[si % devices].extend(shard);
+    }
+    out
+}
+
+/// CIFAR-style: per-class Dirichlet(beta) split across devices.
+pub fn dirichlet_partition(
+    ds: &Dataset,
+    devices: usize,
+    beta: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new(); devices];
+    let mut by_label: Vec<Vec<usize>> = vec![Vec::new(); ds.spec.classes];
+    for (i, &c) in ds.y.iter().enumerate() {
+        by_label[c as usize].push(i);
+    }
+    for pool in &mut by_label {
+        rng.shuffle(pool);
+        let p = rng.dirichlet(beta, devices);
+        // cumulative split
+        let mut start = 0usize;
+        let mut acc = 0.0f64;
+        for (d, &pd) in p.iter().enumerate() {
+            acc += pd;
+            let end = if d == devices - 1 { pool.len() } else { (acc * pool.len() as f64).round() as usize };
+            let end = end.clamp(start, pool.len());
+            out[d].extend(&pool[start..end]);
+            start = end;
+        }
+    }
+    out
+}
+
+/// CelebA-style: group `writers_per_device` writers per device [36].
+pub fn writer_groups(ds: &Dataset, devices: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let writers = ds.spec.writers;
+    let mut ids: Vec<usize> = (0..writers).collect();
+    rng.shuffle(&mut ids);
+    // writer -> device
+    let mut owner = vec![0usize; writers];
+    for (rank, &w) in ids.iter().enumerate() {
+        owner[w] = rank % devices;
+    }
+    let mut out = vec![Vec::new(); devices];
+    for (i, &w) in ds.writer.iter().enumerate() {
+        out[owner[w as usize]].push(i);
+    }
+    out
+}
+
+/// Label-distribution skew measure: mean over devices of the max class share.
+/// 1/classes for IID, → 1.0 for single-label devices. Used by tests.
+pub fn skewness(ds: &Dataset, parts: &[Vec<usize>]) -> f64 {
+    let mut total = 0.0;
+    let mut n = 0;
+    for p in parts {
+        if p.is_empty() {
+            continue;
+        }
+        let mut counts = vec![0usize; ds.spec.classes];
+        for &i in p {
+            counts[ds.y[i] as usize] += 1;
+        }
+        let mx = *counts.iter().max().unwrap() as f64;
+        total += mx / p.len() as f64;
+        n += 1;
+    }
+    total / n.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    fn ds() -> Dataset {
+        Dataset::generate(&SynthSpec::tiny(), 800, 0)
+    }
+
+    #[test]
+    fn label_shards_cover_disjoint() {
+        let d = ds();
+        let mut rng = Rng::new(0);
+        let parts = label_shards(&d, 8, 2, &mut rng);
+        assert_eq!(parts.len(), 8);
+        let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+        all.sort_unstable();
+        let n = all.len();
+        all.dedup();
+        assert_eq!(all.len(), n, "partitions must be disjoint");
+        assert!(n >= d.n * 9 / 10, "most samples assigned (got {n}/{})", d.n);
+    }
+
+    #[test]
+    fn label_shards_are_skewed() {
+        let d = ds();
+        let mut rng = Rng::new(1);
+        let parts = label_shards(&d, 8, 2, &mut rng);
+        // 4 classes, 2 shards/device -> each device sees at most 2 labels
+        assert!(skewness(&d, &parts) >= 0.45, "skew={}", skewness(&d, &parts));
+    }
+
+    #[test]
+    fn dirichlet_covers_all_and_skews_with_low_beta() {
+        let d = ds();
+        let mut rng = Rng::new(2);
+        let lo = dirichlet_partition(&d, 10, 0.3, &mut rng);
+        let hi = dirichlet_partition(&d, 10, 1000.0, &mut rng);
+        let n_lo: usize = lo.iter().map(|p| p.len()).sum();
+        assert_eq!(n_lo, d.n);
+        assert!(
+            skewness(&d, &lo) > skewness(&d, &hi),
+            "beta=0.3 must be more skewed than beta=1000"
+        );
+    }
+
+    #[test]
+    fn writer_groups_keep_writers_together() {
+        let d = ds();
+        let mut rng = Rng::new(3);
+        let parts = writer_groups(&d, 4, &mut rng);
+        let n: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(n, d.n);
+        // every writer's samples land on exactly one device
+        for w in 0..d.spec.writers {
+            let mut devices_seen = Vec::new();
+            for (di, p) in parts.iter().enumerate() {
+                if p.iter().any(|&i| d.writer[i] as usize == w) {
+                    devices_seen.push(di);
+                }
+            }
+            assert!(devices_seen.len() <= 1, "writer {w} split across {devices_seen:?}");
+        }
+    }
+
+    #[test]
+    fn skewness_bounds() {
+        let d = ds();
+        let mut rng = Rng::new(4);
+        for parts in [
+            label_shards(&d, 8, 2, &mut rng),
+            dirichlet_partition(&d, 8, 0.3, &mut rng),
+            writer_groups(&d, 8, &mut rng),
+        ] {
+            let s = skewness(&d, &parts);
+            assert!((0.2..=1.0).contains(&s), "s={s}");
+        }
+    }
+}

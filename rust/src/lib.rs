@@ -1,0 +1,28 @@
+//! # SplitFC — communication-efficient split learning (paper reproduction)
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)**: the round-robin split-learning coordinator, the
+//!   adaptive feature-wise dropout (FWDP) + quantization (FWQ) compression
+//!   pipeline over real bit-packed frames, baselines, simulated transport,
+//!   metrics, and the experiment harness for every paper table/figure.
+//! * **L2/L1 (build-time Python, `python/compile/`)**: the split CNN model
+//!   in JAX calling Pallas kernels, AOT-lowered to HLO text artifacts that
+//!   `runtime` loads through PJRT. Python never runs on the training path.
+
+pub mod bench;
+pub mod bitio;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod testkit;
+pub mod transport;
+pub mod util;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

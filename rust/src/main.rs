@@ -1,0 +1,5 @@
+//! `splitfc` CLI — leader entrypoint. See `splitfc help`.
+
+fn main() {
+    splitfc::coordinator::cli::main();
+}

@@ -1,0 +1,113 @@
+//! Preset metadata mirrored from the Python manifest (`artifacts/manifest.json`).
+
+use std::collections::BTreeMap;
+
+use crate::model::params::ParamSpec;
+use crate::util::Json;
+
+#[derive(Debug, Clone)]
+pub struct EntryInfo {
+    pub file: String,
+    pub num_inputs: usize,
+    pub num_outputs: usize,
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PresetInfo {
+    pub name: String,
+    pub batch: usize,
+    pub dbar: usize,
+    pub num_channels: usize,
+    pub chan_size: usize,
+    pub classes: usize,
+    pub in_shape: Vec<usize>,
+    pub nd_params: usize,
+    pub ns_params: usize,
+    pub device_params: Vec<ParamSpec>,
+    pub server_params: Vec<ParamSpec>,
+    pub params_file: String,
+    pub entries: BTreeMap<String, EntryInfo>,
+}
+
+impl PresetInfo {
+    pub fn from_json(name: &str, j: &Json) -> PresetInfo {
+        let specs = |key: &str| -> Vec<ParamSpec> {
+            j.req(key)
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(ParamSpec::from_json)
+                .collect()
+        };
+        let mut entries = BTreeMap::new();
+        for (k, v) in j.req("entries").as_obj().unwrap() {
+            entries.insert(
+                k.clone(),
+                EntryInfo {
+                    file: v.req("file").as_str().unwrap().to_string(),
+                    num_inputs: v.req("num_inputs").as_usize().unwrap(),
+                    num_outputs: v.req("num_outputs").as_usize().unwrap(),
+                    input_shapes: v
+                        .req("input_shapes")
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|s| s.usize_arr().unwrap())
+                        .collect(),
+                },
+            );
+        }
+        PresetInfo {
+            name: name.to_string(),
+            batch: j.req("batch").as_usize().unwrap(),
+            dbar: j.req("dbar").as_usize().unwrap(),
+            num_channels: j.req("num_channels").as_usize().unwrap(),
+            chan_size: j.req("chan_size").as_usize().unwrap(),
+            classes: j.req("classes").as_usize().unwrap(),
+            in_shape: j.req("in_shape").usize_arr().unwrap(),
+            nd_params: j.req("nd_params").as_usize().unwrap(),
+            ns_params: j.req("ns_params").as_usize().unwrap(),
+            device_params: specs("device_params"),
+            server_params: specs("server_params"),
+            params_file: j.req("params_file").as_str().unwrap().to_string(),
+            entries,
+        }
+    }
+
+    pub fn sample_dim(&self) -> usize {
+        self.in_shape.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "batch": 8, "dbar": 32, "num_channels": 8, "chan_size": 4,
+        "classes": 4, "in_shape": [1, 8, 8], "hidden": 16,
+        "nd_params": 336, "ns_params": 596,
+        "device_params": [{"name": "conv1_w", "shape": [9, 4]}],
+        "server_params": [{"name": "fc1_w", "shape": [32, 16]}],
+        "params_file": "tiny/params.bin",
+        "entries": {
+            "device_fwd": {"file": "tiny/device_fwd.hlo.txt",
+                "num_inputs": 5, "num_outputs": 1,
+                "input_shapes": [[9, 4], [4], [36, 8], [8], [8, 1, 8, 8]]}
+        }
+    }"#;
+
+    #[test]
+    fn parses_preset() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let p = PresetInfo::from_json("tiny", &j);
+        assert_eq!(p.batch, 8);
+        assert_eq!(p.dbar, 32);
+        assert_eq!(p.sample_dim(), 64);
+        assert_eq!(p.device_params[0].numel(), 36);
+        let e = &p.entries["device_fwd"];
+        assert_eq!(e.num_inputs, 5);
+        assert_eq!(e.input_shapes[4], vec![8, 1, 8, 8]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Host-side model state: named parameter sets loaded from the AOT artifact
+//! bundle (`params.bin` + manifest), kept as one flat f32 vector per
+//! sub-model so optimizers can step over them in place.
+
+pub mod arch;
+pub mod params;
+
+pub use arch::{EntryInfo, PresetInfo};
+pub use params::{ParamSet, ParamSpec};

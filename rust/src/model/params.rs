@@ -1,0 +1,142 @@
+//! Named parameter sets over flat storage.
+
+use crate::util::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn from_json(j: &Json) -> ParamSpec {
+        ParamSpec {
+            name: j.req("name").as_str().unwrap().to_string(),
+            shape: j.req("shape").usize_arr().unwrap(),
+        }
+    }
+}
+
+/// A sub-model's parameters: contiguous f32 storage + per-tensor views.
+#[derive(Debug, Clone)]
+pub struct ParamSet {
+    pub specs: Vec<ParamSpec>,
+    offsets: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl ParamSet {
+    pub fn new(specs: Vec<ParamSpec>, data: Vec<f32>) -> ParamSet {
+        let mut offsets = Vec::with_capacity(specs.len());
+        let mut off = 0;
+        for s in &specs {
+            offsets.push(off);
+            off += s.numel();
+        }
+        assert_eq!(off, data.len(), "param blob size mismatch");
+        ParamSet { specs, offsets, data }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn tensor(&self, i: usize) -> &[f32] {
+        let lo = self.offsets[i];
+        &self.data[lo..lo + self.specs[i].numel()]
+    }
+
+    pub fn tensor_by_name(&self, name: &str) -> Option<&[f32]> {
+        self.specs.iter().position(|s| s.name == name).map(|i| self.tensor(i))
+    }
+
+    /// Split a flat gradient vector into per-tensor slices (same layout).
+    pub fn split_flat<'a>(&self, flat: &'a [f32]) -> Vec<&'a [f32]> {
+        assert_eq!(flat.len(), self.data.len());
+        (0..self.specs.len())
+            .map(|i| {
+                let lo = self.offsets[i];
+                &flat[lo..lo + self.specs[i].numel()]
+            })
+            .collect()
+    }
+
+    /// Concatenate per-tensor blobs (in spec order) into a flat vector.
+    pub fn concat(tensors: &[Vec<f32>]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(tensors.iter().map(|t| t.len()).sum());
+        for t in tensors {
+            out.extend_from_slice(t);
+        }
+        out
+    }
+}
+
+/// Decode a little-endian f32 blob.
+pub fn f32_from_le_bytes(bytes: &[u8]) -> Vec<f32> {
+    assert_eq!(bytes.len() % 4, 0, "blob not f32-aligned");
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "w".into(), shape: vec![2, 3] },
+            ParamSpec { name: "b".into(), shape: vec![3] },
+        ]
+    }
+
+    #[test]
+    fn layout_and_views() {
+        let data: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let ps = ParamSet::new(specs(), data);
+        assert_eq!(ps.n_params(), 9);
+        assert_eq!(ps.tensor(0), &[0., 1., 2., 3., 4., 5.]);
+        assert_eq!(ps.tensor(1), &[6., 7., 8.]);
+        assert_eq!(ps.tensor_by_name("b").unwrap(), &[6., 7., 8.]);
+        assert!(ps.tensor_by_name("missing").is_none());
+    }
+
+    #[test]
+    fn split_flat_matches_layout() {
+        let ps = ParamSet::new(specs(), vec![0.0; 9]);
+        let grads: Vec<f32> = (0..9).map(|i| -(i as f32)).collect();
+        let parts = ps.split_flat(&grads);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1], &[-6., -7., -8.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn size_mismatch_panics() {
+        ParamSet::new(specs(), vec![0.0; 7]);
+    }
+
+    #[test]
+    fn f32_le_roundtrip() {
+        let vals = [1.5f32, -0.25, 1e20];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        assert_eq!(f32_from_le_bytes(&bytes), vals);
+    }
+
+    #[test]
+    fn spec_from_json() {
+        let j = Json::parse(r#"{"name": "conv1_w", "shape": [9, 16]}"#).unwrap();
+        let s = ParamSpec::from_json(&j);
+        assert_eq!(s.name, "conv1_w");
+        assert_eq!(s.numel(), 144);
+    }
+}

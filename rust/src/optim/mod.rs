@@ -1,0 +1,18 @@
+//! Optimizers (Sec. III-A): SGD (eq. 6) and ADAM [42].
+//!
+//! Per the paper's storage model, the PS keeps the ADAM first/second moments
+//! for the *device-side* model too, so devices stay stateless between their
+//! round-robin turns ("the PS can update the device-side model if it stores
+//! the first and second raw moments of the ADAM optimizer").
+
+pub mod adam;
+pub mod sgd;
+
+pub use adam::Adam;
+pub use sgd::Sgd;
+
+/// A stateful first-order optimizer over a flat f32 parameter vector.
+pub trait Optimizer {
+    fn step(&mut self, params: &mut [f32], grads: &[f32]);
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,54 @@
+//! Plain SGD: w <- w - eta * g (paper eq. 6).
+
+use super::Optimizer;
+
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Sgd {
+        Sgd { lr }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), grads.len());
+        for (w, &g) in params.iter_mut().zip(grads) {
+            *w -= self.lr * g;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_step_matches_eq6() {
+        let mut opt = Sgd::new(0.1);
+        let mut w = vec![1.0f32, -2.0, 0.5];
+        opt.step(&mut w, &[10.0, -10.0, 0.0]);
+        assert_eq!(w, vec![0.0, -1.0, 0.5]);
+    }
+
+    #[test]
+    fn zero_grad_is_identity() {
+        let mut opt = Sgd::new(0.5);
+        let mut w = vec![3.0f32; 8];
+        opt.step(&mut w, &vec![0.0; 8]);
+        assert_eq!(w, vec![3.0f32; 8]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_mismatch_panics() {
+        Sgd::new(0.1).step(&mut [0.0], &[0.0, 0.0]);
+    }
+}

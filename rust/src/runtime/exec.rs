@@ -1,0 +1,33 @@
+//! Literal ⇄ host-matrix conversion helpers.
+
+use anyhow::Result;
+
+use crate::tensor::Matrix;
+
+/// Build an f32 literal of the given logical shape from a flat slice.
+pub fn vec_to_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    anyhow::ensure!(numel == data.len(), "shape/data mismatch: {shape:?} vs {}", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
+    vec_to_literal(&m.data, &[m.rows, m.cols])
+}
+
+pub fn literal_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn literal_to_matrix(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let v = literal_to_vec_f32(lit)?;
+    anyhow::ensure!(v.len() == rows * cols, "literal size mismatch");
+    Ok(Matrix::from_vec(rows, cols, v))
+}
+
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = literal_to_vec_f32(lit)?;
+    anyhow::ensure!(!v.is_empty(), "empty literal");
+    Ok(v[0])
+}

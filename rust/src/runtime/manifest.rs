@@ -1,0 +1,64 @@
+//! Artifact manifest (`artifacts/manifest.json`) parsing.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::model::PresetInfo;
+use crate::util::Json;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: usize,
+    pub presets: BTreeMap<String, PresetInfo>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("{path:?} not found — run `make artifacts` first")
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut presets = BTreeMap::new();
+        for (name, pj) in j.req("presets").as_obj().context("presets")? {
+            presets.insert(name.clone(), PresetInfo::from_json(name, pj));
+        }
+        Ok(Manifest { format: j.req("format").as_usize().unwrap_or(1), presets })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The real manifest written by `make artifacts` — validates the full
+    /// python->rust contract when artifacts exist.
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.presets.contains_key("tiny"));
+        let tiny = &m.presets["tiny"];
+        assert_eq!(tiny.entries.len(), 5);
+        for e in tiny.entries.values() {
+            assert!(dir.join(&e.file).exists());
+        }
+        // the paper-exact mnist preset
+        if let Some(mnist) = m.presets.get("mnist") {
+            assert_eq!(mnist.nd_params, 4800);
+            assert_eq!(mnist.ns_params, 148874);
+            assert_eq!(mnist.dbar, 1152);
+        }
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent-dir-xyz")).is_err());
+    }
+}

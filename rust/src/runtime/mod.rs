@@ -1,0 +1,105 @@
+//! PJRT runtime bridge: load the AOT HLO-text artifacts and execute them on
+//! the hot path. Pattern follows /opt/xla-example/load_hlo — HLO *text* is
+//! the interchange format (xla_extension 0.5.1 rejects jax≥0.5 protos).
+
+pub mod exec;
+pub mod manifest;
+
+pub use exec::{literal_to_vec_f32, matrix_to_literal, vec_to_literal};
+pub use manifest::Manifest;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::model::{ParamSet, PresetInfo};
+use crate::model::params::f32_from_le_bytes;
+
+pub struct Module {
+    exe: xla::PjRtLoadedExecutable,
+    pub num_inputs: usize,
+    pub num_outputs: usize,
+}
+
+/// A loaded preset: PJRT client + one compiled executable per entry point.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pub preset: PresetInfo,
+    pub dir: PathBuf,
+    modules: BTreeMap<String, Module>,
+}
+
+impl Runtime {
+    /// Load `artifacts/<preset>/*` and compile every entry point.
+    pub fn load(artifacts_dir: &Path, preset_name: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let preset = manifest
+            .presets
+            .get(preset_name)
+            .with_context(|| format!("preset {preset_name:?} not in manifest"))?
+            .clone();
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let mut modules = BTreeMap::new();
+        for (name, entry) in &preset.entries {
+            let path = artifacts_dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile {name}"))?;
+            modules.insert(
+                name.clone(),
+                Module { exe, num_inputs: entry.num_inputs, num_outputs: entry.num_outputs },
+            );
+        }
+        Ok(Runtime { client, preset, dir: artifacts_dir.to_path_buf(), modules })
+    }
+
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.modules.contains_key(name)
+    }
+
+    /// Execute an entry point. Inputs must match the manifest arity; outputs
+    /// are the flattened tuple elements (aot.py lowers with return_tuple).
+    pub fn exec(&self, entry: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let m = self
+            .modules
+            .get(entry)
+            .with_context(|| format!("unknown entry {entry:?}"))?;
+        anyhow::ensure!(
+            inputs.len() == m.num_inputs,
+            "entry {entry}: got {} inputs, manifest says {}",
+            inputs.len(),
+            m.num_inputs
+        );
+        let result = m.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(
+            outs.len() == m.num_outputs,
+            "entry {entry}: got {} outputs, manifest says {}",
+            outs.len(),
+            m.num_outputs
+        );
+        Ok(outs)
+    }
+
+    /// Load the initial parameters (device-side, server-side) from params.bin.
+    pub fn load_params(&self) -> Result<(ParamSet, ParamSet)> {
+        let blob = std::fs::read(self.dir.join(&self.preset.params_file))?;
+        let floats = f32_from_le_bytes(&blob);
+        anyhow::ensure!(
+            floats.len() == self.preset.nd_params + self.preset.ns_params,
+            "params.bin size mismatch"
+        );
+        let (d, s) = floats.split_at(self.preset.nd_params);
+        Ok((
+            ParamSet::new(self.preset.device_params.clone(), d.to_vec()),
+            ParamSet::new(self.preset.server_params.clone(), s.to_vec()),
+        ))
+    }
+}

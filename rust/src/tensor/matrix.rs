@@ -1,0 +1,171 @@
+//! Row-major f32 matrix — the host-side representation of the paper's
+//! intermediate feature/gradient matrices (`B x Dbar`, eq. 3 / eq. 5).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy out column `c` (row-major storage makes columns strided).
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn set_col(&mut self, c: usize, vals: &[f32]) {
+        assert_eq!(vals.len(), self.rows);
+        for (r, &v) in vals.iter().enumerate() {
+            *self.at_mut(r, c) = v;
+        }
+    }
+
+    /// Multiply column `c` in place by `s`.
+    pub fn scale_col(&mut self, c: usize, s: f32) {
+        for r in 0..self.rows {
+            *self.at_mut(r, c) *= s;
+        }
+    }
+
+    /// New matrix keeping only the columns in `idx` (order preserved).
+    pub fn gather_cols(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for r in 0..self.rows {
+            let src = self.row(r);
+            let dst = &mut out.data[r * idx.len()..(r + 1) * idx.len()];
+            for (j, &c) in idx.iter().enumerate() {
+                dst[j] = src[c];
+            }
+        }
+        out
+    }
+
+    /// Inverse of `gather_cols`: place our columns at positions `idx` of a
+    /// `rows x full_cols` zero matrix.
+    pub fn scatter_cols(&self, idx: &[usize], full_cols: usize) -> Matrix {
+        assert_eq!(idx.len(), self.cols);
+        let mut out = Matrix::zeros(self.rows, full_cols);
+        for r in 0..self.rows {
+            let src = self.row(r);
+            for (j, &c) in idx.iter().enumerate() {
+                out.data[r * full_cols + c] = src[j];
+            }
+        }
+        out
+    }
+
+    /// Squared Frobenius distance to `other`.
+    pub fn sq_dist(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&a| (a as f64) * (a as f64)).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> Matrix {
+        Matrix::from_fn(3, 4, |r, c| (r * 10 + c) as f32)
+    }
+
+    #[test]
+    fn index_layout_row_major() {
+        let a = m();
+        assert_eq!(a.at(0, 0), 0.0);
+        assert_eq!(a.at(1, 2), 12.0);
+        assert_eq!(a.row(2), &[20.0, 21.0, 22.0, 23.0]);
+        assert_eq!(a.col(1), vec![1.0, 11.0, 21.0]);
+    }
+
+    #[test]
+    fn gather_then_scatter_roundtrips_kept_columns() {
+        let a = m();
+        let idx = vec![0, 2, 3];
+        let g = a.gather_cols(&idx);
+        assert_eq!(g.cols, 3);
+        assert_eq!(g.col(1), a.col(2));
+        let s = g.scatter_cols(&idx, 4);
+        assert_eq!(s.col(0), a.col(0));
+        assert_eq!(s.col(2), a.col(2));
+        assert_eq!(s.col(1), vec![0.0; 3]); // dropped column zeroed
+    }
+
+    #[test]
+    fn scale_col() {
+        let mut a = m();
+        a.scale_col(3, 2.0);
+        assert_eq!(a.col(3), vec![6.0, 26.0, 46.0]);
+    }
+
+    #[test]
+    fn sq_dist_and_norm() {
+        let a = m();
+        let mut b = a.clone();
+        *b.at_mut(0, 0) += 3.0;
+        assert_eq!(a.sq_dist(&b), 9.0);
+        assert_eq!(Matrix::zeros(2, 2).sq_norm(), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_checked() {
+        Matrix::from_vec(2, 2, vec![0.0; 5]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Host-side tensor substrate: row-major f32 matrices + column statistics.
+
+pub mod matrix;
+pub mod stats;
+
+pub use matrix::Matrix;
+pub use stats::{
+    channel_min_max, column_stats, dispersion_summary, normalized_sigma, ColumnStats,
+    DispersionSummary,
+};

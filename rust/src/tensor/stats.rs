@@ -1,0 +1,218 @@
+//! Column / channel statistics over intermediate matrices.
+//!
+//! On the hot path FWDP gets these from the AOT `feature_stats` artifact
+//! (the L1 Pallas kernel); this module is the host-side reference (used by
+//! codecs on *compressed* matrices whose width D̂ is dynamic, by tests as an
+//! oracle against the kernel, and by the Fig.-1 dispersion bench).
+
+use super::matrix::Matrix;
+
+#[derive(Clone, Debug, Default)]
+pub struct ColumnStats {
+    pub min: Vec<f32>,
+    pub max: Vec<f32>,
+    pub mean: Vec<f32>,
+    /// stddev of the raw column values (population, 1/B).
+    pub std: Vec<f32>,
+}
+
+impl ColumnStats {
+    pub fn range(&self, i: usize) -> f32 {
+        self.max[i] - self.min[i]
+    }
+
+    pub fn ranges(&self) -> Vec<f32> {
+        (0..self.min.len()).map(|i| self.range(i)).collect()
+    }
+}
+
+/// Single pass per column: min / max / mean / std.
+pub fn column_stats(m: &Matrix) -> ColumnStats {
+    let (b, d) = (m.rows, m.cols);
+    assert!(b > 0 && d > 0);
+    let mut mn = vec![f32::INFINITY; d];
+    let mut mx = vec![f32::NEG_INFINITY; d];
+    let mut sum = vec![0.0f64; d];
+    let mut sumsq = vec![0.0f64; d];
+    for r in 0..b {
+        let row = m.row(r);
+        for c in 0..d {
+            let v = row[c];
+            if v < mn[c] {
+                mn[c] = v;
+            }
+            if v > mx[c] {
+                mx[c] = v;
+            }
+            sum[c] += v as f64;
+            sumsq[c] += (v as f64) * (v as f64);
+        }
+    }
+    let mut mean = vec![0.0f32; d];
+    let mut std = vec![0.0f32; d];
+    for c in 0..d {
+        let mu = sum[c] / b as f64;
+        mean[c] = mu as f32;
+        std[c] = (sumsq[c] / b as f64 - mu * mu).max(0.0).sqrt() as f32;
+    }
+    ColumnStats { min: mn, max: mx, mean, std }
+}
+
+/// Per-channel min/max where channel h owns the contiguous column block
+/// `[h*chan_size, (h+1)*chan_size)` — the paper's index sets `I_h` (eq. 9).
+pub fn channel_min_max(stats: &ColumnStats, chan_size: usize) -> (Vec<f32>, Vec<f32>) {
+    let d = stats.min.len();
+    assert!(chan_size > 0 && d % chan_size == 0, "D={d} chan={chan_size}");
+    let h = d / chan_size;
+    let mut mn = vec![f32::INFINITY; h];
+    let mut mx = vec![f32::NEG_INFINITY; h];
+    for c in 0..d {
+        let ch = c / chan_size;
+        mn[ch] = mn[ch].min(stats.min[c]);
+        mx[ch] = mx[ch].max(stats.max[c]);
+    }
+    (mn, mx)
+}
+
+/// σ_i of the channel-normalized features (paper eq. 10), via the affine
+/// identity σ_norm = σ_raw / (channel range); 0 for degenerate channels.
+pub fn normalized_sigma(stats: &ColumnStats, chan_size: usize) -> Vec<f32> {
+    let (mn, mx) = channel_min_max(stats, chan_size);
+    (0..stats.std.len())
+        .map(|c| {
+            let ch = c / chan_size;
+            let r = mx[ch] - mn[ch];
+            if r > 0.0 {
+                stats.std[c] / r
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// Fig.-1 style dispersion summary of a matrix (std + range extremes and the
+/// max / smallest-non-zero ("SNV") ratios the paper highlights).
+#[derive(Debug, Clone)]
+pub struct DispersionSummary {
+    pub std_min: f32,
+    pub std_max: f32,
+    pub std_snv_ratio: f32,
+    pub range_min: f32,
+    pub range_max: f32,
+    pub range_snv_ratio: f32,
+}
+
+pub fn dispersion_summary(std: &[f32], ranges: &[f32]) -> DispersionSummary {
+    fn snv_ratio(xs: &[f32]) -> f32 {
+        let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let snv = xs
+            .iter()
+            .cloned()
+            .filter(|&x| x > 0.0)
+            .fold(f32::INFINITY, f32::min);
+        if snv.is_finite() && snv > 0.0 {
+            max / snv
+        } else {
+            0.0
+        }
+    }
+    DispersionSummary {
+        std_min: std.iter().cloned().fold(f32::INFINITY, f32::min),
+        std_max: std.iter().cloned().fold(f32::NEG_INFINITY, f32::max),
+        std_snv_ratio: snv_ratio(std),
+        range_min: ranges.iter().cloned().fold(f32::INFINITY, f32::min),
+        range_max: ranges.iter().cloned().fold(f32::NEG_INFINITY, f32::max),
+        range_snv_ratio: snv_ratio(ranges),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Matrix {
+        // 4 rows x 6 cols, 2 channels of 3 columns
+        Matrix::from_vec(
+            4,
+            6,
+            vec![
+                0.0, 1.0, 2.0, 10.0, 20.0, 30.0, //
+                4.0, 1.0, 2.0, 10.0, 22.0, 30.0, //
+                2.0, 1.0, 2.0, 14.0, 24.0, 30.0, //
+                2.0, 1.0, 2.0, 10.0, 26.0, 30.0,
+            ],
+        )
+    }
+
+    #[test]
+    fn stats_basics() {
+        let s = column_stats(&sample());
+        assert_eq!(s.min[0], 0.0);
+        assert_eq!(s.max[0], 4.0);
+        assert!((s.mean[0] - 2.0).abs() < 1e-6);
+        assert_eq!(s.std[1], 0.0); // constant column
+        assert_eq!(s.range(3), 4.0);
+    }
+
+    #[test]
+    fn stats_match_naive() {
+        let m = Matrix::from_fn(7, 5, |r, c| ((r * 31 + c * 17) % 13) as f32 - 6.0);
+        let s = column_stats(&m);
+        for c in 0..5 {
+            let col = m.col(c);
+            let mu = col.iter().sum::<f32>() / 7.0;
+            let var = col.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 7.0;
+            assert!((s.mean[c] - mu).abs() < 1e-5);
+            assert!((s.std[c] - var.sqrt()).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn channel_min_max_blocks() {
+        let s = column_stats(&sample());
+        let (mn, mx) = channel_min_max(&s, 3);
+        assert_eq!(mn, vec![0.0, 10.0]);
+        assert_eq!(mx, vec![4.0, 30.0]);
+    }
+
+    #[test]
+    fn normalized_sigma_scale_invariant() {
+        let m = sample();
+        let mut m2 = m.clone();
+        for v in &mut m2.data {
+            *v = *v * 100.0 + 5.0;
+        }
+        // scale whole matrix: channel ranges scale too -> identical sigma_norm
+        let s1 = normalized_sigma(&column_stats(&m), 3);
+        let s2 = normalized_sigma(&column_stats(&m2), 3);
+        for (a, b) in s1.iter().zip(&s2) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn normalized_sigma_degenerate_channel_zero() {
+        let m = Matrix::from_vec(2, 2, vec![3.0, 1.0, 3.0, 2.0]); // chan 0 constant
+        let s = normalized_sigma(&column_stats(&m), 1);
+        assert_eq!(s[0], 0.0);
+        assert!(s[1] > 0.0);
+    }
+
+    #[test]
+    fn normalized_sigma_bounded_half() {
+        // normalized values live in [0,1] => sigma <= 0.5
+        let m = Matrix::from_fn(50, 8, |r, c| ((r * 7 + c * 13) % 17) as f32);
+        let s = normalized_sigma(&column_stats(&m), 4);
+        assert!(s.iter().all(|&x| x <= 0.5 + 1e-6));
+    }
+
+    #[test]
+    fn dispersion_summary_ratios() {
+        let d = dispersion_summary(&[0.0, 0.1, 0.4], &[0.0, 2.0, 8.0]);
+        assert_eq!(d.std_snv_ratio, 4.0);
+        assert_eq!(d.range_snv_ratio, 4.0);
+        assert_eq!(d.std_min, 0.0);
+        assert_eq!(d.range_max, 8.0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Tiny property-testing harness (the offline registry has no `proptest`):
+//! seeded random case generation with automatic shrinking of failing usize
+//! parameter vectors. Used for coordinator/codec invariants.
+
+use crate::util::Rng;
+
+/// A parameter vector drawn from per-dimension inclusive ranges.
+#[derive(Debug, Clone)]
+pub struct ParamSpace {
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl ParamSpace {
+    pub fn new(ranges: &[(usize, usize)]) -> ParamSpace {
+        assert!(ranges.iter().all(|&(lo, hi)| lo <= hi));
+        ParamSpace { ranges: ranges.to_vec() }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Vec<usize> {
+        self.ranges
+            .iter()
+            .map(|&(lo, hi)| lo + rng.gen_range(hi - lo + 1))
+            .collect()
+    }
+}
+
+/// Outcome of a property check over `cases` random parameter vectors.
+pub enum PropResult {
+    Ok { cases: usize },
+    Failed { minimal: Vec<usize>, seed: u64, message: String },
+}
+
+/// Run `prop` on `cases` random draws from `space`; on failure, shrink each
+/// coordinate toward its lower bound while the property still fails and
+/// return the minimized counterexample.
+pub fn check(
+    seed: u64,
+    cases: usize,
+    space: &ParamSpace,
+    prop: impl Fn(&[usize]) -> Result<(), String>,
+) -> PropResult {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let params = space.sample(&mut rng);
+        if let Err(msg) = prop(&params) {
+            let minimal = shrink(space, params, &prop);
+            return PropResult::Failed { minimal, seed: seed + case as u64, message: msg };
+        }
+    }
+    PropResult::Ok { cases }
+}
+
+fn shrink(
+    space: &ParamSpace,
+    mut failing: Vec<usize>,
+    prop: &impl Fn(&[usize]) -> Result<(), String>,
+) -> Vec<usize> {
+    let mut progress = true;
+    while progress {
+        progress = false;
+        for i in 0..failing.len() {
+            let lo = space.ranges[i].0;
+            while failing[i] > lo {
+                // try halving the distance to the lower bound
+                let trial_val = lo + (failing[i] - lo) / 2;
+                let mut trial = failing.clone();
+                trial[i] = trial_val;
+                if prop(&trial).is_err() {
+                    failing = trial;
+                    progress = true;
+                } else {
+                    break;
+                }
+            }
+            // linear refinement: halving overshoots the boundary by up to 2x
+            while failing[i] > lo {
+                let mut trial = failing.clone();
+                trial[i] -= 1;
+                if prop(&trial).is_err() {
+                    failing = trial;
+                    progress = true;
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+    failing
+}
+
+/// Assert helper: panics with the minimal counterexample on failure.
+pub fn assert_prop(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    space: &ParamSpace,
+    prop: impl Fn(&[usize]) -> Result<(), String>,
+) {
+    match check(seed, cases, space, prop) {
+        PropResult::Ok { .. } => {}
+        PropResult::Failed { minimal, seed, message } => {
+            panic!("property {name} failed (seed {seed}): {message}\n  minimal counterexample: {minimal:?}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_ok() {
+        let space = ParamSpace::new(&[(1, 100), (1, 100)]);
+        match check(0, 200, &space, |p| {
+            if p[0] + p[1] >= 2 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        }) {
+            PropResult::Ok { cases } => assert_eq!(cases, 200),
+            PropResult::Failed { .. } => panic!("should pass"),
+        }
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_boundary() {
+        let space = ParamSpace::new(&[(0, 1000)]);
+        // fails iff x >= 17; minimal counterexample is 17
+        match check(1, 500, &space, |p| {
+            if p[0] >= 17 {
+                Err(format!("{} >= 17", p[0]))
+            } else {
+                Ok(())
+            }
+        }) {
+            PropResult::Ok { .. } => panic!("should fail"),
+            PropResult::Failed { minimal, .. } => assert_eq!(minimal, vec![17]),
+        }
+    }
+
+    #[test]
+    fn samples_respect_ranges() {
+        let space = ParamSpace::new(&[(5, 7), (0, 0)]);
+        assert_prop("ranges", 2, 300, &space, |p| {
+            if (5..=7).contains(&p[0]) && p[1] == 0 {
+                Ok(())
+            } else {
+                Err(format!("{p:?}"))
+            }
+        });
+    }
+}

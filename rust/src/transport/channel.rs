@@ -1,0 +1,144 @@
+//! Simulated link: capacity/latency model + per-direction bit accounting.
+
+use super::wire::Frame;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    Uplink,
+    Downlink,
+}
+
+/// A (device <-> PS) link. Transfer time = latency + bits / capacity.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub capacity_bps: f64,
+    pub latency_s: f64,
+    up_bits: u64,
+    down_bits: u64,
+    up_frames: u64,
+    down_frames: u64,
+    pub elapsed_s: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct LinkReport {
+    pub up_bits: u64,
+    pub down_bits: u64,
+    pub up_frames: u64,
+    pub down_frames: u64,
+    pub elapsed_s: f64,
+}
+
+impl Link {
+    pub fn new(capacity_bps: f64, latency_s: f64) -> Link {
+        assert!(capacity_bps > 0.0);
+        Link {
+            capacity_bps,
+            latency_s,
+            up_bits: 0,
+            down_bits: 0,
+            up_frames: 0,
+            down_frames: 0,
+            elapsed_s: 0.0,
+        }
+    }
+
+    /// "Transmit" a frame; returns the modeled transfer time in seconds.
+    pub fn transmit(&mut self, dir: Direction, frame: &Frame) -> f64 {
+        let bits = frame.total_bits();
+        match dir {
+            Direction::Uplink => {
+                self.up_bits += bits;
+                self.up_frames += 1;
+            }
+            Direction::Downlink => {
+                self.down_bits += bits;
+                self.down_frames += 1;
+            }
+        }
+        let t = self.latency_s + bits as f64 / self.capacity_bps;
+        self.elapsed_s += t;
+        t
+    }
+
+    pub fn report(&self) -> LinkReport {
+        LinkReport {
+            up_bits: self.up_bits,
+            down_bits: self.down_bits,
+            up_frames: self.up_frames,
+            down_frames: self.down_frames,
+            elapsed_s: self.elapsed_s,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.up_bits = 0;
+        self.down_bits = 0;
+        self.up_frames = 0;
+        self.down_frames = 0;
+        self.elapsed_s = 0.0;
+    }
+}
+
+/// The paper's introductory latency estimate: transmitting uncompressed F and
+/// G (32-bit floats) for `iters` iterations across `devices` devices over a
+/// link of `capacity_bps`: time = 2 * 32 * B * Dbar * iters * devices / cap.
+pub fn vanilla_sl_transfer_time_s(
+    capacity_bps: f64,
+    batch: usize,
+    dbar: usize,
+    iters: usize,
+    devices: usize,
+) -> f64 {
+    let bits = 2.0 * 32.0 * batch as f64 * dbar as f64 * iters as f64 * devices as f64;
+    bits / capacity_bps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::wire::FrameKind;
+
+    #[test]
+    fn paper_intro_example() {
+        // "10 Mbps, batch 256, Dbar 8192, 100 iterations, 100 devices
+        //  => about 1.34e5 seconds"
+        let t = vanilla_sl_transfer_time_s(10e6, 256, 8192, 100, 100);
+        assert!((t - 1.342e5).abs() / 1.342e5 < 0.01, "t={t}");
+    }
+
+    #[test]
+    fn accounting_accumulates_per_direction() {
+        let mut link = Link::new(1e6, 0.0);
+        let f = Frame::new(FrameKind::FeaturesUp, vec![0u8; 125], 1000);
+        let g = Frame::new(FrameKind::GradientsDown, vec![0u8; 25], 200);
+        link.transmit(Direction::Uplink, &f);
+        link.transmit(Direction::Uplink, &f);
+        link.transmit(Direction::Downlink, &g);
+        let r = link.report();
+        assert_eq!(r.up_bits, 2 * (1000 + Frame::HEADER_BITS));
+        assert_eq!(r.down_bits, 200 + Frame::HEADER_BITS);
+        assert_eq!((r.up_frames, r.down_frames), (2, 1));
+    }
+
+    #[test]
+    fn transfer_time_model() {
+        let mut link = Link::new(1000.0, 0.5);
+        let f = Frame::new(FrameKind::FeaturesUp, vec![0u8; 116], 1000 - Frame::HEADER_BITS);
+        let t = link.transmit(Direction::Uplink, &f);
+        assert!((t - 1.5).abs() < 1e-9, "t={t}"); // 0.5 latency + 1000/1000
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut link = Link::new(1.0, 0.0);
+        link.transmit(
+            Direction::Uplink,
+            &Frame::new(FrameKind::ModelSync, vec![1], 8),
+        );
+        link.reset();
+        let r = link.report();
+        assert_eq!(r.up_bits + r.down_bits, 0);
+        assert_eq!(r.elapsed_s, 0.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Fading-channel extension (the paper's Conclusion names "fading channels
+//! and device-specific heterogeneous conditions" as future work).
+//!
+//! Block-fading link model: per-round capacity C_t = C̄ · g_t with Rayleigh
+//! power gain g_t ~ Exp(1) (clamped), plus an outage rule — when the gain
+//! drops below `outage_gain` the frame is retransmitted next block. Also
+//! provides a heterogeneous-device budget sampler: per-device bits/entry
+//! budgets drawn log-normally around the nominal, so experiments can assign
+//! device k a personal C_e,d^{(k)} (the adaptive-R policy in
+//! `per_device_ratio`).
+
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct FadingLink {
+    pub mean_capacity_bps: f64,
+    /// gains below this are outages (retransmission next block)
+    pub outage_gain: f64,
+    /// block length in seconds (one gain draw per block)
+    pub block_s: f64,
+    rng: Rng,
+    pub retransmissions: u64,
+    pub blocks_used: u64,
+}
+
+impl FadingLink {
+    pub fn new(mean_capacity_bps: f64, outage_gain: f64, block_s: f64, seed: u64) -> FadingLink {
+        assert!(mean_capacity_bps > 0.0 && block_s > 0.0);
+        FadingLink {
+            mean_capacity_bps,
+            outage_gain,
+            block_s,
+            rng: Rng::new(seed),
+            retransmissions: 0,
+            blocks_used: 0,
+        }
+    }
+
+    /// Rayleigh power gain ~ Exp(1).
+    fn gain(&mut self) -> f64 {
+        -(1.0 - self.rng.next_f64()).ln()
+    }
+
+    /// Transmit `bits`; returns total elapsed seconds including outages.
+    pub fn transmit(&mut self, bits: u64) -> f64 {
+        let mut remaining = bits as f64;
+        let mut t = 0.0;
+        while remaining > 0.0 {
+            self.blocks_used += 1;
+            let g = self.gain();
+            t += self.block_s;
+            if g < self.outage_gain {
+                self.retransmissions += 1;
+                continue; // whole block lost
+            }
+            remaining -= self.mean_capacity_bps * g.min(4.0) * self.block_s;
+        }
+        t
+    }
+
+    /// Expected throughput degradation factor vs a non-fading link
+    /// (Monte-Carlo; used by the planner example).
+    pub fn efficiency_estimate(&mut self, trials: usize) -> f64 {
+        let mut good = 0.0;
+        for _ in 0..trials {
+            let g = self.gain();
+            if g >= self.outage_gain {
+                good += g.min(4.0);
+            }
+        }
+        good / trials as f64
+    }
+}
+
+/// Heterogeneous per-device budgets: log-normal around `nominal_bpe`,
+/// clamped to [min_bpe, 32].
+pub fn device_budgets(
+    devices: usize,
+    nominal_bpe: f64,
+    sigma_ln: f64,
+    min_bpe: f64,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    (0..devices)
+        .map(|_| {
+            let z = rng.normal();
+            (nominal_bpe * (sigma_ln * z).exp()).clamp(min_bpe, 32.0)
+        })
+        .collect()
+}
+
+/// Adaptive-R policy for heterogeneous budgets: pick the smallest R from the
+/// candidate grid whose AD-only overhead (Remark 1: 32BD̄/R + D̄ bits) fits
+/// the device's budget; devices with more headroom keep more features.
+pub fn per_device_ratio(
+    budget_bpe: f64,
+    batch: usize,
+    dbar: usize,
+    candidates: &[f64],
+) -> f64 {
+    let budget_bits = budget_bpe * (batch * dbar) as f64;
+    for &r in candidates {
+        let overhead = 32.0 * (batch * dbar) as f64 / r + dbar as f64;
+        if overhead <= budget_bits {
+            return r;
+        }
+    }
+    *candidates.last().unwrap_or(&1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fading_transmit_takes_longer_than_ideal() {
+        let mut link = FadingLink::new(1e6, 0.1, 0.01, 1);
+        let bits = 5_000_000u64; // ideal: 5 s
+        let t = link.transmit(bits);
+        assert!(t >= 2.0, "t={t} suspiciously fast for fading");
+        assert!(t.is_finite());
+        assert!(link.blocks_used > 0);
+    }
+
+    #[test]
+    fn higher_outage_threshold_more_retransmissions() {
+        let runs = |outage: f64| {
+            let mut link = FadingLink::new(1e6, outage, 0.01, 2);
+            link.transmit(2_000_000);
+            link.retransmissions
+        };
+        assert!(runs(0.5) > runs(0.01));
+    }
+
+    #[test]
+    fn efficiency_estimate_in_unit_range_ish() {
+        let mut link = FadingLink::new(1e6, 0.1, 0.01, 3);
+        let e = link.efficiency_estimate(20_000);
+        // E[min(g,4)·1{g>0.1}] for g~Exp(1) ≈ 0.88
+        assert!((0.7..=1.1).contains(&e), "e={e}");
+    }
+
+    #[test]
+    fn device_budgets_clamped_and_dispersed() {
+        let mut rng = Rng::new(4);
+        let b = device_budgets(200, 0.2, 0.8, 0.05, &mut rng);
+        assert_eq!(b.len(), 200);
+        assert!(b.iter().all(|&x| (0.05..=32.0).contains(&x)));
+        let mean: f64 = b.iter().sum::<f64>() / 200.0;
+        assert!((0.1..=0.6).contains(&mean), "mean={mean}");
+        let mn = b.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mx = b.iter().cloned().fold(0.0, f64::max);
+        assert!(mx > 2.0 * mn, "should be heterogeneous: {mn}..{mx}");
+    }
+
+    #[test]
+    fn per_device_ratio_fits_budget() {
+        let candidates = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+        for &bpe in &[0.1, 0.2, 0.5, 1.0, 4.0, 32.0] {
+            let r = per_device_ratio(bpe, 64, 1152, &candidates);
+            let overhead = 32.0 * (64.0 * 1152.0) / r + 1152.0;
+            if r < 128.0 {
+                assert!(
+                    overhead <= bpe * 64.0 * 1152.0 + 1e-6,
+                    "bpe={bpe} r={r} overhead={overhead}"
+                );
+            }
+        }
+        // generous budget keeps R small (more features kept)
+        assert!(
+            per_device_ratio(32.0, 64, 1152, &candidates)
+                < per_device_ratio(0.2, 64, 1152, &candidates)
+        );
+    }
+}

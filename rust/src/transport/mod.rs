@@ -1,0 +1,14 @@
+//! Simulated communication substrate.
+//!
+//! The paper's testbed is a wireless uplink/downlink between devices and the
+//! PS. Here every transfer is a real serialized frame (`wire::Frame`) pushed
+//! through a `channel::Link` that accounts bits and models transfer time at a
+//! configured capacity — reproducing, e.g., the intro's 1.34e5 s example.
+
+pub mod channel;
+pub mod fading;
+pub mod wire;
+
+pub use channel::{Direction, Link, LinkReport};
+pub use fading::{device_budgets, per_device_ratio, FadingLink};
+pub use wire::Frame;

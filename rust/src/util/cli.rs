@@ -1,0 +1,120 @@
+//! Tiny CLI argument substrate (no `clap` offline).
+//!
+//! Grammar: `prog <subcommand> [positional...] [--key value | --key=value | --flag]`.
+//! Unknown keys are kept so experiment binaries can forward overrides into
+//! `config::TrainConfig::apply_overrides`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    out.options
+                        .insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(rest.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("train --rounds 20 --preset mnist extra");
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get_usize("rounds", 0), 20);
+        assert_eq!(a.get("preset"), Some("mnist"));
+        assert_eq!(a.positional, vec!["train", "extra"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("x --lr=0.001 --name=a=b");
+        assert_eq!(a.get_f64("lr", 0.0), 0.001);
+        assert_eq!(a.get("name"), Some("a=b"));
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = parse("run --verbose --k 3 --dry-run");
+        assert!(a.has_flag("verbose"));
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.get_usize("k", 0), 3);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_f64("missing", 1.5), 1.5);
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert!(!a.has_flag("missing"));
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // "--key value" where value starts with '-' but not '--'
+        let a = parse("x --offset -3");
+        assert_eq!(a.get_f64("offset", 0.0), -3.0);
+    }
+}

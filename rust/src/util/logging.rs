@@ -1,0 +1,71 @@
+//! Minimal leveled logger with monotonic elapsed-time stamps.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // 0 quiet, 1 warn, 2 info, 3 debug
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+fn start() -> Instant {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+pub fn stamp() -> String {
+    let e = start().elapsed();
+    format!("{:>8.3}s", e.as_secs_f64())
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::util::logging::level() >= 2 {
+            eprintln!("[{} INFO ] {}", $crate::util::logging::stamp(), format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::util::logging::level() >= 1 {
+            eprintln!("[{} WARN ] {}", $crate::util::logging::stamp(), format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::util::logging::level() >= 3 {
+            eprintln!("[{} DEBUG] {}", $crate::util::logging::stamp(), format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_roundtrip() {
+        let old = level();
+        set_level(3);
+        assert_eq!(level(), 3);
+        set_level(old);
+    }
+
+    #[test]
+    fn stamp_is_monotonic_format() {
+        let s = stamp();
+        assert!(s.ends_with('s'));
+    }
+}

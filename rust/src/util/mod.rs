@@ -1,0 +1,10 @@
+//! Dependency-free substrates: PRNG, JSON, CLI parsing, logging.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,161 @@
+//! Integration: the full Algorithm-1 coordinator over the `tiny` artifacts.
+
+use splitfc::compression::{DropKind, FwqMode, Scheme};
+use splitfc::config::TrainConfig;
+use splitfc::coordinator::Trainer;
+
+fn base_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::for_preset("tiny");
+    cfg.devices = 2;
+    cfg.rounds = 4;
+    cfg.n_train = 256;
+    cfg.n_test = 64;
+    cfg
+}
+
+#[test]
+fn vanilla_training_reduces_loss_and_learns() {
+    let mut cfg = base_cfg();
+    cfg.rounds = 6;
+    let mut tr = Trainer::new(cfg).unwrap();
+    let first = tr.step(1, 0).unwrap();
+    let mut last = first.clone();
+    for t in 1..=6 {
+        for k in 0..2 {
+            last = tr.step(t, k).unwrap();
+        }
+    }
+    assert!(last.loss < first.loss, "loss {} -> {}", first.loss, last.loss);
+    let acc = tr.evaluate().unwrap();
+    assert!(acc > 0.3, "accuracy {acc} should beat 4-class chance");
+}
+
+#[test]
+fn splitfc_budget_respected_per_step() {
+    let mut cfg = base_cfg();
+    cfg.scheme = Scheme::splitfc(4.0);
+    cfg.up_bits_per_entry = 1.0;
+    cfg.down_bits_per_entry = 2.0;
+    let mut tr = Trainer::new(cfg).unwrap();
+    let p = tr.rt.preset.clone();
+    for t in 1..=3 {
+        let rec = tr.step(t, 0).unwrap();
+        let budget_up = 1.0 * (p.batch * p.dbar) as f64;
+        let budget_down = 2.0 * (p.batch * p.dbar) as f64;
+        assert!(
+            (rec.up_bits as f64) <= budget_up * 1.15 + 512.0,
+            "t={t} up {} vs {budget_up}",
+            rec.up_bits
+        );
+        assert!(
+            (rec.down_bits as f64) <= budget_down * 1.15 + 512.0,
+            "t={t} down {} vs {budget_down}",
+            rec.down_bits
+        );
+        assert!(rec.loss.is_finite());
+    }
+}
+
+#[test]
+fn run_is_deterministic_given_seed() {
+    let acc = |seed: u64| {
+        let mut cfg = base_cfg();
+        cfg.seed = seed;
+        cfg.scheme = Scheme::splitfc(4.0);
+        cfg.up_bits_per_entry = 2.0;
+        let mut tr = Trainer::new(cfg).unwrap();
+        let s = tr.run().unwrap();
+        (s.final_acc, s.total_up_bits)
+    };
+    let a = acc(7);
+    let b = acc(7);
+    assert_eq!(a, b, "same seed must reproduce exactly");
+    let c = acc(8);
+    assert!(a != c || a.1 != c.1, "different seeds should differ somewhere");
+}
+
+#[test]
+fn all_table_schemes_run_one_step() {
+    use splitfc::config::parse_scheme;
+    for name in [
+        "vanilla",
+        "splitfc",
+        "splitfc-ad",
+        "splitfc-rand",
+        "splitfc-det",
+        "splitfc-quant-only",
+        "splitfc-no-mean",
+        "splitfc-ad+pq",
+        "splitfc-ad+eq",
+        "splitfc-ad+nq",
+        "tops",
+        "randtops",
+        "tops+eq",
+        "fedlite",
+    ] {
+        let mut cfg = base_cfg();
+        cfg.rounds = 1;
+        cfg.scheme = parse_scheme(name, 4.0);
+        cfg.up_bits_per_entry = if name == "vanilla" { 32.0 } else { 1.0 };
+        cfg.down_bits_per_entry = 32.0;
+        let mut tr = Trainer::new(cfg).unwrap();
+        let rec = tr.step(1, 0).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert!(rec.loss.is_finite(), "{name}");
+        assert!(rec.up_bits > 0, "{name}");
+    }
+}
+
+#[test]
+fn downlink_compression_couples_to_dropout() {
+    // with dropout at R=4, the downlink (lossless) should carry ~1/4 of the
+    // full gradient bits
+    let mut cfg = base_cfg();
+    cfg.scheme = Scheme::SplitFc {
+        drop: Some(DropKind::Adaptive),
+        r: 4.0,
+        quant: FwqMode::NoQuant,
+    };
+    cfg.up_bits_per_entry = 32.0;
+    cfg.down_bits_per_entry = 32.0;
+    let mut tr = Trainer::new(cfg).unwrap();
+    let p = tr.rt.preset.clone();
+    let full = 32 * p.batch * p.dbar;
+    let mut total = 0u64;
+    let n = 6;
+    for t in 1..=n {
+        total += tr.step(t, 0).unwrap().down_bits;
+    }
+    let mean = total as f64 / n as f64;
+    assert!(
+        mean < full as f64 * 0.55,
+        "downlink {mean} should be ~25% of {full}"
+    );
+}
+
+#[test]
+fn eval_history_and_metrics_written() {
+    let path = std::env::temp_dir().join("splitfc_it_metrics.jsonl");
+    let mut cfg = base_cfg();
+    cfg.eval_every = 2;
+    cfg.metrics_path = path.to_str().unwrap().to_string();
+    let mut tr = Trainer::new(cfg).unwrap();
+    let s = tr.run().unwrap();
+    assert!(!s.eval_history.is_empty());
+    assert_eq!(s.steps, 8);
+    let text = std::fs::read_to_string(&path).unwrap();
+    // 8 step records + 1 summary
+    assert_eq!(text.lines().count(), 9);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn probe_features_exposes_dispersion() {
+    let mut tr = Trainer::new(base_cfg()).unwrap();
+    let (f, sigma) = tr.probe_features(0).unwrap();
+    assert_eq!(f.rows, tr.rt.preset.batch);
+    assert_eq!(sigma.len(), tr.rt.preset.dbar);
+    // paper's Fig.-1 premise: dispersion varies across columns
+    let mx = sigma.iter().cloned().fold(0.0f32, f32::max);
+    let mn = sigma.iter().cloned().fold(f32::INFINITY, f32::min);
+    assert!(mx > mn, "sigma must vary across columns");
+}

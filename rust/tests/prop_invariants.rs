@@ -1,0 +1,224 @@
+//! Property-based tests (via `splitfc::testkit`) of the coordinator/codec
+//! invariants: routing (kept-column bookkeeping), batching (wire-format
+//! round-trips at arbitrary shapes), and state (budget accounting).
+
+use splitfc::bitio::{BitReader, BitWriter};
+use splitfc::compression::dropout::{adaptive_probs, plan, DropKind};
+use splitfc::compression::pipeline::decode_uplink_splitfc;
+use splitfc::compression::waterfill::{solve, LevelSpec};
+use splitfc::compression::{
+    encode_downlink, encode_uplink, CodecParams, FwqConfig, GradMask, Scheme,
+};
+use splitfc::tensor::{column_stats, normalized_sigma, Matrix};
+use splitfc::testkit::{assert_prop, ParamSpace};
+use splitfc::util::Rng;
+
+fn random_matrix(b: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(b, d, |_, c| {
+        let scale = [3.0, 1.0, 0.1, 0.0][c % 4];
+        scale * rng.normal_f32(0.0, 1.0) + (c % 9) as f32 * 0.2
+    })
+}
+
+#[test]
+fn prop_fwq_roundtrip_any_shape_within_budget() {
+    // params: [batch, dhat, bpe_x10, seed]
+    let space = ParamSpace::new(&[(2, 48), (1, 96), (5, 60), (0, 1000)]);
+    assert_prop("fwq_roundtrip", 42, 60, &space, |p| {
+        let (b, d, bpe, seed) = (p[0], p[1], p[2] as f64 / 10.0, p[3] as u64);
+        let a = random_matrix(b, d, seed);
+        let cfg = FwqConfig::paper_default(b, bpe * (b * d) as f64);
+        let (bytes, bits, info) = splitfc::compression::fwq_encode(&a, &cfg);
+        let out = splitfc::compression::fwq_decode(&bytes, &cfg);
+        if (out.rows, out.cols) != (b, d) {
+            return Err(format!("shape {:?}", (out.rows, out.cols)));
+        }
+        if out.data.iter().any(|v| !v.is_finite()) {
+            return Err("non-finite".into());
+        }
+        // budget (generous slack for the degenerate-budget fallback at tiny
+        // b*d where the fixed header dominates)
+        let header_slack = 720.0 + d as f64;
+        if bits as f64 > cfg.c_ava * 1.1 + header_slack {
+            return Err(format!("bits {bits} > budget {}", cfg.c_ava));
+        }
+        if info.m_star > d {
+            return Err("M* > D̂".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dropout_probabilities_axioms() {
+    // params: [dbar, r_x10, seed]
+    let space = ParamSpace::new(&[(1, 400), (10, 640), (0, 500)]);
+    assert_prop("dropout_axioms", 7, 120, &space, |p| {
+        let (d, r, seed) = (p[0], (p[1] as f64 / 10.0).max(1.0), p[2] as u64);
+        let mut rng = Rng::new(seed);
+        let sigma: Vec<f32> = (0..d).map(|_| rng.next_f32() * 0.5).collect();
+        let probs = adaptive_probs(&sigma, r);
+        if probs.iter().any(|&x| !(0.0..=1.0).contains(&x)) {
+            return Err(format!("p out of [0,1]: {probs:?}"));
+        }
+        let e_keep: f64 = probs.iter().map(|&x| 1.0 - x).sum();
+        let target = d as f64 / r;
+        if (e_keep - target).abs() > target * 0.1 + 1.0 {
+            return Err(format!("E[D̂]={e_keep} vs D={target}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dropout_plan_routing_invariants() {
+    let space = ParamSpace::new(&[(1, 300), (10, 320), (0, 300)]);
+    assert_prop("dropout_routing", 11, 120, &space, |p| {
+        let (d, r, seed) = (p[0], (p[1] as f64 / 10.0).max(1.0), p[2] as u64);
+        let mut rng = Rng::new(seed);
+        let sigma: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+        for kind in [DropKind::Adaptive, DropKind::Random, DropKind::Deterministic] {
+            let pl = plan(kind, &sigma, r, &mut rng);
+            // kept indices sorted, unique, within range, consistent with δ
+            let mut sorted = pl.kept.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted != pl.kept {
+                return Err(format!("{kind:?}: kept not sorted/unique"));
+            }
+            if pl.kept.iter().any(|&i| i >= d) {
+                return Err("kept out of range".into());
+            }
+            if pl.kept.len() != pl.delta.iter().filter(|&&x| x).count() {
+                return Err("kept/delta mismatch".into());
+            }
+            if pl.scale.len() != pl.kept.len() {
+                return Err("scale/kept mismatch".into());
+            }
+            for (j, &c) in pl.kept.iter().enumerate() {
+                let expect = 1.0 / (1.0 - pl.p[c]);
+                if (pl.scale[j] as f64 - expect).abs() > 1e-4 * expect {
+                    return Err(format!("scale[{j}] wrong"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_uplink_downlink_mask_coupling() {
+    // eq. (8): downlink Ĝ is zero exactly on dropped columns
+    let space = ParamSpace::new(&[(2, 24), (4, 64), (0, 400)]);
+    assert_prop("mask_coupling", 13, 40, &space, |p| {
+        let (b, d, seed) = (p[0], p[1], p[2] as u64);
+        let f = random_matrix(b, d, seed);
+        let sigma = normalized_sigma(&column_stats(&f), 1);
+        let params = CodecParams::new(b, d, 1.0);
+        let mut rng = Rng::new(seed ^ 0xA5);
+        let scheme = Scheme::splitfc(2.0);
+        let enc = encode_uplink(&scheme, &f, &sigma, &params, &mut rng);
+        let GradMask::Columns { kept, .. } = &enc.mask else {
+            return Err("expected column mask".into());
+        };
+        let g = random_matrix(b, d, seed ^ 0xF0);
+        let dn = encode_downlink(&scheme, &g, &enc.mask, &CodecParams::new(b, d, 32.0));
+        for c in 0..d {
+            let zero = (0..b).all(|r| dn.g_hat.at(r, c) == 0.0);
+            let is_kept = kept.contains(&c);
+            if is_kept && zero && (0..b).any(|r| g.at(r, c) != 0.0) {
+                return Err(format!("kept col {c} zeroed"));
+            }
+            if !is_kept && !zero {
+                return Err(format!("dropped col {c} leaked"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_decode_inverts_encode() {
+    let space = ParamSpace::new(&[(2, 24), (2, 64), (5, 40), (0, 200)]);
+    assert_prop("wire_decode", 17, 40, &space, |p| {
+        let (b, d, bpe, seed) = (p[0], p[1], p[2] as f64 / 10.0, p[3] as u64);
+        let f = random_matrix(b, d, seed);
+        let sigma = normalized_sigma(&column_stats(&f), 1);
+        let params = CodecParams::new(b, d, bpe);
+        let mut rng = Rng::new(seed);
+        let scheme = Scheme::splitfc(2.0);
+        let enc = encode_uplink(&scheme, &f, &sigma, &params, &mut rng);
+        let (decoded, _) = decode_uplink_splitfc(&enc.frame, &scheme, &params);
+        if decoded != enc.f_hat {
+            return Err("PS decode != encoder reconstruction".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bitio_radix_roundtrip() {
+    let space = ParamSpace::new(&[(2, 70000), (0, 500), (0, 1000)]);
+    assert_prop("radix", 19, 150, &space, |p| {
+        let (q, n, seed) = (p[0] as u64, p[1], p[2] as u64);
+        let mut rng = Rng::new(seed);
+        let syms: Vec<u64> = (0..n).map(|_| rng.next_u64() % q).collect();
+        let mut w = BitWriter::new();
+        w.write_radix(&syms, q);
+        let bits = w.bit_len();
+        let nominal = n as f64 * (q as f64).log2();
+        if bits as f64 > nominal + 65.0 + 0.13 * n as f64 {
+            return Err(format!("q={q} n={n}: {bits} bits vs nominal {nominal}"));
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        if r.read_radix(n, q) != syms {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_waterfill_budget_and_monotonicity() {
+    let space = ParamSpace::new(&[(1, 40), (1, 64), (1, 12), (0, 300)]);
+    assert_prop("waterfill", 23, 80, &space, |p| {
+        let (m, batch, bits_per, seed) = (p[0], p[1], p[2] as f64, p[3] as u64);
+        let mut rng = Rng::new(seed);
+        let specs: Vec<LevelSpec> = (0..m)
+            .map(|_| LevelSpec::entry(rng.next_f64() * 10.0, batch))
+            .collect();
+        let budget = bits_per * batch as f64 * m as f64;
+        match solve(&specs, budget) {
+            None => {
+                if budget >= batch as f64 * m as f64 {
+                    return Err("feasible but returned None".into());
+                }
+            }
+            Some(q) => {
+                let bits: f64 = specs
+                    .iter()
+                    .zip(&q)
+                    .map(|(s, &qi)| s.bit_weight * (qi as f64).log2())
+                    .sum();
+                if bits > budget + 1e-6 {
+                    return Err(format!("over budget {bits} > {budget}"));
+                }
+                if q.iter().any(|&x| x < 2) {
+                    return Err("level < 2".into());
+                }
+                // monotone in ã: among equal-weight specs, bigger range never
+                // gets fewer levels
+                for i in 0..m {
+                    for j in 0..m {
+                        if specs[i].a_tilde > specs[j].a_tilde && q[i] < q[j] {
+                            return Err(format!("monotonicity: {i} vs {j}"));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
