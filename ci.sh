@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# CI gate for the default (offline, zero-dependency) feature set:
+#   1. release build        2. test suite        3. clippy, warnings fatal
+#
+# Usage: ./ci.sh            (SKIP_CLIPPY=1 to skip the lint step, e.g. on
+#                            toolchains without the clippy component)
+
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+if [ "${SKIP_CLIPPY:-0}" = "1" ]; then
+    echo "==> clippy skipped (SKIP_CLIPPY=1)"
+elif cargo clippy --version >/dev/null 2>&1; then
+    echo "==> cargo clippy --all-targets -- -D warnings"
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "==> clippy not installed; skipping lint step" >&2
+fi
+
+echo "CI OK"

@@ -1,28 +1,35 @@
 //! End-to-end validation driver (DESIGN.md §5 "e2e", EXPERIMENTS.md §E2E).
 //!
-//! Trains the paper-exact MNIST split model (LeNet variant, N_d = 4,800,
-//! N_s = 148,874, Dbar = 1,152) for a few hundred round-robin steps on the
+//! Trains the MNIST-scenario split model (28×28 inputs, cut-layer width
+//! D̄ = 1,152 as in the paper) for a few hundred round-robin steps on the
 //! synthetic non-IID corpus, side by side:
 //!   * vanilla SL (lossless links), and
 //!   * SplitFC at a 160x uplink compression budget (C_e,d = 0.2 bits/entry),
 //! logging the loss curve and eval accuracy each round, proving every layer
-//! composes: synthetic data -> device_fwd (Pallas matmul HLO via PJRT) ->
-//! feature_stats (Pallas stats kernel) -> FWDP/FWQ bit-exact codec ->
-//! server_fwd_bwd -> FWQ'd gradients -> device_bwd -> ADAM.
+//! composes: synthetic data -> device_fwd -> feature_stats (σ kernel, eq. 10)
+//! -> FWDP/FWQ bit-exact codec -> server_fwd_bwd -> FWQ'd gradients ->
+//! device_bwd -> ADAM. Runs on the native backend by default; pass
+//! `--backend pjrt` (with `--features pjrt` + artifacts) for the HLO path.
 //!
-//! Run:  make artifacts && cargo run --release --example e2e_train
-//!       (flags: --rounds N --devices K --scheme S --up-bpe X)
+//! Run:  cargo run --release --example e2e_train
+//!       (flags: --rounds N --devices K --r R --backend native|pjrt)
 
 use splitfc::config::{parse_scheme, TrainConfig};
 use splitfc::coordinator::Trainer;
-use splitfc::util::Args;
+use splitfc::ensure;
+use splitfc::util::{Args, Result};
 
-fn run(label: &str, scheme: &str, up_bpe: f64, args: &Args) -> anyhow::Result<()> {
+fn run(label: &str, scheme: &str, up_bpe: f64, args: &Args) -> Result<()> {
     let mut cfg = TrainConfig::for_preset("mnist");
+    // generic overrides (--backend, --seed, ...) first; the per-run fields
+    // below — scheme, budgets, metrics path — are fixed by this driver and
+    // always win (each run writes its own metrics file)
+    cfg.apply_overrides(args);
     cfg.rounds = args.get_usize("rounds", 25); // 25 rounds x 8 devices = 200 steps
     cfg.devices = args.get_usize("devices", 8);
     cfg.scheme = parse_scheme(scheme, args.get_f64("r", 16.0));
     cfg.up_bits_per_entry = up_bpe;
+    cfg.down_bits_per_entry = 32.0;
     cfg.eval_every = args.get_usize("eval-every", 5);
     cfg.metrics_path = format!("results/e2e_{label}.jsonl");
     std::fs::create_dir_all("results").ok();
@@ -61,14 +68,14 @@ fn run(label: &str, scheme: &str, up_bpe: f64, args: &Args) -> anyhow::Result<()
         rep.down_bits as f64 / 1e6,
         rep.elapsed_s
     );
-    anyhow::ensure!(
+    ensure!(
         losses.last().unwrap() < losses.first().unwrap(),
         "loss did not decrease"
     );
     Ok(())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::from_env();
     run("vanilla", "vanilla", 32.0, &args)?;
     run("splitfc160x", "splitfc", 0.2, &args)?;

@@ -2,15 +2,15 @@
 //! the strongest baselines at a 160x uplink compression budget, plus the
 //! dropout-variant story of Fig. 3 — in one runnable binary.
 //!
-//! Run:  make artifacts && cargo run --release --example mnist_splitfc
+//! Run:  cargo run --release --example mnist_splitfc   (native backend)
 //!       (shrink with --rounds/--devices for a faster pass)
 
 use splitfc::bench::print_table;
 use splitfc::config::{parse_scheme, TrainConfig};
 use splitfc::coordinator::Trainer;
-use splitfc::util::Args;
+use splitfc::util::{Args, Result};
 
-fn accuracy(scheme: &str, r: f64, up_bpe: f64, args: &Args) -> anyhow::Result<(f32, f64)> {
+fn accuracy(scheme: &str, r: f64, up_bpe: f64, args: &Args) -> Result<(f32, f64)> {
     let mut cfg = TrainConfig::for_preset("mnist");
     cfg.rounds = args.get_usize("rounds", 10);
     cfg.devices = args.get_usize("devices", 8);
@@ -18,11 +18,11 @@ fn accuracy(scheme: &str, r: f64, up_bpe: f64, args: &Args) -> anyhow::Result<(f
     cfg.up_bits_per_entry = up_bpe;
     let mut tr = Trainer::new(cfg)?;
     let s = tr.run()?;
-    let bpe = s.uplink_bits_per_entry(tr.rt.preset.batch, tr.rt.preset.dbar);
+    let bpe = s.uplink_bits_per_entry(tr.preset().batch, tr.preset().dbar);
     Ok((s.final_acc, bpe))
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::from_env();
 
     println!("== SplitFC vs baselines, MNIST scenario, 160x uplink budget ==");

@@ -1,16 +1,22 @@
 //! Quickstart: the whole SplitFC pipeline in ~60 lines.
 //!
-//! Loads the `tiny` artifact set, trains the split model for a few rounds
-//! with full SplitFC compression (adaptive feature-wise dropout +
-//! quantization), and prints accuracy + measured communication bits.
+//! Trains the `tiny` split model for a few rounds with full SplitFC
+//! compression (adaptive feature-wise dropout + quantization) on the
+//! pure-Rust native backend — no artifacts, no external deps — and prints
+//! accuracy + measured communication bits.
 //!
-//! Run:  make artifacts && cargo run --release --example quickstart
+//! Run:  cargo run --release --example quickstart
+//! (This example takes no flags; to drive the same protocol through
+//! compiled HLO, build with `--features pjrt` and set
+//! `cfg.backend = BackendKind::Pjrt` — see e2e_train for a flag-driven
+//! variant.)
 
 use splitfc::compression::Scheme;
 use splitfc::config::TrainConfig;
 use splitfc::coordinator::Trainer;
+use splitfc::util::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // 1. configure the tiny scenario: 2 devices, SplitFC at R=4 with a
     //    1 bit/entry uplink budget and 2 bits/entry downlink budget.
     let mut cfg = TrainConfig::for_preset("tiny");
@@ -20,15 +26,16 @@ fn main() -> anyhow::Result<()> {
     cfg.up_bits_per_entry = 1.0;
     cfg.down_bits_per_entry = 2.0;
 
-    // 2. build the trainer: loads HLO artifacts through PJRT, initial
-    //    parameters from params.bin, synthesizes the non-IID dataset.
+    // 2. build the trainer: constructs the execution backend (native split
+    //    MLP by default), deterministic initial parameters, and the
+    //    synthesized non-IID dataset.
     let mut trainer = Trainer::new(cfg)?;
 
     // 3. train (Algorithm 1: round-robin over devices, compressed links).
     let summary = trainer.run()?;
 
     // 4. report.
-    let (batch, dbar) = (trainer.rt.preset.batch, trainer.rt.preset.dbar);
+    let (batch, dbar) = (trainer.preset().batch, trainer.preset().dbar);
     println!("final accuracy: {:.2}%", summary.final_acc * 100.0);
     println!(
         "uplink: {} bits total ({:.3} bits/entry vs 32 uncompressed = {:.0}x compression)",
@@ -40,6 +47,6 @@ fn main() -> anyhow::Result<()> {
         "downlink: {} bits total; modeled transfer time {:.3}s on a 10 Mbps link",
         summary.total_down_bits, summary.link_s
     );
-    println!("wall time: {:.2}s (PJRT exec {:.2}s)", summary.wall_s, summary.exec_s);
+    println!("wall time: {:.2}s (backend exec {:.2}s)", summary.wall_s, summary.exec_s);
     Ok(())
 }

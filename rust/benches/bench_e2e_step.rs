@@ -6,7 +6,7 @@ use splitfc::bench::Bencher;
 use splitfc::config::{parse_scheme, TrainConfig};
 use splitfc::coordinator::Trainer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> splitfc::util::Result<()> {
     let bench = Bencher { min_time_s: 2.0, warmup_s: 0.3, max_iters: 200 };
     for preset in ["tiny", "mnist"] {
         for (scheme, bpe) in [("vanilla", 32.0), ("splitfc", 0.2), ("tops", 0.2)] {

@@ -5,7 +5,7 @@
 use splitfc::coordinator::experiments;
 use splitfc::util::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> splitfc::util::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let mut args = Args::parse(&argv);
     for (k, v) in [("rounds", "5"), ("devices", "4"), ("n-train", "1024"), ("n-test", "256")] {

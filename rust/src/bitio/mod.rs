@@ -153,6 +153,68 @@ mod tests {
     }
 
     #[test]
+    fn over_read_is_checked_error() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        let bits = w.bit_len();
+        let buf = w.into_bytes();
+        assert_eq!(buf.len(), 1); // 5 padding bits in the final byte
+
+        // byte-bounded reader: the padding is still fenced at the byte edge
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.try_read_bits(8).unwrap(), 0b101);
+        let e = r.try_read_bits(1).unwrap_err();
+        assert_eq!(
+            e,
+            crate::compression::error::CodecError::BitstreamOverread {
+                requested: 1,
+                available: 0
+            }
+        );
+
+        // bit-exact reader: reading INTO the final partial byte's padding is
+        // an over-read, not a silent zero-fill
+        let mut r = BitReader::with_bit_len(&buf, bits);
+        assert_eq!(r.try_read_bits(2).unwrap(), 0b01);
+        assert_eq!(r.bits_remaining(), 1);
+        let e = r.try_read_bits(4).unwrap_err();
+        assert_eq!(
+            e,
+            crate::compression::error::CodecError::BitstreamOverread {
+                requested: 4,
+                available: 1
+            }
+        );
+        // the failed read consumed nothing
+        assert_eq!(r.try_read_bits(1).unwrap(), 0b1);
+    }
+
+    #[test]
+    fn over_read_radix_is_checked() {
+        let mut w = BitWriter::new();
+        w.write_radix(&[2, 1, 0, 2], 3);
+        let bits = w.bit_len();
+        let buf = w.into_bytes();
+        let mut r = BitReader::with_bit_len(&buf, bits);
+        assert!(r.try_read_radix(5, 3).is_err(), "5 symbols from a 4-symbol stream");
+        let mut r = BitReader::with_bit_len(&buf, bits);
+        assert_eq!(r.try_read_radix(4, 3).unwrap(), vec![2, 1, 0, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "over-read")]
+    fn unchecked_read_past_end_panics() {
+        let mut r = BitReader::new(&[0xAB]);
+        r.read_bits(9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn with_bit_len_validates_length() {
+        BitReader::with_bit_len(&[0u8], 9);
+    }
+
+    #[test]
     fn radix_empty() {
         let mut w = BitWriter::new();
         w.write_radix(&[], 7);

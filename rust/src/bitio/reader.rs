@@ -1,29 +1,60 @@
 //! Bit-level reader mirroring `BitWriter`'s layout.
+//!
+//! Reads are bounds-checked against a bit limit. `BitReader::new` bounds the
+//! stream at whole bytes; when the producer knows the exact payload length
+//! (`Frame::payload_bits`, blob headers), [`BitReader::with_bit_len`] tightens
+//! the limit to the bit so that reading into the final partial byte's padding
+//! is a [`CodecError::BitstreamOverread`] instead of a silent zero-fill.
 
 use super::{radix_group_bits, radix_group_len};
+use crate::compression::error::CodecError;
 
 #[derive(Debug)]
 pub struct BitReader<'a> {
     buf: &'a [u8],
     byte: usize,
     bitpos: u32,
+    /// Total readable bits (≤ buf.len() * 8).
+    limit: u64,
 }
 
 impl<'a> BitReader<'a> {
     pub fn new(buf: &'a [u8]) -> Self {
-        Self { buf, byte: 0, bitpos: 0 }
+        Self { buf, byte: 0, bitpos: 0, limit: buf.len() as u64 * 8 }
+    }
+
+    /// Reader over a stream whose exact bit length is known (the writer's
+    /// `bit_len()`): the padding bits of the last partial byte are fenced off.
+    pub fn with_bit_len(buf: &'a [u8], bits: u64) -> Self {
+        assert!(
+            bits <= buf.len() as u64 * 8,
+            "bit length {bits} exceeds buffer of {} bytes",
+            buf.len()
+        );
+        Self { buf, byte: 0, bitpos: 0, limit: bits }
     }
 
     pub fn bits_consumed(&self) -> u64 {
         self.byte as u64 * 8 + self.bitpos as u64
     }
 
-    pub fn read_bits(&mut self, nbits: u32) -> u64 {
+    pub fn bits_remaining(&self) -> u64 {
+        self.limit - self.bits_consumed()
+    }
+
+    /// Checked read of `nbits` (≤ 64): errors instead of reading past the
+    /// stream's bit limit.
+    pub fn try_read_bits(&mut self, nbits: u32) -> Result<u64, CodecError> {
         debug_assert!(nbits <= 64);
+        if nbits as u64 > self.bits_remaining() {
+            return Err(CodecError::BitstreamOverread {
+                requested: nbits as u64,
+                available: self.bits_remaining(),
+            });
+        }
         let mut out: u64 = 0;
         let mut got = 0u32;
         while got < nbits {
-            assert!(self.byte < self.buf.len(), "BitReader: out of data");
             let avail = 8 - self.bitpos;
             let take = avail.min(nbits - got);
             let mask = if take == 8 { 0xFFu8 } else { (1u8 << take) - 1 };
@@ -36,7 +67,12 @@ impl<'a> BitReader<'a> {
                 self.byte += 1;
             }
         }
-        out
+        Ok(out)
+    }
+
+    pub fn read_bits(&mut self, nbits: u32) -> u64 {
+        self.try_read_bits(nbits)
+            .unwrap_or_else(|e| panic!("BitReader: {e}"))
     }
 
     pub fn read_f32(&mut self) -> f32 {
@@ -47,11 +83,16 @@ impl<'a> BitReader<'a> {
         self.read_bits(32) as u32
     }
 
-    pub fn read_radix(&mut self, n: usize, q: u64) -> Vec<u64> {
+    /// Checked radix read of `n` base-`q` symbols.
+    pub fn try_read_radix(&mut self, n: usize, q: u64) -> Result<Vec<u64>, CodecError> {
         assert!(q >= 2);
         if q.is_power_of_two() {
             let bits = q.trailing_zeros();
-            return (0..n).map(|_| self.read_bits(bits)).collect();
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                out.push(self.try_read_bits(bits)?);
+            }
+            return Ok(out);
         }
         let k = radix_group_len(q);
         let gbits = radix_group_bits(q, k);
@@ -60,13 +101,18 @@ impl<'a> BitReader<'a> {
         while remaining > 0 {
             let glen = remaining.min(k);
             let bits = if glen == k { gbits } else { radix_group_bits(q, glen) };
-            let mut acc = self.read_bits(bits) as u128;
+            let mut acc = self.try_read_bits(bits)? as u128;
             for _ in 0..glen {
                 out.push((acc % q as u128) as u64);
                 acc /= q as u128;
             }
             remaining -= glen;
         }
-        out
+        Ok(out)
+    }
+
+    pub fn read_radix(&mut self, n: usize, q: u64) -> Vec<u64> {
+        self.try_read_radix(n, q)
+            .unwrap_or_else(|e| panic!("BitReader: {e}"))
     }
 }

@@ -1,7 +1,39 @@
 //! Quantization/compression error identities used across the crate and by
-//! the analysis-replication tests (eqs. 13, 19-21).
+//! the analysis-replication tests (eqs. 13, 19-21), plus the codec failure
+//! type for malformed/truncated wire frames.
+
+use std::fmt;
 
 use crate::tensor::Matrix;
+
+/// A decode-side failure of the bit-level codec layer.
+///
+/// `BitstreamOverread` is raised by `bitio::BitReader`'s checked reads when
+/// a frame asks for more bits than the stream holds — previously the final
+/// partial byte was silently zero-filled, which made truncated frames decode
+/// to garbage instead of failing loudly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    BitstreamOverread {
+        /// bits the caller asked for
+        requested: u64,
+        /// bits actually left in the stream
+        available: u64,
+    },
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::BitstreamOverread { requested, available } => write!(
+                f,
+                "bitstream over-read: {requested} bits requested, {available} remaining"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
 
 /// Relative Frobenius error ||A - Â||_F / ||A||_F.
 pub fn relative_error(a: &Matrix, a_hat: &Matrix) -> f64 {
@@ -31,6 +63,13 @@ pub fn mean_residual_bound(range: f64, batch: usize) -> f64 {
 mod tests {
     use super::*;
     use crate::util::Rng;
+
+    #[test]
+    fn codec_error_displays_counts() {
+        let e = CodecError::BitstreamOverread { requested: 12, available: 3 };
+        let s = e.to_string();
+        assert!(s.contains("12") && s.contains('3'), "{s}");
+    }
 
     #[test]
     fn relative_error_zero_for_identical() {

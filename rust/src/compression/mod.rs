@@ -19,6 +19,7 @@ pub mod waterfill;
 
 pub use baselines::ScalarKind;
 pub use dropout::DropKind;
+pub use error::CodecError;
 pub use pipeline::{
     encode_downlink, encode_uplink, CodecParams, EncodedDownlink, EncodedUplink, FwqMode,
     GradMask, Scheme,

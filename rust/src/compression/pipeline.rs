@@ -187,7 +187,9 @@ pub fn decode_uplink_splitfc(
     let Scheme::SplitFc { drop, r, quant } = scheme else {
         panic!("decode_uplink_splitfc: not a SplitFc scheme");
     };
-    let mut rd = BitReader::new(&frame.payload);
+    // bit-exact fence: reading past the declared payload length is a codec
+    // bug and should fail loudly, not zero-fill from the padding byte
+    let mut rd = BitReader::with_bit_len(&frame.payload, frame.payload_bits);
     let dbar = params.dbar;
     let (kept, delta_bits): (Vec<usize>, f64) = if drop.is_some() {
         let delta: Vec<bool> = (0..dbar).map(|_| rd.read_bits(1) == 1).collect();

@@ -83,7 +83,28 @@ struct Plan {
 }
 
 fn delta_ep(a_min: f32, a_max: f32, q_ep: u64) -> f64 {
+    // Degenerate quantizers — a single shared level (Q_ep ≤ 1) or a
+    // constant/empty column set (a_max ≤ a_min) — get a 0-width interval:
+    // every endpoint code collapses to 0 and columns decode exactly to
+    // their endpoint a_min. The unguarded division produced NaN (0/0) or
+    // ±inf deltas here, which poisoned the waterfill objective.
+    if q_ep <= 1 || a_max <= a_min {
+        return 0.0;
+    }
     (a_max as f64 - a_min as f64) / (q_ep as f64 - 1.0)
+}
+
+/// Radix base for endpoint codes: `write_radix`/`read_radix` need q ≥ 2,
+/// and a degenerate Q_ep ≤ 1 only ever produces 0-codes anyway.
+fn ep_radix(q_ep: u64) -> u64 {
+    q_ep.max(2)
+}
+
+/// Bits per endpoint symbol as actually serialized — log2 of the radix base,
+/// so budget accounting (C_const, D^max, nominal bits) matches the stream
+/// even for the degenerate Q_ep ≤ 1 case (1 bit/symbol, not 0).
+fn lg_ep(q_ep: u64) -> f64 {
+    (ep_radix(q_ep) as f64).log2()
 }
 
 /// Endpoint quantizer (eq. 15-16). Floor for the minimum, ceil for the
@@ -149,7 +170,7 @@ fn plan_for_m(
     }
 
     // constant overhead C_const (eq. 17 minus the level-dependent terms)
-    let c_const = 2.0 * m as f64 * (cfg.q_ep as f64).log2() + dhat as f64 + HEADER_BITS;
+    let c_const = 2.0 * m as f64 * lg_ep(cfg.q_ep) + dhat as f64 + HEADER_BITS;
     let c_levels = cfg.c_ava - c_const;
 
     // level specs in canonical order: entries (column order), then mean
@@ -212,18 +233,18 @@ fn plan_for_m(
 /// Largest feasible M for the budget (the paper's D^max in Sec. VII):
 /// all-minimum allocation must fit: M(B + 2log2Qep - 1) ≤ C_ava - 2D̂ - 128.
 fn d_max(cfg: &FwqConfig, dhat: usize) -> usize {
-    let lg_ep = (cfg.q_ep as f64).log2();
+    let lg = lg_ep(cfg.q_ep);
     match cfg.q_fixed {
         None => {
             let num = cfg.c_ava - 2.0 * dhat as f64 - HEADER_BITS;
-            let den = cfg.batch as f64 + 2.0 * lg_ep - 1.0;
+            let den = cfg.batch as f64 + 2.0 * lg - 1.0;
             ((num / den).floor().max(0.0) as usize).min(dhat)
         }
         Some(q) => {
             // Fig. 5 formula with fixed level q
             let lq = (q.max(2) as f64).log2();
             let num = cfg.c_ava - dhat as f64 - HEADER_BITS - dhat as f64 * lq;
-            let den = cfg.batch as f64 * lq + 2.0 * lg_ep - lq;
+            let den = cfg.batch as f64 * lq + 2.0 * lg - lq;
             ((num / den).floor().max(0.0) as usize).min(dhat)
         }
     }
@@ -318,7 +339,7 @@ pub fn fwq_encode(a: &Matrix, cfg: &FwqConfig) -> (Vec<u8>, u64, FwqInfo) {
         ep_syms.push(umin);
         ep_syms.push(umax);
     }
-    w.write_radix(&ep_syms, cfg.q_ep);
+    w.write_radix(&ep_syms, ep_radix(cfg.q_ep));
 
     let d_ep = delta_ep(plan.a_min, plan.a_max, cfg.q_ep);
     let use_mean_q = cfg.use_mean && !plan.mean_cols.is_empty();
@@ -348,8 +369,7 @@ pub fn fwq_encode(a: &Matrix, cfg: &FwqConfig) -> (Vec<u8>, u64, FwqInfo) {
 
     // nominal accounting (eq. 17): 2M log2 Qep + B Σ log2 Qj
     //   + (D̂-M) log2 Q0 + D̂ + 32*4
-    let lg_ep = (cfg.q_ep as f64).log2();
-    let mut nominal = 2.0 * plan.m as f64 * lg_ep + dhat as f64 + 128.0;
+    let mut nominal = 2.0 * plan.m as f64 * lg_ep(cfg.q_ep) + dhat as f64 + 128.0;
     for (j, _) in plan.two_stage.iter().enumerate() {
         nominal += cfg.batch as f64 * (plan.levels[j] as f64).log2();
     }
@@ -401,7 +421,7 @@ pub fn fwq_decode(bytes: &[u8], cfg: &FwqConfig) -> Matrix {
     let abar_min = r.read_f32();
     let abar_max = r.read_f32();
     let is_two: Vec<bool> = (0..dhat).map(|_| r.read_bits(1) == 1).collect();
-    let ep_syms = r.read_radix(2 * m, cfg.q_ep);
+    let ep_syms = r.read_radix(2 * m, ep_radix(cfg.q_ep));
     let d_ep = delta_ep(a_min, a_max, cfg.q_ep);
 
     let two_stage: Vec<usize> = (0..dhat).filter(|&c| is_two[c]).collect();
@@ -409,7 +429,7 @@ pub fn fwq_decode(bytes: &[u8], cfg: &FwqConfig) -> Matrix {
     let mean_cols: Vec<usize> = (0..dhat).filter(|&c| !is_two[c]).collect();
 
     // re-derive the levels exactly as the encoder did
-    let c_const = 2.0 * m as f64 * (cfg.q_ep as f64).log2() + dhat as f64 + HEADER_BITS;
+    let c_const = 2.0 * m as f64 * lg_ep(cfg.q_ep) + dhat as f64 + HEADER_BITS;
     let c_levels = cfg.c_ava - c_const;
     let mut specs: Vec<LevelSpec> = (0..m)
         .map(|j| {
@@ -647,6 +667,59 @@ mod tests {
         assert_eq!(bits, 0);
         let out = fwq_decode(&bytes, &c);
         assert_eq!(out.cols, 0);
+    }
+
+    #[test]
+    fn delta_ep_degenerate_cases_are_zero_width() {
+        // q_ep == 1 used to divide by zero: (max-min)/0 = inf, 0/0 = NaN
+        assert_eq!(delta_ep(0.0, 5.0, 1), 0.0);
+        assert_eq!(delta_ep(1.0, 1.0, 1), 0.0);
+        assert_eq!(delta_ep(3.0, 3.0, 200), 0.0); // constant column set
+        assert_eq!(delta_ep(5.0, 2.0, 200), 0.0); // inverted (empty set)
+        let d = delta_ep(0.0, 199.0, 200);
+        assert!((d - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn q_ep_one_encodes_columns_as_endpoints() {
+        // Degenerate shared endpoint quantizer: frames must stay NaN-free
+        // and decode every two-stage column to a finite constant.
+        let a = hetero(8, 12, 21);
+        let mut c = cfg(8, 12, 4.0);
+        c.q_ep = 1;
+        let (bytes, bits, info) = fwq_encode(&a, &c);
+        assert!(bits > 0);
+        assert!(info.objective.is_finite(), "objective {:?}", info.objective);
+        assert!(info.nominal_bits.is_finite());
+        // accounting charges the 1-bit-per-symbol endpoint codes actually
+        // written, so the degenerate config still respects the budget
+        assert!(
+            bits as f64 <= c.c_ava * 1.02 + 256.0,
+            "bits={bits} c_ava={}",
+            c.c_ava
+        );
+        let out = fwq_decode(&bytes, &c);
+        assert_eq!((out.rows, out.cols), (8, 12));
+        assert!(out.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn constant_columns_do_not_poison_objective() {
+        // half the columns constant: ranges 0 → zero-width endpoint spans
+        let a = Matrix::from_fn(16, 20, |r, c| {
+            if c % 2 == 0 { 2.5 } else { (r as f32) * 0.1 - 0.8 }
+        });
+        let c = cfg(16, 20, 2.0);
+        let (bytes, _, info) = fwq_encode(&a, &c);
+        assert!(info.objective.is_finite());
+        let out = fwq_decode(&bytes, &c);
+        assert!(out.data.iter().all(|v| v.is_finite()));
+        // constant columns reconstruct their value (endpoint or mean path)
+        for col in (0..20).step_by(2) {
+            for r in 0..16 {
+                assert!((out.at(r, col) - 2.5).abs() < 0.2, "col {col}: {}", out.at(r, col));
+            }
+        }
     }
 
     #[test]

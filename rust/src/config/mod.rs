@@ -1,6 +1,7 @@
 //! Run configuration: scenario presets mirroring Sec. VII plus CLI overrides.
 
 use crate::compression::{DropKind, FwqMode, ScalarKind, Scheme};
+use crate::runtime::BackendKind;
 use crate::util::{Args, Json};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -16,6 +17,8 @@ pub enum PartitionKind {
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     pub preset: String,
+    /// Execution backend (native by default; pjrt needs `--features pjrt`).
+    pub backend: BackendKind,
     pub artifacts_dir: String,
     /// K — number of devices
     pub devices: usize,
@@ -48,10 +51,13 @@ impl TrainConfig {
             "mnist" => (8, 12, PartitionKind::LabelShards, 1e-3, 4096, 512),
             "cifar" => (8, 10, PartitionKind::Dirichlet, 1e-3, 2048, 256),
             "celeba" => (10, 8, PartitionKind::Writers, 1e-3, 2048, 256),
-            _ => (4, 6, PartitionKind::LabelShards, 3e-3, 512, 64),
+            // tiny: higher lr — the small native MLP learns in a handful of
+            // ADAM steps, which is what the integration tests exercise
+            _ => (4, 6, PartitionKind::LabelShards, 1e-2, 512, 64),
         };
         TrainConfig {
             preset: preset.to_string(),
+            backend: BackendKind::default(),
             artifacts_dir: "artifacts".to_string(),
             devices,
             rounds,
@@ -72,6 +78,10 @@ impl TrainConfig {
 
     /// Apply `--key value` CLI overrides.
     pub fn apply_overrides(&mut self, args: &Args) {
+        if let Some(v) = args.get("backend") {
+            self.backend = BackendKind::parse(v)
+                .unwrap_or_else(|e| panic!("{e}"));
+        }
         if let Some(v) = args.get("artifacts") {
             self.artifacts_dir = v.to_string();
         }
@@ -104,6 +114,7 @@ impl TrainConfig {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("preset", Json::str(self.preset.clone())),
+            ("backend", Json::str(self.backend.name())),
             ("devices", Json::num(self.devices as f64)),
             ("rounds", Json::num(self.rounds as f64)),
             ("seed", Json::num(self.seed as f64)),
@@ -252,5 +263,17 @@ mod tests {
         let j = c.to_json();
         assert_eq!(j.req("preset").as_str(), Some("mnist"));
         assert_eq!(j.req("devices").as_usize(), Some(8));
+        assert_eq!(j.req("backend").as_str(), Some("native"));
+    }
+
+    #[test]
+    fn backend_override_applies() {
+        let mut c = TrainConfig::for_preset("tiny");
+        assert_eq!(c.backend, BackendKind::Native);
+        let args = Args::parse(
+            &"x --backend pjrt".split_whitespace().map(String::from).collect::<Vec<_>>(),
+        );
+        c.apply_overrides(&args);
+        assert_eq!(c.backend, BackendKind::Pjrt);
     }
 }

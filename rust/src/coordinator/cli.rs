@@ -3,6 +3,7 @@
 use crate::config::TrainConfig;
 use crate::coordinator::{experiments, trainer::Trainer};
 use crate::transport::channel::vanilla_sl_transfer_time_s;
+use crate::util::error::Result;
 use crate::util::Args;
 
 const HELP: &str = "\
@@ -12,6 +13,7 @@ USAGE:
   splitfc train --preset <tiny|mnist|cifar|celeba> [--scheme S] [--r R]
                 [--up-bpe X] [--down-bpe X] [--rounds T] [--devices K]
                 [--seed N] [--eval-every E] [--metrics file.jsonl]
+                [--backend native|pjrt] [--artifacts DIR]
   splitfc experiment <fig1|fig3|fig4|fig5|table1|table2|table3|all>
                 [--presets mnist,cifar,celeba] [--rounds T] [--devices K] ...
   splitfc latency-calc [--capacity-bps 10e6 --batch 256 --dbar 8192
@@ -50,7 +52,7 @@ pub fn main() {
     }
 }
 
-fn cmd_train(args: &Args) -> anyhow::Result<()> {
+fn cmd_train(args: &Args) -> Result<()> {
     let preset = args.get_or("preset", "mnist").to_string();
     let mut cfg = TrainConfig::for_preset(&preset);
     cfg.apply_overrides(args);
@@ -66,7 +68,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+fn cmd_experiment(args: &Args) -> Result<()> {
     let id = args
         .positional
         .get(1)
@@ -75,7 +77,7 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
     experiments::run(id, args)
 }
 
-fn cmd_latency(args: &Args) -> anyhow::Result<()> {
+fn cmd_latency(args: &Args) -> Result<()> {
     // the paper's intro example by default: ~1.34e5 seconds
     let cap = args.get_f64("capacity-bps", 10e6);
     let batch = args.get_usize("batch", 256);
@@ -93,7 +95,7 @@ fn cmd_latency(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+fn cmd_inspect(args: &Args) -> Result<()> {
     let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
     let m = crate::runtime::Manifest::load(&dir)?;
     println!("manifest format {} — {} presets", m.format, m.presets.len());

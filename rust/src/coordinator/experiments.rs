@@ -5,7 +5,7 @@
 //! runs for CI; paper scales remain reachable). Results are printed as a
 //! table and appended to `results/<id>.json`.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::bench::print_table;
 use crate::config::{parse_scheme, table1_frameworks, table2_frameworks, TrainConfig};
@@ -40,8 +40,8 @@ fn run_one(cfg: TrainConfig) -> Result<(f32, f64, f64)> {
     let preset = cfg.preset.clone();
     let (batch, dbar);
     let mut tr = Trainer::new(cfg)?;
-    batch = tr.rt.preset.batch;
-    dbar = tr.rt.preset.dbar;
+    batch = tr.preset().batch;
+    dbar = tr.preset().dbar;
     let s = tr.run()?;
     let up_bpe = s.uplink_bits_per_entry(batch, dbar);
     let down_bpe = s.total_down_bits as f64 / (s.steps as f64 * (batch * dbar) as f64);
@@ -81,7 +81,7 @@ pub fn fig1(args: &Args) -> Result<()> {
     let st = column_stats(&f);
     let raw = dispersion_summary(&st.std, &st.ranges());
     // normalized ranges: per-column range / channel range
-    let chan = tr.rt.preset.chan_size;
+    let chan = tr.preset().chan_size;
     let sig2 = normalized_sigma(&st, chan);
     let (cmn, cmx) = crate::tensor::channel_min_max(&st, chan);
     let nranges: Vec<f32> = (0..f.cols)
@@ -353,6 +353,6 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
             }
             Ok(())
         }
-        other => anyhow::bail!("unknown experiment {other:?} (fig1|fig3|fig4|fig5|table1|table2|table3|all)"),
+        other => crate::bail!("unknown experiment {other:?} (fig1|fig3|fig4|fig5|table1|table2|table3|all)"),
     }
 }

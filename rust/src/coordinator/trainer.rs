@@ -2,8 +2,8 @@
 //! adaptive feature-wise compression on both links.
 //!
 //! One step (t, k):
-//!   1. device k draws a minibatch, runs `device_fwd` (PJRT) → F        (eq. 3)
-//!   2. `feature_stats` (the L1 Pallas kernel, via PJRT) → σ_norm       (eq. 10)
+//!   1. device k draws a minibatch, runs `device_fwd` → F                (eq. 3)
+//!   2. `feature_stats` (the σ-statistics kernel) → σ_norm              (eq. 10)
 //!   3. FWDP + FWQ encode → uplink frame → PS decodes F̂            (Alg. 2/3)
 //!   4. PS runs `server_fwd_bwd` → loss, ∇w_s, G = ∇_F̂ h          (eqs. 4, 5)
 //!   5. PS ADAM-steps w_s; PS drops non-kept gradient columns, FWQ-encodes,
@@ -11,13 +11,11 @@
 //!   6. device applies the chain-rule scale δ_j/(1-p_j) to Ĝ, runs
 //!      `device_bwd` → ∇w_d; the (PS-held) device ADAM steps w_d (Sec. III-A)
 //!
-//! Python never runs here: every model computation is a pre-compiled HLO
-//! artifact executed through the PJRT CPU client.
+//! Every model computation goes through the [`Backend`] trait: the pure-Rust
+//! native backend by default, or pre-compiled HLO artifacts through the PJRT
+//! CPU client under `--features pjrt`.
 
-use std::path::Path;
 use std::time::Instant;
-
-use anyhow::{Context, Result};
 
 use crate::compression::{
     encode_downlink, encode_uplink, CodecParams, DropKind, GradMask, Scheme,
@@ -27,16 +25,19 @@ use crate::coordinator::metrics::{MetricsWriter, StepRecord, TrainSummary};
 use crate::data::{
     dirichlet_partition, label_shards, writer_groups, Dataset, MiniBatchLoader, SynthSpec,
 };
+use crate::model::PresetInfo;
 use crate::optim::{Adam, Optimizer};
-use crate::runtime::{literal_to_vec_f32, matrix_to_literal, vec_to_literal, Runtime};
+use crate::runtime::{create_backend, Backend};
 use crate::tensor::Matrix;
 use crate::transport::{Direction, Link};
+use crate::util::error::{Context, Result};
 use crate::util::Rng;
-use crate::{log_debug, log_info};
+use crate::{ensure, log_debug, log_info};
 
 pub struct Trainer {
     pub cfg: TrainConfig,
-    pub rt: Runtime,
+    pub backend: Box<dyn Backend>,
+    preset: PresetInfo,
     wd: crate::model::ParamSet,
     ws: crate::model::ParamSet,
     opt_d: Adam,
@@ -61,19 +62,20 @@ fn synth_spec_for(preset: &str) -> SynthSpec {
 
 impl Trainer {
     pub fn new(cfg: TrainConfig) -> Result<Trainer> {
-        let rt = Runtime::load(Path::new(&cfg.artifacts_dir), &cfg.preset)?;
-        let (wd, ws) = rt.load_params()?;
-        anyhow::ensure!(wd.n_params() == rt.preset.nd_params);
-        anyhow::ensure!(ws.n_params() == rt.preset.ns_params);
+        let backend = create_backend(cfg.backend, &cfg.artifacts_dir, &cfg.preset)?;
+        let preset = backend.preset().clone();
+        let (wd, ws) = backend.init_params()?;
+        ensure!(wd.n_params() == preset.nd_params);
+        ensure!(ws.n_params() == preset.ns_params);
 
         let mut rng = Rng::new(cfg.seed.wrapping_mul(0x9E3779B9).wrapping_add(7));
         let spec = synth_spec_for(&cfg.preset);
         // consistency between model input shape and dataset spec
-        anyhow::ensure!(
-            spec.sample_dim() == rt.preset.sample_dim(),
+        ensure!(
+            spec.sample_dim() == preset.sample_dim(),
             "dataset spec {:?} vs model input {:?}",
             (spec.channels, spec.height, spec.width),
-            rt.preset.in_shape
+            preset.in_shape
         );
         let train = Dataset::generate(&spec, cfg.n_train, cfg.seed);
         let test = Dataset::generate(&spec, cfg.n_test, cfg.seed.wrapping_add(0xE7A1));
@@ -91,7 +93,7 @@ impl Trainer {
                     // degenerate partition (tiny runs): give it one sample
                     p.push(k % train.n);
                 }
-                MiniBatchLoader::new(p, rt.preset.batch, rng.fork(k as u64))
+                MiniBatchLoader::new(p, preset.batch, rng.fork(k as u64))
             })
             .collect();
 
@@ -102,7 +104,8 @@ impl Trainer {
         Ok(Trainer {
             rng: rng.fork(0xFFFF),
             cfg,
-            rt,
+            backend,
+            preset,
             wd,
             ws,
             opt_d,
@@ -116,20 +119,12 @@ impl Trainer {
         })
     }
 
-    fn exec(&mut self, entry: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let t0 = Instant::now();
-        let out = self.rt.exec(entry, inputs);
-        self.exec_s += t0.elapsed().as_secs_f64();
-        out
+    /// Static description of the loaded model (shapes, parameter layout).
+    pub fn preset(&self) -> &PresetInfo {
+        &self.preset
     }
 
-    fn param_literals(set: &crate::model::ParamSet) -> Result<Vec<xla::Literal>> {
-        (0..set.n_tensors())
-            .map(|i| vec_to_literal(set.tensor(i), &set.specs[i].shape))
-            .collect()
-    }
-
-    /// Does the current scheme need σ statistics (the feature_stats artifact)?
+    /// Does the current scheme need σ statistics (the feature_stats kernel)?
     fn needs_sigma(scheme: &Scheme) -> bool {
         matches!(
             scheme,
@@ -142,25 +137,21 @@ impl Trainer {
     pub fn step(&mut self, round: usize, device: usize) -> Result<StepRecord> {
         let t_step = Instant::now();
         let exec_before = self.exec_s;
-        let p = self.rt.preset.clone();
+        let p = self.preset.clone();
         let scheme = self.cfg.scheme.clone();
 
         // 1. device forward
         let (x, y, _) = self.loaders[device].next_batch(&self.train, p.classes);
-        let x_lit = vec_to_literal(&x, &[p.batch, p.in_shape[0], p.in_shape[1], p.in_shape[2]])?;
-        let y_lit = vec_to_literal(&y, &[p.batch, p.classes])?;
-        let mut inputs = Self::param_literals(&self.wd)?;
-        let f_lit_in = x_lit;
-        inputs.push(f_lit_in);
-        let outs = self.exec("device_fwd", &inputs)?;
-        let x_lit = inputs.pop().unwrap(); // reuse for device_bwd
-        let f_vec = literal_to_vec_f32(&outs[0])?;
-        let f = Matrix::from_vec(p.batch, p.dbar, f_vec);
+        let t0 = Instant::now();
+        let f = self.backend.device_fwd(&self.wd, &x)?;
+        self.exec_s += t0.elapsed().as_secs_f64();
 
-        // 2. feature statistics (L1 Pallas kernel artifact)
+        // 2. feature statistics (σ of the channel-normalized columns, eq. 10)
         let sigma: Vec<f32> = if Self::needs_sigma(&scheme) {
-            let st = self.exec("feature_stats", &[matrix_to_literal(&f)?])?;
-            literal_to_vec_f32(&st[3])?
+            let t0 = Instant::now();
+            let s = self.backend.feature_stats(&f)?;
+            self.exec_s += t0.elapsed().as_secs_f64();
+            s
         } else {
             vec![0.0; p.dbar]
         };
@@ -171,24 +162,14 @@ impl Trainer {
         self.link.transmit(Direction::Uplink, &enc.frame);
 
         // 4. server forward/backward
-        let mut s_inputs = Self::param_literals(&self.ws)?;
-        s_inputs.push(matrix_to_literal(&enc.f_hat)?);
-        s_inputs.push(y_lit);
-        let s_outs = self.exec("server_fwd_bwd", &s_inputs)?;
-        let loss = literal_to_vec_f32(&s_outs[0])?[0];
-        let correct = literal_to_vec_f32(&s_outs[1])?[0];
-        let ns = self.ws.n_tensors();
-        let mut grad_ws = Vec::with_capacity(self.ws.n_params());
-        for i in 0..ns {
-            grad_ws.extend(literal_to_vec_f32(&s_outs[2 + i])?);
-        }
-        let g_vec = literal_to_vec_f32(&s_outs[2 + ns])?;
-        let g = Matrix::from_vec(p.batch, p.dbar, g_vec);
+        let t0 = Instant::now();
+        let out = self.backend.server_fwd_bwd(&self.ws, &enc.f_hat, &y)?;
+        self.exec_s += t0.elapsed().as_secs_f64();
 
         // 5. server update + downlink compression
-        self.opt_s.step(&mut self.ws.data, &grad_ws);
+        self.opt_s.step(&mut self.ws.data, &out.grad_ws);
         let down_params = CodecParams::new(p.batch, p.dbar, self.cfg.down_bits_per_entry);
-        let dn = encode_downlink(&scheme, &g, &enc.mask, &down_params);
+        let dn = encode_downlink(&scheme, &out.g, &enc.mask, &down_params);
         self.link.transmit(Direction::Downlink, &dn.frame);
 
         // 6. device backward with the chain-rule scale (eq. 7 backward path)
@@ -200,21 +181,16 @@ impl Trainer {
                 }
             }
         }
-        let mut d_inputs = Self::param_literals(&self.wd)?;
-        d_inputs.push(x_lit);
-        d_inputs.push(matrix_to_literal(&g_hat)?);
-        let d_outs = self.exec("device_bwd", &d_inputs)?;
-        let mut grad_wd = Vec::with_capacity(self.wd.n_params());
-        for o in &d_outs {
-            grad_wd.extend(literal_to_vec_f32(o)?);
-        }
+        let t0 = Instant::now();
+        let grad_wd = self.backend.device_bwd(&self.wd, &x, &g_hat)?;
+        self.exec_s += t0.elapsed().as_secs_f64();
         self.opt_d.step(&mut self.wd.data, &grad_wd);
 
         let rec = StepRecord {
             round,
             device,
-            loss,
-            train_acc: correct / p.batch as f32,
+            loss: out.loss,
+            train_acc: out.correct / p.batch as f32,
             up_bits: enc.frame.payload_bits,
             down_bits: dn.frame.payload_bits,
             up_nominal: enc.nominal_bits,
@@ -226,9 +202,9 @@ impl Trainer {
         Ok(rec)
     }
 
-    /// Test-set accuracy via the `eval_fwd` artifact.
+    /// Test-set accuracy via the backend's full-model forward.
     pub fn evaluate(&mut self) -> Result<f32> {
-        let p = self.rt.preset.clone();
+        let p = self.preset.clone();
         let dim = p.sample_dim();
         let n_batches = (self.test.n / p.batch).max(1);
         let mut correct = 0usize;
@@ -241,14 +217,9 @@ impl Trainer {
                 x.extend_from_slice(self.test.sample(i));
                 labels.push(self.test.y[i]);
             }
-            let mut inputs = Self::param_literals(&self.wd)?;
-            inputs.extend(Self::param_literals(&self.ws)?);
-            inputs.push(vec_to_literal(
-                &x,
-                &[p.batch, p.in_shape[0], p.in_shape[1], p.in_shape[2]],
-            )?);
-            let outs = self.exec("eval_fwd", &inputs)?;
-            let logits = literal_to_vec_f32(&outs[0])?;
+            let t0 = Instant::now();
+            let logits = self.backend.eval_logits(&self.wd, &self.ws, &x)?;
+            self.exec_s += t0.elapsed().as_secs_f64();
             for (j, &lab) in labels.iter().enumerate() {
                 let row = &logits[j * p.classes..(j + 1) * p.classes];
                 let pred = row
@@ -310,15 +281,12 @@ impl Trainer {
 
     /// The features + σ stats of one fresh batch (Fig.-1 dispersion bench).
     pub fn probe_features(&mut self, device: usize) -> Result<(Matrix, Vec<f32>)> {
-        let p = self.rt.preset.clone();
+        let p = self.preset.clone();
         let (x, _, _) = self.loaders[device].next_batch(&self.train, p.classes);
-        let x_lit = vec_to_literal(&x, &[p.batch, p.in_shape[0], p.in_shape[1], p.in_shape[2]])?;
-        let mut inputs = Self::param_literals(&self.wd)?;
-        inputs.push(x_lit);
-        let outs = self.exec("device_fwd", &inputs)?;
-        let f = Matrix::from_vec(p.batch, p.dbar, literal_to_vec_f32(&outs[0])?);
-        let st = self.exec("feature_stats", &[matrix_to_literal(&f)?])?;
-        let sigma = literal_to_vec_f32(&st[3])?;
+        let t0 = Instant::now();
+        let f = self.backend.device_fwd(&self.wd, &x)?;
+        let sigma = self.backend.feature_stats(&f)?;
+        self.exec_s += t0.elapsed().as_secs_f64();
         Ok((f, sigma))
     }
 }

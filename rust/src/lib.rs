@@ -5,9 +5,14 @@
 //!   adaptive feature-wise dropout (FWDP) + quantization (FWQ) compression
 //!   pipeline over real bit-packed frames, baselines, simulated transport,
 //!   metrics, and the experiment harness for every paper table/figure.
+//! * **Execution backends (`runtime`)**: the coordinator drives the split
+//!   model through the `runtime::Backend` trait. The default is the
+//!   dependency-free pure-Rust native backend; `--features pjrt` enables
+//!   the AOT HLO-artifact path below.
 //! * **L2/L1 (build-time Python, `python/compile/`)**: the split CNN model
 //!   in JAX calling Pallas kernels, AOT-lowered to HLO text artifacts that
-//!   `runtime` loads through PJRT. Python never runs on the training path.
+//!   `runtime::pjrt` loads through PJRT. Python never runs on the training
+//!   path.
 
 pub mod bench;
 pub mod bitio;

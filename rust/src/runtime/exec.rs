@@ -1,15 +1,15 @@
-//! Literal ⇄ host-matrix conversion helpers.
+//! Literal ⇄ host-matrix conversion helpers (PJRT path only).
 
-use anyhow::Result;
-
+use crate::ensure;
 use crate::tensor::Matrix;
+use crate::util::error::{Context, Result};
 
 /// Build an f32 literal of the given logical shape from a flat slice.
 pub fn vec_to_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
     let numel: usize = shape.iter().product();
-    anyhow::ensure!(numel == data.len(), "shape/data mismatch: {shape:?} vs {}", data.len());
+    ensure!(numel == data.len(), "shape/data mismatch: {shape:?} vs {}", data.len());
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    xla::Literal::vec1(data).reshape(&dims).context("literal reshape")
 }
 
 pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
@@ -17,17 +17,17 @@ pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
 }
 
 pub fn literal_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
+    lit.to_vec::<f32>().context("literal to_vec<f32>")
 }
 
 pub fn literal_to_matrix(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
     let v = literal_to_vec_f32(lit)?;
-    anyhow::ensure!(v.len() == rows * cols, "literal size mismatch");
+    ensure!(v.len() == rows * cols, "literal size mismatch");
     Ok(Matrix::from_vec(rows, cols, v))
 }
 
 pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
     let v = literal_to_vec_f32(lit)?;
-    anyhow::ensure!(!v.is_empty(), "empty literal");
+    ensure!(!v.is_empty(), "empty literal");
     Ok(v[0])
 }

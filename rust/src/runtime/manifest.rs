@@ -3,9 +3,8 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
-
 use crate::model::PresetInfo;
+use crate::util::error::{Context, Result};
 use crate::util::Json;
 
 #[derive(Debug, Clone)]
@@ -20,7 +19,7 @@ impl Manifest {
         let text = std::fs::read_to_string(&path).with_context(|| {
             format!("{path:?} not found — run `make artifacts` first")
         })?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let j = Json::parse(&text).map_err(|e| crate::err!("{e}"))?;
         let mut presets = BTreeMap::new();
         for (name, pj) in j.req("presets").as_obj().context("presets")? {
             presets.insert(name.clone(), PresetInfo::from_json(name, pj));

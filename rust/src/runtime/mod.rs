@@ -1,105 +1,165 @@
-//! PJRT runtime bridge: load the AOT HLO-text artifacts and execute them on
-//! the hot path. Pattern follows /opt/xla-example/load_hlo — HLO *text* is
-//! the interchange format (xla_extension 0.5.1 rejects jax≥0.5 protos).
+//! Execution backends for the split model.
+//!
+//! The coordinator (Algorithm 1) drives the model exclusively through the
+//! [`Backend`] trait — the four hot-path entry points of the split protocol
+//! plus parameter init and evaluation. Two implementations:
+//!
+//! * [`native::NativeBackend`] (default): pure-Rust split MLP presets over
+//!   `tensor::Matrix` (matmul / ReLU / softmax-CE forward+backward and the
+//!   σ-statistics kernel of eq. 10). Zero external dependencies — this is
+//!   what CI and the offline build exercise.
+//! * [`pjrt::PjrtBackend`] (`--features pjrt`): loads the AOT HLO-text
+//!   artifacts produced by `python/compile` and executes them through the
+//!   PJRT CPU client (HLO *text* is the interchange format — xla_extension
+//!   0.5.1 rejects jax≥0.5 protos).
 
-pub mod exec;
 pub mod manifest;
+pub mod native;
 
-pub use exec::{literal_to_vec_f32, matrix_to_literal, vec_to_literal};
+#[cfg(feature = "pjrt")]
+pub mod exec;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
 pub use manifest::Manifest;
+pub use native::NativeBackend;
 
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
-
-use anyhow::{Context, Result};
+#[cfg(feature = "pjrt")]
+pub use exec::{literal_to_matrix, literal_to_vec_f32, matrix_to_literal, vec_to_literal};
+#[cfg(feature = "pjrt")]
+pub use pjrt::{PjrtBackend, Runtime};
 
 use crate::model::{ParamSet, PresetInfo};
-use crate::model::params::f32_from_le_bytes;
+use crate::tensor::Matrix;
+use crate::util::error::Result;
 
-pub struct Module {
-    exe: xla::PjRtLoadedExecutable,
-    pub num_inputs: usize,
-    pub num_outputs: usize,
+/// Which execution backend a run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-Rust split MLP presets (offline default).
+    #[default]
+    Native,
+    /// PJRT execution of AOT HLO artifacts (requires `--features pjrt`).
+    Pjrt,
 }
 
-/// A loaded preset: PJRT client + one compiled executable per entry point.
-pub struct Runtime {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    pub preset: PresetInfo,
-    pub dir: PathBuf,
-    modules: BTreeMap<String, Module>,
-}
-
-impl Runtime {
-    /// Load `artifacts/<preset>/*` and compile every entry point.
-    pub fn load(artifacts_dir: &Path, preset_name: &str) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let preset = manifest
-            .presets
-            .get(preset_name)
-            .with_context(|| format!("preset {preset_name:?} not in manifest"))?
-            .clone();
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        let mut modules = BTreeMap::new();
-        for (name, entry) in &preset.entries {
-            let path = artifacts_dir.join(&entry.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 path")?,
-            )
-            .with_context(|| format!("parse HLO text {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compile {name}"))?;
-            modules.insert(
-                name.clone(),
-                Module { exe, num_inputs: entry.num_inputs, num_outputs: entry.num_outputs },
-            );
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => Err(crate::err!("unknown backend {other:?} (native|pjrt)")),
         }
-        Ok(Runtime { client, preset, dir: artifacts_dir.to_path_buf(), modules })
     }
 
-    pub fn has_entry(&self, name: &str) -> bool {
-        self.modules.contains_key(name)
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Everything the parameter server produces in one forward/backward pass
+/// (paper eqs. 4-5): scalar loss and batch-correct count, the flat gradient
+/// of the server-side parameters, and the intermediate gradient G = ∇_F̂ h
+/// that travels back over the downlink.
+#[derive(Debug, Clone)]
+pub struct ServerOutput {
+    pub loss: f32,
+    pub correct: f32,
+    pub grad_ws: Vec<f32>,
+    /// B × D̄ gradient w.r.t. the (reconstructed) feature matrix.
+    pub g: Matrix,
+}
+
+/// One execution backend: the five model entry points of the split protocol.
+///
+/// `x` is a flat NCHW batch (`batch * C*H*W` floats), `y` a flat one-hot
+/// label matrix (`batch * classes`); parameter sets use the layout declared
+/// by [`PresetInfo::device_params`] / [`PresetInfo::server_params`].
+pub trait Backend {
+    /// Static description of the loaded preset (shapes, param layout).
+    fn preset(&self) -> &PresetInfo;
+
+    /// Initial (device-side, server-side) parameters. Deterministic per
+    /// preset so runs are reproducible from the config seed alone.
+    fn init_params(&self) -> Result<(ParamSet, ParamSet)>;
+
+    /// Device sub-model forward: x → F (B × D̄, eq. 3).
+    fn device_fwd(&mut self, wd: &ParamSet, x: &[f32]) -> Result<Matrix>;
+
+    /// Per-column σ of the channel-normalized features (eq. 10) — the
+    /// statistics kernel FWDP consumes.
+    fn feature_stats(&mut self, f: &Matrix) -> Result<Vec<f32>>;
+
+    /// Server sub-model forward + backward on the reconstructed features
+    /// (eqs. 4-5): loss, correct count, ∇w_s, and G = ∇_F̂ h.
+    fn server_fwd_bwd(&mut self, ws: &ParamSet, f_hat: &Matrix, y: &[f32]) -> Result<ServerOutput>;
+
+    /// Device sub-model backward from the (decoded, chain-rule-scaled)
+    /// gradient Ĝ: returns the flat ∇w_d.
+    fn device_bwd(&mut self, wd: &ParamSet, x: &[f32], g_hat: &Matrix) -> Result<Vec<f32>>;
+
+    /// Full-model forward for evaluation: logits (batch * classes).
+    fn eval_logits(&mut self, wd: &ParamSet, ws: &ParamSet, x: &[f32]) -> Result<Vec<f32>>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Build the backend a config asks for. `artifacts_dir` is only consulted by
+/// the PJRT path; the native backend is self-contained.
+pub fn create_backend(
+    kind: BackendKind,
+    artifacts_dir: &str,
+    preset: &str,
+) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Native => Ok(Box::new(NativeBackend::for_preset(preset)?)),
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => Ok(Box::new(PjrtBackend::load(
+            std::path::Path::new(artifacts_dir),
+            preset,
+        )?)),
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => {
+            let _ = artifacts_dir;
+            Err(crate::err!(
+                "backend 'pjrt' requires building with `--features pjrt` \
+                 (this binary was built with the native backend only)"
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parse_and_name() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::default().name(), "native");
     }
 
-    /// Execute an entry point. Inputs must match the manifest arity; outputs
-    /// are the flattened tuple elements (aot.py lowers with return_tuple).
-    pub fn exec(&self, entry: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let m = self
-            .modules
-            .get(entry)
-            .with_context(|| format!("unknown entry {entry:?}"))?;
-        anyhow::ensure!(
-            inputs.len() == m.num_inputs,
-            "entry {entry}: got {} inputs, manifest says {}",
-            inputs.len(),
-            m.num_inputs
-        );
-        let result = m.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        anyhow::ensure!(
-            outs.len() == m.num_outputs,
-            "entry {entry}: got {} outputs, manifest says {}",
-            outs.len(),
-            m.num_outputs
-        );
-        Ok(outs)
+    #[test]
+    fn create_native_backend_for_all_presets() {
+        for preset in ["tiny", "mnist", "cifar", "celeba"] {
+            let b = create_backend(BackendKind::Native, "artifacts", preset).unwrap();
+            assert_eq!(b.preset().name, preset);
+            assert_eq!(b.name(), "native");
+        }
     }
 
-    /// Load the initial parameters (device-side, server-side) from params.bin.
-    pub fn load_params(&self) -> Result<(ParamSet, ParamSet)> {
-        let blob = std::fs::read(self.dir.join(&self.preset.params_file))?;
-        let floats = f32_from_le_bytes(&blob);
-        anyhow::ensure!(
-            floats.len() == self.preset.nd_params + self.preset.ns_params,
-            "params.bin size mismatch"
-        );
-        let (d, s) = floats.split_at(self.preset.nd_params);
-        Ok((
-            ParamSet::new(self.preset.device_params.clone(), d.to_vec()),
-            ParamSet::new(self.preset.server_params.clone(), s.to_vec()),
-        ))
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_errors_without_feature() {
+        // (no unwrap_err: Box<dyn Backend> has no Debug impl)
+        match create_backend(BackendKind::Pjrt, "artifacts", "tiny") {
+            Err(e) => assert!(e.to_string().contains("pjrt")),
+            Ok(_) => panic!("expected an error without the pjrt feature"),
+        }
     }
 }

@@ -1,0 +1,208 @@
+//! PJRT runtime bridge: load the AOT HLO-text artifacts and execute them on
+//! the hot path. Pattern follows /opt/xla-example/load_hlo — HLO *text* is
+//! the interchange format (xla_extension 0.5.1 rejects jax≥0.5 protos).
+//!
+//! Compiled only under `--features pjrt`. Offline builds link the
+//! API-compatible stub in `third_party/xla-stub`; swap in a real xla-rs
+//! checkout to actually execute (README.md).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::ensure;
+use crate::model::{ParamSet, PresetInfo};
+use crate::model::params::f32_from_le_bytes;
+use crate::runtime::exec::{literal_to_vec_f32, matrix_to_literal, vec_to_literal};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::{Backend, ServerOutput};
+use crate::tensor::Matrix;
+use crate::util::error::{Context, Result};
+
+pub struct Module {
+    exe: xla::PjRtLoadedExecutable,
+    pub num_inputs: usize,
+    pub num_outputs: usize,
+}
+
+/// A loaded preset: PJRT client + one compiled executable per entry point.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pub preset: PresetInfo,
+    pub dir: PathBuf,
+    modules: BTreeMap<String, Module>,
+}
+
+impl Runtime {
+    /// Load `artifacts/<preset>/*` and compile every entry point.
+    pub fn load(artifacts_dir: &Path, preset_name: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let preset = manifest
+            .presets
+            .get(preset_name)
+            .with_context(|| format!("preset {preset_name:?} not in manifest"))?
+            .clone();
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let mut modules = BTreeMap::new();
+        for (name, entry) in &preset.entries {
+            let path = artifacts_dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile {name}"))?;
+            modules.insert(
+                name.clone(),
+                Module { exe, num_inputs: entry.num_inputs, num_outputs: entry.num_outputs },
+            );
+        }
+        Ok(Runtime { client, preset, dir: artifacts_dir.to_path_buf(), modules })
+    }
+
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.modules.contains_key(name)
+    }
+
+    /// Execute an entry point. Inputs must match the manifest arity; outputs
+    /// are the flattened tuple elements (aot.py lowers with return_tuple).
+    pub fn exec(&self, entry: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let m = self
+            .modules
+            .get(entry)
+            .with_context(|| format!("unknown entry {entry:?}"))?;
+        ensure!(
+            inputs.len() == m.num_inputs,
+            "entry {entry}: got {} inputs, manifest says {}",
+            inputs.len(),
+            m.num_inputs
+        );
+        let result = m
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {entry}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("{entry}: device->host transfer"))?;
+        let outs = lit
+            .to_tuple()
+            .with_context(|| format!("{entry}: untuple outputs"))?;
+        ensure!(
+            outs.len() == m.num_outputs,
+            "entry {entry}: got {} outputs, manifest says {}",
+            outs.len(),
+            m.num_outputs
+        );
+        Ok(outs)
+    }
+
+    /// Load the initial parameters (device-side, server-side) from params.bin.
+    pub fn load_params(&self) -> Result<(ParamSet, ParamSet)> {
+        let blob = std::fs::read(self.dir.join(&self.preset.params_file))?;
+        let floats = f32_from_le_bytes(&blob);
+        ensure!(
+            floats.len() == self.preset.nd_params + self.preset.ns_params,
+            "params.bin size mismatch"
+        );
+        let (d, s) = floats.split_at(self.preset.nd_params);
+        Ok((
+            ParamSet::new(self.preset.device_params.clone(), d.to_vec()),
+            ParamSet::new(self.preset.server_params.clone(), s.to_vec()),
+        ))
+    }
+}
+
+/// [`Backend`] implementation over a loaded PJRT [`Runtime`]: each protocol
+/// entry point maps to one compiled HLO artifact.
+pub struct PjrtBackend {
+    rt: Runtime,
+}
+
+impl PjrtBackend {
+    pub fn load(artifacts_dir: &Path, preset: &str) -> Result<PjrtBackend> {
+        Ok(PjrtBackend { rt: Runtime::load(artifacts_dir, preset)? })
+    }
+
+    /// Direct access to the underlying runtime (artifact tooling, tests).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    fn param_literals(set: &ParamSet) -> Result<Vec<xla::Literal>> {
+        (0..set.n_tensors())
+            .map(|i| vec_to_literal(set.tensor(i), &set.specs[i].shape))
+            .collect()
+    }
+
+    fn input_literal(&self, x: &[f32]) -> Result<xla::Literal> {
+        let p = &self.rt.preset;
+        vec_to_literal(x, &[p.batch, p.in_shape[0], p.in_shape[1], p.in_shape[2]])
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn preset(&self) -> &PresetInfo {
+        &self.rt.preset
+    }
+
+    fn init_params(&self) -> Result<(ParamSet, ParamSet)> {
+        self.rt.load_params()
+    }
+
+    fn device_fwd(&mut self, wd: &ParamSet, x: &[f32]) -> Result<Matrix> {
+        let mut inputs = Self::param_literals(wd)?;
+        inputs.push(self.input_literal(x)?);
+        let outs = self.rt.exec("device_fwd", &inputs)?;
+        let p = &self.rt.preset;
+        Ok(Matrix::from_vec(p.batch, p.dbar, literal_to_vec_f32(&outs[0])?))
+    }
+
+    fn feature_stats(&mut self, f: &Matrix) -> Result<Vec<f32>> {
+        // the L1 Pallas kernel artifact: outputs (min, max, mean, σ_norm)
+        let outs = self.rt.exec("feature_stats", &[matrix_to_literal(f)?])?;
+        literal_to_vec_f32(&outs[3])
+    }
+
+    fn server_fwd_bwd(&mut self, ws: &ParamSet, f_hat: &Matrix, y: &[f32]) -> Result<ServerOutput> {
+        let p = self.rt.preset.clone();
+        let mut inputs = Self::param_literals(ws)?;
+        inputs.push(matrix_to_literal(f_hat)?);
+        inputs.push(vec_to_literal(y, &[p.batch, p.classes])?);
+        let outs = self.rt.exec("server_fwd_bwd", &inputs)?;
+        let loss = literal_to_vec_f32(&outs[0])?[0];
+        let correct = literal_to_vec_f32(&outs[1])?[0];
+        let ns = ws.n_tensors();
+        let mut grad_ws = Vec::with_capacity(ws.n_params());
+        for i in 0..ns {
+            grad_ws.extend(literal_to_vec_f32(&outs[2 + i])?);
+        }
+        let g = Matrix::from_vec(p.batch, p.dbar, literal_to_vec_f32(&outs[2 + ns])?);
+        Ok(ServerOutput { loss, correct, grad_ws, g })
+    }
+
+    fn device_bwd(&mut self, wd: &ParamSet, x: &[f32], g_hat: &Matrix) -> Result<Vec<f32>> {
+        let mut inputs = Self::param_literals(wd)?;
+        inputs.push(self.input_literal(x)?);
+        inputs.push(matrix_to_literal(g_hat)?);
+        let outs = self.rt.exec("device_bwd", &inputs)?;
+        let mut grad = Vec::with_capacity(wd.n_params());
+        for o in &outs {
+            grad.extend(literal_to_vec_f32(o)?);
+        }
+        Ok(grad)
+    }
+
+    fn eval_logits(&mut self, wd: &ParamSet, ws: &ParamSet, x: &[f32]) -> Result<Vec<f32>> {
+        let mut inputs = Self::param_literals(wd)?;
+        inputs.extend(Self::param_literals(ws)?);
+        inputs.push(self.input_literal(x)?);
+        let outs = self.rt.exec("eval_fwd", &inputs)?;
+        literal_to_vec_f32(&outs[0])
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

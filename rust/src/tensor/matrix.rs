@@ -91,6 +91,114 @@ impl Matrix {
         out
     }
 
+    /// Dense product `self · other` (self: n×m, other: m×p → n×p).
+    ///
+    /// ikj loop order: the inner loop streams one row of `other` against one
+    /// output row, so every access is contiguous and autovectorizes — this is
+    /// the hot kernel of the native execution backend.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul: {}x{} · {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let p = other.cols;
+        let mut out = Matrix::zeros(self.rows, p);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * p..(i + 1) * p];
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[k * p..(k + 1) * p];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += aik * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transposed-left product `selfᵀ · other` (self: n×m, other: n×p → m×p)
+    /// without materializing the transpose — the gradient-accumulation shape
+    /// (`Xᵀ·dZ`) of the native backward pass.
+    pub fn matmul_tn(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_tn: {}x{} vs {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let p = other.cols;
+        let mut out = Matrix::zeros(self.cols, p);
+        for r in 0..self.rows {
+            let arow = self.row(r);
+            let brow = other.row(r);
+            for (i, &ai) in arow.iter().enumerate() {
+                if ai == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * p..(i + 1) * p];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += ai * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transposed-right product `self · otherᵀ` (self: n×m, other: p×m → n×p)
+    /// — the activation-gradient shape (`dZ·Wᵀ`) of the backward pass; both
+    /// operands are read row-contiguously.
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt: {}x{} vs {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let p = other.rows;
+        let mut out = Matrix::zeros(self.rows, p);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * p..(i + 1) * p];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = other.row(j);
+                *o = arow.iter().zip(brow).map(|(&a, &b)| a * b).sum();
+            }
+        }
+        out
+    }
+
+    /// Add `v` to every row (broadcast bias add). `v.len() == cols`.
+    pub fn add_row_vec(&mut self, v: &[f32]) {
+        assert_eq!(v.len(), self.cols);
+        for r in 0..self.rows {
+            let row = &mut self.data[r * self.cols..(r + 1) * self.cols];
+            for (x, &b) in row.iter_mut().zip(v) {
+                *x += b;
+            }
+        }
+    }
+
+    /// In-place ReLU.
+    pub fn relu_inplace(&mut self) {
+        for v in &mut self.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// Zero every entry where the same-position entry of `pre` is ≤ 0 — the
+    /// ReLU backward mask (`pre` is the pre-activation matrix).
+    pub fn relu_mask(&mut self, pre: &Matrix) {
+        assert_eq!((self.rows, self.cols), (pre.rows, pre.cols));
+        for (v, &z) in self.data.iter_mut().zip(&pre.data) {
+            if z <= 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// Column sums (the bias-gradient reduction).
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            for (o, &v) in out.iter_mut().zip(self.row(r)) {
+                *o += v;
+            }
+        }
+        out
+    }
+
     /// Squared Frobenius distance to `other`.
     pub fn sq_dist(&self, other: &Matrix) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
@@ -167,5 +275,68 @@ mod tests {
     #[should_panic]
     fn from_vec_shape_checked() {
         Matrix::from_vec(2, 2, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        // [1 2; 3 4] · [5 6; 7 8] = [19 22; 43 50]
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(a.matmul(&b).data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular_matches_naive() {
+        let a = Matrix::from_fn(3, 5, |r, c| (r * 5 + c) as f32 * 0.5 - 3.0);
+        let b = Matrix::from_fn(5, 4, |r, c| ((r * 4 + c) % 7) as f32 - 2.0);
+        let got = a.matmul(&b);
+        assert_eq!((got.rows, got.cols), (3, 4));
+        for i in 0..3 {
+            for j in 0..4 {
+                let naive: f32 = (0..5).map(|k| a.at(i, k) * b.at(k, j)).sum();
+                assert!((got.at(i, j) - naive).abs() < 1e-4, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_tn_equals_transpose_then_matmul() {
+        let a = Matrix::from_fn(4, 3, |r, c| (r + 2 * c) as f32 - 2.0);
+        let b = Matrix::from_fn(4, 5, |r, c| (r * c) as f32 * 0.1 + 1.0);
+        let at = Matrix::from_fn(3, 4, |r, c| a.at(c, r));
+        let want = at.matmul(&b);
+        let got = a.matmul_tn(&b);
+        assert_eq!((got.rows, got.cols), (3, 5));
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_nt_equals_matmul_with_transpose() {
+        let a = Matrix::from_fn(2, 4, |r, c| (r * 4 + c) as f32);
+        let b = Matrix::from_fn(3, 4, |r, c| (c as f32 - r as f32) * 0.5);
+        let bt = Matrix::from_fn(4, 3, |r, c| b.at(c, r));
+        let want = a.matmul(&bt);
+        let got = a.matmul_nt(&b);
+        assert_eq!((got.rows, got.cols), (2, 3));
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn bias_relu_mask_and_colsums() {
+        let mut a = Matrix::from_vec(2, 3, vec![1.0, -2.0, 0.5, -1.0, 3.0, -0.5]);
+        a.add_row_vec(&[0.0, 1.0, -0.5]);
+        assert_eq!(a.data, vec![1.0, -1.0, 0.0, -1.0, 4.0, -1.0]);
+        let pre = a.clone();
+        a.relu_inplace();
+        assert_eq!(a.data, vec![1.0, 0.0, 0.0, 0.0, 4.0, 0.0]);
+        let mut g = Matrix::from_vec(2, 3, vec![1.0; 6]);
+        g.relu_mask(&pre);
+        // pre > 0 only at (0,0) and (1,1)
+        assert_eq!(g.data, vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0]);
+        assert_eq!(g.col_sums(), vec![1.0, 1.0, 0.0]);
     }
 }

@@ -1,0 +1,147 @@
+//! Crate-wide error substrate (the offline registry has no `anyhow`).
+//!
+//! A single string-backed error type plus the ergonomics the coordinator
+//! layers actually use: `Result<T>`, a `Context` extension trait for
+//! `Result`/`Option`, and the `err!` / `bail!` / `ensure!` macros. Contexts
+//! chain outermost-first, so `{e}` prints `outer: inner: root cause` just
+//! like `anyhow`'s `{e:#}`.
+
+use std::fmt;
+
+/// String-backed error with pre-rendered context chain.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error { msg }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow`-style context attachment for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T>;
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.to_string()))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(Error::msg("root cause"))
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: root cause");
+        let e = fails().with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "step 3: root cause");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(7u32).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn inner(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(inner(3).unwrap(), 3);
+        assert_eq!(inner(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(inner(5).unwrap_err().to_string(), "five is right out");
+        assert_eq!(err!("n={}", 2).to_string(), "n=2");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> Result<Vec<u8>> {
+            Ok(std::fs::read("/nonexistent-path-xyz")?)
+        }
+        assert!(read().is_err());
+    }
+}

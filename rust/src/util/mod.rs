@@ -1,10 +1,12 @@
-//! Dependency-free substrates: PRNG, JSON, CLI parsing, logging.
+//! Dependency-free substrates: PRNG, JSON, CLI parsing, logging, errors.
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod logging;
 pub mod rng;
 
 pub use cli::Args;
+pub use error::{Context, Error, Result};
 pub use json::Json;
 pub use rng::Rng;

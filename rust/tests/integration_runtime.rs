@@ -1,5 +1,7 @@
 //! Integration: the python->HLO->PJRT->rust contract, over the real `tiny`
-//! artifacts (built by `make artifacts`).
+//! artifacts (built by `make artifacts`). This test target only exists under
+//! `--features pjrt` (see `required-features` in Cargo.toml) and needs a
+//! real xla crate patched in place of `third_party/xla-stub`.
 
 use std::path::{Path, PathBuf};
 

@@ -1,4 +1,7 @@
-//! Integration: the full Algorithm-1 coordinator over the `tiny` artifacts.
+//! Integration: the full Algorithm-1 coordinator over the `tiny` preset on
+//! the default (native) execution backend — no artifacts or external deps.
+//! The same suite drives the PJRT backend when built with `--features pjrt`
+//! and `cfg.backend = BackendKind::Pjrt`.
 
 use splitfc::compression::{DropKind, FwqMode, Scheme};
 use splitfc::config::TrainConfig;
@@ -37,7 +40,7 @@ fn splitfc_budget_respected_per_step() {
     cfg.up_bits_per_entry = 1.0;
     cfg.down_bits_per_entry = 2.0;
     let mut tr = Trainer::new(cfg).unwrap();
-    let p = tr.rt.preset.clone();
+    let p = tr.preset().clone();
     for t in 1..=3 {
         let rec = tr.step(t, 0).unwrap();
         let budget_up = 1.0 * (p.batch * p.dbar) as f64;
@@ -118,7 +121,7 @@ fn downlink_compression_couples_to_dropout() {
     cfg.up_bits_per_entry = 32.0;
     cfg.down_bits_per_entry = 32.0;
     let mut tr = Trainer::new(cfg).unwrap();
-    let p = tr.rt.preset.clone();
+    let p = tr.preset().clone();
     let full = 32 * p.batch * p.dbar;
     let mut total = 0u64;
     let n = 6;
@@ -152,8 +155,8 @@ fn eval_history_and_metrics_written() {
 fn probe_features_exposes_dispersion() {
     let mut tr = Trainer::new(base_cfg()).unwrap();
     let (f, sigma) = tr.probe_features(0).unwrap();
-    assert_eq!(f.rows, tr.rt.preset.batch);
-    assert_eq!(sigma.len(), tr.rt.preset.dbar);
+    assert_eq!(f.rows, tr.preset().batch);
+    assert_eq!(sigma.len(), tr.preset().dbar);
     // paper's Fig.-1 premise: dispersion varies across columns
     let mx = sigma.iter().cloned().fold(0.0f32, f32::max);
     let mn = sigma.iter().cloned().fold(f32::INFINITY, f32::min);

@@ -1,0 +1,213 @@
+//! Property tests (via `splitfc::testkit`) for the degenerate FWQ inputs the
+//! paper's Algorithm 3 must survive — constant columns (zero range),
+//! single-row batches, D̂ below the candidate-set size, and the no-mean
+//! ablation — plus a write/read fuzz loop over the bitio substrate with
+//! checked over-read detection.
+
+use splitfc::bitio::{BitReader, BitWriter};
+use splitfc::compression::{fwq_decode, fwq_encode, FwqConfig};
+use splitfc::tensor::Matrix;
+use splitfc::testkit::{assert_prop, ParamSpace};
+use splitfc::util::Rng;
+
+/// Matrix where ~`pct`% of columns are constant and the rest mix scales.
+fn degenerate_matrix(b: usize, d: usize, pct: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let constants: Vec<Option<f32>> = (0..d)
+        .map(|c| {
+            if rng.gen_range(100) < pct {
+                Some(c as f32 * 0.5 - 1.0)
+            } else {
+                None
+            }
+        })
+        .collect();
+    Matrix::from_fn(b, d, |_, c| match constants[c] {
+        Some(v) => v,
+        None => [4.0, 0.7, 0.02][c % 3] * rng.normal_f32(0.0, 1.0) + c as f32 * 0.1,
+    })
+}
+
+/// Encode → decode invariants every FWQ frame must satisfy, however
+/// degenerate the input: shape preserved, everything finite, M* in range,
+/// and measured bits within the budget (+ the fixed-header slack that
+/// dominates at tiny B·D̂).
+fn check_roundtrip(a: &Matrix, cfg: &FwqConfig) -> Result<(), String> {
+    let (bytes, bits, info) = fwq_encode(a, cfg);
+    if !info.objective.is_finite() {
+        return Err(format!("objective not finite: {}", info.objective));
+    }
+    if !info.nominal_bits.is_finite() {
+        return Err(format!("nominal bits not finite: {}", info.nominal_bits));
+    }
+    if info.m_star > a.cols {
+        return Err(format!("M*={} > D̂={}", info.m_star, a.cols));
+    }
+    let header_slack = 760.0 + a.cols as f64;
+    if bits as f64 > cfg.c_ava * 1.15 + header_slack {
+        return Err(format!("bits {bits} vs budget {}", cfg.c_ava));
+    }
+    let out = fwq_decode(&bytes, cfg);
+    if (out.rows, out.cols) != (a.rows, a.cols) {
+        return Err(format!("shape {:?} vs {:?}", (out.rows, out.cols), (a.rows, a.cols)));
+    }
+    if out.data.iter().any(|v| !v.is_finite()) {
+        return Err("non-finite reconstruction".into());
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_fwq_constant_columns_roundtrip() {
+    // params: [batch, dhat, pct_constant, bpe_x10, seed]
+    let space = ParamSpace::new(&[(2, 24), (1, 48), (0, 100), (5, 40), (0, 500)]);
+    assert_prop("fwq_constant_cols", 31, 60, &space, |p| {
+        let (b, d, pct, bpe, seed) = (p[0], p[1], p[2], p[3] as f64 / 10.0, p[4] as u64);
+        let a = degenerate_matrix(b, d, pct, seed);
+        let cfg = FwqConfig::paper_default(b, bpe * (b * d) as f64);
+        check_roundtrip(&a, &cfg)
+    });
+}
+
+#[test]
+fn prop_fwq_single_row_batch() {
+    // B = 1: every column has zero range (min == max) — the all-degenerate
+    // regime that used to produce zero-width / NaN endpoint intervals.
+    let space = ParamSpace::new(&[(1, 64), (5, 40), (0, 400)]);
+    assert_prop("fwq_single_row", 37, 80, &space, |p| {
+        let (d, bpe, seed) = (p[0], p[1] as f64 / 10.0, p[2] as u64);
+        let a = degenerate_matrix(1, d, 30, seed);
+        let cfg = FwqConfig::paper_default(1, bpe * d as f64);
+        check_roundtrip(&a, &cfg)
+    });
+}
+
+#[test]
+fn prop_fwq_dhat_below_candidate_set() {
+    // D̂ < N (the paper's candidate count 10): the M-scan must still produce
+    // a valid plan from a candidate set smaller than N.
+    let space = ParamSpace::new(&[(2, 16), (1, 9), (5, 60), (0, 400)]);
+    assert_prop("fwq_small_dhat", 41, 80, &space, |p| {
+        let (b, d, bpe, seed) = (p[0], p[1], p[2] as f64 / 10.0, p[3] as u64);
+        let a = degenerate_matrix(b, d, 20, seed);
+        let mut cfg = FwqConfig::paper_default(b, bpe * (b * d) as f64);
+        assert!(d < cfg.n_candidates);
+        cfg.n_candidates = 10;
+        check_roundtrip(&a, &cfg)
+    });
+}
+
+#[test]
+fn prop_fwq_no_mean_ablation() {
+    // use_mean = false (ablation Case 3): columns beyond M* are not
+    // transmitted and must reconstruct as exact zeros.
+    let space = ParamSpace::new(&[(2, 16), (1, 40), (5, 40), (0, 400)]);
+    assert_prop("fwq_no_mean", 43, 60, &space, |p| {
+        let (b, d, bpe, seed) = (p[0], p[1], p[2] as f64 / 10.0, p[3] as u64);
+        let a = degenerate_matrix(b, d, 25, seed);
+        let mut cfg = FwqConfig::paper_default(b, bpe * (b * d) as f64);
+        cfg.use_mean = false;
+        check_roundtrip(&a, &cfg)?;
+        let (bytes, _, info) = fwq_encode(&a, &cfg);
+        if info.q0.is_some() {
+            return Err("no-mean mode reported a mean quantizer".into());
+        }
+        let out = fwq_decode(&bytes, &cfg);
+        let zero_cols = (0..d)
+            .filter(|&c| (0..b).all(|r| out.at(r, c) == 0.0))
+            .count();
+        if zero_cols < d - info.m_star {
+            return Err(format!(
+                "untransmitted columns leaked: {zero_cols} zero cols, M*={} of D̂={d}",
+                info.m_star
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// One recorded write, so the fuzz loop can replay reads in order.
+enum Op {
+    Bits(u64, u32),
+    F32(f32),
+    U32(u32),
+    Radix(Vec<u64>, u64),
+}
+
+#[test]
+fn prop_bitio_fuzz_write_read_loop() {
+    // params: [n_ops, seed]
+    let space = ParamSpace::new(&[(1, 60), (0, 2000)]);
+    assert_prop("bitio_fuzz", 47, 120, &space, |p| {
+        let (n_ops, seed) = (p[0], p[1] as u64);
+        let mut rng = Rng::new(seed ^ 0xB17F);
+        let mut w = BitWriter::new();
+        let mut ops = Vec::with_capacity(n_ops);
+        for _ in 0..n_ops {
+            match rng.gen_range(4) {
+                0 => {
+                    let nbits = 1 + rng.gen_range(64) as u32;
+                    let v = rng.next_u64()
+                        & if nbits == 64 { u64::MAX } else { (1u64 << nbits) - 1 };
+                    w.write_bits(v, nbits);
+                    ops.push(Op::Bits(v, nbits));
+                }
+                1 => {
+                    let v = rng.normal_f32(0.0, 100.0);
+                    w.write_f32(v);
+                    ops.push(Op::F32(v));
+                }
+                2 => {
+                    let v = rng.next_u64() as u32;
+                    w.write_u32(v);
+                    ops.push(Op::U32(v));
+                }
+                _ => {
+                    let q = 2 + rng.gen_range(999) as u64;
+                    let n = rng.gen_range(50);
+                    let syms: Vec<u64> = (0..n).map(|_| rng.next_u64() % q).collect();
+                    w.write_radix(&syms, q);
+                    ops.push(Op::Radix(syms, q));
+                }
+            }
+        }
+        let bits = w.bit_len();
+        let buf = w.into_bytes();
+        let mut r = BitReader::with_bit_len(&buf, bits);
+        for (i, op) in ops.iter().enumerate() {
+            match op {
+                Op::Bits(v, nbits) => {
+                    let got = r.try_read_bits(*nbits).map_err(|e| format!("op {i}: {e}"))?;
+                    if got != *v {
+                        return Err(format!("op {i}: bits {got} != {v}"));
+                    }
+                }
+                Op::F32(v) => {
+                    if r.read_f32().to_bits() != v.to_bits() {
+                        return Err(format!("op {i}: f32 mismatch"));
+                    }
+                }
+                Op::U32(v) => {
+                    if r.read_u32() != *v {
+                        return Err(format!("op {i}: u32 mismatch"));
+                    }
+                }
+                Op::Radix(syms, q) => {
+                    let got =
+                        r.try_read_radix(syms.len(), *q).map_err(|e| format!("op {i}: {e}"))?;
+                    if &got != syms {
+                        return Err(format!("op {i}: radix mismatch"));
+                    }
+                }
+            }
+        }
+        // stream fully consumed: one more bit must be a checked over-read
+        if r.bits_remaining() != 0 {
+            return Err(format!("{} bits left over", r.bits_remaining()));
+        }
+        if r.try_read_bits(1).is_ok() {
+            return Err("over-read past the end succeeded".into());
+        }
+        Ok(())
+    });
+}

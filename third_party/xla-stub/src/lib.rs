@@ -1,0 +1,104 @@
+//! Offline API stub for the `xla` crate (xla-rs / xla_extension 0.5.x).
+//!
+//! The offline registry cannot resolve the real crate, so this stub mirrors
+//! exactly the API surface `splitfc::runtime::pjrt` uses. It makes
+//! `cargo build --features pjrt` type-check without network or a local XLA
+//! install; every method panics with a pointer to the real dependency if it
+//! is actually called. To execute HLO artifacts for real, point the `xla`
+//! path dependency in the workspace `Cargo.toml` at a checkout of xla-rs
+//! (or add a `[patch]` entry) — the signatures below match.
+
+const STUB_MSG: &str =
+    "xla stub: the real xla-rs/PJRT crate is not linked. Point the `xla` path \
+     dependency at a real checkout to execute HLO artifacts (see README.md), \
+     or run on the default native backend instead.";
+
+/// Error type mirroring `xla::Error` (only `Display` is relied upon).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "xla error: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host-side literal (tensor) handle.
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        unimplemented!("{STUB_MSG}")
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unimplemented!("{STUB_MSG}")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unimplemented!("{STUB_MSG}")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unimplemented!("{STUB_MSG}")
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unimplemented!("{STUB_MSG}")
+    }
+}
+
+/// A computation ready for PJRT compilation.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        unimplemented!("{STUB_MSG}")
+    }
+}
+
+/// Device-side buffer returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unimplemented!("{STUB_MSG}")
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unimplemented!("{STUB_MSG}")
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unimplemented!("{STUB_MSG}")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unimplemented!("{STUB_MSG}")
+    }
+}
