@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # CI gate for the default (offline, zero-dependency) feature set:
-#   1. release build        2. test suite        3. clippy, warnings fatal
+#   1. release build   2. test suite   3. pjrt-stub check   4. bench smoke
+#   5. clippy, warnings fatal
 #
 # Usage: ./ci.sh            (SKIP_CLIPPY=1 to skip the lint step, e.g. on
 #                            toolchains without the clippy component)
@@ -13,6 +14,14 @@ cargo build --release
 
 echo "==> cargo test -q"
 cargo test -q
+
+echo "==> cargo check --features pjrt --all-targets"
+# the stub-gated PJRT path must keep compiling even though CI never runs it
+cargo check --features pjrt --all-targets
+
+echo "==> bench smoke (THREADS=2, quick): BENCH_fwq.json / BENCH_e2e.json"
+THREADS=2 cargo bench --bench bench_compression -- --quick
+THREADS=2 cargo bench --bench bench_e2e_step -- --quick
 
 if [ "${SKIP_CLIPPY:-0}" = "1" ]; then
     echo "==> clippy skipped (SKIP_CLIPPY=1)"

@@ -1,49 +1,67 @@
 //! Hot-path microbenchmarks: the FWDP/FWQ codec and every baseline on an
-//! MNIST-shaped intermediate matrix (B=64, Dbar=1152). This is the L3
-//! perf gate: codec throughput must far exceed the simulated link rate so
-//! the coordinator is never the bottleneck (DESIGN.md §Perf).
+//! MNIST-shaped intermediate matrix (B=64, Dbar=1152), plus the paper-scale
+//! FWQ encode (B=64, D̄=8192 — the Sec. VII regime) measured serial vs
+//! threaded. This is the L3 perf gate: codec throughput must far exceed the
+//! simulated link rate so the coordinator is never the bottleneck
+//! (DESIGN.md §Perf).
+//!
+//! The paper-scale section writes `BENCH_fwq.json` (ns/op for `threads = 1`
+//! and the configured pool, speedup, M*, bits) — the repo's perf-trajectory
+//! record. Thread count comes from `THREADS=<n>` or `-- --threads <n>`
+//! (0/unset = one worker per core); `-- --quick` shortens the run for CI
+//! smoke.
 
 use splitfc::bench::{Bencher, BenchStats};
 use splitfc::compression::{
-    encode_downlink, encode_uplink, CodecParams, DropKind, FwqMode, ScalarKind, Scheme,
+    encode_downlink, encode_uplink, fwq_encode, CodecParams, DropKind, FwqConfig, FwqMode,
+    ScalarKind, Scheme,
 };
 use splitfc::tensor::{column_stats, normalized_sigma, Matrix};
-use splitfc::util::Rng;
+use splitfc::testkit::hetero_matrix;
+use splitfc::util::{par, Args, Json, Rng};
 
 fn main() {
+    let args = Args::from_env();
+    let quick = args.has_flag("quick");
+    let threads_req = par::thread_request(args.get_usize("threads", 0));
+    par::set_threads(threads_req);
+    let bench = if quick { Bencher::quick() } else { Bencher::default() };
+
     let (b, d) = (64usize, 1152usize);
-    let mut rng = Rng::new(3);
-    let f = Matrix::from_fn(b, d, |_, c| {
-        let scale = [4.0, 1.0, 0.2, 0.02, 0.0][c % 5];
-        scale * rng.normal_f32(0.0, 1.0) + (c % 13) as f32 * 0.1
-    });
+    let f = hetero_matrix(b, d, 3);
     let sigma = normalized_sigma(&column_stats(&f), 36);
     let entries = (b * d) as f64;
 
-    let bench = Bencher::default();
     let mut all: Vec<BenchStats> = Vec::new();
-    let schemes: Vec<(&str, Scheme, f64)> = vec![
-        ("uplink/vanilla-dump", Scheme::Vanilla, 32.0),
-        ("uplink/splitfc-R16@0.2", Scheme::splitfc(16.0), 0.2),
-        ("uplink/splitfc-R8@0.4", Scheme::splitfc(8.0), 0.4),
-        (
-            "uplink/splitfc-ad-only",
-            Scheme::SplitFc { drop: Some(DropKind::Adaptive), r: 16.0, quant: FwqMode::NoQuant },
-            32.0,
-        ),
-        (
-            "uplink/ad+eq@0.2",
-            Scheme::SplitFc {
-                drop: Some(DropKind::Adaptive),
-                r: 16.0,
-                quant: FwqMode::Scalar(ScalarKind::Eq),
-            },
-            0.2,
-        ),
-        ("uplink/tops@0.2", Scheme::TopS { theta: 0.0, quant: None }, 0.2),
-        ("uplink/randtops@0.2", Scheme::TopS { theta: 0.2, quant: None }, 0.2),
-        ("uplink/fedlite@0.2", Scheme::FedLite { num_subvectors: 16 }, 0.2),
-    ];
+    let schemes: Vec<(&str, Scheme, f64)> = if quick {
+        vec![
+            ("uplink/vanilla-dump", Scheme::Vanilla, 32.0),
+            ("uplink/splitfc-R16@0.2", Scheme::splitfc(16.0), 0.2),
+        ]
+    } else {
+        vec![
+            ("uplink/vanilla-dump", Scheme::Vanilla, 32.0),
+            ("uplink/splitfc-R16@0.2", Scheme::splitfc(16.0), 0.2),
+            ("uplink/splitfc-R8@0.4", Scheme::splitfc(8.0), 0.4),
+            (
+                "uplink/splitfc-ad-only",
+                Scheme::SplitFc { drop: Some(DropKind::Adaptive), r: 16.0, quant: FwqMode::NoQuant },
+                32.0,
+            ),
+            (
+                "uplink/ad+eq@0.2",
+                Scheme::SplitFc {
+                    drop: Some(DropKind::Adaptive),
+                    r: 16.0,
+                    quant: FwqMode::Scalar(ScalarKind::Eq),
+                },
+                0.2,
+            ),
+            ("uplink/tops@0.2", Scheme::TopS { theta: 0.0, quant: None }, 0.2),
+            ("uplink/randtops@0.2", Scheme::TopS { theta: 0.2, quant: None }, 0.2),
+            ("uplink/fedlite@0.2", Scheme::FedLite { num_subvectors: 16 }, 0.2),
+        ]
+    };
     for (name, scheme, bpe) in &schemes {
         let params = CodecParams::new(b, d, *bpe);
         let mut rng = Rng::new(11);
@@ -80,4 +98,51 @@ fn main() {
         saved * 1e3,
         100.0 * splitfc.p50_s / saved
     );
+
+    fwq_paper_scale(&bench, threads_req);
+}
+
+/// FWQ at the paper's D̄ = 8192 scale: serial baseline vs the thread pool,
+/// with a byte-identity cross-check, recorded to BENCH_fwq.json.
+fn fwq_paper_scale(bench: &Bencher, threads_req: usize) {
+    let (b, d) = (64usize, 8192usize);
+    let a = hetero_matrix(b, d, 42);
+    let cfg = FwqConfig::paper_default(b, 0.2 * (b * d) as f64);
+
+    par::set_threads(1);
+    let st1 = bench.run("fwq/B=64,D=8192,0.2bpe/threads=1", || fwq_encode(&a, &cfg).1);
+    println!("{}", st1.report());
+    let (bytes_serial, _, _) = fwq_encode(&a, &cfg);
+
+    par::set_threads(threads_req);
+    let tn = par::threads();
+    let stn = bench.run(&format!("fwq/B=64,D=8192,0.2bpe/threads={tn}"), || {
+        fwq_encode(&a, &cfg).1
+    });
+    println!("{}", stn.report());
+    let (bytes_threaded, bits, info) = fwq_encode(&a, &cfg);
+    let identical = bytes_serial == bytes_threaded;
+
+    let speedup = st1.p50_s / stn.p50_s;
+    println!(
+        "fwq paper scale: {:.2}x speedup with {tn} threads, M*={}, {} bits, \
+         bitstream byte-identical to serial: {identical}",
+        speedup, info.m_star, bits
+    );
+
+    let j = Json::obj(vec![
+        ("bench", Json::str("fwq_encode")),
+        ("batch", Json::num(b as f64)),
+        ("dbar", Json::num(d as f64)),
+        ("bits_per_entry_budget", Json::num(0.2)),
+        ("threads", Json::num(tn as f64)),
+        ("serial_ns_per_op", Json::num(st1.p50_s * 1e9)),
+        ("threaded_ns_per_op", Json::num(stn.p50_s * 1e9)),
+        ("speedup", Json::num(speedup)),
+        ("m_star", Json::num(info.m_star as f64)),
+        ("bits", Json::num(bits as f64)),
+        ("byte_identical_vs_serial", Json::Bool(identical)),
+    ]);
+    std::fs::write("BENCH_fwq.json", j.to_string_pretty()).expect("write BENCH_fwq.json");
+    println!("[saved BENCH_fwq.json]");
 }

@@ -1,27 +1,126 @@
 //! End-to-end step latency: one full (t, k) protocol step (device_fwd ->
 //! stats -> FWDP/FWQ -> server_fwd_bwd -> downlink -> device_bwd -> ADAM)
-//! through the PJRT runtime, per preset and scheme. Requires artifacts.
+//! per preset and scheme, measured with `threads = 1` and with the
+//! configured pool, plus a micro-comparison of the blocked matmul kernels
+//! against the pre-blocking scalar references.
+//!
+//! Writes `BENCH_e2e.json` (per-config ns/op serial vs threaded + the
+//! kernel micro numbers) — the e2e leg of the repo's perf trajectory.
+//! `THREADS=<n>` / `-- --threads <n>` size the pool (0/unset = auto);
+//! `-- --quick` shortens the run for CI smoke.
 
 use splitfc::bench::Bencher;
 use splitfc::config::{parse_scheme, TrainConfig};
 use splitfc::coordinator::Trainer;
+use splitfc::tensor::Matrix;
+use splitfc::util::{par, Args, Json, Rng};
+
+fn step_p50(bench: &Bencher, preset: &str, scheme: &str, bpe: f64, threads: usize) -> splitfc::util::Result<f64> {
+    let mut cfg = TrainConfig::for_preset(preset);
+    cfg.scheme = parse_scheme(scheme, 16.0);
+    cfg.up_bits_per_entry = bpe;
+    cfg.down_bits_per_entry = 32.0;
+    cfg.threads = threads;
+    // set the pool explicitly: cfg.threads = 0 means "leave the pool alone",
+    // but this bench really does want auto in that case
+    par::set_threads(threads);
+    let mut tr = Trainer::new(cfg)?;
+    let tn = par::threads();
+    let mut t = 0usize;
+    let st = bench.run(&format!("step/{preset}/{scheme}/threads={tn}"), || {
+        t += 1;
+        tr.step(t, t % 2).expect("step")
+    });
+    println!("{}", st.report());
+    Ok(st.p50_s)
+}
+
+/// Blocked+threaded kernels vs the pre-blocking scalar references on the
+/// mnist device-forward shape — the pure-kernel leg of the speedup story.
+fn matmul_micro(bench: &Bencher, threads_req: usize) -> Vec<(&'static str, f64, f64)> {
+    let (n, m, p) = (32usize, 784usize, 1152usize);
+    let mut rng = Rng::new(9);
+    // ~half zeros, like post-ReLU activations (the regime the old kernel's
+    // zero-skip branch targeted)
+    let a = Matrix::from_fn(n, m, |_, _| {
+        let v = rng.normal_f32(0.0, 1.0);
+        if v < 0.0 {
+            0.0
+        } else {
+            v
+        }
+    });
+    let b = Matrix::from_fn(m, p, |_, _| rng.normal_f32(0.0, 0.1));
+    let bt = Matrix::from_fn(p, m, |r, c| b.at(c, r));
+    par::set_threads(threads_req);
+    let mut out = Vec::new();
+    let ref_s = bench.run("matmul_ref/32x784x1152", || a.matmul_ref(&b)).p50_s;
+    let new_s = bench.run("matmul/32x784x1152", || a.matmul(&b)).p50_s;
+    out.push(("matmul", ref_s, new_s));
+    let ref_s = bench.run("matmul_nt_ref/32x784x1152", || a.matmul_nt_ref(&bt)).p50_s;
+    let new_s = bench.run("matmul_nt/32x784x1152", || a.matmul_nt(&bt)).p50_s;
+    out.push(("matmul_nt", ref_s, new_s));
+    for (name, r, nw) in &out {
+        println!("{name}: scalar ref p50 {:.3}ms vs blocked+threaded {:.3}ms ({:.2}x)",
+            r * 1e3, nw * 1e3, r / nw);
+    }
+    out
+}
 
 fn main() -> splitfc::util::Result<()> {
-    let bench = Bencher { min_time_s: 2.0, warmup_s: 0.3, max_iters: 200 };
-    for preset in ["tiny", "mnist"] {
-        for (scheme, bpe) in [("vanilla", 32.0), ("splitfc", 0.2), ("tops", 0.2)] {
-            let mut cfg = TrainConfig::for_preset(preset);
-            cfg.scheme = parse_scheme(scheme, 16.0);
-            cfg.up_bits_per_entry = bpe;
-            cfg.down_bits_per_entry = 32.0;
-            let mut tr = Trainer::new(cfg)?;
-            let mut t = 0usize;
-            let st = bench.run(&format!("step/{preset}/{scheme}"), || {
-                t += 1;
-                tr.step(t, t % 2).expect("step")
-            });
-            println!("{}", st.report());
+    let args = Args::from_env();
+    let quick = args.has_flag("quick");
+    let threads_req = par::thread_request(args.get_usize("threads", 0));
+    let bench = if quick {
+        Bencher::quick()
+    } else {
+        Bencher { min_time_s: 2.0, warmup_s: 0.3, max_iters: 200 }
+    };
+
+    let presets: &[&str] = if quick { &["tiny"] } else { &["tiny", "mnist"] };
+    let schemes: &[(&str, f64)] = if quick {
+        &[("splitfc", 0.2)]
+    } else {
+        &[("vanilla", 32.0), ("splitfc", 0.2), ("tops", 0.2)]
+    };
+
+    let mut rows: Vec<Json> = Vec::new();
+    for preset in presets {
+        for (scheme, bpe) in schemes {
+            let serial = step_p50(&bench, preset, scheme, *bpe, 1)?;
+            let threaded = step_p50(&bench, preset, scheme, *bpe, threads_req)?;
+            let tn = par::threads();
+            rows.push(Json::obj(vec![
+                ("preset", Json::str(*preset)),
+                ("scheme", Json::str(*scheme)),
+                ("threads", Json::num(tn as f64)),
+                ("serial_ns_per_op", Json::num(serial * 1e9)),
+                ("threaded_ns_per_op", Json::num(threaded * 1e9)),
+                ("speedup", Json::num(serial / threaded)),
+            ]));
         }
     }
+
+    let micro = matmul_micro(&bench, threads_req);
+    let micro_json: Vec<Json> = micro
+        .iter()
+        .map(|(name, r, nw)| {
+            Json::obj(vec![
+                ("kernel", Json::str(*name)),
+                ("scalar_ref_ns_per_op", Json::num(r * 1e9)),
+                ("blocked_ns_per_op", Json::num(nw * 1e9)),
+                ("speedup", Json::num(r / nw)),
+            ])
+        })
+        .collect();
+
+    let j = Json::obj(vec![
+        ("bench", Json::str("e2e_step")),
+        ("threads", Json::num(par::threads() as f64)),
+        ("steps", Json::Arr(rows)),
+        ("matmul_micro_32x784x1152", Json::Arr(micro_json)),
+    ]);
+    std::fs::write("BENCH_e2e.json", j.to_string_pretty()).expect("write BENCH_e2e.json");
+    println!("[saved BENCH_e2e.json]");
     Ok(())
 }

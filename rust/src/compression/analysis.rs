@@ -21,7 +21,7 @@ pub fn remark1_downlink_bits(batch: usize, dbar: usize, r: f64) -> f64 {
 /// Σ_i p_i/(1-p_i)·||f_i||² — identical to the dropout MSE of eq. (13).
 pub fn eq14_error_term(f: &Matrix, p: &[f64]) -> f64 {
     let col_sq: Vec<f64> = (0..f.cols)
-        .map(|c| (0..f.rows).map(|r| (f.at(r, c) as f64).powi(2)).sum())
+        .map(|c| f.col_iter(c).map(|v| (v as f64).powi(2)).sum())
         .collect();
     dropout_mse(p, &col_sq)
 }
@@ -35,13 +35,13 @@ pub fn empirical_dropout_mse(f: &Matrix, p: &[f64], trials: usize, rng: &mut Rng
         for c in 0..f.cols {
             if mask[c] {
                 let s = 1.0 / (1.0 - p[c]);
-                for r in 0..f.rows {
-                    let d = (s - 1.0) * f.at(r, c) as f64;
+                for v in f.col_iter(c) {
+                    let d = (s - 1.0) * v as f64;
                     err += d * d;
                 }
             } else {
-                for r in 0..f.rows {
-                    err += (f.at(r, c) as f64).powi(2);
+                for v in f.col_iter(c) {
+                    err += (v as f64).powi(2);
                 }
             }
         }

@@ -224,13 +224,9 @@ pub fn decode_uplink_splitfc(
 }
 
 fn apply_dropout(f: &Matrix, plan: &DropoutPlan) -> Matrix {
-    let mut ft = f.gather_cols(&plan.kept);
-    for (j, &s) in plan.scale.iter().enumerate() {
-        if s != 1.0 {
-            ft.scale_col(j, s);
-        }
-    }
-    ft
+    // gather + 1/(1-p_j) rescale fused into one row-major pass (no strided
+    // per-column sweeps on the uplink hot path)
+    f.gather_cols_scaled(&plan.kept, &plan.scale)
 }
 
 /// Uplink: compress the intermediate feature matrix F at the device.

@@ -18,6 +18,7 @@
 use crate::bitio::{BitReader, BitWriter};
 use crate::compression::waterfill::{self, LevelSpec};
 use crate::tensor::{column_stats, Matrix};
+use crate::util::par;
 
 /// Shared FWQ configuration — identical at device and PS.
 #[derive(Debug, Clone)]
@@ -252,6 +253,13 @@ fn d_max(cfg: &FwqConfig, dhat: usize) -> usize {
 
 /// Algorithm 3: scan the candidate set in descending order of M with the
 /// early-stop rule, returning the best plan.
+///
+/// The candidates are planned **speculatively in parallel** (each
+/// `plan_for_m` is a pure function of the shared stats), then the serial
+/// early-stop rule (Alg. 3 l.12-21) is replayed over the results in
+/// descending-M order. The selected plan — and therefore the emitted
+/// bitstream — is identical to a sequential scan; plans past the stop point
+/// are simply discarded.
 fn search_m(
     cfg: &FwqConfig,
     order: &[usize],
@@ -271,30 +279,49 @@ fn search_m(
     candidates.push(0); // pure mean-value fallback is always feasible-ish
     candidates.sort_unstable();
     candidates.dedup();
+    candidates.reverse(); // descending M, the order Alg. 3 scans
 
-    let mut best: Option<Plan> = None;
-    let mut prev_obj = f64::INFINITY;
-    let mut tried = 0;
-    // descending scan + stop when the objective turns worse (Alg. 3 l.12-21)
-    for &m in candidates.iter().rev() {
-        let Some(p) = plan_for_m(cfg, order, mins, maxs, means, m) else {
-            continue;
-        };
-        tried += 1;
-        let obj = p.objective;
-        if best.as_ref().map(|b| obj < b.objective).unwrap_or(true) {
-            best = Some(p);
+    // The early-stop merge (Alg. 3 l.12-21) over descending-M plan results.
+    // Lazy input iterators stop *planning* at the early stop, exactly like
+    // the pre-parallel encoder.
+    fn scan(plans: impl IntoIterator<Item = Option<Plan>>) -> (Option<Plan>, usize) {
+        let mut best: Option<Plan> = None;
+        let mut prev_obj = f64::INFINITY;
+        let mut tried = 0;
+        for p in plans {
+            let Some(p) = p else { continue };
+            tried += 1;
+            let obj = p.objective;
+            if best.as_ref().map(|b| obj < b.objective).unwrap_or(true) {
+                best = Some(p);
+            }
+            if obj > prev_obj {
+                break; // early stop
+            }
+            prev_obj = obj;
         }
-        if obj > prev_obj {
-            break; // early stop
-        }
-        prev_obj = obj;
+        (best, tried)
     }
-    let best = best.unwrap_or_else(|| {
-        // degenerate budget: transmit means only at Q0 = 2 (or nothing)
-        plan_for_m(cfg, order, mins, maxs, means, 0)
-            .expect("M = 0 plan must always construct")
-    });
+
+    // Speculate only when the pool will actually run the candidates
+    // concurrently; on one worker, or below ~256 columns where a plan costs
+    // microseconds, the lazy serial scan (with its genuine early stop and no
+    // thread spawns) is strictly better. Even at 2 workers speculation
+    // breaks even: plan cost scales with M, and the serial early stop
+    // typically still pays for the few *largest* candidates (ΣM over all
+    // candidates ≈ 5.5·M_max, so wall ≈ ΣM/workers vs ≈ 2-3·M_max serially).
+    let (best, tried) = if dhat >= 256 && par::threads() > 1 {
+        scan(par::par_map_idx(candidates.len(), 1, |i| {
+            plan_for_m(cfg, order, mins, maxs, means, candidates[i])
+        }))
+    } else {
+        scan(candidates.iter().map(|&m| plan_for_m(cfg, order, mins, maxs, means, m)))
+    };
+    // the scan set always contains M = 0, and the M = 0 plan always
+    // constructs (the degenerate-budget fallback inside `plan_for_m`), so
+    // the scan cannot come back empty: an early stop implies at least one
+    // plan succeeded first. No second `plan_for_m` call is needed.
+    let best = best.expect("candidate scan includes M = 0, which always constructs");
     (best, tried)
 }
 
@@ -356,15 +383,24 @@ pub fn fwq_encode(a: &Matrix, cfg: &FwqConfig) -> (Vec<u8>, u64, FwqInfo) {
             .collect();
         w.write_radix(&syms, q0v);
     }
-    // entry codes per two-stage column
-    for (j, &c) in plan.two_stage.iter().enumerate() {
+    // entry codes per two-stage column: symbol computation fans out over the
+    // pool (strided col_iter, no per-column Vec<f32> copy); serialization
+    // stays sequential in column order, so the stream is byte-identical to a
+    // single-threaded encode.
+    // ≥ ~8k quantizations per claimed chunk so small frames stay inline
+    let cols_per_chunk = (8192 / cfg.batch.max(1)).max(1);
+    let col_syms: Vec<Vec<u64>> = par::par_map_idx(plan.two_stage.len(), cols_per_chunk, |j| {
+        let c = plan.two_stage[j];
         let (umin, umax) = plan.ep_codes[j];
         let lo = plan.a_min as f64 + umin as f64 * d_ep;
         let span = (umax - umin) as f64 * d_ep;
         let qj = plan.levels[j];
-        let col = a.col(c);
-        let syms: Vec<u64> = col.iter().map(|&v| quant_code(v as f64, lo, span, qj)).collect();
-        w.write_radix(&syms, qj);
+        a.col_iter(c)
+            .map(|v| quant_code(v as f64, lo, span, qj))
+            .collect()
+    });
+    for (syms, &qj) in col_syms.iter().zip(&plan.levels) {
+        w.write_radix(syms, qj);
     }
 
     // nominal accounting (eq. 17): 2M log2 Qep + B Σ log2 Qj
@@ -721,6 +757,24 @@ mod tests {
             }
         }
     }
+
+    #[test]
+    fn degenerate_budget_lands_on_the_scanned_m0_plan() {
+        // budget below even the header: every M > 0 candidate is infeasible,
+        // so the scan must fall through to the M = 0 plan it already built
+        let a = hetero(8, 16, 30);
+        let c = FwqConfig::paper_default(8, 10.0);
+        let (bytes, bits, info) = fwq_encode(&a, &c);
+        assert_eq!(info.m_star, 0);
+        assert!(bits > 0);
+        let out = fwq_decode(&bytes, &c);
+        assert_eq!((out.rows, out.cols), (8, 16));
+        assert!(out.data.iter().all(|v| v.is_finite()));
+    }
+
+    // (byte-identity of threaded vs serial encodes — including wide and
+    // degenerate inputs past every parallelism gate — is covered by
+    // rust/tests/prop_parallel.rs)
 
     #[test]
     fn radix_bits_helper_sane() {

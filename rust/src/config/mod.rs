@@ -40,6 +40,9 @@ pub struct TrainConfig {
     pub link_latency_s: f64,
     /// metrics JSONL output ("" = none)
     pub metrics_path: String,
+    /// worker threads for the parallel runtime; 0 = unset (the pool is left
+    /// as configured, which defaults to one worker per available core)
+    pub threads: usize,
 }
 
 impl TrainConfig {
@@ -73,6 +76,7 @@ impl TrainConfig {
             link_capacity_bps: 10e6,
             link_latency_s: 0.0,
             metrics_path: String::new(),
+            threads: 0,
         }
     }
 
@@ -95,6 +99,7 @@ impl TrainConfig {
         self.n_test = args.get_usize("n-test", self.n_test);
         self.eval_every = args.get_usize("eval-every", self.eval_every);
         self.link_capacity_bps = args.get_f64("capacity-bps", self.link_capacity_bps);
+        self.threads = args.get_usize("threads", self.threads);
         if let Some(v) = args.get("metrics") {
             self.metrics_path = v.to_string();
         }
@@ -124,6 +129,7 @@ impl TrainConfig {
             ("scheme", Json::str(self.scheme.name())),
             ("n_train", Json::num(self.n_train as f64)),
             ("n_test", Json::num(self.n_test as f64)),
+            ("threads", Json::num(self.threads as f64)),
         ])
     }
 }
@@ -228,7 +234,7 @@ mod tests {
     fn overrides_apply() {
         let mut c = TrainConfig::for_preset("tiny");
         let args = Args::parse(
-            &"x --rounds 3 --devices 2 --scheme splitfc --r 8 --up-bpe 0.2"
+            &"x --rounds 3 --devices 2 --scheme splitfc --r 8 --up-bpe 0.2 --threads 3"
                 .split_whitespace()
                 .map(String::from)
                 .collect::<Vec<_>>(),
@@ -238,6 +244,7 @@ mod tests {
         assert_eq!(c.devices, 2);
         assert_eq!(c.up_bits_per_entry, 0.2);
         assert_eq!(c.scheme, Scheme::splitfc(8.0));
+        assert_eq!(c.threads, 3);
     }
 
     #[test]

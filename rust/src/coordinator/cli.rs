@@ -13,9 +13,10 @@ USAGE:
   splitfc train --preset <tiny|mnist|cifar|celeba> [--scheme S] [--r R]
                 [--up-bpe X] [--down-bpe X] [--rounds T] [--devices K]
                 [--seed N] [--eval-every E] [--metrics file.jsonl]
-                [--backend native|pjrt] [--artifacts DIR]
+                [--backend native|pjrt] [--artifacts DIR] [--threads N]
   splitfc experiment <fig1|fig3|fig4|fig5|table1|table2|table3|all>
-                [--presets mnist,cifar,celeba] [--rounds T] [--devices K] ...
+                [--presets mnist,cifar,celeba] [--rounds T] [--devices K]
+                [--threads N] ...
   splitfc latency-calc [--capacity-bps 10e6 --batch 256 --dbar 8192
                 --iters 100 --devices 100]
   splitfc inspect [--artifacts artifacts]
@@ -31,6 +32,12 @@ pub fn main() {
     let args = Args::from_env();
     if args.has_flag("debug") {
         crate::util::logging::set_level(3);
+    }
+    // size the parallel runtime up front when --threads is given (configs
+    // re-apply the same value through TrainConfig::apply_overrides); the
+    // untouched default is one worker per core
+    if args.get("threads").is_some() {
+        crate::util::par::set_threads(args.get_usize("threads", 0));
     }
     let code = match args.subcommand() {
         Some("train") => cmd_train(&args),

@@ -339,6 +339,11 @@ pub fn table3(args: &Args) -> Result<()> {
 
 /// Dispatch by experiment id.
 pub fn run(id: &str, args: &Args) -> Result<()> {
+    // honor an explicit --threads for library callers too (the CLI already
+    // set it); without the flag, leave the process-global pool alone
+    if args.get("threads").is_some() {
+        crate::util::par::set_threads(args.get_usize("threads", 0));
+    }
     match id {
         "fig1" => fig1(args),
         "fig3" => fig3(args),

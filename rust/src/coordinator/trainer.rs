@@ -62,6 +62,12 @@ fn synth_spec_for(preset: &str) -> SynthSpec {
 
 impl Trainer {
     pub fn new(cfg: TrainConfig) -> Result<Trainer> {
+        // size the parallel runtime (matmul blocks, FWQ planning) for this
+        // run; 0 = unset, which leaves the process-global pool alone (auto
+        // by default) so library callers' explicit set_threads survives
+        if cfg.threads > 0 {
+            crate::util::par::set_threads(cfg.threads);
+        }
         let backend = create_backend(cfg.backend, &cfg.artifacts_dir, &cfg.preset)?;
         let preset = backend.preset().clone();
         let (wd, ws) = backend.init_params()?;
@@ -175,11 +181,7 @@ impl Trainer {
         // 6. device backward with the chain-rule scale (eq. 7 backward path)
         let mut g_hat = dn.g_hat;
         if let GradMask::Columns { kept, scale } = &enc.mask {
-            for (j, &c) in kept.iter().enumerate() {
-                if scale[j] != 1.0 {
-                    g_hat.scale_col(c, scale[j]);
-                }
-            }
+            g_hat.scale_cols(kept, scale);
         }
         let t0 = Instant::now();
         let grad_wd = self.backend.device_bwd(&self.wd, &x, &g_hat)?;

@@ -1,5 +1,43 @@
 //! Row-major f32 matrix — the host-side representation of the paper's
 //! intermediate feature/gradient matrices (`B x Dbar`, eq. 3 / eq. 5).
+//!
+//! The three matmul shapes (`A·B`, `Aᵀ·B`, `A·Bᵀ`) are the hot kernels of
+//! the native execution backend. They are register-blocked (4-row/4-column
+//! micro-kernels), cache-tiled over the shared dimension, and parallelized
+//! over output row blocks through `util::par`. Serial (`threads = 1`) and
+//! threaded runs execute the identical kernel on identical blocks, so
+//! results are bit-identical across thread counts. The pre-blocking scalar
+//! loops survive as `*_ref` — the correctness oracle for the property tests
+//! and the serial baseline the perf benches measure against.
+
+use crate::util::par;
+
+/// Rows of the left operand per register micro-kernel.
+const MR: usize = 4;
+/// Tile over the shared (reduction) dimension — keeps the streamed rows of
+/// the right operand resident in cache across one row block.
+const KC: usize = 256;
+/// Multiply-adds below which a matmul runs as a single block on the calling
+/// thread. The pool spawns fresh scoped threads per call (~tens of µs), so
+/// only kernels in the ≳0.5 ms range are worth fanning out; the mnist-scale
+/// shapes (≈5-30 M madds) clear this easily, the tiny preset never does.
+const PAR_WORK_MIN: usize = 1 << 20;
+
+/// Output-rows-per-chunk for a `rows`-row result with `work` total madds:
+/// one chunk (serial) for small problems, else ~4 chunks per worker capped
+/// at 32 rows so the claimed block stays cache-sized.
+fn block_rows(rows: usize, work: usize) -> usize {
+    if work < PAR_WORK_MIN {
+        return rows.max(1);
+    }
+    let target = 4 * par::threads();
+    let rb = (rows + target - 1) / target;
+    // round up to a multiple of MR so the register micro-kernel runs on
+    // full blocks even when many workers shrink the chunk (tail rows then
+    // exist only in the final chunk)
+    let rb = ((rb + MR - 1) / MR) * MR;
+    rb.clamp(1, 32.min(rows.max(1)))
+}
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
@@ -47,7 +85,16 @@ impl Matrix {
 
     /// Copy out column `c` (row-major storage makes columns strided).
     pub fn col(&self, c: usize) -> Vec<f32> {
-        (0..self.rows).map(|r| self.at(r, c)).collect()
+        self.col_iter(c).collect()
+    }
+
+    /// Strided iterator over column `c` — the allocation-free way to walk a
+    /// column on hot paths (the FWQ entry-code loop, column-energy sums).
+    #[inline]
+    pub fn col_iter(&self, c: usize) -> impl Iterator<Item = f32> + '_ {
+        debug_assert!(c < self.cols);
+        // skip (not slicing) so an empty matrix yields an empty iterator
+        self.data.iter().skip(c).step_by(self.cols.max(1)).copied()
     }
 
     pub fn set_col(&mut self, c: usize, vals: &[f32]) {
@@ -59,8 +106,23 @@ impl Matrix {
 
     /// Multiply column `c` in place by `s`.
     pub fn scale_col(&mut self, c: usize, s: f32) {
+        debug_assert!(c < self.cols);
+        let stride = self.cols.max(1);
+        for v in self.data.iter_mut().skip(c).step_by(stride) {
+            *v *= s;
+        }
+    }
+
+    /// Multiply each column `idx[j]` in place by `scale[j]` — one row-major
+    /// pass instead of `idx.len()` strided `scale_col` sweeps (the downlink
+    /// chain-rule rescale of eq. 7).
+    pub fn scale_cols(&mut self, idx: &[usize], scale: &[f32]) {
+        assert_eq!(idx.len(), scale.len());
         for r in 0..self.rows {
-            *self.at_mut(r, c) *= s;
+            let row = &mut self.data[r * self.cols..(r + 1) * self.cols];
+            for (&c, &s) in idx.iter().zip(scale) {
+                row[c] *= s;
+            }
         }
     }
 
@@ -72,6 +134,21 @@ impl Matrix {
             let dst = &mut out.data[r * idx.len()..(r + 1) * idx.len()];
             for (j, &c) in idx.iter().enumerate() {
                 dst[j] = src[c];
+            }
+        }
+        out
+    }
+
+    /// `gather_cols` fused with a per-kept-column scale — the FWDP encode
+    /// path (gather kept columns, apply 1/(1-p_j)) in a single pass.
+    pub fn gather_cols_scaled(&self, idx: &[usize], scale: &[f32]) -> Matrix {
+        assert_eq!(idx.len(), scale.len());
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for r in 0..self.rows {
+            let src = self.row(r);
+            let dst = &mut out.data[r * idx.len()..(r + 1) * idx.len()];
+            for (j, (&c, &s)) in idx.iter().zip(scale).enumerate() {
+                dst[j] = src[c] * s;
             }
         }
         out
@@ -93,11 +170,72 @@ impl Matrix {
 
     /// Dense product `self · other` (self: n×m, other: m×p → n×p).
     ///
-    /// ikj loop order: the inner loop streams one row of `other` against one
-    /// output row, so every access is contiguous and autovectorizes — this is
-    /// the hot kernel of the native execution backend.
+    /// Register-blocked (4 output rows share each streamed row of `other`),
+    /// tiled over the shared dimension, parallelized over output row blocks.
+    /// Each output element still accumulates its k-terms in ascending order,
+    /// so the result is bit-identical for any thread count.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul: {}x{} · {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let (n, m, p) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(n, p);
+        if n == 0 || m == 0 || p == 0 {
+            return out;
+        }
+        let a = &self.data;
+        let b = &other.data;
+        let rb = block_rows(n, n * m * p);
+        par::par_chunks_mut(&mut out.data, rb * p, |blk, chunk| {
+            mm_block(a, m, b, p, chunk, blk * rb);
+        });
+        out
+    }
+
+    /// Transposed-left product `selfᵀ · other` (self: n×m, other: n×p → m×p)
+    /// without materializing the transpose — the gradient-accumulation shape
+    /// (`Xᵀ·dZ`) of the native backward pass. Blocked and threaded like
+    /// [`Matrix::matmul`]; output rows (columns of `self`) are the parallel
+    /// axis, and 4 rows of `other` are fused per pass over a row block.
+    pub fn matmul_tn(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_tn: {}x{} vs {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let (n, m, p) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, p);
+        if n == 0 || m == 0 || p == 0 {
+            return out;
+        }
+        let a = &self.data;
+        let b = &other.data;
+        let rb = block_rows(m, n * m * p);
+        par::par_chunks_mut(&mut out.data, rb * p, |blk, chunk| {
+            tn_block(a, m, b, p, chunk, blk * rb, n);
+        });
+        out
+    }
+
+    /// Transposed-right product `self · otherᵀ` (self: n×m, other: p×m → n×p)
+    /// — the activation-gradient shape (`dZ·Wᵀ`) of the backward pass; both
+    /// operands are read row-contiguously. Four dot products run per pass so
+    /// the row of `self` is loaded once per four outputs, and row blocks of
+    /// the result are computed in parallel.
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt: {}x{} vs {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let (n, m, p) = (self.rows, self.cols, other.rows);
+        let mut out = Matrix::zeros(n, p);
+        if n == 0 || m == 0 || p == 0 {
+            return out;
+        }
+        let a = &self.data;
+        let b = &other.data;
+        let rb = block_rows(n, n * m * p);
+        par::par_chunks_mut(&mut out.data, rb * p, |blk, chunk| {
+            nt_block(a, m, b, p, chunk, blk * rb);
+        });
+        out
+    }
+
+    /// Pre-blocking scalar `self · other` — correctness oracle for the
+    /// blocked kernel and the serial baseline of the perf benches.
+    pub fn matmul_ref(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul_ref: {}x{} · {}x{}", self.rows, self.cols, other.rows, other.cols);
         let p = other.cols;
         let mut out = Matrix::zeros(self.rows, p);
         for i in 0..self.rows {
@@ -116,11 +254,9 @@ impl Matrix {
         out
     }
 
-    /// Transposed-left product `selfᵀ · other` (self: n×m, other: n×p → m×p)
-    /// without materializing the transpose — the gradient-accumulation shape
-    /// (`Xᵀ·dZ`) of the native backward pass.
-    pub fn matmul_tn(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.rows, other.rows, "matmul_tn: {}x{} vs {}x{}", self.rows, self.cols, other.rows, other.cols);
+    /// Pre-blocking scalar `selfᵀ · other` (oracle / bench baseline).
+    pub fn matmul_tn_ref(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_tn_ref: {}x{} vs {}x{}", self.rows, self.cols, other.rows, other.cols);
         let p = other.cols;
         let mut out = Matrix::zeros(self.cols, p);
         for r in 0..self.rows {
@@ -139,11 +275,9 @@ impl Matrix {
         out
     }
 
-    /// Transposed-right product `self · otherᵀ` (self: n×m, other: p×m → n×p)
-    /// — the activation-gradient shape (`dZ·Wᵀ`) of the backward pass; both
-    /// operands are read row-contiguously.
-    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.cols, "matmul_nt: {}x{} vs {}x{}", self.rows, self.cols, other.rows, other.cols);
+    /// Pre-blocking scalar `self · otherᵀ` (oracle / bench baseline).
+    pub fn matmul_nt_ref(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt_ref: {}x{} vs {}x{}", self.rows, self.cols, other.rows, other.cols);
         let p = other.rows;
         let mut out = Matrix::zeros(self.rows, p);
         for i in 0..self.rows {
@@ -225,6 +359,124 @@ impl Matrix {
     }
 }
 
+/// `A·B` over one output row block. `out` holds rows `i0..i0 + out.len()/p`
+/// of the result; `a` is n×m row-major, `b` is m×p row-major.
+///
+/// Loop nest: k-tile outer (rows `k0..k1` of `b` stay cache-hot), then a
+/// 4-row micro-kernel whose inner j-loop reads each `b` row once for four
+/// output rows. All five slices have length `p`, so the indexing bounds-check
+/// folds away and the loop vectorizes.
+fn mm_block(a: &[f32], m: usize, b: &[f32], p: usize, out: &mut [f32], i0: usize) {
+    let rows = out.len() / p;
+    for k0 in (0..m).step_by(KC) {
+        let k1 = (k0 + KC).min(m);
+        let mut i = 0;
+        while i + MR <= rows {
+            let a0 = &a[(i0 + i) * m..][k0..k1];
+            let a1 = &a[(i0 + i + 1) * m..][k0..k1];
+            let a2 = &a[(i0 + i + 2) * m..][k0..k1];
+            let a3 = &a[(i0 + i + 3) * m..][k0..k1];
+            let block = &mut out[i * p..(i + MR) * p];
+            let (o0, rest) = block.split_at_mut(p);
+            let (o1, rest) = rest.split_at_mut(p);
+            let (o2, o3) = rest.split_at_mut(p);
+            for (k, (((&x0, &x1), &x2), &x3)) in
+                a0.iter().zip(a1).zip(a2).zip(a3).enumerate()
+            {
+                let bk = &b[(k0 + k) * p..(k0 + k + 1) * p];
+                for j in 0..p {
+                    o0[j] += x0 * bk[j];
+                    o1[j] += x1 * bk[j];
+                    o2[j] += x2 * bk[j];
+                    o3[j] += x3 * bk[j];
+                }
+            }
+            i += MR;
+        }
+        // tail rows (< MR)
+        for ii in i..rows {
+            let ai = &a[(i0 + ii) * m..][k0..k1];
+            let orow = &mut out[ii * p..(ii + 1) * p];
+            for (k, &x) in ai.iter().enumerate() {
+                let bk = &b[(k0 + k) * p..(k0 + k + 1) * p];
+                for (o, &bj) in orow.iter_mut().zip(bk) {
+                    *o += x * bj;
+                }
+            }
+        }
+    }
+}
+
+/// `Aᵀ·B` over one output row block: rows `i0..` of the m×p result, i.e.
+/// columns `i0..` of the n×m `a`. Four rows of `a`/`b` are consumed per
+/// pass, so each output row is rewritten n/4 times instead of n.
+fn tn_block(a: &[f32], m: usize, b: &[f32], p: usize, out: &mut [f32], i0: usize, n: usize) {
+    let rows = out.len() / p;
+    let mut r = 0;
+    while r + MR <= n {
+        let b0 = &b[r * p..(r + 1) * p];
+        let b1 = &b[(r + 1) * p..(r + 2) * p];
+        let b2 = &b[(r + 2) * p..(r + 3) * p];
+        let b3 = &b[(r + 3) * p..(r + 4) * p];
+        for i in 0..rows {
+            let x0 = a[r * m + i0 + i];
+            let x1 = a[(r + 1) * m + i0 + i];
+            let x2 = a[(r + 2) * m + i0 + i];
+            let x3 = a[(r + 3) * m + i0 + i];
+            let orow = &mut out[i * p..(i + 1) * p];
+            for j in 0..p {
+                orow[j] += x0 * b0[j] + x1 * b1[j] + x2 * b2[j] + x3 * b3[j];
+            }
+        }
+        r += MR;
+    }
+    for rr in r..n {
+        let brow = &b[rr * p..(rr + 1) * p];
+        for i in 0..rows {
+            let x = a[rr * m + i0 + i];
+            let orow = &mut out[i * p..(i + 1) * p];
+            for (o, &bj) in orow.iter_mut().zip(brow) {
+                *o += x * bj;
+            }
+        }
+    }
+}
+
+/// `A·Bᵀ` over one output row block: four independent dot products per pass
+/// (four accumulator chains hide the FP-add latency; the `a` row is read
+/// once per four outputs).
+fn nt_block(a: &[f32], m: usize, b: &[f32], p: usize, out: &mut [f32], i0: usize) {
+    let rows = out.len() / p;
+    for i in 0..rows {
+        let arow = &a[(i0 + i) * m..(i0 + i + 1) * m];
+        let orow = &mut out[i * p..(i + 1) * p];
+        let mut j = 0;
+        while j + MR <= p {
+            let b0 = &b[j * m..(j + 1) * m];
+            let b1 = &b[(j + 1) * m..(j + 2) * m];
+            let b2 = &b[(j + 2) * m..(j + 3) * m];
+            let b3 = &b[(j + 3) * m..(j + 4) * m];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for (k, &x) in arow.iter().enumerate() {
+                s0 += x * b0[k];
+                s1 += x * b1[k];
+                s2 += x * b2[k];
+                s3 += x * b3[k];
+            }
+            orow[j] = s0;
+            orow[j + 1] = s1;
+            orow[j + 2] = s2;
+            orow[j + 3] = s3;
+            j += MR;
+        }
+        while j < p {
+            let brow = &b[j * m..(j + 1) * m];
+            orow[j] = arow.iter().zip(brow).map(|(&x, &y)| x * y).sum();
+            j += 1;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -260,6 +512,62 @@ mod tests {
         let mut a = m();
         a.scale_col(3, 2.0);
         assert_eq!(a.col(3), vec![6.0, 26.0, 46.0]);
+    }
+
+    #[test]
+    fn col_iter_matches_col() {
+        let a = m();
+        for c in 0..4 {
+            assert_eq!(a.col_iter(c).collect::<Vec<_>>(), a.col(c));
+        }
+        assert_eq!(Matrix::zeros(0, 3).col_iter(2).count(), 0);
+    }
+
+    #[test]
+    fn scale_cols_fused_matches_scale_col() {
+        let mut a = m();
+        let mut b = m();
+        a.scale_cols(&[1, 3], &[0.5, 2.0]);
+        b.scale_col(1, 0.5);
+        b.scale_col(3, 2.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn gather_cols_scaled_fuses_gather_and_scale() {
+        let a = m();
+        let idx = vec![0, 2];
+        let got = a.gather_cols_scaled(&idx, &[2.0, 3.0]);
+        let mut want = a.gather_cols(&idx);
+        want.scale_col(0, 2.0);
+        want.scale_col(1, 3.0);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn blocked_kernels_match_reference_on_awkward_shapes() {
+        // shapes straddling the MR/KC boundaries, including degenerate ones
+        for &(n, mm, p) in &[(1, 1, 1), (3, 5, 2), (4, 4, 4), (5, 300, 3), (7, 13, 9), (9, 257, 5)] {
+            let a = Matrix::from_fn(n, mm, |r, c| ((r * 31 + c * 7) % 11) as f32 * 0.3 - 1.0);
+            let b = Matrix::from_fn(mm, p, |r, c| ((r * 5 + c * 3) % 13) as f32 * 0.2 - 1.2);
+            let got = a.matmul(&b);
+            let want = a.matmul_ref(&b);
+            for (x, y) in got.data.iter().zip(&want.data) {
+                assert!((x - y).abs() < 1e-4, "{n}x{mm}x{p}");
+            }
+            let c2 = Matrix::from_fn(n, p, |r, c| (r as f32 - c as f32) * 0.1);
+            let got = a.matmul_tn(&c2);
+            let want = a.matmul_tn_ref(&c2);
+            for (x, y) in got.data.iter().zip(&want.data) {
+                assert!((x - y).abs() < 1e-4, "tn {n}x{mm}x{p}");
+            }
+            let d = Matrix::from_fn(p, mm, |r, c| ((r + c) % 7) as f32 * 0.25 - 0.5);
+            let got = a.matmul_nt(&d);
+            let want = a.matmul_nt_ref(&d);
+            for (x, y) in got.data.iter().zip(&want.data) {
+                assert!((x - y).abs() < 1e-4, "nt {n}x{mm}x{p}");
+            }
+        }
     }
 
     #[test]

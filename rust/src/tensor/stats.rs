@@ -26,16 +26,54 @@ impl ColumnStats {
     }
 }
 
+/// Columns per parallel work item — large enough that each worker streams a
+/// meaningful slice of every row, small enough that D̄ = 8192 splits across
+/// the pool.
+const STATS_COL_CHUNK: usize = 512;
+/// Total elements below which the scan runs inline — a fresh thread spawn
+/// costs more than streaming this much memory.
+const STATS_PAR_MIN: usize = 1 << 17;
+
 /// Single pass per column: min / max / mean / std.
+///
+/// Parallelized over column chunks (each worker scans all rows over its
+/// column range). Per-column accumulation stays in row order, so results are
+/// bit-identical to a single-threaded pass; small matrices run inline.
 pub fn column_stats(m: &Matrix) -> ColumnStats {
     let (b, d) = (m.rows, m.cols);
     assert!(b > 0 && d > 0);
+    if b * d < STATS_PAR_MIN {
+        return stats_for_cols(m, 0, d);
+    }
+    let nchunks = (d + STATS_COL_CHUNK - 1) / STATS_COL_CHUNK;
+    let parts = crate::util::par::par_map_idx(nchunks, 1, |ci| {
+        let c0 = ci * STATS_COL_CHUNK;
+        stats_for_cols(m, c0, (c0 + STATS_COL_CHUNK).min(d))
+    });
+    // splice the chunk results back in column order
+    let mut out = ColumnStats {
+        min: Vec::with_capacity(d),
+        max: Vec::with_capacity(d),
+        mean: Vec::with_capacity(d),
+        std: Vec::with_capacity(d),
+    };
+    for p in parts {
+        out.min.extend(p.min);
+        out.max.extend(p.max);
+        out.mean.extend(p.mean);
+        out.std.extend(p.std);
+    }
+    out
+}
+
+fn stats_for_cols(m: &Matrix, c0: usize, c1: usize) -> ColumnStats {
+    let (b, d) = (m.rows, c1 - c0);
     let mut mn = vec![f32::INFINITY; d];
     let mut mx = vec![f32::NEG_INFINITY; d];
     let mut sum = vec![0.0f64; d];
     let mut sumsq = vec![0.0f64; d];
     for r in 0..b {
-        let row = m.row(r);
+        let row = &m.row(r)[c0..c1];
         for c in 0..d {
             let v = row[c];
             if v < mn[c] {
@@ -166,6 +204,26 @@ mod tests {
             assert!((s.mean[c] - mu).abs() < 1e-5);
             assert!((s.std[c] - var.sqrt()).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn wide_matrix_stats_identical_across_thread_counts() {
+        // past both parallel gates (≥ STATS_PAR_MIN elements, > 1 column
+        // chunk) so the splice path genuinely runs
+        let m = Matrix::from_fn(128, 2 * super::STATS_COL_CHUNK + 37, |r, c| {
+            ((r * 131 + c * 17) % 23) as f32 * 0.4 - 4.0
+        });
+        assert!(m.len() >= super::STATS_PAR_MIN);
+        crate::util::par::set_threads(1);
+        let s1 = column_stats(&m);
+        crate::util::par::set_threads(4);
+        let s4 = column_stats(&m);
+        crate::util::par::set_threads(0);
+        assert_eq!(s1.min, s4.min);
+        assert_eq!(s1.max, s4.max);
+        assert_eq!(s1.mean, s4.mean);
+        assert_eq!(s1.std, s4.std);
+        assert_eq!(s1.min.len(), m.cols);
     }
 
     #[test]

@@ -2,7 +2,20 @@
 //! seeded random case generation with automatic shrinking of failing usize
 //! parameter vectors. Used for coordinator/codec invariants.
 
+use crate::tensor::Matrix;
 use crate::util::Rng;
+
+/// Heterogeneous-range feature matrix (the paper's Fig.-1 regime): column
+/// scales cycle {4, 1, 0.2, 0.02, 0} — the 0-scale class yields constant
+/// columns, so degenerate inputs are always represented. Shared fixture for
+/// the hot-path benches and the cross-thread determinism tests.
+pub fn hetero_matrix(b: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(b, d, |_, c| {
+        let scale = [4.0, 1.0, 0.2, 0.02, 0.0][c % 5];
+        scale * rng.normal_f32(0.0, 1.0) + (c % 13) as f32 * 0.1
+    })
+}
 
 /// A parameter vector drawn from per-dimension inclusive ranges.
 #[derive(Debug, Clone)]

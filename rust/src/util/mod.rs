@@ -1,9 +1,11 @@
-//! Dependency-free substrates: PRNG, JSON, CLI parsing, logging, errors.
+//! Dependency-free substrates: PRNG, JSON, CLI parsing, logging, errors,
+//! and the scoped-thread parallel runtime (`par`).
 
 pub mod cli;
 pub mod error;
 pub mod json;
 pub mod logging;
+pub mod par;
 pub mod rng;
 
 pub use cli::Args;

@@ -1,0 +1,127 @@
+//! Threaded-runtime invariants: the parallel FWQ encoder must emit
+//! bitstreams byte-identical to a single-threaded run, and the blocked
+//! matmul kernels must match the scalar references, for arbitrary shapes
+//! including degenerate (constant-column) inputs.
+//!
+//! Matrix widths here are deliberately ≥ the codec's parallelism gates
+//! (candidate scan at D̂ ≥ 256, entry-code fan-out at > 8192/B columns,
+//! column stats at > 512 columns) so the threaded paths genuinely run —
+//! narrower fixtures would compare the serial encoder against itself.
+//!
+//! The pool size is process-global, and the harness runs these tests
+//! concurrently — that is fine *because* the property under test is exactly
+//! thread-count independence: whatever the global happens to be mid-call,
+//! the outputs asserted equal must stay equal.
+
+use splitfc::compression::{fwq_encode, FwqConfig};
+use splitfc::tensor::{column_stats, Matrix};
+use splitfc::testkit::hetero_matrix;
+use splitfc::util::{par, Rng};
+
+#[test]
+fn threaded_fwq_bitstream_is_byte_identical_to_serial() {
+    // widths straddle every parallelism gate (see module docs)
+    for (i, &(b, d)) in [(8usize, 16usize), (32, 600), (64, 333), (16, 1200)].iter().enumerate() {
+        let a = hetero_matrix(b, d, 100 + i as u64);
+        for bpe in [0.5f64, 2.0] {
+            let cfg = FwqConfig::paper_default(b, bpe * (b * d) as f64);
+            par::set_threads(1);
+            let (by1, bits1, info1) = fwq_encode(&a, &cfg);
+            par::set_threads(4);
+            let (by4, bits4, info4) = fwq_encode(&a, &cfg);
+            par::set_threads(0);
+            assert_eq!(by1, by4, "B={b} D={d} bpe={bpe}");
+            assert_eq!(bits1, bits4);
+            assert_eq!(info1.m_star, info4.m_star);
+            assert_eq!(info1.candidates_tried, info4.candidates_tried);
+        }
+    }
+}
+
+#[test]
+fn threaded_fwq_identical_on_degenerate_inputs() {
+    // wide degenerates (600 columns — past the parallel gates): an
+    // all-constant matrix and a half-constant-column matrix, plus a
+    // single-column edge case
+    let degenerates = [
+        Matrix::from_fn(16, 600, |_, _| 1.5),
+        Matrix::from_fn(16, 600, |r, c| if c % 2 == 0 { 3.0 } else { r as f32 * 0.1 }),
+        Matrix::from_fn(32, 1, |r, _| (r % 5) as f32),
+    ];
+    for (i, a) in degenerates.iter().enumerate() {
+        for bpe in [0.3f64, 1.0, 4.0] {
+            let cfg = FwqConfig::paper_default(a.rows, bpe * (a.rows * a.cols) as f64);
+            par::set_threads(1);
+            let (by1, ..) = fwq_encode(a, &cfg);
+            par::set_threads(3);
+            let (by3, ..) = fwq_encode(a, &cfg);
+            par::set_threads(0);
+            assert_eq!(by1, by3, "degenerate {i} bpe={bpe}");
+        }
+    }
+}
+
+#[test]
+fn column_stats_identical_across_thread_counts() {
+    // past the element gate and wider than one column chunk, so the
+    // parallel splice genuinely runs
+    let m = hetero_matrix(128, 1200, 7);
+    par::set_threads(1);
+    let s1 = column_stats(&m);
+    par::set_threads(4);
+    let s4 = column_stats(&m);
+    par::set_threads(0);
+    assert_eq!(s1.min, s4.min);
+    assert_eq!(s1.max, s4.max);
+    assert_eq!(s1.mean, s4.mean);
+    assert_eq!(s1.std, s4.std);
+}
+
+#[test]
+fn blocked_matmul_matches_scalar_reference_on_random_shapes() {
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (3, 5, 7),
+        (4, 4, 4),
+        (5, 17, 3),
+        (2, 300, 2),
+        (33, 64, 129),
+        (65, 129, 33),
+        // > PAR_WORK_MIN madds: exercises the multi-chunk parallel dispatch
+        (48, 300, 100),
+    ];
+    for (s, &(n, m, p)) in shapes.iter().enumerate() {
+        let mut rng = Rng::new(7 + s as u64);
+        // sprinkle exact zeros: the regime the old kernels' zero-skip hit
+        let mut gen = |_r: usize, _c: usize| {
+            let v = rng.normal_f32(0.0, 1.0);
+            if v < -0.3 {
+                0.0
+            } else {
+                v
+            }
+        };
+        let a = Matrix::from_fn(n, m, &mut gen);
+        let b = Matrix::from_fn(m, p, &mut gen);
+        let c = Matrix::from_fn(n, p, &mut gen);
+        let d = Matrix::from_fn(p, m, &mut gen);
+        for threads in [1usize, 4] {
+            par::set_threads(threads);
+            check_close(&a.matmul(&b), &a.matmul_ref(&b), n, m, p, "matmul");
+            check_close(&a.matmul_tn(&c), &a.matmul_tn_ref(&c), n, m, p, "matmul_tn");
+            check_close(&a.matmul_nt(&d), &a.matmul_nt_ref(&d), n, m, p, "matmul_nt");
+        }
+        par::set_threads(0);
+    }
+}
+
+fn check_close(got: &Matrix, want: &Matrix, n: usize, m: usize, p: usize, name: &str) {
+    assert_eq!((got.rows, got.cols), (want.rows, want.cols), "{name} {n}x{m}x{p}");
+    let scale = want.sq_norm().sqrt().max(1.0);
+    let dist = got.sq_dist(want).sqrt();
+    assert!(
+        dist <= 1e-5 * scale,
+        "{name} {n}x{m}x{p}: rel err {} (dist {dist}, scale {scale})",
+        dist / scale
+    );
+}
