@@ -19,9 +19,16 @@ echo "==> cargo check --features pjrt --all-targets"
 # the stub-gated PJRT path must keep compiling even though CI never runs it
 cargo check --features pjrt --all-targets
 
+echo "==> concurrent coordinator smoke (4 devices, 2 threads, staleness 1)"
+cargo run --release --bin splitfc -- train --preset tiny --devices 4 \
+    --threads 2 --staleness 1 --rounds 3
+
 echo "==> bench smoke (THREADS=2, quick): BENCH_fwq.json / BENCH_e2e.json"
 THREADS=2 cargo bench --bench bench_compression -- --quick
 THREADS=2 cargo bench --bench bench_e2e_step -- --quick
+
+echo "==> coordinator bench (quick): BENCH_coordinator.json"
+cargo bench --bench bench_coordinator -- --quick
 
 if [ "${SKIP_CLIPPY:-0}" = "1" ]; then
     echo "==> clippy skipped (SKIP_CLIPPY=1)"

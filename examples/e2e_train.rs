@@ -56,7 +56,7 @@ fn run(label: &str, scheme: &str, up_bpe: f64, args: &Args) -> Result<()> {
             );
         }
     }
-    let rep = tr.link.report();
+    let rep = tr.link_report();
     println!(
         "loss curve: {} -> {} (first -> last round mean)",
         losses.first().unwrap(),

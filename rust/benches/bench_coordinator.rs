@@ -1,0 +1,94 @@
+//! Coordinator throughput: protocol steps/s of the ParameterServer /
+//! DeviceWorker scheduler vs number of devices K ∈ {1, 4, 8} at staleness
+//! S ∈ {0, 2}, on the mnist-scenario preset (the heaviest native step).
+//!
+//! S = 0 resolves to the sequential Algorithm-1 baseline; S = 2 runs one
+//! worker thread per device with a 2-round staleness window, so device-side
+//! compute and codec work overlap across clients while the PS critical
+//! section stays serialized. The inner compute pool is pinned to **one**
+//! thread by default — the coordinator's worker threads are the parallelism
+//! under test (override with `-- --threads N` to measure combined scaling).
+//!
+//! Writes `BENCH_coordinator.json`; `-- --quick` shortens the run for CI.
+
+use splitfc::compression::Scheme;
+use splitfc::config::TrainConfig;
+use splitfc::coordinator::Trainer;
+use splitfc::util::{par, Args, Json, Result};
+
+fn run_one(
+    devices: usize,
+    staleness: usize,
+    steps_target: usize,
+    inner_threads: usize,
+) -> Result<Json> {
+    let mut cfg = TrainConfig::for_preset("mnist");
+    cfg.devices = devices;
+    cfg.rounds = (steps_target / devices).max(2);
+    cfg.n_train = 512;
+    cfg.n_test = 128;
+    cfg.eval_every = 0;
+    cfg.scheme = Scheme::splitfc(16.0);
+    cfg.up_bits_per_entry = 0.2;
+    cfg.down_bits_per_entry = 32.0;
+    cfg.staleness = staleness;
+    // explicit inner-pool size: every config measures the same per-step
+    // compute, so the only variable is coordinator-level concurrency
+    cfg.threads = inner_threads;
+    let workers = cfg.resolved_concurrency();
+    let mut tr = Trainer::new(cfg)?;
+    let s = tr.run()?;
+    let steps_per_s = s.steps as f64 / s.wall_s;
+    println!(
+        "K={devices} S={staleness} workers={workers}: {} steps in {:.3}s -> {:.2} steps/s",
+        s.steps, s.wall_s, steps_per_s
+    );
+    Ok(Json::obj(vec![
+        ("preset", Json::str("mnist")),
+        ("devices", Json::num(devices as f64)),
+        ("staleness", Json::num(staleness as f64)),
+        ("workers", Json::num(workers as f64)),
+        ("steps", Json::num(s.steps as f64)),
+        ("wall_s", Json::num(s.wall_s)),
+        ("steps_per_s", Json::num(steps_per_s)),
+    ]))
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let quick = args.has_flag("quick");
+    let inner_threads = par::thread_request(args.get_usize("threads", 1)).max(1);
+    par::set_threads(inner_threads);
+    let steps_target = if quick { 16 } else { 48 };
+
+    let mut rows = Vec::new();
+    let mut baseline_by_k = Vec::new();
+    for &devices in &[1usize, 4, 8] {
+        for &staleness in &[0usize, 2] {
+            let row = run_one(devices, staleness, steps_target, inner_threads)?;
+            let sps = row.req("steps_per_s").as_f64().unwrap();
+            if staleness == 0 {
+                baseline_by_k.push((devices, sps));
+            } else if let Some(&(_, base)) =
+                baseline_by_k.iter().find(|&&(k, _)| k == devices)
+            {
+                println!(
+                    "  K={devices}: staleness-2 speedup over sequential {:.2}x",
+                    sps / base
+                );
+            }
+            rows.push(row);
+        }
+    }
+
+    let j = Json::obj(vec![
+        ("bench", Json::str("coordinator")),
+        ("inner_threads", Json::num(par::threads() as f64)),
+        ("steps_target", Json::num(steps_target as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_coordinator.json", j.to_string_pretty())
+        .expect("write BENCH_coordinator.json");
+    println!("[saved BENCH_coordinator.json]");
+    Ok(())
+}

@@ -43,6 +43,19 @@ pub struct TrainConfig {
     /// worker threads for the parallel runtime; 0 = unset (the pool is left
     /// as configured, which defaults to one worker per available core)
     pub threads: usize,
+    /// bounded-staleness window S in rounds: a device may run up to S rounds
+    /// ahead of the slowest outstanding step (≤ S·K protocol steps in
+    /// flight). 0 = strict sequential round-robin — byte-identical metrics
+    /// to Algorithm 1 even when driven by concurrent workers.
+    pub staleness: usize,
+    /// device workers driven concurrently. 0 = auto: 1 (inline, no worker
+    /// threads) when `staleness == 0`, else one worker per device. Clamped
+    /// to `devices`.
+    pub concurrent_devices: usize,
+    /// give each device its own ADAM moments for the PS-held device-side
+    /// model instead of the single shared optimizer of Algorithm 1 (changes
+    /// trajectories; off by default)
+    pub per_device_opt: bool,
 }
 
 impl TrainConfig {
@@ -77,7 +90,21 @@ impl TrainConfig {
             link_latency_s: 0.0,
             metrics_path: String::new(),
             threads: 0,
+            staleness: 0,
+            concurrent_devices: 0,
+            per_device_opt: false,
         }
+    }
+
+    /// Number of scheduler worker threads a run will actually use
+    /// (resolves the `concurrent_devices = 0` auto rule and clamps to K).
+    pub fn resolved_concurrency(&self) -> usize {
+        let want = match self.concurrent_devices {
+            0 if self.staleness == 0 => 1,
+            0 => self.devices,
+            n => n,
+        };
+        want.clamp(1, self.devices.max(1))
     }
 
     /// Apply `--key value` CLI overrides.
@@ -100,6 +127,12 @@ impl TrainConfig {
         self.eval_every = args.get_usize("eval-every", self.eval_every);
         self.link_capacity_bps = args.get_f64("capacity-bps", self.link_capacity_bps);
         self.threads = args.get_usize("threads", self.threads);
+        self.staleness = args.get_usize("staleness", self.staleness);
+        self.concurrent_devices =
+            args.get_usize("concurrent-devices", self.concurrent_devices);
+        if args.has_flag("per-device-opt") {
+            self.per_device_opt = true;
+        }
         if let Some(v) = args.get("metrics") {
             self.metrics_path = v.to_string();
         }
@@ -130,6 +163,9 @@ impl TrainConfig {
             ("n_train", Json::num(self.n_train as f64)),
             ("n_test", Json::num(self.n_test as f64)),
             ("threads", Json::num(self.threads as f64)),
+            ("staleness", Json::num(self.staleness as f64)),
+            ("concurrent_devices", Json::num(self.concurrent_devices as f64)),
+            ("per_device_opt", Json::Bool(self.per_device_opt)),
         ])
     }
 }
@@ -245,6 +281,31 @@ mod tests {
         assert_eq!(c.up_bits_per_entry, 0.2);
         assert_eq!(c.scheme, Scheme::splitfc(8.0));
         assert_eq!(c.threads, 3);
+    }
+
+    #[test]
+    fn scheduler_overrides_and_auto_concurrency() {
+        let mut c = TrainConfig::for_preset("tiny");
+        assert_eq!((c.staleness, c.concurrent_devices), (0, 0));
+        assert!(!c.per_device_opt);
+        // auto: sequential at S=0, one worker per device otherwise
+        assert_eq!(c.resolved_concurrency(), 1);
+        c.staleness = 2;
+        assert_eq!(c.resolved_concurrency(), c.devices);
+        let args = Args::parse(
+            &"x --staleness 1 --concurrent-devices 3 --per-device-opt"
+                .split_whitespace()
+                .map(String::from)
+                .collect::<Vec<_>>(),
+        );
+        c.apply_overrides(&args);
+        assert_eq!(c.staleness, 1);
+        assert_eq!(c.concurrent_devices, 3);
+        assert!(c.per_device_opt);
+        assert_eq!(c.resolved_concurrency(), 3);
+        // explicit request above K clamps to K
+        c.concurrent_devices = 64;
+        assert_eq!(c.resolved_concurrency(), c.devices);
     }
 
     #[test]

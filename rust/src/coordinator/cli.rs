@@ -14,6 +14,7 @@ USAGE:
                 [--up-bpe X] [--down-bpe X] [--rounds T] [--devices K]
                 [--seed N] [--eval-every E] [--metrics file.jsonl]
                 [--backend native|pjrt] [--artifacts DIR] [--threads N]
+                [--staleness S] [--concurrent-devices N] [--per-device-opt]
   splitfc experiment <fig1|fig3|fig4|fig5|table1|table2|table3|all>
                 [--presets mnist,cifar,celeba] [--rounds T] [--devices K]
                 [--threads N] ...
@@ -26,6 +27,14 @@ SCHEMES:
   vanilla | splitfc | splitfc-ad | splitfc-rand | splitfc-det |
   splitfc-quant-only | splitfc-no-mean | splitfc-ad+{pq,eq,nq} |
   tops | randtops | tops+{pq,eq,nq} | fedlite
+
+SCHEDULING:
+  --staleness S           bounded-staleness window in rounds; 0 (default) is
+                          the paper's strict sequential round-robin, S>0 lets
+                          a device run up to S rounds ahead concurrently
+  --concurrent-devices N  device-worker threads (0 = auto: 1 when S=0, one
+                          per device otherwise)
+  --per-device-opt        independent PS-held device ADAM moments per device
 ";
 
 pub fn main() {
@@ -67,10 +76,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut tr = Trainer::new(cfg)?;
     let summary = tr.run()?;
     println!("summary: {}", summary.to_json().to_string_pretty());
-    let rep = tr.link.report();
+    let rep = tr.link_report();
     println!(
         "link: up {} bits, down {} bits, modeled transfer time {:.2}s @ {} bps",
-        rep.up_bits, rep.down_bits, rep.elapsed_s, tr.link.capacity_bps
+        rep.up_bits, rep.down_bits, rep.elapsed_s, tr.cfg.link_capacity_bps
     );
     Ok(())
 }

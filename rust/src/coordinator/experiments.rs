@@ -28,10 +28,17 @@ fn cfg_for(
     cfg.up_bits_per_entry = up_bpe;
     cfg.down_bits_per_entry = down_bpe;
     cfg.apply_overrides(args);
-    // scheme/up/down were explicit: re-pin them over generic overrides
+    // the scheme is this experiment's row: re-pin it over the generic
+    // override (only --r passes through). The link budgets are re-pinned
+    // only when the user did NOT override them explicitly — an explicit
+    // --up-bpe/--down-bpe wins over the experiment's per-column budget.
     cfg.scheme = parse_scheme(scheme_name, args.get_f64("r", r));
-    cfg.up_bits_per_entry = up_bpe;
-    cfg.down_bits_per_entry = down_bpe;
+    if args.get("up-bpe").is_none() {
+        cfg.up_bits_per_entry = up_bpe;
+    }
+    if args.get("down-bpe").is_none() {
+        cfg.down_bits_per_entry = down_bpe;
+    }
     cfg
 }
 
@@ -359,5 +366,44 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
             Ok(())
         }
         other => crate::bail!("unknown experiment {other:?} (fig1|fig3|fig4|fig5|table1|table2|table3|all)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn cfg_for_pins_experiment_budgets_by_default() {
+        let c = cfg_for("tiny", "splitfc", 8.0, 0.2, 0.4, &args("x --rounds 2"));
+        assert_eq!(c.up_bits_per_entry, 0.2);
+        assert_eq!(c.down_bits_per_entry, 0.4);
+        assert_eq!(c.rounds, 2);
+    }
+
+    #[test]
+    fn cfg_for_honors_explicit_budget_overrides() {
+        let c = cfg_for(
+            "tiny",
+            "splitfc",
+            8.0,
+            0.2,
+            0.4,
+            &args("x --up-bpe 1.5 --down-bpe 2.5"),
+        );
+        assert_eq!(c.up_bits_per_entry, 1.5);
+        assert_eq!(c.down_bits_per_entry, 2.5);
+    }
+
+    #[test]
+    fn cfg_for_repins_scheme_with_r_override() {
+        let c = cfg_for("tiny", "splitfc", 8.0, 0.2, 0.4, &args("x --r 32 --scheme tops"));
+        // the scheme is the experiment row — --scheme must not leak in,
+        // but --r parameterizes the pinned scheme
+        assert_eq!(c.scheme, crate::compression::Scheme::splitfc(32.0));
     }
 }

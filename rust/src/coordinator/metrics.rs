@@ -8,6 +8,10 @@ use crate::util::Json;
 pub struct StepRecord {
     pub round: usize,
     pub device: usize,
+    /// global step index: the step's position in the strict round-robin
+    /// order (a run offset + (round-1)*K + device), stable across concurrent
+    /// and sequential execution and unique across a trainer's lifetime
+    pub global_step: usize,
     pub loss: f32,
     pub train_acc: f32,
     /// measured payload bits
@@ -26,6 +30,7 @@ impl StepRecord {
         Json::obj(vec![
             ("t", Json::num(self.round as f64)),
             ("k", Json::num(self.device as f64)),
+            ("g", Json::num(self.global_step as f64)),
             ("loss", Json::num(self.loss as f64)),
             ("train_acc", Json::num(self.train_acc as f64)),
             ("up_bits", Json::num(self.up_bits as f64)),
@@ -82,7 +87,9 @@ impl TrainSummary {
     }
 }
 
-/// Line-per-record JSONL writer (metrics stream).
+/// Line-per-record JSONL writer (metrics stream). Not internally locked:
+/// the concurrent coordinator serializes access through a `Mutex` in
+/// `ParameterServer`, so records from parallel device workers never tear.
 pub struct MetricsWriter {
     out: Option<std::io::BufWriter<std::fs::File>>,
 }
@@ -119,6 +126,7 @@ mod tests {
         let r = StepRecord {
             round: 3,
             device: 1,
+            global_step: 7,
             loss: 0.5,
             train_acc: 0.75,
             up_bits: 1000,
@@ -130,6 +138,7 @@ mod tests {
         };
         let j = r.to_json();
         assert_eq!(j.req("t").as_usize(), Some(3));
+        assert_eq!(j.req("g").as_usize(), Some(7));
         assert_eq!(j.req("up_bits").as_f64(), Some(1000.0));
     }
 

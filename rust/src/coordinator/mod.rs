@@ -1,6 +1,13 @@
-//! L3 coordinator — the paper's Algorithm 1 plus the experiment harness.
+//! L3 coordinator — the paper's Algorithm 1 split into concurrent roles,
+//! plus the experiment harness.
 //!
-//! * `trainer` — round-robin split-learning protocol over PJRT artifacts
+//! * `server` — the parameter-server role: `w_s`/`w_d`, both optimizers,
+//!   the shared encode stream, serialized metrics
+//! * `worker` — one device-side role per client: loader, RNG fork,
+//!   per-device link, uplink encode / downlink decode + chain-rule rescale
+//! * `scheduler` — drives K workers sequentially or concurrently under a
+//!   bounded-staleness window (S = 0 ⇒ exact round-robin)
+//! * `trainer` — thin facade wiring the roles from a `TrainConfig`
 //! * `metrics` — per-step records, summaries, JSONL
 //! * `experiments` — one entry per paper table/figure
 //! * `cli` — the `splitfc` binary front-end
@@ -8,7 +15,13 @@
 pub mod cli;
 pub mod experiments;
 pub mod metrics;
+pub mod scheduler;
+pub mod server;
 pub mod trainer;
+pub mod worker;
 
 pub use metrics::{StepRecord, TrainSummary};
+pub use scheduler::Scheduler;
+pub use server::{DeviceOpt, ParameterServer};
 pub use trainer::Trainer;
+pub use worker::{DeviceWorker, RngMode};

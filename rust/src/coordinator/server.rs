@@ -1,0 +1,328 @@
+//! The parameter-server role of the split protocol.
+//!
+//! The PS owns everything that is global to a run and must be updated in a
+//! serialized critical section: the server-side model `w_s` and its ADAM
+//! state, the (PS-held, Sec. III-A) device-side model `w_d` and its
+//! optimizer slots, the legacy Algorithm-1 uplink-encode RNG stream, and the
+//! metrics writer. Device workers hold only a `&ParameterServer` and go
+//! through the methods below, so K workers can drive the PS concurrently:
+//!
+//! * [`ParameterServer::snapshot_device_params`] — a worker's read of `w_d`
+//!   at step start (possibly stale under `--staleness > 0`);
+//! * [`ParameterServer::process_uplink`] — the PS half of a step (eqs. 4-5
+//!   forward/backward + the `w_s` ADAM update) as one critical section;
+//! * [`ParameterServer::apply_device_grad`] — the PS applying a device
+//!   gradient through the shared or per-device optimizer slot.
+//!
+//! The model itself executes through the shared [`Backend`] (`&self`
+//! methods, `Send + Sync`), so no backend state is duplicated per worker.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::metrics::MetricsWriter;
+use crate::data::Dataset;
+use crate::model::{ParamSet, PresetInfo};
+use crate::optim::{Adam, Optimizer};
+use crate::runtime::{Backend, ServerOutput};
+use crate::tensor::Matrix;
+use crate::util::error::Result;
+use crate::util::{Json, Rng};
+
+/// PS-held ADAM state for the device-side model. Algorithm 1 shares one
+/// moment set across every device; `--per-device-opt` gives each device an
+/// independent copy (useful under staleness, but a different trajectory).
+pub enum DeviceOpt {
+    Shared(Adam),
+    PerDevice(Vec<Adam>),
+}
+
+impl DeviceOpt {
+    fn step(&mut self, device: usize, params: &mut [f32], grad: &[f32]) {
+        match self {
+            DeviceOpt::Shared(opt) => opt.step(params, grad),
+            DeviceOpt::PerDevice(opts) => opts[device].step(params, grad),
+        }
+    }
+}
+
+/// Everything behind the PS lock: both parameter sets, both optimizers, and
+/// the cumulative backend-execution time of the run.
+struct ServerState {
+    wd: ParamSet,
+    ws: ParamSet,
+    opt_s: Adam,
+    opt_d: DeviceOpt,
+    exec_s: f64,
+}
+
+pub struct ParameterServer {
+    backend: Box<dyn Backend>,
+    preset: PresetInfo,
+    state: Mutex<ServerState>,
+    /// the single Algorithm-1 uplink-encode stream; under strict (S = 0)
+    /// scheduling it is consumed in global step order, reproducing the
+    /// monolithic trainer's trajectory bit-for-bit
+    rng: Mutex<Rng>,
+    metrics: Mutex<MetricsWriter>,
+}
+
+impl ParameterServer {
+    pub fn new(
+        backend: Box<dyn Backend>,
+        wd: ParamSet,
+        ws: ParamSet,
+        lr: f32,
+        devices: usize,
+        per_device_opt: bool,
+        shared_rng: Rng,
+        metrics: MetricsWriter,
+    ) -> ParameterServer {
+        let preset = backend.preset().clone();
+        let opt_d = if per_device_opt {
+            DeviceOpt::PerDevice((0..devices).map(|_| Adam::new(lr, wd.n_params())).collect())
+        } else {
+            DeviceOpt::Shared(Adam::new(lr, wd.n_params()))
+        };
+        let opt_s = Adam::new(lr, ws.n_params());
+        ParameterServer {
+            backend,
+            preset,
+            state: Mutex::new(ServerState { wd, ws, opt_s, opt_d, exec_s: 0.0 }),
+            rng: Mutex::new(shared_rng),
+            metrics: Mutex::new(metrics),
+        }
+    }
+
+    pub fn preset(&self) -> &PresetInfo {
+        &self.preset
+    }
+
+    /// The shared execution backend (device workers run their sub-model
+    /// halves through this same instance).
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    /// A worker's view of the device-side model at step start. Under
+    /// bounded staleness this clone may lag the live `w_d` by in-flight
+    /// updates — that lag is exactly what `--staleness` bounds.
+    pub fn snapshot_device_params(&self) -> ParamSet {
+        self.state.lock().unwrap().wd.clone()
+    }
+
+    /// Refresh a worker's reusable `w_d` snapshot in place: allocates only
+    /// on first use, afterwards a flat copy under the lock. The copy is the
+    /// price of running device compute outside the PS critical section.
+    pub fn snapshot_device_params_into(&self, dst: &mut Option<ParamSet>) {
+        let st = self.state.lock().unwrap();
+        match dst {
+            Some(p) => p.data.copy_from_slice(&st.wd.data),
+            None => *dst = Some(st.wd.clone()),
+        }
+    }
+
+    /// Consistent `(w_d, w_s)` snapshot for evaluation.
+    pub fn snapshot_models(&self) -> (ParamSet, ParamSet) {
+        let st = self.state.lock().unwrap();
+        (st.wd.clone(), st.ws.clone())
+    }
+
+    /// The PS half of one protocol step (one critical section): server
+    /// forward/backward on the reconstructed features (eqs. 4-5) followed by
+    /// the `w_s` ADAM update. Returns the loss, correct count, the
+    /// intermediate gradient G for the downlink, and the backend execution
+    /// time of this call (already counted into the run total — callers fold
+    /// it into their per-step accounting only).
+    pub fn process_uplink(&self, f_hat: &Matrix, y: &[f32]) -> Result<(ServerOutput, f64)> {
+        let mut st = self.state.lock().unwrap();
+        let t0 = Instant::now();
+        let out = self.backend.server_fwd_bwd(&st.ws, f_hat, y)?;
+        let dt = t0.elapsed().as_secs_f64();
+        st.exec_s += dt;
+        let ServerState { ws, opt_s, .. } = &mut *st;
+        opt_s.step(&mut ws.data, &out.grad_ws);
+        Ok((out, dt))
+    }
+
+    /// Apply a device-side gradient through this device's optimizer slot
+    /// (the PS holds the device optimizer, Sec. III-A).
+    pub fn apply_device_grad(&self, device: usize, grad: &[f32]) {
+        let mut st = self.state.lock().unwrap();
+        let ServerState { wd, opt_d, .. } = &mut *st;
+        opt_d.step(device, &mut wd.data, grad);
+    }
+
+    /// Run `f` with exclusive access to the legacy shared RNG stream.
+    pub fn with_rng<T>(&self, f: impl FnOnce(&mut Rng) -> T) -> T {
+        f(&mut self.rng.lock().unwrap())
+    }
+
+    /// Add worker-side backend execution time to the run total.
+    pub fn add_exec(&self, dt: f64) {
+        self.state.lock().unwrap().exec_s += dt;
+    }
+
+    /// Cumulative backend execution time across PS and workers.
+    pub fn exec_s(&self) -> f64 {
+        self.state.lock().unwrap().exec_s
+    }
+
+    /// Append one record to the metrics stream (serialized across workers).
+    pub fn write_metrics(&self, j: &Json) {
+        self.metrics.lock().unwrap().write(j);
+    }
+
+    pub fn flush_metrics(&self) {
+        self.metrics.lock().unwrap().flush();
+    }
+
+    /// Test-set accuracy of the full split model on the current parameter
+    /// snapshot (the batches run outside the PS lock).
+    pub fn evaluate(&self, test: &Dataset) -> Result<f32> {
+        let (wd, ws) = self.snapshot_models();
+        let p = &self.preset;
+        let dim = p.sample_dim();
+        let n_batches = (test.n / p.batch).max(1);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut exec_s = 0.0;
+        for bi in 0..n_batches {
+            let mut x = Vec::with_capacity(p.batch * dim);
+            let mut labels = Vec::with_capacity(p.batch);
+            for j in 0..p.batch {
+                let i = (bi * p.batch + j) % test.n;
+                x.extend_from_slice(test.sample(i));
+                labels.push(test.y[i]);
+            }
+            let t0 = Instant::now();
+            let logits = self.backend.eval_logits(&wd, &ws, &x)?;
+            exec_s += t0.elapsed().as_secs_f64();
+            for (j, &lab) in labels.iter().enumerate() {
+                let row = &logits[j * p.classes..(j + 1) * p.classes];
+                // total_cmp: NaN logits (a diverged run) must not panic the
+                // evaluation; they sort above every real value and simply
+                // count as a (mis)prediction
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap();
+                correct += (pred == lab as usize) as usize;
+                total += 1;
+            }
+        }
+        self.add_exec(exec_s);
+        Ok(correct as f32 / total as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::create_backend;
+
+    fn tiny_server(per_device_opt: bool) -> ParameterServer {
+        let backend = create_backend(Default::default(), "artifacts", "tiny").unwrap();
+        let (wd, ws) = backend.init_params().unwrap();
+        ParameterServer::new(
+            backend,
+            wd,
+            ws,
+            1e-2,
+            3,
+            per_device_opt,
+            Rng::new(7),
+            MetricsWriter::create(""),
+        )
+    }
+
+    #[test]
+    fn snapshot_is_decoupled_from_updates() {
+        let srv = tiny_server(false);
+        let before = srv.snapshot_device_params();
+        let grad = vec![1.0f32; before.n_params()];
+        srv.apply_device_grad(0, &grad);
+        let after = srv.snapshot_device_params();
+        assert_ne!(before.data, after.data, "update must move w_d");
+        // the earlier snapshot is untouched (workers own their copy)
+        assert_eq!(before.data.len(), after.data.len());
+    }
+
+    #[test]
+    fn snapshot_into_reuses_buffer_and_tracks_updates() {
+        let srv = tiny_server(false);
+        let mut buf = None;
+        srv.snapshot_device_params_into(&mut buf);
+        let first = buf.as_ref().unwrap().data.clone();
+        let grad = vec![1.0f32; first.len()];
+        srv.apply_device_grad(0, &grad);
+        srv.snapshot_device_params_into(&mut buf);
+        assert_ne!(buf.as_ref().unwrap().data, first, "refresh must see the update");
+        assert_eq!(buf.as_ref().unwrap().data.len(), first.len());
+    }
+
+    #[test]
+    fn shared_opt_accumulates_moments_across_devices() {
+        let srv = tiny_server(false);
+        let n = srv.snapshot_device_params().n_params();
+        let grad = vec![0.5f32; n];
+        srv.apply_device_grad(0, &grad);
+        srv.apply_device_grad(1, &grad);
+        let st = srv.state.lock().unwrap();
+        match &st.opt_d {
+            DeviceOpt::Shared(opt) => assert_eq!(opt.t(), 2),
+            _ => panic!("expected shared slot"),
+        }
+    }
+
+    #[test]
+    fn per_device_opt_keeps_independent_moments() {
+        let srv = tiny_server(true);
+        let n = srv.snapshot_device_params().n_params();
+        let grad = vec![0.5f32; n];
+        srv.apply_device_grad(0, &grad);
+        srv.apply_device_grad(0, &grad);
+        srv.apply_device_grad(2, &grad);
+        let st = srv.state.lock().unwrap();
+        match &st.opt_d {
+            DeviceOpt::PerDevice(opts) => {
+                assert_eq!(opts.len(), 3);
+                assert_eq!(opts[0].t(), 2);
+                assert_eq!(opts[1].t(), 0);
+                assert_eq!(opts[2].t(), 1);
+            }
+            _ => panic!("expected per-device slots"),
+        }
+    }
+
+    #[test]
+    fn process_uplink_steps_server_optimizer() {
+        let srv = tiny_server(false);
+        let p = srv.preset().clone();
+        let f_hat = Matrix::zeros(p.batch, p.dbar);
+        let mut y = vec![0.0f32; p.batch * p.classes];
+        for b in 0..p.batch {
+            y[b * p.classes] = 1.0;
+        }
+        let ws_before = srv.snapshot_models().1;
+        let (out, dt) = srv.process_uplink(&f_hat, &y).unwrap();
+        assert!(out.loss.is_finite());
+        let ws_after = srv.snapshot_models().1;
+        assert_ne!(ws_before.data, ws_after.data, "w_s must be updated");
+        // the returned execution time is the same one added to the run total
+        assert!(dt > 0.0);
+        assert!((srv.exec_s() - dt).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shared_rng_stream_is_exclusive_and_ordered() {
+        let srv = tiny_server(false);
+        let a = srv.with_rng(|r| r.next_u64());
+        let b = srv.with_rng(|r| r.next_u64());
+        let mut reference = Rng::new(7);
+        assert_eq!(a, reference.next_u64());
+        assert_eq!(b, reference.next_u64());
+    }
+}

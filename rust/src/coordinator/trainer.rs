@@ -1,7 +1,6 @@
-//! The paper's Algorithm 1: round-robin split-learning training with
-//! adaptive feature-wise compression on both links.
+//! The paper's Algorithm 1 as a thin facade over the concurrent coordinator.
 //!
-//! One step (t, k):
+//! One step (t, k) — the halves now live in their roles:
 //!   1. device k draws a minibatch, runs `device_fwd` → F                (eq. 3)
 //!   2. `feature_stats` (the σ-statistics kernel) → σ_norm              (eq. 10)
 //!   3. FWDP + FWQ encode → uplink frame → PS decodes F̂            (Alg. 2/3)
@@ -11,44 +10,38 @@
 //!   6. device applies the chain-rule scale δ_j/(1-p_j) to Ĝ, runs
 //!      `device_bwd` → ∇w_d; the (PS-held) device ADAM steps w_d (Sec. III-A)
 //!
-//! Every model computation goes through the [`Backend`] trait: the pure-Rust
-//! native backend by default, or pre-compiled HLO artifacts through the PJRT
-//! CPU client under `--features pjrt`.
+//! Steps 1-3 and 6 are the [`DeviceWorker`] half, 4-5 the
+//! [`ParameterServer`] half; the [`Scheduler`] drives K workers over them —
+//! sequentially (the default, exactly Algorithm 1) or concurrently with a
+//! bounded-staleness window (`--staleness S`, `--concurrent-devices N`).
+//! `Trainer` wires the three roles up from a [`TrainConfig`] and keeps the
+//! original `new`/`step`/`run`/`evaluate`/`probe_features` surface.
 
-use std::time::Instant;
-
-use crate::compression::{
-    encode_downlink, encode_uplink, CodecParams, DropKind, GradMask, Scheme,
-};
 use crate::config::{PartitionKind, TrainConfig};
 use crate::coordinator::metrics::{MetricsWriter, StepRecord, TrainSummary};
+use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::server::ParameterServer;
+use crate::coordinator::worker::{DeviceWorker, RngMode};
 use crate::data::{
     dirichlet_partition, label_shards, writer_groups, Dataset, MiniBatchLoader, SynthSpec,
 };
+use crate::ensure;
 use crate::model::PresetInfo;
-use crate::optim::{Adam, Optimizer};
 use crate::runtime::{create_backend, Backend};
 use crate::tensor::Matrix;
-use crate::transport::{Direction, Link};
-use crate::util::error::{Context, Result};
+use crate::transport::{Link, LinkReport};
+use crate::util::error::Result;
 use crate::util::Rng;
-use crate::{ensure, log_debug, log_info};
 
 pub struct Trainer {
     pub cfg: TrainConfig,
-    pub backend: Box<dyn Backend>,
     preset: PresetInfo,
-    wd: crate::model::ParamSet,
-    ws: crate::model::ParamSet,
-    opt_d: Adam,
-    opt_s: Adam,
+    server: ParameterServer,
+    workers: Vec<DeviceWorker>,
     train: Dataset,
     test: Dataset,
-    loaders: Vec<MiniBatchLoader>,
-    pub link: Link,
-    rng: Rng,
-    metrics: MetricsWriter,
-    exec_s: f64,
+    /// global index tag for facade-driven (manual) steps
+    steps_taken: usize,
 }
 
 fn synth_spec_for(preset: &str) -> SynthSpec {
@@ -64,9 +57,19 @@ impl Trainer {
     pub fn new(cfg: TrainConfig) -> Result<Trainer> {
         // size the parallel runtime (matmul blocks, FWQ planning) for this
         // run; 0 = unset, which leaves the process-global pool alone (auto
-        // by default) so library callers' explicit set_threads survives
+        // by default) so library callers' explicit set_threads survives.
+        // Exception: with concurrent device workers active, an auto-sized
+        // inner pool would spawn `workers × cores` threads (every backend
+        // call in every worker fans out over the whole machine) — divide
+        // the cores between the two layers instead.
+        let worker_threads = cfg.resolved_concurrency();
         if cfg.threads > 0 {
             crate::util::par::set_threads(cfg.threads);
+        } else if worker_threads > 1 {
+            let cores = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            crate::util::par::set_threads((cores / worker_threads).max(1));
         }
         let backend = create_backend(cfg.backend, &cfg.artifacts_dir, &cfg.preset)?;
         let preset = backend.preset().clone();
@@ -91,7 +94,7 @@ impl Trainer {
             PartitionKind::Dirichlet => dirichlet_partition(&train, cfg.devices, 0.3, &mut rng),
             PartitionKind::Writers => writer_groups(&train, cfg.devices, &mut rng),
         };
-        let loaders = parts
+        let loaders: Vec<MiniBatchLoader> = parts
             .into_iter()
             .enumerate()
             .map(|(k, mut p)| {
@@ -103,26 +106,40 @@ impl Trainer {
             })
             .collect();
 
-        let opt_d = Adam::new(cfg.lr, wd.n_params());
-        let opt_s = Adam::new(cfg.lr, ws.n_params());
-        let link = Link::new(cfg.link_capacity_bps, cfg.link_latency_s);
+        // the Algorithm-1 encode stream forks exactly where the monolithic
+        // trainer forked it (after the K loader forks), so sequential runs
+        // reproduce the pre-refactor trajectories bit-for-bit; per-device
+        // streams for staleness > 0 fork afterwards and don't perturb it
+        let shared_rng = rng.fork(0xFFFF);
         let metrics = MetricsWriter::create(&cfg.metrics_path);
-        Ok(Trainer {
-            rng: rng.fork(0xFFFF),
-            cfg,
+        let server = ParameterServer::new(
             backend,
-            preset,
             wd,
             ws,
-            opt_d,
-            opt_s,
-            train,
-            test,
-            loaders,
-            link,
+            cfg.lr,
+            cfg.devices,
+            cfg.per_device_opt,
+            shared_rng,
             metrics,
-            exec_s: 0.0,
-        })
+        );
+        let workers: Vec<DeviceWorker> = loaders
+            .into_iter()
+            .enumerate()
+            .map(|(k, loader)| {
+                DeviceWorker::new(
+                    k,
+                    loader,
+                    rng.fork(0x1_0000 + k as u64),
+                    Link::new(cfg.link_capacity_bps, cfg.link_latency_s),
+                    cfg.scheme.clone(),
+                    &preset,
+                    cfg.up_bits_per_entry,
+                    cfg.down_bits_per_entry,
+                )
+            })
+            .collect();
+
+        Ok(Trainer { cfg, preset, server, workers, train, test, steps_taken: 0 })
     }
 
     /// Static description of the loaded model (shapes, parameter layout).
@@ -130,165 +147,60 @@ impl Trainer {
         &self.preset
     }
 
-    /// Does the current scheme need σ statistics (the feature_stats kernel)?
-    fn needs_sigma(scheme: &Scheme) -> bool {
-        matches!(
-            scheme,
-            Scheme::SplitFc { drop: Some(DropKind::Adaptive), .. }
-                | Scheme::SplitFc { drop: Some(DropKind::Deterministic), .. }
-        )
+    /// The shared execution backend.
+    pub fn backend(&self) -> &dyn Backend {
+        self.server.backend()
     }
 
-    /// Run one (t, k) protocol step.
+    /// The parameter-server role (snapshots, metrics, evaluation).
+    pub fn server(&self) -> &ParameterServer {
+        &self.server
+    }
+
+    /// Aggregate communication accounting across every device link.
+    pub fn link_report(&self) -> LinkReport {
+        LinkReport::aggregate(self.workers.iter().map(|w| w.link_report()))
+    }
+
+    /// Run one (t, k) protocol step, sequential Algorithm-1 semantics
+    /// (shared encode stream, updates applied in call order).
     pub fn step(&mut self, round: usize, device: usize) -> Result<StepRecord> {
-        let t_step = Instant::now();
-        let exec_before = self.exec_s;
-        let p = self.preset.clone();
-        let scheme = self.cfg.scheme.clone();
-
-        // 1. device forward
-        let (x, y, _) = self.loaders[device].next_batch(&self.train, p.classes);
-        let t0 = Instant::now();
-        let f = self.backend.device_fwd(&self.wd, &x)?;
-        self.exec_s += t0.elapsed().as_secs_f64();
-
-        // 2. feature statistics (σ of the channel-normalized columns, eq. 10)
-        let sigma: Vec<f32> = if Self::needs_sigma(&scheme) {
-            let t0 = Instant::now();
-            let s = self.backend.feature_stats(&f)?;
-            self.exec_s += t0.elapsed().as_secs_f64();
-            s
-        } else {
-            vec![0.0; p.dbar]
-        };
-
-        // 3. uplink compression + transmit
-        let up_params = CodecParams::new(p.batch, p.dbar, self.cfg.up_bits_per_entry);
-        let enc = encode_uplink(&scheme, &f, &sigma, &up_params, &mut self.rng);
-        self.link.transmit(Direction::Uplink, &enc.frame);
-
-        // 4. server forward/backward
-        let t0 = Instant::now();
-        let out = self.backend.server_fwd_bwd(&self.ws, &enc.f_hat, &y)?;
-        self.exec_s += t0.elapsed().as_secs_f64();
-
-        // 5. server update + downlink compression
-        self.opt_s.step(&mut self.ws.data, &out.grad_ws);
-        let down_params = CodecParams::new(p.batch, p.dbar, self.cfg.down_bits_per_entry);
-        let dn = encode_downlink(&scheme, &out.g, &enc.mask, &down_params);
-        self.link.transmit(Direction::Downlink, &dn.frame);
-
-        // 6. device backward with the chain-rule scale (eq. 7 backward path)
-        let mut g_hat = dn.g_hat;
-        if let GradMask::Columns { kept, scale } = &enc.mask {
-            g_hat.scale_cols(kept, scale);
-        }
-        let t0 = Instant::now();
-        let grad_wd = self.backend.device_bwd(&self.wd, &x, &g_hat)?;
-        self.exec_s += t0.elapsed().as_secs_f64();
-        self.opt_d.step(&mut self.wd.data, &grad_wd);
-
-        let rec = StepRecord {
+        let g = self.steps_taken;
+        self.steps_taken += 1;
+        self.workers[device].run_step(
             round,
-            device,
-            loss: out.loss,
-            train_acc: out.correct / p.batch as f32,
-            up_bits: enc.frame.payload_bits,
-            down_bits: dn.frame.payload_bits,
-            up_nominal: enc.nominal_bits,
-            down_nominal: dn.nominal_bits,
-            step_s: t_step.elapsed().as_secs_f64(),
-            exec_s: self.exec_s - exec_before,
-        };
-        self.metrics.write(&rec.to_json());
-        Ok(rec)
+            g,
+            &self.server,
+            &self.train,
+            RngMode::SharedSequential,
+        )
     }
 
     /// Test-set accuracy via the backend's full-model forward.
     pub fn evaluate(&mut self) -> Result<f32> {
-        let p = self.preset.clone();
-        let dim = p.sample_dim();
-        let n_batches = (self.test.n / p.batch).max(1);
-        let mut correct = 0usize;
-        let mut total = 0usize;
-        for bi in 0..n_batches {
-            let mut x = Vec::with_capacity(p.batch * dim);
-            let mut labels = Vec::with_capacity(p.batch);
-            for j in 0..p.batch {
-                let i = (bi * p.batch + j) % self.test.n;
-                x.extend_from_slice(self.test.sample(i));
-                labels.push(self.test.y[i]);
-            }
-            let t0 = Instant::now();
-            let logits = self.backend.eval_logits(&self.wd, &self.ws, &x)?;
-            self.exec_s += t0.elapsed().as_secs_f64();
-            for (j, &lab) in labels.iter().enumerate() {
-                let row = &logits[j * p.classes..(j + 1) * p.classes];
-                let pred = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap();
-                correct += (pred == lab as usize) as usize;
-                total += 1;
-            }
-        }
-        Ok(correct as f32 / total as f32)
+        self.server.evaluate(&self.test)
     }
 
-    /// Full training run: T rounds of round-robin over K devices (Alg. 1).
+    /// Full training run: T rounds over K devices (Alg. 1), driven by the
+    /// scheduler — sequentially by default, concurrently when the config
+    /// asks for worker threads (`staleness`/`concurrent_devices`).
     pub fn run(&mut self) -> Result<TrainSummary> {
-        let t0 = Instant::now();
-        let mut summary = TrainSummary::default();
-        let mut last_round_losses = Vec::new();
-        for t in 1..=self.cfg.rounds {
-            last_round_losses.clear();
-            for k in 0..self.cfg.devices {
-                let rec = self
-                    .step(t, k)
-                    .with_context(|| format!("step t={t} k={k}"))?;
-                summary.total_up_bits += rec.up_bits;
-                summary.total_down_bits += rec.down_bits;
-                summary.steps += 1;
-                last_round_losses.push(rec.loss);
-                log_debug!(
-                    "t={t} k={k} loss={:.4} acc={:.3} up={}b down={}b",
-                    rec.loss,
-                    rec.train_acc,
-                    rec.up_bits,
-                    rec.down_bits
-                );
-            }
-            if self.cfg.eval_every > 0 && t % self.cfg.eval_every == 0 {
-                let acc = self.evaluate()?;
-                summary.eval_history.push((t, acc));
-                log_info!("round {t}: eval acc {:.4}", acc);
-            }
-        }
-        summary.final_acc = self.evaluate()?;
-        summary.eval_history.push((self.cfg.rounds, summary.final_acc));
-        summary.mean_loss_last_round = if last_round_losses.is_empty() {
-            f32::NAN
-        } else {
-            last_round_losses.iter().sum::<f32>() / last_round_losses.len() as f32
+        let sched = Scheduler {
+            rounds: self.cfg.rounds,
+            first_step: self.steps_taken,
+            staleness: self.cfg.staleness,
+            concurrency: self.cfg.resolved_concurrency(),
+            eval_every: self.cfg.eval_every,
         };
-        summary.wall_s = t0.elapsed().as_secs_f64();
-        summary.exec_s = self.exec_s;
-        summary.link_s = self.link.report().elapsed_s;
-        self.metrics.write(&summary.to_json());
-        self.metrics.flush();
+        let summary = sched.run(&self.server, &mut self.workers, &self.train, &self.test)?;
+        self.steps_taken += summary.steps;
+        self.server.write_metrics(&summary.to_json());
+        self.server.flush_metrics();
         Ok(summary)
     }
 
     /// The features + σ stats of one fresh batch (Fig.-1 dispersion bench).
     pub fn probe_features(&mut self, device: usize) -> Result<(Matrix, Vec<f32>)> {
-        let p = self.preset.clone();
-        let (x, _, _) = self.loaders[device].next_batch(&self.train, p.classes);
-        let t0 = Instant::now();
-        let f = self.backend.device_fwd(&self.wd, &x)?;
-        let sigma = self.backend.feature_stats(&f)?;
-        self.exec_s += t0.elapsed().as_secs_f64();
-        Ok((f, sigma))
+        self.workers[device].probe_features(&self.server, &self.train)
     }
 }

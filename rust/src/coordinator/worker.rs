@@ -1,0 +1,222 @@
+//! The device-side role of the split protocol.
+//!
+//! One `DeviceWorker` per client k owns everything local to that device: its
+//! minibatch loader over the device's partition, its own RNG fork, its own
+//! uplink/downlink [`Link`] (per-device accounting, aggregated by
+//! [`LinkReport::aggregate`]), and the codec configuration. A worker runs
+//! the device half of a protocol step — forward, σ statistics, FWDP/FWQ
+//! uplink encode, downlink decode with the chain-rule rescale
+//! δ_j/(1 - p_j), and the device backward pass — and talks to the
+//! [`ParameterServer`] only through its thread-safe methods, so K workers
+//! can execute steps concurrently under the scheduler's staleness window.
+
+use std::time::Instant;
+
+use crate::compression::{
+    encode_downlink, encode_uplink, CodecParams, DropKind, GradMask, Scheme,
+};
+use crate::coordinator::metrics::StepRecord;
+use crate::coordinator::server::ParameterServer;
+use crate::data::{Dataset, MiniBatchLoader};
+use crate::model::PresetInfo;
+use crate::tensor::Matrix;
+use crate::transport::{Direction, Link, LinkReport};
+use crate::util::error::Result;
+use crate::util::Rng;
+
+/// Where a step draws its uplink-encode randomness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RngMode {
+    /// The PS-held Algorithm-1 stream, consumed in global step order.
+    /// Requires strict (staleness = 0) scheduling; reproduces the
+    /// monolithic round-robin trainer's trajectory exactly.
+    SharedSequential,
+    /// This worker's own deterministic fork — the concurrent (staleness
+    /// > 0) mode, where a shared stream would be consumed in racy order.
+    PerDevice,
+}
+
+/// Does the scheme need σ statistics (the feature_stats kernel)?
+fn needs_sigma(scheme: &Scheme) -> bool {
+    matches!(
+        scheme,
+        Scheme::SplitFc { drop: Some(DropKind::Adaptive), .. }
+            | Scheme::SplitFc { drop: Some(DropKind::Deterministic), .. }
+    )
+}
+
+pub struct DeviceWorker {
+    pub device: usize,
+    loader: MiniBatchLoader,
+    rng: Rng,
+    link: Link,
+    scheme: Scheme,
+    up_params: CodecParams,
+    down_params: CodecParams,
+    batch: usize,
+    dbar: usize,
+    classes: usize,
+    use_sigma: bool,
+    /// reusable w_d snapshot buffer (filled by the PS each step)
+    wd_snapshot: Option<crate::model::ParamSet>,
+}
+
+impl DeviceWorker {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        device: usize,
+        loader: MiniBatchLoader,
+        rng: Rng,
+        link: Link,
+        scheme: Scheme,
+        preset: &PresetInfo,
+        up_bits_per_entry: f64,
+        down_bits_per_entry: f64,
+    ) -> DeviceWorker {
+        DeviceWorker {
+            device,
+            loader,
+            rng,
+            link,
+            up_params: CodecParams::new(preset.batch, preset.dbar, up_bits_per_entry),
+            down_params: CodecParams::new(preset.batch, preset.dbar, down_bits_per_entry),
+            batch: preset.batch,
+            dbar: preset.dbar,
+            classes: preset.classes,
+            use_sigma: needs_sigma(&scheme),
+            scheme,
+            wd_snapshot: None,
+        }
+    }
+
+    /// This device's link accounting (uplink/downlink bits, frames, modeled
+    /// transfer time).
+    pub fn link_report(&self) -> LinkReport {
+        self.link.report()
+    }
+
+    /// Run one full protocol step (t, k) for this device against the PS.
+    ///
+    /// `global_step` is the step's position in the strict round-robin order
+    /// (the scheduler's first-step offset + (t-1)·K + k); it tags the
+    /// metrics record so concurrent traces stay attributable.
+    pub fn run_step(
+        &mut self,
+        round: usize,
+        global_step: usize,
+        server: &ParameterServer,
+        train: &Dataset,
+        rng_mode: RngMode,
+    ) -> Result<StepRecord> {
+        let t_step = Instant::now();
+        // backend time spent on this worker's thread (device fwd/stats/bwd);
+        // the PS half's time is returned by process_uplink
+        let mut device_exec_s = 0.0;
+
+        // 1. minibatch + device forward on a w_d snapshot (eq. 3); under
+        //    staleness > 0 the snapshot may lag in-flight updates
+        let (x, y, _) = self.loader.next_batch(train, self.classes);
+        server.snapshot_device_params_into(&mut self.wd_snapshot);
+        let wd = self.wd_snapshot.as_ref().expect("snapshot populated");
+        let t0 = Instant::now();
+        let f = server.backend().device_fwd(wd, &x)?;
+        device_exec_s += t0.elapsed().as_secs_f64();
+
+        // 2. feature statistics (σ of the channel-normalized columns, eq. 10)
+        let sigma: Vec<f32> = if self.use_sigma {
+            let t0 = Instant::now();
+            let s = server.backend().feature_stats(&f)?;
+            device_exec_s += t0.elapsed().as_secs_f64();
+            s
+        } else {
+            vec![0.0; self.dbar]
+        };
+
+        // 3. uplink compression + transmit over this device's link
+        let enc = match rng_mode {
+            RngMode::SharedSequential => server.with_rng(|rng| {
+                encode_uplink(&self.scheme, &f, &sigma, &self.up_params, rng)
+            }),
+            RngMode::PerDevice => {
+                encode_uplink(&self.scheme, &f, &sigma, &self.up_params, &mut self.rng)
+            }
+        };
+        self.link.transmit(Direction::Uplink, &enc.frame);
+
+        // 4./5. the PS half: server forward/backward + w_s update (one PS
+        //       critical section), then the mask-coupled downlink encode.
+        //       The PS execution time counts into this step's exec_s (the
+        //       monolithic trainer's per-step accounting) but reaches the
+        //       run total through process_uplink itself.
+        let (out, server_dt) = server.process_uplink(&enc.f_hat, &y)?;
+        let dn = encode_downlink(&self.scheme, &out.g, &enc.mask, &self.down_params);
+        self.link.transmit(Direction::Downlink, &dn.frame);
+
+        // 6. downlink decode + chain-rule scale δ_j/(1-p_j), device backward
+        //    (eq. 7 backward path); the PS-held optimizer applies the update
+        let mut g_hat = dn.g_hat;
+        if let GradMask::Columns { kept, scale } = &enc.mask {
+            g_hat.scale_cols(kept, scale);
+        }
+        let t0 = Instant::now();
+        let grad_wd = server.backend().device_bwd(wd, &x, &g_hat)?;
+        device_exec_s += t0.elapsed().as_secs_f64();
+        server.apply_device_grad(self.device, &grad_wd);
+        server.add_exec(device_exec_s);
+
+        let rec = StepRecord {
+            round,
+            device: self.device,
+            global_step,
+            loss: out.loss,
+            train_acc: out.correct / self.batch as f32,
+            up_bits: enc.frame.payload_bits,
+            down_bits: dn.frame.payload_bits,
+            up_nominal: enc.nominal_bits,
+            down_nominal: dn.nominal_bits,
+            step_s: t_step.elapsed().as_secs_f64(),
+            // per-step execution time spans both halves, like the monolith's
+            exec_s: device_exec_s + server_dt,
+        };
+        server.write_metrics(&rec.to_json());
+        Ok(rec)
+    }
+
+    /// The features + σ stats of one fresh batch (Fig.-1 dispersion bench).
+    pub fn probe_features(
+        &mut self,
+        server: &ParameterServer,
+        train: &Dataset,
+    ) -> Result<(Matrix, Vec<f32>)> {
+        let (x, _, _) = self.loader.next_batch(train, self.classes);
+        server.snapshot_device_params_into(&mut self.wd_snapshot);
+        let wd = self.wd_snapshot.as_ref().expect("snapshot populated");
+        let t0 = Instant::now();
+        let f = server.backend().device_fwd(wd, &x)?;
+        let sigma = server.backend().feature_stats(&f)?;
+        server.add_exec(t0.elapsed().as_secs_f64());
+        Ok((f, sigma))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigma_needed_only_for_stat_driven_dropout() {
+        assert!(needs_sigma(&Scheme::splitfc(8.0)));
+        assert!(needs_sigma(&Scheme::SplitFc {
+            drop: Some(DropKind::Deterministic),
+            r: 4.0,
+            quant: crate::compression::FwqMode::NoQuant,
+        }));
+        assert!(!needs_sigma(&Scheme::Vanilla));
+        assert!(!needs_sigma(&Scheme::SplitFc {
+            drop: Some(DropKind::Random),
+            r: 4.0,
+            quant: crate::compression::FwqMode::NoQuant,
+        }));
+        assert!(!needs_sigma(&Scheme::TopS { theta: 0.0, quant: None }));
+    }
+}

@@ -1,10 +1,12 @@
 //! # SplitFC — communication-efficient split learning (paper reproduction)
 //!
 //! Three-layer architecture (see DESIGN.md):
-//! * **L3 (this crate)**: the round-robin split-learning coordinator, the
-//!   adaptive feature-wise dropout (FWDP) + quantization (FWQ) compression
-//!   pipeline over real bit-packed frames, baselines, simulated transport,
-//!   metrics, and the experiment harness for every paper table/figure.
+//! * **L3 (this crate)**: the split-learning coordinator — Algorithm 1's
+//!   round-robin decomposed into ParameterServer / DeviceWorker roles under
+//!   a bounded-staleness scheduler — the adaptive feature-wise dropout
+//!   (FWDP) + quantization (FWQ) compression pipeline over real bit-packed
+//!   frames, baselines, simulated transport, metrics, and the experiment
+//!   harness for every paper table/figure.
 //! * **Execution backends (`runtime`)**: the coordinator drives the split
 //!   model through the `runtime::Backend` trait. The default is the
 //!   dependency-free pure-Rust native backend; `--features pjrt` enables

@@ -78,7 +78,13 @@ pub struct ServerOutput {
 /// `x` is a flat NCHW batch (`batch * C*H*W` floats), `y` a flat one-hot
 /// label matrix (`batch * classes`); parameter sets use the layout declared
 /// by [`PresetInfo::device_params`] / [`PresetInfo::server_params`].
-pub trait Backend {
+///
+/// Every entry point takes `&self` and the trait requires `Send + Sync`:
+/// the concurrent coordinator shares one backend across all device-worker
+/// threads (parameters are always passed in, so implementations hold no
+/// per-call mutable state). An implementation wrapping a non-thread-safe
+/// runtime handle must add its own interior locking.
+pub trait Backend: Send + Sync {
     /// Static description of the loaded preset (shapes, param layout).
     fn preset(&self) -> &PresetInfo;
 
@@ -87,22 +93,22 @@ pub trait Backend {
     fn init_params(&self) -> Result<(ParamSet, ParamSet)>;
 
     /// Device sub-model forward: x → F (B × D̄, eq. 3).
-    fn device_fwd(&mut self, wd: &ParamSet, x: &[f32]) -> Result<Matrix>;
+    fn device_fwd(&self, wd: &ParamSet, x: &[f32]) -> Result<Matrix>;
 
     /// Per-column σ of the channel-normalized features (eq. 10) — the
     /// statistics kernel FWDP consumes.
-    fn feature_stats(&mut self, f: &Matrix) -> Result<Vec<f32>>;
+    fn feature_stats(&self, f: &Matrix) -> Result<Vec<f32>>;
 
     /// Server sub-model forward + backward on the reconstructed features
     /// (eqs. 4-5): loss, correct count, ∇w_s, and G = ∇_F̂ h.
-    fn server_fwd_bwd(&mut self, ws: &ParamSet, f_hat: &Matrix, y: &[f32]) -> Result<ServerOutput>;
+    fn server_fwd_bwd(&self, ws: &ParamSet, f_hat: &Matrix, y: &[f32]) -> Result<ServerOutput>;
 
     /// Device sub-model backward from the (decoded, chain-rule-scaled)
     /// gradient Ĝ: returns the flat ∇w_d.
-    fn device_bwd(&mut self, wd: &ParamSet, x: &[f32], g_hat: &Matrix) -> Result<Vec<f32>>;
+    fn device_bwd(&self, wd: &ParamSet, x: &[f32], g_hat: &Matrix) -> Result<Vec<f32>>;
 
     /// Full-model forward for evaluation: logits (batch * classes).
-    fn eval_logits(&mut self, wd: &ParamSet, ws: &ParamSet, x: &[f32]) -> Result<Vec<f32>>;
+    fn eval_logits(&self, wd: &ParamSet, ws: &ParamSet, x: &[f32]) -> Result<Vec<f32>>;
 
     fn name(&self) -> &'static str;
 }

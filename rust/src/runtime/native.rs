@@ -144,13 +144,13 @@ fn softmax_xent(logits: &Matrix, y: &[f32]) -> (f32, f32, Matrix) {
         let label = yrow
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .unwrap();
         let pred = row
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .unwrap();
         correct += (pred == label) as usize;
@@ -196,14 +196,14 @@ impl Backend for NativeBackend {
         ))
     }
 
-    fn device_fwd(&mut self, wd: &ParamSet, x: &[f32]) -> Result<Matrix> {
+    fn device_fwd(&self, wd: &ParamSet, x: &[f32]) -> Result<Matrix> {
         let xm = self.input_matrix(x)?;
         let mut f = self.device_pre(wd, &xm);
         f.relu_inplace();
         Ok(f)
     }
 
-    fn feature_stats(&mut self, f: &Matrix) -> Result<Vec<f32>> {
+    fn feature_stats(&self, f: &Matrix) -> Result<Vec<f32>> {
         ensure!(
             f.cols == self.preset.dbar,
             "feature_stats: {} cols vs D̄={}",
@@ -213,7 +213,7 @@ impl Backend for NativeBackend {
         Ok(normalized_sigma(&column_stats(f), self.preset.chan_size))
     }
 
-    fn server_fwd_bwd(&mut self, ws: &ParamSet, f_hat: &Matrix, y: &[f32]) -> Result<ServerOutput> {
+    fn server_fwd_bwd(&self, ws: &ParamSet, f_hat: &Matrix, y: &[f32]) -> Result<ServerOutput> {
         ensure!(
             (f_hat.rows, f_hat.cols) == (self.batch(), self.preset.dbar),
             "server_fwd_bwd: F̂ is {}x{}, expected {}x{}",
@@ -240,7 +240,7 @@ impl Backend for NativeBackend {
         Ok(ServerOutput { loss, correct, grad_ws, g })
     }
 
-    fn device_bwd(&mut self, wd: &ParamSet, x: &[f32], g_hat: &Matrix) -> Result<Vec<f32>> {
+    fn device_bwd(&self, wd: &ParamSet, x: &[f32], g_hat: &Matrix) -> Result<Vec<f32>> {
         ensure!(
             (g_hat.rows, g_hat.cols) == (self.batch(), self.preset.dbar),
             "device_bwd: Ĝ is {}x{}, expected {}x{}",
@@ -260,7 +260,7 @@ impl Backend for NativeBackend {
         Ok(grad)
     }
 
-    fn eval_logits(&mut self, wd: &ParamSet, ws: &ParamSet, x: &[f32]) -> Result<Vec<f32>> {
+    fn eval_logits(&self, wd: &ParamSet, ws: &ParamSet, x: &[f32]) -> Result<Vec<f32>> {
         let f = self.device_fwd(wd, x)?;
         let w2 = Self::weight(ws, 0);
         let w3 = Self::weight(ws, 2);
@@ -325,7 +325,7 @@ mod tests {
     }
 
     /// Full split-model loss at the given parameters (vanilla path).
-    fn loss_at(be: &mut NativeBackend, wd: &ParamSet, ws: &ParamSet, x: &[f32], y: &[f32]) -> f64 {
+    fn loss_at(be: &NativeBackend, wd: &ParamSet, ws: &ParamSet, x: &[f32], y: &[f32]) -> f64 {
         let f = be.device_fwd(wd, x).unwrap();
         be.server_fwd_bwd(ws, &f, y).unwrap().loss as f64
     }
@@ -348,7 +348,7 @@ mod tests {
 
     #[test]
     fn device_fwd_shape_nonneg_deterministic() {
-        let mut be = NativeBackend::for_preset("tiny").unwrap();
+        let be = NativeBackend::for_preset("tiny").unwrap();
         let (wd, _) = be.init_params().unwrap();
         let (x, _) = batch_xy(&be, 1);
         let f1 = be.device_fwd(&wd, &x).unwrap();
@@ -360,7 +360,7 @@ mod tests {
 
     #[test]
     fn zero_cotangent_gives_zero_device_grads() {
-        let mut be = NativeBackend::for_preset("tiny").unwrap();
+        let be = NativeBackend::for_preset("tiny").unwrap();
         let (wd, _) = be.init_params().unwrap();
         let (x, _) = batch_xy(&be, 2);
         let zeros = Matrix::zeros(8, 32);
@@ -370,7 +370,7 @@ mod tests {
 
     #[test]
     fn feature_stats_matches_host_oracle() {
-        let mut be = NativeBackend::for_preset("tiny").unwrap();
+        let be = NativeBackend::for_preset("tiny").unwrap();
         let (wd, _) = be.init_params().unwrap();
         let (x, _) = batch_xy(&be, 3);
         let f = be.device_fwd(&wd, &x).unwrap();
@@ -406,7 +406,7 @@ mod tests {
         // Central finite differences along random directions vs the analytic
         // backward pass, for both parameter sets. ReLU kinks contribute only
         // O(eps) error, so a 5% relative tolerance is comfortable.
-        let mut be = small();
+        let be = small();
         let (wd, ws) = be.init_params().unwrap();
         let (x, y) = batch_xy(&be, 7);
 
@@ -431,8 +431,8 @@ mod tests {
                 wsp.data[i] += eps * dir_s[i];
                 wsm.data[i] -= eps * dir_s[i];
             }
-            let numeric = (loss_at(&mut be, &wd, &wsp, &x, &y)
-                - loss_at(&mut be, &wd, &wsm, &x, &y))
+            let numeric = (loss_at(&be, &wd, &wsp, &x, &y)
+                - loss_at(&be, &wd, &wsm, &x, &y))
                 / (2.0 * eps as f64);
             assert!(
                 (numeric - analytic).abs() <= 0.05 * analytic.abs() + 2e-3,
@@ -452,8 +452,8 @@ mod tests {
                 wdp.data[i] += eps * dir_d[i];
                 wdm.data[i] -= eps * dir_d[i];
             }
-            let numeric = (loss_at(&mut be, &wdp, &ws, &x, &y)
-                - loss_at(&mut be, &wdm, &ws, &x, &y))
+            let numeric = (loss_at(&be, &wdp, &ws, &x, &y)
+                - loss_at(&be, &wdm, &ws, &x, &y))
                 / (2.0 * eps as f64);
             assert!(
                 (numeric - analytic).abs() <= 0.05 * analytic.abs() + 2e-3,
@@ -465,10 +465,10 @@ mod tests {
     #[test]
     fn few_sgd_steps_reduce_loss() {
         // Plain gradient descent on one fixed batch must overfit it.
-        let mut be = small();
+        let be = small();
         let (mut wd, mut ws) = be.init_params().unwrap();
         let (x, y) = batch_xy(&be, 11);
-        let first = loss_at(&mut be, &wd, &ws, &x, &y);
+        let first = loss_at(&be, &wd, &ws, &x, &y);
         for _ in 0..200 {
             let f = be.device_fwd(&wd, &x).unwrap();
             let out = be.server_fwd_bwd(&ws, &f, &y).unwrap();
@@ -480,13 +480,13 @@ mod tests {
                 *w -= 0.2 * g;
             }
         }
-        let last = loss_at(&mut be, &wd, &ws, &x, &y);
+        let last = loss_at(&be, &wd, &ws, &x, &y);
         assert!(last < first * 0.6, "loss {first} -> {last}");
     }
 
     #[test]
     fn eval_logits_composes_device_and_server() {
-        let mut be = NativeBackend::for_preset("tiny").unwrap();
+        let be = NativeBackend::for_preset("tiny").unwrap();
         let (wd, ws) = be.init_params().unwrap();
         let (x, y) = batch_xy(&be, 5);
         let logits = be.eval_logits(&wd, &ws, &x).unwrap();

@@ -115,7 +115,11 @@ impl Runtime {
 }
 
 /// [`Backend`] implementation over a loaded PJRT [`Runtime`]: each protocol
-/// entry point maps to one compiled HLO artifact.
+/// entry point maps to one compiled HLO artifact. `Backend` requires
+/// `Send + Sync`; the PJRT CPU client and loaded executables are thread-safe
+/// handles (executions are independent), and the offline stub types are
+/// plain zero-sized markers, so the impl is shareable across device-worker
+/// threads without extra locking.
 pub struct PjrtBackend {
     rt: Runtime,
 }
@@ -151,7 +155,7 @@ impl Backend for PjrtBackend {
         self.rt.load_params()
     }
 
-    fn device_fwd(&mut self, wd: &ParamSet, x: &[f32]) -> Result<Matrix> {
+    fn device_fwd(&self, wd: &ParamSet, x: &[f32]) -> Result<Matrix> {
         let mut inputs = Self::param_literals(wd)?;
         inputs.push(self.input_literal(x)?);
         let outs = self.rt.exec("device_fwd", &inputs)?;
@@ -159,13 +163,13 @@ impl Backend for PjrtBackend {
         Ok(Matrix::from_vec(p.batch, p.dbar, literal_to_vec_f32(&outs[0])?))
     }
 
-    fn feature_stats(&mut self, f: &Matrix) -> Result<Vec<f32>> {
+    fn feature_stats(&self, f: &Matrix) -> Result<Vec<f32>> {
         // the L1 Pallas kernel artifact: outputs (min, max, mean, σ_norm)
         let outs = self.rt.exec("feature_stats", &[matrix_to_literal(f)?])?;
         literal_to_vec_f32(&outs[3])
     }
 
-    fn server_fwd_bwd(&mut self, ws: &ParamSet, f_hat: &Matrix, y: &[f32]) -> Result<ServerOutput> {
+    fn server_fwd_bwd(&self, ws: &ParamSet, f_hat: &Matrix, y: &[f32]) -> Result<ServerOutput> {
         let p = self.rt.preset.clone();
         let mut inputs = Self::param_literals(ws)?;
         inputs.push(matrix_to_literal(f_hat)?);
@@ -182,7 +186,7 @@ impl Backend for PjrtBackend {
         Ok(ServerOutput { loss, correct, grad_ws, g })
     }
 
-    fn device_bwd(&mut self, wd: &ParamSet, x: &[f32], g_hat: &Matrix) -> Result<Vec<f32>> {
+    fn device_bwd(&self, wd: &ParamSet, x: &[f32], g_hat: &Matrix) -> Result<Vec<f32>> {
         let mut inputs = Self::param_literals(wd)?;
         inputs.push(self.input_literal(x)?);
         inputs.push(matrix_to_literal(g_hat)?);
@@ -194,7 +198,7 @@ impl Backend for PjrtBackend {
         Ok(grad)
     }
 
-    fn eval_logits(&mut self, wd: &ParamSet, ws: &ParamSet, x: &[f32]) -> Result<Vec<f32>> {
+    fn eval_logits(&self, wd: &ParamSet, ws: &ParamSet, x: &[f32]) -> Result<Vec<f32>> {
         let mut inputs = Self::param_literals(wd)?;
         inputs.extend(Self::param_literals(ws)?);
         inputs.push(self.input_literal(x)?);

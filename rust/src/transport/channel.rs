@@ -9,6 +9,9 @@ pub enum Direction {
 }
 
 /// A (device <-> PS) link. Transfer time = latency + bits / capacity.
+///
+/// Each device worker owns its own `Link`; the parameter-server-side view is
+/// the sum of the per-device reports ([`LinkReport::aggregate`]).
 #[derive(Debug, Clone)]
 pub struct Link {
     pub capacity_bps: f64,
@@ -20,13 +23,34 @@ pub struct Link {
     pub elapsed_s: f64,
 }
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct LinkReport {
     pub up_bits: u64,
     pub down_bits: u64,
     pub up_frames: u64,
     pub down_frames: u64,
     pub elapsed_s: f64,
+}
+
+impl LinkReport {
+    /// Fold another report into this one (field-wise sum).
+    pub fn merge(&mut self, other: &LinkReport) {
+        self.up_bits += other.up_bits;
+        self.down_bits += other.down_bits;
+        self.up_frames += other.up_frames;
+        self.down_frames += other.down_frames;
+        self.elapsed_s += other.elapsed_s;
+    }
+
+    /// Aggregate per-device reports into the PS-side total, in device order
+    /// (so the f64 time sum is deterministic across runs).
+    pub fn aggregate(reports: impl IntoIterator<Item = LinkReport>) -> LinkReport {
+        let mut total = LinkReport::default();
+        for r in reports {
+            total.merge(&r);
+        }
+        total
+    }
 }
 
 impl Link {
@@ -127,6 +151,23 @@ mod tests {
         let f = Frame::new(FrameKind::FeaturesUp, vec![0u8; 116], 1000 - Frame::HEADER_BITS);
         let t = link.transmit(Direction::Uplink, &f);
         assert!((t - 1.5).abs() < 1e-9, "t={t}"); // 0.5 latency + 1000/1000
+    }
+
+    #[test]
+    fn aggregate_sums_per_device_reports() {
+        let mut a = Link::new(1e6, 0.0);
+        let mut b = Link::new(1e6, 0.25);
+        let f = Frame::new(FrameKind::FeaturesUp, vec![0u8; 125], 1000);
+        let g = Frame::new(FrameKind::GradientsDown, vec![0u8; 25], 200);
+        a.transmit(Direction::Uplink, &f);
+        b.transmit(Direction::Uplink, &f);
+        b.transmit(Direction::Downlink, &g);
+        let total = LinkReport::aggregate([a.report(), b.report()]);
+        assert_eq!(total.up_bits, 2 * (1000 + Frame::HEADER_BITS));
+        assert_eq!(total.down_bits, 200 + Frame::HEADER_BITS);
+        assert_eq!((total.up_frames, total.down_frames), (2, 1));
+        let expect = a.report().elapsed_s + b.report().elapsed_s;
+        assert!((total.elapsed_s - expect).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,171 @@
+//! Integration: the concurrent ParameterServer/DeviceWorker coordinator.
+//!
+//! The load-bearing contract: a K-device run driven by concurrent worker
+//! threads at `staleness = 0` is **metric-identical** to the sequential
+//! Algorithm-1 round-robin — same per-step losses, bits, global-step tags,
+//! and eval history (timing fields excluded, they are wall-clock). A
+//! `staleness > 0` run relaxes the ordering but must still converge on the
+//! tiny preset.
+
+use splitfc::compression::Scheme;
+use splitfc::config::TrainConfig;
+use splitfc::coordinator::Trainer;
+use splitfc::util::Json;
+
+fn base_cfg(metrics: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::for_preset("tiny");
+    cfg.devices = 4;
+    cfg.rounds = 5;
+    cfg.n_train = 256;
+    cfg.n_test = 64;
+    cfg.eval_every = 2;
+    cfg.scheme = Scheme::splitfc(4.0);
+    cfg.up_bits_per_entry = 2.0;
+    cfg.down_bits_per_entry = 4.0;
+    cfg.seed = 11;
+    cfg.metrics_path = metrics.to_string();
+    cfg
+}
+
+fn metrics_file(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("splitfc_coord_{tag}_{}.jsonl", std::process::id()))
+}
+
+/// The deterministic fields of every step record in a metrics stream
+/// (drops the wall-clock `step_s`/`exec_s` and the summary line).
+fn step_fields(path: &std::path::Path) -> Vec<Vec<(String, String)>> {
+    let text = std::fs::read_to_string(path).expect("metrics file");
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let j = Json::parse(line).expect("valid JSONL");
+        if j.get("t").is_none() {
+            continue; // the trailing summary record
+        }
+        let mut fields = Vec::new();
+        for key in [
+            "t", "k", "g", "loss", "train_acc", "up_bits", "down_bits", "up_nominal",
+            "down_nominal",
+        ] {
+            let v = j.req(key).as_f64().unwrap_or_else(|| panic!("field {key} in {line}"));
+            fields.push((key.to_string(), format!("{v:?}")));
+        }
+        out.push(fields);
+    }
+    out
+}
+
+#[test]
+fn concurrent_staleness0_is_metric_identical_to_sequential() {
+    // reference: the sequential Algorithm-1 path (auto concurrency = 1)
+    let seq_path = metrics_file("seq");
+    let mut cfg = base_cfg(seq_path.to_str().unwrap());
+    assert_eq!(cfg.resolved_concurrency(), 1);
+    let mut tr = Trainer::new(cfg).unwrap();
+    let seq = tr.run().unwrap();
+
+    // same run driven by 4 concurrent device-worker threads, strict window
+    let conc_path = metrics_file("conc");
+    let mut cfg = base_cfg(conc_path.to_str().unwrap());
+    cfg.concurrent_devices = 4;
+    assert_eq!(cfg.resolved_concurrency(), 4);
+    let mut tr = Trainer::new(cfg).unwrap();
+    let conc = tr.run().unwrap();
+
+    // summary: accuracy, losses, bits, step counts, eval history all match
+    assert_eq!(seq.final_acc, conc.final_acc, "final accuracy");
+    assert_eq!(
+        seq.mean_loss_last_round.to_bits(),
+        conc.mean_loss_last_round.to_bits(),
+        "mean last-round loss"
+    );
+    assert_eq!(seq.total_up_bits, conc.total_up_bits, "uplink bits");
+    assert_eq!(seq.total_down_bits, conc.total_down_bits, "downlink bits");
+    assert_eq!(seq.steps, conc.steps, "step count");
+    assert_eq!(seq.steps, 20);
+    assert_eq!(seq.eval_history, conc.eval_history, "eval history");
+    assert!(!seq.eval_history.is_empty());
+    // the modeled link time is a deterministic per-device sum
+    assert_eq!(seq.link_s.to_bits(), conc.link_s.to_bits(), "modeled link time");
+
+    // per-step records: byte-identical deterministic fields, same order
+    let a = step_fields(&seq_path);
+    let b = step_fields(&conc_path);
+    assert_eq!(a.len(), 20);
+    assert_eq!(a, b, "per-step metrics must match record-for-record");
+    std::fs::remove_file(seq_path).ok();
+    std::fs::remove_file(conc_path).ok();
+}
+
+#[test]
+fn concurrent_staleness0_repeats_deterministically() {
+    let run = || {
+        let mut cfg = base_cfg("");
+        cfg.concurrent_devices = 4;
+        cfg.eval_every = 0;
+        let mut tr = Trainer::new(cfg).unwrap();
+        let s = tr.run().unwrap();
+        (s.final_acc, s.total_up_bits, s.mean_loss_last_round.to_bits())
+    };
+    assert_eq!(run(), run(), "strict concurrent runs must reproduce exactly");
+}
+
+#[test]
+fn stale_concurrent_run_converges_on_tiny() {
+    // bounded staleness: 4 devices, 2 rounds of lookahead, lossless links —
+    // updates interleave nondeterministically but training must still learn
+    let mut cfg = TrainConfig::for_preset("tiny");
+    cfg.devices = 4;
+    cfg.rounds = 10;
+    cfg.n_train = 256;
+    cfg.n_test = 64;
+    cfg.staleness = 2;
+    assert_eq!(cfg.resolved_concurrency(), 4);
+    let mut tr = Trainer::new(cfg).unwrap();
+    let s = tr.run().unwrap();
+    assert_eq!(s.steps, 40);
+    assert!(s.mean_loss_last_round.is_finite());
+    assert!(
+        s.final_acc > 0.3,
+        "staleness-2 run should beat 4-class chance, got {}",
+        s.final_acc
+    );
+}
+
+#[test]
+fn stale_run_respects_budgets_and_accounting() {
+    let mut cfg = base_cfg("");
+    cfg.staleness = 1;
+    cfg.eval_every = 0;
+    let mut tr = Trainer::new(cfg).unwrap();
+    let p = tr.preset().clone();
+    let s = tr.run().unwrap();
+    assert_eq!(s.steps, 20);
+    // every step respects the per-step budget within codec tolerance
+    let budget_up = 2.0 * (p.batch * p.dbar) as f64 * s.steps as f64;
+    assert!(
+        (s.total_up_bits as f64) <= budget_up * 1.15 + 512.0 * s.steps as f64,
+        "uplink total {} vs budget {budget_up}",
+        s.total_up_bits
+    );
+    // the aggregate link report saw every frame
+    let rep = tr.link_report();
+    assert_eq!(rep.up_frames, 20);
+    assert_eq!(rep.down_frames, 20);
+}
+
+#[test]
+fn per_device_opt_slots_train_too() {
+    // lossless links isolate the per-device ADAM slots as the only change
+    let mut cfg = TrainConfig::for_preset("tiny");
+    cfg.devices = 4;
+    cfg.rounds = 10;
+    cfg.n_train = 256;
+    cfg.n_test = 64;
+    cfg.per_device_opt = true;
+    cfg.staleness = 1;
+    let mut tr = Trainer::new(cfg).unwrap();
+    let s = tr.run().unwrap();
+    assert_eq!(s.steps, 40);
+    assert!(s.mean_loss_last_round.is_finite());
+    assert!(s.final_acc > 0.25, "per-device-opt run collapsed: {}", s.final_acc);
+}
