@@ -23,6 +23,10 @@ echo "==> concurrent coordinator smoke (4 devices, 2 threads, staleness 1)"
 cargo run --release --bin splitfc -- train --preset tiny --devices 4 \
     --threads 2 --staleness 1 --rounds 3
 
+echo "==> codec registry matrix smoke (round trip + 1 train step per codec)"
+# iterates CodecRegistry::names(): an unported or misregistered codec fails here
+cargo run --release --bin splitfc -- codec-smoke
+
 echo "==> bench smoke (THREADS=2, quick): BENCH_fwq.json / BENCH_e2e.json"
 THREADS=2 cargo bench --bench bench_compression -- --quick
 THREADS=2 cargo bench --bench bench_e2e_step -- --quick

@@ -24,17 +24,17 @@ fn run(label: &str, scheme: &str, up_bpe: f64, args: &Args) -> Result<()> {
     // generic overrides (--backend, --seed, ...) first; the per-run fields
     // below — scheme, budgets, metrics path — are fixed by this driver and
     // always win (each run writes its own metrics file)
-    cfg.apply_overrides(args);
+    cfg.apply_overrides(args)?;
     cfg.rounds = args.get_usize("rounds", 25); // 25 rounds x 8 devices = 200 steps
     cfg.devices = args.get_usize("devices", 8);
-    cfg.scheme = parse_scheme(scheme, args.get_f64("r", 16.0));
+    cfg.scheme = parse_scheme(scheme, args.get_f64("r", 16.0))?;
     cfg.up_bits_per_entry = up_bpe;
     cfg.down_bits_per_entry = 32.0;
     cfg.eval_every = args.get_usize("eval-every", 5);
     cfg.metrics_path = format!("results/e2e_{label}.jsonl");
     std::fs::create_dir_all("results").ok();
 
-    println!("\n=== {label}: {} @ C_e,d = {up_bpe} bits/entry ===", cfg.scheme.name());
+    println!("\n=== {label}: {} @ C_e,d = {up_bpe} bits/entry ===", cfg.scheme);
     let mut tr = Trainer::new(cfg)?;
     let mut losses = Vec::new();
     let rounds = tr.cfg.rounds;

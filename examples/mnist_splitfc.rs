@@ -14,7 +14,7 @@ fn accuracy(scheme: &str, r: f64, up_bpe: f64, args: &Args) -> Result<(f32, f64)
     let mut cfg = TrainConfig::for_preset("mnist");
     cfg.rounds = args.get_usize("rounds", 10);
     cfg.devices = args.get_usize("devices", 8);
-    cfg.scheme = parse_scheme(scheme, r);
+    cfg.scheme = parse_scheme(scheme, r)?;
     cfg.up_bits_per_entry = up_bpe;
     let mut tr = Trainer::new(cfg)?;
     let s = tr.run()?;

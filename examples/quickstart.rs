@@ -11,8 +11,7 @@
 //! `cfg.backend = BackendKind::Pjrt` — see e2e_train for a flag-driven
 //! variant.)
 
-use splitfc::compression::Scheme;
-use splitfc::config::TrainConfig;
+use splitfc::config::{parse_scheme, TrainConfig};
 use splitfc::coordinator::Trainer;
 use splitfc::util::Result;
 
@@ -22,7 +21,7 @@ fn main() -> Result<()> {
     let mut cfg = TrainConfig::for_preset("tiny");
     cfg.devices = 2;
     cfg.rounds = 6;
-    cfg.scheme = Scheme::splitfc(4.0);
+    cfg.scheme = parse_scheme("splitfc", 4.0)?;
     cfg.up_bits_per_entry = 1.0;
     cfg.down_bits_per_entry = 2.0;
 

@@ -13,8 +13,8 @@
 
 use splitfc::bench::{Bencher, BenchStats};
 use splitfc::compression::{
-    encode_downlink, encode_uplink, fwq_encode, CodecParams, DropKind, FwqConfig, FwqMode,
-    ScalarKind, Scheme,
+    encode_downlink, encode_uplink, fwq_encode, registered_names, CodecParams, CodecSpec,
+    DropKind, FwqConfig, FwqMode, ScalarKind, Scheme, SigmaStats,
 };
 use splitfc::tensor::{column_stats, normalized_sigma, Matrix};
 use splitfc::testkit::hetero_matrix;
@@ -99,12 +99,58 @@ fn main() {
         100.0 * splitfc.p50_s / saved
     );
 
-    fwq_paper_scale(&bench, threads_req);
+    let codec_stats = registry_sweep(&bench, quick, b, d, &f, &sigma);
+    fwq_paper_scale(&bench, threads_req, codec_stats);
+}
+
+/// Sweep every registered codec by name through the trait-dispatch path
+/// (one session reused across iterations, like the worker does) and record
+/// per-codec encode ns/op. The `codec/splitfc` row is directly comparable
+/// to `uplink/splitfc-R16@0.2` above (the enum-shim path), so a dispatch
+/// regression shows up as a gap between the two.
+fn registry_sweep(
+    bench: &Bencher,
+    quick: bool,
+    b: usize,
+    d: usize,
+    f: &Matrix,
+    sigma: &[f32],
+) -> Vec<(String, f64)> {
+    let stats = SigmaStats::new(sigma.to_vec());
+    let names = registered_names();
+    let names: Vec<String> = if quick {
+        names.into_iter().filter(|n| ["vanilla", "splitfc", "tops"].contains(&n.as_str())).collect()
+    } else {
+        names
+    };
+    let mut out = Vec::new();
+    for name in &names {
+        let spec = match CodecSpec::parse_with_r(name, 16.0) {
+            Ok(s) => s,
+            Err(e) => panic!("{name}: {e}"),
+        };
+        let mut codec = spec.build().unwrap_or_else(|e| panic!("{name}: {e}"));
+        let bpe = if name == "vanilla" { 32.0 } else { 0.2 };
+        let params = CodecParams::new(b, d, bpe);
+        let mut rng = Rng::new(11);
+        let mut st = bench.run(&format!("codec/{name}"), || {
+            codec
+                .encode_uplink(f, Some(&stats), &params, &mut rng)
+                .expect("encode")
+                .frame
+                .payload_bits
+        });
+        st.throughput = Some(((b * d) as f64 / st.p50_s / 1e6, "Mentries/s"));
+        println!("{}", st.report());
+        out.push((name.clone(), st.p50_s * 1e9));
+    }
+    out
 }
 
 /// FWQ at the paper's D̄ = 8192 scale: serial baseline vs the thread pool,
-/// with a byte-identity cross-check, recorded to BENCH_fwq.json.
-fn fwq_paper_scale(bench: &Bencher, threads_req: usize) {
+/// with a byte-identity cross-check, recorded to BENCH_fwq.json together
+/// with the per-codec registry sweep (ns/op per registered codec).
+fn fwq_paper_scale(bench: &Bencher, threads_req: usize, codec_stats: Vec<(String, f64)>) {
     let (b, d) = (64usize, 8192usize);
     let a = hetero_matrix(b, d, 42);
     let cfg = FwqConfig::paper_default(b, 0.2 * (b * d) as f64);
@@ -142,6 +188,12 @@ fn fwq_paper_scale(bench: &Bencher, threads_req: usize) {
         ("m_star", Json::num(info.m_star as f64)),
         ("bits", Json::num(bits as f64)),
         ("byte_identical_vs_serial", Json::Bool(identical)),
+        (
+            "codec_encode_ns_per_op",
+            Json::Obj(
+                codec_stats.into_iter().map(|(n, ns)| (n, Json::num(ns))).collect(),
+            ),
+        ),
     ]);
     std::fs::write("BENCH_fwq.json", j.to_string_pretty()).expect("write BENCH_fwq.json");
     println!("[saved BENCH_fwq.json]");

@@ -11,7 +11,7 @@
 //!
 //! Writes `BENCH_coordinator.json`; `-- --quick` shortens the run for CI.
 
-use splitfc::compression::Scheme;
+use splitfc::config::parse_scheme;
 use splitfc::config::TrainConfig;
 use splitfc::coordinator::Trainer;
 use splitfc::util::{par, Args, Json, Result};
@@ -28,7 +28,7 @@ fn run_one(
     cfg.n_train = 512;
     cfg.n_test = 128;
     cfg.eval_every = 0;
-    cfg.scheme = Scheme::splitfc(16.0);
+    cfg.scheme = parse_scheme("splitfc", 16.0).expect("scheme");
     cfg.up_bits_per_entry = 0.2;
     cfg.down_bits_per_entry = 32.0;
     cfg.staleness = staleness;

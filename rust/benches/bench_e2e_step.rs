@@ -17,7 +17,7 @@ use splitfc::util::{par, Args, Json, Rng};
 
 fn step_p50(bench: &Bencher, preset: &str, scheme: &str, bpe: f64, threads: usize) -> splitfc::util::Result<f64> {
     let mut cfg = TrainConfig::for_preset(preset);
-    cfg.scheme = parse_scheme(scheme, 16.0);
+    cfg.scheme = parse_scheme(scheme, 16.0)?;
     cfg.up_bits_per_entry = bpe;
     cfg.down_bits_per_entry = 32.0;
     cfg.threads = threads;

@@ -1,0 +1,506 @@
+//! The pluggable compression API: the [`Codec`] trait, codec capability
+//! reports, spec grammar, and the string-keyed [`CodecRegistry`].
+//!
+//! A codec is a *session*: one instance per device link, owning any
+//! cross-round state (e.g. the error-feedback residual of
+//! `splitfc[...,ef]`). It encodes the uplink feature matrix F into a wire
+//! [`Frame`], decodes its own frames back (the tested path IS the wire
+//! path), and mirrors the same for the downlink gradient matrix G under the
+//! uplink's [`GradMask`] coupling (paper eq. 8).
+//!
+//! Frames are *self-describing*: every codec stamps the frames it emits
+//! with a versioned codec id (FNV-1a of the canonical codec name + a wire
+//! version), and every decoder rejects frames stamped by a different
+//! codec/version instead of misparsing them.
+//!
+//! Schemes are constructed from string specs (`splitfc[ad,R=8,fwq]`,
+//! `tops[theta=0.2,eq]`, `fedlite[s=16]`, or any registered legacy alias
+//! like `splitfc-ad+pq`) through a [`CodecRegistry`] of builder closures.
+//! New codecs register without touching any core file:
+//!
+//! ```ignore
+//! splitfc::compression::register_codec("sign", |_spec| Ok(Box::new(SignCodec)));
+//! // ... then `--scheme sign` resolves like any built-in.
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{OnceLock, RwLock};
+
+use crate::compression::codecs::common::{
+    decode_downlink_styled, encode_downlink_styled, DownlinkStyle,
+};
+use crate::tensor::Matrix;
+use crate::transport::wire::Frame;
+use crate::util::error::{Context, Result};
+use crate::util::Rng;
+use crate::{ensure, err};
+
+/// Shared codec parameters (identical at device and PS).
+#[derive(Debug, Clone)]
+pub struct CodecParams {
+    pub batch: usize,
+    pub dbar: usize,
+    /// C_e — budget in bits per entry of the full B×D̄ matrix (32 = lossless)
+    pub bits_per_entry: f64,
+    /// endpoint-quantizer levels Q_ep for FWQ (paper Sec. VII: 200)
+    pub q_ep: u64,
+    /// shared seed for NoisyQuant's regenerable noise
+    pub noise_seed: u64,
+    /// columns per feature channel (eq. 10 normalization groups); codecs
+    /// that recompute σ statistics themselves (error feedback) need it.
+    /// Defaults to D̄ = one global channel.
+    pub chan_size: usize,
+}
+
+impl CodecParams {
+    pub fn new(batch: usize, dbar: usize, bits_per_entry: f64) -> CodecParams {
+        CodecParams {
+            batch,
+            dbar,
+            bits_per_entry,
+            q_ep: 200,
+            noise_seed: 0x5EED,
+            chan_size: dbar.max(1),
+        }
+    }
+
+    /// Override the per-channel column count (the model preset's value).
+    pub fn with_chan_size(mut self, chan_size: usize) -> CodecParams {
+        self.chan_size = chan_size.max(1);
+        self
+    }
+
+    /// Override Q_ep (the `--q-ep` flag).
+    pub fn with_q_ep(mut self, q_ep: u64) -> CodecParams {
+        self.q_ep = q_ep;
+        self
+    }
+
+    /// Override the NoisyQuant noise seed (the `--noise-seed` flag).
+    pub fn with_noise_seed(mut self, seed: u64) -> CodecParams {
+        self.noise_seed = seed;
+        self
+    }
+
+    pub fn total_budget(&self) -> f64 {
+        self.bits_per_entry * self.batch as f64 * self.dbar as f64
+    }
+}
+
+/// What the downlink must drop, mirroring the uplink decision (eq. 8).
+#[derive(Debug, Clone)]
+pub enum GradMask {
+    /// no coupling: full G travels back
+    All,
+    /// column dropout: kept index set I + chain-rule scales 1/(1-p_j)
+    Columns { kept: Vec<usize>, scale: Vec<f32> },
+    /// entry-level sparsification: per-row kept indices
+    Entries(Vec<Vec<usize>>),
+}
+
+#[derive(Debug, Clone)]
+pub struct EncodedUplink {
+    pub frame: Frame,
+    /// the PS-side reconstruction F̂ (decoded from the frame bytes)
+    pub f_hat: Matrix,
+    pub mask: GradMask,
+    /// paper-formula overhead (for reporting next to measured frame bits)
+    pub nominal_bits: f64,
+    /// FWQ M* when applicable (diagnostics)
+    pub m_star: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct EncodedDownlink {
+    pub frame: Frame,
+    /// the device-side reconstruction Ĝ (B×D̄, chain-rule scale NOT applied;
+    /// the worker applies δ_j/(1-p_j) per eq. 7's backward path)
+    pub g_hat: Matrix,
+    pub nominal_bits: f64,
+}
+
+/// PS-side result of decoding an uplink frame.
+#[derive(Debug, Clone)]
+pub struct DecodedUplink {
+    pub f_hat: Matrix,
+    /// kept column indices (all columns for codecs without column dropout)
+    pub kept: Vec<usize>,
+}
+
+/// The σ statistics an uplink encoder may consume (eq. 10): the per-column
+/// stddev of the channel-normalized features, produced on the hot path by
+/// the backend's `feature_stats` kernel.
+#[derive(Debug, Clone)]
+pub struct SigmaStats {
+    pub sigma_norm: Vec<f32>,
+}
+
+impl SigmaStats {
+    pub fn new(sigma_norm: Vec<f32>) -> SigmaStats {
+        SigmaStats { sigma_norm }
+    }
+}
+
+/// Capability report: what a codec needs from the protocol around it.
+/// Replaces the coordinator's hand-written matches on scheme internals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CodecRequirements {
+    /// needs the `feature_stats` σ kernel run before `encode_uplink`
+    pub needs_sigma: bool,
+    /// carries cross-round session state (e.g. an error-feedback residual);
+    /// such a codec instance must not be shared across devices
+    pub stateful: bool,
+}
+
+/// Stable 32-bit id for a codec name (FNV-1a), stamped into every frame.
+pub fn codec_id(name: &str) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in name.as_bytes() {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// A compression scheme as a session object (object-safe, `Send + Sync`).
+///
+/// One instance per device link. `encode_uplink` takes `&mut self` so
+/// sessionful codecs (error feedback) can update their state per round.
+pub trait Codec: Send + Sync {
+    /// Canonical, fully-parameterized name, e.g. `splitfc[ad,R=8,fwq]`.
+    /// Must be valid spec-grammar: `CodecSpec::parse(&codec.name())` builds
+    /// an equivalent codec, so logged names paste straight back into
+    /// `--scheme`.
+    fn name(&self) -> String;
+
+    /// Wire-format version stamped into frames; bump on layout changes.
+    fn wire_version(&self) -> u16 {
+        1
+    }
+
+    /// What this codec needs from the protocol (σ stats, session state).
+    fn requirements(&self) -> CodecRequirements;
+
+    /// Device side: compress the feature matrix F into a wire frame.
+    /// `stats` is `Some` iff `requirements().needs_sigma` asked for it.
+    fn encode_uplink(
+        &mut self,
+        f: &Matrix,
+        stats: Option<&SigmaStats>,
+        params: &CodecParams,
+        rng: &mut Rng,
+    ) -> Result<EncodedUplink>;
+
+    /// PS side: reconstruct F̂ from the frame bytes (the true wire path;
+    /// must equal the `f_hat` the encoder reported, byte-for-byte).
+    fn decode_uplink(&self, frame: &Frame, params: &CodecParams) -> Result<DecodedUplink>;
+
+    /// The downlink policy this codec applies under each [`GradMask`]
+    /// shape; the default `encode_downlink`/`decode_downlink` pair is
+    /// driven by it (override those only for a custom downlink wire
+    /// format).
+    fn downlink_style(&self) -> DownlinkStyle {
+        DownlinkStyle::default()
+    }
+
+    /// PS side: compress the gradient matrix G under the uplink coupling.
+    /// Default: the eq.-8 mask-coupled downlink at `downlink_style()`,
+    /// codec-stamped.
+    fn encode_downlink(
+        &mut self,
+        g: &Matrix,
+        mask: &GradMask,
+        params: &CodecParams,
+    ) -> Result<EncodedDownlink> {
+        let mut dn = encode_downlink_styled(&self.downlink_style(), g, mask, params);
+        dn.frame = self.stamp(dn.frame);
+        Ok(dn)
+    }
+
+    /// Device side: reconstruct Ĝ from the downlink frame (the device knows
+    /// the mask it sent uplink). Default mirrors `encode_downlink`, frame
+    /// check included.
+    fn decode_downlink(
+        &self,
+        frame: &Frame,
+        mask: &GradMask,
+        params: &CodecParams,
+    ) -> Result<Matrix> {
+        self.check_frame(frame)?;
+        decode_downlink_styled(&self.downlink_style(), frame, mask, params)
+    }
+
+    /// Stamp a frame with this codec's versioned id (encoders call this on
+    /// every frame they emit).
+    fn stamp(&self, frame: Frame) -> Frame {
+        frame.with_codec(codec_id(&self.name()), self.wire_version())
+    }
+
+    /// Reject frames emitted by a different codec or wire version
+    /// (decoders call this before touching the payload).
+    fn check_frame(&self, frame: &Frame) -> Result<()> {
+        let id = codec_id(&self.name());
+        ensure!(
+            frame.codec_id == id,
+            "frame codec id {:#010x} does not match codec {:?} ({:#010x}): \
+             encoder/decoder scheme mismatch",
+            frame.codec_id,
+            self.name(),
+            id
+        );
+        ensure!(
+            frame.codec_version == self.wire_version(),
+            "frame wire version {} does not match codec {:?} version {}",
+            frame.codec_version,
+            self.name(),
+            self.wire_version()
+        );
+        Ok(())
+    }
+}
+
+/// A parsed codec spec: `base[arg,key=value,...]` plus the CLI-level default
+/// dimensionality-reduction ratio R (used when the args don't carry `R=`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CodecSpec {
+    /// registry key, e.g. `splitfc`, `tops`, `splitfc-ad+pq`
+    pub base: String,
+    /// raw bracket arguments, order-preserved
+    pub args: Vec<String>,
+    /// default R when `args` carry no `R=` (from `--r`)
+    pub r: f64,
+}
+
+impl CodecSpec {
+    /// Parse `name` or `name[arg,...]` with an explicit default R.
+    pub fn parse_with_r(s: &str, r: f64) -> Result<CodecSpec> {
+        let s = s.trim();
+        ensure!(!s.is_empty(), "empty codec spec");
+        let (base, args) = match s.find('[') {
+            None => (s.to_string(), Vec::new()),
+            Some(i) => {
+                ensure!(s.ends_with(']'), "codec spec {s:?}: missing closing ']'");
+                let inner = &s[i + 1..s.len() - 1];
+                let args: Vec<String> = inner
+                    .split(',')
+                    .map(|a| a.trim().to_string())
+                    .filter(|a| !a.is_empty())
+                    .collect();
+                (s[..i].to_string(), args)
+            }
+        };
+        ensure!(!base.is_empty(), "codec spec {s:?}: empty codec name");
+        ensure!(
+            base.chars().all(|c| c.is_ascii_alphanumeric() || "+-_.".contains(c)),
+            "codec spec {s:?}: invalid codec name {base:?}"
+        );
+        Ok(CodecSpec { base, args, r })
+    }
+
+    /// Parse with the conventional default R = 16 (the paper's Table-I R).
+    pub fn parse(s: &str) -> Result<CodecSpec> {
+        CodecSpec::parse_with_r(s, 16.0)
+    }
+
+    /// The default (lossless) spec.
+    pub fn vanilla() -> CodecSpec {
+        CodecSpec { base: "vanilla".to_string(), args: Vec::new(), r: 1.0 }
+    }
+
+    /// Value of a `key=value` argument.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.args.iter().find_map(|a| {
+            a.strip_prefix(key).and_then(|rest| rest.strip_prefix('='))
+        })
+    }
+
+    /// Is a bare flag argument present?
+    pub fn has(&self, flag: &str) -> bool {
+        self.args.iter().any(|a| a == flag)
+    }
+
+    /// Build a fresh codec session from the process-global registry.
+    pub fn build(&self) -> Result<Box<dyn Codec>> {
+        build_codec(self)
+    }
+
+    /// The canonical, fully-resolved codec name this spec builds (e.g.
+    /// `splitfc[ad,R=8,fwq]` for `--scheme splitfc --r 8`), falling back to
+    /// the spec string when the codec cannot be built. This is the value to
+    /// record in run metadata: alias defaults (like `splitfc-quant-only`
+    /// pinning R=1) are resolved by the builder, not guessable from the
+    /// spec alone.
+    pub fn canonical_name(&self) -> String {
+        self.build().map(|c| c.name()).unwrap_or_else(|_| self.to_string())
+    }
+}
+
+impl fmt::Display for CodecSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.args.is_empty() {
+            write!(f, "{}", self.base)
+        } else {
+            write!(f, "{}[{}]", self.base, self.args.join(","))
+        }
+    }
+}
+
+type CodecBuilder = Box<dyn Fn(&CodecSpec) -> Result<Box<dyn Codec>> + Send + Sync>;
+
+/// String-keyed registry of codec builders. Keys are spec base names; each
+/// builder turns a parsed [`CodecSpec`] into a fresh codec session.
+pub struct CodecRegistry {
+    builders: BTreeMap<String, CodecBuilder>,
+}
+
+impl CodecRegistry {
+    /// An empty registry (no built-ins).
+    pub fn new() -> CodecRegistry {
+        CodecRegistry { builders: BTreeMap::new() }
+    }
+
+    /// A registry pre-populated with every built-in scheme (all rows of the
+    /// paper's Tables I-III).
+    pub fn with_builtins() -> CodecRegistry {
+        let mut reg = CodecRegistry::new();
+        crate::compression::codecs::register_builtins(&mut reg);
+        reg
+    }
+
+    /// Register (or replace) a builder under `name`.
+    pub fn register<F>(&mut self, name: &str, build: F)
+    where
+        F: Fn(&CodecSpec) -> Result<Box<dyn Codec>> + Send + Sync + 'static,
+    {
+        self.builders.insert(name.to_string(), Box::new(build));
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.builders.contains_key(name)
+    }
+
+    /// All registered base names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.builders.keys().cloned().collect()
+    }
+
+    /// Build a fresh codec session for `spec`.
+    pub fn build(&self, spec: &CodecSpec) -> Result<Box<dyn Codec>> {
+        let builder = self.builders.get(&spec.base).ok_or_else(|| {
+            err!(
+                "unknown codec {:?}; registered codecs: {}",
+                spec.base,
+                self.names().join(", ")
+            )
+        })?;
+        builder(spec).with_context(|| format!("building codec spec {spec:?}"))
+    }
+}
+
+impl Default for CodecRegistry {
+    fn default() -> CodecRegistry {
+        CodecRegistry::with_builtins()
+    }
+}
+
+static GLOBAL_REGISTRY: OnceLock<RwLock<CodecRegistry>> = OnceLock::new();
+
+fn global_registry() -> &'static RwLock<CodecRegistry> {
+    GLOBAL_REGISTRY.get_or_init(|| RwLock::new(CodecRegistry::with_builtins()))
+}
+
+/// Register a codec into the process-global registry (out-of-core codecs
+/// call this once at startup; no core file changes needed).
+pub fn register_codec<F>(name: &str, build: F)
+where
+    F: Fn(&CodecSpec) -> Result<Box<dyn Codec>> + Send + Sync + 'static,
+{
+    global_registry().write().expect("codec registry poisoned").register(name, build);
+}
+
+/// All names in the process-global registry, sorted.
+pub fn registered_names() -> Vec<String> {
+    global_registry().read().expect("codec registry poisoned").names()
+}
+
+pub fn is_registered(name: &str) -> bool {
+    global_registry().read().expect("codec registry poisoned").contains(name)
+}
+
+/// Build a fresh codec session from the process-global registry.
+pub fn build_codec(spec: &CodecSpec) -> Result<Box<dyn Codec>> {
+    global_registry().read().expect("codec registry poisoned").build(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_parses() {
+        let s = CodecSpec::parse_with_r("splitfc[ad,R=8,fwq]", 16.0).unwrap();
+        assert_eq!(s.base, "splitfc");
+        assert_eq!(s.args, vec!["ad", "R=8", "fwq"]);
+        assert_eq!(s.get("R"), Some("8"));
+        assert!(s.has("ad"));
+        assert!(!s.has("rand"));
+        assert_eq!(s.to_string(), "splitfc[ad,R=8,fwq]");
+
+        let bare = CodecSpec::parse("tops").unwrap();
+        assert_eq!(bare.base, "tops");
+        assert!(bare.args.is_empty());
+        assert_eq!(bare.to_string(), "tops");
+    }
+
+    #[test]
+    fn spec_grammar_rejects_malformed() {
+        assert!(CodecSpec::parse("").is_err());
+        assert!(CodecSpec::parse("splitfc[ad").is_err());
+        assert!(CodecSpec::parse("[ad]").is_err());
+        assert!(CodecSpec::parse("bad name[x]").is_err());
+    }
+
+    #[test]
+    fn codec_id_is_stable_and_discriminating() {
+        assert_eq!(codec_id("vanilla"), codec_id("vanilla"));
+        assert_ne!(codec_id("vanilla"), codec_id("splitfc[ad,R=8,fwq]"));
+        assert_ne!(codec_id("splitfc[ad,R=8,fwq]"), codec_id("splitfc[ad,R=16,fwq]"));
+    }
+
+    #[test]
+    fn registry_unknown_name_lists_choices() {
+        let reg = CodecRegistry::with_builtins();
+        let err = reg.build(&CodecSpec::parse("nope").unwrap()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown codec"), "{msg}");
+        assert!(msg.contains("splitfc"), "error should list registered names: {msg}");
+        assert!(msg.contains("vanilla"), "{msg}");
+    }
+
+    #[test]
+    fn builtin_registry_covers_all_table_rows() {
+        let names = CodecRegistry::with_builtins().names();
+        for want in [
+            "vanilla",
+            "splitfc",
+            "splitfc-ad",
+            "splitfc-rand",
+            "splitfc-det",
+            "splitfc-quant-only",
+            "splitfc-no-mean",
+            "splitfc-ad+pq",
+            "splitfc-ad+eq",
+            "splitfc-ad+nq",
+            "tops",
+            "randtops",
+            "tops+pq",
+            "tops+eq",
+            "tops+nq",
+            "fedlite",
+        ] {
+            assert!(names.iter().any(|n| n == want), "{want} missing from {names:?}");
+        }
+        assert_eq!(names.len(), 16);
+    }
+}

@@ -1,0 +1,246 @@
+//! Shared wire-format building blocks for codec implementations.
+//!
+//! These are public on purpose: an out-of-core codec (registered via
+//! [`crate::compression::register_codec`]) can reuse the raw-f32 dump, the
+//! length-prefixed blob embedding, and the whole mask-coupled downlink
+//! (eq. 8) instead of reimplementing them.
+
+use crate::bitio::{BitReader, BitWriter};
+use crate::compression::baselines::{qbar_levels, scalar_decode, scalar_encode, ScalarKind};
+use crate::compression::codec::{CodecParams, EncodedDownlink, GradMask};
+use crate::compression::quant::{fwq_decode, fwq_encode, FwqConfig};
+use crate::ensure;
+use crate::tensor::Matrix;
+use crate::transport::wire::{Frame, FrameKind};
+use crate::util::error::Result;
+
+/// Dump every entry of `m` as raw f32 bits.
+pub fn f32_dump(m: &Matrix, w: &mut BitWriter) {
+    for &v in &m.data {
+        w.write_f32(v);
+    }
+}
+
+/// Inverse of [`f32_dump`] at a known shape.
+pub fn f32_undump(r: &mut BitReader, rows: usize, cols: usize) -> Matrix {
+    let mut out = Matrix::zeros(rows, cols);
+    for i in 0..rows * cols {
+        out.data[i] = r.read_f32();
+    }
+    out
+}
+
+/// Embed a sub-codec's byte payload in an outer bit stream
+/// (40-bit length prefix + bytes).
+pub fn write_blob(w: &mut BitWriter, bytes: &[u8], bits: u64) {
+    w.write_bits(bits, 40);
+    for &b in bytes {
+        w.write_bits(b as u64, 8);
+    }
+}
+
+/// Inverse of [`write_blob`]: returns (bytes, declared bit length).
+pub fn read_blob(r: &mut BitReader) -> (Vec<u8>, u64) {
+    let bits = r.read_bits(40);
+    let nbytes = ((bits + 7) / 8) as usize;
+    let bytes: Vec<u8> = (0..nbytes).map(|_| r.read_bits(8) as u8).collect();
+    (bytes, bits)
+}
+
+/// How a codec quantizes the column-masked downlink when the budget is
+/// below 32 bits/entry.
+#[derive(Debug, Clone, Copy)]
+pub enum ColumnQuant {
+    /// the paper's FWQ over the kept gradient columns
+    Fwq { use_mean: bool, q_fixed: Option<u64> },
+    /// entry-wise scalar quantizer at the Q̄ = 2^{C·R/(B·D̄)} level rule
+    Scalar { kind: ScalarKind, r: f64 },
+}
+
+/// The downlink policy of a codec: what to do under each [`GradMask`]
+/// shape when the budget forces lossy transmission.
+#[derive(Debug, Clone, Copy)]
+pub struct DownlinkStyle {
+    /// quantizer for `GradMask::Columns` (SplitFC-style column coupling)
+    pub columns: ColumnQuant,
+    /// scalar kind for `GradMask::Entries` (Top-S-style entry coupling)
+    pub entries: ScalarKind,
+}
+
+impl Default for DownlinkStyle {
+    fn default() -> DownlinkStyle {
+        DownlinkStyle {
+            columns: ColumnQuant::Fwq { use_mean: true, q_fixed: None },
+            entries: ScalarKind::Eq,
+        }
+    }
+}
+
+/// Downlink: compress the intermediate gradient matrix G at the PS,
+/// honouring the uplink coupling (eq. 8). `params.bits_per_entry` is C_e,s;
+/// 32.0 means lossless (the Table-I setting). The returned frame is NOT yet
+/// codec-stamped — the calling codec stamps it.
+pub fn encode_downlink_styled(
+    style: &DownlinkStyle,
+    g: &Matrix,
+    mask: &GradMask,
+    params: &CodecParams,
+) -> EncodedDownlink {
+    let (b, dbar) = (g.rows, g.cols);
+    let lossless = params.bits_per_entry >= 32.0;
+    match mask {
+        GradMask::All => {
+            let mut w = BitWriter::with_capacity(4 * b * dbar);
+            f32_dump(g, &mut w);
+            let bits = w.bit_len();
+            EncodedDownlink {
+                frame: Frame::new(FrameKind::GradientsDown, w.into_bytes(), bits),
+                g_hat: g.clone(),
+                nominal_bits: 32.0 * (b * dbar) as f64,
+            }
+        }
+        GradMask::Columns { kept, .. } => {
+            let gt = g.gather_cols(kept);
+            let mut w = BitWriter::new();
+            let c_ava = params.total_budget();
+            let (gt_hat, nominal) = if lossless {
+                f32_dump(&gt, &mut w);
+                (gt.clone(), 32.0 * gt.len() as f64)
+            } else {
+                match style.columns {
+                    ColumnQuant::Scalar { kind, r } => {
+                        let q = qbar_levels(c_ava, r.max(1.0), b, dbar);
+                        let (bytes, bits) = scalar_encode(&gt, kind, q, params.noise_seed ^ 1);
+                        write_blob(&mut w, &bytes, bits);
+                        let out = scalar_decode(&bytes, kind, params.noise_seed ^ 1);
+                        (out, gt.len() as f64 * (q as f64).log2() + 96.0)
+                    }
+                    ColumnQuant::Fwq { use_mean, q_fixed } => {
+                        let mut cfg = FwqConfig::paper_default(b, c_ava);
+                        cfg.q_ep = params.q_ep;
+                        cfg.use_mean = use_mean;
+                        cfg.q_fixed = q_fixed;
+                        let (bytes, bits, info) = fwq_encode(&gt, &cfg);
+                        write_blob(&mut w, &bytes, bits);
+                        (fwq_decode(&bytes, &cfg), info.nominal_bits)
+                    }
+                }
+            };
+            let g_hat = gt_hat.scatter_cols(kept, dbar);
+            let bits = w.bit_len();
+            EncodedDownlink {
+                frame: Frame::new(FrameKind::GradientsDown, w.into_bytes(), bits),
+                g_hat,
+                nominal_bits: nominal,
+            }
+        }
+        GradMask::Entries(masks) => {
+            // the device knows the masks it sent: only values travel back
+            let mut w = BitWriter::new();
+            let mut g_hat = Matrix::zeros(b, dbar);
+            if lossless {
+                for (r_i, kept) in masks.iter().enumerate() {
+                    for &c in kept {
+                        w.write_f32(g.at(r_i, c));
+                        *g_hat.at_mut(r_i, c) = g.at(r_i, c);
+                    }
+                }
+                let bits = w.bit_len();
+                let n: usize = masks.iter().map(|m| m.len()).sum();
+                EncodedDownlink {
+                    frame: Frame::new(FrameKind::GradientsDown, w.into_bytes(), bits),
+                    g_hat,
+                    nominal_bits: 32.0 * n as f64,
+                }
+            } else {
+                // gather masked values into a dense vector, scalar-quantize
+                let vals: Vec<f32> = masks
+                    .iter()
+                    .enumerate()
+                    .flat_map(|(r_i, kept)| kept.iter().map(move |&c| (r_i, c)))
+                    .map(|(r_i, c)| g.at(r_i, c))
+                    .collect();
+                let q = qbar_levels(params.total_budget(), 16.0, b, dbar);
+                let vm = Matrix::from_vec(1, vals.len(), vals);
+                let (bytes, bits) = scalar_encode(&vm, style.entries, q, params.noise_seed ^ 2);
+                write_blob(&mut w, &bytes, bits);
+                let deq = scalar_decode(&bytes, style.entries, params.noise_seed ^ 2);
+                let mut it = deq.data.iter();
+                for (r_i, kept) in masks.iter().enumerate() {
+                    for &c in kept {
+                        *g_hat.at_mut(r_i, c) = *it.next().expect("mask/value count");
+                    }
+                }
+                let bits_total = w.bit_len();
+                EncodedDownlink {
+                    frame: Frame::new(FrameKind::GradientsDown, w.into_bytes(), bits_total),
+                    g_hat,
+                    nominal_bits: deq.len() as f64 * (q as f64).log2(),
+                }
+            }
+        }
+    }
+}
+
+/// Device-side inverse of [`encode_downlink_styled`] from the frame bytes
+/// alone (plus the mask the device itself sent uplink).
+pub fn decode_downlink_styled(
+    style: &DownlinkStyle,
+    frame: &Frame,
+    mask: &GradMask,
+    params: &CodecParams,
+) -> Result<Matrix> {
+    ensure!(
+        frame.kind == FrameKind::GradientsDown,
+        "downlink decode on a {:?} frame",
+        frame.kind
+    );
+    let (b, dbar) = (params.batch, params.dbar);
+    let lossless = params.bits_per_entry >= 32.0;
+    let mut rd = BitReader::with_bit_len(&frame.payload, frame.payload_bits);
+    match mask {
+        GradMask::All => Ok(f32_undump(&mut rd, b, dbar)),
+        GradMask::Columns { kept, .. } => {
+            let gt_hat = if lossless {
+                f32_undump(&mut rd, b, kept.len())
+            } else {
+                let (bytes, _) = read_blob(&mut rd);
+                match style.columns {
+                    ColumnQuant::Scalar { kind, .. } => {
+                        scalar_decode(&bytes, kind, params.noise_seed ^ 1)
+                    }
+                    ColumnQuant::Fwq { use_mean, q_fixed } => {
+                        let mut cfg = FwqConfig::paper_default(b, params.total_budget());
+                        cfg.q_ep = params.q_ep;
+                        cfg.use_mean = use_mean;
+                        cfg.q_fixed = q_fixed;
+                        fwq_decode(&bytes, &cfg)
+                    }
+                }
+            };
+            Ok(gt_hat.scatter_cols(kept, dbar))
+        }
+        GradMask::Entries(masks) => {
+            let mut g_hat = Matrix::zeros(b, dbar);
+            if lossless {
+                for (r_i, kept) in masks.iter().enumerate() {
+                    for &c in kept {
+                        *g_hat.at_mut(r_i, c) = rd.read_f32();
+                    }
+                }
+            } else {
+                let (bytes, _) = read_blob(&mut rd);
+                let deq = scalar_decode(&bytes, style.entries, params.noise_seed ^ 2);
+                let mut it = deq.data.iter();
+                for (r_i, kept) in masks.iter().enumerate() {
+                    for &c in kept {
+                        *g_hat.at_mut(r_i, c) = *it
+                            .next()
+                            .ok_or_else(|| crate::err!("downlink frame short of mask entries"))?;
+                    }
+                }
+            }
+            Ok(g_hat)
+        }
+    }
+}

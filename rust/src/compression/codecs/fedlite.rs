@@ -1,0 +1,64 @@
+//! FedLite [18] product-quantization baseline as a [`Codec`]: subvector
+//! k-means on the uplink, uncompressed downlink (paper Sec. VII).
+
+use crate::compression::baselines::{fedlite_decode, fedlite_encode, FedLiteConfig};
+use crate::compression::codec::{
+    Codec, CodecParams, CodecRequirements, DecodedUplink, EncodedUplink, GradMask, SigmaStats,
+};
+use crate::ensure;
+use crate::tensor::Matrix;
+use crate::transport::wire::{Frame, FrameKind};
+use crate::util::error::Result;
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct FedLiteCodec {
+    pub num_subvectors: usize,
+}
+
+impl Codec for FedLiteCodec {
+    fn name(&self) -> String {
+        // spec-grammar canonical name: pasteable straight back into --scheme
+        format!("fedlite[s={}]", self.num_subvectors)
+    }
+
+    fn requirements(&self) -> CodecRequirements {
+        CodecRequirements::default()
+    }
+
+    fn encode_uplink(
+        &mut self,
+        f: &Matrix,
+        _stats: Option<&SigmaStats>,
+        params: &CodecParams,
+        rng: &mut Rng,
+    ) -> Result<EncodedUplink> {
+        let (b, dbar) = (f.rows, f.cols);
+        ensure!(b == params.batch, "batch {b} != params.batch {}", params.batch);
+        ensure!(dbar == params.dbar, "dbar {dbar} != params.dbar {}", params.dbar);
+        let cfg = FedLiteConfig { num_subvectors: self.num_subvectors, iters: 10 };
+        let (bytes, bits) = fedlite_encode(f, &cfg, params.total_budget(), rng);
+        let f_hat = fedlite_decode(&bytes);
+        Ok(EncodedUplink {
+            frame: self.stamp(Frame::new(FrameKind::FeaturesUp, bytes, bits)),
+            f_hat,
+            mask: GradMask::All, // FedLite leaves G uncompressed (Sec. VII)
+            nominal_bits: bits as f64,
+            m_star: None,
+        })
+    }
+
+    fn decode_uplink(&self, frame: &Frame, params: &CodecParams) -> Result<DecodedUplink> {
+        self.check_frame(frame)?;
+        ensure!(frame.kind == FrameKind::FeaturesUp, "uplink decode on {:?} frame", frame.kind);
+        let f_hat = fedlite_decode(&frame.payload);
+        ensure!(
+            (f_hat.rows, f_hat.cols) == (params.batch, params.dbar),
+            "fedlite frame shape {:?} != ({}, {})",
+            (f_hat.rows, f_hat.cols),
+            params.batch,
+            params.dbar
+        );
+        Ok(DecodedUplink { f_hat, kept: (0..params.dbar).collect() })
+    }
+}

@@ -1,0 +1,154 @@
+//! Per-codec modules (one file per compressor family) plus the built-in
+//! registry wiring and shared wire-format helpers (`common`).
+//!
+//! Adding a codec does NOT require touching this file: implement
+//! [`crate::compression::Codec`] anywhere and call
+//! [`crate::compression::register_codec`] — this module only wires the
+//! built-in paper rows.
+
+pub mod common;
+pub mod fedlite;
+pub mod splitfc;
+pub mod tops;
+pub mod vanilla;
+
+use crate::bail;
+use crate::compression::baselines::ScalarKind;
+use crate::compression::codec::{Codec, CodecRegistry, CodecSpec};
+use crate::compression::dropout::DropKind;
+use crate::util::error::Result;
+
+use self::fedlite::FedLiteCodec;
+use self::splitfc::{FwqMode, SplitFcCodec};
+use self::tops::TopSCodec;
+use self::vanilla::VanillaCodec;
+
+/// Build a SplitFC-family codec from a spec, starting from per-alias
+/// defaults; bracket args (`ad|rand|det|none`, `R=<f64>`,
+/// `fwq|fwq-2stage|fp32|fixedQ<q>|pq|eq|nq`, `ef[=<decay>]`) override them.
+fn build_splitfc(
+    spec: &CodecSpec,
+    mut drop: Option<DropKind>,
+    mut quant: FwqMode,
+    force_r: Option<f64>,
+) -> Result<Box<dyn Codec>> {
+    let mut r = force_r.unwrap_or(spec.r);
+    let mut ef: Option<f32> = None;
+    for a in &spec.args {
+        match a.as_str() {
+            "ad" => drop = Some(DropKind::Adaptive),
+            "rand" => drop = Some(DropKind::Random),
+            "det" => drop = Some(DropKind::Deterministic),
+            "none" => drop = None,
+            "fwq" => quant = FwqMode::Optimal { use_mean: true },
+            "fwq-2stage" => quant = FwqMode::Optimal { use_mean: false },
+            "fp32" => quant = FwqMode::NoQuant,
+            "pq" => quant = FwqMode::Scalar(ScalarKind::Pq),
+            "eq" => quant = FwqMode::Scalar(ScalarKind::Eq),
+            "nq" => quant = FwqMode::Scalar(ScalarKind::Nq),
+            "ef" => ef = Some(1.0),
+            other => {
+                if let Some(v) = other.strip_prefix("R=") {
+                    r = v.parse().map_err(|_| crate::err!("bad R value {v:?}"))?;
+                } else if let Some(v) = other.strip_prefix("ef=") {
+                    ef = Some(v.parse().map_err(|_| crate::err!("bad ef decay {v:?}"))?);
+                } else if let Some(v) =
+                    other.strip_prefix("fixedQ").or_else(|| other.strip_prefix("fixedq"))
+                {
+                    let q = v.parse().map_err(|_| crate::err!("bad fixedQ level {v:?}"))?;
+                    quant = FwqMode::Fixed { q };
+                } else {
+                    bail!(
+                        "unknown splitfc codec arg {other:?} \
+                         (grammar: splitfc[ad|rand|det|none,R=<f64>,\
+                         fwq|fwq-2stage|fp32|fixedQ<q>|pq|eq|nq,ef[=<decay>]])"
+                    );
+                }
+            }
+        }
+    }
+    let mut codec = SplitFcCodec::new(drop, r, quant);
+    if let Some(decay) = ef {
+        codec = codec.with_error_feedback(decay);
+    }
+    Ok(Box::new(codec))
+}
+
+/// Build a Top-S-family codec; args: `theta=<f64>`, `pq|eq|nq|plain`.
+fn build_tops(
+    spec: &CodecSpec,
+    mut theta: f64,
+    mut quant: Option<ScalarKind>,
+) -> Result<Box<dyn Codec>> {
+    for a in &spec.args {
+        match a.as_str() {
+            "pq" => quant = Some(ScalarKind::Pq),
+            "eq" => quant = Some(ScalarKind::Eq),
+            "nq" => quant = Some(ScalarKind::Nq),
+            "plain" => quant = None,
+            other => {
+                if let Some(v) = other.strip_prefix("theta=") {
+                    theta = v.parse().map_err(|_| crate::err!("bad theta {v:?}"))?;
+                } else {
+                    bail!(
+                        "unknown tops codec arg {other:?} \
+                         (grammar: tops[theta=<f64>,pq|eq|nq|plain])"
+                    );
+                }
+            }
+        }
+    }
+    Ok(Box::new(TopSCodec { theta, quant }))
+}
+
+/// Build FedLite; args: `s=<num_subvectors>`.
+fn build_fedlite(spec: &CodecSpec) -> Result<Box<dyn Codec>> {
+    let mut s = 16usize;
+    for a in &spec.args {
+        if let Some(v) = a.strip_prefix("s=") {
+            s = v.parse().map_err(|_| crate::err!("bad subvector count {v:?}"))?;
+        } else {
+            bail!("unknown fedlite codec arg {a:?} (grammar: fedlite[s=<usize>])");
+        }
+    }
+    Ok(Box::new(FedLiteCodec { num_subvectors: s }))
+}
+
+/// Register every built-in scheme: the generic families plus the legacy
+/// Table-I/II/III row names as aliases with pre-seeded defaults.
+pub fn register_builtins(reg: &mut CodecRegistry) {
+    reg.register("vanilla", |spec: &CodecSpec| -> Result<Box<dyn Codec>> {
+        if let Some(a) = spec.args.first() {
+            bail!("vanilla takes no codec args (got {a:?})");
+        }
+        Ok(Box::new(VanillaCodec))
+    });
+
+    let splitfc_rows: [(&str, Option<DropKind>, FwqMode, Option<f64>); 9] = [
+        ("splitfc", Some(DropKind::Adaptive), FwqMode::Optimal { use_mean: true }, None),
+        ("splitfc-ad", Some(DropKind::Adaptive), FwqMode::NoQuant, None),
+        ("splitfc-rand", Some(DropKind::Random), FwqMode::NoQuant, None),
+        ("splitfc-det", Some(DropKind::Deterministic), FwqMode::NoQuant, None),
+        ("splitfc-quant-only", None, FwqMode::Optimal { use_mean: true }, Some(1.0)),
+        ("splitfc-no-mean", Some(DropKind::Adaptive), FwqMode::Optimal { use_mean: false }, None),
+        ("splitfc-ad+pq", Some(DropKind::Adaptive), FwqMode::Scalar(ScalarKind::Pq), None),
+        ("splitfc-ad+eq", Some(DropKind::Adaptive), FwqMode::Scalar(ScalarKind::Eq), None),
+        ("splitfc-ad+nq", Some(DropKind::Adaptive), FwqMode::Scalar(ScalarKind::Nq), None),
+    ];
+    for (name, drop, quant, force_r) in splitfc_rows {
+        reg.register(name, move |spec: &CodecSpec| build_splitfc(spec, drop, quant, force_r));
+    }
+
+    let tops_rows: [(&str, f64, Option<ScalarKind>); 5] = [
+        ("tops", 0.0, None),
+        ("randtops", 0.2, None),
+        ("tops+pq", 0.0, Some(ScalarKind::Pq)),
+        ("tops+eq", 0.0, Some(ScalarKind::Eq)),
+        ("tops+nq", 0.0, Some(ScalarKind::Nq)),
+    ];
+    for (name, theta, quant) in tops_rows {
+        reg.register(name, move |spec: &CodecSpec| build_tops(spec, theta, quant));
+    }
+
+    reg.register("fedlite", build_fedlite);
+}

@@ -1,0 +1,299 @@
+//! The paper's own framework as a [`Codec`]: adaptive feature-wise dropout
+//! (FWDP, Alg. 2) + feature-wise quantization (FWQ, Alg. 3), covering every
+//! SplitFC row of Tables I-III and Figs. 3-5, with an optional sessionful
+//! error-feedback extension (`splitfc[...,ef]`).
+
+use crate::bitio::BitReader;
+use crate::bitio::BitWriter;
+use crate::compression::baselines::{qbar_levels, scalar_decode, scalar_encode, ScalarKind};
+use crate::compression::codec::{
+    Codec, CodecParams, CodecRequirements, DecodedUplink, EncodedUplink, GradMask, SigmaStats,
+};
+use crate::compression::codecs::common::{
+    f32_dump, f32_undump, read_blob, write_blob, ColumnQuant, DownlinkStyle,
+};
+use crate::compression::dropout::{self, DropKind, DropoutPlan};
+use crate::compression::feedback::ErrorFeedback;
+use crate::compression::quant::{fwq_decode, fwq_encode, FwqConfig};
+use crate::ensure;
+use crate::tensor::{column_stats, normalized_sigma, Matrix};
+use crate::transport::wire::{Frame, FrameKind};
+use crate::util::error::Result;
+use crate::util::Rng;
+
+/// How the (post-dropout) matrix entries are represented on the wire.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FwqMode {
+    /// raw f32 entries (SplitFC-AD, Fig. 3)
+    NoQuant,
+    /// the paper's FWQ with optimal level allocation; `use_mean = false` is
+    /// ablation Case 3 (two-stage only)
+    Optimal { use_mean: bool },
+    /// Fig. 5: fixed levels, no optimization
+    Fixed { q: u64 },
+    /// SplitFC-AD + {PQ, EQ, NQ} rows of Tables I/II
+    Scalar(ScalarKind),
+}
+
+/// SplitFC as a codec session. `drop = None` is the quantization-only
+/// ablation (Table III Case 2); `with_error_feedback` arms the per-device
+/// residual memory (SplitFC-EF).
+#[derive(Debug)]
+pub struct SplitFcCodec {
+    pub drop: Option<DropKind>,
+    /// dimensionality-reduction ratio R = D̄/D (ignored if drop = None)
+    pub r: f64,
+    pub quant: FwqMode,
+    ef_decay: Option<f32>,
+    ef: Option<ErrorFeedback>,
+}
+
+impl SplitFcCodec {
+    pub fn new(drop: Option<DropKind>, r: f64, quant: FwqMode) -> SplitFcCodec {
+        SplitFcCodec { drop, r, quant, ef_decay: None, ef: None }
+    }
+
+    /// The paper's full framework at ratio R (AD dropout + optimal FWQ).
+    pub fn paper_default(r: f64) -> SplitFcCodec {
+        SplitFcCodec::new(Some(DropKind::Adaptive), r, FwqMode::Optimal { use_mean: true })
+    }
+
+    /// Arm the error-feedback session state: the residual F - F̂ of what the
+    /// codec destroyed is carried to the next round's encode (decay 1.0 =
+    /// classic EF; < 1 damps staleness).
+    pub fn with_error_feedback(mut self, decay: f32) -> SplitFcCodec {
+        self.ef_decay = Some(decay);
+        self
+    }
+
+    /// Current error-feedback residual norm (None until the first EF encode).
+    pub fn ef_residual_norm(&self) -> Option<f64> {
+        self.ef.as_ref().map(|e| e.residual_norm())
+    }
+
+    /// One memoryless encode round (the pre-EF pipeline, ported verbatim so
+    /// the bitstream stays byte-identical to the legacy `Scheme` path).
+    fn encode_core(
+        &self,
+        f: &Matrix,
+        sigma_norm: &[f32],
+        params: &CodecParams,
+        rng: &mut Rng,
+    ) -> Result<EncodedUplink> {
+        let (b, dbar) = (f.rows, f.cols);
+        ensure!(b == params.batch, "batch {b} != params.batch {}", params.batch);
+        ensure!(dbar == params.dbar, "dbar {dbar} != params.dbar {}", params.dbar);
+        let plan = match self.drop {
+            Some(kind) => dropout::plan(kind, sigma_norm, self.r, rng),
+            None => DropoutPlan::keep_all(dbar),
+        };
+        // gather + 1/(1-p_j) rescale fused into one row-major pass
+        let ft = f.gather_cols_scaled(&plan.kept, &plan.scale);
+        let mut w = BitWriter::new();
+        // δ index vector (D̄ bits) — only when dropout is active
+        let delta_bits = if self.drop.is_some() { dbar as f64 } else { 0.0 };
+        if self.drop.is_some() {
+            for &d in &plan.delta {
+                w.write_bits(d as u64, 1);
+            }
+        }
+        let c_ava = params.total_budget() - delta_bits;
+        let (ft_hat, nominal, m_star) = match self.quant {
+            FwqMode::NoQuant => {
+                f32_dump(&ft, &mut w);
+                (ft.clone(), delta_bits + 32.0 * ft.len() as f64, None)
+            }
+            FwqMode::Optimal { use_mean } => {
+                let mut cfg = FwqConfig::paper_default(b, c_ava);
+                cfg.q_ep = params.q_ep;
+                cfg.use_mean = use_mean;
+                let (bytes, bits, info) = fwq_encode(&ft, &cfg);
+                write_blob(&mut w, &bytes, bits);
+                let out = fwq_decode(&bytes, &cfg);
+                (out, delta_bits + info.nominal_bits, Some(info.m_star))
+            }
+            FwqMode::Fixed { q } => {
+                let mut cfg = FwqConfig::paper_default(b, c_ava);
+                cfg.q_ep = params.q_ep;
+                cfg.q_fixed = Some(q);
+                let (bytes, bits, info) = fwq_encode(&ft, &cfg);
+                write_blob(&mut w, &bytes, bits);
+                let out = fwq_decode(&bytes, &cfg);
+                (out, delta_bits + info.nominal_bits, Some(info.m_star))
+            }
+            FwqMode::Scalar(kind) => {
+                let q = qbar_levels(c_ava, self.r.max(1.0), b, dbar);
+                let (bytes, bits) = scalar_encode(&ft, kind, q, params.noise_seed);
+                write_blob(&mut w, &bytes, bits);
+                let out = scalar_decode(&bytes, kind, params.noise_seed);
+                let nominal = delta_bits + ft.len() as f64 * (q as f64).log2() + 96.0;
+                (out, nominal, None)
+            }
+        };
+        let f_hat = ft_hat.scatter_cols(&plan.kept, dbar);
+        let bits = w.bit_len();
+        Ok(EncodedUplink {
+            frame: self.stamp(Frame::new(FrameKind::FeaturesUp, w.into_bytes(), bits)),
+            f_hat,
+            mask: GradMask::Columns { kept: plan.kept, scale: plan.scale },
+            nominal_bits: nominal,
+            m_star,
+        })
+    }
+}
+
+impl Codec for SplitFcCodec {
+    fn name(&self) -> String {
+        let d = match self.drop {
+            None => "none",
+            Some(DropKind::Adaptive) => "ad",
+            Some(DropKind::Random) => "rand",
+            Some(DropKind::Deterministic) => "det",
+        };
+        let q = match self.quant {
+            FwqMode::NoQuant => "fp32".to_string(),
+            FwqMode::Optimal { use_mean: true } => "fwq".to_string(),
+            FwqMode::Optimal { use_mean: false } => "fwq-2stage".to_string(),
+            FwqMode::Fixed { q } => format!("fixedQ{q}"),
+            FwqMode::Scalar(k) => k.name().to_lowercase(),
+        };
+        let ef = if self.ef_decay.is_some() { ",ef" } else { "" };
+        format!("splitfc[{d},R={},{q}{ef}]", self.r)
+    }
+
+    fn requirements(&self) -> CodecRequirements {
+        CodecRequirements {
+            needs_sigma: matches!(
+                self.drop,
+                Some(DropKind::Adaptive) | Some(DropKind::Deterministic)
+            ),
+            stateful: self.ef_decay.is_some(),
+        }
+    }
+
+    fn downlink_style(&self) -> DownlinkStyle {
+        let columns = match self.quant {
+            FwqMode::Scalar(kind) => ColumnQuant::Scalar { kind, r: self.r },
+            FwqMode::Fixed { q } => ColumnQuant::Fwq { use_mean: true, q_fixed: Some(q) },
+            FwqMode::Optimal { use_mean } => ColumnQuant::Fwq { use_mean, q_fixed: None },
+            FwqMode::NoQuant => ColumnQuant::Fwq { use_mean: true, q_fixed: None },
+        };
+        DownlinkStyle { columns, entries: ScalarKind::Eq }
+    }
+
+    fn encode_uplink(
+        &mut self,
+        f: &Matrix,
+        stats: Option<&SigmaStats>,
+        params: &CodecParams,
+        rng: &mut Rng,
+    ) -> Result<EncodedUplink> {
+        let zeros;
+        let sigma: &[f32] = match stats {
+            Some(s) => &s.sigma_norm,
+            None => {
+                // fail loudly rather than silently degrading adaptive/det
+                // dropout to its all-constant fallback (callers must honor
+                // requirements().needs_sigma)
+                ensure!(
+                    !self.requirements().needs_sigma,
+                    "codec {:?} requires σ statistics (requirements().needs_sigma) \
+                     but encode_uplink got stats = None",
+                    self.name()
+                );
+                zeros = vec![0.0f32; f.cols];
+                &zeros
+            }
+        };
+        let Some(decay) = self.ef_decay else {
+            return self.encode_core(f, sigma, params, rng);
+        };
+        // sessionful error feedback: compensate, encode, update the residual
+        let stale = self
+            .ef
+            .as_ref()
+            .map_or(true, |e| e.residual.rows != f.rows || e.residual.cols != f.cols);
+        if stale {
+            let mut ef = ErrorFeedback::new(f.rows, f.cols);
+            ef.decay = decay;
+            self.ef = Some(ef);
+        }
+        let comp = self.ef.as_ref().expect("ef state").compensate(f);
+        // σ statistics must be recomputed from the *compensated* matrix:
+        // stat-driven dropout (AD / deterministic) has to see the residual,
+        // or it keeps dropping the same columns every round and the error
+        // in them never rotates back in (mirrors ErrorFeedback::encode_round)
+        let sigma_comp;
+        let sigma: &[f32] = if self.requirements().needs_sigma {
+            sigma_comp = normalized_sigma(&column_stats(&comp), params.chan_size);
+            &sigma_comp
+        } else {
+            sigma
+        };
+        let enc = self.encode_core(&comp, sigma, params, rng)?;
+        self.ef.as_mut().expect("ef state").absorb(&comp, &enc);
+        Ok(enc)
+    }
+
+    fn decode_uplink(&self, frame: &Frame, params: &CodecParams) -> Result<DecodedUplink> {
+        self.check_frame(frame)?;
+        ensure!(frame.kind == FrameKind::FeaturesUp, "uplink decode on {:?} frame", frame.kind);
+        // bit-exact fence: reading past the declared payload length is a
+        // codec bug and should fail loudly, not zero-fill from padding
+        let mut rd = BitReader::with_bit_len(&frame.payload, frame.payload_bits);
+        let dbar = params.dbar;
+        let (kept, delta_bits): (Vec<usize>, f64) = if self.drop.is_some() {
+            let delta: Vec<bool> = (0..dbar).map(|_| rd.read_bits(1) == 1).collect();
+            ((0..dbar).filter(|&i| delta[i]).collect(), dbar as f64)
+        } else {
+            ((0..dbar).collect(), 0.0)
+        };
+        let c_ava = params.total_budget() - delta_bits;
+        let ft_hat = match self.quant {
+            FwqMode::NoQuant => f32_undump(&mut rd, params.batch, kept.len()),
+            FwqMode::Optimal { use_mean } => {
+                let (bytes, _) = read_blob(&mut rd);
+                let mut cfg = FwqConfig::paper_default(params.batch, c_ava);
+                cfg.q_ep = params.q_ep;
+                cfg.use_mean = use_mean;
+                fwq_decode(&bytes, &cfg)
+            }
+            FwqMode::Fixed { q } => {
+                let (bytes, _) = read_blob(&mut rd);
+                let mut cfg = FwqConfig::paper_default(params.batch, c_ava);
+                cfg.q_ep = params.q_ep;
+                cfg.q_fixed = Some(q);
+                fwq_decode(&bytes, &cfg)
+            }
+            FwqMode::Scalar(kind) => {
+                let (bytes, _) = read_blob(&mut rd);
+                scalar_decode(&bytes, kind, params.noise_seed)
+            }
+        };
+        Ok(DecodedUplink { f_hat: ft_hat.scatter_cols(&kept, dbar), kept })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requirements_reflect_drop_kind() {
+        let need = |d| SplitFcCodec::new(d, 8.0, FwqMode::NoQuant).requirements().needs_sigma;
+        assert!(need(Some(DropKind::Adaptive)));
+        assert!(need(Some(DropKind::Deterministic)));
+        assert!(!need(Some(DropKind::Random)));
+        assert!(!need(None));
+    }
+
+    #[test]
+    fn ef_flag_shows_in_name_and_requirements() {
+        let plain = SplitFcCodec::paper_default(8.0);
+        assert!(!plain.requirements().stateful);
+        assert_eq!(plain.name(), "splitfc[ad,R=8,fwq]");
+        let ef = SplitFcCodec::paper_default(8.0).with_error_feedback(1.0);
+        assert!(ef.requirements().stateful);
+        assert_eq!(ef.name(), "splitfc[ad,R=8,fwq,ef]");
+    }
+}

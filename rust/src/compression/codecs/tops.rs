@@ -1,0 +1,163 @@
+//! Top-S [16] / RandTop-S [17] entry-sparsification baselines as a
+//! [`Codec`], optionally composed with a scalar quantizer (the
+//! `topS+{PQ,EQ,NQ}` rows of Tables I/II).
+
+use crate::bitio::{BitReader, BitWriter};
+use crate::compression::baselines::{
+    qbar_levels, scalar_decode, scalar_encode, sparsity_level, top_s_decode, top_s_encode,
+    ScalarKind, TopSConfig,
+};
+use crate::compression::baselines::topk::{log2_binomial, top_s_mask};
+use crate::compression::codec::{
+    Codec, CodecParams, CodecRequirements, DecodedUplink, EncodedUplink, GradMask, SigmaStats,
+};
+use crate::compression::codecs::common::{read_blob, write_blob, DownlinkStyle};
+use crate::ensure;
+use crate::tensor::Matrix;
+use crate::transport::wire::{Frame, FrameKind};
+use crate::util::error::Result;
+use crate::util::Rng;
+
+/// Top-S entry sparsification; `theta > 0` randomizes the kept set
+/// (RandTop-S), `quant` scalar-quantizes the surviving entries.
+#[derive(Debug, Clone)]
+pub struct TopSCodec {
+    /// RandTop-S randomization θ (0 ⇒ plain Top-S)
+    pub theta: f64,
+    pub quant: Option<ScalarKind>,
+}
+
+fn index_width(dbar: usize) -> u32 {
+    (usize::BITS - (dbar.max(2) - 1).leading_zeros()).max(1)
+}
+
+impl Codec for TopSCodec {
+    fn name(&self) -> String {
+        // spec-grammar canonical name: pasteable straight back into --scheme
+        let q = match self.quant {
+            Some(k) => format!(",{}", k.name().to_lowercase()),
+            None => String::new(),
+        };
+        format!("tops[theta={}{q}]", self.theta)
+    }
+
+    fn requirements(&self) -> CodecRequirements {
+        CodecRequirements::default()
+    }
+
+    fn downlink_style(&self) -> DownlinkStyle {
+        DownlinkStyle { entries: self.quant.unwrap_or(ScalarKind::Eq), ..Default::default() }
+    }
+
+    fn encode_uplink(
+        &mut self,
+        f: &Matrix,
+        _stats: Option<&SigmaStats>,
+        params: &CodecParams,
+        rng: &mut Rng,
+    ) -> Result<EncodedUplink> {
+        let (b, dbar) = (f.rows, f.cols);
+        ensure!(b == params.batch, "batch {b} != params.batch {}", params.batch);
+        ensure!(dbar == params.dbar, "dbar {dbar} != params.dbar {}", params.dbar);
+        let value_bits = match self.quant {
+            None => 32.0,
+            Some(_) => {
+                let q = qbar_levels(params.total_budget(), 16.0, b, dbar);
+                (q as f64).log2()
+            }
+        };
+        let s = sparsity_level(dbar, params.bits_per_entry, value_bits).max(1);
+        let cfg = TopSConfig { s, theta: self.theta };
+        match self.quant {
+            None => {
+                let (bytes, bits, masks) = top_s_encode(f, &cfg, rng);
+                let f_hat = top_s_decode(&bytes);
+                let nominal = b as f64 * (s as f64 * 32.0 + log2_binomial(dbar, s));
+                Ok(EncodedUplink {
+                    frame: self.stamp(Frame::new(FrameKind::FeaturesUp, bytes, bits)),
+                    f_hat,
+                    mask: GradMask::Entries(masks),
+                    nominal_bits: nominal,
+                    m_star: None,
+                })
+            }
+            Some(kind) => {
+                // sparse + scalar: sparsify first, quantize the masked matrix
+                let masks = top_s_mask(f, &cfg, rng);
+                let mut sparse = Matrix::zeros(b, dbar);
+                for (r_i, kept) in masks.iter().enumerate() {
+                    for &c in kept {
+                        *sparse.at_mut(r_i, c) = f.at(r_i, c);
+                    }
+                }
+                let q = qbar_levels(params.total_budget(), 16.0, b, dbar);
+                let mut w = BitWriter::new();
+                // indices per row (device-side mask must reach the PS)
+                let iw = index_width(dbar);
+                w.write_u32(s as u32);
+                for kept in &masks {
+                    for &c in kept {
+                        w.write_bits(c as u64, iw);
+                    }
+                }
+                let (bytes, bits) = scalar_encode(&sparse, kind, q, params.noise_seed);
+                write_blob(&mut w, &bytes, bits);
+                let f_hat = scalar_decode(&bytes, kind, params.noise_seed);
+                // zero out the entries the mask dropped (quantizer noise)
+                let mut f_hat_sp = Matrix::zeros(b, dbar);
+                for (r_i, kept) in masks.iter().enumerate() {
+                    for &c in kept {
+                        *f_hat_sp.at_mut(r_i, c) = f_hat.at(r_i, c);
+                    }
+                }
+                let nominal =
+                    b as f64 * (s as f64 * (q as f64).log2() + log2_binomial(dbar, s));
+                let bits_total = w.bit_len();
+                Ok(EncodedUplink {
+                    frame: self
+                        .stamp(Frame::new(FrameKind::FeaturesUp, w.into_bytes(), bits_total)),
+                    f_hat: f_hat_sp,
+                    mask: GradMask::Entries(masks),
+                    nominal_bits: nominal,
+                    m_star: None,
+                })
+            }
+        }
+    }
+
+    fn decode_uplink(&self, frame: &Frame, params: &CodecParams) -> Result<DecodedUplink> {
+        self.check_frame(frame)?;
+        ensure!(frame.kind == FrameKind::FeaturesUp, "uplink decode on {:?} frame", frame.kind);
+        let (b, dbar) = (params.batch, params.dbar);
+        let f_hat = match self.quant {
+            None => {
+                let out = top_s_decode(&frame.payload);
+                ensure!(
+                    (out.rows, out.cols) == (b, dbar),
+                    "topS frame shape {:?} != ({b}, {dbar})",
+                    (out.rows, out.cols)
+                );
+                out
+            }
+            Some(kind) => {
+                let mut rd = BitReader::with_bit_len(&frame.payload, frame.payload_bits);
+                let s = rd.read_u32() as usize;
+                let iw = index_width(dbar);
+                let masks: Vec<Vec<usize>> = (0..b)
+                    .map(|_| (0..s).map(|_| rd.read_bits(iw) as usize).collect())
+                    .collect();
+                let (bytes, _) = read_blob(&mut rd);
+                let dense = scalar_decode(&bytes, kind, params.noise_seed);
+                let mut out = Matrix::zeros(b, dbar);
+                for (r_i, kept) in masks.iter().enumerate() {
+                    for &c in kept {
+                        ensure!(c < dbar, "topS index {c} out of range {dbar}");
+                        *out.at_mut(r_i, c) = dense.at(r_i, c);
+                    }
+                }
+                out
+            }
+        };
+        Ok(DecodedUplink { f_hat, kept: (0..dbar).collect() })
+    }
+}

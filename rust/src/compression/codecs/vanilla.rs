@@ -1,0 +1,55 @@
+//! Lossless 32-bit transmission (the "Vanilla SL" row) as a [`Codec`].
+
+use crate::bitio::{BitReader, BitWriter};
+use crate::compression::codec::{
+    Codec, CodecParams, CodecRequirements, DecodedUplink, EncodedUplink, GradMask, SigmaStats,
+};
+use crate::compression::codecs::common::{f32_dump, f32_undump};
+use crate::ensure;
+use crate::tensor::Matrix;
+use crate::transport::wire::{Frame, FrameKind};
+use crate::util::error::Result;
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VanillaCodec;
+
+impl Codec for VanillaCodec {
+    fn name(&self) -> String {
+        "vanilla".to_string()
+    }
+
+    fn requirements(&self) -> CodecRequirements {
+        CodecRequirements::default()
+    }
+
+    fn encode_uplink(
+        &mut self,
+        f: &Matrix,
+        _stats: Option<&SigmaStats>,
+        params: &CodecParams,
+        _rng: &mut Rng,
+    ) -> Result<EncodedUplink> {
+        let (b, dbar) = (f.rows, f.cols);
+        ensure!(b == params.batch, "batch {b} != params.batch {}", params.batch);
+        ensure!(dbar == params.dbar, "dbar {dbar} != params.dbar {}", params.dbar);
+        let mut w = BitWriter::with_capacity(4 * b * dbar);
+        f32_dump(f, &mut w);
+        let bits = w.bit_len();
+        Ok(EncodedUplink {
+            frame: self.stamp(Frame::new(FrameKind::FeaturesUp, w.into_bytes(), bits)),
+            f_hat: f.clone(),
+            mask: GradMask::All,
+            nominal_bits: 32.0 * (b * dbar) as f64,
+            m_star: None,
+        })
+    }
+
+    fn decode_uplink(&self, frame: &Frame, params: &CodecParams) -> Result<DecodedUplink> {
+        self.check_frame(frame)?;
+        ensure!(frame.kind == FrameKind::FeaturesUp, "uplink decode on {:?} frame", frame.kind);
+        let mut rd = BitReader::with_bit_len(&frame.payload, frame.payload_bits);
+        let f_hat = f32_undump(&mut rd, params.batch, params.dbar);
+        Ok(DecodedUplink { f_hat, kept: (0..params.dbar).collect() })
+    }
+}

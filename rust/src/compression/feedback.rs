@@ -46,17 +46,36 @@ impl ErrorFeedback {
         }
     }
 
+    /// Residual update against a codec result's **unscaled** reconstruction.
+    ///
+    /// EF theory wants a *contractive* compressor; FWDP's 1/(1-p) inflation
+    /// is unbiased but expansive, so the residual is computed against the
+    /// reconstruction with kept columns divided back by their scale — with
+    /// `DropKind::Deterministic` (scale = 1, keep-top-σ) this is exactly
+    /// classic EF over a contractive operator. Shared by `encode_round` and
+    /// the sessionful `splitfc[...,ef]` codec.
+    pub fn absorb(&mut self, compensated: &Matrix, enc: &EncodedUplink) {
+        let mut recon = enc.f_hat.clone();
+        if let crate::compression::GradMask::Columns { kept, scale } = &enc.mask {
+            for (j, &c) in kept.iter().enumerate() {
+                if scale[j] != 1.0 {
+                    recon.scale_col(c, 1.0 / scale[j]);
+                }
+            }
+        }
+        self.update(compensated, &recon);
+    }
+
     pub fn residual_norm(&self) -> f64 {
         self.residual.sq_norm().sqrt()
     }
 
     /// One EF-compressed uplink round; returns the codec result.
     ///
-    /// EF theory wants a *contractive* compressor; FWDP's 1/(1-p) inflation
-    /// is unbiased but expansive, so the residual is computed against the
-    /// **unscaled** reconstruction (kept columns divided back by their
-    /// scale) — with `DropKind::Deterministic` (scale = 1, keep-top-σ) this
-    /// is exactly classic EF over a contractive operator.
+    /// σ statistics are recomputed from the **compensated** matrix — the
+    /// residual must be visible to the dropout plan, or stat-driven
+    /// variants keep dropping the same columns and the error in them never
+    /// rotates back in. The residual update goes through [`Self::absorb`].
     pub fn encode_round(
         &mut self,
         scheme: &Scheme,
@@ -68,15 +87,7 @@ impl ErrorFeedback {
         let comp = self.compensate(f);
         let sigma = normalized_sigma(&column_stats(&comp), chan_size);
         let enc = encode_uplink(scheme, &comp, &sigma, params, rng);
-        let mut recon = enc.f_hat.clone();
-        if let crate::compression::GradMask::Columns { kept, scale } = &enc.mask {
-            for (j, &c) in kept.iter().enumerate() {
-                if scale[j] != 1.0 {
-                    recon.scale_col(c, 1.0 / scale[j]);
-                }
-            }
-        }
-        self.update(&comp, &recon);
+        self.absorb(&comp, &enc);
         enc
     }
 }

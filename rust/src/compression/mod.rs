@@ -1,15 +1,24 @@
-//! The paper's contribution: adaptive feature-wise compression.
+//! The paper's contribution: adaptive feature-wise compression, behind a
+//! pluggable, sessionful codec API.
 //!
+//! * `codec` — the [`Codec`] trait, capability reports, spec grammar, and
+//!   the string-keyed [`CodecRegistry`] (+ the process-global registry)
+//! * `codecs` — one module per compressor family (vanilla, SplitFC, Top-S,
+//!   FedLite) plus shared wire-format helpers (`codecs::common`)
 //! * `dropout` — FWDP, Algorithm 2 (Sec. V)
 //! * `quant` — FWQ, Algorithm 3 (Sec. VI) over real bit streams
 //! * `waterfill` — problem (P) + Theorem 1 level allocation (Sec. VI-B/C)
 //! * `error` — the error identities/bounds (eqs. 13, 19-21)
+//! * `feedback` — the per-device error-feedback residual state that
+//!   sessionful codecs (`splitfc[...,ef]`) carry across rounds
 //! * `baselines` — Top-S [16], RandTop-S [17], FedLite [18], PQ/EQ/NQ [23-25]
-//! * `pipeline` — framework-level uplink/downlink codecs for every row of
-//!   Tables I-III and Figs. 3-5
+//! * `pipeline` — DEPRECATED: the old closed `Scheme` enum + free-function
+//!   pipeline, now a thin shim over the registry (one release, then gone)
 
 pub mod analysis;
 pub mod baselines;
+pub mod codec;
+pub mod codecs;
 pub mod dropout;
 pub mod error;
 pub mod feedback;
@@ -18,10 +27,17 @@ pub mod quant;
 pub mod waterfill;
 
 pub use baselines::ScalarKind;
+pub use codec::{
+    build_codec, codec_id, is_registered, register_codec, registered_names, Codec, CodecParams,
+    CodecRegistry, CodecRequirements, CodecSpec, DecodedUplink, EncodedDownlink, EncodedUplink,
+    GradMask, SigmaStats,
+};
+pub use codecs::fedlite::FedLiteCodec;
+pub use codecs::splitfc::{FwqMode, SplitFcCodec};
+pub use codecs::tops::TopSCodec;
+pub use codecs::vanilla::VanillaCodec;
 pub use dropout::DropKind;
 pub use error::CodecError;
-pub use pipeline::{
-    encode_downlink, encode_uplink, CodecParams, EncodedDownlink, EncodedUplink, FwqMode,
-    GradMask, Scheme,
-};
+pub use feedback::ErrorFeedback;
+pub use pipeline::{decode_uplink_splitfc, encode_downlink, encode_uplink, Scheme};
 pub use quant::{fwq_decode, fwq_encode, FwqConfig};

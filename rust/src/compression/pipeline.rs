@@ -1,40 +1,37 @@
-//! Framework-level codecs: the scheme enum covering every row of the paper's
-//! Tables I-III and Figs. 3-5, with real encode → frame → decode round trips
-//! for both the uplink (features, eq. 7) and the downlink (gradients, eq. 8).
+//! **Deprecated thin shim** over the pluggable codec API.
 //!
-//! The uplink encoder runs at the *device*: it consumes F plus the
-//! σ-statistics (from the `feature_stats` HLO artifact) and emits a wire
-//! frame; `f_hat` is what the PS reconstructs from that frame (we decode our
-//! own bytes — the tested path IS the wire path). The downlink mirrors this
-//! for G with the dropout coupling of eq. (8) (only kept columns / entries
-//! travel back).
+//! The closed [`Scheme`] enum and the free `encode_uplink` /
+//! `encode_downlink` / `decode_uplink_splitfc` functions survive for one
+//! release as a compatibility layer: every call now delegates to the
+//! [`crate::compression::Codec`] trait implementations in
+//! `compression::codecs::*`, constructed per call. New code should build a
+//! codec session from a [`crate::compression::CodecSpec`] through the
+//! [`crate::compression::CodecRegistry`] instead (see the README "Codec
+//! architecture" section); this shim will be removed once nothing in-tree
+//! names `Scheme`.
+//!
+//! The golden tests below (plus `rust/tests/integration_codecs.rs`) lock
+//! the ported codecs byte-identical to the historical enum pipeline.
 
-use crate::bitio::{BitReader, BitWriter};
-use crate::compression::baselines::{
-    fedlite_decode, fedlite_encode, qbar_levels, scalar_decode, scalar_encode, sparsity_level,
-    top_s_decode, top_s_encode, FedLiteConfig, ScalarKind, TopSConfig,
-};
-use crate::compression::dropout::{self, DropKind, DropoutPlan};
-use crate::compression::quant::{fwq_decode, fwq_encode, FwqConfig};
+use crate::compression::baselines::ScalarKind;
+use crate::compression::codec::{Codec, SigmaStats};
+use crate::compression::codecs::fedlite::FedLiteCodec;
+use crate::compression::codecs::splitfc::SplitFcCodec;
+use crate::compression::codecs::tops::TopSCodec;
+use crate::compression::codecs::vanilla::VanillaCodec;
+use crate::compression::dropout::DropKind;
 use crate::tensor::Matrix;
-use crate::transport::wire::{Frame, FrameKind};
+use crate::transport::wire::Frame;
 use crate::util::Rng;
 
-/// How the (post-dropout) matrix entries are represented on the wire.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum FwqMode {
-    /// raw f32 entries (SplitFC-AD, Fig. 3)
-    NoQuant,
-    /// the paper's FWQ with optimal level allocation; `use_mean = false` is
-    /// ablation Case 3 (two-stage only)
-    Optimal { use_mean: bool },
-    /// Fig. 5: fixed levels, no optimization
-    Fixed { q: u64 },
-    /// SplitFC-AD + {PQ, EQ, NQ} rows of Tables I/II
-    Scalar(ScalarKind),
-}
+pub use crate::compression::codec::{
+    CodecParams, DecodedUplink, EncodedDownlink, EncodedUplink, GradMask,
+};
+pub use crate::compression::codecs::splitfc::FwqMode;
 
-/// One row of the paper's comparison tables.
+/// One row of the paper's comparison tables. **Deprecated**: a closed enum
+/// duplicate of what the codec registry expresses openly; kept as a shim
+/// for one release.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Scheme {
     /// lossless 32-bit transmission (the "Vanilla SL" row)
@@ -62,177 +59,36 @@ impl Scheme {
         }
     }
 
-    pub fn name(&self) -> String {
+    /// The equivalent codec session (fresh, no error-feedback state).
+    pub fn to_codec(&self) -> Box<dyn Codec> {
         match self {
-            Scheme::Vanilla => "vanilla".into(),
+            Scheme::Vanilla => Box::new(VanillaCodec),
             Scheme::SplitFc { drop, r, quant } => {
-                let d: String = match drop {
-                    None => "none".into(),
-                    Some(DropKind::Adaptive) => "ad".into(),
-                    Some(DropKind::Random) => "rand".into(),
-                    Some(DropKind::Deterministic) => "det".into(),
-                };
-                let q = match quant {
-                    FwqMode::NoQuant => "fp32".into(),
-                    FwqMode::Optimal { use_mean: true } => "fwq".into(),
-                    FwqMode::Optimal { use_mean: false } => "fwq-2stage".into(),
-                    FwqMode::Fixed { q } => format!("fixedQ{q}"),
-                    FwqMode::Scalar(k) => k.name().to_lowercase(),
-                };
-                format!("splitfc[{d},R={r},{q}]")
+                Box::new(SplitFcCodec::new(*drop, *r, *quant))
             }
             Scheme::TopS { theta, quant } => {
-                let q = quant.map(|k| format!("+{}", k.name())).unwrap_or_default();
-                if *theta > 0.0 {
-                    format!("randtopS(θ={theta}){q}")
-                } else {
-                    format!("topS{q}")
-                }
+                Box::new(TopSCodec { theta: *theta, quant: *quant })
             }
-            Scheme::FedLite { num_subvectors } => format!("fedlite(s={num_subvectors})"),
+            Scheme::FedLite { num_subvectors } => {
+                Box::new(FedLiteCodec { num_subvectors: *num_subvectors })
+            }
         }
     }
-}
 
-/// Shared codec parameters (identical at device and PS).
-#[derive(Debug, Clone)]
-pub struct CodecParams {
-    pub batch: usize,
-    pub dbar: usize,
-    /// C_e — budget in bits per entry of the full B×D̄ matrix (32 = lossless)
-    pub bits_per_entry: f64,
-    pub q_ep: u64,
-    /// shared seed for NoisyQuant's regenerable noise
-    pub noise_seed: u64,
-}
-
-impl CodecParams {
-    pub fn new(batch: usize, dbar: usize, bits_per_entry: f64) -> CodecParams {
-        CodecParams { batch, dbar, bits_per_entry, q_ep: 200, noise_seed: 0x5EED }
+    /// The registry spec string this scheme corresponds to. Codec canonical
+    /// names ARE valid spec grammar, so this is just the codec name —
+    /// `CodecSpec::parse(&scheme.spec())` builds an equivalent codec.
+    pub fn spec(&self) -> String {
+        self.name()
     }
 
-    pub fn total_budget(&self) -> f64 {
-        self.bits_per_entry * self.batch as f64 * self.dbar as f64
+    pub fn name(&self) -> String {
+        self.to_codec().name()
     }
-}
-
-/// What the downlink must drop, mirroring the uplink decision (eq. 8).
-#[derive(Debug, Clone)]
-pub enum GradMask {
-    /// no coupling: full G travels back
-    All,
-    /// column dropout: kept index set I + chain-rule scales 1/(1-p_j)
-    Columns { kept: Vec<usize>, scale: Vec<f32> },
-    /// entry-level sparsification: per-row kept indices
-    Entries(Vec<Vec<usize>>),
-}
-
-#[derive(Debug, Clone)]
-pub struct EncodedUplink {
-    pub frame: Frame,
-    /// the PS-side reconstruction F̂ (decoded from the frame bytes)
-    pub f_hat: Matrix,
-    pub mask: GradMask,
-    /// paper-formula overhead (for reporting next to measured frame bits)
-    pub nominal_bits: f64,
-    /// FWQ M* when applicable (diagnostics)
-    pub m_star: Option<usize>,
-}
-
-#[derive(Debug, Clone)]
-pub struct EncodedDownlink {
-    pub frame: Frame,
-    /// the device-side reconstruction Ĝ (B×D̄, chain-rule scale NOT applied;
-    /// the trainer applies δ_j/(1-p_j) per eq. 7's backward path)
-    pub g_hat: Matrix,
-    pub nominal_bits: f64,
-}
-
-fn f32_dump(m: &Matrix, w: &mut BitWriter) {
-    for &v in &m.data {
-        w.write_f32(v);
-    }
-}
-
-fn f32_undump(r: &mut BitReader, rows: usize, cols: usize) -> Matrix {
-    let mut out = Matrix::zeros(rows, cols);
-    for i in 0..rows * cols {
-        out.data[i] = r.read_f32();
-    }
-    out
-}
-
-/// Embed a sub-codec's byte payload in an outer bit stream.
-fn write_blob(w: &mut BitWriter, bytes: &[u8], bits: u64) {
-    w.write_bits(bits, 40);
-    for &b in bytes {
-        w.write_bits(b as u64, 8);
-    }
-}
-
-fn read_blob(r: &mut BitReader) -> (Vec<u8>, u64) {
-    let bits = r.read_bits(40);
-    let nbytes = ((bits + 7) / 8) as usize;
-    let bytes: Vec<u8> = (0..nbytes).map(|_| r.read_bits(8) as u8).collect();
-    (bytes, bits)
-}
-
-/// PS-side decode of a SplitFC uplink frame (the true wire path; the value
-/// returned by `encode_uplink` in `f_hat` must be byte-identical to this).
-pub fn decode_uplink_splitfc(
-    frame: &Frame,
-    scheme: &Scheme,
-    params: &CodecParams,
-) -> (Matrix, Vec<usize>) {
-    let Scheme::SplitFc { drop, r, quant } = scheme else {
-        panic!("decode_uplink_splitfc: not a SplitFc scheme");
-    };
-    // bit-exact fence: reading past the declared payload length is a codec
-    // bug and should fail loudly, not zero-fill from the padding byte
-    let mut rd = BitReader::with_bit_len(&frame.payload, frame.payload_bits);
-    let dbar = params.dbar;
-    let (kept, delta_bits): (Vec<usize>, f64) = if drop.is_some() {
-        let delta: Vec<bool> = (0..dbar).map(|_| rd.read_bits(1) == 1).collect();
-        ((0..dbar).filter(|&i| delta[i]).collect(), dbar as f64)
-    } else {
-        ((0..dbar).collect(), 0.0)
-    };
-    let c_ava = params.total_budget() - delta_bits;
-    let ft_hat = match quant {
-        FwqMode::NoQuant => f32_undump(&mut rd, params.batch, kept.len()),
-        FwqMode::Optimal { use_mean } => {
-            let (bytes, _) = read_blob(&mut rd);
-            let mut cfg = FwqConfig::paper_default(params.batch, c_ava);
-            cfg.q_ep = params.q_ep;
-            cfg.use_mean = *use_mean;
-            fwq_decode(&bytes, &cfg)
-        }
-        FwqMode::Fixed { q } => {
-            let (bytes, _) = read_blob(&mut rd);
-            let mut cfg = FwqConfig::paper_default(params.batch, c_ava);
-            cfg.q_ep = params.q_ep;
-            cfg.q_fixed = Some(*q);
-            fwq_decode(&bytes, &cfg)
-        }
-        FwqMode::Scalar(kind) => {
-            let (bytes, _) = read_blob(&mut rd);
-            let _ = qbar_levels(c_ava, r.max(1.0), params.batch, dbar);
-            scalar_decode(&bytes, *kind, params.noise_seed)
-        }
-    };
-    (ft_hat.scatter_cols(&kept, dbar), kept)
-}
-
-fn apply_dropout(f: &Matrix, plan: &DropoutPlan) -> Matrix {
-    // gather + 1/(1-p_j) rescale fused into one row-major pass (no strided
-    // per-column sweeps on the uplink hot path)
-    f.gather_cols_scaled(&plan.kept, &plan.scale)
 }
 
 /// Uplink: compress the intermediate feature matrix F at the device.
-///
-/// `sigma_norm` is the channel-normalized per-column stddev (eq. 10),
-/// computed on the hot path by the `feature_stats` HLO artifact.
+/// **Deprecated** free-function form of [`Codec::encode_uplink`].
 pub fn encode_uplink(
     scheme: &Scheme,
     f: &Matrix,
@@ -240,285 +96,40 @@ pub fn encode_uplink(
     params: &CodecParams,
     rng: &mut Rng,
 ) -> EncodedUplink {
-    let (b, dbar) = (f.rows, f.cols);
-    assert_eq!(b, params.batch);
-    assert_eq!(dbar, params.dbar);
-    match scheme {
-        Scheme::Vanilla => {
-            let mut w = BitWriter::with_capacity(4 * b * dbar);
-            f32_dump(f, &mut w);
-            let bits = w.bit_len();
-            EncodedUplink {
-                frame: Frame::new(FrameKind::FeaturesUp, w.into_bytes(), bits),
-                f_hat: f.clone(),
-                mask: GradMask::All,
-                nominal_bits: 32.0 * (b * dbar) as f64,
-                m_star: None,
-            }
-        }
-        Scheme::SplitFc { drop, r, quant } => {
-            let plan = match drop {
-                Some(kind) => dropout::plan(*kind, sigma_norm, *r, rng),
-                None => DropoutPlan::keep_all(dbar),
-            };
-            let ft = apply_dropout(f, &plan);
-            let mut w = BitWriter::new();
-            // δ index vector (D̄ bits) — only when dropout is active
-            let delta_bits = if drop.is_some() { dbar as f64 } else { 0.0 };
-            if drop.is_some() {
-                for &d in &plan.delta {
-                    w.write_bits(d as u64, 1);
-                }
-            }
-            let c_ava = params.total_budget() - delta_bits;
-            let (ft_hat, nominal, m_star) = match quant {
-                FwqMode::NoQuant => {
-                    f32_dump(&ft, &mut w);
-                    (ft.clone(), delta_bits + 32.0 * ft.len() as f64, None)
-                }
-                FwqMode::Optimal { use_mean } => {
-                    let mut cfg = FwqConfig::paper_default(b, c_ava);
-                    cfg.q_ep = params.q_ep;
-                    cfg.use_mean = *use_mean;
-                    let (bytes, bits, info) = fwq_encode(&ft, &cfg);
-                    write_blob(&mut w, &bytes, bits);
-                    let out = fwq_decode(&bytes, &cfg);
-                    (out, delta_bits + info.nominal_bits, Some(info.m_star))
-                }
-                FwqMode::Fixed { q } => {
-                    let mut cfg = FwqConfig::paper_default(b, c_ava);
-                    cfg.q_ep = params.q_ep;
-                    cfg.q_fixed = Some(*q);
-                    let (bytes, bits, info) = fwq_encode(&ft, &cfg);
-                    write_blob(&mut w, &bytes, bits);
-                    let out = fwq_decode(&bytes, &cfg);
-                    (out, delta_bits + info.nominal_bits, Some(info.m_star))
-                }
-                FwqMode::Scalar(kind) => {
-                    let q = qbar_levels(c_ava, r.max(1.0), b, dbar);
-                    let (bytes, bits) = scalar_encode(&ft, *kind, q, params.noise_seed);
-                    write_blob(&mut w, &bytes, bits);
-                    let out = scalar_decode(&bytes, *kind, params.noise_seed);
-                    let nominal =
-                        delta_bits + ft.len() as f64 * (q as f64).log2() + 96.0;
-                    (out, nominal, None)
-                }
-            };
-            let f_hat = ft_hat.scatter_cols(&plan.kept, dbar);
-            let bits = w.bit_len();
-            EncodedUplink {
-                frame: Frame::new(FrameKind::FeaturesUp, w.into_bytes(), bits),
-                f_hat,
-                mask: GradMask::Columns { kept: plan.kept, scale: plan.scale },
-                nominal_bits: nominal,
-                m_star,
-            }
-        }
-        Scheme::TopS { theta, quant } => {
-            let value_bits = match quant {
-                None => 32.0,
-                Some(_) => {
-                    let q = qbar_levels(params.total_budget(), 16.0, b, dbar);
-                    (q as f64).log2()
-                }
-            };
-            let s = sparsity_level(dbar, params.bits_per_entry, value_bits).max(1);
-            let cfg = TopSConfig { s, theta: *theta };
-            match quant {
-                None => {
-                    let (bytes, bits, masks) = top_s_encode(f, &cfg, rng);
-                    let f_hat = top_s_decode(&bytes);
-                    let nominal = b as f64
-                        * (s as f64 * 32.0
-                            + crate::compression::baselines::topk::log2_binomial(dbar, s));
-                    EncodedUplink {
-                        frame: Frame::new(FrameKind::FeaturesUp, bytes, bits),
-                        f_hat,
-                        mask: GradMask::Entries(masks),
-                        nominal_bits: nominal,
-                        m_star: None,
-                    }
-                }
-                Some(kind) => {
-                    // sparse + scalar: sparsify first, quantize the masked matrix
-                    let masks = crate::compression::baselines::topk::top_s_mask(f, &cfg, rng);
-                    let mut sparse = Matrix::zeros(b, dbar);
-                    for (r_i, kept) in masks.iter().enumerate() {
-                        for &c in kept {
-                            *sparse.at_mut(r_i, c) = f.at(r_i, c);
-                        }
-                    }
-                    let q = qbar_levels(params.total_budget(), 16.0, b, dbar);
-                    let mut w = BitWriter::new();
-                    // indices per row (device-side mask must reach the PS)
-                    let iw =
-                        (usize::BITS - (dbar.max(2) - 1).leading_zeros()).max(1);
-                    w.write_u32(s as u32);
-                    for kept in &masks {
-                        for &c in kept {
-                            w.write_bits(c as u64, iw);
-                        }
-                    }
-                    let (bytes, bits) = scalar_encode(&sparse, *kind, q, params.noise_seed);
-                    write_blob(&mut w, &bytes, bits);
-                    let f_hat = scalar_decode(&bytes, *kind, params.noise_seed);
-                    // zero out the entries the mask dropped (quantizer noise)
-                    let mut f_hat_sp = Matrix::zeros(b, dbar);
-                    for (r_i, kept) in masks.iter().enumerate() {
-                        for &c in kept {
-                            *f_hat_sp.at_mut(r_i, c) = f_hat.at(r_i, c);
-                        }
-                    }
-                    let nominal = b as f64
-                        * (s as f64 * (q as f64).log2()
-                            + crate::compression::baselines::topk::log2_binomial(dbar, s));
-                    let bits_total = w.bit_len();
-                    EncodedUplink {
-                        frame: Frame::new(FrameKind::FeaturesUp, w.into_bytes(), bits_total),
-                        f_hat: f_hat_sp,
-                        mask: GradMask::Entries(masks),
-                        nominal_bits: nominal,
-                        m_star: None,
-                    }
-                }
-            }
-        }
-        Scheme::FedLite { num_subvectors } => {
-            let cfg = FedLiteConfig { num_subvectors: *num_subvectors, iters: 10 };
-            let (bytes, bits) = fedlite_encode(f, &cfg, params.total_budget(), rng);
-            let f_hat = fedlite_decode(&bytes);
-            EncodedUplink {
-                frame: Frame::new(FrameKind::FeaturesUp, bytes, bits),
-                f_hat,
-                mask: GradMask::All, // FedLite leaves G uncompressed (Sec. VII)
-                nominal_bits: bits as f64,
-                m_star: None,
-            }
-        }
-    }
+    let stats = SigmaStats::new(sigma_norm.to_vec());
+    scheme
+        .to_codec()
+        .encode_uplink(f, Some(&stats), params, rng)
+        .unwrap_or_else(|e| panic!("encode_uplink({}): {e}", scheme.name()))
 }
 
-/// Downlink: compress the intermediate gradient matrix G at the PS,
-/// honouring the uplink coupling (eq. 8). `params.bits_per_entry` is C_e,s;
-/// 32.0 means lossless (the Table-I setting).
+/// Downlink: compress the intermediate gradient matrix G at the PS.
+/// **Deprecated** free-function form of [`Codec::encode_downlink`].
 pub fn encode_downlink(
     scheme: &Scheme,
     g: &Matrix,
     mask: &GradMask,
     params: &CodecParams,
 ) -> EncodedDownlink {
-    let (b, dbar) = (g.rows, g.cols);
-    let lossless = params.bits_per_entry >= 32.0;
-    match mask {
-        GradMask::All => {
-            let mut w = BitWriter::with_capacity(4 * b * dbar);
-            f32_dump(g, &mut w);
-            let bits = w.bit_len();
-            EncodedDownlink {
-                frame: Frame::new(FrameKind::GradientsDown, w.into_bytes(), bits),
-                g_hat: g.clone(),
-                nominal_bits: 32.0 * (b * dbar) as f64,
-            }
-        }
-        GradMask::Columns { kept, .. } => {
-            let gt = g.gather_cols(kept);
-            let mut w = BitWriter::new();
-            let c_ava = params.total_budget();
-            let (gt_hat, nominal) = if lossless {
-                f32_dump(&gt, &mut w);
-                (gt.clone(), 32.0 * gt.len() as f64)
-            } else {
-                match scheme {
-                    Scheme::SplitFc { quant: FwqMode::Scalar(kind), r, .. } => {
-                        let q = qbar_levels(c_ava, r.max(1.0), b, dbar);
-                        let (bytes, bits) = scalar_encode(&gt, *kind, q, params.noise_seed ^ 1);
-                        write_blob(&mut w, &bytes, bits);
-                        let out = scalar_decode(&bytes, *kind, params.noise_seed ^ 1);
-                        (out, gt.len() as f64 * (q as f64).log2() + 96.0)
-                    }
-                    Scheme::SplitFc { quant: FwqMode::Fixed { q }, .. } => {
-                        let mut cfg = FwqConfig::paper_default(b, c_ava);
-                        cfg.q_ep = params.q_ep;
-                        cfg.q_fixed = Some(*q);
-                        let (bytes, bits, info) = fwq_encode(&gt, &cfg);
-                        write_blob(&mut w, &bytes, bits);
-                        (fwq_decode(&bytes, &cfg), info.nominal_bits)
-                    }
-                    Scheme::SplitFc { quant: FwqMode::Optimal { use_mean }, .. } => {
-                        let mut cfg = FwqConfig::paper_default(b, c_ava);
-                        cfg.q_ep = params.q_ep;
-                        cfg.use_mean = *use_mean;
-                        let (bytes, bits, info) = fwq_encode(&gt, &cfg);
-                        write_blob(&mut w, &bytes, bits);
-                        (fwq_decode(&bytes, &cfg), info.nominal_bits)
-                    }
-                    _ => {
-                        // any other scheme with column masks: paper FWQ
-                        let cfg = FwqConfig::paper_default(b, c_ava);
-                        let (bytes, bits, info) = fwq_encode(&gt, &cfg);
-                        write_blob(&mut w, &bytes, bits);
-                        (fwq_decode(&bytes, &cfg), info.nominal_bits)
-                    }
-                }
-            };
-            let g_hat = gt_hat.scatter_cols(kept, dbar);
-            let bits = w.bit_len();
-            EncodedDownlink {
-                frame: Frame::new(FrameKind::GradientsDown, w.into_bytes(), bits),
-                g_hat,
-                nominal_bits: nominal,
-            }
-        }
-        GradMask::Entries(masks) => {
-            // the device knows the masks it sent: only values travel back
-            let mut w = BitWriter::new();
-            let mut g_hat = Matrix::zeros(b, dbar);
-            if lossless {
-                for (r_i, kept) in masks.iter().enumerate() {
-                    for &c in kept {
-                        w.write_f32(g.at(r_i, c));
-                        *g_hat.at_mut(r_i, c) = g.at(r_i, c);
-                    }
-                }
-                let bits = w.bit_len();
-                let n: usize = masks.iter().map(|m| m.len()).sum();
-                EncodedDownlink {
-                    frame: Frame::new(FrameKind::GradientsDown, w.into_bytes(), bits),
-                    g_hat,
-                    nominal_bits: 32.0 * n as f64,
-                }
-            } else {
-                // gather masked values into a dense vector, scalar-quantize
-                let vals: Vec<f32> = masks
-                    .iter()
-                    .enumerate()
-                    .flat_map(|(r_i, kept)| kept.iter().map(move |&c| (r_i, c)))
-                    .map(|(r_i, c)| g.at(r_i, c))
-                    .collect();
-                let kind = match scheme {
-                    Scheme::TopS { quant: Some(k), .. } => *k,
-                    _ => ScalarKind::Eq,
-                };
-                let q = qbar_levels(params.total_budget(), 16.0, b, dbar);
-                let vm = Matrix::from_vec(1, vals.len(), vals);
-                let (bytes, bits) = scalar_encode(&vm, kind, q, params.noise_seed ^ 2);
-                write_blob(&mut w, &bytes, bits);
-                let deq = scalar_decode(&bytes, kind, params.noise_seed ^ 2);
-                let mut it = deq.data.iter();
-                for (r_i, kept) in masks.iter().enumerate() {
-                    for &c in kept {
-                        *g_hat.at_mut(r_i, c) = *it.next().unwrap();
-                    }
-                }
-                let bits_total = w.bit_len();
-                EncodedDownlink {
-                    frame: Frame::new(FrameKind::GradientsDown, w.into_bytes(), bits_total),
-                    g_hat,
-                    nominal_bits: deq.len() as f64 * (q as f64).log2(),
-                }
-            }
-        }
-    }
+    scheme
+        .to_codec()
+        .encode_downlink(g, mask, params)
+        .unwrap_or_else(|e| panic!("encode_downlink({}): {e}", scheme.name()))
+}
+
+/// PS-side decode of an uplink frame (the true wire path; the value
+/// returned by `encode_uplink` in `f_hat` must be byte-identical to this).
+/// **Deprecated** free-function form of [`Codec::decode_uplink`].
+pub fn decode_uplink_splitfc(
+    frame: &Frame,
+    scheme: &Scheme,
+    params: &CodecParams,
+) -> (Matrix, Vec<usize>) {
+    let d = scheme
+        .to_codec()
+        .decode_uplink(frame, params)
+        .unwrap_or_else(|e| panic!("decode_uplink({}): {e}", scheme.name()));
+    (d.f_hat, d.kept)
 }
 
 #[cfg(test)]
@@ -769,5 +380,18 @@ mod tests {
         d.sort();
         d.dedup();
         assert_eq!(d.len(), names.len(), "{names:?}");
+    }
+
+    #[test]
+    fn scheme_spec_strings_build_equivalent_codecs() {
+        // the shim's registry bridge: Scheme::spec() round-trips through the
+        // spec grammar to a codec with the identical canonical name
+        use crate::compression::codec::CodecSpec;
+        for scheme in all_schemes() {
+            let spec = CodecSpec::parse(&scheme.spec())
+                .unwrap_or_else(|e| panic!("{}: {e}", scheme.spec()));
+            let codec = spec.build().unwrap_or_else(|e| panic!("{}: {e}", scheme.spec()));
+            assert_eq!(codec.name(), scheme.name(), "spec {}", scheme.spec());
+        }
     }
 }

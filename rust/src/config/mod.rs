@@ -1,8 +1,16 @@
 //! Run configuration: scenario presets mirroring Sec. VII plus CLI overrides.
+//!
+//! Compression is configured through [`CodecSpec`] strings resolved by the
+//! process-global `CodecRegistry` — `--scheme splitfc[ad,R=8,fwq]`-style
+//! specs or any registered legacy alias (`splitfc-ad+pq`, `tops`, ...).
+//! Unknown names return an error listing every registered codec instead of
+//! panicking.
 
-use crate::compression::{DropKind, FwqMode, ScalarKind, Scheme};
+use crate::compression::{is_registered, registered_names, CodecSpec};
 use crate::runtime::BackendKind;
+use crate::util::error::Result;
 use crate::util::{Args, Json};
+use crate::{bail, ensure};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PartitionKind {
@@ -31,7 +39,12 @@ pub struct TrainConfig {
     pub up_bits_per_entry: f64,
     /// downlink budget C_e,s in bits/entry (32 = lossless)
     pub down_bits_per_entry: f64,
-    pub scheme: Scheme,
+    /// compression codec spec, resolved per device through the registry
+    pub scheme: CodecSpec,
+    /// FWQ endpoint-quantizer levels Q_ep (paper Sec. VII: 200)
+    pub q_ep: u64,
+    /// shared seed for NoisyQuant's regenerable noise (NQ reproducibility)
+    pub noise_seed: u64,
     pub n_train: usize,
     pub n_test: usize,
     /// evaluate every this many rounds (0 = only at the end)
@@ -82,7 +95,9 @@ impl TrainConfig {
             lr,
             up_bits_per_entry: 32.0,
             down_bits_per_entry: 32.0,
-            scheme: Scheme::Vanilla,
+            scheme: CodecSpec::vanilla(),
+            q_ep: 200,
+            noise_seed: 0x5EED,
             n_train,
             n_test,
             eval_every: 0,
@@ -107,11 +122,14 @@ impl TrainConfig {
         want.clamp(1, self.devices.max(1))
     }
 
-    /// Apply `--key value` CLI overrides.
-    pub fn apply_overrides(&mut self, args: &Args) {
+    /// Apply `--key value` CLI overrides. Errors (unknown scheme, backend,
+    /// partition, malformed spec) are returned for the CLI to print.
+    pub fn apply_overrides(&mut self, args: &Args) -> Result<()> {
         if let Some(v) = args.get("backend") {
-            self.backend = BackendKind::parse(v)
-                .unwrap_or_else(|e| panic!("{e}"));
+            self.backend = match BackendKind::parse(v) {
+                Ok(b) => b,
+                Err(e) => bail!("{e}"),
+            };
         }
         if let Some(v) = args.get("artifacts") {
             self.artifacts_dir = v.to_string();
@@ -122,6 +140,8 @@ impl TrainConfig {
         self.lr = args.get_f64("lr", self.lr as f64) as f32;
         self.up_bits_per_entry = args.get_f64("up-bpe", self.up_bits_per_entry);
         self.down_bits_per_entry = args.get_f64("down-bpe", self.down_bits_per_entry);
+        self.q_ep = args.get_u64("q-ep", self.q_ep);
+        self.noise_seed = args.get_u64("noise-seed", self.noise_seed);
         self.n_train = args.get_usize("n-train", self.n_train);
         self.n_test = args.get_usize("n-test", self.n_test);
         self.eval_every = args.get_usize("eval-every", self.eval_every);
@@ -141,12 +161,13 @@ impl TrainConfig {
                 "shards" => PartitionKind::LabelShards,
                 "dirichlet" => PartitionKind::Dirichlet,
                 "writers" => PartitionKind::Writers,
-                other => panic!("unknown partition {other:?}"),
+                other => bail!("unknown partition {other:?} (shards|dirichlet|writers)"),
             };
         }
         if let Some(s) = args.get("scheme") {
-            self.scheme = parse_scheme(s, args.get_f64("r", 16.0));
+            self.scheme = parse_scheme(s, args.get_f64("r", 16.0))?;
         }
+        Ok(())
     }
 
     pub fn to_json(&self) -> Json {
@@ -159,7 +180,13 @@ impl TrainConfig {
             ("lr", Json::num(self.lr as f64)),
             ("up_bpe", Json::num(self.up_bits_per_entry)),
             ("down_bpe", Json::num(self.down_bits_per_entry)),
-            ("scheme", Json::str(self.scheme.name())),
+            ("scheme", Json::str(self.scheme.to_string())),
+            // fully-resolved codec name: alias defaults (e.g. the R=1 pin of
+            // splitfc-quant-only) come from the builder, so this — not the
+            // raw spec — is the reproducibility-grade provenance record
+            ("codec", Json::str(self.scheme.canonical_name())),
+            ("q_ep", Json::num(self.q_ep as f64)),
+            ("noise_seed", Json::num(self.noise_seed as f64)),
             ("n_train", Json::num(self.n_train as f64)),
             ("n_test", Json::num(self.n_test as f64)),
             ("threads", Json::num(self.threads as f64)),
@@ -170,59 +197,23 @@ impl TrainConfig {
     }
 }
 
-/// Parse a framework name (the rows of Tables I-III) into a `Scheme`.
-pub fn parse_scheme(name: &str, r: f64) -> Scheme {
-    match name {
-        "vanilla" => Scheme::Vanilla,
-        "splitfc" => Scheme::splitfc(r),
-        "splitfc-ad" => Scheme::SplitFc {
-            drop: Some(DropKind::Adaptive),
-            r,
-            quant: FwqMode::NoQuant,
-        },
-        "splitfc-rand" => Scheme::SplitFc {
-            drop: Some(DropKind::Random),
-            r,
-            quant: FwqMode::NoQuant,
-        },
-        "splitfc-det" => Scheme::SplitFc {
-            drop: Some(DropKind::Deterministic),
-            r,
-            quant: FwqMode::NoQuant,
-        },
-        "splitfc-quant-only" => Scheme::SplitFc {
-            drop: None,
-            r: 1.0,
-            quant: FwqMode::Optimal { use_mean: true },
-        },
-        "splitfc-no-mean" => Scheme::SplitFc {
-            drop: Some(DropKind::Adaptive),
-            r,
-            quant: FwqMode::Optimal { use_mean: false },
-        },
-        "splitfc-ad+pq" => Scheme::SplitFc {
-            drop: Some(DropKind::Adaptive),
-            r,
-            quant: FwqMode::Scalar(ScalarKind::Pq),
-        },
-        "splitfc-ad+eq" => Scheme::SplitFc {
-            drop: Some(DropKind::Adaptive),
-            r,
-            quant: FwqMode::Scalar(ScalarKind::Eq),
-        },
-        "splitfc-ad+nq" => Scheme::SplitFc {
-            drop: Some(DropKind::Adaptive),
-            r,
-            quant: FwqMode::Scalar(ScalarKind::Nq),
-        },
-        "tops" => Scheme::TopS { theta: 0.0, quant: None },
-        "randtops" => Scheme::TopS { theta: 0.2, quant: None },
-        "tops+pq" => Scheme::TopS { theta: 0.0, quant: Some(ScalarKind::Pq) },
-        "tops+eq" => Scheme::TopS { theta: 0.0, quant: Some(ScalarKind::Eq) },
-        "tops+nq" => Scheme::TopS { theta: 0.0, quant: Some(ScalarKind::Nq) },
-        "fedlite" => Scheme::FedLite { num_subvectors: 16 },
-        other => panic!("unknown scheme {other:?}"),
-    }
+/// Parse a scheme spec (a Table-I-III row name or a bracketed
+/// `splitfc[ad,R=8,fwq]`-style spec) into a validated [`CodecSpec`].
+///
+/// Unknown or malformed specs return an error listing every registered
+/// codec name; the spec's codec is built once here so argument errors
+/// surface at config time, not mid-training.
+pub fn parse_scheme(name: &str, r: f64) -> Result<CodecSpec> {
+    let spec = CodecSpec::parse_with_r(name, r)?;
+    ensure!(
+        is_registered(&spec.base),
+        "unknown scheme {:?}; registered schemes: {}",
+        spec.base,
+        registered_names().join(", ")
+    );
+    // validate the full spec (bracket args) eagerly
+    let _ = spec.build()?;
+    Ok(spec)
 }
 
 /// The framework lineup of Table I (uplink compression comparison).
@@ -258,10 +249,17 @@ pub fn table2_frameworks() -> Vec<&'static str> {
 mod tests {
     use super::*;
 
+    fn args(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
     #[test]
     fn preset_defaults() {
         let c = TrainConfig::for_preset("mnist");
         assert_eq!(c.partition, PartitionKind::LabelShards);
+        assert_eq!(c.q_ep, 200);
+        assert_eq!(c.noise_seed, 0x5EED);
+        assert_eq!(c.scheme, CodecSpec::vanilla());
         assert_eq!(TrainConfig::for_preset("cifar").partition, PartitionKind::Dirichlet);
         assert_eq!(TrainConfig::for_preset("celeba").partition, PartitionKind::Writers);
     }
@@ -269,18 +267,57 @@ mod tests {
     #[test]
     fn overrides_apply() {
         let mut c = TrainConfig::for_preset("tiny");
-        let args = Args::parse(
-            &"x --rounds 3 --devices 2 --scheme splitfc --r 8 --up-bpe 0.2 --threads 3"
-                .split_whitespace()
-                .map(String::from)
-                .collect::<Vec<_>>(),
-        );
-        c.apply_overrides(&args);
+        c.apply_overrides(&args(
+            "x --rounds 3 --devices 2 --scheme splitfc --r 8 --up-bpe 0.2 --threads 3",
+        ))
+        .unwrap();
         assert_eq!(c.rounds, 3);
         assert_eq!(c.devices, 2);
         assert_eq!(c.up_bits_per_entry, 0.2);
-        assert_eq!(c.scheme, Scheme::splitfc(8.0));
+        assert_eq!(c.scheme, parse_scheme("splitfc", 8.0).unwrap());
+        assert_eq!(c.scheme.r, 8.0);
         assert_eq!(c.threads, 3);
+    }
+
+    #[test]
+    fn q_ep_and_noise_seed_flags_plumb_through() {
+        let mut c = TrainConfig::for_preset("tiny");
+        c.apply_overrides(&args("x --q-ep 64 --noise-seed 12345")).unwrap();
+        assert_eq!(c.q_ep, 64);
+        assert_eq!(c.noise_seed, 12345);
+        let j = c.to_json();
+        assert_eq!(j.req("q_ep").as_usize(), Some(64));
+        assert_eq!(j.req("noise_seed").as_usize(), Some(12345));
+    }
+
+    #[test]
+    fn bracketed_spec_overrides_parse() {
+        let mut c = TrainConfig::for_preset("tiny");
+        c.apply_overrides(&args("x --scheme splitfc[det,R=4,fixedQ8]")).unwrap();
+        assert_eq!(c.scheme.base, "splitfc");
+        assert!(c.scheme.has("det"));
+        assert_eq!(c.scheme.get("R"), Some("4"));
+        let codec = c.scheme.build().unwrap();
+        assert_eq!(codec.name(), "splitfc[det,R=4,fixedQ8]");
+        // the recorded codec name is the fully-resolved one (bracketed R=
+        // wins over the CLI default)
+        assert_eq!(c.to_json().req("codec").as_str(), Some("splitfc[det,R=4,fixedQ8]"));
+    }
+
+    #[test]
+    fn recorded_codec_name_resolves_alias_defaults() {
+        // splitfc-quant-only pins R=1 in its builder regardless of --r; the
+        // metadata must reflect the codec that actually runs
+        let mut c = TrainConfig::for_preset("tiny");
+        c.apply_overrides(&args("x --scheme splitfc-quant-only --r 16")).unwrap();
+        assert_eq!(
+            c.to_json().req("codec").as_str(),
+            Some("splitfc[none,R=1,fwq]")
+        );
+        // canonical names paste straight back into --scheme
+        let name = c.scheme.canonical_name();
+        let rebuilt = parse_scheme(&name, 16.0).unwrap().build().unwrap();
+        assert_eq!(rebuilt.name(), name);
     }
 
     #[test]
@@ -292,13 +329,8 @@ mod tests {
         assert_eq!(c.resolved_concurrency(), 1);
         c.staleness = 2;
         assert_eq!(c.resolved_concurrency(), c.devices);
-        let args = Args::parse(
-            &"x --staleness 1 --concurrent-devices 3 --per-device-opt"
-                .split_whitespace()
-                .map(String::from)
-                .collect::<Vec<_>>(),
-        );
-        c.apply_overrides(&args);
+        c.apply_overrides(&args("x --staleness 1 --concurrent-devices 3 --per-device-opt"))
+            .unwrap();
         assert_eq!(c.staleness, 1);
         assert_eq!(c.concurrent_devices, 3);
         assert!(c.per_device_opt);
@@ -311,18 +343,26 @@ mod tests {
     #[test]
     fn all_table_frameworks_parse() {
         for name in table1_frameworks().iter().chain(table2_frameworks().iter()) {
-            let _ = parse_scheme(name, 16.0); // must not panic
+            parse_scheme(name, 16.0).unwrap_or_else(|e| panic!("{name}: {e}"));
         }
         for extra in ["vanilla", "splitfc-ad", "splitfc-rand", "splitfc-det",
                       "splitfc-quant-only", "splitfc-no-mean"] {
-            let _ = parse_scheme(extra, 8.0);
+            parse_scheme(extra, 8.0).unwrap_or_else(|e| panic!("{extra}: {e}"));
         }
     }
 
     #[test]
-    #[should_panic]
-    fn unknown_scheme_panics() {
-        parse_scheme("nope", 1.0);
+    fn unknown_scheme_errors_listing_choices() {
+        let err = parse_scheme("nope", 1.0).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown scheme"), "{msg}");
+        assert!(msg.contains("splitfc"), "should list registered names: {msg}");
+        assert!(msg.contains("fedlite"), "{msg}");
+        // malformed bracket args of a known codec also error cleanly
+        assert!(parse_scheme("splitfc[bogus-arg]", 1.0).is_err());
+        // and the CLI path surfaces it as an Err, not a panic
+        let mut c = TrainConfig::for_preset("tiny");
+        assert!(c.apply_overrides(&args("x --scheme nope")).is_err());
     }
 
     #[test]
@@ -332,16 +372,14 @@ mod tests {
         assert_eq!(j.req("preset").as_str(), Some("mnist"));
         assert_eq!(j.req("devices").as_usize(), Some(8));
         assert_eq!(j.req("backend").as_str(), Some("native"));
+        assert_eq!(j.req("scheme").as_str(), Some("vanilla"));
     }
 
     #[test]
     fn backend_override_applies() {
         let mut c = TrainConfig::for_preset("tiny");
         assert_eq!(c.backend, BackendKind::Native);
-        let args = Args::parse(
-            &"x --backend pjrt".split_whitespace().map(String::from).collect::<Vec<_>>(),
-        );
-        c.apply_overrides(&args);
+        c.apply_overrides(&args("x --backend pjrt")).unwrap();
         assert_eq!(c.backend, BackendKind::Pjrt);
     }
 }

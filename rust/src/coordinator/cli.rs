@@ -11,22 +11,33 @@ splitfc — communication-efficient split learning (SplitFC reproduction)
 
 USAGE:
   splitfc train --preset <tiny|mnist|cifar|celeba> [--scheme S] [--r R]
-                [--up-bpe X] [--down-bpe X] [--rounds T] [--devices K]
+                [--up-bpe X] [--down-bpe X] [--q-ep N] [--noise-seed N]
+                [--rounds T] [--devices K]
                 [--seed N] [--eval-every E] [--metrics file.jsonl]
                 [--backend native|pjrt] [--artifacts DIR] [--threads N]
                 [--staleness S] [--concurrent-devices N] [--per-device-opt]
   splitfc experiment <fig1|fig3|fig4|fig5|table1|table2|table3|all>
                 [--presets mnist,cifar,celeba] [--rounds T] [--devices K]
                 [--threads N] ...
+  splitfc codec-smoke [--r R]   # registry matrix: round-trip + one train
+                                # step for every registered codec
   splitfc latency-calc [--capacity-bps 10e6 --batch 256 --dbar 8192
                 --iters 100 --devices 100]
   splitfc inspect [--artifacts artifacts]
   splitfc help
 
-SCHEMES:
+SCHEMES (resolved through the codec registry; `codec-smoke` lists all):
   vanilla | splitfc | splitfc-ad | splitfc-rand | splitfc-det |
   splitfc-quant-only | splitfc-no-mean | splitfc-ad+{pq,eq,nq} |
   tops | randtops | tops+{pq,eq,nq} | fedlite
+  Bracketed spec grammar configures a family directly, e.g.
+    --scheme splitfc[ad,R=8,fwq]      (== --scheme splitfc --r 8)
+    --scheme splitfc[det,R=4,fixedQ8] (Fig.-5 fixed-level ablation)
+    --scheme splitfc[ad,R=8,fwq,ef]   (error-feedback session state)
+    --scheme tops[theta=0.2,eq]       (RandTop-S + EasyQuant)
+  Out-of-core codecs registered via compression::register_codec resolve
+  the same way. --q-ep / --noise-seed pin the FWQ endpoint levels and the
+  NoisyQuant noise stream for reproducible runs.
 
 SCHEDULING:
   --staleness S           bounded-staleness window in rounds; 0 (default) is
@@ -51,6 +62,7 @@ pub fn main() {
     let code = match args.subcommand() {
         Some("train") => cmd_train(&args),
         Some("experiment") => cmd_experiment(&args),
+        Some("codec-smoke") => cmd_codec_smoke(&args),
         Some("latency-calc") => cmd_latency(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("help") | None => {
@@ -71,7 +83,7 @@ pub fn main() {
 fn cmd_train(args: &Args) -> Result<()> {
     let preset = args.get_or("preset", "mnist").to_string();
     let mut cfg = TrainConfig::for_preset(&preset);
-    cfg.apply_overrides(args);
+    cfg.apply_overrides(args)?;
     println!("config: {}", cfg.to_json().to_string_compact());
     let mut tr = Trainer::new(cfg)?;
     let summary = tr.run()?;
@@ -91,6 +103,62 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         .map(|s| s.as_str())
         .unwrap_or("all");
     experiments::run(id, args)
+}
+
+/// Registry matrix smoke: for every registered codec, one uplink/downlink
+/// wire round trip plus one tiny train step — an unported or misregistered
+/// codec fails fast here (CI runs this).
+fn cmd_codec_smoke(args: &Args) -> Result<()> {
+    use crate::compression::{registered_names, CodecParams, SigmaStats};
+    use crate::ensure;
+    use crate::tensor::{column_stats, normalized_sigma};
+    use crate::testkit::hetero_matrix;
+    use crate::util::Rng;
+
+    let r = args.get_f64("r", 4.0);
+    let names = registered_names();
+    println!("{} registered codecs: {}", names.len(), names.join(", "));
+    let (b, d) = (8usize, 64usize);
+    let f = hetero_matrix(b, d, 17);
+    let stats = SigmaStats::new(normalized_sigma(&column_stats(&f), 4));
+    let g = crate::tensor::Matrix::from_fn(b, d, |ri, c| ((ri * 7 + c) % 5) as f32 * 0.02 - 0.04);
+    for name in &names {
+        let spec = crate::config::parse_scheme(name, r)?;
+        let bpe = if name == "vanilla" { 32.0 } else { 1.0 };
+        let up = CodecParams::new(b, d, bpe);
+        let down = CodecParams::new(b, d, 2.0);
+
+        // 1. wire round trip: decode-of-own-bytes must match the encoder's
+        //    reported reconstructions exactly, both directions
+        let mut codec = spec.build()?;
+        let mut rng = Rng::new(99);
+        let enc = codec.encode_uplink(&f, Some(&stats), &up, &mut rng)?;
+        let dec = codec.decode_uplink(&enc.frame, &up)?;
+        ensure!(dec.f_hat == enc.f_hat, "codec {name}: uplink wire decode mismatch");
+        let dn = codec.encode_downlink(&g, &enc.mask, &down)?;
+        let g_dec = codec.decode_downlink(&dn.frame, &enc.mask, &down)?;
+        ensure!(g_dec == dn.g_hat, "codec {name}: downlink wire decode mismatch");
+
+        // 2. one tiny train step through the full coordinator
+        let mut cfg = TrainConfig::for_preset("tiny");
+        cfg.devices = 1;
+        cfg.rounds = 1;
+        cfg.n_train = 64;
+        cfg.n_test = 16;
+        cfg.scheme = spec;
+        cfg.up_bits_per_entry = bpe;
+        cfg.down_bits_per_entry = 32.0;
+        let mut tr = Trainer::new(cfg)?;
+        let rec = tr.step(1, 0)?;
+        ensure!(rec.loss.is_finite(), "codec {name}: non-finite loss");
+        ensure!(rec.up_bits > 0, "codec {name}: empty uplink frame");
+        println!(
+            "  {name:<20} ok  (encode {} bits, step loss {:.4})",
+            enc.frame.payload_bits, rec.loss
+        );
+    }
+    println!("codec-smoke OK ({} codecs)", names.len());
+    Ok(())
 }
 
 fn cmd_latency(args: &Args) -> Result<()> {

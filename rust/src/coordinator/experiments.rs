@@ -8,6 +8,7 @@
 use crate::util::error::Result;
 
 use crate::bench::print_table;
+use crate::compression::CodecSpec;
 use crate::config::{parse_scheme, table1_frameworks, table2_frameworks, TrainConfig};
 use crate::coordinator::trainer::Trainer;
 use crate::log_info;
@@ -22,28 +23,28 @@ fn cfg_for(
     up_bpe: f64,
     down_bpe: f64,
     args: &Args,
-) -> TrainConfig {
+) -> Result<TrainConfig> {
     let mut cfg = TrainConfig::for_preset(preset);
-    cfg.scheme = parse_scheme(scheme_name, r);
+    cfg.scheme = parse_scheme(scheme_name, r)?;
     cfg.up_bits_per_entry = up_bpe;
     cfg.down_bits_per_entry = down_bpe;
-    cfg.apply_overrides(args);
+    cfg.apply_overrides(args)?;
     // the scheme is this experiment's row: re-pin it over the generic
     // override (only --r passes through). The link budgets are re-pinned
     // only when the user did NOT override them explicitly — an explicit
     // --up-bpe/--down-bpe wins over the experiment's per-column budget.
-    cfg.scheme = parse_scheme(scheme_name, args.get_f64("r", r));
+    cfg.scheme = parse_scheme(scheme_name, args.get_f64("r", r))?;
     if args.get("up-bpe").is_none() {
         cfg.up_bits_per_entry = up_bpe;
     }
     if args.get("down-bpe").is_none() {
         cfg.down_bits_per_entry = down_bpe;
     }
-    cfg
+    Ok(cfg)
 }
 
 fn run_one(cfg: TrainConfig) -> Result<(f32, f64, f64)> {
-    let name = cfg.scheme.name();
+    let name = cfg.scheme.to_string();
     let preset = cfg.preset.clone();
     let (batch, dbar);
     let mut tr = Trainer::new(cfg)?;
@@ -80,7 +81,7 @@ fn presets_from(args: &Args, default: &str) -> Vec<String> {
 /// Fig. 1 — dispersion of intermediate feature columns, raw vs normalized.
 pub fn fig1(args: &Args) -> Result<()> {
     let preset = args.get_or("presets", "mnist").split(',').next().unwrap().to_string();
-    let mut cfg = cfg_for(&preset, "vanilla", 1.0, 32.0, 32.0, args);
+    let mut cfg = cfg_for(&preset, "vanilla", 1.0, 32.0, 32.0, args)?;
     cfg.rounds = args.get_usize("rounds", 3); // short warmup like the paper's T
     let mut tr = Trainer::new(cfg)?;
     tr.run()?;
@@ -163,13 +164,13 @@ pub fn fig3(args: &Args) -> Result<()> {
         .map(|s| s.trim().parse().unwrap())
         .collect();
     let schemes = ["splitfc-ad", "splitfc-rand", "splitfc-det"];
-    let vanilla = run_one(cfg_for(&preset, "vanilla", 1.0, 32.0, 32.0, args))?.0;
+    let vanilla = run_one(cfg_for(&preset, "vanilla", 1.0, 32.0, 32.0, args)?)?.0;
     let mut rows = Vec::new();
     let mut out = vec![("vanilla".to_string(), Json::num(vanilla as f64))];
     for scheme in schemes {
         let mut cols = Vec::new();
         for &r in &rs {
-            let (acc, _, _) = run_one(cfg_for(&preset, scheme, r, 32.0, 32.0, args))?;
+            let (acc, _, _) = run_one(cfg_for(&preset, scheme, r, 32.0, 32.0, args)?)?;
             cols.push(format!("{:.2}", acc * 100.0));
             out.push((format!("{scheme}@R{r}"), Json::num(acc as f64)));
         }
@@ -198,7 +199,7 @@ pub fn table1(args: &Args) -> Result<()> {
     let r = args.get_f64("r", 16.0);
     let mut results = Vec::new();
     for preset in presets_from(args, "mnist") {
-        let vanilla = run_one(cfg_for(&preset, "vanilla", 1.0, 32.0, 32.0, args))?.0;
+        let vanilla = run_one(cfg_for(&preset, "vanilla", 1.0, 32.0, 32.0, args)?)?.0;
         let mut rows = vec![(
             "vanilla (1x)".to_string(),
             vec![format!("{:.2}", vanilla * 100.0); budgets.len()],
@@ -207,7 +208,7 @@ pub fn table1(args: &Args) -> Result<()> {
         for fw in table1_frameworks() {
             let mut cols = Vec::new();
             for (_, bpe) in &budgets {
-                let (acc, _, _) = run_one(cfg_for(&preset, fw, r, *bpe, 32.0, args))?;
+                let (acc, _, _) = run_one(cfg_for(&preset, fw, r, *bpe, 32.0, args)?)?;
                 cols.push(format!("{:.2}", acc * 100.0));
                 results.push((format!("{preset}/{fw}@{bpe:.4}"), Json::num(acc as f64)));
             }
@@ -233,7 +234,7 @@ pub fn table2(args: &Args) -> Result<()> {
     let r = args.get_f64("r", 16.0);
     let mut results = Vec::new();
     for preset in presets_from(args, "mnist") {
-        let vanilla = run_one(cfg_for(&preset, "vanilla", 1.0, 32.0, 32.0, args))?.0;
+        let vanilla = run_one(cfg_for(&preset, "vanilla", 1.0, 32.0, 32.0, args)?)?.0;
         let mut rows = vec![(
             "vanilla (1x)".to_string(),
             vec![format!("{:.2}", vanilla * 100.0); budgets.len()],
@@ -243,7 +244,7 @@ pub fn table2(args: &Args) -> Result<()> {
             let mut cols = Vec::new();
             for (_, down_bpe) in &budgets {
                 let up_bpe = down_bpe / 2.0;
-                let (acc, _, _) = run_one(cfg_for(&preset, fw, r, up_bpe, *down_bpe, args))?;
+                let (acc, _, _) = run_one(cfg_for(&preset, fw, r, up_bpe, *down_bpe, args)?)?;
                 cols.push(format!("{:.2}", acc * 100.0));
                 results
                     .push((format!("{preset}/{fw}@dn{down_bpe:.4}"), Json::num(acc as f64)));
@@ -273,7 +274,7 @@ pub fn fig4(args: &Args) -> Result<()> {
     let mut cols = Vec::new();
     let mut results = Vec::new();
     for &r in &rs {
-        let (acc, _, _) = run_one(cfg_for(&preset, "splitfc", r, bpe, 32.0, args))?;
+        let (acc, _, _) = run_one(cfg_for(&preset, "splitfc", r, bpe, 32.0, args)?)?;
         cols.push(format!("{:.2}", acc * 100.0));
         results.push((format!("R{r}"), Json::num(acc as f64)));
     }
@@ -293,16 +294,12 @@ pub fn fig5(args: &Args) -> Result<()> {
     let bpe = args.get_f64("ce", 0.2);
     let r = args.get_f64("r", 8.0);
     let mut results = Vec::new();
-    let (opt_acc, _, _) = run_one(cfg_for(&preset, "splitfc", r, bpe, 32.0, args))?;
+    let (opt_acc, _, _) = run_one(cfg_for(&preset, "splitfc", r, bpe, 32.0, args)?)?;
     results.push(("optimal".to_string(), Json::num(opt_acc as f64)));
     let mut rows = vec![("optimal levels".to_string(), vec![format!("{:.2}", opt_acc * 100.0)])];
     for q in [2u64, 4, 8, 16, 32] {
-        let mut cfg = cfg_for(&preset, "splitfc", r, bpe, 32.0, args);
-        cfg.scheme = crate::compression::Scheme::SplitFc {
-            drop: Some(crate::compression::DropKind::Adaptive),
-            r,
-            quant: crate::compression::FwqMode::Fixed { q },
-        };
+        let mut cfg = cfg_for(&preset, "splitfc", r, bpe, 32.0, args)?;
+        cfg.scheme = CodecSpec::parse_with_r(&format!("splitfc[ad,R={r},fixedQ{q}]"), r)?;
         let (acc, _, _) = run_one(cfg)?;
         rows.push((format!("fixed Q={q}"), vec![format!("{:.2}", acc * 100.0)]));
         results.push((format!("fixedQ{q}"), Json::num(acc as f64)));
@@ -330,7 +327,7 @@ pub fn table3(args: &Args) -> Result<()> {
         ];
         let mut rows = Vec::new();
         for (label, scheme, rr, bpe) in cases {
-            let (acc, _, _) = run_one(cfg_for(&preset, scheme, rr, bpe, bpe, args))?;
+            let (acc, _, _) = run_one(cfg_for(&preset, scheme, rr, bpe, bpe, args)?)?;
             rows.push((label.to_string(), vec![format!("{:.2}", acc * 100.0)]));
             results.push((format!("{preset}/{label}"), Json::num(acc as f64)));
         }
@@ -379,7 +376,7 @@ mod tests {
 
     #[test]
     fn cfg_for_pins_experiment_budgets_by_default() {
-        let c = cfg_for("tiny", "splitfc", 8.0, 0.2, 0.4, &args("x --rounds 2"));
+        let c = cfg_for("tiny", "splitfc", 8.0, 0.2, 0.4, &args("x --rounds 2")).unwrap();
         assert_eq!(c.up_bits_per_entry, 0.2);
         assert_eq!(c.down_bits_per_entry, 0.4);
         assert_eq!(c.rounds, 2);
@@ -394,16 +391,19 @@ mod tests {
             0.2,
             0.4,
             &args("x --up-bpe 1.5 --down-bpe 2.5"),
-        );
+        )
+        .unwrap();
         assert_eq!(c.up_bits_per_entry, 1.5);
         assert_eq!(c.down_bits_per_entry, 2.5);
     }
 
     #[test]
     fn cfg_for_repins_scheme_with_r_override() {
-        let c = cfg_for("tiny", "splitfc", 8.0, 0.2, 0.4, &args("x --r 32 --scheme tops"));
+        let c =
+            cfg_for("tiny", "splitfc", 8.0, 0.2, 0.4, &args("x --r 32 --scheme tops")).unwrap();
         // the scheme is the experiment row — --scheme must not leak in,
         // but --r parameterizes the pinned scheme
-        assert_eq!(c.scheme, crate::compression::Scheme::splitfc(32.0));
+        assert_eq!(c.scheme, parse_scheme("splitfc", 32.0).unwrap());
+        assert_eq!(c.scheme.r, 32.0);
     }
 }

@@ -17,6 +17,7 @@
 //! `Trainer` wires the three roles up from a [`TrainConfig`] and keeps the
 //! original `new`/`step`/`run`/`evaluate`/`probe_features` surface.
 
+use crate::compression::CodecParams;
 use crate::config::{PartitionKind, TrainConfig};
 use crate::coordinator::metrics::{MetricsWriter, StepRecord, TrainSummary};
 use crate::coordinator::scheduler::Scheduler;
@@ -122,22 +123,30 @@ impl Trainer {
             shared_rng,
             metrics,
         );
-        let workers: Vec<DeviceWorker> = loaders
-            .into_iter()
-            .enumerate()
-            .map(|(k, loader)| {
-                DeviceWorker::new(
-                    k,
-                    loader,
-                    rng.fork(0x1_0000 + k as u64),
-                    Link::new(cfg.link_capacity_bps, cfg.link_latency_s),
-                    cfg.scheme.clone(),
-                    &preset,
-                    cfg.up_bits_per_entry,
-                    cfg.down_bits_per_entry,
-                )
-            })
-            .collect();
+        // codec parameters shared by device and PS sides of every link
+        let up_params = CodecParams::new(preset.batch, preset.dbar, cfg.up_bits_per_entry)
+            .with_q_ep(cfg.q_ep)
+            .with_noise_seed(cfg.noise_seed)
+            .with_chan_size(preset.chan_size);
+        let down_params = CodecParams::new(preset.batch, preset.dbar, cfg.down_bits_per_entry)
+            .with_q_ep(cfg.q_ep)
+            .with_noise_seed(cfg.noise_seed)
+            .with_chan_size(preset.chan_size);
+        // one codec *session* per device: sessionful codecs (error feedback)
+        // keep per-device state, so instances are never shared across links
+        let mut workers: Vec<DeviceWorker> = Vec::with_capacity(loaders.len());
+        for (k, loader) in loaders.into_iter().enumerate() {
+            workers.push(DeviceWorker::new(
+                k,
+                loader,
+                rng.fork(0x1_0000 + k as u64),
+                Link::new(cfg.link_capacity_bps, cfg.link_latency_s),
+                cfg.scheme.build()?,
+                &preset,
+                up_params.clone(),
+                down_params.clone(),
+            ));
+        }
 
         Ok(Trainer { cfg, preset, server, workers, train, test, steps_taken: 0 })
     }

@@ -3,18 +3,20 @@
 //! One `DeviceWorker` per client k owns everything local to that device: its
 //! minibatch loader over the device's partition, its own RNG fork, its own
 //! uplink/downlink [`Link`] (per-device accounting, aggregated by
-//! [`LinkReport::aggregate`]), and the codec configuration. A worker runs
-//! the device half of a protocol step — forward, σ statistics, FWDP/FWQ
-//! uplink encode, downlink decode with the chain-rule rescale
-//! δ_j/(1 - p_j), and the device backward pass — and talks to the
-//! [`ParameterServer`] only through its thread-safe methods, so K workers
-//! can execute steps concurrently under the scheduler's staleness window.
+//! [`LinkReport::aggregate`]), and its **codec session** — a
+//! [`Codec`] instance built from the configured spec through the registry,
+//! which also owns any cross-round compression state (e.g. the
+//! error-feedback residual of `splitfc[...,ef]`). A worker runs the device
+//! half of a protocol step — forward, σ statistics (only when the codec's
+//! [`Codec::requirements`] ask for them), uplink encode, downlink decode
+//! with the chain-rule rescale δ_j/(1 - p_j), and the device backward pass —
+//! and talks to the [`ParameterServer`] only through its thread-safe
+//! methods, so K workers can execute steps concurrently under the
+//! scheduler's staleness window.
 
 use std::time::Instant;
 
-use crate::compression::{
-    encode_downlink, encode_uplink, CodecParams, DropKind, GradMask, Scheme,
-};
+use crate::compression::{Codec, CodecParams, GradMask, SigmaStats};
 use crate::coordinator::metrics::StepRecord;
 use crate::coordinator::server::ParameterServer;
 use crate::data::{Dataset, MiniBatchLoader};
@@ -36,26 +38,18 @@ pub enum RngMode {
     PerDevice,
 }
 
-/// Does the scheme need σ statistics (the feature_stats kernel)?
-fn needs_sigma(scheme: &Scheme) -> bool {
-    matches!(
-        scheme,
-        Scheme::SplitFc { drop: Some(DropKind::Adaptive), .. }
-            | Scheme::SplitFc { drop: Some(DropKind::Deterministic), .. }
-    )
-}
-
 pub struct DeviceWorker {
     pub device: usize,
     loader: MiniBatchLoader,
     rng: Rng,
     link: Link,
-    scheme: Scheme,
+    /// this device's codec session (uplink encode + downlink decode state)
+    codec: Box<dyn Codec>,
     up_params: CodecParams,
     down_params: CodecParams,
     batch: usize,
-    dbar: usize,
     classes: usize,
+    /// from `codec.requirements()`: run the feature_stats kernel per step?
     use_sigma: bool,
     /// reusable w_d snapshot buffer (filled by the PS each step)
     wd_snapshot: Option<crate::model::ParamSet>,
@@ -68,23 +62,22 @@ impl DeviceWorker {
         loader: MiniBatchLoader,
         rng: Rng,
         link: Link,
-        scheme: Scheme,
+        codec: Box<dyn Codec>,
         preset: &PresetInfo,
-        up_bits_per_entry: f64,
-        down_bits_per_entry: f64,
+        up_params: CodecParams,
+        down_params: CodecParams,
     ) -> DeviceWorker {
         DeviceWorker {
             device,
             loader,
             rng,
             link,
-            up_params: CodecParams::new(preset.batch, preset.dbar, up_bits_per_entry),
-            down_params: CodecParams::new(preset.batch, preset.dbar, down_bits_per_entry),
+            up_params,
+            down_params,
             batch: preset.batch,
-            dbar: preset.dbar,
             classes: preset.classes,
-            use_sigma: needs_sigma(&scheme),
-            scheme,
+            use_sigma: codec.requirements().needs_sigma,
+            codec,
             wd_snapshot: None,
         }
     }
@@ -93,6 +86,11 @@ impl DeviceWorker {
     /// transfer time).
     pub fn link_report(&self) -> LinkReport {
         self.link.report()
+    }
+
+    /// This device's codec session (capability report, canonical name).
+    pub fn codec(&self) -> &dyn Codec {
+        self.codec.as_ref()
     }
 
     /// Run one full protocol step (t, k) for this device against the PS.
@@ -122,23 +120,24 @@ impl DeviceWorker {
         let f = server.backend().device_fwd(wd, &x)?;
         device_exec_s += t0.elapsed().as_secs_f64();
 
-        // 2. feature statistics (σ of the channel-normalized columns, eq. 10)
-        let sigma: Vec<f32> = if self.use_sigma {
+        // 2. feature statistics (σ of the channel-normalized columns,
+        //    eq. 10) — only when the codec's capability report asks for them
+        let stats: Option<SigmaStats> = if self.use_sigma {
             let t0 = Instant::now();
             let s = server.backend().feature_stats(&f)?;
             device_exec_s += t0.elapsed().as_secs_f64();
-            s
+            Some(SigmaStats::new(s))
         } else {
-            vec![0.0; self.dbar]
+            None
         };
 
         // 3. uplink compression + transmit over this device's link
         let enc = match rng_mode {
             RngMode::SharedSequential => server.with_rng(|rng| {
-                encode_uplink(&self.scheme, &f, &sigma, &self.up_params, rng)
-            }),
+                self.codec.encode_uplink(&f, stats.as_ref(), &self.up_params, rng)
+            })?,
             RngMode::PerDevice => {
-                encode_uplink(&self.scheme, &f, &sigma, &self.up_params, &mut self.rng)
+                self.codec.encode_uplink(&f, stats.as_ref(), &self.up_params, &mut self.rng)?
             }
         };
         self.link.transmit(Direction::Uplink, &enc.frame);
@@ -149,7 +148,7 @@ impl DeviceWorker {
         //       monolithic trainer's per-step accounting) but reaches the
         //       run total through process_uplink itself.
         let (out, server_dt) = server.process_uplink(&enc.f_hat, &y)?;
-        let dn = encode_downlink(&self.scheme, &out.g, &enc.mask, &self.down_params);
+        let dn = self.codec.encode_downlink(&out.g, &enc.mask, &self.down_params)?;
         self.link.transmit(Direction::Downlink, &dn.frame);
 
         // 6. downlink decode + chain-rule scale δ_j/(1-p_j), device backward
@@ -196,27 +195,5 @@ impl DeviceWorker {
         let sigma = server.backend().feature_stats(&f)?;
         server.add_exec(t0.elapsed().as_secs_f64());
         Ok((f, sigma))
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn sigma_needed_only_for_stat_driven_dropout() {
-        assert!(needs_sigma(&Scheme::splitfc(8.0)));
-        assert!(needs_sigma(&Scheme::SplitFc {
-            drop: Some(DropKind::Deterministic),
-            r: 4.0,
-            quant: crate::compression::FwqMode::NoQuant,
-        }));
-        assert!(!needs_sigma(&Scheme::Vanilla));
-        assert!(!needs_sigma(&Scheme::SplitFc {
-            drop: Some(DropKind::Random),
-            r: 4.0,
-            quant: crate::compression::FwqMode::NoQuant,
-        }));
-        assert!(!needs_sigma(&Scheme::TopS { theta: 0.0, quant: None }));
     }
 }

@@ -148,7 +148,7 @@ mod tests {
     #[test]
     fn transfer_time_model() {
         let mut link = Link::new(1000.0, 0.5);
-        let f = Frame::new(FrameKind::FeaturesUp, vec![0u8; 116], 1000 - Frame::HEADER_BITS);
+        let f = Frame::new(FrameKind::FeaturesUp, vec![0u8; 110], 1000 - Frame::HEADER_BITS);
         let t = link.transmit(Direction::Uplink, &f);
         assert!((t - 1.5).abs() < 1e-9, "t={t}"); // 0.5 latency + 1000/1000
     }

@@ -32,17 +32,31 @@ pub struct Frame {
     pub payload: Vec<u8>,
     /// Exact number of meaningful payload bits (payload.len()*8 rounds up).
     pub payload_bits: u64,
+    /// Versioned codec id: FNV-1a of the emitting codec's canonical name
+    /// (`compression::codec_id`). 0 = unstamped (control frames). Decoders
+    /// reject frames stamped by a different codec instead of misparsing.
+    pub codec_id: u32,
+    /// Wire-format version of the emitting codec (0 = unstamped).
+    pub codec_version: u16,
 }
 
 impl Frame {
     pub fn new(kind: FrameKind, payload: Vec<u8>, payload_bits: u64) -> Frame {
         debug_assert!(payload_bits <= payload.len() as u64 * 8);
         debug_assert!(payload.len() as u64 * 8 < payload_bits + 8);
-        Frame { kind, payload, payload_bits }
+        Frame { kind, payload, payload_bits, codec_id: 0, codec_version: 0 }
     }
 
-    /// Header cost: 8-bit tag + 64-bit length field.
-    pub const HEADER_BITS: u64 = 72;
+    /// Stamp the self-describing codec header (`Codec::stamp` calls this).
+    pub fn with_codec(mut self, codec_id: u32, codec_version: u16) -> Frame {
+        self.codec_id = codec_id;
+        self.codec_version = codec_version;
+        self
+    }
+
+    /// Header cost: 8-bit tag + 64-bit length field + 32-bit codec id +
+    /// 16-bit codec wire version.
+    pub const HEADER_BITS: u64 = 120;
 
     pub fn total_bits(&self) -> u64 {
         Self::HEADER_BITS + self.payload_bits
@@ -66,6 +80,18 @@ mod tests {
     fn frame_rejects_inconsistent_bits() {
         // 2 bytes but claims 20 bits of payload in 1 byte? 20 > 16
         let _ = Frame::new(FrameKind::ModelSync, vec![0u8], 20);
+    }
+
+    #[test]
+    fn codec_stamp_sets_header_not_payload() {
+        let f = Frame::new(FrameKind::FeaturesUp, vec![0xAB, 0x01], 10);
+        assert_eq!((f.codec_id, f.codec_version), (0, 0));
+        let stamped = f.clone().with_codec(0xDEAD_BEEF, 3);
+        assert_eq!(stamped.codec_id, 0xDEAD_BEEF);
+        assert_eq!(stamped.codec_version, 3);
+        assert_eq!(stamped.payload, f.payload);
+        assert_eq!(stamped.payload_bits, f.payload_bits);
+        assert_eq!(stamped.total_bits(), f.total_bits());
     }
 
     #[test]

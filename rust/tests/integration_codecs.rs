@@ -1,0 +1,382 @@
+//! Integration: the pluggable codec API.
+//!
+//! * **Golden parity** — every registry codec emits byte-identical frames
+//!   and reconstructions (`f_hat`/`g_hat`) to the pre-refactor `Scheme`
+//!   enum path for a fixed seed, both link directions, and its true wire
+//!   decode inverts its encode.
+//! * **Self-describing frames** — decoders reject frames stamped by a
+//!   different codec or wire version.
+//! * **Sessionful error feedback** — a `splitfc[...,ef]` codec carries its
+//!   residual across rounds and the accumulated reconstruction error
+//!   shrinks, beating the memoryless codec.
+//! * **Out-of-core codec** — a sign-SGD codec defined *in this test file*
+//!   registers through `register_codec` and trains end-to-end via
+//!   `--scheme sign`, without touching `compression/pipeline.rs`.
+
+use splitfc::bitio::{BitReader, BitWriter};
+use splitfc::compression::{
+    encode_downlink, encode_uplink, register_codec, registered_names, Codec, CodecParams,
+    CodecRequirements, CodecSpec, DecodedUplink, DropKind, EncodedUplink, FwqMode, GradMask,
+    ScalarKind, Scheme, SigmaStats, SplitFcCodec,
+};
+use splitfc::config::parse_scheme;
+use splitfc::tensor::{column_stats, normalized_sigma, Matrix};
+use splitfc::testkit::hetero_matrix;
+use splitfc::transport::wire::{Frame, FrameKind};
+use splitfc::util::error::Result;
+use splitfc::util::Rng;
+
+const B: usize = 16;
+const D: usize = 64;
+
+fn fixtures() -> (Matrix, SigmaStats, Matrix) {
+    let f = hetero_matrix(B, D, 7);
+    let stats = SigmaStats::new(normalized_sigma(&column_stats(&f), 4));
+    let g = Matrix::from_fn(B, D, |r, c| ((r * 13 + c * 3) % 11) as f32 * 0.03 - 0.15);
+    (f, stats, g)
+}
+
+/// The 16 registry names and the legacy enum value each must match
+/// bit-for-bit (the pre-refactor `parse_scheme` table at R = 8).
+fn legacy_rows() -> Vec<(&'static str, Scheme)> {
+    let ad = Some(DropKind::Adaptive);
+    vec![
+        ("vanilla", Scheme::Vanilla),
+        ("splitfc", Scheme::splitfc(8.0)),
+        ("splitfc-ad", Scheme::SplitFc { drop: ad, r: 8.0, quant: FwqMode::NoQuant }),
+        (
+            "splitfc-rand",
+            Scheme::SplitFc { drop: Some(DropKind::Random), r: 8.0, quant: FwqMode::NoQuant },
+        ),
+        (
+            "splitfc-det",
+            Scheme::SplitFc {
+                drop: Some(DropKind::Deterministic),
+                r: 8.0,
+                quant: FwqMode::NoQuant,
+            },
+        ),
+        (
+            "splitfc-quant-only",
+            Scheme::SplitFc { drop: None, r: 1.0, quant: FwqMode::Optimal { use_mean: true } },
+        ),
+        (
+            "splitfc-no-mean",
+            Scheme::SplitFc { drop: ad, r: 8.0, quant: FwqMode::Optimal { use_mean: false } },
+        ),
+        ("splitfc-ad+pq", Scheme::SplitFc { drop: ad, r: 8.0, quant: FwqMode::Scalar(ScalarKind::Pq) }),
+        ("splitfc-ad+eq", Scheme::SplitFc { drop: ad, r: 8.0, quant: FwqMode::Scalar(ScalarKind::Eq) }),
+        ("splitfc-ad+nq", Scheme::SplitFc { drop: ad, r: 8.0, quant: FwqMode::Scalar(ScalarKind::Nq) }),
+        ("tops", Scheme::TopS { theta: 0.0, quant: None }),
+        ("randtops", Scheme::TopS { theta: 0.2, quant: None }),
+        ("tops+pq", Scheme::TopS { theta: 0.0, quant: Some(ScalarKind::Pq) }),
+        ("tops+eq", Scheme::TopS { theta: 0.0, quant: Some(ScalarKind::Eq) }),
+        ("tops+nq", Scheme::TopS { theta: 0.0, quant: Some(ScalarKind::Nq) }),
+        ("fedlite", Scheme::FedLite { num_subvectors: 16 }),
+    ]
+}
+
+#[test]
+fn every_registry_codec_matches_legacy_scheme_path_bit_exactly() {
+    let (f, stats, g) = fixtures();
+    for (name, scheme) in legacy_rows() {
+        let bpe = if name == "vanilla" { 32.0 } else { 1.0 };
+        let up = CodecParams::new(B, D, bpe);
+
+        // legacy enum path
+        let mut rng_a = Rng::new(33);
+        let legacy = encode_uplink(&scheme, &f, &stats.sigma_norm, &up, &mut rng_a);
+
+        // registry path
+        let spec = parse_scheme(name, 8.0).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let mut codec = spec.build().unwrap_or_else(|e| panic!("{name}: {e}"));
+        let mut rng_b = Rng::new(33);
+        let enc = codec
+            .encode_uplink(&f, Some(&stats), &up, &mut rng_b)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+
+        assert_eq!(enc.frame.payload, legacy.frame.payload, "{name}: uplink payload differs");
+        assert_eq!(enc.frame.payload_bits, legacy.frame.payload_bits, "{name}");
+        assert_eq!(enc.f_hat, legacy.f_hat, "{name}: f_hat differs");
+        assert_eq!(enc.nominal_bits, legacy.nominal_bits, "{name}");
+        assert_eq!(enc.m_star, legacy.m_star, "{name}");
+
+        // downlink parity at both a lossless and a tight budget
+        for down_bpe in [32.0, 2.0] {
+            let down = CodecParams::new(B, D, down_bpe);
+            let legacy_dn = encode_downlink(&scheme, &g, &legacy.mask, &down);
+            let dn = codec
+                .encode_downlink(&g, &enc.mask, &down)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(
+                dn.frame.payload, legacy_dn.frame.payload,
+                "{name}@{down_bpe}: downlink payload differs"
+            );
+            assert_eq!(dn.g_hat, legacy_dn.g_hat, "{name}@{down_bpe}: g_hat differs");
+
+            // true wire decode inverts encode, both directions
+            let g_dec = codec
+                .decode_downlink(&dn.frame, &enc.mask, &down)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(g_dec, dn.g_hat, "{name}@{down_bpe}: downlink wire decode");
+        }
+        let dec = codec.decode_uplink(&enc.frame, &up).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(dec.f_hat, enc.f_hat, "{name}: uplink wire decode");
+        if let GradMask::Columns { kept, .. } = &enc.mask {
+            assert_eq!(&dec.kept, kept, "{name}: kept set");
+        }
+    }
+}
+
+#[test]
+fn encoding_is_deterministic_across_sessions() {
+    let (f, stats, _) = fixtures();
+    for name in ["splitfc", "tops", "fedlite", "randtops"] {
+        let spec = parse_scheme(name, 8.0).unwrap();
+        let params = CodecParams::new(B, D, 1.0);
+        let encode = |spec: &CodecSpec| {
+            let mut codec = spec.build().unwrap();
+            let mut rng = Rng::new(12);
+            codec.encode_uplink(&f, Some(&stats), &params, &mut rng).unwrap()
+        };
+        let a = encode(&spec);
+        let b = encode(&spec);
+        assert_eq!(a.frame.payload, b.frame.payload, "{name}: fresh sessions must agree");
+    }
+}
+
+#[test]
+fn frames_from_a_different_codec_or_version_are_rejected() {
+    let (f, stats, _) = fixtures();
+    let params = CodecParams::new(B, D, 1.0);
+    let splitfc = parse_scheme("splitfc", 8.0).unwrap().build().unwrap();
+    let mut splitfc_mut = parse_scheme("splitfc", 8.0).unwrap().build().unwrap();
+    let mut rng = Rng::new(3);
+    let enc = splitfc_mut.encode_uplink(&f, Some(&stats), &params, &mut rng).unwrap();
+
+    // same codec accepts its own frame
+    assert!(splitfc.decode_uplink(&enc.frame, &params).is_ok());
+
+    // a different codec rejects it instead of misparsing
+    let vanilla = parse_scheme("vanilla", 1.0).unwrap().build().unwrap();
+    let err = vanilla.decode_uplink(&enc.frame, &params).unwrap_err();
+    assert!(err.to_string().contains("codec id"), "{err}");
+
+    // a differently-parameterized session of the same family rejects too
+    let splitfc_r16 = parse_scheme("splitfc", 16.0).unwrap().build().unwrap();
+    assert!(splitfc_r16.decode_uplink(&enc.frame, &params).is_err());
+
+    // and so does a future wire version of the same codec
+    let future = enc.frame.clone().with_codec(enc.frame.codec_id, 99);
+    let err = splitfc.decode_uplink(&future, &params).unwrap_err();
+    assert!(err.to_string().contains("version"), "{err}");
+
+    // unstamped frames (legacy/control) are also rejected by codec decoders
+    let unstamped = Frame::new(FrameKind::FeaturesUp, enc.frame.payload.clone(), enc.frame.payload_bits);
+    assert!(splitfc.decode_uplink(&unstamped, &params).is_err());
+}
+
+#[test]
+fn error_feedback_session_shrinks_accumulated_error() {
+    // splitfc[det,...]: deterministic keep-top-σ dropout is a contractive
+    // compressor — classic EF territory. The sessionful codec carries the
+    // residual, so the running mean of transmitted features converges to F;
+    // the memoryless codec resends the same columns forever and cannot.
+    let (f, stats, _) = fixtures();
+    let params = CodecParams::new(B, D, 0.5);
+    let spec = CodecSpec::parse_with_r("splitfc[det,R=8,fwq,ef]", 8.0).unwrap();
+    let mut ef_codec = spec.build().unwrap();
+    assert!(ef_codec.requirements().stateful, "ef codec must report session state");
+    assert!(!parse_scheme("splitfc", 8.0).unwrap().build().unwrap().requirements().stateful);
+
+    let mut rng = Rng::new(5);
+    let mut mean_ef = Matrix::zeros(B, D);
+    let mut err_at = Vec::new(); // accumulated-mean error after each round
+    let rounds = 30;
+    for t in 1..=rounds {
+        let enc = ef_codec.encode_uplink(&f, Some(&stats), &params, &mut rng).unwrap();
+        for (m, &v) in mean_ef.data.iter_mut().zip(&enc.f_hat.data) {
+            *m += v;
+        }
+        let mut snapshot = mean_ef.clone();
+        for v in &mut snapshot.data {
+            *v /= t as f32;
+        }
+        err_at.push(f.sq_dist(&snapshot));
+    }
+    assert!(
+        err_at[rounds - 1] < err_at[2],
+        "EF accumulated error must shrink across rounds: {err_at:?}"
+    );
+
+    // memoryless baseline (same spec minus ef) for the same budget/seed
+    let mut raw_codec =
+        CodecSpec::parse_with_r("splitfc[det,R=8,fwq]", 8.0).unwrap().build().unwrap();
+    let mut rng = Rng::new(5);
+    let mut mean_raw = Matrix::zeros(B, D);
+    for _ in 0..rounds {
+        let enc = raw_codec.encode_uplink(&f, Some(&stats), &params, &mut rng).unwrap();
+        for (m, &v) in mean_raw.data.iter_mut().zip(&enc.f_hat.data) {
+            *m += v / rounds as f32;
+        }
+    }
+    let err_raw = f.sq_dist(&mean_raw);
+    assert!(
+        err_at[rounds - 1] < err_raw,
+        "EF mean error {} should beat memoryless {err_raw}",
+        err_at[rounds - 1]
+    );
+}
+
+#[test]
+fn error_feedback_residual_stays_bounded_and_inspectable() {
+    let (f, stats, _) = fixtures();
+    let params = CodecParams::new(B, D, 0.5);
+    let mut codec = SplitFcCodec::new(
+        Some(DropKind::Deterministic),
+        8.0,
+        FwqMode::Optimal { use_mean: true },
+    )
+    .with_error_feedback(1.0);
+    assert_eq!(codec.ef_residual_norm(), None, "no residual before the first round");
+    let mut rng = Rng::new(9);
+    let mut norms = Vec::new();
+    for _ in 0..40 {
+        codec.encode_uplink(&f, Some(&stats), &params, &mut rng).unwrap();
+        norms.push(codec.ef_residual_norm().expect("residual after encode"));
+    }
+    assert!(norms.iter().all(|n| n.is_finite()));
+    let early = norms[..5].iter().cloned().fold(0.0f64, f64::max);
+    let late = norms[35..].iter().cloned().fold(0.0f64, f64::max);
+    assert!(
+        late < 10.0 * early.max(f.sq_norm().sqrt()),
+        "residual blow-up: early {early} late {late}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Out-of-core demo codec: sign-SGD, defined HERE (outside compression/),
+// registered through the public API, trained end-to-end via --scheme sign.
+// ---------------------------------------------------------------------------
+
+/// 1-bit sign compression: per row, one f32 magnitude (mean |x|) + D sign
+/// bits. The mask-coupled downlink and frame stamping/checking come free
+/// from the trait defaults — only the uplink pair is codec-specific.
+struct SignCodec;
+
+impl Codec for SignCodec {
+    fn name(&self) -> String {
+        "sign-sgd".to_string()
+    }
+
+    fn requirements(&self) -> CodecRequirements {
+        CodecRequirements::default()
+    }
+
+    fn encode_uplink(
+        &mut self,
+        f: &Matrix,
+        _stats: Option<&SigmaStats>,
+        _params: &CodecParams,
+        _rng: &mut Rng,
+    ) -> Result<EncodedUplink> {
+        let (b, d) = (f.rows, f.cols);
+        let mut w = BitWriter::new();
+        let mut f_hat = Matrix::zeros(b, d);
+        for r in 0..b {
+            let mag = (0..d).map(|c| f.at(r, c).abs()).sum::<f32>() / d as f32;
+            w.write_f32(mag);
+            for c in 0..d {
+                let neg = f.at(r, c) < 0.0;
+                w.write_bits(neg as u64, 1);
+                *f_hat.at_mut(r, c) = if neg { -mag } else { mag };
+            }
+        }
+        let bits = w.bit_len();
+        Ok(EncodedUplink {
+            frame: self.stamp(Frame::new(FrameKind::FeaturesUp, w.into_bytes(), bits)),
+            f_hat,
+            mask: GradMask::All,
+            nominal_bits: (b * (32 + d)) as f64,
+            m_star: None,
+        })
+    }
+
+    fn decode_uplink(&self, frame: &Frame, params: &CodecParams) -> Result<DecodedUplink> {
+        self.check_frame(frame)?;
+        let (b, d) = (params.batch, params.dbar);
+        let mut rd = BitReader::with_bit_len(&frame.payload, frame.payload_bits);
+        let mut f_hat = Matrix::zeros(b, d);
+        for r in 0..b {
+            let mag = rd.read_f32();
+            for c in 0..d {
+                let neg = rd.read_bits(1) == 1;
+                *f_hat.at_mut(r, c) = if neg { -mag } else { mag };
+            }
+        }
+        Ok(DecodedUplink { f_hat, kept: (0..d).collect() })
+    }
+}
+
+fn register_sign_codec() {
+    register_codec("sign", |_spec: &CodecSpec| -> Result<Box<dyn Codec>> {
+        Ok(Box::new(SignCodec))
+    });
+}
+
+#[test]
+fn out_of_core_codec_registers_and_round_trips() {
+    register_sign_codec();
+    assert!(registered_names().iter().any(|n| n == "sign"));
+
+    let (f, stats, g) = fixtures();
+    let params = CodecParams::new(B, D, 32.0);
+    let spec = parse_scheme("sign", 1.0).expect("registered out-of-core codec parses");
+    let mut codec = spec.build().unwrap();
+    let mut rng = Rng::new(1);
+    let enc = codec.encode_uplink(&f, Some(&stats), &params, &mut rng).unwrap();
+    assert_eq!(enc.frame.payload_bits as usize, B * (32 + D));
+    let dec = codec.decode_uplink(&enc.frame, &params).unwrap();
+    assert_eq!(dec.f_hat, enc.f_hat, "sign wire decode");
+    // signs survive exactly
+    for r in 0..B {
+        for c in 0..D {
+            if f.at(r, c) != 0.0 && enc.f_hat.at(r, c) != 0.0 {
+                assert_eq!(f.at(r, c) < 0.0, enc.f_hat.at(r, c) < 0.0);
+            }
+        }
+    }
+    let dn = codec.encode_downlink(&g, &enc.mask, &params).unwrap();
+    let g_dec = codec.decode_downlink(&dn.frame, &enc.mask, &params).unwrap();
+    assert_eq!(g_dec, dn.g_hat);
+}
+
+#[test]
+fn out_of_core_codec_trains_end_to_end_via_scheme_flag() {
+    use splitfc::config::TrainConfig;
+    use splitfc::coordinator::Trainer;
+    use splitfc::util::Args;
+
+    register_sign_codec();
+    let mut cfg = TrainConfig::for_preset("tiny");
+    cfg.devices = 2;
+    cfg.rounds = 2;
+    cfg.n_train = 128;
+    cfg.n_test = 32;
+    let args = Args::parse(
+        &"x --scheme sign --up-bpe 32 --down-bpe 32"
+            .split_whitespace()
+            .map(String::from)
+            .collect::<Vec<_>>(),
+    );
+    cfg.apply_overrides(&args).expect("out-of-core scheme resolves through config");
+    assert_eq!(cfg.scheme.base, "sign");
+    let mut tr = Trainer::new(cfg).unwrap();
+    let rec = tr.step(1, 0).unwrap();
+    assert!(rec.loss.is_finite());
+    // B rows × (32-bit magnitude + D̄ sign bits)
+    let p = tr.preset().clone();
+    assert_eq!(rec.up_bits as usize, p.batch * (32 + p.dbar));
+    let s = tr.run().unwrap();
+    assert!(s.final_acc.is_finite());
+}

@@ -7,8 +7,7 @@
 //! `staleness > 0` run relaxes the ordering but must still converge on the
 //! tiny preset.
 
-use splitfc::compression::Scheme;
-use splitfc::config::TrainConfig;
+use splitfc::config::{parse_scheme, TrainConfig};
 use splitfc::coordinator::Trainer;
 use splitfc::util::Json;
 
@@ -19,7 +18,7 @@ fn base_cfg(metrics: &str) -> TrainConfig {
     cfg.n_train = 256;
     cfg.n_test = 64;
     cfg.eval_every = 2;
-    cfg.scheme = Scheme::splitfc(4.0);
+    cfg.scheme = parse_scheme("splitfc", 4.0).unwrap();
     cfg.up_bits_per_entry = 2.0;
     cfg.down_bits_per_entry = 4.0;
     cfg.seed = 11;

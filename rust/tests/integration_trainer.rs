@@ -3,8 +3,7 @@
 //! The same suite drives the PJRT backend when built with `--features pjrt`
 //! and `cfg.backend = BackendKind::Pjrt`.
 
-use splitfc::compression::{DropKind, FwqMode, Scheme};
-use splitfc::config::TrainConfig;
+use splitfc::config::{parse_scheme, TrainConfig};
 use splitfc::coordinator::Trainer;
 
 fn base_cfg() -> TrainConfig {
@@ -36,7 +35,7 @@ fn vanilla_training_reduces_loss_and_learns() {
 #[test]
 fn splitfc_budget_respected_per_step() {
     let mut cfg = base_cfg();
-    cfg.scheme = Scheme::splitfc(4.0);
+    cfg.scheme = parse_scheme("splitfc", 4.0).unwrap();
     cfg.up_bits_per_entry = 1.0;
     cfg.down_bits_per_entry = 2.0;
     let mut tr = Trainer::new(cfg).unwrap();
@@ -64,7 +63,7 @@ fn run_is_deterministic_given_seed() {
     let acc = |seed: u64| {
         let mut cfg = base_cfg();
         cfg.seed = seed;
-        cfg.scheme = Scheme::splitfc(4.0);
+        cfg.scheme = parse_scheme("splitfc", 4.0).unwrap();
         cfg.up_bits_per_entry = 2.0;
         let mut tr = Trainer::new(cfg).unwrap();
         let s = tr.run().unwrap();
@@ -79,7 +78,6 @@ fn run_is_deterministic_given_seed() {
 
 #[test]
 fn all_table_schemes_run_one_step() {
-    use splitfc::config::parse_scheme;
     for name in [
         "vanilla",
         "splitfc",
@@ -98,7 +96,7 @@ fn all_table_schemes_run_one_step() {
     ] {
         let mut cfg = base_cfg();
         cfg.rounds = 1;
-        cfg.scheme = parse_scheme(name, 4.0);
+        cfg.scheme = parse_scheme(name, 4.0).unwrap();
         cfg.up_bits_per_entry = if name == "vanilla" { 32.0 } else { 1.0 };
         cfg.down_bits_per_entry = 32.0;
         let mut tr = Trainer::new(cfg).unwrap();
@@ -113,11 +111,7 @@ fn downlink_compression_couples_to_dropout() {
     // with dropout at R=4, the downlink (lossless) should carry ~1/4 of the
     // full gradient bits
     let mut cfg = base_cfg();
-    cfg.scheme = Scheme::SplitFc {
-        drop: Some(DropKind::Adaptive),
-        r: 4.0,
-        quant: FwqMode::NoQuant,
-    };
+    cfg.scheme = parse_scheme("splitfc-ad", 4.0).unwrap();
     cfg.up_bits_per_entry = 32.0;
     cfg.down_bits_per_entry = 32.0;
     let mut tr = Trainer::new(cfg).unwrap();
