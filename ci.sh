@@ -31,14 +31,24 @@ echo "==> bench smoke (THREADS=2, quick): BENCH_fwq.json / BENCH_e2e.json"
 THREADS=2 cargo bench --bench bench_compression -- --quick
 THREADS=2 cargo bench --bench bench_e2e_step -- --quick
 
+echo "==> wire bench (quick, counting allocator): BENCH_wire.json + 0 allocs/step gate"
+# the bench itself exits non-zero if a warm splitfc[ad,R=8,fwq] session
+# allocates in steady state
+THREADS=2 cargo bench --features alloc-count --bench bench_wire -- --quick
+
+echo "==> steady-state allocation test (counting allocator, isolated)"
+# process-global counter: run the one test single-threaded
+cargo test --features alloc-count --test integration_codecs \
+    steady_state_codec_steps_are_allocation_free -- --test-threads=1
+
 echo "==> coordinator bench (quick): BENCH_coordinator.json"
 cargo bench --bench bench_coordinator -- --quick
 
 if [ "${SKIP_CLIPPY:-0}" = "1" ]; then
     echo "==> clippy skipped (SKIP_CLIPPY=1)"
 elif cargo clippy --version >/dev/null 2>&1; then
-    echo "==> cargo clippy --all-targets -- -D warnings"
-    cargo clippy --all-targets -- -D warnings
+    echo "==> cargo clippy --all-targets -- -W clippy::perf -D warnings"
+    cargo clippy --all-targets -- -W clippy::perf -D warnings
 else
     echo "==> clippy not installed; skipping lint step" >&2
 fi

@@ -1,0 +1,402 @@
+//! Wire hot-path microbenchmarks → BENCH_wire.json.
+//!
+//! Three questions, answered on the paper-scale `B=64, D̄=8192` FWQ frame
+//! (the Sec. VII regime, the same frame `BENCH_fwq.json` tracks):
+//!
+//! 1. **bitio kernels** — serializing/deserializing the exact bit profile of
+//!    that frame (flags, radix-packed endpoint/mean/entry symbols, blob
+//!    embed) through the word-level `BitWriter`/`BitReader` vs the original
+//!    per-bit `BitWriterRef`/`BitReaderRef` oracles. This is the layer the
+//!    zero-allocation rewrite targets; the acceptance gate is ≥ 3× on the
+//!    write side.
+//! 2. **codec sessions** — full `splitfc[ad,R=8,fwq]` uplink encode/decode
+//!    ns/op through the fused path, serial and threaded.
+//! 3. **allocations/step** — cold first step vs steady state under the
+//!    counting allocator (`--features alloc-count`); steady state must be
+//!    **zero** or the bench exits non-zero (the CI gate).
+//!
+//! `-- --quick` shortens runs for CI smoke; `THREADS=<n>` / `-- --threads n`
+//! sizes the pool for the threaded rows.
+
+use splitfc::bench::Bencher;
+use splitfc::bitio::{BitReader, BitReaderRef, BitWriter, BitWriterRef};
+use splitfc::compression::{
+    fwq_encode, Codec, CodecParams, CodecSpec, FwqConfig, Reclaim, SigmaStats,
+};
+use splitfc::tensor::{column_stats, normalized_sigma};
+use splitfc::testkit::hetero_matrix;
+use splitfc::util::{alloc_count, par, Args, Json, Rng};
+
+const B: usize = 64;
+const DBAR: usize = 8192;
+const BPE: f64 = 0.2;
+
+/// The bit-level profile of a real FWQ frame: symbol streams with the sizes
+/// and radices an actual encode of the B×D̄ matrix produces.
+struct FrameShape {
+    delta: Vec<u64>,    // D̄ dropout flag bits
+    flags: Vec<u64>,    // D̂ two-stage flag bits
+    ep_syms: Vec<u64>,  // 2M endpoint codes, radix Q_ep
+    q_ep: u64,
+    mean_syms: Vec<u64>, // D̂-M mean codes, radix Q0
+    q0: u64,
+    col_syms: Vec<Vec<u64>>, // M columns × B entry codes
+    q_col: u64,
+    blob: Vec<u8>, // the embedded sub-stream bytes (blob fast-path volume)
+}
+
+impl FrameShape {
+    /// Derive the shape from an actual paper-scale encode (M*, Q0, and the
+    /// per-column level mass all come from the real frame).
+    fn paper_scale() -> FrameShape {
+        let a = hetero_matrix(B, DBAR, 42);
+        let cfg = FwqConfig::paper_default(B, BPE * (B * DBAR) as f64);
+        let (bytes, _bits, info) = fwq_encode(&a, &cfg);
+        let m = info.m_star.max(1);
+        let n_mean = DBAR - m;
+        let q0 = info.q0.unwrap_or(2).max(2);
+        // back out the average per-column entry level from eq.-17 accounting
+        let lg_ep = 200f64.log2();
+        let entry_bits = (info.nominal_bits
+            - 2.0 * m as f64 * lg_ep
+            - DBAR as f64
+            - 128.0
+            - n_mean as f64 * (q0 as f64).log2())
+        .max(0.0);
+        let bits_per_sym = entry_bits / (m as f64 * B as f64);
+        let q_col = (2f64.powf(bits_per_sym).round() as u64).clamp(2, 1 << 16);
+
+        let mut rng = Rng::new(7);
+        FrameShape {
+            delta: (0..DBAR).map(|_| (rng.next_u64() & 1)).collect(),
+            flags: (0..DBAR).map(|i| ((i < m) as u64)).collect(),
+            ep_syms: (0..2 * m).map(|_| rng.next_u64() % 200).collect(),
+            q_ep: 200,
+            mean_syms: (0..n_mean).map(|_| rng.next_u64() % q0).collect(),
+            q0,
+            col_syms: (0..m)
+                .map(|_| (0..B).map(|_| rng.next_u64() % q_col).collect())
+                .collect(),
+            q_col,
+            blob: bytes,
+        }
+    }
+}
+
+/// Writer facade so the same frame-emission code drives both the word-level
+/// writer and the per-bit reference oracle.
+trait Put {
+    fn bits(&mut self, v: u64, n: u32);
+    fn radix(&mut self, syms: &[u64], q: u64);
+    fn bytes(&mut self, b: &[u8]);
+    fn blen(&self) -> u64;
+}
+
+impl Put for BitWriter {
+    fn bits(&mut self, v: u64, n: u32) {
+        self.write_bits(v, n)
+    }
+    fn radix(&mut self, syms: &[u64], q: u64) {
+        self.write_radix(syms, q)
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.write_bytes(b)
+    }
+    fn blen(&self) -> u64 {
+        self.bit_len()
+    }
+}
+
+impl Put for BitWriterRef {
+    fn bits(&mut self, v: u64, n: u32) {
+        self.write_bits(v, n)
+    }
+    fn radix(&mut self, syms: &[u64], q: u64) {
+        self.write_radix(syms, q)
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.write_bytes(b)
+    }
+    fn blen(&self) -> u64 {
+        self.bit_len()
+    }
+}
+
+fn emit_frame<W: Put>(w: &mut W, fr: &FrameShape) -> u64 {
+    for &d in &fr.delta {
+        w.bits(d, 1);
+    }
+    w.bits(fr.flags.len() as u64, 32);
+    w.bits(fr.col_syms.len() as u64, 32);
+    for _ in 0..4 {
+        w.bits(0x3F80_0000, 32); // the 4 range f32s
+    }
+    for &f in &fr.flags {
+        w.bits(f, 1);
+    }
+    w.radix(&fr.ep_syms, fr.q_ep);
+    w.radix(&fr.mean_syms, fr.q0);
+    for col in &fr.col_syms {
+        w.radix(col, fr.q_col);
+    }
+    // blob embed: 40-bit length prefix + byte run (the bulk fast path)
+    w.bits(fr.blob.len() as u64 * 8, 40);
+    w.bytes(&fr.blob);
+    w.blen()
+}
+
+fn read_frame_word(buf: &[u8], fr: &FrameShape, sink: &mut Vec<u8>) -> u64 {
+    let mut r = BitReader::new(buf);
+    let mut acc = 0u64;
+    for _ in 0..fr.delta.len() {
+        acc ^= r.read_bits(1);
+    }
+    acc ^= r.read_bits(32) + r.read_bits(32);
+    for _ in 0..4 {
+        acc ^= r.read_bits(32);
+    }
+    for _ in 0..fr.flags.len() {
+        acc ^= r.read_bits(1);
+    }
+    acc ^= r.read_radix(fr.ep_syms.len(), fr.q_ep).last().copied().unwrap_or(0);
+    acc ^= r.read_radix(fr.mean_syms.len(), fr.q0).last().copied().unwrap_or(0);
+    for col in &fr.col_syms {
+        acc ^= r.read_radix(col.len(), fr.q_col).last().copied().unwrap_or(0);
+    }
+    let nbits = r.read_bits(40);
+    sink.clear();
+    r.try_read_bytes_into((nbits / 8) as usize, sink).expect("blob");
+    acc
+}
+
+fn read_frame_ref(buf: &[u8], fr: &FrameShape, sink: &mut Vec<u8>) -> u64 {
+    let mut r = BitReaderRef::new(buf);
+    let mut acc = 0u64;
+    for _ in 0..fr.delta.len() {
+        acc ^= r.read_bits(1);
+    }
+    acc ^= r.read_bits(32) + r.read_bits(32);
+    for _ in 0..4 {
+        acc ^= r.read_bits(32);
+    }
+    for _ in 0..fr.flags.len() {
+        acc ^= r.read_bits(1);
+    }
+    acc ^= r.read_radix(fr.ep_syms.len(), fr.q_ep).last().copied().unwrap_or(0);
+    acc ^= r.read_radix(fr.mean_syms.len(), fr.q0).last().copied().unwrap_or(0);
+    for col in &fr.col_syms {
+        acc ^= r.read_radix(col.len(), fr.q_col).last().copied().unwrap_or(0);
+    }
+    let nbits = r.read_bits(40);
+    sink.clear();
+    for _ in 0..(nbits / 8) {
+        sink.push(r.read_bits(8) as u8);
+    }
+    acc
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.has_flag("quick");
+    let threads_req = par::thread_request(args.get_usize("threads", 0));
+    let bench = if quick { Bencher::quick() } else { Bencher::default() };
+
+    println!("deriving the paper-scale frame shape (B={B}, D̄={DBAR}, {BPE} bpe)...");
+    par::set_threads(1);
+    let fr = FrameShape::paper_scale();
+    println!(
+        "  M*={}, Q0={}, Q_col={}, blob={} bytes",
+        fr.col_syms.len(),
+        fr.q0,
+        fr.q_col,
+        fr.blob.len()
+    );
+
+    // ---- 1. bitio kernels, write side ----
+    let st_wref = bench.run("wire/write/ref(per-bit)", || {
+        let mut w = BitWriterRef::new();
+        emit_frame(&mut w, &fr)
+    });
+    println!("{}", st_wref.report());
+    let mut reuse = Vec::new();
+    let st_word = bench.run("wire/write/word-level", || {
+        let mut w = BitWriter::from_buf(std::mem::take(&mut reuse));
+        let bits = emit_frame(&mut w, &fr);
+        reuse = w.into_bytes();
+        bits
+    });
+    println!("{}", st_word.report());
+    let write_speedup = st_wref.p50_s / st_word.p50_s;
+
+    // parity of the two kernels on this stream
+    let mut a = BitWriter::new();
+    emit_frame(&mut a, &fr);
+    let mut b = BitWriterRef::new();
+    emit_frame(&mut b, &fr);
+    let buf = a.into_bytes();
+    assert_eq!(buf, b.into_bytes(), "word writer must match the oracle");
+
+    // ---- 1b. bitio kernels, read side ----
+    let mut sink = Vec::new();
+    let st_rref = bench.run("wire/read/ref(per-bit)", || read_frame_ref(&buf, &fr, &mut sink));
+    println!("{}", st_rref.report());
+    let st_rword = bench.run("wire/read/word-level", || read_frame_word(&buf, &fr, &mut sink));
+    println!("{}", st_rword.report());
+    let read_speedup = st_rref.p50_s / st_rword.p50_s;
+    println!(
+        "\nbitio on the FWQ frame: write {write_speedup:.2}x, read {read_speedup:.2}x \
+         (word-level vs per-bit reference)"
+    );
+
+    // ---- 2. full codec session, fused path ----
+    let f = hetero_matrix(B, DBAR, 42);
+    let stats = SigmaStats::new(normalized_sigma(&column_stats(&f), 64));
+    let up = CodecParams::new(B, DBAR, BPE);
+    let spec = CodecSpec::parse_with_r("splitfc", 8.0).expect("spec");
+    let mut codec = spec.build().expect("build splitfc");
+    let name = codec.name();
+
+    par::set_threads(1);
+    let mut rng = Rng::new(11);
+    let st_enc1 = bench.run(&format!("codec/{name}/encode/threads=1"), || {
+        let enc = codec.encode_uplink(&f, Some(&stats), &up, &mut rng).expect("encode");
+        let bits = enc.frame.payload_bits;
+        codec.reclaim(Reclaim::Uplink(enc));
+        bits
+    });
+    println!("{}", st_enc1.report());
+
+    par::set_threads(threads_req);
+    let tn = par::threads();
+    let st_encn = bench.run(&format!("codec/{name}/encode/threads={tn}"), || {
+        let enc = codec.encode_uplink(&f, Some(&stats), &up, &mut rng).expect("encode");
+        let bits = enc.frame.payload_bits;
+        codec.reclaim(Reclaim::Uplink(enc));
+        bits
+    });
+    println!("{}", st_encn.report());
+
+    par::set_threads(1);
+    let frame = codec.encode_uplink(&f, Some(&stats), &up, &mut rng).expect("encode").frame;
+    let st_dec = bench.run(&format!("codec/{name}/decode/threads=1"), || {
+        let dec = codec.decode_uplink(&frame, &up).expect("decode");
+        let n = dec.kept.len();
+        codec.reclaim(Reclaim::Decoded(dec));
+        n
+    });
+    println!("{}", st_dec.report());
+
+    // ---- 3. allocations per step (cold vs steady state) ----
+    let down = CodecParams::new(B, DBAR, 2.0);
+    let g = hetero_matrix(B, DBAR, 43);
+    let step = |codec: &mut dyn splitfc::compression::Codec, rng: &mut Rng| {
+        let enc = codec.encode_uplink(&f, Some(&stats), &up, rng).expect("encode");
+        let dec = codec.decode_uplink(&enc.frame, &up).expect("decode");
+        let dn = codec.encode_downlink(&g, &enc.mask, &down).expect("down encode");
+        let gh = codec.decode_downlink(&dn.frame, &enc.mask, &down).expect("down decode");
+        codec.reclaim(Reclaim::Decoded(dec));
+        codec.reclaim(Reclaim::Grad(gh));
+        codec.reclaim(Reclaim::Downlink(dn));
+        codec.reclaim(Reclaim::Uplink(enc));
+    };
+    let mut fresh = spec.build().expect("build splitfc");
+    let mut rng2 = Rng::new(23);
+    let cold_before = alloc_count::allocations();
+    step(fresh.as_mut(), &mut rng2);
+    let cold_after = alloc_count::allocations();
+    for _ in 0..4 {
+        step(fresh.as_mut(), &mut rng2); // warm-up: pools reach their bounds
+    }
+    let steady_steps = if quick { 8 } else { 32 };
+    let before = alloc_count::allocations();
+    for _ in 0..steady_steps {
+        step(fresh.as_mut(), &mut rng2);
+    }
+    let after = alloc_count::allocations();
+
+    let (cold_allocs, steady_per_step, counting) = match (cold_before, cold_after, before, after)
+    {
+        (Some(c0), Some(c1), Some(s0), Some(s1)) => {
+            (Some(c1 - c0), Some((s1 - s0) as f64 / steady_steps as f64), true)
+        }
+        _ => (None, None, false),
+    };
+    match (cold_allocs, steady_per_step) {
+        (Some(cold), Some(steady)) => {
+            println!(
+                "\nallocations/step for {name}: {cold} cold (first step), {steady} steady state"
+            );
+        }
+        _ => println!(
+            "\nallocations/step: counting allocator disabled \
+             (rebuild with --features alloc-count)"
+        ),
+    }
+
+    // ---- record ----
+    let j = Json::obj(vec![
+        ("bench", Json::str("wire_hot_path")),
+        ("batch", Json::num(B as f64)),
+        ("dbar", Json::num(DBAR as f64)),
+        ("bits_per_entry_budget", Json::num(BPE)),
+        ("threads", Json::num(tn as f64)),
+        (
+            "bitio_write_ns_per_op",
+            Json::obj(vec![
+                ("ref_per_bit", Json::num(st_wref.p50_s * 1e9)),
+                ("word_level", Json::num(st_word.p50_s * 1e9)),
+                ("speedup", Json::num(write_speedup)),
+            ]),
+        ),
+        (
+            "bitio_read_ns_per_op",
+            Json::obj(vec![
+                ("ref_per_bit", Json::num(st_rref.p50_s * 1e9)),
+                ("word_level", Json::num(st_rword.p50_s * 1e9)),
+                ("speedup", Json::num(read_speedup)),
+            ]),
+        ),
+        (
+            "codec_ns_per_op",
+            Json::obj(vec![
+                ("encode_serial", Json::num(st_enc1.p50_s * 1e9)),
+                ("encode_threaded", Json::num(st_encn.p50_s * 1e9)),
+                ("decode_serial", Json::num(st_dec.p50_s * 1e9)),
+            ]),
+        ),
+        (
+            "allocs_per_step",
+            Json::obj(vec![
+                (
+                    "cold_first_step",
+                    cold_allocs.map(|v| Json::num(v as f64)).unwrap_or(Json::Null),
+                ),
+                (
+                    "steady_state",
+                    steady_per_step.map(Json::num).unwrap_or(Json::Null),
+                ),
+            ]),
+        ),
+        ("alloc_count_enabled", Json::Bool(counting)),
+    ]);
+    std::fs::write("BENCH_wire.json", j.to_string_pretty()).expect("write BENCH_wire.json");
+    println!("[saved BENCH_wire.json]");
+
+    // ---- gates ----
+    if counting {
+        let steady = steady_per_step.unwrap_or(f64::NAN);
+        assert!(
+            steady == 0.0,
+            "steady-state wire path must be allocation-free: {steady} allocs/step"
+        );
+        println!("zero-allocation gate: OK");
+    }
+    // the PR's acceptance gate: the word-level writer must beat the per-bit
+    // reference by >= 3x on this frame. A regression to below 3x is a CI
+    // failure, not a warning — the margin in practice is far larger.
+    assert!(
+        write_speedup >= 3.0,
+        "word-level write speedup {write_speedup:.2}x below the 3x acceptance gate"
+    );
+    println!("3x write-speedup gate: OK ({write_speedup:.2}x)");
+}

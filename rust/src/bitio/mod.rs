@@ -13,8 +13,8 @@
 pub mod reader;
 pub mod writer;
 
-pub use reader::BitReader;
-pub use writer::BitWriter;
+pub use reader::{BitReader, BitReaderRef};
+pub use writer::{BitWriter, BitWriterRef};
 
 /// Symbols per 64-bit group for radix packing of base-`q` digits.
 pub fn radix_group_len(q: u64) -> usize {
@@ -42,6 +42,20 @@ pub fn radix_group_bits(q: u64, k: usize) -> u32 {
 pub fn radix_bits_per_symbol(q: u64) -> f64 {
     let k = radix_group_len(q);
     radix_group_bits(q, k) as f64 / k as f64
+}
+
+/// Exact number of bits `write_radix(&[_; n], q)` emits — the stream length
+/// is a pure function of (n, q), which is what lets encoders predict blob
+/// sizes without a staging buffer.
+pub fn radix_stream_bits(n: usize, q: u64) -> u64 {
+    assert!(q >= 2);
+    if q.is_power_of_two() {
+        return n as u64 * q.trailing_zeros() as u64;
+    }
+    let k = radix_group_len(q);
+    let full = (n / k) as u64 * radix_group_bits(q, k) as u64;
+    let rem = n % k;
+    full + if rem > 0 { radix_group_bits(q, rem) as u64 } else { 0 }
 }
 
 #[cfg(test)]
@@ -212,6 +226,62 @@ mod tests {
     #[should_panic]
     fn with_bit_len_validates_length() {
         BitReader::with_bit_len(&[0u8], 9);
+    }
+
+    #[test]
+    fn radix_stream_bits_matches_writer() {
+        let mut rng = Rng::new(17);
+        for &q in &[2u64, 3, 5, 16, 17, 200, 1000, 65536] {
+            for &n in &[0usize, 1, 7, 40, 41, 200] {
+                let syms: Vec<u64> = (0..n).map(|_| rng.next_u64() % q).collect();
+                let mut w = BitWriter::new();
+                w.write_radix(&syms, q);
+                assert_eq!(w.bit_len(), radix_stream_bits(n, q), "q={q} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn write_bytes_matches_per_byte_writes_at_every_alignment() {
+        let payload: Vec<u8> = (0..37u8).map(|i| i.wrapping_mul(41).wrapping_add(7)).collect();
+        for off in 0..8u32 {
+            let mut a = BitWriter::new();
+            let mut b = BitWriterRef::new();
+            if off > 0 {
+                a.write_bits(0x2A & ((1 << off) - 1), off);
+                b.write_bits(0x2A & ((1 << off) - 1), off);
+            }
+            a.write_bytes(&payload);
+            b.write_bytes(&payload);
+            assert_eq!(a.bit_len(), b.bit_len(), "off={off}");
+            assert_eq!(a.into_bytes(), b.into_bytes(), "off={off}");
+        }
+    }
+
+    #[test]
+    fn read_bytes_into_round_trips_at_every_alignment() {
+        let payload: Vec<u8> = (0..29u8).map(|i| i.wrapping_mul(73).wrapping_add(3)).collect();
+        for off in 0..8u32 {
+            let mut w = BitWriter::new();
+            if off > 0 {
+                w.write_bits(0x55 & ((1 << off) - 1), off);
+            }
+            w.write_bytes(&payload);
+            w.write_bits(0b11, 2); // trailing bits after the byte run
+            let bits = w.bit_len();
+            let buf = w.into_bytes();
+            let mut r = BitReader::with_bit_len(&buf, bits);
+            if off > 0 {
+                r.read_bits(off);
+            }
+            let mut out = Vec::new();
+            r.try_read_bytes_into(payload.len(), &mut out).unwrap();
+            assert_eq!(out, payload, "off={off}");
+            assert_eq!(r.read_bits(2), 0b11, "off={off}");
+            // over-read past the limit is checked
+            let mut out2 = Vec::new();
+            assert!(r.try_read_bytes_into(1, &mut out2).is_err());
+        }
     }
 
     #[test]

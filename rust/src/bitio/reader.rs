@@ -5,6 +5,12 @@
 //! (`Frame::payload_bits`, blob headers), [`BitReader::with_bit_len`] tightens
 //! the limit to the bit so that reading into the final partial byte's padding
 //! is a [`CodecError::BitstreamOverread`] instead of a silent zero-fill.
+//!
+//! [`BitReader`] is the word-level production implementation: the stream
+//! refills a 64-bit accumulator eight bytes at a time, with a byte-aligned
+//! bulk path for blob runs ([`BitReader::try_read_bytes_into`]).
+//! [`BitReaderRef`] keeps the original ≤8-bits-per-iteration implementation
+//! as the property-test oracle.
 
 use super::{radix_group_bits, radix_group_len};
 use crate::compression::error::CodecError;
@@ -12,19 +18,202 @@ use crate::compression::error::CodecError;
 #[derive(Debug)]
 pub struct BitReader<'a> {
     buf: &'a [u8],
-    byte: usize,
-    bitpos: u32,
+    /// byte offset of the next byte to load into the accumulator
+    pos: usize,
+    /// buffered bits (low `acc_bits` bits are valid, stream order from bit 0)
+    acc: u64,
+    acc_bits: u32,
     /// Total readable bits (≤ buf.len() * 8).
     limit: u64,
 }
 
 impl<'a> BitReader<'a> {
     pub fn new(buf: &'a [u8]) -> Self {
-        Self { buf, byte: 0, bitpos: 0, limit: buf.len() as u64 * 8 }
+        Self { buf, pos: 0, acc: 0, acc_bits: 0, limit: buf.len() as u64 * 8 }
     }
 
     /// Reader over a stream whose exact bit length is known (the writer's
     /// `bit_len()`): the padding bits of the last partial byte are fenced off.
+    pub fn with_bit_len(buf: &'a [u8], bits: u64) -> Self {
+        assert!(
+            bits <= buf.len() as u64 * 8,
+            "bit length {bits} exceeds buffer of {} bytes",
+            buf.len()
+        );
+        Self { buf, pos: 0, acc: 0, acc_bits: 0, limit: bits }
+    }
+
+    pub fn bits_consumed(&self) -> u64 {
+        self.pos as u64 * 8 - self.acc_bits as u64
+    }
+
+    pub fn bits_remaining(&self) -> u64 {
+        self.limit - self.bits_consumed()
+    }
+
+    /// Checked read of `nbits` (≤ 64): errors instead of reading past the
+    /// stream's bit limit. A failed read consumes nothing.
+    #[inline]
+    pub fn try_read_bits(&mut self, nbits: u32) -> Result<u64, CodecError> {
+        debug_assert!(nbits <= 64);
+        if nbits as u64 > self.bits_remaining() {
+            return Err(CodecError::BitstreamOverread {
+                requested: nbits as u64,
+                available: self.bits_remaining(),
+            });
+        }
+        if nbits == 0 {
+            return Ok(0);
+        }
+        if self.acc_bits >= nbits {
+            let out = if nbits == 64 { self.acc } else { self.acc & ((1u64 << nbits) - 1) };
+            self.acc = if nbits == 64 { 0 } else { self.acc >> nbits };
+            self.acc_bits -= nbits;
+            return Ok(out);
+        }
+        // drain the accumulator, refill a word, take the remainder
+        let got = self.acc_bits;
+        let mut out = self.acc;
+        self.acc = 0;
+        self.acc_bits = 0;
+        if self.pos + 8 <= self.buf.len() {
+            self.acc =
+                u64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().expect("8 bytes"));
+            self.pos += 8;
+            self.acc_bits = 64;
+        } else {
+            while self.pos < self.buf.len() && self.acc_bits < 64 {
+                self.acc |= (self.buf[self.pos] as u64) << self.acc_bits;
+                self.pos += 1;
+                self.acc_bits += 8;
+            }
+        }
+        let need = nbits - got;
+        debug_assert!(self.acc_bits >= need, "limit check guarantees buffered bits");
+        let take = if need == 64 { self.acc } else { self.acc & ((1u64 << need) - 1) };
+        out |= take << got; // got < 64 here (otherwise the fast path returned)
+        self.acc = if need == 64 { 0 } else { self.acc >> need };
+        self.acc_bits -= need;
+        Ok(out)
+    }
+
+    pub fn read_bits(&mut self, nbits: u32) -> u64 {
+        self.try_read_bits(nbits)
+            .unwrap_or_else(|e| panic!("BitReader: {e}"))
+    }
+
+    pub fn read_f32(&mut self) -> f32 {
+        f32::from_bits(self.read_bits(32) as u32)
+    }
+
+    pub fn read_u32(&mut self) -> u32 {
+        self.read_bits(32) as u32
+    }
+
+    /// Checked read of `nbytes` whole bytes appended to `out`. When the
+    /// stream is byte-aligned this is a bulk slice copy (the blob fast
+    /// path); otherwise bytes funnel through the accumulator.
+    pub fn try_read_bytes_into(
+        &mut self,
+        nbytes: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<(), CodecError> {
+        let need = nbytes as u64 * 8;
+        if need > self.bits_remaining() {
+            return Err(CodecError::BitstreamOverread {
+                requested: need,
+                available: self.bits_remaining(),
+            });
+        }
+        out.reserve(nbytes);
+        let mut left = nbytes;
+        if self.acc_bits % 8 == 0 {
+            // drain the accumulator's whole bytes, then memcpy the rest
+            while self.acc_bits > 0 && left > 0 {
+                out.push((self.acc & 0xFF) as u8);
+                self.acc >>= 8;
+                self.acc_bits -= 8;
+                left -= 1;
+            }
+            out.extend_from_slice(&self.buf[self.pos..self.pos + left]);
+            self.pos += left;
+        } else {
+            for _ in 0..left {
+                let b = self.try_read_bits(8)?;
+                out.push(b as u8);
+            }
+        }
+        Ok(())
+    }
+
+    /// Checked radix read of `n` base-`q` symbols into a reusable buffer
+    /// (cleared first).
+    pub fn try_read_radix_into(
+        &mut self,
+        n: usize,
+        q: u64,
+        out: &mut Vec<u64>,
+    ) -> Result<(), CodecError> {
+        assert!(q >= 2);
+        out.clear();
+        out.reserve(n);
+        if q.is_power_of_two() {
+            let bits = q.trailing_zeros();
+            for _ in 0..n {
+                out.push(self.try_read_bits(bits)?);
+            }
+            return Ok(());
+        }
+        let k = radix_group_len(q);
+        let gbits = radix_group_bits(q, k);
+        let mut remaining = n;
+        while remaining > 0 {
+            let glen = remaining.min(k);
+            let bits = if glen == k { gbits } else { radix_group_bits(q, glen) };
+            let mut acc = self.try_read_bits(bits)? as u128;
+            for _ in 0..glen {
+                out.push((acc % q as u128) as u64);
+                acc /= q as u128;
+            }
+            remaining -= glen;
+        }
+        Ok(())
+    }
+
+    /// Checked radix read of `n` base-`q` symbols.
+    pub fn try_read_radix(&mut self, n: usize, q: u64) -> Result<Vec<u64>, CodecError> {
+        let mut out = Vec::with_capacity(n);
+        self.try_read_radix_into(n, q, &mut out)?;
+        Ok(out)
+    }
+
+    pub fn read_radix(&mut self, n: usize, q: u64) -> Vec<u64> {
+        self.try_read_radix(n, q)
+            .unwrap_or_else(|e| panic!("BitReader: {e}"))
+    }
+
+    /// Panicking form of [`Self::try_read_radix_into`].
+    pub fn read_radix_into(&mut self, n: usize, q: u64, out: &mut Vec<u64>) {
+        self.try_read_radix_into(n, q, out)
+            .unwrap_or_else(|e| panic!("BitReader: {e}"));
+    }
+}
+
+/// The original per-bit reader, kept verbatim as the property-test oracle.
+#[derive(Debug)]
+pub struct BitReaderRef<'a> {
+    buf: &'a [u8],
+    byte: usize,
+    bitpos: u32,
+    /// Total readable bits (≤ buf.len() * 8).
+    limit: u64,
+}
+
+impl<'a> BitReaderRef<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, byte: 0, bitpos: 0, limit: buf.len() as u64 * 8 }
+    }
+
     pub fn with_bit_len(buf: &'a [u8], bits: u64) -> Self {
         assert!(
             bits <= buf.len() as u64 * 8,
@@ -42,8 +231,6 @@ impl<'a> BitReader<'a> {
         self.limit - self.bits_consumed()
     }
 
-    /// Checked read of `nbits` (≤ 64): errors instead of reading past the
-    /// stream's bit limit.
     pub fn try_read_bits(&mut self, nbits: u32) -> Result<u64, CodecError> {
         debug_assert!(nbits <= 64);
         if nbits as u64 > self.bits_remaining() {
@@ -72,7 +259,7 @@ impl<'a> BitReader<'a> {
 
     pub fn read_bits(&mut self, nbits: u32) -> u64 {
         self.try_read_bits(nbits)
-            .unwrap_or_else(|e| panic!("BitReader: {e}"))
+            .unwrap_or_else(|e| panic!("BitReaderRef: {e}"))
     }
 
     pub fn read_f32(&mut self) -> f32 {
@@ -83,7 +270,6 @@ impl<'a> BitReader<'a> {
         self.read_bits(32) as u32
     }
 
-    /// Checked radix read of `n` base-`q` symbols.
     pub fn try_read_radix(&mut self, n: usize, q: u64) -> Result<Vec<u64>, CodecError> {
         assert!(q >= 2);
         if q.is_power_of_two() {
@@ -113,6 +299,6 @@ impl<'a> BitReader<'a> {
 
     pub fn read_radix(&mut self, n: usize, q: u64) -> Vec<u64> {
         self.try_read_radix(n, q)
-            .unwrap_or_else(|e| panic!("BitReader: {e}"))
+            .unwrap_or_else(|e| panic!("BitReaderRef: {e}"))
     }
 }

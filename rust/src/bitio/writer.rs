@@ -1,12 +1,22 @@
 //! Bit-level writer: MSB-first within each appended field, LSB-packed bytes.
+//!
+//! [`BitWriter`] is the word-level production implementation: bits collect in
+//! a 64-bit accumulator and spill to the byte buffer a whole word at a time
+//! (one `extend_from_slice` per 64 bits instead of a branchy `Vec::push` per
+//! byte), with a byte-aligned bulk path for blob runs ([`BitWriter::write_bytes`]).
+//! [`BitWriterRef`] keeps the original ≤8-bits-per-iteration implementation
+//! as the oracle the property tests compare against, the same way the matmul
+//! kernels keep their scalar `*_ref` twins.
 
 use super::{radix_group_bits, radix_group_len};
 
 #[derive(Default, Debug, Clone)]
 pub struct BitWriter {
     buf: Vec<u8>,
-    /// Number of valid bits in the last byte (0 when aligned).
-    bitpos: u32,
+    /// pending bits not yet spilled to `buf` (low `nbits` bits are valid)
+    acc: u64,
+    /// number of valid bits in `acc` (always < 64)
+    nbits: u32,
 }
 
 impl BitWriter {
@@ -15,7 +25,142 @@ impl BitWriter {
     }
 
     pub fn with_capacity(bytes: usize) -> Self {
-        Self { buf: Vec::with_capacity(bytes), bitpos: 0 }
+        Self { buf: Vec::with_capacity(bytes), acc: 0, nbits: 0 }
+    }
+
+    /// Reuse an existing buffer's capacity (scratch-arena path): the buffer
+    /// is cleared, not reallocated.
+    pub fn from_buf(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        Self { buf, acc: 0, nbits: 0 }
+    }
+
+    /// Pre-size the byte buffer for `bytes` more output (no-op when the
+    /// capacity is already there — the steady-state arena case).
+    pub fn reserve(&mut self, bytes: usize) {
+        self.buf.reserve(bytes);
+    }
+
+    /// Total bits written so far.
+    pub fn bit_len(&self) -> u64 {
+        self.buf.len() as u64 * 8 + self.nbits as u64
+    }
+
+    /// Append the low `nbits` of `value` (nbits in 0..=64).
+    #[inline]
+    pub fn write_bits(&mut self, value: u64, nbits: u32) {
+        debug_assert!(nbits <= 64);
+        debug_assert!(nbits == 64 || value < (1u64 << nbits) || nbits == 0);
+        if nbits == 0 {
+            return;
+        }
+        let v = if nbits == 64 { value } else { value & ((1u64 << nbits) - 1) };
+        // `nbits` of `v` land at bit position `self.nbits`; anything shifted
+        // past bit 63 is recovered from `v` after the word spills.
+        self.acc |= v << self.nbits;
+        let filled = self.nbits + nbits;
+        if filled >= 64 {
+            self.buf.extend_from_slice(&self.acc.to_le_bytes());
+            let consumed = 64 - self.nbits;
+            self.acc = if consumed == 64 { 0 } else { v >> consumed };
+            self.nbits = filled - 64;
+        } else {
+            self.nbits = filled;
+        }
+    }
+
+    pub fn write_f32(&mut self, x: f32) {
+        self.write_bits(x.to_bits() as u64, 32);
+    }
+
+    pub fn write_u32(&mut self, x: u32) {
+        self.write_bits(x as u64, 32);
+    }
+
+    /// Append whole bytes. When the stream is byte-aligned this is a bulk
+    /// `extend_from_slice` (the blob-embedding fast path); otherwise the
+    /// bytes funnel through the accumulator a word at a time.
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        if self.nbits % 8 == 0 {
+            // spill the accumulator's whole bytes, then memcpy
+            while self.nbits > 0 {
+                self.buf.push((self.acc & 0xFF) as u8);
+                self.acc >>= 8;
+                self.nbits -= 8;
+            }
+            self.buf.extend_from_slice(bytes);
+            return;
+        }
+        let mut chunks = bytes.chunks_exact(8);
+        for ch in chunks.by_ref() {
+            let word = u64::from_le_bytes(ch.try_into().expect("8-byte chunk"));
+            self.write_bits(word, 64);
+        }
+        for &b in chunks.remainder() {
+            self.write_bits(b as u64, 8);
+        }
+    }
+
+    /// Near-entropy packing of base-`q` symbols (see module docs).
+    pub fn write_radix(&mut self, symbols: &[u64], q: u64) {
+        assert!(q >= 2);
+        debug_assert!(symbols.iter().all(|&s| s < q));
+        if q.is_power_of_two() {
+            let bits = q.trailing_zeros();
+            for &s in symbols {
+                self.write_bits(s, bits);
+            }
+            return;
+        }
+        let k = radix_group_len(q);
+        let gbits = radix_group_bits(q, k);
+        for group in symbols.chunks(k) {
+            // little-endian base-q: group[0] is the least-significant digit
+            let mut acc: u128 = 0;
+            for &s in group.iter().rev() {
+                acc = acc * q as u128 + s as u128;
+            }
+            let bits = if group.len() == k {
+                gbits
+            } else {
+                radix_group_bits(q, group.len())
+            };
+            self.write_bits(acc as u64, bits);
+        }
+    }
+
+    pub fn into_bytes(mut self) -> Vec<u8> {
+        self.flush_partial();
+        self.buf
+    }
+
+    /// Spill any pending accumulator bits as zero-padded bytes.
+    fn flush_partial(&mut self) {
+        let mut nb = self.nbits;
+        let mut acc = self.acc;
+        while nb > 0 {
+            self.buf.push((acc & 0xFF) as u8);
+            acc >>= 8;
+            nb = nb.saturating_sub(8);
+        }
+        self.acc = 0;
+        self.nbits = 0;
+    }
+}
+
+/// The original per-bit writer, kept verbatim as the property-test oracle
+/// (`rust/tests/prop_bitio_words.rs` asserts `BitWriter` output is
+/// byte-identical to this for arbitrary op sequences).
+#[derive(Default, Debug, Clone)]
+pub struct BitWriterRef {
+    buf: Vec<u8>,
+    /// Number of valid bits in the last byte (0 when aligned).
+    bitpos: u32,
+}
+
+impl BitWriterRef {
+    pub fn new() -> Self {
+        Self::default()
     }
 
     /// Total bits written so far.
@@ -56,6 +201,13 @@ impl BitWriter {
         self.write_bits(x as u64, 32);
     }
 
+    /// Byte run via the per-byte loop (the pre-word-level blob path).
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_bits(b as u64, 8);
+        }
+    }
+
     /// Near-entropy packing of base-`q` symbols (see module docs).
     pub fn write_radix(&mut self, symbols: &[u64], q: u64) {
         assert!(q >= 2);
@@ -70,7 +222,6 @@ impl BitWriter {
         let k = radix_group_len(q);
         let gbits = radix_group_bits(q, k);
         for group in symbols.chunks(k) {
-            // little-endian base-q: group[0] is the least-significant digit
             let mut acc: u128 = 0;
             for &s in group.iter().rev() {
                 acc = acc * q as u128 + s as u128;
@@ -86,9 +237,5 @@ impl BitWriter {
 
     pub fn into_bytes(self) -> Vec<u8> {
         self.buf
-    }
-
-    pub fn as_bytes(&self) -> &[u8] {
-        &self.buf
     }
 }

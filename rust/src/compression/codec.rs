@@ -154,13 +154,37 @@ pub struct CodecRequirements {
 }
 
 /// Stable 32-bit id for a codec name (FNV-1a), stamped into every frame.
-pub fn codec_id(name: &str) -> u32 {
+/// `const` so sessions can cache their id instead of re-formatting their
+/// canonical name on every frame (the wire hot path stamps one frame per
+/// link direction per step).
+pub const fn codec_id(name: &str) -> u32 {
+    let bytes = name.as_bytes();
     let mut h: u32 = 0x811C_9DC5;
-    for &b in name.as_bytes() {
-        h ^= b as u32;
+    let mut i = 0;
+    while i < bytes.len() {
+        h ^= bytes[i] as u32;
         h = h.wrapping_mul(0x0100_0193);
+        i += 1;
     }
     h
+}
+
+/// Finished protocol outputs handed back to a codec session so their
+/// buffers can seed the next round (see
+/// [`crate::compression::WireScratch`]). Codecs without an arena ignore
+/// reclaims — dropping the value is always correct.
+#[derive(Debug)]
+pub enum Reclaim {
+    /// a consumed uplink encode result (frame + reconstruction + mask)
+    Uplink(EncodedUplink),
+    /// a consumed downlink encode result (frame + reconstruction)
+    Downlink(EncodedDownlink),
+    /// a consumed PS-side uplink decode result
+    Decoded(DecodedUplink),
+    /// a lone consumed frame
+    Frame(Frame),
+    /// a consumed gradient/feature reconstruction matrix
+    Grad(Matrix),
 }
 
 /// A compression scheme as a session object (object-safe, `Send + Sync`).
@@ -177,6 +201,14 @@ pub trait Codec: Send + Sync {
     /// Wire-format version stamped into frames; bump on layout changes.
     fn wire_version(&self) -> u16 {
         1
+    }
+
+    /// The 32-bit id stamped into frames — `codec_id(&self.name())` by
+    /// default. Hot-path sessions override this with a cached value so
+    /// stamping/checking a frame stops formatting the canonical name;
+    /// overrides must return the id of the *current* configuration.
+    fn wire_id(&self) -> u32 {
+        codec_id(&self.name())
     }
 
     /// What this codec needs from the protocol (σ stats, session state).
@@ -234,13 +266,21 @@ pub trait Codec: Send + Sync {
     /// Stamp a frame with this codec's versioned id (encoders call this on
     /// every frame they emit).
     fn stamp(&self, frame: Frame) -> Frame {
-        frame.with_codec(codec_id(&self.name()), self.wire_version())
+        frame.with_codec(self.wire_id(), self.wire_version())
+    }
+
+    /// Hand a finished round's outputs back to the session so their buffers
+    /// can be reused by the next encode/decode (steady-state zero
+    /// allocation). Default: drop them — codecs without a scratch arena
+    /// need no pool.
+    fn reclaim(&mut self, buffers: Reclaim) {
+        let _ = buffers;
     }
 
     /// Reject frames emitted by a different codec or wire version
     /// (decoders call this before touching the payload).
     fn check_frame(&self, frame: &Frame) -> Result<()> {
-        let id = codec_id(&self.name());
+        let id = self.wire_id();
         ensure!(
             frame.codec_id == id,
             "frame codec id {:#010x} does not match codec {:?} ({:#010x}): \

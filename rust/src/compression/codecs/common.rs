@@ -4,11 +4,17 @@
 //! [`crate::compression::register_codec`]) can reuse the raw-f32 dump, the
 //! length-prefixed blob embedding, and the whole mask-coupled downlink
 //! (eq. 8) instead of reimplementing them.
+//!
+//! The `*_with` variants thread a session-owned
+//! [`crate::compression::WireScratch`] through the downlink so arena-backed
+//! codecs run it allocation-free; the plain variants keep the old
+//! signatures and spin up a throwaway arena.
 
 use crate::bitio::{BitReader, BitWriter};
 use crate::compression::baselines::{qbar_levels, scalar_decode, scalar_encode, ScalarKind};
 use crate::compression::codec::{CodecParams, EncodedDownlink, GradMask};
-use crate::compression::quant::{fwq_decode, fwq_encode, FwqConfig};
+use crate::compression::quant::{fwq_decode_into, fwq_encode_view, ColView, FwqConfig};
+use crate::compression::scratch::WireScratch;
 use crate::ensure;
 use crate::tensor::Matrix;
 use crate::transport::wire::{Frame, FrameKind};
@@ -24,27 +30,41 @@ pub fn f32_dump(m: &Matrix, w: &mut BitWriter) {
 /// Inverse of [`f32_dump`] at a known shape.
 pub fn f32_undump(r: &mut BitReader, rows: usize, cols: usize) -> Matrix {
     let mut out = Matrix::zeros(rows, cols);
-    for i in 0..rows * cols {
-        out.data[i] = r.read_f32();
-    }
+    f32_undump_into(r, &mut out);
     out
 }
 
+/// [`f32_undump`] into a caller-owned matrix (shape taken from `out`).
+pub fn f32_undump_into(r: &mut BitReader, out: &mut Matrix) {
+    for v in out.data.iter_mut() {
+        *v = r.read_f32();
+    }
+}
+
 /// Embed a sub-codec's byte payload in an outer bit stream
-/// (40-bit length prefix + bytes).
+/// (40-bit length prefix + bytes; bulk-copied when byte-aligned).
 pub fn write_blob(w: &mut BitWriter, bytes: &[u8], bits: u64) {
     w.write_bits(bits, 40);
-    for &b in bytes {
-        w.write_bits(b as u64, 8);
-    }
+    w.write_bytes(bytes);
 }
 
 /// Inverse of [`write_blob`]: returns (bytes, declared bit length).
 pub fn read_blob(r: &mut BitReader) -> (Vec<u8>, u64) {
+    let mut out = Vec::new();
+    let bits = read_blob_into(r, &mut out);
+    (out, bits)
+}
+
+/// [`read_blob`] into a reusable buffer (cleared first); a byte-aligned
+/// reader position turns the body into one bulk slice copy instead of the
+/// old per-byte `read_bits(8)` loop.
+pub fn read_blob_into(r: &mut BitReader, out: &mut Vec<u8>) -> u64 {
     let bits = r.read_bits(40);
     let nbytes = ((bits + 7) / 8) as usize;
-    let bytes: Vec<u8> = (0..nbytes).map(|_| r.read_bits(8) as u8).collect();
-    (bytes, bits)
+    out.clear();
+    r.try_read_bytes_into(nbytes, out)
+        .unwrap_or_else(|e| panic!("BitReader: {e}"));
+    bits
 }
 
 /// How a codec quantizes the column-masked downlink when the budget is
@@ -76,6 +96,21 @@ impl Default for DownlinkStyle {
     }
 }
 
+/// The shared FWQ config for the column-masked downlink.
+fn downlink_fwq_cfg(
+    use_mean: bool,
+    q_fixed: Option<u64>,
+    b: usize,
+    c_ava: f64,
+    params: &CodecParams,
+) -> FwqConfig {
+    let mut cfg = FwqConfig::paper_default(b, c_ava);
+    cfg.q_ep = params.q_ep;
+    cfg.use_mean = use_mean;
+    cfg.q_fixed = q_fixed;
+    cfg
+}
+
 /// Downlink: compress the intermediate gradient matrix G at the PS,
 /// honouring the uplink coupling (eq. 8). `params.bits_per_entry` is C_e,s;
 /// 32.0 means lossless (the Table-I setting). The returned frame is NOT yet
@@ -86,47 +121,95 @@ pub fn encode_downlink_styled(
     mask: &GradMask,
     params: &CodecParams,
 ) -> EncodedDownlink {
+    encode_downlink_styled_with(style, g, mask, params, &mut WireScratch::new())
+}
+
+/// [`encode_downlink_styled`] running against a session-owned scratch
+/// arena: frame buffers, FWQ staging and the `g_hat` reconstruction all
+/// come from (and return to) `ws`.
+pub fn encode_downlink_styled_with(
+    style: &DownlinkStyle,
+    g: &Matrix,
+    mask: &GradMask,
+    params: &CodecParams,
+    ws: &mut WireScratch,
+) -> EncodedDownlink {
     let (b, dbar) = (g.rows, g.cols);
     let lossless = params.bits_per_entry >= 32.0;
     match mask {
         GradMask::All => {
-            let mut w = BitWriter::with_capacity(4 * b * dbar);
+            ws.note_bytes_bound(4 * b * dbar + 8);
+            let mut w = BitWriter::from_buf(ws.take_bytes());
             f32_dump(g, &mut w);
             let bits = w.bit_len();
+            // pooled copy instead of the old `g.clone()` staging
+            let mut data = ws.take_f32();
+            data.extend_from_slice(&g.data);
             EncodedDownlink {
                 frame: Frame::new(FrameKind::GradientsDown, w.into_bytes(), bits),
-                g_hat: g.clone(),
+                g_hat: Matrix { rows: b, cols: dbar, data },
                 nominal_bits: 32.0 * (b * dbar) as f64,
             }
         }
         GradMask::Columns { kept, .. } => {
-            let gt = g.gather_cols(kept);
-            let mut w = BitWriter::new();
             let c_ava = params.total_budget();
-            let (gt_hat, nominal) = if lossless {
-                f32_dump(&gt, &mut w);
-                (gt.clone(), 32.0 * gt.len() as f64)
+            // lossless dumps up to 4·B·D̄ bytes; lossy stays within ~C_ava/8
+            let cap = if lossless {
+                4 * b * dbar + 64
+            } else {
+                (c_ava / 4.0) as usize + 64
+            };
+            ws.note_bytes_bound(cap);
+            let mut w = BitWriter::from_buf(ws.take_bytes());
+            let (g_hat, nominal) = if lossless {
+                // fused dump of the kept columns (no gathered staging), and
+                // the reconstruction scattered in the same pass
+                let mut g_hat = ws.take_matrix(b, dbar);
+                for r in 0..b {
+                    let src = g.row(r);
+                    let dst = &mut g_hat.data[r * dbar..(r + 1) * dbar];
+                    for &c in kept.iter() {
+                        w.write_f32(src[c]);
+                        dst[c] = src[c];
+                    }
+                }
+                (g_hat, 32.0 * (b * kept.len()) as f64)
             } else {
                 match style.columns {
                     ColumnQuant::Scalar { kind, r } => {
+                        let gt = g.gather_cols(kept);
                         let q = qbar_levels(c_ava, r.max(1.0), b, dbar);
                         let (bytes, bits) = scalar_encode(&gt, kind, q, params.noise_seed ^ 1);
                         write_blob(&mut w, &bytes, bits);
                         let out = scalar_decode(&bytes, kind, params.noise_seed ^ 1);
-                        (out, gt.len() as f64 * (q as f64).log2() + 96.0)
+                        let mut g_hat = ws.take_matrix(b, dbar);
+                        out.scatter_cols_into(kept, &mut g_hat);
+                        (g_hat, gt.len() as f64 * (q as f64).log2() + 96.0)
                     }
                     ColumnQuant::Fwq { use_mean, q_fixed } => {
-                        let mut cfg = FwqConfig::paper_default(b, c_ava);
-                        cfg.q_ep = params.q_ep;
-                        cfg.use_mean = use_mean;
-                        cfg.q_fixed = q_fixed;
-                        let (bytes, bits, info) = fwq_encode(&gt, &cfg);
-                        write_blob(&mut w, &bytes, bits);
-                        (fwq_decode(&bytes, &cfg), info.nominal_bits)
+                        let cfg = downlink_fwq_cfg(use_mean, q_fixed, b, c_ava, params);
+                        let mut wi = BitWriter::from_buf(ws.take_bytes());
+                        let info = fwq_encode_view(
+                            &ColView::unscaled(g, kept),
+                            &cfg,
+                            &mut wi,
+                            &mut ws.fwq,
+                        );
+                        let inner_bits = wi.bit_len();
+                        let inner = wi.into_bytes();
+                        write_blob(&mut w, &inner, inner_bits);
+                        crate::util::reserve_total(&mut ws.stage.data, b * dbar);
+                        {
+                            let WireScratch { fwq, stage, .. } = &mut *ws;
+                            fwq_decode_into(&inner, &cfg, fwq, stage);
+                        }
+                        ws.give_bytes(inner);
+                        let mut g_hat = ws.take_matrix(b, dbar);
+                        ws.stage.scatter_cols_into(kept, &mut g_hat);
+                        (g_hat, info.nominal_bits)
                     }
                 }
             };
-            let g_hat = gt_hat.scatter_cols(kept, dbar);
             let bits = w.bit_len();
             EncodedDownlink {
                 frame: Frame::new(FrameKind::GradientsDown, w.into_bytes(), bits),
@@ -136,8 +219,8 @@ pub fn encode_downlink_styled(
         }
         GradMask::Entries(masks) => {
             // the device knows the masks it sent: only values travel back
-            let mut w = BitWriter::new();
-            let mut g_hat = Matrix::zeros(b, dbar);
+            let mut w = BitWriter::from_buf(ws.take_bytes());
+            let mut g_hat = ws.take_matrix(b, dbar);
             if lossless {
                 for (r_i, kept) in masks.iter().enumerate() {
                     for &c in kept {
@@ -190,6 +273,17 @@ pub fn decode_downlink_styled(
     mask: &GradMask,
     params: &CodecParams,
 ) -> Result<Matrix> {
+    decode_downlink_styled_with(style, frame, mask, params, &mut WireScratch::new())
+}
+
+/// [`decode_downlink_styled`] against a session-owned scratch arena.
+pub fn decode_downlink_styled_with(
+    style: &DownlinkStyle,
+    frame: &Frame,
+    mask: &GradMask,
+    params: &CodecParams,
+    ws: &mut WireScratch,
+) -> Result<Matrix> {
     ensure!(
         frame.kind == FrameKind::GradientsDown,
         "downlink decode on a {:?} frame",
@@ -199,29 +293,50 @@ pub fn decode_downlink_styled(
     let lossless = params.bits_per_entry >= 32.0;
     let mut rd = BitReader::with_bit_len(&frame.payload, frame.payload_bits);
     match mask {
-        GradMask::All => Ok(f32_undump(&mut rd, b, dbar)),
+        GradMask::All => {
+            let mut out = ws.take_matrix(b, dbar);
+            f32_undump_into(&mut rd, &mut out);
+            Ok(out)
+        }
         GradMask::Columns { kept, .. } => {
-            let gt_hat = if lossless {
-                f32_undump(&mut rd, b, kept.len())
-            } else {
-                let (bytes, _) = read_blob(&mut rd);
-                match style.columns {
-                    ColumnQuant::Scalar { kind, .. } => {
-                        scalar_decode(&bytes, kind, params.noise_seed ^ 1)
-                    }
-                    ColumnQuant::Fwq { use_mean, q_fixed } => {
-                        let mut cfg = FwqConfig::paper_default(b, params.total_budget());
-                        cfg.q_ep = params.q_ep;
-                        cfg.use_mean = use_mean;
-                        cfg.q_fixed = q_fixed;
-                        fwq_decode(&bytes, &cfg)
+            if lossless {
+                // read straight into the scattered positions (same read
+                // order as undump-then-scatter)
+                let mut g_hat = ws.take_matrix(b, dbar);
+                for r in 0..b {
+                    let dst = &mut g_hat.data[r * dbar..(r + 1) * dbar];
+                    for &c in kept.iter() {
+                        dst[c] = rd.read_f32();
                     }
                 }
-            };
-            Ok(gt_hat.scatter_cols(kept, dbar))
+                return Ok(g_hat);
+            }
+            crate::util::reserve_total(&mut ws.blob, (params.total_budget() / 4.0) as usize + 64);
+            read_blob_into(&mut rd, &mut ws.blob);
+            match style.columns {
+                ColumnQuant::Scalar { kind, .. } => {
+                    let gt_hat = scalar_decode(&ws.blob, kind, params.noise_seed ^ 1);
+                    let mut g_hat = ws.take_matrix(b, dbar);
+                    gt_hat.scatter_cols_into(kept, &mut g_hat);
+                    Ok(g_hat)
+                }
+                ColumnQuant::Fwq { use_mean, q_fixed } => {
+                    let cfg =
+                        downlink_fwq_cfg(use_mean, q_fixed, b, params.total_budget(), params);
+                    ws.fwq.reserve(b, dbar);
+                    crate::util::reserve_total(&mut ws.stage.data, b * dbar);
+                    {
+                        let WireScratch { blob, fwq, stage, .. } = &mut *ws;
+                        fwq_decode_into(blob, &cfg, fwq, stage);
+                    }
+                    let mut g_hat = ws.take_matrix(b, dbar);
+                    ws.stage.scatter_cols_into(kept, &mut g_hat);
+                    Ok(g_hat)
+                }
+            }
         }
         GradMask::Entries(masks) => {
-            let mut g_hat = Matrix::zeros(b, dbar);
+            let mut g_hat = ws.take_matrix(b, dbar);
             if lossless {
                 for (r_i, kept) in masks.iter().enumerate() {
                     for &c in kept {
@@ -229,8 +344,8 @@ pub fn decode_downlink_styled(
                     }
                 }
             } else {
-                let (bytes, _) = read_blob(&mut rd);
-                let deq = scalar_decode(&bytes, style.entries, params.noise_seed ^ 2);
+                read_blob_into(&mut rd, &mut ws.blob);
+                let deq = scalar_decode(&ws.blob, style.entries, params.noise_seed ^ 2);
                 let mut it = deq.data.iter();
                 for (r_i, kept) in masks.iter().enumerate() {
                     for &c in kept {

@@ -121,7 +121,7 @@ pub fn register_builtins(reg: &mut CodecRegistry) {
         if let Some(a) = spec.args.first() {
             bail!("vanilla takes no codec args (got {a:?})");
         }
-        Ok(Box::new(VanillaCodec))
+        Ok(Box::new(VanillaCodec::default()))
     });
 
     let splitfc_rows: [(&str, Option<DropKind>, FwqMode, Option<f64>); 9] = [

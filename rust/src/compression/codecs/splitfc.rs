@@ -2,19 +2,33 @@
 //! (FWDP, Alg. 2) + feature-wise quantization (FWQ, Alg. 3), covering every
 //! SplitFC row of Tables I-III and Figs. 3-5, with an optional sessionful
 //! error-feedback extension (`splitfc[...,ef]`).
+//!
+//! The FWQ/fp32 uplink runs **fused**: the dropout plan, the per-column
+//! statistics and the quantized symbols are all computed straight off the
+//! feature matrix through a [`ColView`] (kept columns + 1/(1-p) rescale on
+//! the fly) and emitted directly into the frame writer — no gathered
+//! intermediate matrix, no per-column staging vectors. Every reusable
+//! buffer lives in the session's [`WireScratch`] arena, so steady-state
+//! encode/decode rounds perform zero heap allocations (the `alloc-count`
+//! harness locks this). The emitted bitstream is byte-identical to the
+//! pre-fusion gather-then-encode pipeline.
 
-use crate::bitio::BitReader;
-use crate::bitio::BitWriter;
+use std::sync::Mutex;
+
+use crate::bitio::{BitReader, BitWriter};
 use crate::compression::baselines::{qbar_levels, scalar_decode, scalar_encode, ScalarKind};
 use crate::compression::codec::{
-    Codec, CodecParams, CodecRequirements, DecodedUplink, EncodedUplink, GradMask, SigmaStats,
+    codec_id, Codec, CodecParams, CodecRequirements, DecodedUplink, EncodedDownlink,
+    EncodedUplink, GradMask, Reclaim, SigmaStats,
 };
 use crate::compression::codecs::common::{
-    f32_dump, f32_undump, read_blob, write_blob, ColumnQuant, DownlinkStyle,
+    decode_downlink_styled_with, encode_downlink_styled_with, read_blob_into, write_blob,
+    ColumnQuant, DownlinkStyle,
 };
-use crate::compression::dropout::{self, DropKind, DropoutPlan};
+use crate::compression::dropout::{self, DropKind};
 use crate::compression::feedback::ErrorFeedback;
-use crate::compression::quant::{fwq_decode, fwq_encode, FwqConfig};
+use crate::compression::quant::{fwq_decode_into, fwq_encode_view, ColView, FwqConfig};
+use crate::compression::scratch::WireScratch;
 use crate::ensure;
 use crate::tensor::{column_stats, normalized_sigma, Matrix};
 use crate::transport::wire::{Frame, FrameKind};
@@ -46,11 +60,30 @@ pub struct SplitFcCodec {
     pub quant: FwqMode,
     ef_decay: Option<f32>,
     ef: Option<ErrorFeedback>,
+    /// session scratch arena (Mutex so the `&self` decode paths share it;
+    /// one session serves one link, so the lock is never contended)
+    scratch: Mutex<WireScratch>,
+    /// cached (configuration, codec id) pair: stamping a frame must not
+    /// re-format the canonical name, but the pub config fields are
+    /// mutable, so the cache is keyed on a config snapshot and refreshes
+    /// whenever the configuration changed since the last stamp
+    id: Mutex<Option<(IdKey, u32)>>,
 }
+
+/// Everything `SplitFcCodec::name()` depends on, as a comparable snapshot.
+type IdKey = (Option<DropKind>, u64, FwqMode, bool);
 
 impl SplitFcCodec {
     pub fn new(drop: Option<DropKind>, r: f64, quant: FwqMode) -> SplitFcCodec {
-        SplitFcCodec { drop, r, quant, ef_decay: None, ef: None }
+        SplitFcCodec {
+            drop,
+            r,
+            quant,
+            ef_decay: None,
+            ef: None,
+            scratch: Mutex::new(WireScratch::new()),
+            id: Mutex::new(None),
+        }
     }
 
     /// The paper's full framework at ratio R (AD dropout + optimal FWQ).
@@ -71,71 +104,150 @@ impl SplitFcCodec {
         self.ef.as_ref().map(|e| e.residual_norm())
     }
 
-    /// One memoryless encode round (the pre-EF pipeline, ported verbatim so
-    /// the bitstream stays byte-identical to the legacy `Scheme` path).
+    fn cached_id(&self) -> u32 {
+        let key: IdKey = (self.drop, self.r.to_bits(), self.quant, self.ef_decay.is_some());
+        let mut cache = self.id.lock().expect("codec id cache poisoned");
+        match &*cache {
+            Some((k, id)) if *k == key => *id,
+            _ => {
+                let id = codec_id(&self.name());
+                *cache = Some((key, id));
+                id
+            }
+        }
+    }
+
+    /// The shared FWQ config for the uplink, per quant mode.
+    fn fwq_cfg(&self, b: usize, c_ava: f64, params: &CodecParams) -> FwqConfig {
+        let mut cfg = FwqConfig::paper_default(b, c_ava);
+        cfg.q_ep = params.q_ep;
+        match self.quant {
+            FwqMode::Optimal { use_mean } => cfg.use_mean = use_mean,
+            FwqMode::Fixed { q } => cfg.q_fixed = Some(q),
+            FwqMode::NoQuant | FwqMode::Scalar(_) => {}
+        }
+        cfg
+    }
+
+    /// One memoryless encode round — the fused wire path. Bitstream is
+    /// byte-identical to the legacy gather → encode → blob pipeline (locked
+    /// by the codec golden tests and the quant-level fusion oracles).
     fn encode_core(
-        &self,
+        &mut self,
         f: &Matrix,
-        sigma_norm: &[f32],
+        sigma_norm: Option<&[f32]>,
         params: &CodecParams,
         rng: &mut Rng,
     ) -> Result<EncodedUplink> {
         let (b, dbar) = (f.rows, f.cols);
         ensure!(b == params.batch, "batch {b} != params.batch {}", params.batch);
         ensure!(dbar == params.dbar, "dbar {dbar} != params.dbar {}", params.dbar);
-        let plan = match self.drop {
-            Some(kind) => dropout::plan(kind, sigma_norm, self.r, rng),
-            None => DropoutPlan::keep_all(dbar),
+        let (drop, r, quant) = (self.drop, self.r, self.quant);
+        let cfg = match quant {
+            FwqMode::Optimal { .. } | FwqMode::Fixed { .. } => {
+                let delta_bits = if drop.is_some() { dbar as f64 } else { 0.0 };
+                Some(self.fwq_cfg(b, params.total_budget() - delta_bits, params))
+            }
+            _ => None,
         };
-        // gather + 1/(1-p_j) rescale fused into one row-major pass
-        let ft = f.gather_cols_scaled(&plan.kept, &plan.scale);
-        let mut w = BitWriter::new();
+
+        let ws = self.scratch.get_mut().expect("codec scratch poisoned");
+        // σ fallback for variants that never read the values (Random / no
+        // dropout): an arena-backed zero vector, not a per-step allocation
+        let sigma_norm: &[f32] = match sigma_norm {
+            Some(s) => s,
+            None => {
+                ws.sigma_zeros.clear();
+                ws.sigma_zeros.resize(dbar, 0.0);
+                &ws.sigma_zeros
+            }
+        };
+        match drop {
+            Some(kind) => dropout::plan_into(kind, sigma_norm, r, rng, &mut ws.plan),
+            None => dropout::keep_all_into(dbar, &mut ws.plan),
+        }
+        // worst-case frame bound (NOT this round's need): kept sets
+        // fluctuate, and a post-warm-up high-water mark must not realloc
+        let cap_bytes = match quant {
+            FwqMode::NoQuant => 4 * b * dbar + dbar / 4 + 64,
+            _ => (params.total_budget() / 4.0) as usize + dbar / 4 + 64,
+        };
+        ws.note_bytes_bound(cap_bytes);
+        ws.note_usize_bound(dbar);
+        let mut w = BitWriter::from_buf(ws.take_bytes());
         // δ index vector (D̄ bits) — only when dropout is active
-        let delta_bits = if self.drop.is_some() { dbar as f64 } else { 0.0 };
-        if self.drop.is_some() {
-            for &d in &plan.delta {
+        let delta_bits = if drop.is_some() { dbar as f64 } else { 0.0 };
+        if drop.is_some() {
+            for &d in &ws.plan.delta {
                 w.write_bits(d as u64, 1);
             }
         }
         let c_ava = params.total_budget() - delta_bits;
-        let (ft_hat, nominal, m_star) = match self.quant {
+        let (f_hat, nominal, m_star) = match quant {
             FwqMode::NoQuant => {
-                f32_dump(&ft, &mut w);
-                (ft.clone(), delta_bits + 32.0 * ft.len() as f64, None)
+                // fused dump: gather + 1/(1-p) rescale + f32 serialization
+                // + reconstruction scatter in one row-major pass
+                let mut f_hat = ws.take_matrix(b, dbar);
+                for r_i in 0..b {
+                    let src = f.row(r_i);
+                    let dst = &mut f_hat.data[r_i * dbar..(r_i + 1) * dbar];
+                    for (&c, &s) in ws.plan.kept.iter().zip(&ws.plan.scale) {
+                        let v = src[c] * s;
+                        w.write_f32(v);
+                        dst[c] = v;
+                    }
+                }
+                let n = b * ws.plan.kept.len();
+                (f_hat, delta_bits + 32.0 * n as f64, None)
             }
-            FwqMode::Optimal { use_mean } => {
-                let mut cfg = FwqConfig::paper_default(b, c_ava);
-                cfg.q_ep = params.q_ep;
-                cfg.use_mean = use_mean;
-                let (bytes, bits, info) = fwq_encode(&ft, &cfg);
-                write_blob(&mut w, &bytes, bits);
-                let out = fwq_decode(&bytes, &cfg);
-                (out, delta_bits + info.nominal_bits, Some(info.m_star))
-            }
-            FwqMode::Fixed { q } => {
-                let mut cfg = FwqConfig::paper_default(b, c_ava);
-                cfg.q_ep = params.q_ep;
-                cfg.q_fixed = Some(q);
-                let (bytes, bits, info) = fwq_encode(&ft, &cfg);
-                write_blob(&mut w, &bytes, bits);
-                let out = fwq_decode(&bytes, &cfg);
-                (out, delta_bits + info.nominal_bits, Some(info.m_star))
+            FwqMode::Optimal { .. } | FwqMode::Fixed { .. } => {
+                let cfg = cfg.expect("fwq config built above");
+                let mut wi = BitWriter::from_buf(ws.take_bytes());
+                let info = {
+                    let WireScratch { plan, fwq, .. } = &mut *ws;
+                    fwq_encode_view(
+                        &ColView::scaled(f, &plan.kept, &plan.scale),
+                        &cfg,
+                        &mut wi,
+                        fwq,
+                    )
+                };
+                let inner_bits = wi.bit_len();
+                let inner = wi.into_bytes();
+                write_blob(&mut w, &inner, inner_bits);
+                // reconstruction F̂: decode our own stream, scatter to B×D̄
+                crate::util::reserve_total(&mut ws.stage.data, b * dbar);
+                {
+                    let WireScratch { fwq, stage, .. } = &mut *ws;
+                    fwq_decode_into(&inner, &cfg, fwq, stage);
+                }
+                ws.give_bytes(inner);
+                let mut f_hat = ws.take_matrix(b, dbar);
+                ws.stage.scatter_cols_into(&ws.plan.kept, &mut f_hat);
+                (f_hat, delta_bits + info.nominal_bits, Some(info.m_star))
             }
             FwqMode::Scalar(kind) => {
-                let q = qbar_levels(c_ava, self.r.max(1.0), b, dbar);
+                let ft = f.gather_cols_scaled(&ws.plan.kept, &ws.plan.scale);
+                let q = qbar_levels(c_ava, r.max(1.0), b, dbar);
                 let (bytes, bits) = scalar_encode(&ft, kind, q, params.noise_seed);
                 write_blob(&mut w, &bytes, bits);
                 let out = scalar_decode(&bytes, kind, params.noise_seed);
+                let mut f_hat = ws.take_matrix(b, dbar);
+                out.scatter_cols_into(&ws.plan.kept, &mut f_hat);
                 let nominal = delta_bits + ft.len() as f64 * (q as f64).log2() + 96.0;
-                (out, nominal, None)
+                (f_hat, nominal, None)
             }
         };
-        let f_hat = ft_hat.scatter_cols(&plan.kept, dbar);
         let bits = w.bit_len();
+        let payload = w.into_bytes();
+        let mut kept = ws.take_usize();
+        kept.extend_from_slice(&ws.plan.kept);
+        let mut scale = ws.take_f32();
+        scale.extend_from_slice(&ws.plan.scale);
         Ok(EncodedUplink {
-            frame: self.stamp(Frame::new(FrameKind::FeaturesUp, w.into_bytes(), bits)),
+            frame: self.stamp(Frame::new(FrameKind::FeaturesUp, payload, bits)),
             f_hat,
-            mask: GradMask::Columns { kept: plan.kept, scale: plan.scale },
+            mask: GradMask::Columns { kept, scale },
             nominal_bits: nominal,
             m_star,
         })
@@ -181,6 +293,14 @@ impl Codec for SplitFcCodec {
         DownlinkStyle { columns, entries: ScalarKind::Eq }
     }
 
+    fn wire_id(&self) -> u32 {
+        self.cached_id()
+    }
+
+    fn reclaim(&mut self, buffers: Reclaim) {
+        self.scratch.get_mut().expect("codec scratch poisoned").reclaim(buffers);
+    }
+
     fn encode_uplink(
         &mut self,
         f: &Matrix,
@@ -188,23 +308,16 @@ impl Codec for SplitFcCodec {
         params: &CodecParams,
         rng: &mut Rng,
     ) -> Result<EncodedUplink> {
-        let zeros;
-        let sigma: &[f32] = match stats {
-            Some(s) => &s.sigma_norm,
-            None => {
-                // fail loudly rather than silently degrading adaptive/det
-                // dropout to its all-constant fallback (callers must honor
-                // requirements().needs_sigma)
-                ensure!(
-                    !self.requirements().needs_sigma,
-                    "codec {:?} requires σ statistics (requirements().needs_sigma) \
-                     but encode_uplink got stats = None",
-                    self.name()
-                );
-                zeros = vec![0.0f32; f.cols];
-                &zeros
-            }
-        };
+        // fail loudly rather than silently degrading adaptive/det dropout
+        // to its all-constant fallback (callers must honor
+        // requirements().needs_sigma)
+        ensure!(
+            stats.is_some() || !self.requirements().needs_sigma,
+            "codec {:?} requires σ statistics (requirements().needs_sigma) \
+             but encode_uplink got stats = None",
+            self.name()
+        );
+        let sigma: Option<&[f32]> = stats.map(|s| s.sigma_norm.as_slice());
         let Some(decay) = self.ef_decay else {
             return self.encode_core(f, sigma, params, rng);
         };
@@ -224,9 +337,9 @@ impl Codec for SplitFcCodec {
         // or it keeps dropping the same columns every round and the error
         // in them never rotates back in (mirrors ErrorFeedback::encode_round)
         let sigma_comp;
-        let sigma: &[f32] = if self.requirements().needs_sigma {
+        let sigma: Option<&[f32]> = if self.requirements().needs_sigma {
             sigma_comp = normalized_sigma(&column_stats(&comp), params.chan_size);
-            &sigma_comp
+            Some(&sigma_comp)
         } else {
             sigma
         };
@@ -238,39 +351,88 @@ impl Codec for SplitFcCodec {
     fn decode_uplink(&self, frame: &Frame, params: &CodecParams) -> Result<DecodedUplink> {
         self.check_frame(frame)?;
         ensure!(frame.kind == FrameKind::FeaturesUp, "uplink decode on {:?} frame", frame.kind);
+        let (b, dbar) = (params.batch, params.dbar);
+        let mut guard = self.scratch.lock().expect("codec scratch poisoned");
+        let ws = &mut *guard;
         // bit-exact fence: reading past the declared payload length is a
         // codec bug and should fail loudly, not zero-fill from padding
         let mut rd = BitReader::with_bit_len(&frame.payload, frame.payload_bits);
-        let dbar = params.dbar;
-        let (kept, delta_bits): (Vec<usize>, f64) = if self.drop.is_some() {
-            let delta: Vec<bool> = (0..dbar).map(|_| rd.read_bits(1) == 1).collect();
-            ((0..dbar).filter(|&i| delta[i]).collect(), dbar as f64)
+        ws.note_usize_bound(dbar);
+        let mut kept = ws.take_usize();
+        let delta_bits: f64 = if self.drop.is_some() {
+            for i in 0..dbar {
+                if rd.read_bits(1) == 1 {
+                    kept.push(i);
+                }
+            }
+            dbar as f64
         } else {
-            ((0..dbar).collect(), 0.0)
+            kept.extend(0..dbar);
+            0.0
         };
         let c_ava = params.total_budget() - delta_bits;
-        let ft_hat = match self.quant {
-            FwqMode::NoQuant => f32_undump(&mut rd, params.batch, kept.len()),
-            FwqMode::Optimal { use_mean } => {
-                let (bytes, _) = read_blob(&mut rd);
-                let mut cfg = FwqConfig::paper_default(params.batch, c_ava);
-                cfg.q_ep = params.q_ep;
-                cfg.use_mean = use_mean;
-                fwq_decode(&bytes, &cfg)
+        let f_hat = match self.quant {
+            FwqMode::NoQuant => {
+                // read straight into the scattered positions (same read
+                // order as undump-then-scatter)
+                let mut f_hat = ws.take_matrix(b, dbar);
+                for r_i in 0..b {
+                    let dst = &mut f_hat.data[r_i * dbar..(r_i + 1) * dbar];
+                    for &c in kept.iter() {
+                        dst[c] = rd.read_f32();
+                    }
+                }
+                f_hat
             }
-            FwqMode::Fixed { q } => {
-                let (bytes, _) = read_blob(&mut rd);
-                let mut cfg = FwqConfig::paper_default(params.batch, c_ava);
-                cfg.q_ep = params.q_ep;
-                cfg.q_fixed = Some(q);
-                fwq_decode(&bytes, &cfg)
+            FwqMode::Optimal { .. } | FwqMode::Fixed { .. } => {
+                let cfg = self.fwq_cfg(b, c_ava, params);
+                crate::util::reserve_total(&mut ws.blob, (c_ava.max(0.0) / 4.0) as usize + 64);
+                read_blob_into(&mut rd, &mut ws.blob);
+                ws.fwq.reserve(b, dbar);
+                crate::util::reserve_total(&mut ws.stage.data, b * dbar);
+                {
+                    let WireScratch { blob, fwq, stage, .. } = &mut *ws;
+                    fwq_decode_into(blob, &cfg, fwq, stage);
+                }
+                let mut f_hat = ws.take_matrix(b, dbar);
+                ws.stage.scatter_cols_into(&kept, &mut f_hat);
+                f_hat
             }
             FwqMode::Scalar(kind) => {
-                let (bytes, _) = read_blob(&mut rd);
-                scalar_decode(&bytes, kind, params.noise_seed)
+                read_blob_into(&mut rd, &mut ws.blob);
+                let dense = scalar_decode(&ws.blob, kind, params.noise_seed);
+                let mut f_hat = ws.take_matrix(b, dbar);
+                dense.scatter_cols_into(&kept, &mut f_hat);
+                f_hat
             }
         };
-        Ok(DecodedUplink { f_hat: ft_hat.scatter_cols(&kept, dbar), kept })
+        Ok(DecodedUplink { f_hat, kept })
+    }
+
+    fn encode_downlink(
+        &mut self,
+        g: &Matrix,
+        mask: &GradMask,
+        params: &CodecParams,
+    ) -> Result<EncodedDownlink> {
+        let style = self.downlink_style();
+        let mut dn = {
+            let ws = self.scratch.get_mut().expect("codec scratch poisoned");
+            encode_downlink_styled_with(&style, g, mask, params, ws)
+        };
+        dn.frame = self.stamp(dn.frame);
+        Ok(dn)
+    }
+
+    fn decode_downlink(
+        &self,
+        frame: &Frame,
+        mask: &GradMask,
+        params: &CodecParams,
+    ) -> Result<Matrix> {
+        self.check_frame(frame)?;
+        let mut guard = self.scratch.lock().expect("codec scratch poisoned");
+        decode_downlink_styled_with(&self.downlink_style(), frame, mask, params, &mut guard)
     }
 }
 
@@ -295,5 +457,19 @@ mod tests {
         let ef = SplitFcCodec::paper_default(8.0).with_error_feedback(1.0);
         assert!(ef.requirements().stateful);
         assert_eq!(ef.name(), "splitfc[ad,R=8,fwq,ef]");
+    }
+
+    #[test]
+    fn cached_id_matches_name_hash_and_tracks_config_changes() {
+        let mut codec = SplitFcCodec::paper_default(8.0);
+        let f = Frame::new(FrameKind::FeaturesUp, vec![0u8], 8);
+        let stamped = codec.stamp(f.clone());
+        assert_eq!(stamped.codec_id, codec_id(&codec.name()));
+        assert!(codec.check_frame(&stamped).is_ok());
+        // mutating the (pub) configuration must refresh the cached id, so
+        // old-config frames are rejected instead of misparsed
+        codec.quant = FwqMode::NoQuant;
+        assert_eq!(codec.stamp(f).codec_id, codec_id(&codec.name()));
+        assert!(codec.check_frame(&stamped).is_err());
     }
 }

@@ -1,18 +1,33 @@
 //! Lossless 32-bit transmission (the "Vanilla SL" row) as a [`Codec`].
+//!
+//! Even the lossless row is arena-backed: frame buffers and the F̂/Ĝ
+//! copies come from the session's [`WireScratch`], so vanilla's steady
+//! state is allocation-free too (it is the baseline every compressed row
+//! is measured against in `bench_wire`).
+
+use std::sync::Mutex;
 
 use crate::bitio::{BitReader, BitWriter};
 use crate::compression::codec::{
-    Codec, CodecParams, CodecRequirements, DecodedUplink, EncodedUplink, GradMask, SigmaStats,
+    codec_id, Codec, CodecParams, CodecRequirements, DecodedUplink, EncodedDownlink,
+    EncodedUplink, GradMask, Reclaim, SigmaStats,
 };
-use crate::compression::codecs::common::{f32_dump, f32_undump};
+use crate::compression::codecs::common::{
+    decode_downlink_styled_with, encode_downlink_styled_with, f32_dump, f32_undump_into,
+};
+use crate::compression::scratch::WireScratch;
 use crate::ensure;
 use crate::tensor::Matrix;
 use crate::transport::wire::{Frame, FrameKind};
 use crate::util::error::Result;
 use crate::util::Rng;
 
-#[derive(Debug, Clone, Copy, Default)]
-pub struct VanillaCodec;
+const VANILLA_ID: u32 = codec_id("vanilla");
+
+#[derive(Debug, Default)]
+pub struct VanillaCodec {
+    scratch: Mutex<WireScratch>,
+}
 
 impl Codec for VanillaCodec {
     fn name(&self) -> String {
@@ -21,6 +36,14 @@ impl Codec for VanillaCodec {
 
     fn requirements(&self) -> CodecRequirements {
         CodecRequirements::default()
+    }
+
+    fn wire_id(&self) -> u32 {
+        VANILLA_ID
+    }
+
+    fn reclaim(&mut self, buffers: Reclaim) {
+        self.scratch.get_mut().expect("codec scratch poisoned").reclaim(buffers);
     }
 
     fn encode_uplink(
@@ -33,12 +56,17 @@ impl Codec for VanillaCodec {
         let (b, dbar) = (f.rows, f.cols);
         ensure!(b == params.batch, "batch {b} != params.batch {}", params.batch);
         ensure!(dbar == params.dbar, "dbar {dbar} != params.dbar {}", params.dbar);
-        let mut w = BitWriter::with_capacity(4 * b * dbar);
+        let ws = self.scratch.get_mut().expect("codec scratch poisoned");
+        ws.note_bytes_bound(4 * b * dbar + 8);
+        let mut w = BitWriter::from_buf(ws.take_bytes());
         f32_dump(f, &mut w);
         let bits = w.bit_len();
+        let payload = w.into_bytes();
+        let mut data = ws.take_f32();
+        data.extend_from_slice(&f.data);
         Ok(EncodedUplink {
-            frame: self.stamp(Frame::new(FrameKind::FeaturesUp, w.into_bytes(), bits)),
-            f_hat: f.clone(),
+            frame: self.stamp(Frame::new(FrameKind::FeaturesUp, payload, bits)),
+            f_hat: Matrix { rows: b, cols: dbar, data },
             mask: GradMask::All,
             nominal_bits: 32.0 * (b * dbar) as f64,
             m_star: None,
@@ -48,8 +76,39 @@ impl Codec for VanillaCodec {
     fn decode_uplink(&self, frame: &Frame, params: &CodecParams) -> Result<DecodedUplink> {
         self.check_frame(frame)?;
         ensure!(frame.kind == FrameKind::FeaturesUp, "uplink decode on {:?} frame", frame.kind);
+        let mut guard = self.scratch.lock().expect("codec scratch poisoned");
+        let ws = &mut *guard;
         let mut rd = BitReader::with_bit_len(&frame.payload, frame.payload_bits);
-        let f_hat = f32_undump(&mut rd, params.batch, params.dbar);
-        Ok(DecodedUplink { f_hat, kept: (0..params.dbar).collect() })
+        let mut f_hat = ws.take_matrix(params.batch, params.dbar);
+        f32_undump_into(&mut rd, &mut f_hat);
+        let mut kept = ws.take_usize();
+        kept.extend(0..params.dbar);
+        Ok(DecodedUplink { f_hat, kept })
+    }
+
+    fn encode_downlink(
+        &mut self,
+        g: &Matrix,
+        mask: &GradMask,
+        params: &CodecParams,
+    ) -> Result<EncodedDownlink> {
+        let style = self.downlink_style();
+        let mut dn = {
+            let ws = self.scratch.get_mut().expect("codec scratch poisoned");
+            encode_downlink_styled_with(&style, g, mask, params, ws)
+        };
+        dn.frame = self.stamp(dn.frame);
+        Ok(dn)
+    }
+
+    fn decode_downlink(
+        &self,
+        frame: &Frame,
+        mask: &GradMask,
+        params: &CodecParams,
+    ) -> Result<Matrix> {
+        self.check_frame(frame)?;
+        let mut guard = self.scratch.lock().expect("codec scratch poisoned");
+        decode_downlink_styled_with(&self.downlink_style(), frame, mask, params, &mut guard)
     }
 }

@@ -22,13 +22,15 @@ pub enum DropKind {
 
 /// Everything the device derives before transmitting: probabilities, the
 /// sampled mask, kept indices and the per-kept-column scale factors.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct DropoutPlan {
     pub p: Vec<f64>,
     pub delta: Vec<bool>,
     pub kept: Vec<usize>,
     /// 1/(1-p_j) for each kept column j (aligned with `kept`).
     pub scale: Vec<f32>,
+    /// merge scratch for the deterministic variant's allocation-free sort
+    pub(crate) sort_aux: Vec<usize>,
 }
 
 impl DropoutPlan {
@@ -39,23 +41,12 @@ impl DropoutPlan {
             delta: vec![true; dbar],
             kept: (0..dbar).collect(),
             scale: vec![1.0; dbar],
+            sort_aux: Vec::new(),
         }
     }
 
     pub fn dhat(&self) -> usize {
         self.kept.len()
-    }
-
-    fn from_mask(p: Vec<f64>, delta: Vec<bool>) -> DropoutPlan {
-        let mut kept = Vec::new();
-        let mut scale = Vec::new();
-        for (i, &d) in delta.iter().enumerate() {
-            if d {
-                kept.push(i);
-                scale.push((1.0 / (1.0 - p[i])) as f32);
-            }
-        }
-        DropoutPlan { p, delta, kept, scale }
     }
 }
 
@@ -65,37 +56,49 @@ impl DropoutPlan {
 /// (eq. 10, produced by the `feature_stats` artifact on the hot path);
 /// `r` — dimensionality-reduction ratio R = D̄/D > 1.
 pub fn adaptive_probs(sigma_norm: &[f32], r: f64) -> Vec<f64> {
+    let mut p = Vec::new();
+    adaptive_probs_into(sigma_norm, r, &mut p);
+    p
+}
+
+/// Allocation-reusing form of [`adaptive_probs`]: `p` is cleared and
+/// refilled (identical values — the fused wire path's per-step plan reuses
+/// the session's buffer).
+pub fn adaptive_probs_into(sigma_norm: &[f32], r: f64, p: &mut Vec<f64>) {
     let dbar = sigma_norm.len();
     assert!(dbar > 0);
     assert!(r >= 1.0, "R must be >= 1 (got {r})");
+    p.clear();
     let d_target = dbar as f64 / r;
     let sum_sigma: f64 = sigma_norm.iter().map(|&s| s as f64).sum();
     if sum_sigma <= 0.0 || r <= 1.0 {
         // all-constant features (degenerate) or no reduction: uniform keep.
-        let p = (1.0 - d_target / dbar as f64).max(0.0);
-        return vec![p; dbar];
+        let pi = (1.0 - d_target / dbar as f64).max(0.0);
+        p.resize(dbar, pi);
+        return;
     }
-    let q: Vec<f64> = sigma_norm
-        .iter()
-        .map(|&s| s as f64 * d_target / sum_sigma)
-        .collect();
-    let q_max = q.iter().cloned().fold(0.0, f64::max);
+    // q_i staged in `p`, then transformed in place
+    p.extend(sigma_norm.iter().map(|&s| s as f64 * d_target / sum_sigma));
+    let q_max = p.iter().cloned().fold(0.0, f64::max);
     if q_max <= 1.0 {
-        q.iter().map(|&qi| (1.0 - qi).clamp(0.0, 1.0)).collect()
+        for qi in p.iter_mut() {
+            *qi = (1.0 - *qi).clamp(0.0, 1.0);
+        }
     } else {
         // eq. (12) second branch with the paper's minimal C_bias
         // C = (sigma_max * D - sum_sigma) / (Dbar - D)  (Sec. VII setup)
         let sigma_max = sigma_norm.iter().cloned().fold(0.0f32, f32::max) as f64;
         let denom = dbar as f64 - d_target;
         if denom <= 0.0 {
-            return vec![0.0; dbar];
+            p.clear();
+            p.resize(dbar, 0.0);
+            return;
         }
         let c_bias = ((sigma_max * d_target - sum_sigma) / denom).max(0.0);
         let adj_sum = sum_sigma + dbar as f64 * c_bias;
-        sigma_norm
-            .iter()
-            .map(|&s| (1.0 - (s as f64 + c_bias) * d_target / adj_sum).clamp(0.0, 1.0))
-            .collect()
+        for (pi, &s) in p.iter_mut().zip(sigma_norm) {
+            *pi = (1.0 - (s as f64 + c_bias) * d_target / adj_sum).clamp(0.0, 1.0);
+        }
     }
 }
 
@@ -111,41 +114,85 @@ pub fn sample_mask(p: &[f64], rng: &mut Rng) -> Vec<bool> {
 
 /// Build a full plan for the given variant.
 pub fn plan(kind: DropKind, sigma_norm: &[f32], r: f64, rng: &mut Rng) -> DropoutPlan {
+    let mut out = DropoutPlan::default();
+    plan_into(kind, sigma_norm, r, rng, &mut out);
+    out
+}
+
+/// Fill `out` with the no-dropout plan, reusing its buffers.
+pub fn keep_all_into(dbar: usize, out: &mut DropoutPlan) {
+    out.p.clear();
+    out.p.resize(dbar, 0.0);
+    out.delta.clear();
+    out.delta.resize(dbar, true);
+    out.kept.clear();
+    out.kept.extend(0..dbar);
+    out.scale.clear();
+    out.scale.resize(dbar, 1.0);
+}
+
+/// Allocation-reusing form of [`plan`]: identical probabilities, identical
+/// RNG draw order, identical kept set — the fused wire path's per-step plan
+/// lives in the codec session's scratch arena.
+pub fn plan_into(
+    kind: DropKind,
+    sigma_norm: &[f32],
+    r: f64,
+    rng: &mut Rng,
+    out: &mut DropoutPlan,
+) {
     let dbar = sigma_norm.len();
+    // buffers are bounded by D̄, so capacity is pinned on the first step and
+    // never regrows (the steady-state zero-allocation invariant); absolute
+    // reservations — the buffers still hold the previous round's plan
+    crate::util::reserve_total(&mut out.p, dbar);
+    crate::util::reserve_total(&mut out.delta, dbar);
+    crate::util::reserve_total(&mut out.kept, dbar);
+    crate::util::reserve_total(&mut out.scale, dbar);
+    crate::util::reserve_total(&mut out.sort_aux, dbar);
     if r <= 1.0 {
-        return DropoutPlan::keep_all(dbar);
+        keep_all_into(dbar, out);
+        return;
     }
     match kind {
         DropKind::Adaptive => {
-            let p = adaptive_probs(sigma_norm, r);
-            let delta = sample_mask(&p, rng);
-            DropoutPlan::from_mask(p, delta)
+            adaptive_probs_into(sigma_norm, r, &mut out.p);
+            out.delta.clear();
+            out.delta.extend(out.p.iter().map(|&pi| !rng.bernoulli(pi)));
         }
         DropKind::Random => {
-            let p = random_probs(dbar, r);
-            let delta = sample_mask(&p, rng);
-            DropoutPlan::from_mask(p, delta)
+            out.p.clear();
+            out.p.resize(dbar, (1.0 - 1.0 / r).clamp(0.0, 1.0));
+            out.delta.clear();
+            out.delta.extend(out.p.iter().map(|&pi| !rng.bernoulli(pi)));
         }
         DropKind::Deterministic => {
             // Fig.-3 "SplitFC-Deterministic": drop the (D̄ - D) columns with
             // the smallest normalized stddev; no stochastic scaling (p=0 on
             // kept columns so scale = 1; dropped have p = 1 conceptually).
+            // `kept` doubles as the sort buffer and is rebuilt below.
             let d_keep = (dbar as f64 / r).round().max(1.0) as usize;
-            let mut idx: Vec<usize> = (0..dbar).collect();
-            idx.sort_by(|&a, &b| {
-                sigma_norm[b]
-                    .partial_cmp(&sigma_norm[a])
-                    .unwrap_or(std::cmp::Ordering::Equal)
-            });
-            let mut delta = vec![false; dbar];
-            for &i in idx.iter().take(d_keep) {
-                delta[i] = true;
+            out.kept.clear();
+            out.kept.extend(0..dbar);
+            // stable descending by σ without std's per-call merge-buffer
+            // allocation (same permutation as the old `sort_by`)
+            crate::util::sort::stable_sort_desc_by(&mut out.kept, &mut out.sort_aux, sigma_norm);
+            out.delta.clear();
+            out.delta.resize(dbar, false);
+            for &i in out.kept.iter().take(d_keep) {
+                out.delta[i] = true;
             }
-            let p = delta
-                .iter()
-                .map(|&d| if d { 0.0 } else { 1.0 })
-                .collect();
-            DropoutPlan::from_mask(p, delta)
+            out.p.clear();
+            out.p.extend(out.delta.iter().map(|&d| if d { 0.0 } else { 1.0 }));
+        }
+    }
+    // rebuild kept/scale from (p, delta) — DropoutPlan::from_mask in place
+    out.kept.clear();
+    out.scale.clear();
+    for (i, &d) in out.delta.iter().enumerate() {
+        if d {
+            out.kept.push(i);
+            out.scale.push((1.0 / (1.0 - out.p[i])) as f32);
         }
     }
 }

@@ -24,13 +24,14 @@ pub mod error;
 pub mod feedback;
 pub mod pipeline;
 pub mod quant;
+pub mod scratch;
 pub mod waterfill;
 
 pub use baselines::ScalarKind;
 pub use codec::{
     build_codec, codec_id, is_registered, register_codec, registered_names, Codec, CodecParams,
     CodecRegistry, CodecRequirements, CodecSpec, DecodedUplink, EncodedDownlink, EncodedUplink,
-    GradMask, SigmaStats,
+    GradMask, Reclaim, SigmaStats,
 };
 pub use codecs::fedlite::FedLiteCodec;
 pub use codecs::splitfc::{FwqMode, SplitFcCodec};
@@ -40,4 +41,7 @@ pub use dropout::DropKind;
 pub use error::CodecError;
 pub use feedback::ErrorFeedback;
 pub use pipeline::{decode_uplink_splitfc, encode_downlink, encode_uplink, Scheme};
-pub use quant::{fwq_decode, fwq_encode, FwqConfig};
+pub use quant::{
+    fwq_decode, fwq_decode_into, fwq_encode, fwq_encode_view, ColView, FwqConfig, FwqScratch,
+};
+pub use scratch::WireScratch;

@@ -62,7 +62,7 @@ impl Scheme {
     /// The equivalent codec session (fresh, no error-feedback state).
     pub fn to_codec(&self) -> Box<dyn Codec> {
         match self {
-            Scheme::Vanilla => Box::new(VanillaCodec),
+            Scheme::Vanilla => Box::new(VanillaCodec::default()),
             Scheme::SplitFc { drop, r, quant } => {
                 Box::new(SplitFcCodec::new(*drop, *r, *quant))
             }

@@ -14,11 +14,24 @@
 //! C_ava, B — paper Sec. VI-B: both sides regenerate identical quantizers by
 //! re-running the allocation on the transmitted endpoints/means, so no
 //! codebooks are exchanged).
+//!
+//! ## The fused wire path
+//!
+//! [`fwq_encode_view`] is the hot-path entry: it reads the feature matrix
+//! through a [`ColView`] (kept columns + optional 1/(1-p) rescale applied on
+//! the fly), computes the column statistics in the same streaming pass the
+//! dropout gather used to need a materialized copy for, and emits quantized
+//! symbols straight into the caller's [`BitWriter`]. All intermediate state
+//! (stats, candidate plans, level buffers, symbol staging) lives in a
+//! caller-owned [`FwqScratch`], so steady-state encodes perform zero heap
+//! allocations. The bitstream is byte-identical to the pre-fusion
+//! gather-then-encode pipeline (locked by the `view_encode_matches_*` tests
+//! below and the codec golden tests).
 
 use crate::bitio::{BitReader, BitWriter};
 use crate::compression::waterfill::{self, LevelSpec};
-use crate::tensor::{column_stats, Matrix};
-use crate::util::par;
+use crate::tensor::Matrix;
+use crate::util::{par, reserve_total};
 
 /// Shared FWQ configuration — identical at device and PS.
 #[derive(Debug, Clone)]
@@ -63,11 +76,80 @@ pub struct FwqInfo {
     pub candidates_tried: usize,
 }
 
+impl FwqInfo {
+    fn empty() -> FwqInfo {
+        FwqInfo {
+            m_star: 0,
+            dhat: 0,
+            nominal_bits: 0.0,
+            objective: 0.0,
+            q0: None,
+            candidates_tried: 0,
+        }
+    }
+}
+
 const HEADER_BITS: f64 = 32.0 + 32.0 + 4.0 * 32.0; // D̂, M, 4 range floats
 
+/// A read-only view of selected (optionally 1/(1-p)-rescaled) columns of a
+/// row-major matrix — what the fused FWDP→FWQ path encodes from instead of
+/// materializing `gather_cols_scaled`. `at(r, j)` is bit-identical to the
+/// materialized copy's entry (one f32 multiply either way).
+#[derive(Clone, Copy)]
+pub struct ColView<'a> {
+    m: &'a Matrix,
+    kept: &'a [usize],
+    scale: Option<&'a [f32]>,
+}
+
+impl<'a> ColView<'a> {
+    /// Kept columns with per-column scale factors (the FWDP uplink).
+    pub fn scaled(m: &'a Matrix, kept: &'a [usize], scale: &'a [f32]) -> ColView<'a> {
+        assert_eq!(kept.len(), scale.len());
+        debug_assert!(kept.iter().all(|&c| c < m.cols));
+        ColView { m, kept, scale: Some(scale) }
+    }
+
+    /// Kept columns verbatim (the mask-coupled downlink).
+    pub fn unscaled(m: &'a Matrix, kept: &'a [usize]) -> ColView<'a> {
+        debug_assert!(kept.iter().all(|&c| c < m.cols));
+        ColView { m, kept, scale: None }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.m.rows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.kept.len()
+    }
+
+    /// Upper bound for per-column scratch buffers (the source width — kept
+    /// sets fluctuate per round, the source matrix's shape does not).
+    pub fn width_bound(&self) -> usize {
+        self.m.cols.max(self.kept.len())
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, j: usize) -> f32 {
+        let x = self.m.data[r * self.m.cols + self.kept[j]];
+        match self.scale {
+            Some(s) => x * s[j],
+            None => x,
+        }
+    }
+
+    /// Walk view column `j` in row order.
+    pub fn col_iter(&self, j: usize) -> impl Iterator<Item = f32> + '_ {
+        (0..self.m.rows).map(move |r| self.at(r, j))
+    }
+}
+
+/// One candidate-M quantization plan, built into reusable buffers.
+#[derive(Debug, Default)]
 struct Plan {
     m: usize,
-    /// columns (original indices) using the two-stage quantizer, column order
+    /// columns (view indices) using the two-stage quantizer, column order
     two_stage: Vec<usize>,
     /// remaining columns, column order
     mean_cols: Vec<usize>,
@@ -81,6 +163,70 @@ struct Plan {
     /// level (if any) last.
     levels: Vec<u64>,
     objective: f64,
+}
+
+impl Plan {
+    fn reserve(&mut self, max_cols: usize) {
+        reserve_total(&mut self.two_stage, max_cols);
+        reserve_total(&mut self.mean_cols, max_cols);
+        reserve_total(&mut self.ep_codes, max_cols);
+        reserve_total(&mut self.levels, max_cols + 1);
+    }
+}
+
+/// Reusable state for [`fwq_encode_view`] / [`fwq_decode_into`]: column
+/// stats, the candidate-scan plan buffers, waterfill staging, and symbol
+/// staging. One instance per codec session (inside
+/// [`crate::compression::WireScratch`]); steady-state FWQ rounds touch the
+/// heap zero times.
+#[derive(Debug, Default)]
+pub struct FwqScratch {
+    mins: Vec<f32>,
+    maxs: Vec<f32>,
+    means: Vec<f32>,
+    sums: Vec<f64>,
+    ranges: Vec<f32>,
+    order: Vec<usize>,
+    candidates: Vec<usize>,
+    specs: Vec<LevelSpec>,
+    cont: Vec<f64>,
+    best: Plan,
+    trial: Plan,
+    is_two: Vec<bool>,
+    ep_syms: Vec<u64>,
+    syms: Vec<u64>,
+    dec_levels: Vec<u64>,
+    sort_aux: Vec<usize>,
+}
+
+impl FwqScratch {
+    pub fn new() -> FwqScratch {
+        FwqScratch::default()
+    }
+
+    /// Pin every buffer's capacity to its (batch, D̄)-derived bound so
+    /// steady-state rounds never regrow: kept-set sizes fluctuate round to
+    /// round, and a post-warm-up high-water mark must not trigger a
+    /// realloc. Absolute (total-capacity) reservations — the buffers still
+    /// hold the previous round's contents when this runs.
+    pub fn reserve(&mut self, batch: usize, max_cols: usize) {
+        reserve_total(&mut self.mins, max_cols);
+        reserve_total(&mut self.maxs, max_cols);
+        reserve_total(&mut self.means, max_cols);
+        reserve_total(&mut self.sums, max_cols);
+        reserve_total(&mut self.ranges, max_cols);
+        reserve_total(&mut self.order, max_cols);
+        reserve_total(&mut self.candidates, 16);
+        reserve_total(&mut self.specs, max_cols + 1);
+        reserve_total(&mut self.cont, max_cols + 1);
+        self.best.reserve(max_cols);
+        self.trial.reserve(max_cols);
+        reserve_total(&mut self.is_two, max_cols);
+        reserve_total(&mut self.ep_syms, 2 * max_cols);
+        reserve_total(&mut self.syms, batch.max(max_cols));
+        reserve_total(&mut self.dec_levels, max_cols + 1);
+        reserve_total(&mut self.sort_aux, max_cols);
+    }
 }
 
 fn delta_ep(a_min: f32, a_max: f32, q_ep: u64) -> f64 {
@@ -126,46 +272,56 @@ fn quantize_endpoints(
     (umin as u64, umax.max(umin) as u64)
 }
 
-/// Build the quantization plan for one candidate M (levels + objective).
+/// Build the quantization plan for one candidate M into `out` (levels +
+/// objective), reusing `specs`/`cont` as waterfill staging. Returns false
+/// when the candidate is infeasible for the budget.
 #[allow(clippy::too_many_arguments)]
-fn plan_for_m(
+fn plan_build(
     cfg: &FwqConfig,
     order: &[usize], // columns sorted by range descending
     mins: &[f32],
     maxs: &[f32],
     means: &[f32],
     m: usize,
-) -> Option<Plan> {
+    specs: &mut Vec<LevelSpec>,
+    cont: &mut Vec<f64>,
+    out: &mut Plan,
+) -> bool {
     let dhat = order.len();
     let b = cfg.batch as f64;
-    let mut two_stage: Vec<usize> = order[..m].to_vec();
-    let mut mean_cols: Vec<usize> = order[m..].to_vec();
-    two_stage.sort_unstable(); // column order for a canonical wire layout
-    mean_cols.sort_unstable();
+    out.m = m;
+    out.two_stage.clear();
+    out.two_stage.extend_from_slice(&order[..m]);
+    out.two_stage.sort_unstable(); // column order for a canonical wire layout
+    out.mean_cols.clear();
+    out.mean_cols.extend_from_slice(&order[m..]);
+    out.mean_cols.sort_unstable();
 
     // global endpoint range over the two-stage set (eq. 15)
     let (mut a_min, mut a_max) = (f32::INFINITY, f32::NEG_INFINITY);
-    for &c in &two_stage {
+    for &c in &out.two_stage {
         a_min = a_min.min(mins[c]);
         a_max = a_max.max(maxs[c]);
     }
-    if two_stage.is_empty() {
+    if out.two_stage.is_empty() {
         a_min = 0.0;
         a_max = 0.0;
     }
     let d_ep = delta_ep(a_min, a_max, cfg.q_ep);
-    let ep_codes: Vec<(u64, u64)> = two_stage
-        .iter()
-        .map(|&c| quantize_endpoints(mins[c], maxs[c], a_min, d_ep, cfg.q_ep))
-        .collect();
+    out.ep_codes.clear();
+    out.ep_codes.extend(
+        out.two_stage
+            .iter()
+            .map(|&c| quantize_endpoints(mins[c], maxs[c], a_min, d_ep, cfg.q_ep)),
+    );
 
     // mean range over the mean set
     let (mut abar_min, mut abar_max) = (f32::INFINITY, f32::NEG_INFINITY);
-    for &c in &mean_cols {
+    for &c in &out.mean_cols {
         abar_min = abar_min.min(means[c]);
         abar_max = abar_max.max(means[c]);
     }
-    if mean_cols.is_empty() {
+    if out.mean_cols.is_empty() {
         abar_min = 0.0;
         abar_max = 0.0;
     }
@@ -175,60 +331,65 @@ fn plan_for_m(
     let c_levels = cfg.c_ava - c_const;
 
     // level specs in canonical order: entries (column order), then mean
-    let mut specs: Vec<LevelSpec> = ep_codes
-        .iter()
-        .map(|&(umin, umax)| LevelSpec::entry((umax - umin) as f64 * d_ep, cfg.batch))
-        .collect();
-    let use_mean_q = cfg.use_mean && !mean_cols.is_empty();
+    specs.clear();
+    specs.extend(
+        out.ep_codes
+            .iter()
+            .map(|&(umin, umax)| LevelSpec::entry((umax - umin) as f64 * d_ep, cfg.batch)),
+    );
+    let use_mean_q = cfg.use_mean && !out.mean_cols.is_empty();
     if use_mean_q {
         specs.push(LevelSpec::mean(
             (abar_max - abar_min) as f64,
             cfg.batch,
-            mean_cols.len(),
+            out.mean_cols.len(),
         ));
     }
 
-    let levels = match cfg.q_fixed {
-        Some(q) => vec![q.max(2); specs.len()],
-        None => match waterfill::solve(&specs, c_levels) {
-            Some(l) => l,
-            // degenerate budget (< header + flags): fall back to minimum
-            // levels for the all-means plan so a frame can always be built;
-            // the overshoot shows up in the measured bits.
-            None if m == 0 => vec![2; specs.len()],
-            None => return None,
-        },
-    };
+    match cfg.q_fixed {
+        Some(q) => {
+            out.levels.clear();
+            out.levels.resize(specs.len(), q.max(2));
+        }
+        None => {
+            if !waterfill::solve_into(specs, c_levels, cont, &mut out.levels) {
+                if m == 0 {
+                    // degenerate budget (< header + flags): fall back to
+                    // minimum levels for the all-means plan so a frame can
+                    // always be built; the overshoot shows up in the
+                    // measured bits.
+                    out.levels.clear();
+                    out.levels.resize(specs.len(), 2);
+                } else {
+                    return false;
+                }
+            }
+        }
+    }
 
     // objective (eq. 22): level terms + the constant mean-residual term,
     // which *does* depend on M and must participate in the M* scan.
-    let mut obj = waterfill::objective(&specs, &levels);
+    let mut obj = waterfill::objective(specs, &out.levels);
     if cfg.use_mean {
-        for &c in &mean_cols {
+        for &c in &out.mean_cols {
             let r = (maxs[c] - mins[c]) as f64;
             obj += r * r * b / 2.0;
         }
     } else {
         // untransmitted columns reconstruct to 0: count their full energy
         // proxy via range² (upper bound flavour, keeps the scan meaningful)
-        for &c in &mean_cols {
+        for &c in &out.mean_cols {
             let r = (maxs[c] - mins[c]).max(means[c].abs()) as f64;
             obj += r * r * b;
         }
     }
 
-    Some(Plan {
-        m,
-        two_stage,
-        mean_cols,
-        a_min,
-        a_max,
-        abar_min,
-        abar_max,
-        ep_codes,
-        levels,
-        objective: obj,
-    })
+    out.a_min = a_min;
+    out.a_max = a_max;
+    out.abar_min = abar_min;
+    out.abar_max = abar_max;
+    out.objective = obj;
+    true
 }
 
 /// Largest feasible M for the budget (the paper's D^max in Sec. VII):
@@ -252,100 +413,201 @@ fn d_max(cfg: &FwqConfig, dhat: usize) -> usize {
 }
 
 /// Algorithm 3: scan the candidate set in descending order of M with the
-/// early-stop rule, returning the best plan.
+/// early-stop rule, leaving the best plan in `best` and returning the number
+/// of feasible candidates examined.
 ///
-/// The candidates are planned **speculatively in parallel** (each
-/// `plan_for_m` is a pure function of the shared stats), then the serial
-/// early-stop rule (Alg. 3 l.12-21) is replayed over the results in
-/// descending-M order. The selected plan — and therefore the emitted
-/// bitstream — is identical to a sequential scan; plans past the stop point
-/// are simply discarded.
-fn search_m(
+/// On a multi-worker pool (and wide matrices) the candidates are planned
+/// **speculatively in parallel** (each `plan_build` is a pure function of
+/// the shared stats), then the serial early-stop rule (Alg. 3 l.12-21) is
+/// replayed over the results in descending-M order. The selected plan — and
+/// therefore the emitted bitstream — is identical to a sequential scan;
+/// plans past the stop point are simply discarded. The serial path builds
+/// candidates lazily into two ping-pong buffers (`best`/`trial`), keeping
+/// both the genuine early stop and the zero-allocation invariant.
+#[allow(clippy::too_many_arguments)]
+fn search_m_into(
     cfg: &FwqConfig,
     order: &[usize],
     mins: &[f32],
     maxs: &[f32],
     means: &[f32],
-) -> (Plan, usize) {
+    candidates: &mut Vec<usize>,
+    specs: &mut Vec<LevelSpec>,
+    cont: &mut Vec<f64>,
+    best: &mut Plan,
+    trial: &mut Plan,
+) -> usize {
     let dhat = order.len();
     let dmax = d_max(cfg, dhat);
-    let mut candidates: Vec<usize> = if cfg.use_mean {
-        (1..=cfg.n_candidates)
-            .map(|n| (dmax * n + cfg.n_candidates - 1) / cfg.n_candidates)
-            .collect()
+    candidates.clear();
+    if cfg.use_mean {
+        candidates.extend(
+            (1..=cfg.n_candidates)
+                .map(|n| (dmax * n + cfg.n_candidates - 1) / cfg.n_candidates),
+        );
     } else {
-        vec![dmax] // Case 3: as many two-stage columns as the budget allows
-    };
+        candidates.push(dmax); // Case 3: as many two-stage columns as the budget allows
+    }
     candidates.push(0); // pure mean-value fallback is always feasible-ish
     candidates.sort_unstable();
     candidates.dedup();
     candidates.reverse(); // descending M, the order Alg. 3 scans
 
-    // The early-stop merge (Alg. 3 l.12-21) over descending-M plan results.
-    // Lazy input iterators stop *planning* at the early stop, exactly like
-    // the pre-parallel encoder.
-    fn scan(plans: impl IntoIterator<Item = Option<Plan>>) -> (Option<Plan>, usize) {
-        let mut best: Option<Plan> = None;
-        let mut prev_obj = f64::INFINITY;
-        let mut tried = 0;
-        for p in plans {
-            let Some(p) = p else { continue };
+    let mut found = false;
+    let mut prev_obj = f64::INFINITY;
+    let mut tried = 0usize;
+
+    // Speculate only when the pool will actually run the candidates
+    // concurrently; on one worker, or below ~256 columns where a plan costs
+    // microseconds, the lazy serial scan (with its genuine early stop, no
+    // thread spawns, and no per-candidate allocation) is strictly better.
+    if dhat >= 256 && par::threads() > 1 {
+        let cands: &[usize] = candidates;
+        let plans: Vec<(bool, Plan)> = par::par_map_idx(cands.len(), 1, |i| {
+            let mut p = Plan::default();
+            let mut sp = Vec::new();
+            let mut ct = Vec::new();
+            let ok = plan_build(cfg, order, mins, maxs, means, cands[i], &mut sp, &mut ct, &mut p);
+            (ok, p)
+        });
+        for (ok, p) in plans {
+            if !ok {
+                continue;
+            }
             tried += 1;
             let obj = p.objective;
-            if best.as_ref().map(|b| obj < b.objective).unwrap_or(true) {
-                best = Some(p);
+            if !found || obj < best.objective {
+                *best = p;
+                found = true;
             }
             if obj > prev_obj {
                 break; // early stop
             }
             prev_obj = obj;
         }
-        (best, tried)
-    }
-
-    // Speculate only when the pool will actually run the candidates
-    // concurrently; on one worker, or below ~256 columns where a plan costs
-    // microseconds, the lazy serial scan (with its genuine early stop and no
-    // thread spawns) is strictly better. Even at 2 workers speculation
-    // breaks even: plan cost scales with M, and the serial early stop
-    // typically still pays for the few *largest* candidates (ΣM over all
-    // candidates ≈ 5.5·M_max, so wall ≈ ΣM/workers vs ≈ 2-3·M_max serially).
-    let (best, tried) = if dhat >= 256 && par::threads() > 1 {
-        scan(par::par_map_idx(candidates.len(), 1, |i| {
-            plan_for_m(cfg, order, mins, maxs, means, candidates[i])
-        }))
     } else {
-        scan(candidates.iter().map(|&m| plan_for_m(cfg, order, mins, maxs, means, m)))
-    };
+        for &m in candidates.iter() {
+            if !plan_build(cfg, order, mins, maxs, means, m, specs, cont, trial) {
+                continue;
+            }
+            tried += 1;
+            let obj = trial.objective;
+            if !found || obj < best.objective {
+                std::mem::swap(best, trial);
+                found = true;
+            }
+            if obj > prev_obj {
+                break; // early stop
+            }
+            prev_obj = obj;
+        }
+    }
     // the scan set always contains M = 0, and the M = 0 plan always
-    // constructs (the degenerate-budget fallback inside `plan_for_m`), so
+    // constructs (the degenerate-budget fallback inside `plan_build`), so
     // the scan cannot come back empty: an early stop implies at least one
-    // plan succeeded first. No second `plan_for_m` call is needed.
-    let best = best.expect("candidate scan includes M = 0, which always constructs");
-    (best, tried)
+    // plan succeeded first.
+    assert!(found, "candidate scan includes M = 0, which always constructs");
+    tried
+}
+
+/// Fused single-pass per-column stats over the view (min / max / mean in
+/// row-ascending accumulation order — bit-identical to
+/// `tensor::column_stats` over the materialized gather).
+fn view_stats(
+    v: &ColView,
+    mins: &mut Vec<f32>,
+    maxs: &mut Vec<f32>,
+    means: &mut Vec<f32>,
+    sums: &mut Vec<f64>,
+) {
+    let (b, d) = (v.rows(), v.ncols());
+    assert!(b > 0 && d > 0);
+    mins.clear();
+    mins.resize(d, f32::INFINITY);
+    maxs.clear();
+    maxs.resize(d, f32::NEG_INFINITY);
+    sums.clear();
+    sums.resize(d, 0.0);
+    for r in 0..b {
+        for j in 0..d {
+            let x = v.at(r, j);
+            if x < mins[j] {
+                mins[j] = x;
+            }
+            if x > maxs[j] {
+                maxs[j] = x;
+            }
+            sums[j] += x as f64;
+        }
+    }
+    means.clear();
+    means.extend(sums.iter().map(|&s| (s / b as f64) as f32));
 }
 
 /// Quantize + serialize A (Alg. 3 lines 19-23 + the paper's overhead terms).
+///
+/// Compatibility wrapper over [`fwq_encode_view`] for callers holding a
+/// materialized matrix (benches, legacy paths); allocates its own scratch.
 pub fn fwq_encode(a: &Matrix, cfg: &FwqConfig) -> (Vec<u8>, u64, FwqInfo) {
-    let dhat = a.cols;
     assert_eq!(a.rows, cfg.batch);
-    if dhat == 0 {
-        let w = BitWriter::new();
-        return (
-            w.into_bytes(),
-            0,
-            FwqInfo { m_star: 0, dhat: 0, nominal_bits: 0.0, objective: 0.0, q0: None, candidates_tried: 0 },
-        );
+    if a.cols == 0 {
+        return (Vec::new(), 0, FwqInfo::empty());
     }
-    let st = column_stats(a);
-    let ranges: Vec<f32> = st.ranges();
-    let mut order: Vec<usize> = (0..dhat).collect();
-    order.sort_by(|&x, &y| ranges[y].partial_cmp(&ranges[x]).unwrap_or(std::cmp::Ordering::Equal));
+    let all: Vec<usize> = (0..a.cols).collect();
+    let mut w = BitWriter::with_capacity((cfg.c_ava / 8.0) as usize + 64);
+    let mut fs = FwqScratch::default();
+    let info = fwq_encode_view(&ColView::unscaled(a, &all), cfg, &mut w, &mut fs);
+    let bits = w.bit_len();
+    (w.into_bytes(), bits, info)
+}
 
-    let (plan, tried) = search_m(cfg, &order, &st.min, &st.max, &st.mean);
+/// The fused hot-path encoder: stats → M* scan → symbols emitted directly
+/// into `w`, reading features through `v` (no gathered/scaled intermediate,
+/// no per-column staging vectors — `fs` owns every reusable buffer).
+pub fn fwq_encode_view(
+    v: &ColView,
+    cfg: &FwqConfig,
+    w: &mut BitWriter,
+    fs: &mut FwqScratch,
+) -> FwqInfo {
+    let dhat = v.ncols();
+    assert_eq!(v.rows(), cfg.batch);
+    if dhat == 0 {
+        return FwqInfo::empty();
+    }
+    fs.reserve(cfg.batch, v.width_bound());
+    let FwqScratch {
+        mins,
+        maxs,
+        means,
+        sums,
+        ranges,
+        order,
+        candidates,
+        specs,
+        cont,
+        best,
+        trial,
+        is_two,
+        ep_syms,
+        syms,
+        sort_aux,
+        ..
+    } = fs;
+
+    view_stats(v, mins, maxs, means, sums);
+    ranges.clear();
+    ranges.extend(mins.iter().zip(maxs.iter()).map(|(&lo, &hi)| hi - lo));
+    order.clear();
+    order.extend(0..dhat);
+    // stable descending by range — the allocation-free twin of
+    // `sort_by(|&x, &y| ranges[y].partial_cmp(&ranges[x]))`, same permutation
+    crate::util::sort::stable_sort_desc_by(order, sort_aux, ranges);
+
+    let tried = search_m_into(cfg, order, mins, maxs, means, candidates, specs, cont, best, trial);
+    let plan: &Plan = best;
 
     // ---- serialize ----
-    let mut w = BitWriter::with_capacity((cfg.c_ava / 8.0) as usize + 64);
     w.write_u32(dhat as u32);
     w.write_u32(plan.m as u32);
     w.write_f32(plan.a_min);
@@ -353,20 +615,21 @@ pub fn fwq_encode(a: &Matrix, cfg: &FwqConfig) -> (Vec<u8>, u64, FwqInfo) {
     w.write_f32(plan.abar_min);
     w.write_f32(plan.abar_max);
     // flags in column order
-    let mut is_two = vec![false; dhat];
+    is_two.clear();
+    is_two.resize(dhat, false);
     for &c in &plan.two_stage {
         is_two[c] = true;
     }
-    for &f in &is_two {
+    for &f in is_two.iter() {
         w.write_bits(f as u64, 1);
     }
     // endpoint codes (column order, min then max), radix base Q_ep
-    let mut ep_syms = Vec::with_capacity(2 * plan.m);
+    ep_syms.clear();
     for &(umin, umax) in &plan.ep_codes {
         ep_syms.push(umin);
         ep_syms.push(umax);
     }
-    w.write_radix(&ep_syms, ep_radix(cfg.q_ep));
+    w.write_radix(ep_syms, ep_radix(cfg.q_ep));
 
     let d_ep = delta_ep(plan.a_min, plan.a_max, cfg.q_ep);
     let use_mean_q = cfg.use_mean && !plan.mean_cols.is_empty();
@@ -376,31 +639,49 @@ pub fn fwq_encode(a: &Matrix, cfg: &FwqConfig) -> (Vec<u8>, u64, FwqInfo) {
     if let Some(q0v) = q0 {
         let lo = plan.abar_min as f64;
         let span = (plan.abar_max - plan.abar_min) as f64;
-        let syms: Vec<u64> = plan
-            .mean_cols
-            .iter()
-            .map(|&c| quant_code(st.mean[c] as f64, lo, span, q0v))
-            .collect();
-        w.write_radix(&syms, q0v);
+        syms.clear();
+        syms.extend(
+            plan.mean_cols
+                .iter()
+                .map(|&c| quant_code(means[c] as f64, lo, span, q0v)),
+        );
+        w.write_radix(syms, q0v);
     }
-    // entry codes per two-stage column: symbol computation fans out over the
-    // pool (strided col_iter, no per-column Vec<f32> copy); serialization
-    // stays sequential in column order, so the stream is byte-identical to a
-    // single-threaded encode.
-    // ≥ ~8k quantizations per claimed chunk so small frames stay inline
-    let cols_per_chunk = (8192 / cfg.batch.max(1)).max(1);
-    let col_syms: Vec<Vec<u64>> = par::par_map_idx(plan.two_stage.len(), cols_per_chunk, |j| {
-        let c = plan.two_stage[j];
+    // entry codes per two-stage column: symbols come straight off the view
+    // (strided reads + on-the-fly rescale, no per-column copy).
+    // Serialization stays sequential in column order, so the stream is
+    // byte-identical whether symbols are computed inline (serial, zero
+    // allocation) or fanned out over the pool.
+    let cols_per_chunk = (8192 / cfg.batch.max(1)).max(1); // ≥ ~8k quantizations per claimed chunk
+    let nts = plan.two_stage.len();
+    let col_lo_span = |j: usize| {
         let (umin, umax) = plan.ep_codes[j];
         let lo = plan.a_min as f64 + umin as f64 * d_ep;
         let span = (umax - umin) as f64 * d_ep;
-        let qj = plan.levels[j];
-        a.col_iter(c)
-            .map(|v| quant_code(v as f64, lo, span, qj))
-            .collect()
-    });
-    for (syms, &qj) in col_syms.iter().zip(&plan.levels) {
-        w.write_radix(syms, qj);
+        (lo, span)
+    };
+    if nts > cols_per_chunk && par::threads() > 1 {
+        let col_syms: Vec<Vec<u64>> = par::par_map_idx(nts, cols_per_chunk, |j| {
+            let (lo, span) = col_lo_span(j);
+            let qj = plan.levels[j];
+            v.col_iter(plan.two_stage[j])
+                .map(|x| quant_code(x as f64, lo, span, qj))
+                .collect()
+        });
+        for (s, &qj) in col_syms.iter().zip(&plan.levels) {
+            w.write_radix(s, qj);
+        }
+    } else {
+        for j in 0..nts {
+            let (lo, span) = col_lo_span(j);
+            let qj = plan.levels[j];
+            syms.clear();
+            syms.extend(
+                v.col_iter(plan.two_stage[j])
+                    .map(|x| quant_code(x as f64, lo, span, qj)),
+            );
+            w.write_radix(syms, qj);
+        }
     }
 
     // nominal accounting (eq. 17): 2M log2 Qep + B Σ log2 Qj
@@ -413,16 +694,14 @@ pub fn fwq_encode(a: &Matrix, cfg: &FwqConfig) -> (Vec<u8>, u64, FwqInfo) {
         nominal += plan.mean_cols.len() as f64 * (q0v as f64).log2();
     }
 
-    let bits = w.bit_len();
-    let info = FwqInfo {
+    FwqInfo {
         m_star: plan.m,
         dhat,
         nominal_bits: nominal,
         objective: plan.objective,
         q0,
         candidates_tried: tried,
-    };
-    (w.into_bytes(), bits, info)
+    }
 }
 
 #[inline]
@@ -445,9 +724,25 @@ fn dequant(code: u64, lo: f64, span: f64, q: u64) -> f32 {
 /// Decode a FWQ frame back to a B×D̂ matrix. Needs only the shared config:
 /// levels are re-derived by re-running the allocation on the decoded
 /// endpoints/means (Sec. VI-B — both sides build identical quantizers).
+///
+/// Compatibility wrapper over [`fwq_decode_into`]; allocates its own
+/// scratch and output.
 pub fn fwq_decode(bytes: &[u8], cfg: &FwqConfig) -> Matrix {
+    let mut fs = FwqScratch::default();
+    let mut out = Matrix::zeros(cfg.batch, 0);
+    fwq_decode_into(bytes, cfg, &mut fs, &mut out);
+    out
+}
+
+/// Scratch-reusing FWQ decode: `out` is resized (capacity reused) and
+/// refilled; all staging lives in `fs`. Steady-state decodes of
+/// constant-shape frames perform zero heap allocations.
+pub fn fwq_decode_into(bytes: &[u8], cfg: &FwqConfig, fs: &mut FwqScratch, out: &mut Matrix) {
     if bytes.is_empty() {
-        return Matrix::zeros(cfg.batch, 0);
+        out.rows = cfg.batch;
+        out.cols = 0;
+        out.data.clear();
+        return;
     }
     let mut r = BitReader::new(bytes);
     let dhat = r.read_u32() as usize;
@@ -456,64 +751,84 @@ pub fn fwq_decode(bytes: &[u8], cfg: &FwqConfig) -> Matrix {
     let a_max = r.read_f32();
     let abar_min = r.read_f32();
     let abar_max = r.read_f32();
-    let is_two: Vec<bool> = (0..dhat).map(|_| r.read_bits(1) == 1).collect();
-    let ep_syms = r.read_radix(2 * m, ep_radix(cfg.q_ep));
+    fs.reserve(cfg.batch, dhat);
+    let FwqScratch { is_two, ep_syms, specs, cont, syms, dec_levels, .. } = fs;
+    is_two.clear();
+    for _ in 0..dhat {
+        is_two.push(r.read_bits(1) == 1);
+    }
+    r.read_radix_into(2 * m, ep_radix(cfg.q_ep), ep_syms);
     let d_ep = delta_ep(a_min, a_max, cfg.q_ep);
 
-    let two_stage: Vec<usize> = (0..dhat).filter(|&c| is_two[c]).collect();
-    assert_eq!(two_stage.len(), m, "flag/M mismatch in frame");
-    let mean_cols: Vec<usize> = (0..dhat).filter(|&c| !is_two[c]).collect();
+    let n_two = is_two.iter().filter(|&&f| f).count();
+    assert_eq!(n_two, m, "flag/M mismatch in frame");
+    let n_mean = dhat - m;
 
     // re-derive the levels exactly as the encoder did
     let c_const = 2.0 * m as f64 * lg_ep(cfg.q_ep) + dhat as f64 + HEADER_BITS;
     let c_levels = cfg.c_ava - c_const;
-    let mut specs: Vec<LevelSpec> = (0..m)
-        .map(|j| {
-            let (umin, umax) = (ep_syms[2 * j], ep_syms[2 * j + 1]);
-            LevelSpec::entry((umax - umin) as f64 * d_ep, cfg.batch)
-        })
-        .collect();
-    let use_mean_q = cfg.use_mean && !mean_cols.is_empty();
+    specs.clear();
+    specs.extend((0..m).map(|j| {
+        let (umin, umax) = (ep_syms[2 * j], ep_syms[2 * j + 1]);
+        LevelSpec::entry((umax - umin) as f64 * d_ep, cfg.batch)
+    }));
+    let use_mean_q = cfg.use_mean && n_mean > 0;
     if use_mean_q {
-        specs.push(LevelSpec::mean(
-            (abar_max - abar_min) as f64,
-            cfg.batch,
-            mean_cols.len(),
-        ));
+        specs.push(LevelSpec::mean((abar_max - abar_min) as f64, cfg.batch, n_mean));
     }
-    let levels = match cfg.q_fixed {
-        Some(q) => vec![q.max(2); specs.len()],
-        // mirrors the encoder exactly, including the degenerate-budget
-        // minimum-level fallback for the all-means plan
-        None => waterfill::solve(&specs, c_levels).unwrap_or_else(|| vec![2; specs.len()]),
-    };
+    match cfg.q_fixed {
+        Some(q) => {
+            dec_levels.clear();
+            dec_levels.resize(specs.len(), q.max(2));
+        }
+        None => {
+            // mirrors the encoder exactly, including the degenerate-budget
+            // minimum-level fallback for the all-means plan
+            if !waterfill::solve_into(specs, c_levels, cont, dec_levels) {
+                dec_levels.clear();
+                dec_levels.resize(specs.len(), 2);
+            }
+        }
+    }
 
-    let mut out = Matrix::zeros(cfg.batch, dhat);
+    out.rows = cfg.batch;
+    out.cols = dhat;
+    out.data.clear();
+    out.data.resize(cfg.batch * dhat, 0.0);
     // mean codes
     if use_mean_q {
-        let q0 = *levels.last().unwrap();
+        let q0 = *dec_levels.last().unwrap();
         let lo = abar_min as f64;
         let span = (abar_max - abar_min) as f64;
-        let syms = r.read_radix(mean_cols.len(), q0);
-        for (k, &c) in mean_cols.iter().enumerate() {
-            let v = dequant(syms[k], lo, span, q0);
+        r.read_radix_into(n_mean, q0, syms);
+        let mut k = 0usize;
+        for c in 0..dhat {
+            if is_two[c] {
+                continue;
+            }
+            let val = dequant(syms[k], lo, span, q0);
+            k += 1;
             for b in 0..cfg.batch {
-                *out.at_mut(b, c) = v;
+                out.data[b * dhat + c] = val;
             }
         }
     }
     // entry codes
-    for (j, &c) in two_stage.iter().enumerate() {
+    let mut j = 0usize;
+    for c in 0..dhat {
+        if !is_two[c] {
+            continue;
+        }
         let (umin, umax) = (ep_syms[2 * j], ep_syms[2 * j + 1]);
         let lo = a_min as f64 + umin as f64 * d_ep;
         let span = (umax - umin) as f64 * d_ep;
-        let qj = levels[j];
-        let syms = r.read_radix(cfg.batch, qj);
+        let qj = dec_levels[j];
+        j += 1;
+        r.read_radix_into(cfg.batch, qj, syms);
         for b in 0..cfg.batch {
-            *out.at_mut(b, c) = dequant(syms[b], lo, span, qj);
+            out.data[b * dhat + c] = dequant(syms[b], lo, span, qj);
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -781,5 +1096,52 @@ mod tests {
         use crate::bitio::radix_bits_per_symbol;
         // Q_ep = 200 packs 8 symbols/62 bits: 7.75 vs ideal 7.64 bits/symbol
         assert!((radix_bits_per_symbol(200) - (200f64).log2()).abs() < 0.15);
+    }
+
+    // ---- fusion oracles: the ColView path vs the materialized pipeline ----
+
+    #[test]
+    fn view_encode_matches_materialized_gather_scaled() {
+        // The fused encoder (stats + quantization off the scaled view) must
+        // be byte-identical to gather_cols_scaled + fwq_encode, which is the
+        // pre-fusion FWDP→FWQ pipeline.
+        let f = hetero(32, 96, 11);
+        let kept: Vec<usize> = (0..96).filter(|i| i % 3 != 0).collect();
+        let scale: Vec<f32> = kept.iter().map(|&i| 1.0 + (i % 5) as f32 * 0.21).collect();
+        for bpe in [0.2, 1.0, 4.0] {
+            let c = FwqConfig::paper_default(32, bpe * 32.0 * kept.len() as f64);
+            let ft = f.gather_cols_scaled(&kept, &scale);
+            let (bytes_ref, bits_ref, info_ref) = fwq_encode(&ft, &c);
+            let mut w = BitWriter::new();
+            let mut fs = FwqScratch::default();
+            let info = fwq_encode_view(&ColView::scaled(&f, &kept, &scale), &c, &mut w, &mut fs);
+            assert_eq!(w.bit_len(), bits_ref, "bpe={bpe}");
+            assert_eq!(w.into_bytes(), bytes_ref, "bpe={bpe}");
+            assert_eq!(info.m_star, info_ref.m_star, "bpe={bpe}");
+            assert_eq!(info.nominal_bits, info_ref.nominal_bits, "bpe={bpe}");
+            assert_eq!(info.q0, info_ref.q0, "bpe={bpe}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_byte_stable_across_varying_shapes() {
+        // one scratch across frames of different kept-set sizes: outputs must
+        // match fresh-scratch encodes (stale state must never leak through)
+        let f = hetero(16, 64, 12);
+        let mut fs = FwqScratch::default();
+        for round in 0..4usize {
+            let kept: Vec<usize> = (0..64).filter(|i| (i + round) % (2 + round) != 0).collect();
+            let c = FwqConfig::paper_default(16, 1.5 * 16.0 * kept.len() as f64);
+            let v = ColView::unscaled(&f, &kept);
+            let mut w = BitWriter::new();
+            fwq_encode_view(&v, &c, &mut w, &mut fs);
+            let reused = w.into_bytes();
+            let (fresh, _, _) = fwq_encode(&f.gather_cols(&kept), &c);
+            assert_eq!(reused, fresh, "round {round}");
+            // decode through the same scratch round-trips too
+            let mut out = Matrix::zeros(16, 0);
+            fwq_decode_into(&reused, &c, &mut fs, &mut out);
+            assert_eq!(out, fwq_decode(&fresh, &c), "round {round}");
+        }
     }
 }

@@ -1,0 +1,200 @@
+//! Session-owned scratch arena for the wire hot path.
+//!
+//! Every codec session (PR 4 made codecs per-link sessions) may own a
+//! [`WireScratch`]: pools of byte/float/index buffers plus the structured
+//! per-step state (dropout plan, FWQ scratch, decode staging). Encode and
+//! decode take buffers from the pools; the protocol hands finished outputs
+//! back through [`crate::compression::Codec::reclaim`], so after a warm-up
+//! step the steady-state encode/decode loop performs **zero heap
+//! allocations** (verified by the `alloc-count` counting-allocator harness
+//! in `bench_wire` and `integration_codecs`).
+//!
+//! Lifetime rules for codec authors:
+//! * `take_*` returns an empty buffer with whatever capacity past rounds
+//!   established; fill it and let it escape inside the `EncodedUplink` /
+//!   `Frame` / `DecodedUplink` you return.
+//! * When the caller is done with an output it calls `Codec::reclaim`,
+//!   which routes the buffers back here via [`WireScratch::reclaim`].
+//!   Unreturned buffers are simply dropped — reclaim is an optimization,
+//!   never a correctness requirement.
+//! * Buffers whose size tracks the kept set (which fluctuates round to
+//!   round) must be `reserve`d to their D̄-derived upper bound, not their
+//!   current need, or a post-warm-up high-water mark reallocates.
+
+use crate::compression::codec::{GradMask, Reclaim};
+use crate::compression::dropout::DropoutPlan;
+use crate::compression::quant::FwqScratch;
+use crate::tensor::Matrix;
+
+/// Cap on pooled buffers per kind — enough for every in-flight output of a
+/// protocol step (frame, reconstruction, mask, decode) with headroom, small
+/// enough that a misbehaving caller can't grow the pool without bound.
+const POOL_CAP: usize = 16;
+
+#[derive(Debug, Default)]
+pub struct WireScratch {
+    bytes_pool: Vec<Vec<u8>>,
+    f32_pool: Vec<Vec<f32>>,
+    usize_pool: Vec<Vec<usize>>,
+    /// session-wide high-water capacity bounds: pooled buffers cycle through
+    /// roles of different sizes, so every `take_*` pre-reserves to the
+    /// LARGEST bound any role has declared — a buffer can then never hit a
+    /// fresh high-water mark (and realloc) after warm-up
+    bytes_bound: usize,
+    f32_bound: usize,
+    usize_bound: usize,
+    /// per-step dropout plan (FWDP) — reused across rounds
+    pub plan: DropoutPlan,
+    /// FWQ encoder/decoder scratch (stats, candidate plans, symbol staging)
+    pub fwq: FwqScratch,
+    /// decode staging: the B×D̂ matrix reconstructed from a frame before it
+    /// is scattered back to B×D̄ (the `g_hat`/`f_hat` staging)
+    pub stage: Matrix,
+    /// blob staging for `read_blob_into`
+    pub blob: Vec<u8>,
+    /// all-zero σ fallback for codecs whose dropout ignores the statistics
+    /// (the worker passes `stats = None` when `needs_sigma` is false)
+    pub sigma_zeros: Vec<f32>,
+}
+
+impl WireScratch {
+    pub fn new() -> WireScratch {
+        WireScratch::default()
+    }
+
+    /// Raise the session-wide byte-buffer capacity bound (callers pass the
+    /// worst-case frame size their role can produce, not this round's need).
+    pub fn note_bytes_bound(&mut self, cap: usize) {
+        self.bytes_bound = self.bytes_bound.max(cap);
+    }
+
+    /// An empty byte buffer (capacity reused from the pool when available),
+    /// pre-reserved to the session's high-water bound.
+    pub fn take_bytes(&mut self) -> Vec<u8> {
+        let mut b = self.bytes_pool.pop().unwrap_or_default();
+        b.reserve(self.bytes_bound);
+        b
+    }
+
+    pub fn give_bytes(&mut self, mut b: Vec<u8>) {
+        if self.bytes_pool.len() < POOL_CAP {
+            b.clear();
+            self.bytes_pool.push(b);
+        }
+    }
+
+    /// An empty f32 buffer (capacity reused from the pool when available),
+    /// pre-reserved to the session's high-water bound.
+    pub fn take_f32(&mut self) -> Vec<f32> {
+        let mut v = self.f32_pool.pop().unwrap_or_default();
+        v.reserve(self.f32_bound);
+        v
+    }
+
+    pub fn give_f32(&mut self, mut v: Vec<f32>) {
+        if self.f32_pool.len() < POOL_CAP {
+            v.clear();
+            self.f32_pool.push(v);
+        }
+    }
+
+    /// An empty index buffer (capacity reused from the pool when available),
+    /// pre-reserved to the session's high-water bound.
+    pub fn take_usize(&mut self) -> Vec<usize> {
+        let mut v = self.usize_pool.pop().unwrap_or_default();
+        v.reserve(self.usize_bound);
+        v
+    }
+
+    /// Raise the session-wide index-buffer capacity bound.
+    pub fn note_usize_bound(&mut self, cap: usize) {
+        self.usize_bound = self.usize_bound.max(cap);
+    }
+
+    pub fn give_usize(&mut self, mut v: Vec<usize>) {
+        if self.usize_pool.len() < POOL_CAP {
+            v.clear();
+            self.usize_pool.push(v);
+        }
+    }
+
+    /// A zeroed `rows × cols` matrix backed by a pooled buffer.
+    pub fn take_matrix(&mut self, rows: usize, cols: usize) -> Matrix {
+        self.f32_bound = self.f32_bound.max(rows * cols);
+        let mut data = self.take_f32();
+        data.resize(rows * cols, 0.0);
+        Matrix { rows, cols, data }
+    }
+
+    pub fn give_matrix(&mut self, m: Matrix) {
+        self.give_f32(m.data);
+    }
+
+    /// Disassemble a finished protocol output into the pools. This is what
+    /// [`crate::compression::Codec::reclaim`] forwards to for arena-backed
+    /// sessions.
+    pub fn reclaim(&mut self, buffers: Reclaim) {
+        match buffers {
+            Reclaim::Uplink(enc) => {
+                self.give_bytes(enc.frame.payload);
+                self.give_matrix(enc.f_hat);
+                if let GradMask::Columns { kept, scale } = enc.mask {
+                    self.give_usize(kept);
+                    self.give_f32(scale);
+                }
+            }
+            Reclaim::Downlink(dn) => {
+                self.give_bytes(dn.frame.payload);
+                self.give_matrix(dn.g_hat);
+            }
+            Reclaim::Decoded(dec) => {
+                self.give_matrix(dec.f_hat);
+                self.give_usize(dec.kept);
+            }
+            Reclaim::Frame(f) => {
+                self.give_bytes(f.payload);
+            }
+            Reclaim::Grad(m) => {
+                self.give_matrix(m);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pools_recycle_capacity() {
+        let mut ws = WireScratch::new();
+        let mut b = ws.take_bytes();
+        b.extend_from_slice(&[1, 2, 3, 4]);
+        let cap = b.capacity();
+        ws.give_bytes(b);
+        let b2 = ws.take_bytes();
+        assert!(b2.is_empty());
+        assert_eq!(b2.capacity(), cap, "capacity must survive the pool");
+    }
+
+    #[test]
+    fn take_matrix_is_zeroed_after_reuse() {
+        let mut ws = WireScratch::new();
+        let mut m = ws.take_matrix(2, 3);
+        m.data.iter_mut().for_each(|v| *v = 7.0);
+        ws.give_matrix(m);
+        let m2 = ws.take_matrix(3, 2);
+        assert_eq!((m2.rows, m2.cols), (3, 2));
+        assert!(m2.data.iter().all(|&v| v == 0.0), "pooled matrix must re-zero");
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let mut ws = WireScratch::new();
+        for _ in 0..100 {
+            let b = Vec::with_capacity(8);
+            ws.give_bytes(b);
+        }
+        assert!(ws.bytes_pool.len() <= POOL_CAP);
+    }
+}

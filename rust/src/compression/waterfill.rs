@@ -119,16 +119,38 @@ fn total_bits(specs: &[LevelSpec], nu: f64) -> f64 {
 /// greedy redistribution. Returns integer levels (aligned with `specs`) or
 /// None when even all-minimum levels (Q=2) exceed the budget.
 pub fn solve(specs: &[LevelSpec], c_target: f64) -> Option<Vec<u64>> {
+    let mut cont = Vec::new();
+    let mut out = Vec::new();
+    if solve_into(specs, c_target, &mut cont, &mut out) {
+        Some(out)
+    } else {
+        None
+    }
+}
+
+/// Allocation-reusing form of [`solve`]: `cont` is the continuous-level
+/// staging buffer and `out` receives the integer levels (both cleared
+/// first). Returns false when even all-minimum levels exceed the budget.
+/// This is the hot-path entry — the FWQ candidate scan calls it once per
+/// candidate M with buffers owned by the encoder's scratch arena.
+pub fn solve_into(
+    specs: &[LevelSpec],
+    c_target: f64,
+    cont: &mut Vec<f64>,
+    out: &mut Vec<u64>,
+) -> bool {
+    out.clear();
     if specs.is_empty() {
-        return Some(Vec::new());
+        return true;
     }
     let min_bits: f64 = specs.iter().map(|s| s.bit_weight).sum(); // all Q=2
     if min_bits > c_target + 1e-9 {
-        return None;
+        return false;
     }
     // Degenerate: all ranges zero -> minimum levels everywhere.
     if specs.iter().all(|s| s.a_tilde <= 0.0) {
-        return Some(vec![2; specs.len()]);
+        out.resize(specs.len(), 2);
+        return true;
     }
 
     // Bisection bounds: bits(ν) is non-increasing. Bracket from the data:
@@ -141,7 +163,10 @@ pub fn solve(specs: &[LevelSpec], c_target: f64) -> Option<Vec<u64>> {
     let qmax_bits: f64 = specs.iter().map(|s| s.bit_weight * Q_MAX.log2()).sum();
     if qmax_bits <= c_target {
         // even the most generous allocation fits: everything at Q_MAX
-        return Some(round_and_redistribute(specs, &vec![Q_MAX; specs.len()], c_target));
+        cont.clear();
+        cont.resize(specs.len(), Q_MAX);
+        round_and_redistribute_into(specs, cont, c_target, out);
+        return true;
     }
     let u_max = specs
         .iter()
@@ -166,18 +191,18 @@ pub fn solve(specs: &[LevelSpec], c_target: f64) -> Option<Vec<u64>> {
         }
     }
     let nu = hi;
-    let cont: Vec<f64> = specs.iter().map(|s| level_at(s, nu)).collect();
-    Some(round_and_redistribute(specs, &cont, c_target))
+    cont.clear();
+    cont.extend(specs.iter().map(|s| level_at(s, nu)));
+    round_and_redistribute_into(specs, cont, c_target, out);
+    true
 }
 
 /// Floor the continuous levels to integers (>= 2), then greedily spend the
 /// residual bit budget on the increments with the best error-reduction /
 /// bit-cost ratio — Chow-style bit reuse [48].
-fn round_and_redistribute(specs: &[LevelSpec], cont: &[f64], c_target: f64) -> Vec<u64> {
-    let mut q: Vec<u64> = cont
-        .iter()
-        .map(|&c| (c.floor() as u64).clamp(2, Q_MAX as u64))
-        .collect();
+fn round_and_redistribute_into(specs: &[LevelSpec], cont: &[f64], c_target: f64, q: &mut Vec<u64>) {
+    q.clear();
+    q.extend(cont.iter().map(|&c| (c.floor() as u64).clamp(2, Q_MAX as u64)));
     let bits = |q: &[u64]| -> f64 {
         specs
             .iter()
@@ -185,7 +210,7 @@ fn round_and_redistribute(specs: &[LevelSpec], cont: &[f64], c_target: f64) -> V
             .map(|(s, &qi)| s.bit_weight * (qi as f64).log2())
             .sum()
     };
-    let mut used = bits(&q);
+    let mut used = bits(q);
     // Greedy improvement: each step, the +1-level move with the best
     // Δerror/Δbits that still fits. Flooring loses < 1 level per quantizer,
     // so a handful of rounds recovers the residual budget; the step cap
@@ -218,7 +243,6 @@ fn round_and_redistribute(specs: &[LevelSpec], cont: &[f64], c_target: f64) -> V
         }
     }
     let _ = used;
-    q
 }
 
 /// Objective f(Q_0..Q_M) of (P) for given integer levels (eq. 22, without the

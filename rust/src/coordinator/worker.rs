@@ -16,7 +16,7 @@
 
 use std::time::Instant;
 
-use crate::compression::{Codec, CodecParams, GradMask, SigmaStats};
+use crate::compression::{Codec, CodecParams, EncodedDownlink, GradMask, Reclaim, SigmaStats};
 use crate::coordinator::metrics::StepRecord;
 use crate::coordinator::server::ParameterServer;
 use crate::data::{Dataset, MiniBatchLoader};
@@ -153,7 +153,7 @@ impl DeviceWorker {
 
         // 6. downlink decode + chain-rule scale δ_j/(1-p_j), device backward
         //    (eq. 7 backward path); the PS-held optimizer applies the update
-        let mut g_hat = dn.g_hat;
+        let EncodedDownlink { frame: dn_frame, mut g_hat, nominal_bits: down_nominal } = dn;
         if let GradMask::Columns { kept, scale } = &enc.mask {
             g_hat.scale_cols(kept, scale);
         }
@@ -170,13 +170,18 @@ impl DeviceWorker {
             loss: out.loss,
             train_acc: out.correct / self.batch as f32,
             up_bits: enc.frame.payload_bits,
-            down_bits: dn.frame.payload_bits,
+            down_bits: dn_frame.payload_bits,
             up_nominal: enc.nominal_bits,
-            down_nominal: dn.nominal_bits,
+            down_nominal,
             step_s: t_step.elapsed().as_secs_f64(),
             // per-step execution time spans both halves, like the monolith's
             exec_s: device_exec_s + server_dt,
         };
+        // hand the round's buffers back to the codec session — arena-backed
+        // codecs reuse them next step (steady-state zero allocation)
+        self.codec.reclaim(Reclaim::Frame(dn_frame));
+        self.codec.reclaim(Reclaim::Grad(g_hat));
+        self.codec.reclaim(Reclaim::Uplink(enc));
         server.write_metrics(&rec.to_json());
         Ok(rec)
     }

@@ -39,7 +39,7 @@ fn block_rows(rows: usize, work: usize) -> usize {
     rb.clamp(1, 32.min(rows.max(1)))
 }
 
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Matrix {
     pub rows: usize,
     pub cols: usize,
@@ -157,15 +157,25 @@ impl Matrix {
     /// Inverse of `gather_cols`: place our columns at positions `idx` of a
     /// `rows x full_cols` zero matrix.
     pub fn scatter_cols(&self, idx: &[usize], full_cols: usize) -> Matrix {
-        assert_eq!(idx.len(), self.cols);
         let mut out = Matrix::zeros(self.rows, full_cols);
+        self.scatter_cols_into(idx, &mut out);
+        out
+    }
+
+    /// `scatter_cols` into a caller-owned (pre-zeroed) matrix — the wire hot
+    /// path reuses a scratch-arena matrix instead of allocating per step.
+    /// Positions outside `idx` are left untouched.
+    pub fn scatter_cols_into(&self, idx: &[usize], out: &mut Matrix) {
+        assert_eq!(idx.len(), self.cols);
+        assert_eq!(out.rows, self.rows, "scatter_cols_into: row mismatch");
+        let full_cols = out.cols;
         for r in 0..self.rows {
             let src = self.row(r);
+            let dst = &mut out.data[r * full_cols..(r + 1) * full_cols];
             for (j, &c) in idx.iter().enumerate() {
-                out.data[r * full_cols + c] = src[j];
+                dst[c] = src[j];
             }
         }
-        out
     }
 
     /// Dense product `self · other` (self: n×m, other: m×p → n×p).

@@ -1,0 +1,65 @@
+//! Feature-gated counting global allocator (`--features alloc-count`).
+//!
+//! Wraps the system allocator and counts every allocation (alloc,
+//! alloc_zeroed, realloc — frees are not counted) in a relaxed atomic. The
+//! wire-path benches and the steady-state integration test use the delta of
+//! [`allocations`] across a measured window to assert that warm codec
+//! sessions perform **zero** heap allocations per encode/decode step.
+//!
+//! The counter is process-global: measure on a single thread with the
+//! parallel pool pinned to one worker (`par::set_threads(1)`), or
+//! concurrent work pollutes the count.
+
+#[cfg(feature = "alloc-count")]
+mod imp {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+    pub struct CountingAlloc;
+
+    // SAFETY: defers to the system allocator for every operation; the
+    // counter bump has no effect on layout or pointer validity.
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.alloc(layout)
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.alloc_zeroed(layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.realloc(ptr, layout, new_size)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+    }
+
+    #[global_allocator]
+    static GLOBAL: CountingAlloc = CountingAlloc;
+
+    pub fn count() -> u64 {
+        ALLOCS.load(Ordering::Relaxed)
+    }
+}
+
+/// Total heap allocations performed by this process so far, or `None` when
+/// the crate was built without the `alloc-count` feature (callers skip
+/// their assertions in that case).
+pub fn allocations() -> Option<u64> {
+    #[cfg(feature = "alloc-count")]
+    {
+        Some(imp::count())
+    }
+    #[cfg(not(feature = "alloc-count"))]
+    {
+        None
+    }
+}

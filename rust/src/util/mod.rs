@@ -1,14 +1,24 @@
 //! Dependency-free substrates: PRNG, JSON, CLI parsing, logging, errors,
 //! and the scoped-thread parallel runtime (`par`).
 
+pub mod alloc_count;
 pub mod cli;
 pub mod error;
 pub mod json;
 pub mod logging;
 pub mod par;
 pub mod rng;
+pub mod sort;
 
 pub use cli::Args;
 pub use error::{Context, Error, Result};
 pub use json::Json;
 pub use rng::Rng;
+
+/// Grow `v`'s capacity to at least `cap` **total** elements. `Vec::reserve`
+/// is relative to the current length, so calling it on a scratch buffer
+/// that still holds last round's contents over-allocates toward `len +
+/// cap`; this pins capacity at the intended absolute bound instead.
+pub fn reserve_total<T>(v: &mut Vec<T>, cap: usize) {
+    v.reserve(cap.saturating_sub(v.len()));
+}

@@ -1,0 +1,122 @@
+//! Allocation-free stable sorting for the wire hot path.
+//!
+//! `slice::sort_by` (std's stable sort) allocates its merge buffer on every
+//! call, which would break the steady-state zero-allocation invariant of
+//! the codec sessions. [`stable_sort_desc_by`] is a bottom-up merge sort
+//! over an index slice with a caller-owned auxiliary buffer; being a stable
+//! sort under the same comparator, it produces **exactly** the permutation
+//! `idx.sort_by(|&x, &y| key[y].partial_cmp(&key[x]).unwrap_or(Equal))`
+//! would — the FWQ column order (and therefore the bitstream) is unchanged.
+
+use std::cmp::Ordering;
+
+/// Stable descending sort of `idx` by `key[i]` (ties keep their input
+/// order), using `aux` as merge scratch. `aux` is resized to `idx.len()`;
+/// with reserved capacity the call performs zero heap allocations.
+pub fn stable_sort_desc_by(idx: &mut [usize], aux: &mut Vec<usize>, key: &[f32]) {
+    let n = idx.len();
+    if n < 2 {
+        return;
+    }
+    aux.clear();
+    aux.resize(n, 0);
+    let mut width = 1usize;
+    let mut in_idx = true; // which buffer currently holds the runs
+    while width < n {
+        if in_idx {
+            merge_pass(idx, aux, width, key);
+        } else {
+            merge_pass(aux, idx, width, key);
+        }
+        in_idx = !in_idx;
+        width *= 2;
+    }
+    if !in_idx {
+        idx.copy_from_slice(aux);
+    }
+}
+
+/// One bottom-up pass: merge adjacent sorted runs of `width` from `src`
+/// into `dst`. Takes from the left run on ties (stability) and on
+/// incomparable keys (matching `partial_cmp(..).unwrap_or(Equal)`).
+fn merge_pass(src: &[usize], dst: &mut [usize], width: usize, key: &[f32]) {
+    let n = src.len();
+    let mut i = 0;
+    while i < n {
+        let mid = (i + width).min(n);
+        let end = (i + 2 * width).min(n);
+        let (mut a, mut b, mut k) = (i, mid, i);
+        while a < mid && b < end {
+            // descending: the right element goes first only when its key is
+            // strictly greater
+            let take_right =
+                matches!(key[src[b]].partial_cmp(&key[src[a]]), Some(Ordering::Greater));
+            if take_right {
+                dst[k] = src[b];
+                b += 1;
+            } else {
+                dst[k] = src[a];
+                a += 1;
+            }
+            k += 1;
+        }
+        while a < mid {
+            dst[k] = src[a];
+            a += 1;
+            k += 1;
+        }
+        while b < end {
+            dst[k] = src[b];
+            b += 1;
+            k += 1;
+        }
+        i = end;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn std_sorted(key: &[f32]) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..key.len()).collect();
+        idx.sort_by(|&x, &y| key[y].partial_cmp(&key[x]).unwrap_or(Ordering::Equal));
+        idx
+    }
+
+    #[test]
+    fn matches_std_stable_sort_including_ties() {
+        let mut rng = Rng::new(61);
+        let mut aux = Vec::new();
+        for n in [0usize, 1, 2, 3, 7, 20, 64, 127, 1000] {
+            // coarse quantization forces many ties (the zero-range columns
+            // of real feature matrices)
+            let key: Vec<f32> = (0..n).map(|_| (rng.gen_range(5) as f32) * 0.5).collect();
+            let mut idx: Vec<usize> = (0..n).collect();
+            stable_sort_desc_by(&mut idx, &mut aux, &key);
+            assert_eq!(idx, std_sorted(&key), "n={n}");
+        }
+    }
+
+    #[test]
+    fn all_equal_keys_keep_input_order() {
+        let key = vec![1.25f32; 33];
+        let mut idx: Vec<usize> = (0..33).collect();
+        let mut aux = Vec::new();
+        stable_sort_desc_by(&mut idx, &mut aux, &key);
+        assert_eq!(idx, (0..33).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn reused_aux_is_allocation_compatible() {
+        // same aux across differently-sized sorts: correctness must hold
+        let mut aux = Vec::new();
+        for n in [50usize, 10, 50, 3] {
+            let key: Vec<f32> = (0..n).map(|i| ((i * 7) % 13) as f32).collect();
+            let mut idx: Vec<usize> = (0..n).collect();
+            stable_sort_desc_by(&mut idx, &mut aux, &key);
+            assert_eq!(idx, std_sorted(&key), "n={n}");
+        }
+    }
+}

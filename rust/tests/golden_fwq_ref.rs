@@ -1,0 +1,333 @@
+//! Pre-PR-5 FWQ reference oracle.
+//!
+//! The wire rewrite replaced both layers under the FWQ frame — the bitio
+//! kernels AND the planner/emitter (`fwq_encode_view` over `ColView` +
+//! `FwqScratch`). The in-tree "legacy" parity tests route through the same
+//! rewritten code on both sides, so they cannot catch a semantics change
+//! that moves both sides equally. This file carries a **verbatim port of
+//! the pre-rewrite pipeline** — `column_stats` → std stable `sort_by` →
+//! per-candidate `plan_for_m` with the lazy early-stop scan →
+//! allocate-per-column emission, serialized through the per-bit
+//! `BitWriterRef` — and locks the production `fwq_encode` byte-identical
+//! to it across a battery of shapes, budgets and degenerate configs.
+
+use splitfc::bitio::BitWriterRef;
+use splitfc::compression::waterfill::{self, LevelSpec};
+use splitfc::compression::{fwq_decode, fwq_encode, FwqConfig};
+use splitfc::tensor::{column_stats, Matrix};
+use splitfc::testkit::hetero_matrix;
+
+const HEADER_BITS: f64 = 32.0 + 32.0 + 4.0 * 32.0;
+
+fn delta_ep(a_min: f32, a_max: f32, q_ep: u64) -> f64 {
+    if q_ep <= 1 || a_max <= a_min {
+        return 0.0;
+    }
+    (a_max as f64 - a_min as f64) / (q_ep as f64 - 1.0)
+}
+
+fn ep_radix(q_ep: u64) -> u64 {
+    q_ep.max(2)
+}
+
+fn lg_ep(q_ep: u64) -> f64 {
+    (ep_radix(q_ep) as f64).log2()
+}
+
+fn quantize_endpoints(lo: f32, hi: f32, a_min: f32, d_ep: f64, q_ep: u64) -> (u64, u64) {
+    if d_ep <= 0.0 {
+        return (0, 0);
+    }
+    let umin = (((lo as f64 - a_min as f64) / d_ep).floor() as i64).clamp(0, q_ep as i64 - 1);
+    let umax = (((hi as f64 - a_min as f64) / d_ep).ceil() as i64).clamp(0, q_ep as i64 - 1);
+    (umin as u64, umax.max(umin) as u64)
+}
+
+#[inline]
+fn quant_code(v: f64, lo: f64, span: f64, q: u64) -> u64 {
+    if span <= 0.0 || q < 2 {
+        return 0;
+    }
+    let t = ((v - lo) / span * (q as f64 - 1.0)).round();
+    (t.max(0.0) as u64).min(q - 1)
+}
+
+struct Plan {
+    m: usize,
+    two_stage: Vec<usize>,
+    mean_cols: Vec<usize>,
+    a_min: f32,
+    a_max: f32,
+    abar_min: f32,
+    abar_max: f32,
+    ep_codes: Vec<(u64, u64)>,
+    levels: Vec<u64>,
+    objective: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn plan_for_m(
+    cfg: &FwqConfig,
+    order: &[usize],
+    mins: &[f32],
+    maxs: &[f32],
+    means: &[f32],
+    m: usize,
+) -> Option<Plan> {
+    let dhat = order.len();
+    let b = cfg.batch as f64;
+    let mut two_stage: Vec<usize> = order[..m].to_vec();
+    let mut mean_cols: Vec<usize> = order[m..].to_vec();
+    two_stage.sort_unstable();
+    mean_cols.sort_unstable();
+
+    let (mut a_min, mut a_max) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &c in &two_stage {
+        a_min = a_min.min(mins[c]);
+        a_max = a_max.max(maxs[c]);
+    }
+    if two_stage.is_empty() {
+        a_min = 0.0;
+        a_max = 0.0;
+    }
+    let d_ep = delta_ep(a_min, a_max, cfg.q_ep);
+    let ep_codes: Vec<(u64, u64)> = two_stage
+        .iter()
+        .map(|&c| quantize_endpoints(mins[c], maxs[c], a_min, d_ep, cfg.q_ep))
+        .collect();
+
+    let (mut abar_min, mut abar_max) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &c in &mean_cols {
+        abar_min = abar_min.min(means[c]);
+        abar_max = abar_max.max(means[c]);
+    }
+    if mean_cols.is_empty() {
+        abar_min = 0.0;
+        abar_max = 0.0;
+    }
+
+    let c_const = 2.0 * m as f64 * lg_ep(cfg.q_ep) + dhat as f64 + HEADER_BITS;
+    let c_levels = cfg.c_ava - c_const;
+
+    let mut specs: Vec<LevelSpec> = ep_codes
+        .iter()
+        .map(|&(umin, umax)| LevelSpec::entry((umax - umin) as f64 * d_ep, cfg.batch))
+        .collect();
+    let use_mean_q = cfg.use_mean && !mean_cols.is_empty();
+    if use_mean_q {
+        specs.push(LevelSpec::mean((abar_max - abar_min) as f64, cfg.batch, mean_cols.len()));
+    }
+
+    let levels = match cfg.q_fixed {
+        Some(q) => vec![q.max(2); specs.len()],
+        None => match waterfill::solve(&specs, c_levels) {
+            Some(l) => l,
+            None if m == 0 => vec![2; specs.len()],
+            None => return None,
+        },
+    };
+
+    let mut obj = waterfill::objective(&specs, &levels);
+    if cfg.use_mean {
+        for &c in &mean_cols {
+            let r = (maxs[c] - mins[c]) as f64;
+            obj += r * r * b / 2.0;
+        }
+    } else {
+        for &c in &mean_cols {
+            let r = (maxs[c] - mins[c]).max(means[c].abs()) as f64;
+            obj += r * r * b;
+        }
+    }
+
+    Some(Plan {
+        m,
+        two_stage,
+        mean_cols,
+        a_min,
+        a_max,
+        abar_min,
+        abar_max,
+        ep_codes,
+        levels,
+        objective: obj,
+    })
+}
+
+fn d_max(cfg: &FwqConfig, dhat: usize) -> usize {
+    let lg = lg_ep(cfg.q_ep);
+    match cfg.q_fixed {
+        None => {
+            let num = cfg.c_ava - 2.0 * dhat as f64 - HEADER_BITS;
+            let den = cfg.batch as f64 + 2.0 * lg - 1.0;
+            ((num / den).floor().max(0.0) as usize).min(dhat)
+        }
+        Some(q) => {
+            let lq = (q.max(2) as f64).log2();
+            let num = cfg.c_ava - dhat as f64 - HEADER_BITS - dhat as f64 * lq;
+            let den = cfg.batch as f64 * lq + 2.0 * lg - lq;
+            ((num / den).floor().max(0.0) as usize).min(dhat)
+        }
+    }
+}
+
+fn search_m(cfg: &FwqConfig, order: &[usize], mins: &[f32], maxs: &[f32], means: &[f32]) -> Plan {
+    let dhat = order.len();
+    let dmax = d_max(cfg, dhat);
+    let mut candidates: Vec<usize> = if cfg.use_mean {
+        (1..=cfg.n_candidates)
+            .map(|n| (dmax * n + cfg.n_candidates - 1) / cfg.n_candidates)
+            .collect()
+    } else {
+        vec![dmax]
+    };
+    candidates.push(0);
+    candidates.sort_unstable();
+    candidates.dedup();
+    candidates.reverse();
+
+    let mut best: Option<Plan> = None;
+    let mut prev_obj = f64::INFINITY;
+    for &m in &candidates {
+        let Some(p) = plan_for_m(cfg, order, mins, maxs, means, m) else { continue };
+        let obj = p.objective;
+        if best.as_ref().map(|b| obj < b.objective).unwrap_or(true) {
+            best = Some(p);
+        }
+        if obj > prev_obj {
+            break;
+        }
+        prev_obj = obj;
+    }
+    best.expect("candidate scan includes M = 0, which always constructs")
+}
+
+/// The pre-PR pipeline, stats → stable sort_by → plan → allocate-per-column
+/// emission through the per-bit reference writer.
+fn fwq_encode_ref(a: &Matrix, cfg: &FwqConfig) -> (Vec<u8>, u64) {
+    let dhat = a.cols;
+    assert_eq!(a.rows, cfg.batch);
+    if dhat == 0 {
+        return (Vec::new(), 0);
+    }
+    let st = column_stats(a);
+    let ranges: Vec<f32> = st.ranges();
+    let mut order: Vec<usize> = (0..dhat).collect();
+    order.sort_by(|&x, &y| ranges[y].partial_cmp(&ranges[x]).unwrap_or(std::cmp::Ordering::Equal));
+
+    let plan = search_m(cfg, &order, &st.min, &st.max, &st.mean);
+
+    let mut w = BitWriterRef::new();
+    w.write_u32(dhat as u32);
+    w.write_u32(plan.m as u32);
+    w.write_f32(plan.a_min);
+    w.write_f32(plan.a_max);
+    w.write_f32(plan.abar_min);
+    w.write_f32(plan.abar_max);
+    let mut is_two = vec![false; dhat];
+    for &c in &plan.two_stage {
+        is_two[c] = true;
+    }
+    for &f in &is_two {
+        w.write_bits(f as u64, 1);
+    }
+    let mut ep_syms = Vec::with_capacity(2 * plan.m);
+    for &(umin, umax) in &plan.ep_codes {
+        ep_syms.push(umin);
+        ep_syms.push(umax);
+    }
+    w.write_radix(&ep_syms, ep_radix(cfg.q_ep));
+
+    let d_ep = delta_ep(plan.a_min, plan.a_max, cfg.q_ep);
+    let use_mean_q = cfg.use_mean && !plan.mean_cols.is_empty();
+    let q0 = if use_mean_q { Some(*plan.levels.last().unwrap()) } else { None };
+
+    if let Some(q0v) = q0 {
+        let lo = plan.abar_min as f64;
+        let span = (plan.abar_max - plan.abar_min) as f64;
+        let syms: Vec<u64> = plan
+            .mean_cols
+            .iter()
+            .map(|&c| quant_code(st.mean[c] as f64, lo, span, q0v))
+            .collect();
+        w.write_radix(&syms, q0v);
+    }
+    for (j, &c) in plan.two_stage.iter().enumerate() {
+        let (umin, umax) = plan.ep_codes[j];
+        let lo = plan.a_min as f64 + umin as f64 * d_ep;
+        let span = (umax - umin) as f64 * d_ep;
+        let qj = plan.levels[j];
+        let syms: Vec<u64> = a.col_iter(c).map(|v| quant_code(v as f64, lo, span, qj)).collect();
+        w.write_radix(&syms, qj);
+    }
+    let bits = w.bit_len();
+    (w.into_bytes(), bits)
+}
+
+fn battery() -> Vec<(Matrix, f64)> {
+    let mut out = Vec::new();
+    for (b, d, seed) in [(8usize, 16usize, 1u64), (16, 64, 2), (32, 96, 3), (64, 200, 4)] {
+        for bpe in [0.2f64, 1.0, 4.0] {
+            out.push((hetero_matrix(b, d, seed), bpe));
+        }
+    }
+    // degenerate: constant matrix (all ranges tie at zero — the stable-sort
+    // tie-handling case) and a half-constant one
+    out.push((Matrix::from_fn(8, 24, |_, _| 3.25), 1.0));
+    out.push((
+        Matrix::from_fn(16, 20, |r, c| if c % 2 == 0 { 2.5 } else { (r as f32) * 0.1 - 0.8 }),
+        2.0,
+    ));
+    out
+}
+
+#[test]
+fn new_fwq_pipeline_is_byte_identical_to_pre_rewrite_reference() {
+    splitfc::util::par::set_threads(1);
+    for (a, bpe) in battery() {
+        let base = FwqConfig::paper_default(a.rows, bpe * (a.rows * a.cols) as f64);
+        let mut variants = vec![base.clone()];
+        let mut v = base.clone();
+        v.use_mean = false;
+        variants.push(v);
+        let mut v = base.clone();
+        v.q_fixed = Some(8);
+        variants.push(v);
+        let mut v = base.clone();
+        v.q_ep = 1; // degenerate shared endpoint quantizer
+        variants.push(v);
+        for cfg in variants {
+            let (bytes_new, bits_new, _) = fwq_encode(&a, &cfg);
+            let (bytes_ref, bits_ref) = fwq_encode_ref(&a, &cfg);
+            assert_eq!(
+                bits_new, bits_ref,
+                "bit length drifted: B={} D={} bpe={bpe} use_mean={} q_fixed={:?} q_ep={}",
+                a.rows, a.cols, cfg.use_mean, cfg.q_fixed, cfg.q_ep
+            );
+            assert_eq!(
+                bytes_new, bytes_ref,
+                "bitstream drifted from the pre-rewrite pipeline: B={} D={} bpe={bpe} \
+                 use_mean={} q_fixed={:?} q_ep={}",
+                a.rows, a.cols, cfg.use_mean, cfg.q_fixed, cfg.q_ep
+            );
+            // and the production decoder inverts the reference bytes
+            let dec = fwq_decode(&bytes_ref, &cfg);
+            assert_eq!((dec.rows, dec.cols), (a.rows, a.cols));
+        }
+    }
+    splitfc::util::par::set_threads(0);
+}
+
+#[test]
+fn threaded_encode_matches_reference_too() {
+    // the speculative parallel plan scan + threaded symbol fan-out must not
+    // drift from the reference either (byte-identity across thread counts
+    // is separately locked by prop_parallel; this pins it to the oracle)
+    let a = hetero_matrix(32, 512, 9);
+    let cfg = FwqConfig::paper_default(32, 0.5 * (32 * 512) as f64);
+    splitfc::util::par::set_threads(4);
+    let (bytes_new, _, _) = fwq_encode(&a, &cfg);
+    splitfc::util::par::set_threads(0);
+    let (bytes_ref, _) = fwq_encode_ref(&a, &cfg);
+    assert_eq!(bytes_new, bytes_ref);
+}

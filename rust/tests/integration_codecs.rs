@@ -380,3 +380,139 @@ fn out_of_core_codec_trains_end_to_end_via_scheme_flag() {
     let s = tr.run().unwrap();
     assert!(s.final_acc.is_finite());
 }
+
+// ---------------------------------------------------------------------------
+// Wire hot path (PR 5): scratch-arena reuse + steady-state zero allocation.
+// ---------------------------------------------------------------------------
+
+use splitfc::compression::Reclaim;
+use splitfc::util::alloc_count;
+use splitfc::util::par;
+
+/// One full protocol round through a codec session, returning every output
+/// to the session afterwards (the worker's reclaim discipline). Mirrors the
+/// worker exactly: σ statistics are passed only when the codec's capability
+/// report asks for them, so the `stats = None` fallback path (the one
+/// production hits for splitfc-rand / splitfc-quant-only) is the one gated.
+fn round_trip_step(
+    codec: &mut dyn Codec,
+    f: &Matrix,
+    g: &Matrix,
+    stats: &SigmaStats,
+    up: &CodecParams,
+    down: &CodecParams,
+    rng: &mut Rng,
+) {
+    let stats = if codec.requirements().needs_sigma { Some(stats) } else { None };
+    let enc = codec.encode_uplink(f, stats, up, rng).expect("encode_uplink");
+    let dec = codec.decode_uplink(&enc.frame, up).expect("decode_uplink");
+    let dn = codec.encode_downlink(g, &enc.mask, down).expect("encode_downlink");
+    let g_hat = codec.decode_downlink(&dn.frame, &enc.mask, down).expect("decode_downlink");
+    codec.reclaim(Reclaim::Decoded(dec));
+    codec.reclaim(Reclaim::Grad(g_hat));
+    codec.reclaim(Reclaim::Downlink(dn));
+    codec.reclaim(Reclaim::Uplink(enc));
+}
+
+/// Steady-state allocation gate: after a warm-up, N further protocol rounds
+/// through each registry codec are measured under the counting allocator
+/// (`--features alloc-count`; without the feature the loop still runs,
+/// exercising the reclaim paths, and the assertion is skipped). Arena-backed
+/// codecs (vanilla + every non-scalar splitfc row) must allocate **zero**
+/// times per step. Run it isolated (`-- --test-threads=1`): the counter is
+/// process-global.
+#[test]
+fn steady_state_codec_steps_are_allocation_free() {
+    // the parallel pool spawns scoped threads (which allocate); pin to one
+    // worker so the serial zero-allocation paths are the ones measured
+    par::set_threads(1);
+    let (f, stats, g) = fixtures();
+    let down = CodecParams::new(B, D, 2.0);
+    // codecs whose sessions are fully arena-backed; scalar-quantizer rows
+    // (pq/eq/nq), tops and fedlite keep their allocating inner algorithms
+    let zero_set = [
+        "vanilla",
+        "splitfc",
+        "splitfc-ad",
+        "splitfc-rand",
+        "splitfc-det",
+        "splitfc-quant-only",
+        "splitfc-no-mean",
+    ];
+    for name in registered_names() {
+        if name == "sign" {
+            continue; // out-of-core demo codec from the tests above
+        }
+        let bpe = if name == "vanilla" { 32.0 } else { 1.0 };
+        let up = CodecParams::new(B, D, bpe);
+        let spec = parse_scheme(&name, 8.0).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let mut codec = spec.build().unwrap_or_else(|e| panic!("{name}: {e}"));
+        let mut rng = Rng::new(71);
+        for _ in 0..4 {
+            round_trip_step(codec.as_mut(), &f, &g, &stats, &up, &down, &mut rng);
+        }
+        let before = alloc_count::allocations();
+        let steps = 6;
+        for _ in 0..steps {
+            round_trip_step(codec.as_mut(), &f, &g, &stats, &up, &down, &mut rng);
+        }
+        let after = alloc_count::allocations();
+        if let (Some(a), Some(b)) = (before, after) {
+            let per_step = (b - a) as f64 / steps as f64;
+            if zero_set.contains(&name.as_str()) {
+                assert_eq!(
+                    b - a,
+                    0,
+                    "{name}: {per_step} allocations/step in steady state (want 0)"
+                );
+            } else {
+                println!("{name}: {per_step} allocations/step (arena not required)");
+            }
+        }
+    }
+    par::set_threads(0);
+}
+
+/// Scratch reuse must never change bytes: the 1st and Nth encodes of the
+/// same input through ONE session (fresh RNG each round) are byte-identical,
+/// and both match a fresh session — for every registry codec.
+#[test]
+fn warm_session_frames_match_fresh_session_frames() {
+    let (f, stats, g) = fixtures();
+    let down = CodecParams::new(B, D, 2.0);
+    for name in registered_names() {
+        if name == "sign" {
+            continue;
+        }
+        let bpe = if name == "vanilla" { 32.0 } else { 1.0 };
+        let up = CodecParams::new(B, D, bpe);
+        let spec = parse_scheme(&name, 8.0).unwrap_or_else(|e| panic!("{name}: {e}"));
+        if spec.has("ef") {
+            continue; // EF sessions intentionally evolve across rounds
+        }
+        let mut warm = spec.build().unwrap();
+        let mut first = None;
+        for round in 0..5 {
+            let mut rng = Rng::new(29);
+            let enc = warm.encode_uplink(&f, Some(&stats), &up, &mut rng).unwrap();
+            let dn = warm.encode_downlink(&g, &enc.mask, &down).unwrap();
+            match &first {
+                None => first = Some((enc.frame.payload.clone(), dn.frame.payload.clone())),
+                Some((u0, d0)) => {
+                    assert_eq!(&enc.frame.payload, u0, "{name}: uplink drifted at round {round}");
+                    assert_eq!(&dn.frame.payload, d0, "{name}: downlink drifted at round {round}");
+                }
+            }
+            warm.reclaim(Reclaim::Downlink(dn));
+            warm.reclaim(Reclaim::Uplink(enc));
+        }
+        let mut fresh = spec.build().unwrap();
+        let mut rng = Rng::new(29);
+        let enc = fresh.encode_uplink(&f, Some(&stats), &up, &mut rng).unwrap();
+        assert_eq!(
+            Some(&enc.frame.payload),
+            first.as_ref().map(|(u, _)| u),
+            "{name}: warm session diverged from a fresh one"
+        );
+    }
+}

@@ -1,0 +1,210 @@
+//! Property tests for the word-level bitio kernels.
+//!
+//! The rewritten `BitWriter`/`BitReader` (64-bit accumulator, bulk byte
+//! paths) must be **byte-identical** to the original per-bit
+//! implementations, which survive as `BitWriterRef`/`BitReaderRef` oracles.
+//! Mixed op sequences (write_bits / write_radix / write_f32 / write_u32 /
+//! byte runs) are fuzzed against the oracle, and round trips are exercised
+//! at every alignment offset 0..8 so no fast path ever depends on luck.
+
+use splitfc::bitio::{BitReader, BitReaderRef, BitWriter, BitWriterRef};
+use splitfc::testkit::{assert_prop, ParamSpace};
+use splitfc::util::Rng;
+
+#[derive(Debug, Clone)]
+enum Op {
+    Bits(u64, u32),
+    F32(f32),
+    U32(u32),
+    Radix(Vec<u64>, u64),
+    Bytes(Vec<u8>),
+}
+
+fn random_ops(rng: &mut Rng, n_ops: usize) -> Vec<Op> {
+    (0..n_ops)
+        .map(|_| match rng.gen_range(5) {
+            0 => {
+                let nbits = 1 + rng.gen_range(64) as u32;
+                let v = rng.next_u64() & if nbits == 64 { u64::MAX } else { (1u64 << nbits) - 1 };
+                Op::Bits(v, nbits)
+            }
+            1 => Op::F32(rng.normal_f32(0.0, 100.0)),
+            2 => Op::U32(rng.next_u64() as u32),
+            3 => {
+                let q = 2 + rng.gen_range(999) as u64;
+                let n = rng.gen_range(50);
+                Op::Radix((0..n).map(|_| rng.next_u64() % q).collect(), q)
+            }
+            _ => {
+                let n = rng.gen_range(40);
+                Op::Bytes((0..n).map(|_| rng.next_u64() as u8).collect())
+            }
+        })
+        .collect()
+}
+
+fn apply_word(w: &mut BitWriter, op: &Op) {
+    match op {
+        Op::Bits(v, n) => w.write_bits(*v, *n),
+        Op::F32(v) => w.write_f32(*v),
+        Op::U32(v) => w.write_u32(*v),
+        Op::Radix(syms, q) => w.write_radix(syms, *q),
+        Op::Bytes(b) => w.write_bytes(b),
+    }
+}
+
+fn apply_ref(w: &mut BitWriterRef, op: &Op) {
+    match op {
+        Op::Bits(v, n) => w.write_bits(*v, *n),
+        Op::F32(v) => w.write_f32(*v),
+        Op::U32(v) => w.write_u32(*v),
+        Op::Radix(syms, q) => w.write_radix(syms, *q),
+        Op::Bytes(b) => w.write_bytes(b),
+    }
+}
+
+#[test]
+fn prop_word_writer_is_byte_identical_to_ref_oracle() {
+    // params: [n_ops, seed]
+    let space = ParamSpace::new(&[(1, 60), (0, 3000)]);
+    assert_prop("bitio_word_vs_ref", 53, 150, &space, |p| {
+        let (n_ops, seed) = (p[0], p[1] as u64);
+        let mut rng = Rng::new(seed ^ 0xB17B_17B1);
+        let ops = random_ops(&mut rng, n_ops);
+        let mut w = BitWriter::new();
+        let mut wr = BitWriterRef::new();
+        for op in &ops {
+            apply_word(&mut w, op);
+            apply_ref(&mut wr, op);
+        }
+        if w.bit_len() != wr.bit_len() {
+            return Err(format!("bit_len {} != ref {}", w.bit_len(), wr.bit_len()));
+        }
+        let bits = w.bit_len();
+        let a = w.into_bytes();
+        let b = wr.into_bytes();
+        if a != b {
+            return Err(format!("bytes differ after {} ops ({} bits)", ops.len(), bits));
+        }
+
+        // word reader and ref reader agree on the stream, op by op
+        let mut r = BitReader::with_bit_len(&a, bits);
+        let mut rr = BitReaderRef::with_bit_len(&a, bits);
+        for (i, op) in ops.iter().enumerate() {
+            match op {
+                Op::Bits(v, n) => {
+                    let got = r.try_read_bits(*n).map_err(|e| format!("op {i}: {e}"))?;
+                    let oracle = rr.try_read_bits(*n).map_err(|e| format!("op {i}: {e}"))?;
+                    if got != *v || oracle != *v {
+                        return Err(format!("op {i}: {got}/{oracle} != {v}"));
+                    }
+                }
+                Op::F32(v) => {
+                    if r.read_f32().to_bits() != v.to_bits()
+                        || rr.read_f32().to_bits() != v.to_bits()
+                    {
+                        return Err(format!("op {i}: f32 mismatch"));
+                    }
+                }
+                Op::U32(v) => {
+                    if r.read_u32() != *v || rr.read_u32() != *v {
+                        return Err(format!("op {i}: u32 mismatch"));
+                    }
+                }
+                Op::Radix(syms, q) => {
+                    let got = r.try_read_radix(syms.len(), *q).map_err(|e| e.to_string())?;
+                    let oracle = rr.try_read_radix(syms.len(), *q).map_err(|e| e.to_string())?;
+                    if &got != syms || &oracle != syms {
+                        return Err(format!("op {i}: radix mismatch q={q}"));
+                    }
+                }
+                Op::Bytes(bytes) => {
+                    let mut got = Vec::new();
+                    r.try_read_bytes_into(bytes.len(), &mut got)
+                        .map_err(|e| format!("op {i}: {e}"))?;
+                    let mut oracle = Vec::with_capacity(bytes.len());
+                    for _ in 0..bytes.len() {
+                        oracle.push(
+                            rr.try_read_bits(8).map_err(|e| format!("op {i}: {e}"))? as u8,
+                        );
+                    }
+                    if &got != bytes || &oracle != bytes {
+                        return Err(format!("op {i}: byte run mismatch"));
+                    }
+                }
+            }
+            if r.bits_consumed() != rr.bits_consumed() {
+                return Err(format!(
+                    "op {i}: consumed {} != ref {}",
+                    r.bits_consumed(),
+                    rr.bits_consumed()
+                ));
+            }
+        }
+        if r.bits_remaining() != 0 {
+            return Err(format!("{} bits left over", r.bits_remaining()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn roundtrip_at_every_alignment_offset() {
+    let mut rng = Rng::new(404);
+    let ops = random_ops(&mut rng, 24);
+    for off in 0..8u32 {
+        let prefix = 0x6Du64 & ((1u64 << off.max(1)) - 1);
+        let mut w = BitWriter::new();
+        let mut wr = BitWriterRef::new();
+        if off > 0 {
+            w.write_bits(prefix, off);
+            wr.write_bits(prefix, off);
+        }
+        for op in &ops {
+            apply_word(&mut w, op);
+            apply_ref(&mut wr, op);
+        }
+        let bits = w.bit_len();
+        assert_eq!(bits, wr.bit_len(), "off={off}");
+        let buf = w.into_bytes();
+        assert_eq!(buf, wr.into_bytes(), "off={off}");
+
+        let mut r = BitReader::with_bit_len(&buf, bits);
+        if off > 0 {
+            assert_eq!(r.read_bits(off), prefix, "off={off}");
+        }
+        for (i, op) in ops.iter().enumerate() {
+            match op {
+                Op::Bits(v, n) => assert_eq!(r.read_bits(*n), *v, "off={off} op={i}"),
+                Op::F32(v) => assert_eq!(r.read_f32().to_bits(), v.to_bits(), "off={off} op={i}"),
+                Op::U32(v) => assert_eq!(r.read_u32(), *v, "off={off} op={i}"),
+                Op::Radix(syms, q) => {
+                    assert_eq!(&r.read_radix(syms.len(), *q), syms, "off={off} op={i}")
+                }
+                Op::Bytes(bytes) => {
+                    let mut got = Vec::new();
+                    r.try_read_bytes_into(bytes.len(), &mut got).unwrap();
+                    assert_eq!(&got, bytes, "off={off} op={i}");
+                }
+            }
+        }
+        assert_eq!(r.bits_remaining(), 0, "off={off}");
+    }
+}
+
+#[test]
+fn failed_reads_consume_nothing_word_reader() {
+    let mut w = BitWriter::new();
+    w.write_bits(0b1011, 4);
+    w.write_f32(2.5);
+    let bits = w.bit_len();
+    let buf = w.into_bytes();
+    let mut r = BitReader::with_bit_len(&buf, bits);
+    assert_eq!(r.read_bits(4), 0b1011);
+    // 32 bits remain: a 33-bit ask fails without consuming
+    assert!(r.try_read_bits(33).is_err());
+    let mut sink = Vec::new();
+    assert!(r.try_read_bytes_into(5, &mut sink).is_err());
+    assert_eq!(r.read_f32(), 2.5, "stream position must survive failed reads");
+    assert_eq!(r.bits_remaining(), 0);
+}
