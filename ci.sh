@@ -23,6 +23,11 @@ echo "==> concurrent coordinator smoke (4 devices, 2 threads, staleness 1)"
 cargo run --release --bin splitfc -- train --preset tiny --devices 4 \
     --threads 2 --staleness 1 --rounds 3
 
+echo "==> TCP transport smoke (4 devices over loopback, ephemeral port)"
+# real sockets end to end: listener on 127.0.0.1:0, handshake, S=0 schedule
+cargo run --release --bin splitfc -- train --preset tiny --devices 4 \
+    --transport tcp --listen 127.0.0.1:0 --rounds 3
+
 echo "==> codec registry matrix smoke (round trip + 1 train step per codec)"
 # iterates CodecRegistry::names(): an unported or misregistered codec fails here
 cargo run --release --bin splitfc -- codec-smoke
@@ -43,6 +48,10 @@ cargo test --features alloc-count --test integration_codecs \
 
 echo "==> coordinator bench (quick): BENCH_coordinator.json"
 cargo bench --bench bench_coordinator -- --quick
+
+echo "==> transport bench (quick): BENCH_transport.json + lifecycle probes"
+# fails on handshake-rejection or reconnect-replay regressions
+cargo bench --bench bench_transport -- --quick
 
 if [ "${SKIP_CLIPPY:-0}" = "1" ]; then
     echo "==> clippy skipped (SKIP_CLIPPY=1)"

@@ -1,0 +1,163 @@
+//! Transport throughput + tail latency: protocol steps/s and per-step
+//! p50/p99 over the in-process channel backend vs real TCP loopback, for
+//! fleet sizes K ∈ {1, 4, 16} on the tiny preset at staleness 0 (so both
+//! backends drive the byte-identical sequential schedule and the *only*
+//! variable is the transport).
+//!
+//! Also probes the connection lifecycle: a handshake with a mismatched
+//! codec must be rejected, and a mid-training socket cut (request
+//! delivered, reply lost) must recover through reconnect + courier replay
+//! without losing a step — the bench **fails** (non-zero exit) if either
+//! probe misbehaves, so CI catches lifecycle regressions alongside perf.
+//!
+//! Writes `BENCH_transport.json`; `-- --quick` shortens the run for CI.
+
+use splitfc::config::{parse_scheme, TrainConfig};
+use splitfc::coordinator::Trainer;
+use splitfc::transport::{Connection, Msg, TcpConn, TransportKind, WireLimits};
+use splitfc::util::{par, Args, Json, Result};
+
+fn cfg_for(devices: usize, steps_target: usize, transport: TransportKind) -> TrainConfig {
+    let mut cfg = TrainConfig::for_preset("tiny");
+    cfg.devices = devices;
+    cfg.rounds = (steps_target / devices).max(2);
+    cfg.n_train = 256;
+    cfg.n_test = 32;
+    cfg.eval_every = 0;
+    cfg.scheme = parse_scheme("splitfc", 8.0).expect("scheme");
+    cfg.up_bits_per_entry = 1.0;
+    cfg.down_bits_per_entry = 4.0;
+    cfg.transport = transport;
+    cfg
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+fn run_one(devices: usize, steps_target: usize, transport: TransportKind) -> Result<Json> {
+    let path = std::env::temp_dir().join(format!(
+        "splitfc_bench_tx_{}_{devices}_{}.jsonl",
+        transport.name(),
+        std::process::id()
+    ));
+    let mut cfg = cfg_for(devices, steps_target, transport);
+    cfg.metrics_path = path.to_str().unwrap().to_string();
+    let mut tr = Trainer::new(cfg)?;
+    let s = tr.run()?;
+    drop(tr);
+
+    // per-step latency distribution from the metrics stream
+    let text = std::fs::read_to_string(&path).map_err(|e| splitfc::err!("metrics: {e}"))?;
+    let mut step_s: Vec<f64> = text
+        .lines()
+        .filter_map(|l| Json::parse(l).ok())
+        .filter(|j| j.get("t").is_some())
+        .filter_map(|j| j.req("step_s").as_f64())
+        .collect();
+    std::fs::remove_file(&path).ok();
+    splitfc::ensure!(step_s.len() == s.steps, "metrics stream incomplete");
+    step_s.sort_by(|a, b| a.total_cmp(b));
+    let (p50, p99) = (percentile(&step_s, 0.50), percentile(&step_s, 0.99));
+    let steps_per_s = s.steps as f64 / s.wall_s;
+    println!(
+        "{:<6} K={devices:<2}: {} steps in {:.3}s -> {:>8.2} steps/s, p50 {:.4}s p99 {:.4}s",
+        transport.name(),
+        s.steps,
+        s.wall_s,
+        steps_per_s,
+        p50,
+        p99
+    );
+    Ok(Json::obj(vec![
+        ("transport", Json::str(transport.name())),
+        ("devices", Json::num(devices as f64)),
+        ("steps", Json::num(s.steps as f64)),
+        ("wall_s", Json::num(s.wall_s)),
+        ("steps_per_s", Json::num(steps_per_s)),
+        ("p50_step_s", Json::num(p50)),
+        ("p99_step_s", Json::num(p99)),
+    ]))
+}
+
+/// Lifecycle probe 1: a Hello with a bogus codec identity must be rejected
+/// by the PS handshake (and an out-of-range device index likewise).
+fn probe_handshake() -> Result<()> {
+    let mut cfg = cfg_for(2, 4, TransportKind::Tcp);
+    cfg.rounds = 1;
+    let tr = Trainer::new(cfg)?;
+    let addr = tr.listen_addr().expect("tcp trainer listens").to_string();
+    let mut conn = TcpConn::connect(&addr, WireLimits::new(1 << 20))?;
+    conn.send(Msg::Hello { device: 0, codec_id: 0xBAD_C0DE, codec_version: 0xFFFF })?;
+    match conn.recv()? {
+        Msg::HelloAck { err: Some(_), .. } => {}
+        other => splitfc::bail!("codec-mismatch hello was not rejected: {other:?}"),
+    }
+    let mut conn = TcpConn::connect(&addr, WireLimits::new(1 << 20))?;
+    conn.send(Msg::Hello { device: 1000, codec_id: 0, codec_version: 0 })?;
+    match conn.recv()? {
+        Msg::HelloAck { err: Some(_), .. } => {}
+        other => splitfc::bail!("out-of-range hello was not rejected: {other:?}"),
+    }
+    println!("handshake probe ok (mismatches rejected)");
+    Ok(())
+}
+
+/// Lifecycle probe 2: cut device 0's socket right after a mid-run uplink
+/// is delivered — the run must recover via reconnect + replay and finish
+/// every scheduled step.
+fn probe_reconnect() -> Result<()> {
+    let mut cfg = cfg_for(2, 8, TransportKind::Tcp);
+    cfg.chaos_drop = Some((0, 6)); // Hello + step 1 (3 sends) + round-2 Uplink
+    let rounds = cfg.rounds;
+    let mut tr = Trainer::new(cfg)?;
+    let s = tr.run()?;
+    splitfc::ensure!(
+        s.steps == rounds * 2,
+        "reconnect probe lost steps: {} of {}",
+        s.steps,
+        rounds * 2
+    );
+    println!("reconnect probe ok ({} steps across a link cut)", s.steps);
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let quick = args.has_flag("quick");
+    let inner_threads = par::thread_request(args.get_usize("threads", 1)).max(1);
+    par::set_threads(inner_threads);
+    let steps_target = if quick { 16 } else { 64 };
+
+    probe_handshake()?;
+    probe_reconnect()?;
+
+    let mut rows = Vec::new();
+    for &devices in &[1usize, 4, 16] {
+        let mut pair = Vec::new();
+        for transport in [TransportKind::InProc, TransportKind::Tcp] {
+            let row = run_one(devices, steps_target, transport)?;
+            pair.push(row.req("steps_per_s").as_f64().unwrap());
+            rows.push(row);
+        }
+        if let [inproc, tcp] = pair[..] {
+            println!("  K={devices}: tcp/inproc throughput ratio {:.2}", tcp / inproc);
+        }
+    }
+
+    let j = Json::obj(vec![
+        ("bench", Json::str("transport")),
+        ("preset", Json::str("tiny")),
+        ("inner_threads", Json::num(par::threads() as f64)),
+        ("steps_target", Json::num(steps_target as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_transport.json", j.to_string_pretty())
+        .expect("write BENCH_transport.json");
+    println!("[saved BENCH_transport.json]");
+    Ok(())
+}

@@ -20,6 +20,26 @@ pub enum CodecError {
         /// bits actually left in the stream
         available: u64,
     },
+    /// A wire frame (or message) claims more bytes than the buffer holds —
+    /// a truncated transmission must fail loudly, not zero-fill.
+    TruncatedFrame {
+        /// bytes the header/field required
+        needed: u64,
+        /// bytes actually available
+        available: u64,
+    },
+    /// A length prefix exceeds the receiver's declared payload budget;
+    /// rejecting it up front prevents malformed input from driving an
+    /// attacker-controlled allocation.
+    FrameTooLarge {
+        /// bytes the length prefix asked for
+        bytes: u64,
+        /// the receiver's budget
+        max: u64,
+    },
+    /// Structurally invalid header bytes (unknown tag, inconsistent
+    /// length/bit fields, trailing garbage, ...).
+    MalformedHeader { reason: String },
 }
 
 impl fmt::Display for CodecError {
@@ -29,11 +49,28 @@ impl fmt::Display for CodecError {
                 f,
                 "bitstream over-read: {requested} bits requested, {available} remaining"
             ),
+            CodecError::TruncatedFrame { needed, available } => write!(
+                f,
+                "truncated frame: {needed} bytes required, {available} available"
+            ),
+            CodecError::FrameTooLarge { bytes, max } => write!(
+                f,
+                "frame too large: length prefix asks for {bytes} bytes, budget is {max}"
+            ),
+            CodecError::MalformedHeader { reason } => {
+                write!(f, "malformed frame header: {reason}")
+            }
         }
     }
 }
 
 impl std::error::Error for CodecError {}
+
+impl From<CodecError> for crate::util::error::Error {
+    fn from(e: CodecError) -> crate::util::error::Error {
+        crate::util::error::Error::msg(e.to_string())
+    }
+}
 
 /// Relative Frobenius error ||A - Â||_F / ||A||_F.
 pub fn relative_error(a: &Matrix, a_hat: &Matrix) -> f64 {
@@ -69,6 +106,19 @@ mod tests {
         let e = CodecError::BitstreamOverread { requested: 12, available: 3 };
         let s = e.to_string();
         assert!(s.contains("12") && s.contains('3'), "{s}");
+    }
+
+    #[test]
+    fn wire_error_variants_display_and_convert() {
+        let e = CodecError::TruncatedFrame { needed: 15, available: 7 };
+        assert!(e.to_string().contains("15") && e.to_string().contains('7'));
+        let e = CodecError::FrameTooLarge { bytes: 1 << 40, max: 1 << 20 };
+        assert!(e.to_string().contains("too large"), "{e}");
+        let e = CodecError::MalformedHeader { reason: "unknown tag 9".into() };
+        assert!(e.to_string().contains("unknown tag 9"), "{e}");
+        // converts into the crate error for `?` in decode paths
+        let err: crate::util::error::Error = e.into();
+        assert!(err.to_string().contains("malformed"), "{err}");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use crate::compression::{is_registered, registered_names, CodecSpec};
 use crate::runtime::BackendKind;
+use crate::transport::TransportKind;
 use crate::util::error::Result;
 use crate::util::{Args, Json};
 use crate::{bail, ensure};
@@ -69,6 +70,22 @@ pub struct TrainConfig {
     /// model instead of the single shared optimizer of Algorithm 1 (changes
     /// trajectories; off by default)
     pub per_device_opt: bool,
+    /// which backend carries device<->PS protocol messages: bounded
+    /// in-process channels (default) or length-prefixed TCP frames
+    pub transport: TransportKind,
+    /// TCP listen address for the PS side (`--transport tcp`); port 0 picks
+    /// an ephemeral port, reported by `Trainer::listen_addr`
+    pub listen: String,
+    /// the last this-many devices are not built in-process: they join over
+    /// the listening TCP transport from `splitfc device` processes
+    pub devices_remote: usize,
+    /// log-normal dispersion of per-device link capacity (0 = uniform
+    /// links); draws from a dedicated RNG so trajectories are unaffected
+    pub fading_sigma: f64,
+    /// fault injection for the TCP transport: `(device, n)` cuts that
+    /// device's socket right after its n-th send — request delivered,
+    /// reply lost — exercising reconnect + courier replay (tests/CI)
+    pub chaos_drop: Option<(usize, u64)>,
 }
 
 impl TrainConfig {
@@ -108,6 +125,11 @@ impl TrainConfig {
             staleness: 0,
             concurrent_devices: 0,
             per_device_opt: false,
+            transport: TransportKind::InProc,
+            listen: "127.0.0.1:0".to_string(),
+            devices_remote: 0,
+            fading_sigma: 0.0,
+            chaos_drop: None,
         }
     }
 
@@ -153,6 +175,24 @@ impl TrainConfig {
         if args.has_flag("per-device-opt") {
             self.per_device_opt = true;
         }
+        if let Some(v) = args.get("transport") {
+            self.transport = TransportKind::parse(v)?;
+        }
+        if let Some(v) = args.get("listen") {
+            self.listen = v.to_string();
+        }
+        self.devices_remote = args.get_usize("devices-remote", self.devices_remote);
+        self.fading_sigma = args.get_f64("fading-sigma", self.fading_sigma);
+        if let Some(v) = args.get("chaos-drop") {
+            let (k, n) = v
+                .split_once(':')
+                .ok_or_else(|| crate::err!("--chaos-drop wants device:send, got {v:?}"))?;
+            let k: usize =
+                k.parse().map_err(|_| crate::err!("--chaos-drop device {k:?} not a number"))?;
+            let n: u64 =
+                n.parse().map_err(|_| crate::err!("--chaos-drop send {n:?} not a number"))?;
+            self.chaos_drop = Some((k, n));
+        }
         if let Some(v) = args.get("metrics") {
             self.metrics_path = v.to_string();
         }
@@ -193,6 +233,9 @@ impl TrainConfig {
             ("staleness", Json::num(self.staleness as f64)),
             ("concurrent_devices", Json::num(self.concurrent_devices as f64)),
             ("per_device_opt", Json::Bool(self.per_device_opt)),
+            ("transport", Json::str(self.transport.name())),
+            ("devices_remote", Json::num(self.devices_remote as f64)),
+            ("fading_sigma", Json::num(self.fading_sigma)),
         ])
     }
 }
@@ -338,6 +381,29 @@ mod tests {
         // explicit request above K clamps to K
         c.concurrent_devices = 64;
         assert_eq!(c.resolved_concurrency(), c.devices);
+    }
+
+    #[test]
+    fn transport_flags_plumb_through() {
+        let mut c = TrainConfig::for_preset("tiny");
+        assert_eq!(c.transport, TransportKind::InProc);
+        assert_eq!(c.listen, "127.0.0.1:0");
+        c.apply_overrides(&args(
+            "x --transport tcp --listen 127.0.0.1:7777 --devices-remote 2 \
+             --fading-sigma 0.5 --chaos-drop 1:13",
+        ))
+        .unwrap();
+        assert_eq!(c.transport, TransportKind::Tcp);
+        assert_eq!(c.listen, "127.0.0.1:7777");
+        assert_eq!(c.devices_remote, 2);
+        assert_eq!(c.fading_sigma, 0.5);
+        assert_eq!(c.chaos_drop, Some((1, 13)));
+        let j = c.to_json();
+        assert_eq!(j.req("transport").as_str(), Some("tcp"));
+        assert_eq!(j.req("devices_remote").as_usize(), Some(2));
+        assert!(c.apply_overrides(&args("x --transport udp")).is_err());
+        assert!(c.apply_overrides(&args("x --chaos-drop nope")).is_err());
+        assert!(c.apply_overrides(&args("x --chaos-drop a:7")).is_err());
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! The `splitfc` command-line interface (leader entrypoint).
 
 use crate::config::TrainConfig;
+use crate::coordinator::trainer::run_remote_device;
 use crate::coordinator::{experiments, trainer::Trainer};
 use crate::transport::channel::vanilla_sl_transfer_time_s;
+use crate::transport::TransportKind;
 use crate::util::error::Result;
 use crate::util::Args;
 
@@ -16,6 +18,11 @@ USAGE:
                 [--seed N] [--eval-every E] [--metrics file.jsonl]
                 [--backend native|pjrt] [--artifacts DIR] [--threads N]
                 [--staleness S] [--concurrent-devices N] [--per-device-opt]
+                [--transport inproc|tcp] [--listen ADDR] [--devices-remote R]
+                [--fading-sigma X]
+  splitfc device --connect HOST:PORT --device K --preset P [--scheme S] ...
+                # device-side process for one remote device; preset, scheme,
+                # seed and fleet flags must match the server's `train` run
   splitfc experiment <fig1|fig3|fig4|fig5|table1|table2|table3|all>
                 [--presets mnist,cifar,celeba] [--rounds T] [--devices K]
                 [--threads N] ...
@@ -46,6 +53,18 @@ SCHEDULING:
   --concurrent-devices N  device-worker threads (0 = auto: 1 when S=0, one
                           per device otherwise)
   --per-device-opt        independent PS-held device ADAM moments per device
+
+TRANSPORT:
+  --transport inproc|tcp  message backend between devices and the PS:
+                          bounded in-process channels (default) or
+                          length-prefixed frames over TCP sockets; at
+                          staleness 0 both produce byte-identical metrics
+  --listen ADDR           PS listen address for tcp (default 127.0.0.1:0 =
+                          ephemeral port, printed at startup)
+  --devices-remote R      the last R devices join from separate `splitfc
+                          device` processes instead of in-process threads
+  --fading-sigma X        log-normal per-device link-capacity dispersion
+                          (0 = every device at --capacity-bps)
 ";
 
 pub fn main() {
@@ -61,6 +80,7 @@ pub fn main() {
     }
     let code = match args.subcommand() {
         Some("train") => cmd_train(&args),
+        Some("device") => cmd_device(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("codec-smoke") => cmd_codec_smoke(&args),
         Some("latency-calc") => cmd_latency(&args),
@@ -86,12 +106,50 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.apply_overrides(args)?;
     println!("config: {}", cfg.to_json().to_string_compact());
     let mut tr = Trainer::new(cfg)?;
+    if let Some(addr) = tr.listen_addr() {
+        println!("transport: tcp, listening on {addr}");
+        if tr.cfg.devices_remote > 0 {
+            println!(
+                "waiting for {} remote device(s): splitfc device --connect {addr} --device K ...",
+                tr.cfg.devices_remote
+            );
+        }
+    }
     let summary = tr.run()?;
     println!("summary: {}", summary.to_json().to_string_pretty());
     let rep = tr.link_report();
     println!(
         "link: up {} bits, down {} bits, modeled transfer time {:.2}s @ {} bps",
         rep.up_bits, rep.down_bits, rep.elapsed_s, tr.cfg.link_capacity_bps
+    );
+    println!(
+        "model sync: up {} bits / {} frames, down {} bits / {} frames",
+        rep.sync_up_bits, rep.sync_up_frames, rep.sync_down_bits, rep.sync_down_frames
+    );
+    Ok(())
+}
+
+///// Device-side entrypoint for one remote device: rebuild the fleet parts
+/// from the same flags as the server's `train` run, dial it, and drive
+/// this device through every round.
+fn cmd_device(args: &Args) -> Result<()> {
+    let addr = match args.get("connect") {
+        Some(a) => a.to_string(),
+        None => crate::bail!("device needs --connect HOST:PORT"),
+    };
+    let device = args.get_usize("device", usize::MAX);
+    if device == usize::MAX {
+        crate::bail!("device needs --device K (this process's device index)");
+    }
+    let preset = args.get_or("preset", "mnist").to_string();
+    let mut cfg = TrainConfig::for_preset(&preset);
+    cfg.apply_overrides(args)?;
+    cfg.transport = TransportKind::Tcp;
+    println!("device {device} dialing {addr} ({})", cfg.to_json().to_string_compact());
+    let rep = run_remote_device(&cfg, device, &addr)?;
+    println!(
+        "device {device} done: up {} bits, down {} bits, modeled transfer time {:.2}s",
+        rep.up_bits, rep.down_bits, rep.elapsed_s
     );
     Ok(())
 }

@@ -1,13 +1,17 @@
-//! L3 coordinator — the paper's Algorithm 1 split into concurrent roles,
-//! plus the experiment harness.
+//! L3 coordinator — the paper's Algorithm 1 split into concurrent roles
+//! that talk only through protocol messages, plus the experiment harness.
 //!
 //! * `server` — the parameter-server role: `w_s`/`w_d`, both optimizers,
 //!   the shared encode stream, serialized metrics
+//! * `protocol` — the PS's message-level endpoint: per-device codec
+//!   sessions, the staleness gate, replay couriers (reconnect safety)
 //! * `worker` — one device-side role per client: loader, RNG fork,
-//!   per-device link, uplink encode / downlink decode + chain-rule rescale
+//!   per-device link, uplink encode / downlink decode + chain-rule
+//!   rescale, all over a transport `Connection`
 //! * `scheduler` — drives K workers sequentially or concurrently under a
 //!   bounded-staleness window (S = 0 ⇒ exact round-robin)
-//! * `trainer` — thin facade wiring the roles from a `TrainConfig`
+//! * `trainer` — facade wiring the roles from a `TrainConfig` over the
+//!   in-process or TCP transport
 //! * `metrics` — per-step records, summaries, JSONL
 //! * `experiments` — one entry per paper table/figure
 //! * `cli` — the `splitfc` binary front-end
@@ -15,13 +19,15 @@
 pub mod cli;
 pub mod experiments;
 pub mod metrics;
+pub mod protocol;
 pub mod scheduler;
 pub mod server;
 pub mod trainer;
 pub mod worker;
 
 pub use metrics::{StepRecord, TrainSummary};
+pub use protocol::{PsEndpoint, RunGate};
 pub use scheduler::Scheduler;
 pub use server::{DeviceOpt, ParameterServer};
-pub use trainer::Trainer;
-pub use worker::{DeviceWorker, RngMode};
+pub use trainer::{build_parts, run_remote_device, FleetParts, Trainer};
+pub use worker::DeviceWorker;

@@ -1,0 +1,584 @@
+//! PS-side protocol logic, split from scheduling.
+//!
+//! [`PsEndpoint`] is the parameter server's message-level face: it owns the
+//! per-device codec sessions, the staleness gate, the reply couriers that
+//! make the protocol safe to replay across reconnects, and the per-device
+//! run totals. One `serve` loop runs per connection — a thread with an
+//! in-process channel or a thread with an accepted TCP socket — and every
+//! loop is stateless, so a device that drops its connection mid-training
+//! can come back on a fresh socket and resume exactly where it left off.
+//!
+//! **Gating.** [`RunGate`] generalizes the old scheduler-internal watermark
+//! monitor: step entry (`StepStart`) blocks until every step with a
+//! schedule-local index below `local - S·K` has committed and the eval
+//! barrier for the step's round has been released. Because the gate lives
+//! behind the endpoint, the staleness window works identically whether the
+//! step request arrived from a thread or a socket.
+//!
+//! **At-most-once replay.** The worker resends its in-flight request after
+//! a reconnect, so every handler must be idempotent. The per-device
+//! [`Courier`] keys the cached `Downlink` reply on the step's local index
+//! (a duplicate `Uplink` is answered from cache without re-running the
+//! server pass) and remembers the last committed step (a duplicate
+//! `Commit` is acked without re-applying the gradient). The shared
+//! Algorithm-1 RNG stream is committed only when a *non-duplicate*
+//! `Uplink` arrives, so a step re-granted after a disconnect re-exports
+//! the identical state — byte-identity survives arbitrary mid-step cuts.
+
+use std::sync::{Condvar, Mutex};
+
+use crate::compression::{Codec, CodecParams, Reclaim};
+use crate::coordinator::metrics::StepRecord;
+use crate::coordinator::server::ParameterServer;
+use crate::model::f32_from_le_bytes;
+use crate::transport::wire::{Frame, FrameKind};
+use crate::transport::{Connection, Msg};
+use crate::util::error::Result;
+use std::sync::Arc;
+
+/// The eval barrier a step of round `t` must wait for: the latest eval
+/// boundary strictly before its round.
+pub fn eval_gate(t: usize, eval_every: usize) -> usize {
+    if eval_every == 0 {
+        0
+    } else {
+        ((t - 1) / eval_every) * eval_every
+    }
+}
+
+/// Serialize a parameter/gradient vector as a `ModelSync` wire frame
+/// (little-endian f32), so model hand-offs cross the transport as real
+/// bytes and get counted by the link model like any other frame.
+pub fn model_sync_frame(data: &[f32]) -> Frame {
+    let mut payload = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    let bits = payload.len() as u64 * 8;
+    Frame::new(FrameKind::ModelSync, payload, bits)
+}
+
+struct GateState {
+    /// false between runs: every gate call is then a no-op, which is what
+    /// the manual single-step facade needs
+    active: bool,
+    done: Vec<bool>,
+    /// every step with schedule-local index < watermark has committed
+    watermark: usize,
+    /// staleness window in steps (S·K); 0 = strict round-robin
+    window: usize,
+    eval_every: usize,
+    /// last round whose eval barrier has been released
+    eval_done_round: usize,
+    aborted: bool,
+}
+
+/// Watermark monitor gating step entry: tracks out-of-order completion,
+/// the longest finished prefix, eval barriers, and abort propagation.
+/// Successor of the scheduler-internal `Progress` monitor — now PS-side,
+/// so it gates socket peers exactly like thread peers.
+pub struct RunGate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+impl Default for RunGate {
+    fn default() -> RunGate {
+        RunGate::new()
+    }
+}
+
+impl RunGate {
+    /// An inactive gate: all operations are no-ops until [`RunGate::begin`].
+    pub fn new() -> RunGate {
+        RunGate {
+            state: Mutex::new(GateState {
+                active: false,
+                done: Vec::new(),
+                watermark: 0,
+                window: 0,
+                eval_every: 0,
+                eval_done_round: 0,
+                aborted: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Arm the gate for a run of `total_steps` schedule-local steps.
+    pub fn begin(&self, total_steps: usize, window: usize, eval_every: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.active = true;
+        st.done.clear();
+        st.done.resize(total_steps, false);
+        st.watermark = 0;
+        st.window = window;
+        st.eval_every = eval_every;
+        st.eval_done_round = 0;
+        st.aborted = false;
+        self.cv.notify_all();
+    }
+
+    /// Disarm after a run; pending waiters are released.
+    pub fn finish(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.active = false;
+        self.cv.notify_all();
+    }
+
+    /// Block until schedule-local step `local` of `round` may start: the
+    /// watermark covers `local - window` and the eval barrier for the
+    /// round's gate has been released.
+    pub fn wait_start(&self, local: usize, round: usize) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.active {
+                return Ok(());
+            }
+            if st.aborted {
+                return Err(crate::err!("scheduler aborted (another worker failed)"));
+            }
+            let gate_round = eval_gate(round, st.eval_every);
+            if st.watermark + st.window >= local && st.eval_done_round >= gate_round {
+                return Ok(());
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    pub fn complete(&self, local: usize) {
+        let mut st = self.state.lock().unwrap();
+        if !st.active || local >= st.done.len() {
+            return;
+        }
+        st.done[local] = true;
+        while st.watermark < st.done.len() && st.done[st.watermark] {
+            st.watermark += 1;
+        }
+        self.cv.notify_all();
+    }
+
+    /// Block until the watermark reaches `target` (an eval round boundary
+    /// or the end of the schedule).
+    pub fn wait_watermark(&self, target: usize) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.aborted {
+                return Err(crate::err!("scheduler aborted (a worker failed)"));
+            }
+            if !st.active || st.watermark >= target {
+                return Ok(());
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    pub fn eval_done(&self, round: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.eval_done_round = round;
+        self.cv.notify_all();
+    }
+
+    pub fn abort(&self) {
+        self.state.lock().unwrap().aborted = true;
+        self.cv.notify_all();
+    }
+
+    #[cfg(test)]
+    fn watermark(&self) -> usize {
+        self.state.lock().unwrap().watermark
+    }
+}
+
+/// Aborts the gate on drop unless disarmed — so a worker that errors or
+/// panics mid-step unblocks every peer waiting on the watermark instead of
+/// deadlocking the scope join.
+pub struct AbortOnDrop<'a> {
+    pub gate: &'a RunGate,
+    pub armed: bool,
+}
+
+impl Drop for AbortOnDrop<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.gate.abort();
+        }
+    }
+}
+
+/// Per-device reply courier: the replay cache that makes the protocol
+/// at-most-once under reconnects, plus the server-half execution time the
+/// `Commit` handler folds into the step's metrics record.
+#[derive(Default)]
+struct Courier {
+    /// schedule-local index of the last committed step (duplicate `Commit`
+    /// detection)
+    last_committed: Option<u64>,
+    /// the step whose `Downlink` reply is cached (duplicate `Uplink`
+    /// detection)
+    cached_uplink_local: Option<u64>,
+    cached_downlink: Option<Msg>,
+    /// server backend time of the in-flight step's `process_uplink`
+    server_dt: f64,
+}
+
+/// Per-device totals accumulated PS-side at `Commit` (so they exist even
+/// for devices on remote processes).
+#[derive(Clone, Copy)]
+pub struct DeviceTotals {
+    pub up_bits: u64,
+    pub down_bits: u64,
+    pub steps: usize,
+    pub last_round_loss: f32,
+}
+
+impl Default for DeviceTotals {
+    fn default() -> DeviceTotals {
+        DeviceTotals { up_bits: 0, down_bits: 0, steps: 0, last_round_loss: f32::NAN }
+    }
+}
+
+struct RunInfo {
+    rounds: usize,
+    /// global-step tag of the run's first schedule-local step
+    first_step: usize,
+}
+
+/// The parameter server's message-level endpoint: protocol handlers +
+/// per-device sessions, independent of which transport carries the bytes.
+pub struct PsEndpoint {
+    server: Arc<ParameterServer>,
+    devices: usize,
+    staleness: usize,
+    up_params: CodecParams,
+    down_params: CodecParams,
+    /// PS-side codec sessions, one per device link (uplink decode +
+    /// downlink encode)
+    codecs: Vec<Mutex<Box<dyn Codec>>>,
+    couriers: Vec<Mutex<Courier>>,
+    pub gate: RunGate,
+    totals: Mutex<Vec<DeviceTotals>>,
+    run: Mutex<RunInfo>,
+    /// expected ∇w_d payload length (bytes) for `Commit` validation
+    nd_bytes: usize,
+}
+
+impl PsEndpoint {
+    pub fn new(
+        server: Arc<ParameterServer>,
+        staleness: usize,
+        up_params: CodecParams,
+        down_params: CodecParams,
+        codecs: Vec<Box<dyn Codec>>,
+        nd_params: usize,
+    ) -> PsEndpoint {
+        let devices = codecs.len();
+        PsEndpoint {
+            server,
+            devices,
+            staleness,
+            up_params,
+            down_params,
+            codecs: codecs.into_iter().map(Mutex::new).collect(),
+            couriers: (0..devices).map(|_| Mutex::new(Courier::default())).collect(),
+            gate: RunGate::new(),
+            totals: Mutex::new(vec![DeviceTotals::default(); devices]),
+            run: Mutex::new(RunInfo { rounds: usize::MAX, first_step: 0 }),
+            nd_bytes: nd_params * 4,
+        }
+    }
+
+    pub fn devices(&self) -> usize {
+        self.devices
+    }
+
+    /// Arm the endpoint for a `rounds`-round scheduled run: reset couriers
+    /// and totals, record the global-step origin, arm the gate.
+    pub fn begin_run(&self, rounds: usize, first_step: usize, eval_every: usize) {
+        *self.run.lock().unwrap() = RunInfo { rounds, first_step };
+        for t in self.totals.lock().unwrap().iter_mut() {
+            *t = DeviceTotals::default();
+        }
+        for c in &self.couriers {
+            *c.lock().unwrap() = Courier::default();
+        }
+        self.gate.begin(rounds * self.devices, self.staleness * self.devices, eval_every);
+    }
+
+    /// Disarm the gate and hand back the run's per-device totals (callers
+    /// fold them in device order so float sums stay deterministic).
+    pub fn finish_run(&self) -> Vec<DeviceTotals> {
+        self.gate.finish();
+        self.totals.lock().unwrap().clone()
+    }
+
+    /// Configure for manual single-step driving (the `Trainer::step`
+    /// facade): gate inactive, records tagged with the caller's raw step
+    /// index.
+    pub fn begin_manual(&self) {
+        self.gate.finish();
+        *self.run.lock().unwrap() = RunInfo { rounds: usize::MAX, first_step: 0 };
+    }
+
+    /// Serve one connection until the peer leaves or the link drops. A
+    /// dead link is a normal return — the peer reconnects and a fresh
+    /// `serve` loop picks up, with all state in the endpoint. Set
+    /// `cache_replays` on transports whose peers can reconnect (TCP), so
+    /// duplicate `Uplink`s can be answered from the courier cache.
+    pub fn serve(&self, conn: &mut dyn Connection, cache_replays: bool) -> Result<()> {
+        loop {
+            let msg = match conn.recv() {
+                Ok(m) => m,
+                Err(_) => return Ok(()), // peer gone; reconnect spawns a new loop
+            };
+            let reply = match self.handle(msg, cache_replays) {
+                Ok(Some(r)) => r,
+                Ok(None) => return Ok(()), // clean Bye
+                Err(e) => Msg::Abort { reason: e.to_string() },
+            };
+            let fatal = matches!(reply, Msg::Abort { .. });
+            if conn.send(reply).is_err() || fatal {
+                return Ok(());
+            }
+        }
+    }
+
+    fn handle(&self, msg: Msg, cache_replays: bool) -> Result<Option<Msg>> {
+        match msg {
+            Msg::Hello { device, codec_id, codec_version } => {
+                Ok(Some(self.handle_hello(device, codec_id, codec_version)))
+            }
+            Msg::StepStart { device, round, local } => {
+                self.check_device(device)?;
+                self.gate.wait_start(local as usize, round as usize)?;
+                let wd = self.server.snapshot_device_params();
+                let rng = if self.staleness == 0 {
+                    // exported, NOT committed: a re-granted step after a
+                    // disconnect re-exports the identical state
+                    Some(self.server.with_rng(|r| r.export_state()))
+                } else {
+                    None
+                };
+                Ok(Some(Msg::StepGo { wd: model_sync_frame(&wd.data), rng }))
+            }
+            Msg::Uplink { device, local, frame, labels, mask, up_nominal, rng } => {
+                let _ = up_nominal; // reported again in the Commit StepReport
+                self.check_device(device)?;
+                let mut courier = self.couriers[device as usize].lock().unwrap();
+                if courier.cached_uplink_local == Some(local) {
+                    if let Some(cached) = courier.cached_downlink.clone() {
+                        return Ok(Some(cached)); // duplicate after reconnect
+                    }
+                }
+                let mut codec = self.codecs[device as usize].lock().unwrap();
+                let dec = codec.decode_uplink(&frame, &self.up_params)?;
+                // RNG commit point: the step's draws are now consumed
+                if let Some(st) = rng {
+                    self.server.with_rng(|r| r.restore_state(&st));
+                }
+                let (out, dt) = self.server.process_uplink(&dec.f_hat, &labels)?;
+                courier.server_dt = dt;
+                let dn = codec.encode_downlink(&out.g, &mask, &self.down_params)?;
+                codec.reclaim(Reclaim::Frame(frame));
+                codec.reclaim(Reclaim::Decoded(dec));
+                let reply = Msg::Downlink {
+                    frame: dn.frame,
+                    loss: out.loss,
+                    correct: out.correct,
+                    server_exec_s: dt,
+                    down_nominal: dn.nominal_bits,
+                };
+                codec.reclaim(Reclaim::Grad(dn.g_hat));
+                if cache_replays {
+                    courier.cached_uplink_local = Some(local);
+                    courier.cached_downlink = Some(reply.clone());
+                }
+                Ok(Some(reply))
+            }
+            Msg::Commit { device, round, local, grad, report } => {
+                self.check_device(device)?;
+                let mut courier = self.couriers[device as usize].lock().unwrap();
+                if courier.last_committed == Some(local) {
+                    return Ok(Some(Msg::CommitAck)); // duplicate after reconnect
+                }
+                crate::ensure!(
+                    grad.payload.len() == self.nd_bytes,
+                    "device {device} gradient payload is {} bytes, expected {}",
+                    grad.payload.len(),
+                    self.nd_bytes
+                );
+                let grad_wd = f32_from_le_bytes(&grad.payload);
+                self.server.apply_device_grad(device as usize, &grad_wd);
+                self.server.add_exec(report.device_exec_s);
+                let (rounds, first_step) = {
+                    let run = self.run.lock().unwrap();
+                    (run.rounds, run.first_step)
+                };
+                let rec = StepRecord {
+                    round: round as usize,
+                    device: device as usize,
+                    global_step: first_step + local as usize,
+                    loss: report.loss,
+                    train_acc: report.train_acc,
+                    up_bits: report.up_bits,
+                    down_bits: report.down_bits,
+                    up_nominal: report.up_nominal,
+                    down_nominal: report.down_nominal,
+                    step_s: report.step_s,
+                    exec_s: report.device_exec_s + courier.server_dt,
+                };
+                self.server.write_metrics(&rec.to_json());
+                {
+                    let mut totals = self.totals.lock().unwrap();
+                    let t = &mut totals[device as usize];
+                    t.up_bits += report.up_bits;
+                    t.down_bits += report.down_bits;
+                    t.steps += 1;
+                    if round as usize == rounds {
+                        t.last_round_loss = report.loss;
+                    }
+                }
+                courier.last_committed = Some(local);
+                courier.cached_uplink_local = None;
+                courier.cached_downlink = None;
+                drop(courier);
+                self.gate.complete(local as usize);
+                Ok(Some(Msg::CommitAck))
+            }
+            Msg::FetchModel { device } => {
+                self.check_device(device)?;
+                let wd = self.server.snapshot_device_params();
+                Ok(Some(Msg::ModelReply { wd: model_sync_frame(&wd.data) }))
+            }
+            Msg::Bye { .. } => Ok(None),
+            other => Err(crate::err!(
+                "unexpected {} message at the parameter server",
+                other.name()
+            )),
+        }
+    }
+
+    fn handle_hello(&self, device: u32, codec_id: u32, codec_version: u16) -> Msg {
+        let rounds = self.run.lock().unwrap().rounds;
+        let ack = |err: Option<String>| Msg::HelloAck {
+            devices: self.devices as u32,
+            rounds: rounds.min(u32::MAX as usize) as u32,
+            staleness: self.staleness as u32,
+            err,
+        };
+        if device as usize >= self.devices {
+            return ack(Some(format!(
+                "device index {device} out of range (fleet has {})",
+                self.devices
+            )));
+        }
+        let codec = self.codecs[device as usize].lock().unwrap();
+        let (want_id, want_ver) = (codec.wire_id(), codec.wire_version());
+        if (codec_id, codec_version) != (want_id, want_ver) {
+            return ack(Some(format!(
+                "codec mismatch: device speaks {codec_id:#010x} v{codec_version}, \
+                 server session is {want_id:#010x} v{want_ver}"
+            )));
+        }
+        ack(None)
+    }
+
+    fn check_device(&self, device: u32) -> Result<()> {
+        crate::ensure!(
+            (device as usize) < self.devices,
+            "device index {device} out of range (fleet has {})",
+            self.devices
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn armed_gate(total: usize, window: usize, eval_every: usize) -> RunGate {
+        let g = RunGate::new();
+        g.begin(total, window, eval_every);
+        g
+    }
+
+    #[test]
+    fn watermark_advances_over_out_of_order_completion() {
+        let g = armed_gate(4, 0, 0);
+        g.complete(2);
+        assert_eq!(g.watermark(), 0);
+        g.complete(0);
+        assert_eq!(g.watermark(), 1);
+        g.complete(1);
+        // 0,1,2 done -> watermark jumps past the out-of-order step
+        assert_eq!(g.watermark(), 3);
+        g.complete(3);
+        assert_eq!(g.watermark(), 4);
+    }
+
+    #[test]
+    fn strict_window_blocks_and_releases() {
+        // S=0 (window 0): step 1 must wait for step 0; once 0 completes the
+        // start gate opens without blocking
+        let g = armed_gate(2, 0, 0);
+        g.complete(0);
+        assert!(g.wait_start(1, 1).is_ok());
+    }
+
+    #[test]
+    fn stale_window_admits_lookahead() {
+        // window 2: steps 1 and 2 may start with nothing completed, step 3
+        // may not until the watermark reaches 1
+        let g = armed_gate(8, 2, 0);
+        assert!(g.wait_start(2, 1).is_ok());
+        g.complete(0);
+        assert!(g.wait_start(3, 1).is_ok());
+    }
+
+    #[test]
+    fn abort_unblocks_waiters_with_error() {
+        let g = armed_gate(4, 0, 0);
+        g.abort();
+        assert!(g.wait_start(3, 1).is_err());
+        assert!(g.wait_watermark(4).is_err());
+    }
+
+    #[test]
+    fn inactive_gate_is_a_no_op() {
+        let g = RunGate::new();
+        // no begin(): manual stepping must pass straight through
+        assert!(g.wait_start(17, 3).is_ok());
+        g.complete(17); // out of range of the (empty) done map: ignored
+        assert!(g.wait_watermark(usize::MAX).is_ok());
+    }
+
+    #[test]
+    fn finish_releases_and_begin_rearms() {
+        let g = armed_gate(2, 0, 0);
+        g.finish();
+        assert!(g.wait_start(1, 1).is_ok(), "finished gate must not block");
+        g.begin(2, 0, 0);
+        g.complete(0);
+        assert_eq!(g.watermark(), 1);
+    }
+
+    #[test]
+    fn eval_gate_is_latest_boundary_before_round() {
+        assert_eq!(eval_gate(1, 0), 0);
+        assert_eq!(eval_gate(1, 2), 0);
+        assert_eq!(eval_gate(2, 2), 0);
+        assert_eq!(eval_gate(3, 2), 2);
+        assert_eq!(eval_gate(4, 2), 2);
+        assert_eq!(eval_gate(5, 2), 4);
+    }
+
+    #[test]
+    fn model_sync_frame_roundtrips_f32() {
+        let data = vec![1.0f32, -2.5, 0.0, f32::MIN_POSITIVE];
+        let f = model_sync_frame(&data);
+        assert_eq!(f.kind, FrameKind::ModelSync);
+        assert_eq!(f.payload_bits, data.len() as u64 * 32);
+        assert_eq!(f32_from_le_bytes(&f.payload), data);
+    }
+}

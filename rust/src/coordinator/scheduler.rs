@@ -1,33 +1,36 @@
-//! Concurrent multi-device scheduling with a bounded-staleness window.
+//! Concurrent multi-device scheduling over the message transport.
 //!
-//! Algorithm 1 visits devices strictly round-robin: global step
-//! g = (t-1)·K + k runs after every step with a smaller index. The
+//! Algorithm 1 visits devices strictly round-robin: schedule-local step
+//! l = (t-1)·K + k runs after every step with a smaller index. The
 //! scheduler generalizes that order with one knob, `staleness` (S, in
-//! rounds): **step g may start once every step with index < g - S·K has
-//! completed**. Consequences:
+//! rounds): **step l may start once every step with index < l - S·K has
+//! committed**. Consequences:
 //!
 //! * `S = 0` degenerates to the exact sequential round-robin order — even
-//!   when K workers run on separate threads, whole steps are serialized in
-//!   the monolithic trainer's order, and (with the PS-held shared RNG
-//!   stream) the metrics are byte-identical to the sequential path.
+//!   when K workers run on separate threads (or sockets), whole steps are
+//!   serialized in the monolithic trainer's order, and (with the PS-held
+//!   shared RNG stream travelling in `StepGo`/`Uplink`) the metrics are
+//!   byte-identical to the sequential path.
 //! * `S > 0` lets up to S·K protocol steps overlap: a device may run at
 //!   most S rounds ahead of the slowest outstanding step, the classic
 //!   bounded-staleness regime. Workers then use their own RNG forks and
 //!   the PS applies updates in completion order.
 //!
-//! Progress is tracked by a watermark monitor (`done` bitmap + condvar):
-//! completion may arrive out of order, the watermark advances over the
-//! longest finished prefix. Evaluation rounds are barriers: the scheduler
-//! thread waits for the watermark to reach the round boundary, evaluates on
-//! the frozen snapshot, then releases the next round — so eval accuracy
-//! lands at exactly the same model state as in the sequential path.
+//! Since the transport refactor the gating itself lives PS-side in
+//! [`PsEndpoint`]'s [`RunGate`](crate::coordinator::protocol::RunGate):
+//! a worker simply sends `StepStart` and blocks in the reply, so remote
+//! (socket) devices obey the same staleness window as local threads. The
+//! scheduler's remaining jobs are driving the local workers, serving eval
+//! barriers (evaluate on the frozen snapshot at round boundaries, then
+//! release the next round), and folding the endpoint's per-device totals
+//! into the run summary in device order.
 
-use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
 use crate::coordinator::metrics::TrainSummary;
+use crate::coordinator::protocol::{AbortOnDrop, PsEndpoint};
 use crate::coordinator::server::ParameterServer;
-use crate::coordinator::worker::{DeviceWorker, RngMode};
+use crate::coordinator::worker::DeviceWorker;
 use crate::data::Dataset;
 use crate::transport::LinkReport;
 use crate::util::error::{Context, Result};
@@ -38,27 +41,13 @@ pub struct Scheduler {
     /// global-step tag of this run's first step (a facade that already ran
     /// manual steps offsets the schedule so `g` tags stay unique per record)
     pub first_step: usize,
-    /// bounded-staleness window S in rounds (0 = strict round-robin)
+    /// bounded-staleness window S in rounds (0 = strict round-robin);
+    /// informational here — the window itself is enforced by the endpoint
     pub staleness: usize,
-    /// worker threads driving the devices (1 = inline on the caller thread)
+    /// worker threads driving the local devices (1 = inline on the caller)
     pub concurrency: usize,
     /// evaluate every this many rounds (0 = only at the end)
     pub eval_every: usize,
-}
-
-/// Per-device totals a worker thread hands back to the scheduler.
-struct DeviceStats {
-    device: usize,
-    up_bits: u64,
-    down_bits: u64,
-    steps: usize,
-    last_round_loss: f32,
-}
-
-impl DeviceStats {
-    fn new(device: usize) -> DeviceStats {
-        DeviceStats { device, up_bits: 0, down_bits: 0, steps: 0, last_round_loss: f32::NAN }
-    }
 }
 
 fn mean_loss(losses: &[f32]) -> f32 {
@@ -69,144 +58,22 @@ fn mean_loss(losses: &[f32]) -> f32 {
     }
 }
 
-/// Watermark monitor: tracks out-of-order step completion, the longest
-/// finished prefix, eval barriers, and abort propagation.
-struct Progress {
-    state: Mutex<ProgressState>,
-    cv: Condvar,
-}
-
-struct ProgressState {
-    done: Vec<bool>,
-    /// every step with index < watermark has completed
-    watermark: usize,
-    /// last round whose eval barrier has been released
-    eval_done_round: usize,
-    aborted: bool,
-}
-
-impl Progress {
-    fn new(total_steps: usize) -> Progress {
-        Progress {
-            state: Mutex::new(ProgressState {
-                done: vec![false; total_steps],
-                watermark: 0,
-                eval_done_round: 0,
-                aborted: false,
-            }),
-            cv: Condvar::new(),
-        }
-    }
-
-    /// Block until step `g` may start: the watermark covers g - window and
-    /// the eval barrier for `gate_round` has been released.
-    fn wait_start(&self, g: usize, window: usize, gate_round: usize) -> Result<()> {
-        let mut st = self.state.lock().unwrap();
-        loop {
-            if st.aborted {
-                return Err(crate::err!("scheduler aborted (another worker failed)"));
-            }
-            if st.watermark + window >= g && st.eval_done_round >= gate_round {
-                return Ok(());
-            }
-            st = self.cv.wait(st).unwrap();
-        }
-    }
-
-    fn complete(&self, g: usize) {
-        let mut st = self.state.lock().unwrap();
-        st.done[g] = true;
-        while st.watermark < st.done.len() && st.done[st.watermark] {
-            st.watermark += 1;
-        }
-        self.cv.notify_all();
-    }
-
-    /// Block until the watermark reaches `target` (an eval round boundary).
-    fn wait_watermark(&self, target: usize) -> Result<()> {
-        let mut st = self.state.lock().unwrap();
-        loop {
-            if st.aborted {
-                return Err(crate::err!("scheduler aborted (a worker failed)"));
-            }
-            if st.watermark >= target {
-                return Ok(());
-            }
-            st = self.cv.wait(st).unwrap();
-        }
-    }
-
-    fn eval_done(&self, round: usize) {
-        let mut st = self.state.lock().unwrap();
-        st.eval_done_round = round;
-        self.cv.notify_all();
-    }
-
-    fn abort(&self) {
-        self.state.lock().unwrap().aborted = true;
-        self.cv.notify_all();
-    }
-}
-
-/// Aborts the schedule on drop unless disarmed — so a worker that errors or
-/// panics mid-step unblocks every peer waiting on the watermark instead of
-/// deadlocking the scope join.
-struct AbortOnDrop<'a> {
-    progress: &'a Progress,
-    armed: bool,
-}
-
-impl Drop for AbortOnDrop<'_> {
-    fn drop(&mut self) {
-        if self.armed {
-            self.progress.abort();
-        }
-    }
-}
-
-/// The eval barrier a step of round `t` must wait for: the latest eval
-/// boundary strictly before its round.
-fn eval_gate(t: usize, eval_every: usize) -> usize {
-    if eval_every == 0 {
-        0
-    } else {
-        ((t - 1) / eval_every) * eval_every
-    }
-}
-
-/// One worker thread's loop: drive a disjoint set of devices through all
-/// rounds, entering each step through the staleness window.
-#[allow(clippy::too_many_arguments)]
+/// One worker thread's loop: drive a disjoint set of local devices through
+/// all rounds. Step entry blocks inside `run_step` (the PS-side gate), so
+/// this loop carries no synchronization of its own.
 fn drive_devices(
     chunk: &mut [DeviceWorker],
-    server: &ParameterServer,
     train: &Dataset,
-    progress: &Progress,
     first_step: usize,
     rounds: usize,
     devices: usize,
-    window: usize,
-    eval_every: usize,
-    rng_mode: RngMode,
-) -> Result<Vec<DeviceStats>> {
-    let mut stats: Vec<DeviceStats> =
-        chunk.iter().map(|w| DeviceStats::new(w.device)).collect();
+) -> Result<()> {
     for t in 1..=rounds {
-        let gate = eval_gate(t, eval_every);
-        for (i, w) in chunk.iter_mut().enumerate() {
-            // schedule-local index gates progress; the record tag is global
+        for w in chunk.iter_mut() {
             let l = (t - 1) * devices + w.device;
-            progress.wait_start(l, window, gate)?;
             let rec = w
-                .run_step(t, first_step + l, server, train, rng_mode)
+                .run_step(t, l, first_step + l, train)
                 .with_context(|| format!("step t={t} k={}", w.device))?;
-            let st = &mut stats[i];
-            st.up_bits += rec.up_bits;
-            st.down_bits += rec.down_bits;
-            st.steps += 1;
-            if t == rounds {
-                st.last_round_loss = rec.loss;
-            }
             log_debug!(
                 "t={t} k={} g={} loss={:.4} acc={:.3} up={}b down={}b",
                 w.device,
@@ -216,29 +83,47 @@ fn drive_devices(
                 rec.up_bits,
                 rec.down_bits
             );
-            progress.complete(l);
         }
     }
-    Ok(stats)
+    Ok(())
 }
 
 impl Scheduler {
-    /// Train `rounds` rounds over the workers' devices; fills everything in
-    /// the summary except the final evaluation and wall/exec/link times
-    /// (the [`Trainer`](crate::coordinator::Trainer) facade adds those).
+    /// Train `rounds` rounds over the endpoint's fleet; local devices are
+    /// driven by `workers`, remote devices (if any) connect over the
+    /// listening transport and are awaited at the watermark.
     pub fn run(
         &self,
+        endpoint: &PsEndpoint,
         server: &ParameterServer,
         workers: &mut [DeviceWorker],
         train: &Dataset,
         test: &Dataset,
     ) -> Result<TrainSummary> {
         let t0 = Instant::now();
-        let mut summary = if self.concurrency <= 1 {
-            self.run_sequential(server, workers, train, test)?
+        let devices = endpoint.devices();
+        let sequential = self.concurrency <= 1 && workers.len() == devices;
+        // the sequential driver evaluates inline between rounds, so its
+        // gate needs no eval barriers
+        let eval_gate_every = if sequential { 0 } else { self.eval_every };
+        endpoint.begin_run(self.rounds, self.first_step, eval_gate_every);
+        let res = if sequential {
+            self.run_sequential(server, workers, devices, train, test)
         } else {
-            self.run_concurrent(server, workers, train, test)?
+            self.run_concurrent(endpoint, server, workers, devices, train, test)
         };
+        let totals = endpoint.finish_run();
+        let mut summary = res?;
+        // fold per-device totals in device order so float sums match the
+        // sequential path exactly
+        let mut last_losses = Vec::with_capacity(devices);
+        for t in &totals {
+            summary.total_up_bits += t.up_bits;
+            summary.total_down_bits += t.down_bits;
+            summary.steps += t.steps;
+            last_losses.push(t.last_round_loss);
+        }
+        summary.mean_loss_last_round = mean_loss(&last_losses);
         summary.final_acc = server.evaluate(test)?;
         summary.eval_history.push((self.rounds, summary.final_acc));
         summary.wall_s = t0.elapsed().as_secs_f64();
@@ -255,25 +140,20 @@ impl Scheduler {
         &self,
         server: &ParameterServer,
         workers: &mut [DeviceWorker],
+        devices: usize,
         train: &Dataset,
         test: &Dataset,
     ) -> Result<TrainSummary> {
-        let devices = workers.len();
         let mut summary = TrainSummary::default();
-        let mut last_round_losses = Vec::with_capacity(devices);
         for t in 1..=self.rounds {
-            last_round_losses.clear();
-            for (k, w) in workers.iter_mut().enumerate() {
-                let g = self.first_step + (t - 1) * devices + k;
+            for w in workers.iter_mut() {
+                let l = (t - 1) * devices + w.device;
                 let rec = w
-                    .run_step(t, g, server, train, RngMode::SharedSequential)
-                    .with_context(|| format!("step t={t} k={k}"))?;
-                summary.total_up_bits += rec.up_bits;
-                summary.total_down_bits += rec.down_bits;
-                summary.steps += 1;
-                last_round_losses.push(rec.loss);
+                    .run_step(t, l, self.first_step + l, train)
+                    .with_context(|| format!("step t={t} k={}", w.device))?;
                 log_debug!(
-                    "t={t} k={k} loss={:.4} acc={:.3} up={}b down={}b",
+                    "t={t} k={} loss={:.4} acc={:.3} up={}b down={}b",
+                    w.device,
                     rec.loss,
                     rec.train_acc,
                     rec.up_bits,
@@ -286,50 +166,41 @@ impl Scheduler {
                 log_info!("round {t}: eval acc {:.4}", acc);
             }
         }
-        summary.mean_loss_last_round = mean_loss(&last_round_losses);
         Ok(summary)
     }
 
     /// The threaded path: contiguous device chunks on `concurrency` scoped
-    /// threads, step entry gated by the staleness window, the scheduler
-    /// thread serving eval barriers.
+    /// threads, step entry gated PS-side by the staleness window, the
+    /// scheduler thread serving eval barriers. Devices beyond the local
+    /// workers are remote — their steps arrive over the listening
+    /// transport and are awaited at the final watermark.
     fn run_concurrent(
         &self,
+        endpoint: &PsEndpoint,
         server: &ParameterServer,
         workers: &mut [DeviceWorker],
+        devices: usize,
         train: &Dataset,
         test: &Dataset,
     ) -> Result<TrainSummary> {
-        let devices = workers.len();
-        let total_steps = self.rounds * devices;
-        let window = self.staleness * devices;
-        let rng_mode = if self.staleness == 0 {
-            RngMode::SharedSequential
-        } else {
-            RngMode::PerDevice
-        };
         let conc = self.concurrency.max(1);
-        let chunk_len = (devices + conc - 1) / conc;
+        let chunk_len = ((workers.len() + conc - 1) / conc).max(1);
         let (rounds, eval_every) = (self.rounds, self.eval_every);
         let first_step = self.first_step;
-        let progress = Progress::new(total_steps);
+        let gate = &endpoint.gate;
 
         let mut eval_history: Vec<(usize, f32)> = Vec::new();
         let mut eval_err: Option<crate::util::Error> = None;
-        let results: Vec<Result<Vec<DeviceStats>>> = std::thread::scope(|s| {
-            let progress = &progress;
+        let results: Vec<Result<()>> = std::thread::scope(|s| {
             // released only after every worker handle is joined: if the
             // scheduler thread itself panics, the workers still unblock
-            let mut scope_guard = AbortOnDrop { progress, armed: true };
+            let mut scope_guard = AbortOnDrop { gate, armed: true };
             let handles: Vec<_> = workers
                 .chunks_mut(chunk_len)
                 .map(|chunk| {
                     s.spawn(move || {
-                        let mut guard = AbortOnDrop { progress, armed: true };
-                        let res = drive_devices(
-                            chunk, server, train, progress, first_step, rounds, devices,
-                            window, eval_every, rng_mode,
-                        );
+                        let mut guard = AbortOnDrop { gate, armed: true };
+                        let res = drive_devices(chunk, train, first_step, rounds, devices);
                         guard.armed = res.is_err();
                         res
                     })
@@ -341,18 +212,18 @@ impl Scheduler {
             if eval_every > 0 {
                 let mut t = eval_every;
                 while t <= rounds {
-                    if progress.wait_watermark(t * devices).is_err() {
+                    if gate.wait_watermark(t * devices).is_err() {
                         break; // a worker aborted; its error is joined below
                     }
                     match server.evaluate(test) {
                         Ok(acc) => {
                             eval_history.push((t, acc));
                             log_info!("round {t}: eval acc {:.4}", acc);
-                            progress.eval_done(t);
+                            gate.eval_done(t);
                         }
                         Err(e) => {
                             eval_err = Some(e);
-                            progress.abort();
+                            gate.abort();
                             break;
                         }
                     }
@@ -374,45 +245,32 @@ impl Scheduler {
         // surface the root cause: a failing worker aborts the schedule, which
         // makes its peers fail with a generic "scheduler aborted" error —
         // prefer the first error that is NOT one of those secondary victims
-        let mut per_device: Vec<Option<DeviceStats>> = (0..devices).map(|_| None).collect();
         let mut first_err: Option<crate::util::Error> = None;
         for res in results {
-            match res {
-                Ok(stats) => {
-                    for stat in stats {
-                        per_device[stat.device] = Some(stat);
-                    }
-                }
-                Err(e) => {
-                    let keep_current = matches!(
-                        &first_err,
-                        Some(cur) if !cur.to_string().contains("scheduler aborted")
-                    );
-                    if !keep_current
-                        && (first_err.is_none()
-                            || !e.to_string().contains("scheduler aborted"))
-                    {
-                        first_err = Some(e);
-                    }
+            if let Err(e) = res {
+                let keep_current = matches!(
+                    &first_err,
+                    Some(cur) if !cur.to_string().contains("scheduler aborted")
+                );
+                if !keep_current
+                    && (first_err.is_none() || !e.to_string().contains("scheduler aborted"))
+                {
+                    first_err = Some(e);
                 }
             }
         }
         if let Some(e) = first_err {
             return Err(e);
         }
-        // fold per-device totals in device order so float sums match the
-        // sequential path exactly
-        let mut summary = TrainSummary::default();
-        let mut last_losses = Vec::with_capacity(devices);
-        for (k, stat) in per_device.into_iter().enumerate() {
-            let stat = stat.with_context(|| format!("device {k} reported no stats"))?;
-            summary.total_up_bits += stat.up_bits;
-            summary.total_down_bits += stat.down_bits;
-            summary.steps += stat.steps;
-            last_losses.push(stat.last_round_loss);
+
+        // remote devices: their commits advance the same watermark — block
+        // until the whole schedule has committed
+        if workers.len() < devices {
+            gate.wait_watermark(rounds * devices)?;
         }
+
+        let mut summary = TrainSummary::default();
         summary.eval_history = eval_history;
-        summary.mean_loss_last_round = mean_loss(&last_losses);
         Ok(summary)
     }
 }
@@ -420,57 +278,6 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn watermark_advances_over_out_of_order_completion() {
-        let p = Progress::new(4);
-        p.complete(2);
-        assert_eq!(p.state.lock().unwrap().watermark, 0);
-        p.complete(0);
-        assert_eq!(p.state.lock().unwrap().watermark, 1);
-        p.complete(1);
-        // 0,1,2 done -> watermark jumps past the out-of-order step
-        assert_eq!(p.state.lock().unwrap().watermark, 3);
-        p.complete(3);
-        assert_eq!(p.state.lock().unwrap().watermark, 4);
-    }
-
-    #[test]
-    fn strict_window_blocks_and_releases() {
-        // S=0 (window 0): step 1 must wait for step 0; once 0 completes the
-        // start gate opens without blocking
-        let p = Progress::new(2);
-        p.complete(0);
-        assert!(p.wait_start(1, 0, 0).is_ok());
-    }
-
-    #[test]
-    fn stale_window_admits_lookahead() {
-        // window 2: steps 1 and 2 may start with nothing completed, step 3
-        // may not until the watermark reaches 1
-        let p = Progress::new(8);
-        assert!(p.wait_start(2, 2, 0).is_ok());
-        p.complete(0);
-        assert!(p.wait_start(3, 2, 0).is_ok());
-    }
-
-    #[test]
-    fn abort_unblocks_waiters_with_error() {
-        let p = Progress::new(4);
-        p.abort();
-        assert!(p.wait_start(3, 0, 0).is_err());
-        assert!(p.wait_watermark(4).is_err());
-    }
-
-    #[test]
-    fn eval_gate_is_latest_boundary_before_round() {
-        assert_eq!(eval_gate(1, 0), 0);
-        assert_eq!(eval_gate(1, 2), 0);
-        assert_eq!(eval_gate(2, 2), 0);
-        assert_eq!(eval_gate(3, 2), 2);
-        assert_eq!(eval_gate(4, 2), 2);
-        assert_eq!(eval_gate(5, 2), 4);
-    }
 
     #[test]
     fn mean_loss_matches_sequential_accumulation() {

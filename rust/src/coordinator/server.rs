@@ -17,7 +17,7 @@
 //! The model itself executes through the shared [`Backend`] (`&self`
 //! methods, `Send + Sync`), so no backend state is duplicated per worker.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::coordinator::metrics::MetricsWriter;
@@ -57,7 +57,9 @@ struct ServerState {
 }
 
 pub struct ParameterServer {
-    backend: Box<dyn Backend>,
+    /// shared with in-process device workers (one engine, no duplicated
+    /// backend state); a remote device process builds its own instance
+    backend: Arc<dyn Backend>,
     preset: PresetInfo,
     state: Mutex<ServerState>,
     /// the single Algorithm-1 uplink-encode stream; under strict (S = 0)
@@ -69,7 +71,7 @@ pub struct ParameterServer {
 
 impl ParameterServer {
     pub fn new(
-        backend: Box<dyn Backend>,
+        backend: Arc<dyn Backend>,
         wd: ParamSet,
         ws: ParamSet,
         lr: f32,
@@ -224,7 +226,8 @@ mod tests {
     use crate::runtime::create_backend;
 
     fn tiny_server(per_device_opt: bool) -> ParameterServer {
-        let backend = create_backend(Default::default(), "artifacts", "tiny").unwrap();
+        let backend: Arc<dyn crate::runtime::Backend> =
+            Arc::from(create_backend(Default::default(), "artifacts", "tiny").unwrap());
         let (wd, ws) = backend.init_params().unwrap();
         ParameterServer::new(
             backend,

@@ -11,38 +11,59 @@
 //!      `device_bwd` → ∇w_d; the (PS-held) device ADAM steps w_d (Sec. III-A)
 //!
 //! Steps 1-3 and 6 are the [`DeviceWorker`] half, 4-5 the
-//! [`ParameterServer`] half; the [`Scheduler`] drives K workers over them —
-//! sequentially (the default, exactly Algorithm 1) or concurrently with a
-//! bounded-staleness window (`--staleness S`, `--concurrent-devices N`).
-//! `Trainer` wires the three roles up from a [`TrainConfig`] and keeps the
-//! original `new`/`step`/`run`/`evaluate`/`probe_features` surface.
+//! [`ParameterServer`] half — and since the transport refactor the two
+//! halves only ever talk through protocol messages over a [`Connection`].
+//! `Trainer` wires the fleet from a [`TrainConfig`]: it builds the PS
+//! message endpoint ([`PsEndpoint`]) plus one serve loop per device link,
+//! over bounded in-process channels (`--transport inproc`, the default) or
+//! real TCP sockets (`--transport tcp`), and keeps the original
+//! `new`/`step`/`run`/`evaluate`/`probe_features` surface. With
+//! `--devices-remote R` the last R devices are *not* built locally — they
+//! join over the listening socket from separate processes (`splitfc
+//! device`), and the scheduler awaits their commits at the watermark.
 
-use crate::compression::CodecParams;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::compression::{Codec, CodecParams};
 use crate::config::{PartitionKind, TrainConfig};
 use crate::coordinator::metrics::{MetricsWriter, StepRecord, TrainSummary};
+use crate::coordinator::protocol::PsEndpoint;
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::server::ParameterServer;
-use crate::coordinator::worker::{DeviceWorker, RngMode};
+use crate::coordinator::worker::DeviceWorker;
 use crate::data::{
     dirichlet_partition, label_shards, writer_groups, Dataset, MiniBatchLoader, SynthSpec,
 };
 use crate::ensure;
-use crate::model::PresetInfo;
+use crate::model::{ParamSet, PresetInfo};
 use crate::runtime::{create_backend, Backend};
 use crate::tensor::Matrix;
-use crate::transport::{Link, LinkReport};
+use crate::transport::{
+    fading_capacities, inproc_pair, Connection, Link, LinkReport, Msg, TcpConn, TransportKind,
+    WireLimits,
+};
 use crate::util::error::Result;
 use crate::util::Rng;
 
 pub struct Trainer {
     pub cfg: TrainConfig,
     preset: PresetInfo,
-    server: ParameterServer,
+    server: Arc<ParameterServer>,
+    endpoint: Arc<PsEndpoint>,
     workers: Vec<DeviceWorker>,
     train: Dataset,
     test: Dataset,
     /// global index tag for facade-driven (manual) steps
     steps_taken: usize,
+    /// bound address of the TCP listener (`--transport tcp` only)
+    listen_addr: Option<String>,
+    /// tells the acceptor loop to wind down on drop
+    stop: Arc<AtomicBool>,
+    /// PS-side serve/acceptor threads, joined on drop
+    handles: Vec<JoinHandle<()>>,
 }
 
 fn synth_spec_for(preset: &str) -> SynthSpec {
@@ -54,67 +75,170 @@ fn synth_spec_for(preset: &str) -> SynthSpec {
     }
 }
 
+/// Everything both sides of the fleet derive deterministically from the
+/// config: backend + initial parameters, datasets, per-device loaders and
+/// RNG forks, codec parameters, link capacities, wire limits. A remote
+/// device process (`splitfc device`) rebuilds the *same* parts from the
+/// same flags — the fork order below is trajectory-critical, so device
+/// identity holds across process boundaries.
+pub struct FleetParts {
+    pub backend: Arc<dyn Backend>,
+    pub preset: PresetInfo,
+    pub wd: ParamSet,
+    pub ws: ParamSet,
+    pub train: Dataset,
+    pub test: Dataset,
+    pub loaders: Vec<MiniBatchLoader>,
+    /// the PS-held Algorithm-1 encode stream
+    pub shared_rng: Rng,
+    /// per-device worker streams (used when staleness > 0)
+    pub worker_rngs: Vec<Rng>,
+    pub up_params: CodecParams,
+    pub down_params: CodecParams,
+    /// per-device link capacity in bits/s (log-normal draw around the
+    /// nominal when `--fading-sigma` > 0, else uniform)
+    pub capacities: Vec<f64>,
+    pub limits: WireLimits,
+}
+
+/// Build the deterministic fleet parts. RNG discipline: every fork below
+/// happens in the exact order of the pre-refactor monolithic trainer
+/// (partitions → K loader forks → shared stream → K worker forks), so
+/// sequential runs reproduce its trajectories bit for bit.
+pub fn build_parts(cfg: &TrainConfig) -> Result<FleetParts> {
+    // size the parallel runtime (matmul blocks, FWQ planning) for this
+    // run; 0 = unset, which leaves the process-global pool alone (auto
+    // by default) so library callers' explicit set_threads survives.
+    // Exception: with concurrent device workers active, an auto-sized
+    // inner pool would spawn `workers × cores` threads (every backend
+    // call in every worker fans out over the whole machine) — divide
+    // the cores between the two layers instead.
+    let worker_threads = cfg.resolved_concurrency();
+    if cfg.threads > 0 {
+        crate::util::par::set_threads(cfg.threads);
+    } else if worker_threads > 1 {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        crate::util::par::set_threads((cores / worker_threads).max(1));
+    }
+    let backend: Arc<dyn Backend> =
+        Arc::from(create_backend(cfg.backend, &cfg.artifacts_dir, &cfg.preset)?);
+    let preset = backend.preset().clone();
+    let (wd, ws) = backend.init_params()?;
+    ensure!(wd.n_params() == preset.nd_params);
+    ensure!(ws.n_params() == preset.ns_params);
+
+    let mut rng = Rng::new(cfg.seed.wrapping_mul(0x9E3779B9).wrapping_add(7));
+    let spec = synth_spec_for(&cfg.preset);
+    // consistency between model input shape and dataset spec
+    ensure!(
+        spec.sample_dim() == preset.sample_dim(),
+        "dataset spec {:?} vs model input {:?}",
+        (spec.channels, spec.height, spec.width),
+        preset.in_shape
+    );
+    let train = Dataset::generate(&spec, cfg.n_train, cfg.seed);
+    let test = Dataset::generate(&spec, cfg.n_test, cfg.seed.wrapping_add(0xE7A1));
+
+    let parts = match cfg.partition {
+        PartitionKind::LabelShards => label_shards(&train, cfg.devices, 2, &mut rng),
+        PartitionKind::Dirichlet => dirichlet_partition(&train, cfg.devices, 0.3, &mut rng),
+        PartitionKind::Writers => writer_groups(&train, cfg.devices, &mut rng),
+    };
+    let loaders: Vec<MiniBatchLoader> = parts
+        .into_iter()
+        .enumerate()
+        .map(|(k, mut p)| {
+            if p.is_empty() {
+                // degenerate partition (tiny runs): give it one sample
+                p.push(k % train.n);
+            }
+            MiniBatchLoader::new(p, preset.batch, rng.fork(k as u64))
+        })
+        .collect();
+
+    // the Algorithm-1 encode stream forks exactly where the monolithic
+    // trainer forked it (after the K loader forks); per-device streams
+    // for staleness > 0 fork afterwards and don't perturb it
+    let shared_rng = rng.fork(0xFFFF);
+    let worker_rngs: Vec<Rng> =
+        (0..cfg.devices).map(|k| rng.fork(0x1_0000 + k as u64)).collect();
+
+    // codec parameters shared by device and PS sides of every link
+    let up_params = CodecParams::new(preset.batch, preset.dbar, cfg.up_bits_per_entry)
+        .with_q_ep(cfg.q_ep)
+        .with_noise_seed(cfg.noise_seed)
+        .with_chan_size(preset.chan_size);
+    let down_params = CodecParams::new(preset.batch, preset.dbar, cfg.down_bits_per_entry)
+        .with_q_ep(cfg.q_ep)
+        .with_noise_seed(cfg.noise_seed)
+        .with_chan_size(preset.chan_size);
+
+    // heterogeneous link capacities draw from a dedicated generator so
+    // turning fading on cannot perturb the training RNG chain
+    let capacities = if cfg.fading_sigma > 0.0 {
+        fading_capacities(
+            cfg.devices,
+            cfg.link_capacity_bps,
+            cfg.fading_sigma,
+            cfg.seed ^ 0xFAD1_0CEA,
+        )
+    } else {
+        vec![cfg.link_capacity_bps; cfg.devices]
+    };
+    let limits =
+        WireLimits::for_shapes(preset.batch, preset.dbar, preset.nd_params, preset.classes);
+
+    Ok(FleetParts {
+        backend,
+        preset,
+        wd,
+        ws,
+        train,
+        test,
+        loaders,
+        shared_rng,
+        worker_rngs,
+        up_params,
+        down_params,
+        capacities,
+        limits,
+    })
+}
+
 impl Trainer {
     pub fn new(cfg: TrainConfig) -> Result<Trainer> {
-        // size the parallel runtime (matmul blocks, FWQ planning) for this
-        // run; 0 = unset, which leaves the process-global pool alone (auto
-        // by default) so library callers' explicit set_threads survives.
-        // Exception: with concurrent device workers active, an auto-sized
-        // inner pool would spawn `workers × cores` threads (every backend
-        // call in every worker fans out over the whole machine) — divide
-        // the cores between the two layers instead.
-        let worker_threads = cfg.resolved_concurrency();
-        if cfg.threads > 0 {
-            crate::util::par::set_threads(cfg.threads);
-        } else if worker_threads > 1 {
-            let cores = std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1);
-            crate::util::par::set_threads((cores / worker_threads).max(1));
-        }
-        let backend = create_backend(cfg.backend, &cfg.artifacts_dir, &cfg.preset)?;
-        let preset = backend.preset().clone();
-        let (wd, ws) = backend.init_params()?;
-        ensure!(wd.n_params() == preset.nd_params);
-        ensure!(ws.n_params() == preset.ns_params);
-
-        let mut rng = Rng::new(cfg.seed.wrapping_mul(0x9E3779B9).wrapping_add(7));
-        let spec = synth_spec_for(&cfg.preset);
-        // consistency between model input shape and dataset spec
         ensure!(
-            spec.sample_dim() == preset.sample_dim(),
-            "dataset spec {:?} vs model input {:?}",
-            (spec.channels, spec.height, spec.width),
-            preset.in_shape
+            cfg.devices_remote <= cfg.devices,
+            "--devices-remote {} exceeds the fleet size {}",
+            cfg.devices_remote,
+            cfg.devices
         );
-        let train = Dataset::generate(&spec, cfg.n_train, cfg.seed);
-        let test = Dataset::generate(&spec, cfg.n_test, cfg.seed.wrapping_add(0xE7A1));
-
-        let parts = match cfg.partition {
-            PartitionKind::LabelShards => label_shards(&train, cfg.devices, 2, &mut rng),
-            PartitionKind::Dirichlet => dirichlet_partition(&train, cfg.devices, 0.3, &mut rng),
-            PartitionKind::Writers => writer_groups(&train, cfg.devices, &mut rng),
-        };
-        let loaders: Vec<MiniBatchLoader> = parts
-            .into_iter()
-            .enumerate()
-            .map(|(k, mut p)| {
-                if p.is_empty() {
-                    // degenerate partition (tiny runs): give it one sample
-                    p.push(k % train.n);
-                }
-                MiniBatchLoader::new(p, preset.batch, rng.fork(k as u64))
-            })
-            .collect();
-
-        // the Algorithm-1 encode stream forks exactly where the monolithic
-        // trainer forked it (after the K loader forks), so sequential runs
-        // reproduce the pre-refactor trajectories bit-for-bit; per-device
-        // streams for staleness > 0 fork afterwards and don't perturb it
-        let shared_rng = rng.fork(0xFFFF);
-        let metrics = MetricsWriter::create(&cfg.metrics_path);
-        let server = ParameterServer::new(
+        ensure!(
+            cfg.devices_remote == 0 || cfg.transport == TransportKind::Tcp,
+            "--devices-remote needs --transport tcp (a remote process cannot \
+             join an in-process channel)"
+        );
+        let FleetParts {
             backend,
+            preset,
+            wd,
+            ws,
+            train,
+            test,
+            loaders,
+            shared_rng,
+            worker_rngs,
+            up_params,
+            down_params,
+            capacities,
+            limits,
+        } = build_parts(&cfg)?;
+
+        let metrics = MetricsWriter::create(&cfg.metrics_path);
+        let server = Arc::new(ParameterServer::new(
+            backend.clone(),
             wd,
             ws,
             cfg.lr,
@@ -122,33 +246,105 @@ impl Trainer {
             cfg.per_device_opt,
             shared_rng,
             metrics,
-        );
-        // codec parameters shared by device and PS sides of every link
-        let up_params = CodecParams::new(preset.batch, preset.dbar, cfg.up_bits_per_entry)
-            .with_q_ep(cfg.q_ep)
-            .with_noise_seed(cfg.noise_seed)
-            .with_chan_size(preset.chan_size);
-        let down_params = CodecParams::new(preset.batch, preset.dbar, cfg.down_bits_per_entry)
-            .with_q_ep(cfg.q_ep)
-            .with_noise_seed(cfg.noise_seed)
-            .with_chan_size(preset.chan_size);
-        // one codec *session* per device: sessionful codecs (error feedback)
-        // keep per-device state, so instances are never shared across links
-        let mut workers: Vec<DeviceWorker> = Vec::with_capacity(loaders.len());
-        for (k, loader) in loaders.into_iter().enumerate() {
+        ));
+        // one codec *session* per device on EACH side of the link:
+        // device-side sessions own uplink-encode state (error feedback),
+        // PS-side sessions own uplink-decode/downlink-encode state —
+        // instances are never shared across links or across the wire
+        let ps_codecs: Vec<Box<dyn Codec>> = (0..cfg.devices)
+            .map(|_| cfg.scheme.build())
+            .collect::<Result<Vec<_>>>()?;
+        let endpoint = Arc::new(PsEndpoint::new(
+            server.clone(),
+            cfg.staleness,
+            up_params.clone(),
+            down_params.clone(),
+            ps_codecs,
+            preset.nd_params,
+        ));
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles: Vec<JoinHandle<()>> = Vec::new();
+        let mut listen_addr = None;
+        let local_n = cfg.devices - cfg.devices_remote;
+
+        // one Connection per local device, plus the PS-side serve loops
+        let mut conns: Vec<Box<dyn Connection>> = Vec::with_capacity(local_n);
+        match cfg.transport {
+            TransportKind::InProc => {
+                for _ in 0..local_n {
+                    let (dev_end, ps_end) = inproc_pair(4);
+                    let ep = endpoint.clone();
+                    handles.push(std::thread::spawn(move || {
+                        let mut conn = ps_end;
+                        let _ = ep.serve(&mut conn, false);
+                    }));
+                    conns.push(Box::new(dev_end));
+                }
+            }
+            TransportKind::Tcp => {
+                let listener = TcpListener::bind(&cfg.listen)
+                    .map_err(|e| crate::err!("bind {}: {e}", cfg.listen))?;
+                let addr = listener
+                    .local_addr()
+                    .map_err(|e| crate::err!("local_addr: {e}"))?
+                    .to_string();
+                listener
+                    .set_nonblocking(true)
+                    .map_err(|e| crate::err!("set_nonblocking: {e}"))?;
+                let ep = endpoint.clone();
+                let stop2 = stop.clone();
+                handles.push(std::thread::spawn(move || {
+                    accept_loop(listener, ep, limits, &stop2)
+                }));
+                for k in 0..local_n {
+                    let mut conn = TcpConn::connect(&addr, limits)?;
+                    if let Some((fk, n)) = cfg.chaos_drop {
+                        if fk == k {
+                            conn.set_fault_after_sends(n);
+                        }
+                    }
+                    conns.push(Box::new(conn));
+                }
+                listen_addr = Some(addr);
+            }
+        }
+
+        let mut workers: Vec<DeviceWorker> = Vec::with_capacity(local_n);
+        for (((k, loader), rng), conn) in loaders
+            .into_iter()
+            .enumerate()
+            .zip(worker_rngs)
+            .zip(conns)
+            .take(local_n)
+        {
             workers.push(DeviceWorker::new(
                 k,
                 loader,
-                rng.fork(0x1_0000 + k as u64),
-                Link::new(cfg.link_capacity_bps, cfg.link_latency_s),
+                rng,
+                Link::new(capacities[k], cfg.link_latency_s),
                 cfg.scheme.build()?,
                 &preset,
                 up_params.clone(),
                 down_params.clone(),
+                backend.clone(),
+                conn,
             ));
         }
 
-        Ok(Trainer { cfg, preset, server, workers, train, test, steps_taken: 0 })
+        Ok(Trainer {
+            cfg,
+            preset,
+            server,
+            endpoint,
+            workers,
+            train,
+            test,
+            steps_taken: 0,
+            listen_addr,
+            stop,
+            handles,
+        })
     }
 
     /// Static description of the loaded model (shapes, parameter layout).
@@ -166,7 +362,14 @@ impl Trainer {
         &self.server
     }
 
-    /// Aggregate communication accounting across every device link.
+    /// Where the TCP transport is listening (None on inproc). Remote
+    /// device processes dial this with `splitfc device --connect`.
+    pub fn listen_addr(&self) -> Option<&str> {
+        self.listen_addr.as_deref()
+    }
+
+    /// Aggregate communication accounting across every *local* device
+    /// link (remote devices account on their own side).
     pub fn link_report(&self) -> LinkReport {
         LinkReport::aggregate(self.workers.iter().map(|w| w.link_report()))
     }
@@ -174,15 +377,11 @@ impl Trainer {
     /// Run one (t, k) protocol step, sequential Algorithm-1 semantics
     /// (shared encode stream, updates applied in call order).
     pub fn step(&mut self, round: usize, device: usize) -> Result<StepRecord> {
+        ensure!(device < self.workers.len(), "device {device} is not local");
+        self.endpoint.begin_manual();
         let g = self.steps_taken;
         self.steps_taken += 1;
-        self.workers[device].run_step(
-            round,
-            g,
-            &self.server,
-            &self.train,
-            RngMode::SharedSequential,
-        )
+        self.workers[device].run_step(round, g, g, &self.train)
     }
 
     /// Test-set accuracy via the backend's full-model forward.
@@ -192,7 +391,8 @@ impl Trainer {
 
     /// Full training run: T rounds over K devices (Alg. 1), driven by the
     /// scheduler — sequentially by default, concurrently when the config
-    /// asks for worker threads (`staleness`/`concurrent_devices`).
+    /// asks for worker threads (`staleness`/`concurrent_devices`), with
+    /// remote devices joining over the listening transport.
     pub fn run(&mut self) -> Result<TrainSummary> {
         let sched = Scheduler {
             rounds: self.cfg.rounds,
@@ -201,7 +401,13 @@ impl Trainer {
             concurrency: self.cfg.resolved_concurrency(),
             eval_every: self.cfg.eval_every,
         };
-        let summary = sched.run(&self.server, &mut self.workers, &self.train, &self.test)?;
+        let summary = sched.run(
+            &self.endpoint,
+            &self.server,
+            &mut self.workers,
+            &self.train,
+            &self.test,
+        )?;
         self.steps_taken += summary.steps;
         self.server.write_metrics(&summary.to_json());
         self.server.flush_metrics();
@@ -210,6 +416,142 @@ impl Trainer {
 
     /// The features + σ stats of one fresh batch (Fig.-1 dispersion bench).
     pub fn probe_features(&mut self, device: usize) -> Result<(Matrix, Vec<f32>)> {
-        self.workers[device].probe_features(&self.server, &self.train)
+        ensure!(device < self.workers.len(), "device {device} is not local");
+        self.workers[device].probe_features(&self.train)
     }
+}
+
+impl Drop for Trainer {
+    fn drop(&mut self) {
+        // workers send Bye and close their connections, which winds down
+        // the per-link serve loops; then stop the acceptor and join
+        self.workers.clear();
+        self.stop.store(true, Ordering::Relaxed);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// PS-side accept loop: poll the nonblocking listener, hand every accepted
+/// socket its own detached serve thread (replay caching on — TCP peers
+/// reconnect). Runs until the trainer drops.
+fn accept_loop(
+    listener: TcpListener,
+    endpoint: Arc<PsEndpoint>,
+    limits: WireLimits,
+    stop: &AtomicBool,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((sock, _)) => {
+                let _ = sock.set_nonblocking(false);
+                let ep = endpoint.clone();
+                std::thread::spawn(move || {
+                    let mut conn = TcpConn::from_stream(sock, limits);
+                    let _ = ep.serve(&mut conn, true);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Device-side main for a remote process (`splitfc device`): rebuild the
+/// deterministic fleet parts from the *same* preset + flags as the server
+/// run, dial the PS, and drive this one device through every round. The
+/// pre-flight handshake polls until the server has armed its run (the
+/// `HelloAck` then reports a finite round count), so start order doesn't
+/// race; it also cross-checks the fleet size so a mis-matched config fails
+/// loudly instead of corrupting the trajectory.
+pub fn run_remote_device(cfg: &TrainConfig, device: usize, addr: &str) -> Result<LinkReport> {
+    ensure!(
+        device < cfg.devices,
+        "--device {device} out of range (fleet has {})",
+        cfg.devices
+    );
+    let FleetParts {
+        backend,
+        preset,
+        train,
+        loaders,
+        worker_rngs,
+        up_params,
+        down_params,
+        capacities,
+        limits,
+        ..
+    } = build_parts(cfg)?;
+    let codec = cfg.scheme.build()?;
+
+    // pre-flight: wait for the PS to arm the run
+    let (devices, rounds) = wait_for_run(addr, limits, device, codec.as_ref())?;
+    ensure!(
+        devices == cfg.devices,
+        "fleet-size mismatch: server has {devices} devices, local config has {}",
+        cfg.devices
+    );
+    let loader = loaders
+        .into_iter()
+        .nth(device)
+        .ok_or_else(|| crate::err!("no loader for device {device}"))?;
+    let rng = worker_rngs
+        .into_iter()
+        .nth(device)
+        .ok_or_else(|| crate::err!("no rng fork for device {device}"))?;
+    let conn = TcpConn::connect(addr, limits)?;
+    let mut worker = DeviceWorker::new(
+        device,
+        loader,
+        rng,
+        Link::new(capacities[device], cfg.link_latency_s),
+        codec,
+        &preset,
+        up_params,
+        down_params,
+        backend,
+        Box::new(conn),
+    );
+    for t in 1..=rounds {
+        let l = (t - 1) * devices + device;
+        worker.run_step(t, l, l, &train)?;
+    }
+    Ok(worker.link_report())
+}
+
+/// Poll `Hello` on short-lived connections until the PS reports an armed
+/// run (finite round count); returns (fleet size, rounds).
+fn wait_for_run(
+    addr: &str,
+    limits: WireLimits,
+    device: usize,
+    codec: &dyn Codec,
+) -> Result<(usize, usize)> {
+    for _ in 0..600 {
+        let mut conn = TcpConn::connect(addr, limits)?;
+        conn.send(Msg::Hello {
+            device: device as u32,
+            codec_id: codec.wire_id(),
+            codec_version: codec.wire_version(),
+        })?;
+        match conn.recv()? {
+            Msg::HelloAck { err: Some(reason), .. } => {
+                return Err(crate::err!("handshake rejected: {reason}"));
+            }
+            Msg::HelloAck { devices, rounds, .. } => {
+                let _ = conn.send(Msg::Bye { device: device as u32 });
+                if rounds != u32::MAX {
+                    return Ok((devices as usize, rounds as usize));
+                }
+            }
+            other => return Err(crate::err!("expected HelloAck, got {}", other.name())),
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    Err(crate::err!(
+        "timed out waiting for the server at {addr} to start its run"
+    ))
 }

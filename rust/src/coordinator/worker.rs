@@ -3,40 +3,44 @@
 //! One `DeviceWorker` per client k owns everything local to that device: its
 //! minibatch loader over the device's partition, its own RNG fork, its own
 //! uplink/downlink [`Link`] (per-device accounting, aggregated by
-//! [`LinkReport::aggregate`]), and its **codec session** — a
-//! [`Codec`] instance built from the configured spec through the registry,
-//! which also owns any cross-round compression state (e.g. the
-//! error-feedback residual of `splitfc[...,ef]`). A worker runs the device
-//! half of a protocol step — forward, σ statistics (only when the codec's
-//! [`Codec::requirements`] ask for them), uplink encode, downlink decode
-//! with the chain-rule rescale δ_j/(1 - p_j), and the device backward pass —
-//! and talks to the [`ParameterServer`] only through its thread-safe
-//! methods, so K workers can execute steps concurrently under the
-//! scheduler's staleness window.
+//! [`LinkReport::aggregate`]), its **codec session** — a [`Codec`] instance
+//! built from the configured spec through the registry, which also owns any
+//! cross-round compression state (e.g. the error-feedback residual of
+//! `splitfc[...,ef]`) — and, since the transport refactor, a
+//! [`Connection`] to the parameter server. The worker holds **no**
+//! `ParameterServer` reference: every exchange is an explicit protocol
+//! message (`StepStart`/`Uplink`/`Commit` and their replies), identical
+//! over in-process channels and TCP sockets.
+//!
+//! A step is three request/reply pairs. On the shared-stream path
+//! (staleness 0), `StepGo` carries the PS's Algorithm-1 RNG state; the
+//! worker encodes with it and hands the advanced state back in `Uplink`,
+//! so the PS-held stream advances exactly as if the encode had run inside
+//! the PS — the monolithic trainer's trajectory, bit for bit.
+//!
+//! **Reconnect.** When a request fails with a transport io error on a
+//! reconnectable connection, the worker re-dials, replays the handshake,
+//! and resends *the same message* — never re-encoding, so the bytes the PS
+//! sees are independent of where the cut happened. The PS-side courier
+//! deduplicates; protocol rejections (`Abort`) are never retried.
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use crate::compression::{Codec, CodecParams, EncodedDownlink, GradMask, Reclaim, SigmaStats};
+use crate::compression::{Codec, CodecParams, GradMask, Reclaim, SigmaStats};
 use crate::coordinator::metrics::StepRecord;
-use crate::coordinator::server::ParameterServer;
+use crate::coordinator::protocol::model_sync_frame;
 use crate::data::{Dataset, MiniBatchLoader};
-use crate::model::PresetInfo;
+use crate::model::{f32_from_le_bytes, ParamSet, PresetInfo};
+use crate::runtime::Backend;
 use crate::tensor::Matrix;
-use crate::transport::{Direction, Link, LinkReport};
+use crate::transport::wire::{Frame, FrameKind};
+use crate::transport::{tcp, Connection, Direction, Link, LinkReport, Msg, StepReport};
 use crate::util::error::Result;
 use crate::util::Rng;
 
-/// Where a step draws its uplink-encode randomness.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum RngMode {
-    /// The PS-held Algorithm-1 stream, consumed in global step order.
-    /// Requires strict (staleness = 0) scheduling; reproduces the
-    /// monolithic round-robin trainer's trajectory exactly.
-    SharedSequential,
-    /// This worker's own deterministic fork — the concurrent (staleness
-    /// > 0) mode, where a shared stream would be consumed in racy order.
-    PerDevice,
-}
+/// Transport-fault retry budget: attempts per request before giving up.
+const RECONNECT_ATTEMPTS: usize = 5;
 
 pub struct DeviceWorker {
     pub device: usize,
@@ -51,8 +55,15 @@ pub struct DeviceWorker {
     classes: usize,
     /// from `codec.requirements()`: run the feature_stats kernel per step?
     use_sigma: bool,
-    /// reusable w_d snapshot buffer (filled by the PS each step)
-    wd_snapshot: Option<crate::model::ParamSet>,
+    /// the device's local execution engine (shared instance in-process;
+    /// a remote device process builds its own)
+    backend: Arc<dyn Backend>,
+    /// message pipe to the PS (in-process channel or TCP socket)
+    conn: Box<dyn Connection>,
+    /// reusable decode target for `ModelSync` w_d frames
+    wd_set: Option<ParamSet>,
+    /// handshake done on this connection?
+    greeted: bool,
 }
 
 impl DeviceWorker {
@@ -66,6 +77,8 @@ impl DeviceWorker {
         preset: &PresetInfo,
         up_params: CodecParams,
         down_params: CodecParams,
+        backend: Arc<dyn Backend>,
+        conn: Box<dyn Connection>,
     ) -> DeviceWorker {
         DeviceWorker {
             device,
@@ -78,7 +91,10 @@ impl DeviceWorker {
             classes: preset.classes,
             use_sigma: codec.requirements().needs_sigma,
             codec,
-            wd_snapshot: None,
+            backend,
+            conn,
+            wd_set: None,
+            greeted: false,
         }
     }
 
@@ -93,83 +109,184 @@ impl DeviceWorker {
         self.codec.as_ref()
     }
 
-    /// Run one full protocol step (t, k) for this device against the PS.
+    /// Handshake: identify this device and its codec session; the PS
+    /// rejects a codec id/version mismatch before any step runs.
+    fn hello(&mut self) -> Result<()> {
+        self.conn.send(Msg::Hello {
+            device: self.device as u32,
+            codec_id: self.codec.wire_id(),
+            codec_version: self.codec.wire_version(),
+        })?;
+        match self.conn.recv()? {
+            Msg::HelloAck { err: Some(reason), .. } => {
+                Err(crate::err!("handshake rejected: {reason}"))
+            }
+            Msg::HelloAck { .. } => {
+                self.greeted = true;
+                Ok(())
+            }
+            other => Err(crate::err!("expected HelloAck, got {}", other.name())),
+        }
+    }
+
+    /// One request/reply exchange with transport-fault recovery: on an io
+    /// error over a reconnectable link, re-dial, replay the handshake, and
+    /// resend the *same* message (the PS courier deduplicates). Protocol
+    /// `Abort` replies are returned as errors and never retried.
+    fn rpc(&mut self, msg: Msg) -> Result<Msg> {
+        let retriable = self.conn.is_reconnectable();
+        let backup = if retriable { Some(msg.clone()) } else { None };
+        let mut outcome = self.greet_and_exchange(msg);
+        if let Some(backup) = backup {
+            let mut attempts = 0;
+            while let Err(e) = &outcome {
+                if !tcp::is_io_error(e) || attempts >= RECONNECT_ATTEMPTS {
+                    break;
+                }
+                attempts += 1;
+                self.greeted = false;
+                std::thread::sleep(std::time::Duration::from_millis(20 * attempts as u64));
+                if self.conn.reconnect().is_err() {
+                    continue; // PS may still be tearing down the old handler
+                }
+                outcome = self.greet_and_exchange(backup.clone());
+            }
+        }
+        outcome
+    }
+
+    fn greet_and_exchange(&mut self, msg: Msg) -> Result<Msg> {
+        if !self.greeted {
+            self.hello()?;
+        }
+        self.exchange(msg)
+    }
+
+    fn exchange(&mut self, msg: Msg) -> Result<Msg> {
+        self.conn.send(msg)?;
+        match self.conn.recv()? {
+            Msg::Abort { reason } => Err(crate::err!("{reason}")),
+            reply => Ok(reply),
+        }
+    }
+
+    /// Run one full protocol step (t, k) for this device.
     ///
-    /// `global_step` is the step's position in the strict round-robin order
-    /// (the scheduler's first-step offset + (t-1)·K + k); it tags the
-    /// metrics record so concurrent traces stay attributable.
+    /// `local` is the step's schedule-local index ((t-1)·K + k within a
+    /// run) — the PS gates entry and deduplicates on it; `global_step` is
+    /// the metrics tag (the run's first-step offset + `local`).
     pub fn run_step(
         &mut self,
         round: usize,
+        local: usize,
         global_step: usize,
-        server: &ParameterServer,
         train: &Dataset,
-        rng_mode: RngMode,
     ) -> Result<StepRecord> {
         let t_step = Instant::now();
-        // backend time spent on this worker's thread (device fwd/stats/bwd);
-        // the PS half's time is returned by process_uplink
+        // backend time spent on this device (fwd/stats/bwd); the PS half's
+        // time arrives in the Downlink reply
         let mut device_exec_s = 0.0;
 
-        // 1. minibatch + device forward on a w_d snapshot (eq. 3); under
-        //    staleness > 0 the snapshot may lag in-flight updates
+        // 1. request step entry (blocks PS-side in the staleness gate) and
+        //    receive the current w_d as a ModelSync frame + the shared
+        //    Algorithm-1 RNG state (staleness-0 only)
+        let (wd_frame, rng_state) = match self.rpc(Msg::StepStart {
+            device: self.device as u32,
+            round: round as u32,
+            local: local as u64,
+        })? {
+            Msg::StepGo { wd, rng } => (wd, rng),
+            other => return Err(crate::err!("expected StepGo, got {}", other.name())),
+        };
+        self.link.transmit_sync(Direction::Downlink, &wd_frame);
+        self.decode_wd(&wd_frame)?;
+        // moved out of the slot for the step: `rpc` needs `&mut self` while
+        // the snapshot stays live across both exchanges below
+        let wd = self.wd_set.take().expect("w_d decoded");
+
+        // 2. minibatch + device forward (eq. 3); under staleness > 0 the
+        //    snapshot may lag in-flight updates
         let (x, y, _) = self.loader.next_batch(train, self.classes);
-        server.snapshot_device_params_into(&mut self.wd_snapshot);
-        let wd = self.wd_snapshot.as_ref().expect("snapshot populated");
         let t0 = Instant::now();
-        let f = server.backend().device_fwd(wd, &x)?;
+        let f = self.backend.device_fwd(&wd, &x)?;
         device_exec_s += t0.elapsed().as_secs_f64();
 
-        // 2. feature statistics (σ of the channel-normalized columns,
+        // 3. feature statistics (σ of the channel-normalized columns,
         //    eq. 10) — only when the codec's capability report asks for them
         let stats: Option<SigmaStats> = if self.use_sigma {
             let t0 = Instant::now();
-            let s = server.backend().feature_stats(&f)?;
+            let s = self.backend.feature_stats(&f)?;
             device_exec_s += t0.elapsed().as_secs_f64();
             Some(SigmaStats::new(s))
         } else {
             None
         };
 
-        // 3. uplink compression + transmit over this device's link
-        let enc = match rng_mode {
-            RngMode::SharedSequential => server.with_rng(|rng| {
-                self.codec.encode_uplink(&f, stats.as_ref(), &self.up_params, rng)
-            })?,
-            RngMode::PerDevice => {
-                self.codec.encode_uplink(&f, stats.as_ref(), &self.up_params, &mut self.rng)?
+        // 4. uplink compression — with the PS's shared stream (handing the
+        //    advanced state back) or this worker's own fork — and transmit
+        let (mut enc, advanced) = match &rng_state {
+            Some(st) => {
+                let mut shared = Rng::from_state(st);
+                let enc =
+                    self.codec.encode_uplink(&f, stats.as_ref(), &self.up_params, &mut shared)?;
+                (enc, Some(shared.export_state()))
+            }
+            None => {
+                let enc = self
+                    .codec
+                    .encode_uplink(&f, stats.as_ref(), &self.up_params, &mut self.rng)?;
+                (enc, None)
             }
         };
         self.link.transmit(Direction::Uplink, &enc.frame);
+        let up_frame = std::mem::replace(
+            &mut enc.frame,
+            Frame::new(FrameKind::FeaturesUp, Vec::new(), 0),
+        );
+        let up_bits = up_frame.payload_bits;
 
-        // 4./5. the PS half: server forward/backward + w_s update (one PS
-        //       critical section), then the mask-coupled downlink encode.
-        //       The PS execution time counts into this step's exec_s (the
-        //       monolithic trainer's per-step accounting) but reaches the
-        //       run total through process_uplink itself.
-        let (out, server_dt) = server.process_uplink(&enc.f_hat, &y)?;
-        let dn = self.codec.encode_downlink(&out.g, &enc.mask, &self.down_params)?;
-        self.link.transmit(Direction::Downlink, &dn.frame);
+        // 5. ship the frame + labels + mask to the PS; receive the
+        //    mask-coupled downlink (the server half ran in between)
+        let reply = self.rpc(Msg::Uplink {
+            device: self.device as u32,
+            local: local as u64,
+            frame: up_frame,
+            labels: y,
+            mask: enc.mask.clone(),
+            up_nominal: enc.nominal_bits,
+            rng: advanced,
+        })?;
+        let (dn_frame, loss, correct, server_dt, down_nominal) = match reply {
+            Msg::Downlink { frame, loss, correct, server_exec_s, down_nominal } => {
+                (frame, loss, correct, server_exec_s, down_nominal)
+            }
+            other => return Err(crate::err!("expected Downlink, got {}", other.name())),
+        };
+        self.link.transmit(Direction::Downlink, &dn_frame);
 
         // 6. downlink decode + chain-rule scale δ_j/(1-p_j), device backward
-        //    (eq. 7 backward path); the PS-held optimizer applies the update
-        let EncodedDownlink { frame: dn_frame, mut g_hat, nominal_bits: down_nominal } = dn;
+        //    (eq. 7 backward path)
+        let mut g_hat = self.codec.decode_downlink(&dn_frame, &enc.mask, &self.down_params)?;
         if let GradMask::Columns { kept, scale } = &enc.mask {
             g_hat.scale_cols(kept, scale);
         }
         let t0 = Instant::now();
-        let grad_wd = server.backend().device_bwd(wd, &x, &g_hat)?;
+        let grad_wd = self.backend.device_bwd(&wd, &x, &g_hat)?;
         device_exec_s += t0.elapsed().as_secs_f64();
-        server.apply_device_grad(self.device, &grad_wd);
-        server.add_exec(device_exec_s);
+        self.wd_set = Some(wd); // return the buffer for the next step
 
+        // 7. commit: hand ∇w_d back as a ModelSync frame with the step
+        //    report; the PS applies the update, writes the metrics record,
+        //    and advances the watermark
+        let grad_frame = model_sync_frame(&grad_wd);
+        self.link.transmit_sync(Direction::Uplink, &grad_frame);
         let rec = StepRecord {
             round,
             device: self.device,
             global_step,
-            loss: out.loss,
-            train_acc: out.correct / self.batch as f32,
-            up_bits: enc.frame.payload_bits,
+            loss,
+            train_acc: correct / self.batch as f32,
+            up_bits,
             down_bits: dn_frame.payload_bits,
             up_nominal: enc.nominal_bits,
             down_nominal,
@@ -177,28 +294,88 @@ impl DeviceWorker {
             // per-step execution time spans both halves, like the monolith's
             exec_s: device_exec_s + server_dt,
         };
+        let report = StepReport {
+            loss,
+            train_acc: rec.train_acc,
+            up_bits,
+            down_bits: rec.down_bits,
+            up_nominal: enc.nominal_bits,
+            down_nominal,
+            step_s: rec.step_s,
+            device_exec_s,
+        };
+        match self.rpc(Msg::Commit {
+            device: self.device as u32,
+            round: round as u32,
+            local: local as u64,
+            grad: grad_frame,
+            report,
+        })? {
+            Msg::CommitAck => {}
+            other => return Err(crate::err!("expected CommitAck, got {}", other.name())),
+        }
+
         // hand the round's buffers back to the codec session — arena-backed
-        // codecs reuse them next step (steady-state zero allocation)
+        // codecs reuse them next step
         self.codec.reclaim(Reclaim::Frame(dn_frame));
         self.codec.reclaim(Reclaim::Grad(g_hat));
         self.codec.reclaim(Reclaim::Uplink(enc));
-        server.write_metrics(&rec.to_json());
         Ok(rec)
     }
 
+    /// Decode a `ModelSync` w_d frame into the reusable parameter set.
+    fn decode_wd(&mut self, frame: &Frame) -> Result<()> {
+        match &mut self.wd_set {
+            Some(p) => {
+                crate::ensure!(
+                    frame.payload.len() == p.data.len() * 4,
+                    "w_d frame is {} bytes, expected {}",
+                    frame.payload.len(),
+                    p.data.len() * 4
+                );
+                for (dst, chunk) in p.data.iter_mut().zip(frame.payload.chunks_exact(4)) {
+                    *dst = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+                }
+            }
+            None => {
+                // first step: adopt the backend's parameter layout, then
+                // overwrite the values with the wire payload
+                let (mut wd, _) = self.backend.init_params()?;
+                crate::ensure!(
+                    frame.payload.len() == wd.data.len() * 4,
+                    "w_d frame is {} bytes, expected {}",
+                    frame.payload.len(),
+                    wd.data.len() * 4
+                );
+                wd.data = f32_from_le_bytes(&frame.payload);
+                self.wd_set = Some(wd);
+            }
+        }
+        Ok(())
+    }
+
     /// The features + σ stats of one fresh batch (Fig.-1 dispersion bench).
-    pub fn probe_features(
-        &mut self,
-        server: &ParameterServer,
-        train: &Dataset,
-    ) -> Result<(Matrix, Vec<f32>)> {
+    /// Fetches w_d over the transport without link/exec accounting — a
+    /// diagnostic probe, not a protocol step.
+    pub fn probe_features(&mut self, train: &Dataset) -> Result<(Matrix, Vec<f32>)> {
+        let wd_frame = match self.rpc(Msg::FetchModel { device: self.device as u32 })? {
+            Msg::ModelReply { wd } => wd,
+            other => return Err(crate::err!("expected ModelReply, got {}", other.name())),
+        };
+        self.decode_wd(&wd_frame)?;
+        let wd = self.wd_set.as_ref().expect("w_d decoded");
         let (x, _, _) = self.loader.next_batch(train, self.classes);
-        server.snapshot_device_params_into(&mut self.wd_snapshot);
-        let wd = self.wd_snapshot.as_ref().expect("snapshot populated");
-        let t0 = Instant::now();
-        let f = server.backend().device_fwd(wd, &x)?;
-        let sigma = server.backend().feature_stats(&f)?;
-        server.add_exec(t0.elapsed().as_secs_f64());
+        let f = self.backend.device_fwd(wd, &x)?;
+        let sigma = self.backend.feature_stats(&f)?;
         Ok((f, sigma))
+    }
+}
+
+impl Drop for DeviceWorker {
+    fn drop(&mut self) {
+        // best-effort clean leave; the PS treats a silent drop the same way
+        if self.greeted {
+            let _ = self.conn.send(Msg::Bye { device: self.device as u32 });
+        }
     }
 }

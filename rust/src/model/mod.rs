@@ -6,4 +6,4 @@ pub mod arch;
 pub mod params;
 
 pub use arch::{EntryInfo, PresetInfo};
-pub use params::{ParamSet, ParamSpec};
+pub use params::{f32_from_le_bytes, ParamSet, ParamSpec};

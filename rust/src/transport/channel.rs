@@ -12,6 +12,11 @@ pub enum Direction {
 ///
 /// Each device worker owns its own `Link`; the parameter-server-side view is
 /// the sum of the per-device reports ([`LinkReport::aggregate`]).
+///
+/// Feature/gradient traffic (the paper's communication-overhead quantity)
+/// and model-sync traffic (w_d snapshots down, ∇w_d hand-offs up — which a
+/// real wire also carries) are accounted in separate counters so tables can
+/// still quote the paper's numbers while the wire totals stay honest.
 #[derive(Debug, Clone)]
 pub struct Link {
     pub capacity_bps: f64,
@@ -20,6 +25,10 @@ pub struct Link {
     down_bits: u64,
     up_frames: u64,
     down_frames: u64,
+    sync_up_bits: u64,
+    sync_down_bits: u64,
+    sync_up_frames: u64,
+    sync_down_frames: u64,
     pub elapsed_s: f64,
 }
 
@@ -29,6 +38,13 @@ pub struct LinkReport {
     pub down_bits: u64,
     pub up_frames: u64,
     pub down_frames: u64,
+    /// `ModelSync` traffic, counted apart from the paper's feature/gradient
+    /// overhead: ∇w_d hand-offs (uplink) ...
+    pub sync_up_bits: u64,
+    /// ... and w_d snapshots (downlink).
+    pub sync_down_bits: u64,
+    pub sync_up_frames: u64,
+    pub sync_down_frames: u64,
     pub elapsed_s: f64,
 }
 
@@ -39,6 +55,10 @@ impl LinkReport {
         self.down_bits += other.down_bits;
         self.up_frames += other.up_frames;
         self.down_frames += other.down_frames;
+        self.sync_up_bits += other.sync_up_bits;
+        self.sync_down_bits += other.sync_down_bits;
+        self.sync_up_frames += other.sync_up_frames;
+        self.sync_down_frames += other.sync_down_frames;
         self.elapsed_s += other.elapsed_s;
     }
 
@@ -63,11 +83,16 @@ impl Link {
             down_bits: 0,
             up_frames: 0,
             down_frames: 0,
+            sync_up_bits: 0,
+            sync_down_bits: 0,
+            sync_up_frames: 0,
+            sync_down_frames: 0,
             elapsed_s: 0.0,
         }
     }
 
-    /// "Transmit" a frame; returns the modeled transfer time in seconds.
+    /// "Transmit" a feature/gradient frame; returns the modeled transfer
+    /// time in seconds.
     pub fn transmit(&mut self, dir: Direction, frame: &Frame) -> f64 {
         let bits = frame.total_bits();
         match dir {
@@ -80,6 +105,28 @@ impl Link {
                 self.down_frames += 1;
             }
         }
+        self.clock(bits)
+    }
+
+    /// "Transmit" a `ModelSync` frame (w_d snapshot down / ∇w_d up). Same
+    /// time model, separate counters — the paper's overhead tables count
+    /// feature/gradient bits only.
+    pub fn transmit_sync(&mut self, dir: Direction, frame: &Frame) -> f64 {
+        let bits = frame.total_bits();
+        match dir {
+            Direction::Uplink => {
+                self.sync_up_bits += bits;
+                self.sync_up_frames += 1;
+            }
+            Direction::Downlink => {
+                self.sync_down_bits += bits;
+                self.sync_down_frames += 1;
+            }
+        }
+        self.clock(bits)
+    }
+
+    fn clock(&mut self, bits: u64) -> f64 {
         let t = self.latency_s + bits as f64 / self.capacity_bps;
         self.elapsed_s += t;
         t
@@ -91,6 +138,10 @@ impl Link {
             down_bits: self.down_bits,
             up_frames: self.up_frames,
             down_frames: self.down_frames,
+            sync_up_bits: self.sync_up_bits,
+            sync_down_bits: self.sync_down_bits,
+            sync_up_frames: self.sync_up_frames,
+            sync_down_frames: self.sync_down_frames,
             elapsed_s: self.elapsed_s,
         }
     }
@@ -100,6 +151,10 @@ impl Link {
         self.down_bits = 0;
         self.up_frames = 0;
         self.down_frames = 0;
+        self.sync_up_bits = 0;
+        self.sync_down_bits = 0;
+        self.sync_up_frames = 0;
+        self.sync_down_frames = 0;
         self.elapsed_s = 0.0;
     }
 }
@@ -143,6 +198,24 @@ mod tests {
         assert_eq!(r.up_bits, 2 * (1000 + Frame::HEADER_BITS));
         assert_eq!(r.down_bits, 200 + Frame::HEADER_BITS);
         assert_eq!((r.up_frames, r.down_frames), (2, 1));
+        assert_eq!((r.sync_up_bits, r.sync_down_bits), (0, 0));
+    }
+
+    #[test]
+    fn sync_traffic_counts_apart_but_costs_time() {
+        let mut link = Link::new(1000.0, 0.0);
+        let wd = Frame::new(FrameKind::ModelSync, vec![0u8; 125], 1000);
+        let t = link.transmit_sync(Direction::Downlink, &wd);
+        link.transmit_sync(Direction::Uplink, &wd);
+        let r = link.report();
+        // paper-quantity counters untouched...
+        assert_eq!((r.up_bits, r.down_bits, r.up_frames, r.down_frames), (0, 0, 0, 0));
+        // ...sync counters and the clock both moved
+        assert_eq!(r.sync_down_bits, 1000 + Frame::HEADER_BITS);
+        assert_eq!(r.sync_up_bits, 1000 + Frame::HEADER_BITS);
+        assert_eq!((r.sync_up_frames, r.sync_down_frames), (1, 1));
+        assert!((t - (1000.0 + Frame::HEADER_BITS as f64) / 1000.0).abs() < 1e-12);
+        assert!((r.elapsed_s - 2.0 * t).abs() < 1e-12);
     }
 
     #[test]
@@ -162,10 +235,13 @@ mod tests {
         a.transmit(Direction::Uplink, &f);
         b.transmit(Direction::Uplink, &f);
         b.transmit(Direction::Downlink, &g);
+        b.transmit_sync(Direction::Downlink, &g);
         let total = LinkReport::aggregate([a.report(), b.report()]);
         assert_eq!(total.up_bits, 2 * (1000 + Frame::HEADER_BITS));
         assert_eq!(total.down_bits, 200 + Frame::HEADER_BITS);
         assert_eq!((total.up_frames, total.down_frames), (2, 1));
+        assert_eq!(total.sync_down_bits, 200 + Frame::HEADER_BITS);
+        assert_eq!(total.sync_down_frames, 1);
         let expect = a.report().elapsed_s + b.report().elapsed_s;
         assert!((total.elapsed_s - expect).abs() < 1e-12);
     }
@@ -177,9 +253,13 @@ mod tests {
             Direction::Uplink,
             &Frame::new(FrameKind::ModelSync, vec![1], 8),
         );
+        link.transmit_sync(
+            Direction::Downlink,
+            &Frame::new(FrameKind::ModelSync, vec![1], 8),
+        );
         link.reset();
         let r = link.report();
-        assert_eq!(r.up_bits + r.down_bits, 0);
+        assert_eq!(r.up_bits + r.down_bits + r.sync_up_bits + r.sync_down_bits, 0);
         assert_eq!(r.elapsed_s, 0.0);
     }
 }

@@ -89,6 +89,21 @@ pub fn device_budgets(
         .collect()
 }
 
+/// Heterogeneous per-device link capacities for the coordinator's
+/// `--fading-sigma` flag: log-normal around `mean_bps`, clamped to two
+/// decades either side so no device's modeled transfer time degenerates.
+/// Draws from a dedicated generator seeded independently of the training
+/// RNG chain, so turning fading on cannot perturb model trajectories.
+pub fn fading_capacities(devices: usize, mean_bps: f64, sigma_ln: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..devices)
+        .map(|_| {
+            (mean_bps * (sigma_ln * rng.normal()).exp())
+                .clamp(mean_bps / 100.0, mean_bps * 100.0)
+        })
+        .collect()
+}
+
 /// Adaptive-R policy for heterogeneous budgets: pick the smallest R from the
 /// candidate grid whose AD-only overhead (Remark 1: 32BD̄/R + D̄ bits) fits
 /// the device's budget; devices with more headroom keep more features.
@@ -151,6 +166,22 @@ mod tests {
         let mn = b.iter().cloned().fold(f64::INFINITY, f64::min);
         let mx = b.iter().cloned().fold(0.0, f64::max);
         assert!(mx > 2.0 * mn, "should be heterogeneous: {mn}..{mx}");
+    }
+
+    #[test]
+    fn fading_capacities_are_deterministic_dispersed_and_clamped() {
+        let a = fading_capacities(64, 10e6, 0.6, 0x5EED);
+        let b = fading_capacities(64, 10e6, 0.6, 0x5EED);
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(a.iter().all(|&c| (1e5..=1e9).contains(&c)));
+        let mn = a.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mx = a.iter().cloned().fold(0.0, f64::max);
+        assert!(mx > 1.5 * mn, "should be heterogeneous: {mn}..{mx}");
+        // sigma 0 degenerates to the uniform capacity
+        assert!(fading_capacities(8, 10e6, 0.0, 1).iter().all(|&c| c == 10e6));
     }
 
     #[test]

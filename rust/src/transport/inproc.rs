@@ -1,0 +1,78 @@
+//! In-process transport backend: bounded channels between worker threads
+//! and the parameter server.
+//!
+//! This is the zero-copy baseline the TCP backend is locked against —
+//! messages move as `Msg` values over `std::sync::mpsc::sync_channel`
+//! without ever being serialized. The channels are *bounded* so the
+//! backpressure semantics match a socket with a small send buffer: a
+//! sender blocks once the peer falls `depth` messages behind (with the
+//! request/reply protocol each side has at most one message in flight, so
+//! the bound never bites in practice — it exists to keep the contract
+//! honest).
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+
+use crate::transport::message::Msg;
+use crate::transport::Connection;
+use crate::util::error::{Error, Result};
+
+/// One endpoint of a bidirectional in-process message pipe.
+pub struct InProcConn {
+    tx: SyncSender<Msg>,
+    rx: Receiver<Msg>,
+}
+
+/// Create a connected pair of in-process endpoints with `depth` messages
+/// of buffering in each direction.
+pub fn inproc_pair(depth: usize) -> (InProcConn, InProcConn) {
+    let (atx, brx) = sync_channel(depth);
+    let (btx, arx) = sync_channel(depth);
+    (InProcConn { tx: atx, rx: arx }, InProcConn { tx: btx, rx: brx })
+}
+
+impl Connection for InProcConn {
+    fn send(&mut self, msg: Msg) -> Result<()> {
+        self.tx
+            .send(msg)
+            .map_err(|_| Error::msg("transport io: in-process peer hung up on send"))
+    }
+
+    fn recv(&mut self) -> Result<Msg> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::msg("transport io: in-process peer hung up on recv"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_ferries_messages_both_ways() {
+        let (mut a, mut b) = inproc_pair(4);
+        a.send(Msg::Bye { device: 7 }).unwrap();
+        match b.recv().unwrap() {
+            Msg::Bye { device: 7 } => {}
+            other => panic!("{other:?}"),
+        }
+        b.send(Msg::CommitAck).unwrap();
+        assert!(matches!(a.recv().unwrap(), Msg::CommitAck));
+    }
+
+    #[test]
+    fn hangup_is_an_io_error_not_a_panic() {
+        let (mut a, b) = inproc_pair(1);
+        drop(b);
+        let err = a.recv().unwrap_err().to_string();
+        assert!(err.contains("transport io"), "{err}");
+        let err = a.send(Msg::CommitAck).unwrap_err().to_string();
+        assert!(err.contains("transport io"), "{err}");
+    }
+
+    #[test]
+    fn not_reconnectable() {
+        let (a, _b) = inproc_pair(1);
+        assert!(!a.is_reconnectable());
+    }
+}

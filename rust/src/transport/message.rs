@@ -1,0 +1,610 @@
+//! The device <-> PS protocol messages.
+//!
+//! Every exchange of the split protocol is an explicit [`Msg`] sent over a
+//! [`Connection`](crate::transport::Connection). One protocol step is three
+//! request/reply pairs, all initiated by the device:
+//!
+//! ```text
+//! device                                parameter server
+//!   | -- StepStart{device,round,local} --> |  (blocks in the staleness gate)
+//!   | <-- StepGo{w_d ModelSync, rng?} ---- |
+//!   | -- Uplink{frame,labels,mask,...} --> |  (decode, fwd/bwd, w_s step)
+//!   | <-- Downlink{frame,loss,...} ------- |
+//!   | -- Commit{grad ModelSync, report} -> |  (w_d step, metrics, watermark)
+//!   | <-- CommitAck ---------------------- |
+//! ```
+//!
+//! `Hello`/`HelloAck` open a connection (carrying the codec id + wire
+//! version so mismatched codecs are rejected at handshake, not mid-run),
+//! `Bye` closes it cleanly, and `Abort` is the PS's typed failure reply.
+//! The request/reply discipline gives per-connection backpressure for free:
+//! a device never has more than one message in flight.
+//!
+//! On the TCP backend each message crosses the socket as one
+//! [`FrameKind::Control`] frame whose payload is the byte encoding below;
+//! in-process channels move the enum directly (zero copies). All multi-byte
+//! fields are little-endian; decoding is bounds-checked via [`ByteCursor`]
+//! and returns typed [`CodecError`]s on truncated or malformed input.
+
+use crate::compression::error::CodecError;
+use crate::compression::GradMask;
+use crate::transport::wire::{ByteCursor, Frame, WireLimits};
+use crate::util::RngState;
+
+/// The deterministic per-step measurements a device reports at `Commit`;
+/// the PS combines them with its own half (server exec time, global-step
+/// tag) into the metrics [`StepRecord`](crate::coordinator::StepRecord).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepReport {
+    pub loss: f32,
+    pub train_acc: f32,
+    pub up_bits: u64,
+    pub down_bits: u64,
+    pub up_nominal: f64,
+    pub down_nominal: f64,
+    pub step_s: f64,
+    /// backend time spent on the device (fwd, σ stats, bwd)
+    pub device_exec_s: f64,
+}
+
+#[derive(Debug, Clone)]
+pub enum Msg {
+    /// Device -> PS connection opener. `codec_id`/`codec_version` are the
+    /// device codec session's frame stamp; the PS rejects a mismatch.
+    Hello { device: u32, codec_id: u32, codec_version: u16 },
+    /// PS -> device handshake reply; `err` is `Some` on rejection.
+    HelloAck { devices: u32, rounds: u32, staleness: u32, err: Option<String> },
+    /// Device -> PS: request entry for schedule-local step `local` of
+    /// `round`. Blocks server-side in the staleness/eval gate.
+    StepStart { device: u32, round: u32, local: u64 },
+    /// PS -> device: step granted. `wd` is the current device-side model as
+    /// a `ModelSync` frame; `rng` is the shared Algorithm-1 encode stream
+    /// (present iff staleness = 0).
+    StepGo { wd: Frame, rng: Option<RngState> },
+    /// Device -> PS: the compressed feature frame plus everything the PS
+    /// needs for its half — one-hot labels, the eq.-8 gradient mask, the
+    /// nominal bit count, and (shared-stream mode) the advanced RNG state.
+    Uplink {
+        device: u32,
+        local: u64,
+        frame: Frame,
+        labels: Vec<f32>,
+        mask: GradMask,
+        up_nominal: f64,
+        rng: Option<RngState>,
+    },
+    /// PS -> device: the mask-coupled compressed gradient frame plus the
+    /// step's server-side outputs.
+    Downlink {
+        frame: Frame,
+        loss: f32,
+        correct: f32,
+        server_exec_s: f64,
+        down_nominal: f64,
+    },
+    /// Device -> PS: the device-model gradient (`ModelSync` frame, little-
+    /// endian f32) and the step report. Completes the step.
+    Commit { device: u32, round: u32, local: u64, grad: Frame, report: StepReport },
+    /// PS -> device: step committed (watermark advanced).
+    CommitAck,
+    /// Device -> PS: request a fresh w_d snapshot (diagnostics/probes).
+    FetchModel { device: u32 },
+    /// PS -> device: the snapshot as a `ModelSync` frame.
+    ModelReply { wd: Frame },
+    /// Device -> PS: clean leave.
+    Bye { device: u32 },
+    /// PS -> device: typed failure reply (protocol error, scheduler abort).
+    Abort { reason: String },
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(cur: &mut ByteCursor<'_>) -> Result<String, CodecError> {
+    let n = cur.u32()? as usize;
+    let bytes = cur.take(n)?;
+    String::from_utf8(bytes.to_vec()).map_err(|_| CodecError::MalformedHeader {
+        reason: "non-UTF-8 string field".to_string(),
+    })
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn get_f32s(cur: &mut ByteCursor<'_>) -> Result<Vec<f32>, CodecError> {
+    let n = cur.u32()? as usize;
+    // length sanity before allocating: each element needs 4 bytes
+    if cur.remaining() < n.saturating_mul(4) {
+        return Err(CodecError::TruncatedFrame {
+            needed: n as u64 * 4,
+            available: cur.remaining() as u64,
+        });
+    }
+    (0..n).map(|_| cur.f32()).collect()
+}
+
+fn put_indices(out: &mut Vec<u8>, xs: &[usize]) {
+    out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for &x in xs {
+        out.extend_from_slice(&(x as u32).to_le_bytes());
+    }
+}
+
+fn get_indices(cur: &mut ByteCursor<'_>) -> Result<Vec<usize>, CodecError> {
+    let n = cur.u32()? as usize;
+    if cur.remaining() < n.saturating_mul(4) {
+        return Err(CodecError::TruncatedFrame {
+            needed: n as u64 * 4,
+            available: cur.remaining() as u64,
+        });
+    }
+    (0..n).map(|_| cur.u32().map(|v| v as usize)).collect()
+}
+
+fn put_rng(out: &mut Vec<u8>, rng: &Option<RngState>) {
+    match rng {
+        None => out.push(0),
+        Some(st) => {
+            out.push(1);
+            for w in st.s {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+            match st.gauss {
+                None => out.push(0),
+                Some(g) => {
+                    out.push(1);
+                    out.extend_from_slice(&g.to_bits().to_le_bytes());
+                }
+            }
+        }
+    }
+}
+
+fn get_rng(cur: &mut ByteCursor<'_>) -> Result<Option<RngState>, CodecError> {
+    match cur.u8()? {
+        0 => Ok(None),
+        1 => {
+            let s = [cur.u64()?, cur.u64()?, cur.u64()?, cur.u64()?];
+            let gauss = match cur.u8()? {
+                0 => None,
+                1 => Some(cur.f64()?),
+                other => {
+                    return Err(CodecError::MalformedHeader {
+                        reason: format!("bad gauss-cache flag {other}"),
+                    })
+                }
+            };
+            Ok(Some(RngState { s, gauss }))
+        }
+        other => Err(CodecError::MalformedHeader {
+            reason: format!("bad rng-state flag {other}"),
+        }),
+    }
+}
+
+fn put_mask(out: &mut Vec<u8>, mask: &GradMask) {
+    match mask {
+        GradMask::All => out.push(0),
+        GradMask::Columns { kept, scale } => {
+            out.push(1);
+            put_indices(out, kept);
+            put_f32s(out, scale);
+        }
+        GradMask::Entries(rows) => {
+            out.push(2);
+            out.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+            for row in rows {
+                put_indices(out, row);
+            }
+        }
+    }
+}
+
+fn get_mask(cur: &mut ByteCursor<'_>) -> Result<GradMask, CodecError> {
+    match cur.u8()? {
+        0 => Ok(GradMask::All),
+        1 => {
+            let kept = get_indices(cur)?;
+            let scale = get_f32s(cur)?;
+            if kept.len() != scale.len() {
+                return Err(CodecError::MalformedHeader {
+                    reason: format!(
+                        "column mask length mismatch: {} kept vs {} scales",
+                        kept.len(),
+                        scale.len()
+                    ),
+                });
+            }
+            Ok(GradMask::Columns { kept, scale })
+        }
+        2 => {
+            let n = cur.u32()? as usize;
+            let mut rows = Vec::with_capacity(n.min(cur.remaining()));
+            for _ in 0..n {
+                rows.push(get_indices(cur)?);
+            }
+            Ok(GradMask::Entries(rows))
+        }
+        other => Err(CodecError::MalformedHeader {
+            reason: format!("unknown grad-mask tag {other}"),
+        }),
+    }
+}
+
+fn put_report(out: &mut Vec<u8>, r: &StepReport) {
+    out.extend_from_slice(&r.loss.to_le_bytes());
+    out.extend_from_slice(&r.train_acc.to_le_bytes());
+    out.extend_from_slice(&r.up_bits.to_le_bytes());
+    out.extend_from_slice(&r.down_bits.to_le_bytes());
+    out.extend_from_slice(&r.up_nominal.to_bits().to_le_bytes());
+    out.extend_from_slice(&r.down_nominal.to_bits().to_le_bytes());
+    out.extend_from_slice(&r.step_s.to_bits().to_le_bytes());
+    out.extend_from_slice(&r.device_exec_s.to_bits().to_le_bytes());
+}
+
+fn get_report(cur: &mut ByteCursor<'_>) -> Result<StepReport, CodecError> {
+    Ok(StepReport {
+        loss: cur.f32()?,
+        train_acc: cur.f32()?,
+        up_bits: cur.u64()?,
+        down_bits: cur.u64()?,
+        up_nominal: cur.f64()?,
+        down_nominal: cur.f64()?,
+        step_s: cur.f64()?,
+        device_exec_s: cur.f64()?,
+    })
+}
+
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 1,
+            Msg::HelloAck { .. } => 2,
+            Msg::StepStart { .. } => 3,
+            Msg::StepGo { .. } => 4,
+            Msg::Uplink { .. } => 5,
+            Msg::Downlink { .. } => 6,
+            Msg::Commit { .. } => 7,
+            Msg::CommitAck => 8,
+            Msg::FetchModel { .. } => 9,
+            Msg::ModelReply { .. } => 10,
+            Msg::Bye { .. } => 11,
+            Msg::Abort { .. } => 12,
+        }
+    }
+
+    /// Short name for error messages ("expected X, got Y").
+    pub fn name(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "Hello",
+            Msg::HelloAck { .. } => "HelloAck",
+            Msg::StepStart { .. } => "StepStart",
+            Msg::StepGo { .. } => "StepGo",
+            Msg::Uplink { .. } => "Uplink",
+            Msg::Downlink { .. } => "Downlink",
+            Msg::Commit { .. } => "Commit",
+            Msg::CommitAck => "CommitAck",
+            Msg::FetchModel { .. } => "FetchModel",
+            Msg::ModelReply { .. } => "ModelReply",
+            Msg::Bye { .. } => "Bye",
+            Msg::Abort { .. } => "Abort",
+        }
+    }
+
+    /// Append the byte encoding (tag + fields, little-endian) to `out`.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        out.push(self.tag());
+        match self {
+            Msg::Hello { device, codec_id, codec_version } => {
+                out.extend_from_slice(&device.to_le_bytes());
+                out.extend_from_slice(&codec_id.to_le_bytes());
+                out.extend_from_slice(&codec_version.to_le_bytes());
+            }
+            Msg::HelloAck { devices, rounds, staleness, err } => {
+                out.extend_from_slice(&devices.to_le_bytes());
+                out.extend_from_slice(&rounds.to_le_bytes());
+                out.extend_from_slice(&staleness.to_le_bytes());
+                match err {
+                    None => out.push(0),
+                    Some(e) => {
+                        out.push(1);
+                        put_str(out, e);
+                    }
+                }
+            }
+            Msg::StepStart { device, round, local } => {
+                out.extend_from_slice(&device.to_le_bytes());
+                out.extend_from_slice(&round.to_le_bytes());
+                out.extend_from_slice(&local.to_le_bytes());
+            }
+            Msg::StepGo { wd, rng } => {
+                wd.write_to(out);
+                put_rng(out, rng);
+            }
+            Msg::Uplink { device, local, frame, labels, mask, up_nominal, rng } => {
+                out.extend_from_slice(&device.to_le_bytes());
+                out.extend_from_slice(&local.to_le_bytes());
+                frame.write_to(out);
+                put_f32s(out, labels);
+                put_mask(out, mask);
+                out.extend_from_slice(&up_nominal.to_bits().to_le_bytes());
+                put_rng(out, rng);
+            }
+            Msg::Downlink { frame, loss, correct, server_exec_s, down_nominal } => {
+                frame.write_to(out);
+                out.extend_from_slice(&loss.to_le_bytes());
+                out.extend_from_slice(&correct.to_le_bytes());
+                out.extend_from_slice(&server_exec_s.to_bits().to_le_bytes());
+                out.extend_from_slice(&down_nominal.to_bits().to_le_bytes());
+            }
+            Msg::Commit { device, round, local, grad, report } => {
+                out.extend_from_slice(&device.to_le_bytes());
+                out.extend_from_slice(&round.to_le_bytes());
+                out.extend_from_slice(&local.to_le_bytes());
+                grad.write_to(out);
+                put_report(out, report);
+            }
+            Msg::CommitAck => {}
+            Msg::FetchModel { device } => {
+                out.extend_from_slice(&device.to_le_bytes());
+            }
+            Msg::ModelReply { wd } => {
+                wd.write_to(out);
+            }
+            Msg::Bye { device } => {
+                out.extend_from_slice(&device.to_le_bytes());
+            }
+            Msg::Abort { reason } => {
+                put_str(out, reason);
+            }
+        }
+    }
+
+    /// Decode one message from `buf`, enforcing `limits` on embedded
+    /// frames. The whole buffer must be consumed — trailing bytes are a
+    /// framing error.
+    pub fn decode(buf: &[u8], limits: &WireLimits) -> Result<Msg, CodecError> {
+        let mut cur = ByteCursor::new(buf);
+        let tag = cur.u8()?;
+        let msg = match tag {
+            1 => Msg::Hello {
+                device: cur.u32()?,
+                codec_id: cur.u32()?,
+                codec_version: cur.u16()?,
+            },
+            2 => {
+                let devices = cur.u32()?;
+                let rounds = cur.u32()?;
+                let staleness = cur.u32()?;
+                let err = match cur.u8()? {
+                    0 => None,
+                    1 => Some(get_str(&mut cur)?),
+                    other => {
+                        return Err(CodecError::MalformedHeader {
+                            reason: format!("bad error flag {other}"),
+                        })
+                    }
+                };
+                Msg::HelloAck { devices, rounds, staleness, err }
+            }
+            3 => Msg::StepStart {
+                device: cur.u32()?,
+                round: cur.u32()?,
+                local: cur.u64()?,
+            },
+            4 => Msg::StepGo {
+                wd: Frame::read_from(&mut cur, limits)?,
+                rng: get_rng(&mut cur)?,
+            },
+            5 => Msg::Uplink {
+                device: cur.u32()?,
+                local: cur.u64()?,
+                frame: Frame::read_from(&mut cur, limits)?,
+                labels: get_f32s(&mut cur)?,
+                mask: get_mask(&mut cur)?,
+                up_nominal: cur.f64()?,
+                rng: get_rng(&mut cur)?,
+            },
+            6 => Msg::Downlink {
+                frame: Frame::read_from(&mut cur, limits)?,
+                loss: cur.f32()?,
+                correct: cur.f32()?,
+                server_exec_s: cur.f64()?,
+                down_nominal: cur.f64()?,
+            },
+            7 => Msg::Commit {
+                device: cur.u32()?,
+                round: cur.u32()?,
+                local: cur.u64()?,
+                grad: Frame::read_from(&mut cur, limits)?,
+                report: get_report(&mut cur)?,
+            },
+            8 => Msg::CommitAck,
+            9 => Msg::FetchModel { device: cur.u32()? },
+            10 => Msg::ModelReply { wd: Frame::read_from(&mut cur, limits)? },
+            11 => Msg::Bye { device: cur.u32()? },
+            12 => Msg::Abort { reason: get_str(&mut cur)? },
+            other => {
+                return Err(CodecError::MalformedHeader {
+                    reason: format!("unknown message tag {other}"),
+                })
+            }
+        };
+        if !cur.is_empty() {
+            return Err(CodecError::MalformedHeader {
+                reason: format!("{} trailing bytes after message", cur.remaining()),
+            });
+        }
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::wire::FrameKind;
+
+    fn limits() -> WireLimits {
+        WireLimits::new(1 << 16)
+    }
+
+    fn roundtrip(msg: &Msg) -> Msg {
+        let mut buf = Vec::new();
+        msg.encode(&mut buf);
+        Msg::decode(&buf, &limits()).unwrap_or_else(|e| panic!("{}: {e}", msg.name()))
+    }
+
+    #[test]
+    fn control_messages_roundtrip() {
+        match roundtrip(&Msg::Hello { device: 3, codec_id: 0xABCD, codec_version: 2 }) {
+            Msg::Hello { device: 3, codec_id: 0xABCD, codec_version: 2 } => {}
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(&Msg::HelloAck {
+            devices: 4,
+            rounds: 9,
+            staleness: 1,
+            err: Some("codec mismatch".into()),
+        }) {
+            Msg::HelloAck { devices: 4, rounds: 9, staleness: 1, err: Some(e) } => {
+                assert_eq!(e, "codec mismatch");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(roundtrip(&Msg::CommitAck), Msg::CommitAck));
+        assert!(matches!(roundtrip(&Msg::Bye { device: 2 }), Msg::Bye { device: 2 }));
+        match roundtrip(&Msg::Abort { reason: "nope".into() }) {
+            Msg::Abort { reason } => assert_eq!(reason, "nope"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn step_messages_roundtrip_with_rng_and_mask() {
+        let wd = Frame::new(FrameKind::ModelSync, vec![1, 2, 3, 4], 32);
+        let rng = Some(RngState { s: [1, u64::MAX, 3, 4], gauss: Some(-0.25) });
+        match roundtrip(&Msg::StepGo { wd: wd.clone(), rng }) {
+            Msg::StepGo { wd: w, rng: r } => {
+                assert_eq!(w.payload, wd.payload);
+                assert_eq!(r, rng);
+            }
+            other => panic!("{other:?}"),
+        }
+
+        let frame =
+            Frame::new(FrameKind::FeaturesUp, vec![9, 8, 7], 23).with_codec(0x77, 1);
+        let mask = GradMask::Columns { kept: vec![0, 5, 9], scale: vec![1.0, 2.0, 4.0] };
+        let up = Msg::Uplink {
+            device: 1,
+            local: 42,
+            frame: frame.clone(),
+            labels: vec![0.0, 1.0, 0.0],
+            mask,
+            up_nominal: 123.5,
+            rng: None,
+        };
+        match roundtrip(&up) {
+            Msg::Uplink { device: 1, local: 42, frame: f, labels, mask, up_nominal, rng } => {
+                assert_eq!(f.payload, frame.payload);
+                assert_eq!((f.codec_id, f.codec_version), (0x77, 1));
+                assert_eq!(labels, vec![0.0, 1.0, 0.0]);
+                assert_eq!(up_nominal, 123.5);
+                assert_eq!(rng, None);
+                match mask {
+                    GradMask::Columns { kept, scale } => {
+                        assert_eq!(kept, vec![0, 5, 9]);
+                        assert_eq!(scale, vec![1.0, 2.0, 4.0]);
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+
+        let report = StepReport {
+            loss: 0.5,
+            train_acc: 0.75,
+            up_bits: 1000,
+            down_bits: 2000,
+            up_nominal: 990.0,
+            down_nominal: 1990.0,
+            step_s: 0.25,
+            device_exec_s: 0.125,
+        };
+        let grad = Frame::new(FrameKind::ModelSync, vec![0u8; 8], 64);
+        match roundtrip(&Msg::Commit {
+            device: 2,
+            round: 3,
+            local: 11,
+            grad,
+            report: report.clone(),
+        }) {
+            Msg::Commit { device: 2, round: 3, local: 11, report: r, .. } => {
+                assert_eq!(r, report);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn entries_mask_roundtrips() {
+        let mask = GradMask::Entries(vec![vec![0, 2], vec![], vec![1]]);
+        let mut buf = Vec::new();
+        put_mask(&mut buf, &mask);
+        match get_mask(&mut ByteCursor::new(&buf)).unwrap() {
+            GradMask::Entries(rows) => {
+                assert_eq!(rows, vec![vec![0, 2], vec![], vec![1]]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_and_malformed_messages_are_typed_errors() {
+        let msg = Msg::Uplink {
+            device: 0,
+            local: 7,
+            frame: Frame::new(FrameKind::FeaturesUp, vec![1, 2, 3], 24),
+            labels: vec![1.0, 0.0],
+            mask: GradMask::All,
+            up_nominal: 1.0,
+            rng: Some(RngState { s: [1, 2, 3, 4], gauss: None }),
+        };
+        let mut buf = Vec::new();
+        msg.encode(&mut buf);
+        // every truncation point fails with a typed error, never a panic
+        for cut in 0..buf.len() {
+            assert!(
+                Msg::decode(&buf[..cut], &limits()).is_err(),
+                "cut={cut} decoded"
+            );
+        }
+        // trailing garbage is rejected too
+        buf.push(0xFF);
+        assert!(matches!(
+            Msg::decode(&buf, &limits()),
+            Err(CodecError::MalformedHeader { .. })
+        ));
+        // unknown message tag
+        assert!(matches!(
+            Msg::decode(&[0xEE], &limits()),
+            Err(CodecError::MalformedHeader { .. })
+        ));
+        // a label count far beyond the buffer must not allocate/overflow
+        let mut evil = vec![5u8]; // Uplink tag
+        evil.extend_from_slice(&0u32.to_le_bytes()); // device
+        evil.extend_from_slice(&0u64.to_le_bytes()); // local
+        Frame::new(FrameKind::FeaturesUp, vec![], 0).write_to(&mut evil);
+        evil.extend_from_slice(&u32::MAX.to_le_bytes()); // label count
+        assert!(matches!(
+            Msg::decode(&evil, &limits()),
+            Err(CodecError::TruncatedFrame { .. })
+        ));
+    }
+}

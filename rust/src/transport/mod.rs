@@ -1,14 +1,103 @@
-//! Simulated communication substrate.
+//! Communication substrate: wire frames, protocol messages, link models,
+//! and the transport backends that move them.
 //!
-//! The paper's testbed is a wireless uplink/downlink between devices and the
-//! PS. Here every transfer is a real serialized frame (`wire::Frame`) pushed
-//! through a `channel::Link` that accounts bits and models transfer time at a
-//! configured capacity — reproducing, e.g., the intro's 1.34e5 s example.
+//! The paper's testbed is a wireless uplink/downlink between devices and
+//! the PS. Two layers coexist here:
+//!
+//! * **Accounting** (`channel::Link`, `fading::FadingLink`): every transfer
+//!   is a serialized frame (`wire::Frame`) pushed through a link model that
+//!   counts bits and models transfer time at a configured capacity —
+//!   reproducing, e.g., the intro's 1.34e5 s example.
+//! * **Movement** ([`Connection`] + backends): since the transport
+//!   refactor, devices and the PS exchange explicit protocol messages
+//!   (`message::Msg`). The in-process backend (`inproc`) moves them over
+//!   bounded channels between threads; the TCP backend (`tcp`) moves them
+//!   over real sockets with length-prefixed framing. Both carry the exact
+//!   same messages, so a staleness-0 run is byte-identical across
+//!   backends.
 
 pub mod channel;
 pub mod fading;
+pub mod inproc;
+pub mod message;
+pub mod tcp;
 pub mod wire;
 
 pub use channel::{Direction, Link, LinkReport};
-pub use fading::{device_budgets, per_device_ratio, FadingLink};
-pub use wire::Frame;
+pub use fading::{device_budgets, fading_capacities, per_device_ratio, FadingLink};
+pub use inproc::{inproc_pair, InProcConn};
+pub use message::{Msg, StepReport};
+pub use tcp::TcpConn;
+pub use wire::{Frame, FrameKind, WireLimits};
+
+use crate::util::error::Result;
+
+/// A bidirectional, ordered, reliable message pipe between one device and
+/// the parameter server. Implementations: [`InProcConn`] (bounded
+/// channels, zero-copy) and [`TcpConn`] (length-prefixed frames over a
+/// socket).
+///
+/// Errors whose message carries the `"transport io"` prefix are transport
+/// faults (peer gone, socket reset) — the caller may [`reconnect`]
+/// (if [`is_reconnectable`]) and retry. Anything else is a protocol
+/// error and must not be retried.
+///
+/// [`reconnect`]: Connection::reconnect
+/// [`is_reconnectable`]: Connection::is_reconnectable
+pub trait Connection: Send {
+    fn send(&mut self, msg: Msg) -> Result<()>;
+    fn recv(&mut self) -> Result<Msg>;
+
+    /// Re-establish a dropped connection (client side of TCP only).
+    fn reconnect(&mut self) -> Result<()> {
+        Err(crate::util::error::Error::msg(
+            "this transport cannot reconnect",
+        ))
+    }
+
+    fn is_reconnectable(&self) -> bool {
+        false
+    }
+}
+
+/// Which transport backend carries device<->PS messages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// Bounded in-process channels between worker threads and the PS.
+    #[default]
+    InProc,
+    /// Length-prefixed frames over TCP sockets (loopback or remote).
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        match s {
+            "inproc" => Ok(TransportKind::InProc),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => Err(crate::util::error::Error::msg(format!(
+                "unknown transport '{other}' (expected inproc|tcp)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+#[cfg(test)]
+mod kind_tests {
+    use super::TransportKind;
+
+    #[test]
+    fn parse_roundtrips() {
+        for k in [TransportKind::InProc, TransportKind::Tcp] {
+            assert_eq!(TransportKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(TransportKind::parse("udp").is_err());
+    }
+}

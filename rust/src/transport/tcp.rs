@@ -1,0 +1,290 @@
+//! TCP transport backend: length-prefixed frames over real sockets.
+//!
+//! Every [`Msg`] crosses the socket as one wire frame of kind
+//! [`FrameKind::Control`]: the fixed 15-byte header (tag, version, id,
+//! payload-bit count — see `wire.rs`) followed by the message's byte
+//! encoding. The receive path parses the header first, validates the
+//! length prefix against [`WireLimits`] **before** allocating or reading
+//! the payload, then decodes the message — malformed or hostile input
+//! fails with a typed [`CodecError`], never a panic or an
+//! attacker-controlled allocation.
+//!
+//! Errors that come from the socket itself (reset, EOF, refused) are
+//! stringly tagged with the `"transport io"` prefix so the worker-side
+//! rpc loop can tell a retriable transport fault apart from a protocol
+//! rejection; client-side connections remember their dial address and can
+//! `reconnect()` mid-training.
+//!
+//! `TCP_NODELAY` is set on every stream: the protocol is strict
+//! request/reply with small control frames, exactly the pattern Nagle's
+//! algorithm penalizes.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::compression::error::CodecError;
+use crate::transport::message::Msg;
+use crate::transport::wire::{ByteCursor, Frame, FrameKind, WireLimits};
+use crate::transport::Connection;
+use crate::util::error::{Error, Result};
+
+const IO: &str = "transport io";
+
+fn io_err(what: &str, e: std::io::Error) -> Error {
+    Error::msg(format!("{IO}: {what}: {e}"))
+}
+
+/// Returns true when `err` came from the socket layer (and a reconnect may
+/// succeed) rather than from the protocol (which must not be retried).
+pub fn is_io_error(err: &Error) -> bool {
+    err.to_string().contains(IO)
+}
+
+/// A TCP connection speaking the control-frame protocol.
+pub struct TcpConn {
+    stream: Option<TcpStream>,
+    /// dial address; `Some` on client-side connections, which makes them
+    /// reconnectable. Server-accepted sockets cannot re-dial their peer.
+    peer: Option<String>,
+    limits: WireLimits,
+    /// reusable tx scratch — one flat buffer per connection, written with a
+    /// single `write_all` so a message is never interleaved on the socket
+    buf: Vec<u8>,
+    /// chaos hook: cut the socket right *after* this many successful sends
+    /// — the request is delivered but the reply is lost, the exact fault
+    /// the PS-side replay couriers exist for (exercised in tests/CI)
+    fault_after_sends: Option<u64>,
+    sends: u64,
+}
+
+impl TcpConn {
+    /// Dial `addr` (client side — reconnectable).
+    pub fn connect(addr: &str, limits: WireLimits) -> Result<TcpConn> {
+        let stream = Self::dial(addr)?;
+        Ok(TcpConn {
+            stream: Some(stream),
+            peer: Some(addr.to_string()),
+            limits,
+            buf: Vec::new(),
+            fault_after_sends: None,
+            sends: 0,
+        })
+    }
+
+    /// Adopt an accepted socket (server side — not reconnectable).
+    pub fn from_stream(stream: TcpStream, limits: WireLimits) -> TcpConn {
+        let _ = stream.set_nodelay(true);
+        TcpConn {
+            stream: Some(stream),
+            peer: None,
+            limits,
+            buf: Vec::new(),
+            fault_after_sends: None,
+            sends: 0,
+        }
+    }
+
+    fn dial(addr: &str) -> Result<TcpStream> {
+        let stream = TcpStream::connect(addr).map_err(|e| io_err("connect", e))?;
+        stream.set_nodelay(true).map_err(|e| io_err("set_nodelay", e))?;
+        Ok(stream)
+    }
+
+    /// Arm the chaos hook: the link is cut immediately after the `n`-th
+    /// send from now *succeeds* — the peer receives the request, the reply
+    /// is lost, and the next operation here fails with a transport io
+    /// error, as if the network died mid-exchange. One-shot.
+    pub fn set_fault_after_sends(&mut self, n: u64) {
+        self.fault_after_sends = Some(n);
+        self.sends = 0;
+    }
+
+    fn stream(&mut self) -> Result<&mut TcpStream> {
+        self.stream
+            .as_mut()
+            .ok_or_else(|| Error::msg(format!("{IO}: connection is down (reconnect required)")))
+    }
+}
+
+impl Connection for TcpConn {
+    fn send(&mut self, msg: Msg) -> Result<()> {
+        // serialize into the connection-owned scratch: message bytes become
+        // the payload of one Control frame
+        let mut payload = std::mem::take(&mut self.buf);
+        payload.clear();
+        msg.encode(&mut payload);
+        let bits = payload.len() as u64 * 8;
+        let frame = Frame::new(FrameKind::Control, payload, bits);
+        let mut out = Vec::with_capacity(frame.wire_len());
+        frame.write_to(&mut out);
+        self.buf = frame.payload; // reclaim the scratch
+        let res = self.stream()?.write_all(&out).map_err(|e| io_err("send", e));
+        if res.is_ok() {
+            self.sends += 1;
+            if self.fault_after_sends == Some(self.sends) {
+                // chaos hook: the request just left, now the link dies —
+                // the pending reply is lost and the next recv/send fails
+                self.fault_after_sends = None;
+                self.stream = None;
+            }
+        } else {
+            self.stream = None;
+        }
+        res
+    }
+
+    fn recv(&mut self) -> Result<Msg> {
+        let limits = self.limits;
+        let stream = self.stream()?;
+        let mut header = [0u8; Frame::HEADER_BYTES];
+        if let Err(e) = stream.read_exact(&mut header) {
+            let e = if e.kind() == ErrorKind::UnexpectedEof {
+                std::io::Error::new(ErrorKind::UnexpectedEof, "peer closed the connection")
+            } else {
+                e
+            };
+            self.stream = None;
+            return Err(io_err("recv header", e));
+        }
+        // parse + validate the header before touching the payload
+        let mut cur = ByteCursor::new(&header);
+        let kind = FrameKind::from_tag(cur.u8()?)?;
+        let codec_version = cur.u16()?;
+        let codec_id = cur.u32()?;
+        let payload_bits = cur.u64()?;
+        let payload_len = Frame::check_payload_len(payload_bits, &limits)?;
+        if kind != FrameKind::Control {
+            return Err(Error::msg(format!(
+                "protocol error: expected a Control frame, got {kind:?} \
+                 (codec {codec_id:#x} v{codec_version})"
+            )));
+        }
+        let mut payload = vec![0u8; payload_len];
+        if let Err(e) = self.stream()?.read_exact(&mut payload) {
+            self.stream = None;
+            return Err(io_err("recv payload", e));
+        }
+        let msg = Msg::decode(&payload, &limits)?;
+        Ok(msg)
+    }
+
+    fn reconnect(&mut self) -> Result<()> {
+        let addr = self
+            .peer
+            .clone()
+            .ok_or_else(|| Error::msg("server-side connection cannot reconnect"))?;
+        // brief pause: the far end needs a moment to tear down the dead
+        // handler and get back to accept()
+        std::thread::sleep(Duration::from_millis(10));
+        self.stream = Some(Self::dial(&addr)?);
+        Ok(())
+    }
+
+    fn is_reconnectable(&self) -> bool {
+        self.peer.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn limits() -> WireLimits {
+        WireLimits::new(1 << 16)
+    }
+
+    #[test]
+    fn loopback_roundtrip_and_reconnect() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            // serve three sequential connections, echoing device ids; a
+            // reply may race the client-side chaos cut, so send errors are
+            // tolerated (the client retries on a fresh connection)
+            for _ in 0..3 {
+                let (sock, _) = listener.accept().unwrap();
+                let mut conn = TcpConn::from_stream(sock, limits());
+                assert!(!conn.is_reconnectable());
+                while let Ok(msg) = conn.recv() {
+                    match msg {
+                        Msg::Hello { device, .. } => {
+                            let _ = conn.send(Msg::HelloAck {
+                                devices: device + 1,
+                                rounds: 0,
+                                staleness: 0,
+                                err: None,
+                            });
+                        }
+                        Msg::Bye { .. } => break,
+                        other => panic!("{other:?}"),
+                    }
+                }
+            }
+        });
+
+        let mut conn = TcpConn::connect(&addr, limits()).unwrap();
+        assert!(conn.is_reconnectable());
+        conn.send(Msg::Hello { device: 4, codec_id: 1, codec_version: 1 }).unwrap();
+        match conn.recv().unwrap() {
+            Msg::HelloAck { devices: 5, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        conn.send(Msg::Bye { device: 4 }).unwrap();
+
+        // cut the link right after the next request is delivered: the reply
+        // is lost mid-air, then resume on a fresh socket
+        conn.set_fault_after_sends(1);
+        conn.send(Msg::Hello { device: 8, codec_id: 1, codec_version: 1 }).unwrap();
+        let err = conn.recv().unwrap_err();
+        assert!(is_io_error(&err), "{err}");
+        conn.reconnect().unwrap();
+        conn.send(Msg::Hello { device: 9, codec_id: 1, codec_version: 1 }).unwrap();
+        match conn.recv().unwrap() {
+            Msg::HelloAck { devices: 10, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        conn.send(Msg::Bye { device: 9 }).unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_without_allocation() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let evil = std::thread::spawn(move || {
+            let (mut sock, _) = listener.accept().unwrap();
+            // hand-rolled hostile header: Control tag, absurd bit count
+            let mut hdr = vec![4u8];
+            hdr.extend_from_slice(&1u16.to_le_bytes());
+            hdr.extend_from_slice(&0u32.to_le_bytes());
+            hdr.extend_from_slice(&u64::MAX.to_le_bytes());
+            sock.write_all(&hdr).unwrap();
+            sock.flush().unwrap();
+            // keep the socket open so the client error is the validation,
+            // not an EOF race
+            let mut sink = [0u8; 1];
+            let _ = sock.read(&mut sink);
+        });
+        let mut conn = TcpConn::connect(&addr, limits()).unwrap();
+        let err = conn.recv().unwrap_err().to_string();
+        assert!(err.contains("too large"), "{err}");
+        drop(conn);
+        evil.join().unwrap();
+    }
+
+    #[test]
+    fn peer_eof_is_a_transport_io_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let srv = std::thread::spawn(move || {
+            let (sock, _) = listener.accept().unwrap();
+            drop(sock);
+        });
+        let mut conn = TcpConn::connect(&addr, limits()).unwrap();
+        srv.join().unwrap();
+        let err = conn.recv().unwrap_err();
+        assert!(is_io_error(&err), "{err}");
+    }
+}

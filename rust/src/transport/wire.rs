@@ -1,10 +1,22 @@
-//! Wire frames: what actually crosses the simulated link.
+//! Wire frames: what actually crosses the link.
 //!
 //! A frame is an opaque bit-exact payload (produced by a codec in
 //! `compression::*`) plus a small fixed header. The *payload bit length* is
 //! the paper's communication-overhead quantity; the header models framing
 //! cost and is reported separately so tables can match the paper's
 //! accounting (which counts payload bits only).
+//!
+//! Frames also have a real byte encoding ([`Frame::write_to`] /
+//! [`Frame::read_from`]): a 15-byte header — tag (u8), codec wire version
+//! (u16 LE), codec id (u32 LE), payload bit length (u64 LE) — followed by
+//! `ceil(payload_bits / 8)` payload bytes. The encoded size is exactly
+//! `HEADER_BITS + payload_bits` rounded up to bytes, so the byte stream
+//! costs what the accounting model says it costs. Decoding is hardened:
+//! unknown tags, length prefixes over the receiver's [`WireLimits`] budget,
+//! truncated headers/payloads and inconsistent length fields all return a
+//! typed [`CodecError`] instead of panicking or over-allocating.
+
+use crate::compression::error::CodecError;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FrameKind {
@@ -12,8 +24,11 @@ pub enum FrameKind {
     FeaturesUp,
     /// PS -> device: compressed intermediate gradient matrix.
     GradientsDown,
-    /// Device-side model / optimizer state hand-off (round-robin).
+    /// Device-side model / gradient hand-off (w_d down, ∇w_d up).
     ModelSync,
+    /// Transport control plane: a serialized protocol message
+    /// (`transport::message::Msg`) rides as the payload.
+    Control,
 }
 
 impl FrameKind {
@@ -22,7 +37,106 @@ impl FrameKind {
             FrameKind::FeaturesUp => 1,
             FrameKind::GradientsDown => 2,
             FrameKind::ModelSync => 3,
+            FrameKind::Control => 4,
         }
+    }
+
+    pub fn from_tag(tag: u8) -> Result<FrameKind, CodecError> {
+        match tag {
+            1 => Ok(FrameKind::FeaturesUp),
+            2 => Ok(FrameKind::GradientsDown),
+            3 => Ok(FrameKind::ModelSync),
+            4 => Ok(FrameKind::Control),
+            other => Err(CodecError::MalformedHeader {
+                reason: format!("unknown frame tag {other}"),
+            }),
+        }
+    }
+}
+
+/// Receiver-side decode budget: the largest payload a peer is allowed to
+/// declare. Derived from the model preset by the coordinator (features,
+/// gradients and parameter blobs all fit with headroom); a malicious or
+/// corrupt length prefix beyond it is rejected before any allocation.
+#[derive(Debug, Clone, Copy)]
+pub struct WireLimits {
+    pub max_payload_bytes: u64,
+}
+
+impl WireLimits {
+    pub fn new(max_payload_bytes: u64) -> WireLimits {
+        WireLimits { max_payload_bytes }
+    }
+
+    /// A budget sized for a model preset: the largest of the uncompressed
+    /// feature matrix, the parameter blobs and the label block, with 4x
+    /// headroom for codec overhead plus 1 MiB of fixed slack.
+    pub fn for_shapes(batch: usize, dbar: usize, nd_params: usize, classes: usize) -> WireLimits {
+        let feats = (batch * dbar * 4) as u64;
+        let params = (nd_params * 4) as u64;
+        let labels = (batch * classes * 4) as u64;
+        WireLimits { max_payload_bytes: 4 * feats.max(params).max(labels) + (1 << 20) }
+    }
+}
+
+/// Bounds-checked little-endian reader over a byte buffer. Every accessor
+/// returns [`CodecError::TruncatedFrame`] instead of panicking when the
+/// buffer runs dry, so malformed wire input surfaces as a typed error.
+pub struct ByteCursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteCursor<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteCursor<'a> {
+        ByteCursor { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.remaining() < n {
+            return Err(CodecError::TruncatedFrame {
+                needed: n as u64,
+                available: self.remaining() as u64,
+            });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, CodecError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, CodecError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, CodecError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, CodecError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.u64()?))
     }
 }
 
@@ -54,12 +168,62 @@ impl Frame {
         self
     }
 
-    /// Header cost: 8-bit tag + 64-bit length field + 32-bit codec id +
-    /// 16-bit codec wire version.
+    /// Header cost: 8-bit tag + 16-bit codec wire version + 32-bit codec id
+    /// + 64-bit length field — exactly the 15 bytes `write_to` emits.
     pub const HEADER_BITS: u64 = 120;
+
+    /// Header size of the byte encoding (`HEADER_BITS / 8`).
+    pub const HEADER_BYTES: usize = 15;
 
     pub fn total_bits(&self) -> u64 {
         Self::HEADER_BITS + self.payload_bits
+    }
+
+    /// Size of the byte encoding: header + payload bytes.
+    pub fn wire_len(&self) -> usize {
+        Self::HEADER_BYTES + self.payload.len()
+    }
+
+    /// Append the byte encoding (15-byte header + payload) to `out`.
+    pub fn write_to(&self, out: &mut Vec<u8>) {
+        out.reserve(self.wire_len());
+        out.push(self.kind.tag());
+        out.extend_from_slice(&self.codec_version.to_le_bytes());
+        out.extend_from_slice(&self.codec_id.to_le_bytes());
+        out.extend_from_slice(&self.payload_bits.to_le_bytes());
+        out.extend_from_slice(&self.payload);
+    }
+
+    /// Decode one frame from the cursor, enforcing `limits`. Rejects
+    /// unknown tags, oversized length prefixes, truncated headers/payloads
+    /// and bit/byte length mismatches with a typed [`CodecError`].
+    pub fn read_from(cur: &mut ByteCursor<'_>, limits: &WireLimits) -> Result<Frame, CodecError> {
+        let kind = FrameKind::from_tag(cur.u8()?)?;
+        let codec_version = cur.u16()?;
+        let codec_id = cur.u32()?;
+        let payload_bits = cur.u64()?;
+        let payload_bytes = Self::check_payload_len(payload_bits, limits)?;
+        let payload = cur.take(payload_bytes)?.to_vec();
+        Ok(Frame { kind, payload, payload_bits, codec_id, codec_version })
+    }
+
+    /// Validate a declared payload bit length against the receiver budget
+    /// and return the byte count it implies. Shared by [`Frame::read_from`]
+    /// and the streaming TCP receive path (which must size-check the length
+    /// prefix *before* reading the payload off the socket).
+    pub fn check_payload_len(
+        payload_bits: u64,
+        limits: &WireLimits,
+    ) -> Result<usize, CodecError> {
+        // div_ceil without overflow on adversarial u64::MAX prefixes
+        let payload_bytes = payload_bits / 8 + u64::from(payload_bits % 8 != 0);
+        if payload_bytes > limits.max_payload_bytes {
+            return Err(CodecError::FrameTooLarge {
+                bytes: payload_bytes,
+                max: limits.max_payload_bytes,
+            });
+        }
+        Ok(payload_bytes as usize)
     }
 }
 
@@ -96,14 +260,81 @@ mod tests {
 
     #[test]
     fn kinds_have_distinct_tags() {
-        let tags = [
-            FrameKind::FeaturesUp.tag(),
-            FrameKind::GradientsDown.tag(),
-            FrameKind::ModelSync.tag(),
+        let kinds = [
+            FrameKind::FeaturesUp,
+            FrameKind::GradientsDown,
+            FrameKind::ModelSync,
+            FrameKind::Control,
         ];
-        let mut t = tags.to_vec();
+        let mut t: Vec<u8> = kinds.iter().map(|k| k.tag()).collect();
         t.sort_unstable();
         t.dedup();
-        assert_eq!(t.len(), 3);
+        assert_eq!(t.len(), kinds.len());
+        for k in kinds {
+            assert_eq!(FrameKind::from_tag(k.tag()).unwrap(), k);
+        }
+        assert!(FrameKind::from_tag(0).is_err());
+        assert!(FrameKind::from_tag(5).is_err());
+    }
+
+    #[test]
+    fn byte_encoding_roundtrip_and_size() {
+        let limits = WireLimits::new(1 << 16);
+        let f = Frame::new(FrameKind::GradientsDown, vec![0xAB, 0xCD, 0x01], 17)
+            .with_codec(0x1234_5678, 9);
+        let mut buf = Vec::new();
+        f.write_to(&mut buf);
+        assert_eq!(buf.len(), f.wire_len());
+        assert_eq!(buf.len() as u64 * 8, Frame::HEADER_BITS + 24);
+        let mut cur = ByteCursor::new(&buf);
+        let g = Frame::read_from(&mut cur, &limits).unwrap();
+        assert!(cur.is_empty());
+        assert_eq!(g.kind, f.kind);
+        assert_eq!(g.payload, f.payload);
+        assert_eq!(g.payload_bits, f.payload_bits);
+        assert_eq!((g.codec_id, g.codec_version), (f.codec_id, f.codec_version));
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        let limits = WireLimits::new(64);
+        let f = Frame::new(FrameKind::ModelSync, vec![0u8; 100], 800);
+        let mut buf = Vec::new();
+        f.write_to(&mut buf);
+        let err = Frame::read_from(&mut ByteCursor::new(&buf), &limits).unwrap_err();
+        assert!(matches!(err, CodecError::FrameTooLarge { bytes: 100, max: 64 }));
+        // an adversarial u64::MAX bit count must not overflow the byte math
+        assert!(matches!(
+            Frame::check_payload_len(u64::MAX, &limits),
+            Err(CodecError::FrameTooLarge { .. })
+        ));
+    }
+
+    #[test]
+    fn truncation_at_every_byte_is_a_typed_error() {
+        let limits = WireLimits::new(1 << 16);
+        let f = Frame::new(FrameKind::FeaturesUp, vec![1, 2, 3, 4], 32).with_codec(7, 1);
+        let mut buf = Vec::new();
+        f.write_to(&mut buf);
+        for cut in 0..buf.len() {
+            let err = Frame::read_from(&mut ByteCursor::new(&buf[..cut]), &limits)
+                .expect_err("truncated frame must not decode");
+            assert!(
+                matches!(err, CodecError::TruncatedFrame { .. }),
+                "cut={cut}: {err}"
+            );
+        }
+        assert!(Frame::read_from(&mut ByteCursor::new(&buf), &limits).is_ok());
+    }
+
+    #[test]
+    fn unknown_tag_is_malformed() {
+        let limits = WireLimits::new(64);
+        let f = Frame::new(FrameKind::FeaturesUp, vec![0u8], 8);
+        let mut buf = Vec::new();
+        f.write_to(&mut buf);
+        buf[0] = 0xEE;
+        let err = Frame::read_from(&mut ByteCursor::new(&buf), &limits).unwrap_err();
+        assert!(matches!(err, CodecError::MalformedHeader { .. }), "{err}");
     }
 }

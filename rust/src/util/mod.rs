@@ -13,7 +13,7 @@ pub mod sort;
 pub use cli::Args;
 pub use error::{Context, Error, Result};
 pub use json::Json;
-pub use rng::Rng;
+pub use rng::{Rng, RngState};
 
 /// Grow `v`'s capacity to at least `cap` **total** elements. `Vec::reserve`
 /// is relative to the current length, so calling it on a scratch buffer

@@ -27,6 +27,17 @@ impl SplitMix64 {
     }
 }
 
+/// The full serializable state of an [`Rng`]: the xoshiro256** word state
+/// plus the Box-Muller cache. Exporting/restoring the state lets the
+/// Algorithm-1 shared encode stream travel across a transport boundary (the
+/// PS hands the stream to the device for the step, the device hands the
+/// advanced state back) without perturbing the sequence.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RngState {
+    pub s: [u64; 4],
+    pub gauss: Option<f64>,
+}
+
 /// xoshiro256** — main generator.
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -41,6 +52,23 @@ impl Rng {
             s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
             gauss_cache: None,
         }
+    }
+
+    /// Snapshot the full generator state (wire-transferable).
+    pub fn export_state(&self) -> RngState {
+        RngState { s: self.s, gauss: self.gauss_cache }
+    }
+
+    /// Rebuild a generator that continues exactly from `st`.
+    pub fn from_state(st: &RngState) -> Rng {
+        Rng { s: st.s, gauss_cache: st.gauss }
+    }
+
+    /// Overwrite this generator's state with `st` (the PS re-adopting the
+    /// stream a device advanced).
+    pub fn restore_state(&mut self, st: &RngState) {
+        self.s = st.s;
+        self.gauss_cache = st.gauss;
     }
 
     /// Derive an independent stream (device id, experiment id, ...).
@@ -177,6 +205,29 @@ impl Rng {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn state_roundtrip_continues_stream() {
+        let mut a = Rng::new(42);
+        for _ in 0..13 {
+            a.next_u64();
+        }
+        a.normal(); // leaves a gauss cache entry behind
+        let st = a.export_state();
+        let mut b = Rng::from_state(&st);
+        let mut c = Rng::new(1);
+        c.restore_state(&st);
+        for _ in 0..8 {
+            let x = a.normal();
+            assert_eq!(x.to_bits(), b.normal().to_bits());
+            assert_eq!(x.to_bits(), c.normal().to_bits());
+        }
+        for _ in 0..8 {
+            let x = a.next_u64();
+            assert_eq!(x, b.next_u64());
+            assert_eq!(x, c.next_u64());
+        }
+    }
 
     #[test]
     fn deterministic_across_instances() {

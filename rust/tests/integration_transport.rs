@@ -1,0 +1,219 @@
+//! Integration: the message transport (inproc channels vs real TCP).
+//!
+//! The load-bearing contract: a staleness-0 run speaks the exact same
+//! protocol messages over both backends, so its metrics are **byte
+//! identical** — per-step losses, bits, tags, eval history; only the
+//! wall-clock fields differ. On top of that, a TCP device whose socket is
+//! cut mid-training (request delivered, reply lost — the nastiest cut)
+//! must reconnect, replay its in-flight message through the PS couriers,
+//! and still land on the identical trajectory.
+
+use splitfc::config::{parse_scheme, TrainConfig};
+use splitfc::coordinator::{run_remote_device, Trainer};
+use splitfc::transport::{Connection, Msg, TcpConn, TransportKind, WireLimits};
+use splitfc::util::Json;
+
+fn base_cfg(metrics: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::for_preset("tiny");
+    cfg.devices = 4;
+    cfg.rounds = 5;
+    cfg.n_train = 256;
+    cfg.n_test = 64;
+    cfg.eval_every = 2;
+    cfg.scheme = parse_scheme("splitfc", 4.0).unwrap();
+    cfg.up_bits_per_entry = 2.0;
+    cfg.down_bits_per_entry = 4.0;
+    cfg.seed = 11;
+    cfg.metrics_path = metrics.to_string();
+    cfg
+}
+
+fn metrics_file(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("splitfc_tx_{tag}_{}.jsonl", std::process::id()))
+}
+
+/// The deterministic fields of every step record in a metrics stream
+/// (drops the wall-clock `step_s`/`exec_s` and the summary line).
+fn step_fields(path: &std::path::Path) -> Vec<Vec<(String, String)>> {
+    let text = std::fs::read_to_string(path).expect("metrics file");
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let j = Json::parse(line).expect("valid JSONL");
+        if j.get("t").is_none() {
+            continue; // the trailing summary record
+        }
+        let mut fields = Vec::new();
+        for key in [
+            "t", "k", "g", "loss", "train_acc", "up_bits", "down_bits", "up_nominal",
+            "down_nominal",
+        ] {
+            let v = j.req(key).as_f64().unwrap_or_else(|| panic!("field {key} in {line}"));
+            fields.push((key.to_string(), format!("{v:?}")));
+        }
+        out.push(fields);
+    }
+    out
+}
+
+fn run_with(cfg: TrainConfig) -> splitfc::coordinator::TrainSummary {
+    let mut tr = Trainer::new(cfg).unwrap();
+    tr.run().unwrap()
+}
+
+#[test]
+fn tcp_staleness0_is_byte_identical_to_inproc() {
+    let ref_path = metrics_file("inproc");
+    let inproc = run_with(base_cfg(ref_path.to_str().unwrap()));
+
+    let tcp_path = metrics_file("tcp");
+    let mut cfg = base_cfg(tcp_path.to_str().unwrap());
+    cfg.transport = TransportKind::Tcp;
+    let tcp = run_with(cfg);
+
+    assert_eq!(inproc.final_acc, tcp.final_acc, "final accuracy");
+    assert_eq!(
+        inproc.mean_loss_last_round.to_bits(),
+        tcp.mean_loss_last_round.to_bits(),
+        "mean last-round loss"
+    );
+    assert_eq!(inproc.total_up_bits, tcp.total_up_bits, "uplink bits");
+    assert_eq!(inproc.total_down_bits, tcp.total_down_bits, "downlink bits");
+    assert_eq!(inproc.steps, tcp.steps, "step count");
+    assert_eq!(inproc.steps, 20);
+    assert_eq!(inproc.eval_history, tcp.eval_history, "eval history");
+    assert_eq!(inproc.link_s.to_bits(), tcp.link_s.to_bits(), "modeled link time");
+
+    let a = step_fields(&ref_path);
+    let b = step_fields(&tcp_path);
+    assert_eq!(a.len(), 20);
+    assert_eq!(a, b, "per-step metrics must match record-for-record across transports");
+    std::fs::remove_file(ref_path).ok();
+    std::fs::remove_file(tcp_path).ok();
+}
+
+#[test]
+fn tcp_reconnect_mid_training_is_trajectory_neutral() {
+    // reference trajectory over inproc
+    let ref_path = metrics_file("chaos_ref");
+    run_with(base_cfg(ref_path.to_str().unwrap()));
+    let want = step_fields(&ref_path);
+    assert_eq!(want.len(), 20);
+
+    // device 1's sends: 1 = Hello, then 3 per step (StepStart, Uplink,
+    // Commit). Cutting after each kind of request exercises each replay
+    // path: a re-granted StepStart (identical snapshot + RNG re-export), a
+    // duplicate Uplink (answered from the courier cache without re-running
+    // the server pass), a duplicate Commit (acked without re-applying).
+    for (tag, cut_after) in [("start", 8u64), ("uplink", 3), ("commit", 7)] {
+        let path = metrics_file(&format!("chaos_{tag}"));
+        let mut cfg = base_cfg(path.to_str().unwrap());
+        cfg.transport = TransportKind::Tcp;
+        cfg.chaos_drop = Some((1, cut_after));
+        let s = run_with(cfg);
+        assert_eq!(s.steps, 20, "cut after send {cut_after} lost steps");
+        let got = step_fields(&path);
+        assert_eq!(
+            got, want,
+            "trajectory diverged after a link cut following send {cut_after} ({tag})"
+        );
+        std::fs::remove_file(path).ok();
+    }
+    std::fs::remove_file(ref_path).ok();
+}
+
+#[test]
+fn remote_device_process_joins_over_tcp_byte_identically() {
+    // reference: all four devices in-process
+    let ref_path = metrics_file("remote_ref");
+    run_with(base_cfg(ref_path.to_str().unwrap()));
+    let want = step_fields(&ref_path);
+
+    // device 3 lives "remotely": a separate fleet build that dials the
+    // listener, exactly what the `splitfc device` subcommand runs
+    let path = metrics_file("remote");
+    let mut cfg = base_cfg(path.to_str().unwrap());
+    cfg.transport = TransportKind::Tcp;
+    cfg.devices_remote = 1;
+    let mut tr = Trainer::new(cfg).unwrap();
+    let addr = tr.listen_addr().expect("tcp trainer listens").to_string();
+    let mut remote_cfg = base_cfg("");
+    remote_cfg.transport = TransportKind::Tcp;
+    let remote = std::thread::spawn(move || run_remote_device(&remote_cfg, 3, &addr));
+    let s = tr.run().unwrap();
+    let rep = remote.join().unwrap().expect("remote device run");
+    assert_eq!(s.steps, 20, "PS must count the remote device's commits");
+    assert!(rep.up_bits > 0, "remote device accounted no uplink traffic");
+    drop(tr);
+
+    let got = step_fields(&path);
+    assert_eq!(got, want, "a remote device must not perturb the trajectory");
+    std::fs::remove_file(ref_path).ok();
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn handshake_rejects_codec_and_fleet_mismatch() {
+    let mut cfg = base_cfg("");
+    cfg.transport = TransportKind::Tcp;
+    let tr = Trainer::new(cfg).unwrap();
+    let addr = tr.listen_addr().unwrap().to_string();
+    let limits = WireLimits::new(1 << 20);
+
+    // wrong codec id: the PS must refuse before any step runs
+    let mut conn = TcpConn::connect(&addr, limits).unwrap();
+    conn.send(Msg::Hello { device: 0, codec_id: 0xDEAD_BEEF, codec_version: 9 }).unwrap();
+    match conn.recv().unwrap() {
+        Msg::HelloAck { err: Some(reason), .. } => {
+            assert!(reason.contains("codec mismatch"), "{reason}");
+        }
+        other => panic!("expected rejection, got {other:?}"),
+    }
+
+    // device index beyond the fleet: refused with the fleet size
+    let mut conn = TcpConn::connect(&addr, limits).unwrap();
+    conn.send(Msg::Hello { device: 99, codec_id: 0, codec_version: 0 }).unwrap();
+    match conn.recv().unwrap() {
+        Msg::HelloAck { err: Some(reason), .. } => {
+            assert!(reason.contains("out of range"), "{reason}");
+        }
+        other => panic!("expected rejection, got {other:?}"),
+    }
+}
+
+#[test]
+fn manual_steps_and_probes_work_over_tcp() {
+    let mut cfg = base_cfg("");
+    cfg.transport = TransportKind::Tcp;
+    let mut tr = Trainer::new(cfg).unwrap();
+    let rec = tr.step(1, 0).unwrap();
+    assert!(rec.loss.is_finite());
+    assert!(rec.up_bits > 0);
+    let (f, sigma) = tr.probe_features(0).unwrap();
+    assert!(f.rows > 0 && !sigma.is_empty());
+}
+
+#[test]
+fn fading_sigma_disperses_links_without_touching_the_trajectory() {
+    let ref_path = metrics_file("fade_ref");
+    let flat = run_with(base_cfg(ref_path.to_str().unwrap()));
+    let want = step_fields(&ref_path);
+
+    let path = metrics_file("fade");
+    let mut cfg = base_cfg(path.to_str().unwrap());
+    cfg.fading_sigma = 0.8;
+    let mut tr = Trainer::new(cfg).unwrap();
+    let faded = tr.run().unwrap();
+
+    // identical losses/bits — the capacity draw must come from its own RNG
+    let got = step_fields(&path);
+    assert_eq!(got, want, "fading capacities perturbed the training trajectory");
+    assert_eq!(flat.total_up_bits, faded.total_up_bits);
+    // but the modeled link time differs: per-device capacities dispersed
+    assert_ne!(
+        flat.link_s.to_bits(),
+        faded.link_s.to_bits(),
+        "fading-sigma run should model different transfer times"
+    );
+    std::fs::remove_file(ref_path).ok();
+    std::fs::remove_file(path).ok();
+}
