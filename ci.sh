@@ -53,6 +53,22 @@ echo "==> transport bench (quick): BENCH_transport.json + lifecycle probes"
 # fails on handshake-rejection or reconnect-replay regressions
 cargo bench --bench bench_transport -- --quick
 
+echo "==> seeded scenario smoke (straggler + mid-run cut + rejoin, TCP loopback)"
+# the same --scenario seed twice must yield identical deterministic metrics
+SCEN="seed=7,straggler[dev=2,slow=4x],cut[dev=1,step=3],dropout[p=0.1,rejoin=1r]"
+for pass in a b; do
+    cargo run --release --bin splitfc -- train --preset tiny --devices 4 \
+        --transport tcp --listen 127.0.0.1:0 --rounds 4 \
+        --scenario "$SCEN" --metrics "/tmp/splitfc_ci_scen_$pass.jsonl"
+done
+cargo run --release --bin splitfc -- metrics-diff \
+    /tmp/splitfc_ci_scen_a.jsonl /tmp/splitfc_ci_scen_b.jsonl
+rm -f /tmp/splitfc_ci_scen_a.jsonl /tmp/splitfc_ci_scen_b.jsonl
+
+echo "==> chaos bench (quick): BENCH_chaos.json + determinism probe"
+# fails if a repeated scenario seed diverges
+cargo bench --bench bench_chaos -- --quick
+
 if [ "${SKIP_CLIPPY:-0}" = "1" ]; then
     echo "==> clippy skipped (SKIP_CLIPPY=1)"
 elif cargo clippy --version >/dev/null 2>&1; then

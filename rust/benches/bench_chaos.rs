@@ -1,0 +1,218 @@
+//! Failure-scenario engine bench: training throughput, step-latency tails,
+//! and accuracy-vs-round under calm, straggler and churn scenarios on the
+//! tiny preset over TCP loopback — plus a FWQ-vs-fixed-quantization
+//! comparison under a slow link with a straggler, and a determinism probe
+//! (the same `--scenario` spec twice must reproduce the deterministic step
+//! fields exactly; the bench **fails** non-zero if it does not).
+//!
+//! Writes `BENCH_chaos.json`; `-- --quick` shortens the run for CI.
+
+use splitfc::config::{parse_scheme, TrainConfig};
+use splitfc::coordinator::Trainer;
+use splitfc::scenario::ScenarioSpec;
+use splitfc::transport::TransportKind;
+use splitfc::util::{par, Args, Json, Result};
+
+fn cfg_for(rounds: usize, scenario: &str) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::for_preset("tiny");
+    cfg.devices = 4;
+    cfg.rounds = rounds;
+    cfg.n_train = 256;
+    cfg.n_test = 64;
+    cfg.eval_every = 0;
+    cfg.seed = 11;
+    cfg.scheme = parse_scheme("splitfc", 8.0)?;
+    cfg.up_bits_per_entry = 1.0;
+    cfg.down_bits_per_entry = 4.0;
+    cfg.transport = TransportKind::Tcp;
+    cfg.scenario = ScenarioSpec::parse(scenario)?;
+    // a transient cut must never be declared a departure mid-bench
+    cfg.retry_deadline_s = 10.0;
+    cfg.liveness_timeout_s = 0.0;
+    Ok(cfg)
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+/// Deterministic per-step fields of one metrics stream, in order (the
+/// wall-clock fields `step_s`/`exec_s` are excluded on purpose: stragglers
+/// stretch them without touching the trajectory).
+fn step_fields(path: &std::path::Path) -> Result<Vec<String>> {
+    const KEYS: [&str; 9] = [
+        "t", "k", "g", "loss", "train_acc", "up_bits", "down_bits", "up_nominal",
+        "down_nominal",
+    ];
+    let text =
+        std::fs::read_to_string(path).map_err(|e| splitfc::err!("metrics {path:?}: {e}"))?;
+    let mut rows = Vec::new();
+    for line in text.lines() {
+        let Ok(j) = Json::parse(line) else { continue };
+        if j.get("g").is_none() {
+            continue;
+        }
+        let mut fields = Vec::with_capacity(KEYS.len());
+        for k in KEYS {
+            let v = j
+                .get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| splitfc::err!("step record missing {k:?}"))?;
+            fields.push(format!("{k}={v:?}"));
+        }
+        rows.push(fields.join(" "));
+    }
+    Ok(rows)
+}
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("splitfc_bench_chaos_{tag}_{}.jsonl", std::process::id()))
+}
+
+/// One scenario sweep row: run the tiny fleet under `scenario` and report
+/// throughput, latency tails and the degradation counters.
+fn run_scenario(label: &str, scenario: &str, rounds: usize) -> Result<Json> {
+    let path = tmp_path(label);
+    let mut cfg = cfg_for(rounds, scenario)?;
+    cfg.metrics_path = path.to_str().unwrap().to_string();
+    let scheduled = cfg.rounds * cfg.devices;
+    let mut tr = Trainer::new(cfg)?;
+    let s = tr.run()?;
+    let rep = tr.link_report();
+    drop(tr);
+
+    let text = std::fs::read_to_string(&path).map_err(|e| splitfc::err!("metrics: {e}"))?;
+    let mut step_s: Vec<f64> = text
+        .lines()
+        .filter_map(|l| Json::parse(l).ok())
+        .filter(|j| j.get("g").is_some())
+        .filter_map(|j| j.get("step_s").and_then(|v| v.as_f64()))
+        .collect();
+    std::fs::remove_file(&path).ok();
+    step_s.sort_by(|a, b| a.total_cmp(b));
+    let (p50, p99) = (percentile(&step_s, 0.50), percentile(&step_s, 0.99));
+    let steps_per_s = s.steps as f64 / s.wall_s;
+    println!(
+        "{label:<10}: {}/{} steps in {:.3}s -> {:>7.2} steps/s, p50 {:.4}s p99 {:.4}s, \
+         acc {:.4}, retries {}, departed {}",
+        s.steps, scheduled, s.wall_s, steps_per_s, p50, p99, s.final_acc,
+        rep.retry_attempts, s.departed
+    );
+    Ok(Json::obj(vec![
+        ("scenario", Json::str(label)),
+        ("spec", Json::str(scenario)),
+        ("steps", Json::num(s.steps as f64)),
+        ("steps_scheduled", Json::num(scheduled as f64)),
+        ("wall_s", Json::num(s.wall_s)),
+        ("steps_per_s", Json::num(steps_per_s)),
+        ("p50_step_s", Json::num(p50)),
+        ("p99_step_s", Json::num(p99)),
+        ("final_acc", Json::num(s.final_acc as f64)),
+        ("mean_loss_last_round", Json::num(s.mean_loss_last_round as f64)),
+        ("retry_attempts", Json::num(rep.retry_attempts as f64)),
+        ("backoff_s", Json::num(rep.backoff_s)),
+        ("departed", Json::num(s.departed as f64)),
+    ]))
+}
+
+/// FWQ (adaptive levels) vs a fixed 8-level quantizer at the same bit
+/// budget, run under a slow link with one straggler: the adaptive codec's
+/// accuracy-vs-round curve is the paper's argument, and the modeled link
+/// time shows what the budget costs on a 100 kbps wire.
+fn run_quantizer_cmp(rounds: usize) -> Result<Vec<Json>> {
+    let mut rows = Vec::new();
+    for (label, scheme) in [("fwq", "splitfc[ad,R=8,fwq]"), ("fixedQ8", "splitfc[ad,R=8,fixedQ8]")] {
+        let mut cfg = cfg_for(rounds, "seed=7,straggler[dev=1,slow=4x]")?;
+        cfg.scheme = parse_scheme(scheme, 8.0)?;
+        cfg.link_capacity_bps = 100e3;
+        cfg.eval_every = 2;
+        let mut tr = Trainer::new(cfg)?;
+        let s = tr.run()?;
+        let rep = tr.link_report();
+        drop(tr);
+        println!(
+            "quantizer {label:<8}: acc {:.4}, {} up bits, modeled link {:.2}s, evals {:?}",
+            s.final_acc, s.total_up_bits, rep.elapsed_s, s.eval_history
+        );
+        rows.push(Json::obj(vec![
+            ("quantizer", Json::str(label)),
+            ("scheme", Json::str(scheme)),
+            ("final_acc", Json::num(s.final_acc as f64)),
+            ("total_up_bits", Json::num(s.total_up_bits as f64)),
+            ("link_s", Json::num(rep.elapsed_s)),
+            (
+                "eval_history",
+                Json::Arr(
+                    s.eval_history
+                        .iter()
+                        .map(|&(t, a)| Json::Arr(vec![Json::num(t as f64), Json::num(a as f64)]))
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    Ok(rows)
+}
+
+/// Determinism probe: the same churn spec twice must yield identical
+/// deterministic step fields (same seeds ⇒ same timeline ⇒ same stream).
+fn probe_determinism(scenario: &str, rounds: usize) -> Result<()> {
+    let mut streams = Vec::new();
+    for pass in 0..2 {
+        let path = tmp_path(&format!("det{pass}"));
+        let mut cfg = cfg_for(rounds, scenario)?;
+        cfg.metrics_path = path.to_str().unwrap().to_string();
+        let mut tr = Trainer::new(cfg)?;
+        tr.run()?;
+        drop(tr);
+        streams.push(step_fields(&path)?);
+        std::fs::remove_file(&path).ok();
+    }
+    splitfc::ensure!(
+        streams[0] == streams[1],
+        "determinism probe: two runs of {scenario:?} diverged \
+         ({} vs {} steps)",
+        streams[0].len(),
+        streams[1].len()
+    );
+    println!(
+        "determinism probe ok ({} steps identical across two runs of {scenario:?})",
+        streams[0].len()
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let quick = args.has_flag("quick");
+    let inner_threads = par::thread_request(args.get_usize("threads", 1)).max(1);
+    par::set_threads(inner_threads);
+    let rounds = if quick { 4 } else { 10 };
+
+    let churn = "seed=7,cut[dev=0,step=2],dropout[p=0.15,rejoin=2r]";
+    probe_determinism(churn, rounds)?;
+
+    let mut rows = Vec::new();
+    rows.push(run_scenario("calm", "", rounds)?);
+    rows.push(run_scenario("straggler", "seed=7,straggler[dev=1,slow=4x]", rounds)?);
+    rows.push(run_scenario("churn", churn, rounds)?);
+
+    let quant = run_quantizer_cmp(rounds)?;
+
+    let j = Json::obj(vec![
+        ("bench", Json::str("chaos")),
+        ("preset", Json::str("tiny")),
+        ("devices", Json::num(4.0)),
+        ("rounds", Json::num(rounds as f64)),
+        ("inner_threads", Json::num(par::threads() as f64)),
+        ("rows", Json::Arr(rows)),
+        ("quantizer_cmp", Json::Arr(quant)),
+    ]);
+    std::fs::write("BENCH_chaos.json", j.to_string_pretty()).expect("write BENCH_chaos.json");
+    println!("[saved BENCH_chaos.json]");
+    Ok(())
+}

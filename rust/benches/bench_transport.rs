@@ -112,7 +112,7 @@ fn probe_handshake() -> Result<()> {
 /// every scheduled step.
 fn probe_reconnect() -> Result<()> {
     let mut cfg = cfg_for(2, 8, TransportKind::Tcp);
-    cfg.chaos_drop = Some((0, 6)); // Hello + step 1 (3 sends) + round-2 Uplink
+    cfg.scenario.push_cut(0, 6); // Hello + step 1 (3 sends) + round-2 Uplink
     let rounds = cfg.rounds;
     let mut tr = Trainer::new(cfg)?;
     let s = tr.run()?;

@@ -8,6 +8,7 @@
 
 use crate::compression::{is_registered, registered_names, CodecSpec};
 use crate::runtime::BackendKind;
+use crate::scenario::ScenarioSpec;
 use crate::transport::TransportKind;
 use crate::util::error::Result;
 use crate::util::{Args, Json};
@@ -82,10 +83,26 @@ pub struct TrainConfig {
     /// log-normal dispersion of per-device link capacity (0 = uniform
     /// links); draws from a dedicated RNG so trajectories are unaffected
     pub fading_sigma: f64,
-    /// fault injection for the TCP transport: `(device, n)` cuts that
-    /// device's socket right after its n-th send — request delivered,
-    /// reply lost — exercising reconnect + courier replay (tests/CI)
-    pub chaos_drop: Option<(usize, u64)>,
+    /// seeded failure scenario (`--scenario "seed=7,straggler[dev=2,slow=8x],
+    /// dropout[p=0.05,rejoin=2r],cut[dev=1,step=40]"`); empty = calm run,
+    /// byte-identical to a run with no scenario machinery at all
+    pub scenario: ScenarioSpec,
+    /// per-request receive deadline on device connections in seconds
+    /// (0 = wait forever); expiry surfaces as a retriable transport fault
+    pub rpc_deadline_s: f64,
+    /// first backoff delay of the worker's retry loop, milliseconds
+    pub retry_base_ms: u64,
+    /// backoff delay ceiling, milliseconds
+    pub retry_cap_ms: u64,
+    /// give up reconnecting after this much cumulative backoff sleep,
+    /// seconds (0 = no retries at all)
+    pub retry_deadline_s: f64,
+    /// PS liveness window in seconds: a device with zero connections that
+    /// stays silent this long is marked departed and the run proceeds with
+    /// the surviving cohort (0 = wait forever, the historical behavior).
+    /// Must exceed the workers' retry deadline or a transient outage may
+    /// be declared a departure while the device is still backing off.
+    pub liveness_timeout_s: f64,
 }
 
 impl TrainConfig {
@@ -129,7 +146,12 @@ impl TrainConfig {
             listen: "127.0.0.1:0".to_string(),
             devices_remote: 0,
             fading_sigma: 0.0,
-            chaos_drop: None,
+            scenario: ScenarioSpec::default(),
+            rpc_deadline_s: 0.0,
+            retry_base_ms: 10,
+            retry_cap_ms: 500,
+            retry_deadline_s: 15.0,
+            liveness_timeout_s: 0.0,
         }
     }
 
@@ -183,15 +205,31 @@ impl TrainConfig {
         }
         self.devices_remote = args.get_usize("devices-remote", self.devices_remote);
         self.fading_sigma = args.get_f64("fading-sigma", self.fading_sigma);
+        if let Some(v) = args.get("scenario") {
+            self.scenario = ScenarioSpec::parse(v)?;
+        }
+        self.rpc_deadline_s = args.get_f64("rpc-deadline-s", self.rpc_deadline_s);
+        self.retry_base_ms = args.get_u64("retry-base-ms", self.retry_base_ms);
+        self.retry_cap_ms = args.get_u64("retry-cap-ms", self.retry_cap_ms);
+        self.retry_deadline_s = args.get_f64("retry-deadline-s", self.retry_deadline_s);
+        self.liveness_timeout_s =
+            args.get_f64("liveness-timeout-s", self.liveness_timeout_s);
+        // deprecated spelling of `--scenario "cut[dev=K,send=N]"`; kept for
+        // script compatibility, now a comma list of device:send pairs that
+        // appends to whatever --scenario already configured
         if let Some(v) = args.get("chaos-drop") {
-            let (k, n) = v
-                .split_once(':')
-                .ok_or_else(|| crate::err!("--chaos-drop wants device:send, got {v:?}"))?;
-            let k: usize =
-                k.parse().map_err(|_| crate::err!("--chaos-drop device {k:?} not a number"))?;
-            let n: u64 =
-                n.parse().map_err(|_| crate::err!("--chaos-drop send {n:?} not a number"))?;
-            self.chaos_drop = Some((k, n));
+            for pair in v.split(',') {
+                let (k, n) = pair.split_once(':').ok_or_else(|| {
+                    crate::err!("--chaos-drop wants device:send, got {pair:?}")
+                })?;
+                let k: usize = k
+                    .parse()
+                    .map_err(|_| crate::err!("--chaos-drop device {k:?} not a number"))?;
+                let n: u64 = n
+                    .parse()
+                    .map_err(|_| crate::err!("--chaos-drop send {n:?} not a number"))?;
+                self.scenario.push_cut(k, n);
+            }
         }
         if let Some(v) = args.get("metrics") {
             self.metrics_path = v.to_string();
@@ -236,6 +274,9 @@ impl TrainConfig {
             ("transport", Json::str(self.transport.name())),
             ("devices_remote", Json::num(self.devices_remote as f64)),
             ("fading_sigma", Json::num(self.fading_sigma)),
+            ("scenario", Json::str(self.scenario.to_string())),
+            ("rpc_deadline_s", Json::num(self.rpc_deadline_s)),
+            ("liveness_timeout_s", Json::num(self.liveness_timeout_s)),
         ])
     }
 }
@@ -397,13 +438,45 @@ mod tests {
         assert_eq!(c.listen, "127.0.0.1:7777");
         assert_eq!(c.devices_remote, 2);
         assert_eq!(c.fading_sigma, 0.5);
-        assert_eq!(c.chaos_drop, Some((1, 13)));
+        // the deprecated --chaos-drop spelling routes into the scenario
+        assert_eq!(c.scenario.to_string(), "cut[dev=1,send=13]");
         let j = c.to_json();
         assert_eq!(j.req("transport").as_str(), Some("tcp"));
         assert_eq!(j.req("devices_remote").as_usize(), Some(2));
+        assert_eq!(j.req("scenario").as_str(), Some("cut[dev=1,send=13]"));
         assert!(c.apply_overrides(&args("x --transport udp")).is_err());
         assert!(c.apply_overrides(&args("x --chaos-drop nope")).is_err());
         assert!(c.apply_overrides(&args("x --chaos-drop a:7")).is_err());
+    }
+
+    #[test]
+    fn scenario_flags_plumb_through() {
+        let mut c = TrainConfig::for_preset("tiny");
+        assert!(c.scenario.is_empty());
+        assert_eq!(c.rpc_deadline_s, 0.0);
+        assert_eq!(c.liveness_timeout_s, 0.0);
+        assert_eq!((c.retry_base_ms, c.retry_cap_ms), (10, 500));
+        assert_eq!(c.retry_deadline_s, 15.0);
+        c.apply_overrides(&args(
+            "x --scenario seed=7,straggler[dev=2,slow=8x],dropout[p=0.05,rejoin=2r] \
+             --rpc-deadline-s 2.5 --retry-base-ms 5 --retry-cap-ms 100 \
+             --retry-deadline-s 4 --liveness-timeout-s 6",
+        ))
+        .unwrap();
+        assert_eq!(c.scenario.seed, Some(7));
+        assert_eq!(c.scenario.clauses.len(), 2);
+        assert_eq!(c.rpc_deadline_s, 2.5);
+        assert_eq!((c.retry_base_ms, c.retry_cap_ms), (5, 100));
+        assert_eq!(c.retry_deadline_s, 4.0);
+        assert_eq!(c.liveness_timeout_s, 6.0);
+        // --chaos-drop comma lists append cut clauses after the spec's own
+        c.apply_overrides(&args("x --chaos-drop 0:6,1:9")).unwrap();
+        assert_eq!(
+            c.scenario.to_string(),
+            "seed=7,straggler[dev=2,slow=8x],dropout[p=0.05,rejoin=2r],\
+             cut[dev=0,send=6],cut[dev=1,send=9]"
+        );
+        assert!(c.apply_overrides(&args("x --scenario straggler[bogus=1]")).is_err());
     }
 
     #[test]

@@ -19,7 +19,9 @@ USAGE:
                 [--backend native|pjrt] [--artifacts DIR] [--threads N]
                 [--staleness S] [--concurrent-devices N] [--per-device-opt]
                 [--transport inproc|tcp] [--listen ADDR] [--devices-remote R]
-                [--fading-sigma X]
+                [--fading-sigma X] [--scenario SPEC] [--rpc-deadline-s X]
+                [--retry-base-ms N] [--retry-cap-ms N] [--retry-deadline-s X]
+                [--liveness-timeout-s X]
   splitfc device --connect HOST:PORT --device K --preset P [--scheme S] ...
                 # device-side process for one remote device; preset, scheme,
                 # seed and fleet flags must match the server's `train` run
@@ -28,6 +30,9 @@ USAGE:
                 [--threads N] ...
   splitfc codec-smoke [--r R]   # registry matrix: round-trip + one train
                                 # step for every registered codec
+  splitfc metrics-diff A.jsonl B.jsonl
+                # compare two metrics streams on the deterministic step
+                # fields (exit 1 on any divergence; wall-clock excluded)
   splitfc latency-calc [--capacity-bps 10e6 --batch 256 --dbar 8192
                 --iters 100 --devices 100]
   splitfc inspect [--artifacts artifacts]
@@ -65,6 +70,34 @@ TRANSPORT:
                           device` processes instead of in-process threads
   --fading-sigma X        log-normal per-device link-capacity dispersion
                           (0 = every device at --capacity-bps)
+
+SCENARIOS (seeded failure injection; same spec = same event timeline):
+  --scenario SPEC         comma list of clauses in the codec-spec style, e.g.
+                            seed=7,straggler[dev=2,slow=8x],
+                            dropout[p=0.05,rejoin=2r],cut[dev=1,step=40],
+                            wave[cohort=4,every=5r],depart[dev=3,round=4]
+                          straggler  slow one device (dev=K) or a seeded
+                                     random subset (p=P) by the slow= factor
+                          dropout    per-round seeded dropout; affected
+                                     devices sit out rejoin= rounds
+                          cut        deterministic socket cut at the device's
+                                     N-th step (step=) or wire send (send=,
+                                     Hello is send #1); needs --transport tcp
+                          wave       staggered joins in cohorts
+                          depart     permanent departure before round T
+                          seed=N     scenario RNG (default: --seed); scenario
+                                     draws never touch the training RNG
+  --chaos-drop K:N[,K:N]  deprecated; same as --scenario cut[dev=K,send=N]
+  --rpc-deadline-s X      per-request receive deadline on device connections
+                          (0 = wait forever); expiry retries like an IO fault
+  --retry-base-ms N       first backoff delay after a transport fault (10)
+  --retry-cap-ms N        backoff delay ceiling (500); delays double per
+                          attempt with seeded jitter in [0.5, 1.5)
+  --retry-deadline-s X    give up after this much cumulative backoff (15)
+  --liveness-timeout-s X  PS-side: a disconnected device silent this long is
+                          marked departed and the run degrades gracefully to
+                          the surviving cohort (0 = wait forever); set it
+                          above --retry-deadline-s
 ";
 
 pub fn main() {
@@ -83,6 +116,7 @@ pub fn main() {
         Some("device") => cmd_device(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("codec-smoke") => cmd_codec_smoke(&args),
+        Some("metrics-diff") => cmd_metrics_diff(&args),
         Some("latency-calc") => cmd_latency(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("help") | None => {
@@ -216,6 +250,66 @@ fn cmd_codec_smoke(args: &Args) -> Result<()> {
         );
     }
     println!("codec-smoke OK ({} codecs)", names.len());
+    Ok(())
+}
+
+/// Compare two metrics JSONL streams on the deterministic per-step fields
+/// (wall-clock fields excluded): the determinism contract for scenarios is
+/// "same `--scenario`, same seed, same fleet ⇒ identical streams", and CI
+/// enforces it with this command.
+fn cmd_metrics_diff(args: &Args) -> Result<()> {
+    use crate::util::Json;
+    const KEYS: [&str; 9] = [
+        "t", "k", "g", "loss", "train_acc", "up_bits", "down_bits", "up_nominal",
+        "down_nominal",
+    ];
+    let (a, b) = match (args.positional.get(1), args.positional.get(2)) {
+        (Some(a), Some(b)) => (a.clone(), b.clone()),
+        _ => crate::bail!("metrics-diff wants two JSONL paths"),
+    };
+    let load = |path: &str| -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| crate::err!("cannot read {path:?}: {e}"))?;
+        let mut rows = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line)
+                .map_err(|e| crate::err!("{path}:{}: bad JSON: {e}", i + 1))?;
+            // summary/config lines lack step keys; only step records count
+            if j.get("g").is_none() {
+                continue;
+            }
+            let mut fields = Vec::with_capacity(KEYS.len());
+            for k in KEYS {
+                let v = j
+                    .get(k)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| crate::err!("{path}:{}: missing field {k:?}", i + 1))?;
+                fields.push(format!("{k}={v:?}"));
+            }
+            rows.push(fields.join(" "));
+        }
+        Ok(rows)
+    };
+    let (ra, rb) = (load(&a)?, load(&b)?);
+    crate::ensure!(
+        ra.len() == rb.len(),
+        "step counts differ: {} has {} steps, {} has {}",
+        a,
+        ra.len(),
+        b,
+        rb.len()
+    );
+    for (i, (x, y)) in ra.iter().zip(rb.iter()).enumerate() {
+        crate::ensure!(
+            x == y,
+            "step {} diverges:\n  {a}: {x}\n  {b}: {y}",
+            i + 1
+        );
+    }
+    println!("metrics-diff OK: {} steps identical on {} fields", ra.len(), KEYS.len());
     Ok(())
 }
 

@@ -51,6 +51,8 @@ pub struct TrainSummary {
     pub total_up_bits: u64,
     pub total_down_bits: u64,
     pub steps: usize,
+    /// devices marked departed by the PS liveness policy (0 on calm runs)
+    pub departed: usize,
     pub wall_s: f64,
     pub exec_s: f64,
     /// modeled transfer time over the simulated link
@@ -69,6 +71,7 @@ impl TrainSummary {
             ("total_up_bits", Json::num(self.total_up_bits as f64)),
             ("total_down_bits", Json::num(self.total_down_bits as f64)),
             ("steps", Json::num(self.steps as f64)),
+            ("departed", Json::num(self.departed as f64)),
             ("wall_s", Json::num(self.wall_s)),
             ("exec_s", Json::num(self.exec_s)),
             ("link_s", Json::num(self.link_s)),

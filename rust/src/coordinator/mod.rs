@@ -30,4 +30,4 @@ pub use protocol::{PsEndpoint, RunGate};
 pub use scheduler::Scheduler;
 pub use server::{DeviceOpt, ParameterServer};
 pub use trainer::{build_parts, run_remote_device, FleetParts, Trainer};
-pub use worker::DeviceWorker;
+pub use worker::{DeviceWorker, RetryPolicy};

@@ -26,6 +26,7 @@
 //! the identical state — byte-identity survives arbitrary mid-step cuts.
 
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::compression::{Codec, CodecParams, Reclaim};
 use crate::coordinator::metrics::StepRecord;
@@ -158,6 +159,50 @@ impl RunGate {
         self.cv.notify_all();
     }
 
+    /// Pre-complete steps no device will run (scenario departures, delayed
+    /// joins, dropout windows) so the watermark flows past absent peers.
+    /// Idempotent; completing a skipped step later is harmless.
+    pub fn skip(&self, locals: &[usize]) {
+        if locals.is_empty() {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        if !st.active {
+            return;
+        }
+        for &l in locals {
+            if l < st.done.len() {
+                st.done[l] = true;
+            }
+        }
+        while st.watermark < st.done.len() && st.done[st.watermark] {
+            st.watermark += 1;
+        }
+        self.cv.notify_all();
+    }
+
+    /// Graceful degradation: mark every remaining step owned by `device`
+    /// (schedule-local indices ≡ device mod `devices`) as done, so the
+    /// surviving cohort proceeds without it.
+    pub fn skip_remaining_of_device(&self, device: usize, devices: usize) {
+        if devices == 0 {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        if !st.active {
+            return;
+        }
+        let mut l = device;
+        while l < st.done.len() {
+            st.done[l] = true;
+            l += devices;
+        }
+        while st.watermark < st.done.len() && st.done[st.watermark] {
+            st.watermark += 1;
+        }
+        self.cv.notify_all();
+    }
+
     /// Block until the watermark reaches `target` (an eval round boundary
     /// or the end of the schedule).
     pub fn wait_watermark(&self, target: usize) -> Result<()> {
@@ -173,6 +218,27 @@ impl RunGate {
         }
     }
 
+    /// Like [`RunGate::wait_watermark`] but bounded: returns `Ok(false)` if
+    /// `timeout` elapses first — the liveness monitor's polling primitive.
+    pub fn wait_watermark_for(&self, target: usize, timeout: Duration) -> Result<bool> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.aborted {
+                return Err(crate::err!("scheduler aborted (a worker failed)"));
+            }
+            if !st.active || st.watermark >= target {
+                return Ok(true);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(false);
+            }
+            let (guard, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
     pub fn eval_done(&self, round: usize) {
         let mut st = self.state.lock().unwrap();
         st.eval_done_round = round;
@@ -184,8 +250,8 @@ impl RunGate {
         self.cv.notify_all();
     }
 
-    #[cfg(test)]
-    fn watermark(&self) -> usize {
+    /// Longest committed (or skipped) prefix of the schedule.
+    pub fn watermark(&self) -> usize {
         self.state.lock().unwrap().watermark
     }
 }
@@ -230,11 +296,36 @@ pub struct DeviceTotals {
     pub down_bits: u64,
     pub steps: usize,
     pub last_round_loss: f32,
+    /// marked by the liveness policy: this device went silent while
+    /// disconnected and the run proceeded without it
+    pub departed: bool,
 }
 
 impl Default for DeviceTotals {
     fn default() -> DeviceTotals {
-        DeviceTotals { up_bits: 0, down_bits: 0, steps: 0, last_round_loss: f32::NAN }
+        DeviceTotals {
+            up_bits: 0,
+            down_bits: 0,
+            steps: 0,
+            last_round_loss: f32::NAN,
+            departed: false,
+        }
+    }
+}
+
+/// Per-device liveness the PS tracks to degrade gracefully instead of
+/// deadlocking on a vanished peer.
+struct DevLive {
+    /// open `serve` loops currently bound to this device
+    connections: usize,
+    /// last time a bound connection delivered a message (or closed)
+    last_seen: Instant,
+    departed: bool,
+}
+
+impl DevLive {
+    fn fresh() -> DevLive {
+        DevLive { connections: 0, last_seen: Instant::now(), departed: false }
     }
 }
 
@@ -258,6 +349,7 @@ pub struct PsEndpoint {
     couriers: Vec<Mutex<Courier>>,
     pub gate: RunGate,
     totals: Mutex<Vec<DeviceTotals>>,
+    liveness: Mutex<Vec<DevLive>>,
     run: Mutex<RunInfo>,
     /// expected ∇w_d payload length (bytes) for `Commit` validation
     nd_bytes: usize,
@@ -283,6 +375,7 @@ impl PsEndpoint {
             couriers: (0..devices).map(|_| Mutex::new(Courier::default())).collect(),
             gate: RunGate::new(),
             totals: Mutex::new(vec![DeviceTotals::default(); devices]),
+            liveness: Mutex::new((0..devices).map(|_| DevLive::fresh()).collect()),
             run: Mutex::new(RunInfo { rounds: usize::MAX, first_step: 0 }),
             nd_bytes: nd_params * 4,
         }
@@ -292,9 +385,12 @@ impl PsEndpoint {
         self.devices
     }
 
-    /// Arm the endpoint for a `rounds`-round scheduled run: reset couriers
-    /// and totals, record the global-step origin, arm the gate.
-    pub fn begin_run(&self, rounds: usize, first_step: usize, eval_every: usize) {
+    /// Arm the endpoint for a `rounds`-round scheduled run: reset couriers,
+    /// totals, and liveness, record the global-step origin, arm the gate,
+    /// and pre-complete `skips` — schedule-local steps the scenario
+    /// timeline says no device will run (departures, delayed joins,
+    /// dropout windows).
+    pub fn begin_run(&self, rounds: usize, first_step: usize, eval_every: usize, skips: &[usize]) {
         *self.run.lock().unwrap() = RunInfo { rounds, first_step };
         for t in self.totals.lock().unwrap().iter_mut() {
             *t = DeviceTotals::default();
@@ -302,7 +398,12 @@ impl PsEndpoint {
         for c in &self.couriers {
             *c.lock().unwrap() = Courier::default();
         }
+        for l in self.liveness.lock().unwrap().iter_mut() {
+            l.departed = false;
+            l.last_seen = Instant::now();
+        }
         self.gate.begin(rounds * self.devices, self.staleness * self.devices, eval_every);
+        self.gate.skip(skips);
     }
 
     /// Disarm the gate and hand back the run's per-device totals (callers
@@ -325,22 +426,116 @@ impl PsEndpoint {
     /// `serve` loop picks up, with all state in the endpoint. Set
     /// `cache_replays` on transports whose peers can reconnect (TCP), so
     /// duplicate `Uplink`s can be answered from the courier cache.
+    ///
+    /// The loop also feeds the liveness tracker: the first device-carrying
+    /// message binds the connection to that device, every further message
+    /// refreshes its `last_seen`, and loop exit (peer gone, Bye, Abort)
+    /// releases the binding — so "disconnected and silent" is observable.
     pub fn serve(&self, conn: &mut dyn Connection, cache_replays: bool) -> Result<()> {
+        let mut bound: Option<usize> = None;
         loop {
             let msg = match conn.recv() {
                 Ok(m) => m,
-                Err(_) => return Ok(()), // peer gone; reconnect spawns a new loop
+                Err(_) => break, // peer gone; reconnect spawns a new loop
             };
+            match msg.device().map(|d| d as usize) {
+                Some(dev) if dev < self.devices => {
+                    if bound == Some(dev) {
+                        self.touch(dev);
+                    } else {
+                        if let Some(old) = bound {
+                            self.connection_closed(old);
+                        }
+                        self.connection_opened(dev);
+                        bound = Some(dev);
+                    }
+                }
+                _ => {}
+            }
             let reply = match self.handle(msg, cache_replays) {
                 Ok(Some(r)) => r,
-                Ok(None) => return Ok(()), // clean Bye
+                Ok(None) => break, // clean Bye
                 Err(e) => Msg::Abort { reason: e.to_string() },
             };
             let fatal = matches!(reply, Msg::Abort { .. });
             if conn.send(reply).is_err() || fatal {
-                return Ok(());
+                break;
             }
         }
+        if let Some(dev) = bound {
+            self.connection_closed(dev);
+        }
+        Ok(())
+    }
+
+    fn connection_opened(&self, dev: usize) {
+        let mut live = self.liveness.lock().unwrap();
+        live[dev].connections += 1;
+        live[dev].last_seen = Instant::now();
+    }
+
+    fn connection_closed(&self, dev: usize) {
+        let mut live = self.liveness.lock().unwrap();
+        live[dev].connections = live[dev].connections.saturating_sub(1);
+        live[dev].last_seen = Instant::now();
+    }
+
+    fn touch(&self, dev: usize) {
+        self.liveness.lock().unwrap()[dev].last_seen = Instant::now();
+    }
+
+    /// Wait for the watermark to reach `target`, degrading gracefully:
+    /// whenever progress stalls on a device that has no open connection
+    /// and has been silent for the `liveness` window, that device is
+    /// marked departed and its remaining steps are skipped, so the
+    /// surviving cohort finishes the run. `liveness` of `None` waits
+    /// forever (today's behavior).
+    ///
+    /// The window must comfortably exceed the workers' retry deadline: a
+    /// device mid-backoff is disconnected too, and departing it early
+    /// turns a recoverable cut into a rejected resend.
+    pub fn await_watermark_degraded(
+        &self,
+        target: usize,
+        liveness: Option<Duration>,
+    ) -> Result<()> {
+        let window = match liveness {
+            Some(w) => w,
+            None => return self.gate.wait_watermark(target),
+        };
+        let tick = Duration::from_millis(50).min(window);
+        loop {
+            if self.gate.wait_watermark_for(target, tick)? {
+                return Ok(());
+            }
+            // stalled: the watermark step's owner is `watermark % devices`
+            let owner = self.gate.watermark() % self.devices;
+            let silent = {
+                let live = self.liveness.lock().unwrap();
+                let l = &live[owner];
+                !l.departed && l.connections == 0 && l.last_seen.elapsed() >= window
+            };
+            if silent {
+                self.mark_departed(owner);
+            }
+        }
+    }
+
+    /// Mark `device` departed: reject its future requests, pre-complete its
+    /// remaining steps, and record the departure in the run totals.
+    pub fn mark_departed(&self, device: usize) {
+        {
+            let mut live = self.liveness.lock().unwrap();
+            if live[device].departed {
+                return;
+            }
+            live[device].departed = true;
+        }
+        crate::log_warn!(
+            "device {device} departed (liveness timeout); continuing with the surviving cohort"
+        );
+        self.totals.lock().unwrap()[device].departed = true;
+        self.gate.skip_remaining_of_device(device, self.devices);
     }
 
     fn handle(&self, msg: Msg, cache_replays: bool) -> Result<Option<Msg>> {
@@ -472,6 +667,12 @@ impl PsEndpoint {
                 self.devices
             )));
         }
+        if self.liveness.lock().unwrap()[device as usize].departed {
+            return ack(Some(format!(
+                "device {device} was marked departed after a liveness timeout; \
+                 the run proceeded without it"
+            )));
+        }
         let codec = self.codecs[device as usize].lock().unwrap();
         let (want_id, want_ver) = (codec.wire_id(), codec.wire_version());
         if (codec_id, codec_version) != (want_id, want_ver) {
@@ -488,6 +689,11 @@ impl PsEndpoint {
             (device as usize) < self.devices,
             "device index {device} out of range (fleet has {})",
             self.devices
+        );
+        crate::ensure!(
+            !self.liveness.lock().unwrap()[device as usize].departed,
+            "device {device} was marked departed after a liveness timeout; \
+             the run proceeded without it"
         );
         Ok(())
     }
@@ -561,6 +767,44 @@ mod tests {
         g.begin(2, 0, 0);
         g.complete(0);
         assert_eq!(g.watermark(), 1);
+    }
+
+    #[test]
+    fn skips_pre_advance_the_watermark() {
+        // 2 devices x 3 rounds; device 1 never runs -> its steps 1, 3, 5
+        // are pre-completed and the watermark flows past them
+        let g = armed_gate(6, 0, 0);
+        g.skip(&[1, 3, 5]);
+        assert_eq!(g.watermark(), 0);
+        g.complete(0);
+        assert_eq!(g.watermark(), 2);
+        g.complete(2);
+        assert_eq!(g.watermark(), 4);
+        g.complete(4);
+        assert_eq!(g.watermark(), 6);
+    }
+
+    #[test]
+    fn skip_remaining_of_device_unblocks_the_cohort() {
+        let g = armed_gate(8, 0, 0); // 4 devices x 2 rounds
+        g.complete(0);
+        g.complete(1);
+        g.complete(2);
+        assert_eq!(g.watermark(), 3); // stalled on device 3
+        g.skip_remaining_of_device(3, 4);
+        assert_eq!(g.watermark(), 4);
+        assert!(g.wait_start(4, 2).is_ok());
+    }
+
+    #[test]
+    fn wait_watermark_for_times_out_then_succeeds() {
+        let g = armed_gate(2, 0, 0);
+        assert!(!g.wait_watermark_for(2, Duration::from_millis(10)).unwrap());
+        g.complete(0);
+        g.complete(1);
+        assert!(g.wait_watermark_for(2, Duration::from_millis(10)).unwrap());
+        g.abort();
+        assert!(g.wait_watermark_for(2, Duration::from_millis(10)).is_err());
     }
 
     #[test]

@@ -25,7 +25,7 @@
 //! release the next round), and folding the endpoint's per-device totals
 //! into the run summary in device order.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::TrainSummary;
 use crate::coordinator::protocol::{AbortOnDrop, PsEndpoint};
@@ -48,13 +48,31 @@ pub struct Scheduler {
     pub concurrency: usize,
     /// evaluate every this many rounds (0 = only at the end)
     pub eval_every: usize,
+    /// schedule-local steps no device will run (scenario departures,
+    /// delayed joins, dropout windows) — pre-completed at `begin_run`
+    pub skips: Vec<usize>,
+    /// PS liveness window: a disconnected device silent this long is
+    /// marked departed and the run proceeds without it (`None` = wait
+    /// forever, today's behavior)
+    pub liveness: Option<Duration>,
 }
 
+/// Mean of the finite last-round losses. Departed / absent devices leave
+/// NaN behind — they must not poison the survivors' mean; on a full run
+/// every loss is finite and this is the plain sequential sum.
 fn mean_loss(losses: &[f32]) -> f32 {
-    if losses.is_empty() {
+    let mut sum = 0.0f32;
+    let mut n = 0usize;
+    for &l in losses {
+        if l.is_finite() {
+            sum += l;
+            n += 1;
+        }
+    }
+    if n == 0 {
         f32::NAN
     } else {
-        losses.iter().sum::<f32>() / losses.len() as f32
+        sum / n as f32
     }
 }
 
@@ -70,6 +88,9 @@ fn drive_devices(
 ) -> Result<()> {
     for t in 1..=rounds {
         for w in chunk.iter_mut() {
+            if !w.script().participates(t) {
+                continue; // scenario: not joined yet, dropped out, or departed
+            }
             let l = (t - 1) * devices + w.device;
             let rec = w
                 .run_step(t, l, first_step + l, train)
@@ -106,7 +127,7 @@ impl Scheduler {
         // the sequential driver evaluates inline between rounds, so its
         // gate needs no eval barriers
         let eval_gate_every = if sequential { 0 } else { self.eval_every };
-        endpoint.begin_run(self.rounds, self.first_step, eval_gate_every);
+        endpoint.begin_run(self.rounds, self.first_step, eval_gate_every, &self.skips);
         let res = if sequential {
             self.run_sequential(server, workers, devices, train, test)
         } else {
@@ -121,6 +142,9 @@ impl Scheduler {
             summary.total_up_bits += t.up_bits;
             summary.total_down_bits += t.down_bits;
             summary.steps += t.steps;
+            if t.departed {
+                summary.departed += 1;
+            }
             last_losses.push(t.last_round_loss);
         }
         summary.mean_loss_last_round = mean_loss(&last_losses);
@@ -147,6 +171,9 @@ impl Scheduler {
         let mut summary = TrainSummary::default();
         for t in 1..=self.rounds {
             for w in workers.iter_mut() {
+                if !w.script().participates(t) {
+                    continue; // scenario: not joined yet, dropped out, or departed
+                }
                 let l = (t - 1) * devices + w.device;
                 let rec = w
                     .run_step(t, l, self.first_step + l, train)
@@ -187,6 +214,7 @@ impl Scheduler {
         let chunk_len = ((workers.len() + conc - 1) / conc).max(1);
         let (rounds, eval_every) = (self.rounds, self.eval_every);
         let first_step = self.first_step;
+        let liveness = self.liveness;
         let gate = &endpoint.gate;
 
         let mut eval_history: Vec<(usize, f32)> = Vec::new();
@@ -206,6 +234,18 @@ impl Scheduler {
                     })
                 })
                 .collect();
+
+            // liveness monitor: watches the watermark with a timeout; a
+            // remote device that stays disconnected and silent past the
+            // window is marked departed and its remaining steps skipped, so
+            // the surviving cohort (and the waits below) make progress.
+            // Exits on its own once the final watermark is reached (or the
+            // gate aborts / the run is finished).
+            if liveness.is_some() {
+                s.spawn(move || {
+                    let _ = endpoint.await_watermark_degraded(rounds * devices, liveness);
+                });
+            }
 
             // eval rounds are barriers: wait for the boundary watermark,
             // evaluate the frozen snapshot, release the next round

@@ -33,13 +33,14 @@ use crate::coordinator::metrics::{MetricsWriter, StepRecord, TrainSummary};
 use crate::coordinator::protocol::PsEndpoint;
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::server::ParameterServer;
-use crate::coordinator::worker::DeviceWorker;
+use crate::coordinator::worker::{DeviceWorker, RetryPolicy};
 use crate::data::{
     dirichlet_partition, label_shards, writer_groups, Dataset, MiniBatchLoader, SynthSpec,
 };
 use crate::ensure;
 use crate::model::{ParamSet, PresetInfo};
 use crate::runtime::{create_backend, Backend};
+use crate::scenario::Timeline;
 use crate::tensor::Matrix;
 use crate::transport::{
     fading_capacities, inproc_pair, Connection, Link, LinkReport, Msg, TcpConn, TransportKind,
@@ -56,6 +57,9 @@ pub struct Trainer {
     workers: Vec<DeviceWorker>,
     train: Dataset,
     test: Dataset,
+    /// the compiled failure scenario (calm scripts when `--scenario` is
+    /// empty — the machinery then changes nothing about the run)
+    timeline: Timeline,
     /// global index tag for facade-driven (manual) steps
     steps_taken: usize,
     /// bound address of the TCP listener (`--transport tcp` only)
@@ -64,6 +68,20 @@ pub struct Trainer {
     stop: Arc<AtomicBool>,
     /// PS-side serve/acceptor threads, joined on drop
     handles: Vec<JoinHandle<()>>,
+}
+
+/// Apply the config's failure-handling knobs and the device's compiled
+/// scenario script to a freshly built worker (local threads and remote
+/// `splitfc device` processes go through the same path).
+fn arm_worker(w: &mut DeviceWorker, cfg: &TrainConfig, timeline: &Timeline) {
+    w.set_retry_policy(
+        RetryPolicy::new(cfg.retry_base_ms, cfg.retry_cap_ms, cfg.retry_deadline_s),
+        cfg.seed,
+    );
+    w.set_script(timeline.scripts[w.device].clone());
+    if cfg.rpc_deadline_s > 0.0 {
+        w.set_rpc_deadline(Some(std::time::Duration::from_secs_f64(cfg.rpc_deadline_s)));
+    }
 }
 
 fn synth_spec_for(preset: &str) -> SynthSpec {
@@ -220,6 +238,12 @@ impl Trainer {
             "--devices-remote needs --transport tcp (a remote process cannot \
              join an in-process channel)"
         );
+        let timeline = Timeline::compile(&cfg.scenario, cfg.devices, cfg.rounds, cfg.seed)?;
+        ensure!(
+            !timeline.has_cuts() || cfg.transport == TransportKind::Tcp,
+            "scenario cut[] clauses need --transport tcp (in-process links \
+             cannot reconnect)"
+        );
         let FleetParts {
             backend,
             preset,
@@ -299,10 +323,9 @@ impl Trainer {
                 }));
                 for k in 0..local_n {
                     let mut conn = TcpConn::connect(&addr, limits)?;
-                    if let Some((fk, n)) = cfg.chaos_drop {
-                        if fk == k {
-                            conn.set_fault_after_sends(n);
-                        }
+                    let cut_sends = &timeline.scripts[k].cut_sends;
+                    if !cut_sends.is_empty() {
+                        conn.set_fault_at_sends(cut_sends);
                     }
                     conns.push(Box::new(conn));
                 }
@@ -318,7 +341,7 @@ impl Trainer {
             .zip(conns)
             .take(local_n)
         {
-            workers.push(DeviceWorker::new(
+            let mut w = DeviceWorker::new(
                 k,
                 loader,
                 rng,
@@ -329,7 +352,9 @@ impl Trainer {
                 down_params.clone(),
                 backend.clone(),
                 conn,
-            ));
+            );
+            arm_worker(&mut w, &cfg, &timeline);
+            workers.push(w);
         }
 
         Ok(Trainer {
@@ -340,6 +365,7 @@ impl Trainer {
             workers,
             train,
             test,
+            timeline,
             steps_taken: 0,
             listen_addr,
             stop,
@@ -394,12 +420,19 @@ impl Trainer {
     /// asks for worker threads (`staleness`/`concurrent_devices`), with
     /// remote devices joining over the listening transport.
     pub fn run(&mut self) -> Result<TrainSummary> {
+        let liveness = if self.cfg.liveness_timeout_s > 0.0 {
+            Some(std::time::Duration::from_secs_f64(self.cfg.liveness_timeout_s))
+        } else {
+            None
+        };
         let sched = Scheduler {
             rounds: self.cfg.rounds,
             first_step: self.steps_taken,
             staleness: self.cfg.staleness,
             concurrency: self.cfg.resolved_concurrency(),
             eval_every: self.cfg.eval_every,
+            skips: self.timeline.skipped_locals(),
+            liveness,
         };
         let summary = sched.run(
             &self.endpoint,
@@ -502,7 +535,14 @@ pub fn run_remote_device(cfg: &TrainConfig, device: usize, addr: &str) -> Result
         .into_iter()
         .nth(device)
         .ok_or_else(|| crate::err!("no rng fork for device {device}"))?;
-    let conn = TcpConn::connect(addr, limits)?;
+    // the scenario timeline must match the server's skip set exactly, so
+    // compile it against the *acked* round count, not the local flag
+    let timeline = Timeline::compile(&cfg.scenario, devices, rounds, cfg.seed)?;
+    let mut conn = TcpConn::connect(addr, limits)?;
+    let cut_sends = &timeline.scripts[device].cut_sends;
+    if !cut_sends.is_empty() {
+        conn.set_fault_at_sends(cut_sends);
+    }
     let mut worker = DeviceWorker::new(
         device,
         loader,
@@ -515,7 +555,11 @@ pub fn run_remote_device(cfg: &TrainConfig, device: usize, addr: &str) -> Result
         backend,
         Box::new(conn),
     );
+    arm_worker(&mut worker, cfg, &timeline);
     for t in 1..=rounds {
+        if !worker.script().participates(t) {
+            continue; // scenario: not joined yet, dropped out, or departed
+        }
         let l = (t - 1) * devices + device;
         worker.run_step(t, l, l, &train)?;
     }

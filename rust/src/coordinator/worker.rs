@@ -25,7 +25,7 @@
 //! deduplicates; protocol rejections (`Abort`) are never retried.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::compression::{Codec, CodecParams, GradMask, Reclaim, SigmaStats};
 use crate::coordinator::metrics::StepRecord;
@@ -33,14 +33,50 @@ use crate::coordinator::protocol::model_sync_frame;
 use crate::data::{Dataset, MiniBatchLoader};
 use crate::model::{f32_from_le_bytes, ParamSet, PresetInfo};
 use crate::runtime::Backend;
+use crate::scenario::DeviceScript;
 use crate::tensor::Matrix;
 use crate::transport::wire::{Frame, FrameKind};
 use crate::transport::{tcp, Connection, Direction, Link, LinkReport, Msg, StepReport};
 use crate::util::error::Result;
 use crate::util::Rng;
 
-/// Transport-fault retry budget: attempts per request before giving up.
-const RECONNECT_ATTEMPTS: usize = 5;
+/// Seeded, capped exponential backoff for transport-fault retries: the
+/// delay before retry `n` is `min(cap, base·2^(n-1))`, jittered by a
+/// uniform factor in `[0.5, 1.5)` drawn from a dedicated RNG stream (so
+/// retry timing never perturbs the training trajectory), and a request is
+/// abandoned once its cumulative backoff sleep exceeds `deadline`.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    pub base: Duration,
+    pub cap: Duration,
+    /// overall per-request budget of backoff sleep before giving up
+    pub deadline: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy::new(10, 500, 15.0)
+    }
+}
+
+impl RetryPolicy {
+    pub fn new(base_ms: u64, cap_ms: u64, deadline_s: f64) -> RetryPolicy {
+        let base = Duration::from_millis(base_ms.max(1));
+        RetryPolicy {
+            base,
+            cap: Duration::from_millis(cap_ms).max(base),
+            deadline: Duration::from_secs_f64(deadline_s.max(0.0)),
+        }
+    }
+
+    /// Jittered delay before 1-based retry `attempt`.
+    pub fn delay(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let exp = attempt.saturating_sub(1).min(20);
+        let nominal = self.base.as_secs_f64() * (1u64 << exp) as f64;
+        let jitter = 0.5 + rng.next_f64();
+        Duration::from_secs_f64(nominal.min(self.cap.as_secs_f64()) * jitter)
+    }
+}
 
 pub struct DeviceWorker {
     pub device: usize,
@@ -64,6 +100,17 @@ pub struct DeviceWorker {
     wd_set: Option<ParamSet>,
     /// handshake done on this connection?
     greeted: bool,
+    /// backoff schedule for transport-fault retries
+    retry: RetryPolicy,
+    /// dedicated jitter stream — never the trajectory-critical `rng`
+    backoff_rng: Rng,
+    /// totals surfaced through `link_report()`
+    retry_attempts: u64,
+    backoff_s: f64,
+    /// this device's compiled failure script (calm by default)
+    script: DeviceScript,
+    /// protocol steps started on this worker (1-based; drives `cut_steps`)
+    steps_run: u64,
 }
 
 impl DeviceWorker {
@@ -95,13 +142,46 @@ impl DeviceWorker {
             conn,
             wd_set: None,
             greeted: false,
+            retry: RetryPolicy::default(),
+            backoff_rng: Rng::new(0xBAC0_FF5E ^ device as u64),
+            retry_attempts: 0,
+            backoff_s: 0.0,
+            script: DeviceScript::default(),
+            steps_run: 0,
         }
     }
 
     /// This device's link accounting (uplink/downlink bits, frames, modeled
-    /// transfer time).
+    /// transfer time), plus the transport-fault retry counters.
     pub fn link_report(&self) -> LinkReport {
-        self.link.report()
+        let mut rep = self.link.report();
+        rep.retry_attempts = self.retry_attempts;
+        rep.backoff_s = self.backoff_s;
+        rep
+    }
+
+    /// Install the backoff schedule; the jitter stream is forked from
+    /// `seed` per device so fleets don't retry in lockstep.
+    pub fn set_retry_policy(&mut self, policy: RetryPolicy, seed: u64) {
+        self.retry = policy;
+        self.backoff_rng =
+            Rng::new(seed ^ 0xBAC0_FF5E ^ (self.device as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    }
+
+    /// Install this device's compiled failure script (slowdowns + cuts).
+    pub fn set_script(&mut self, script: DeviceScript) {
+        self.script = script;
+    }
+
+    pub fn script(&self) -> &DeviceScript {
+        &self.script
+    }
+
+    /// Bound how long any single reply may be awaited (0/None = forever).
+    /// Off by default: with strict round-robin gating a device may
+    /// legitimately block in `StepStart` while its peers run.
+    pub fn set_rpc_deadline(&mut self, deadline: Option<Duration>) {
+        self.conn.set_recv_deadline(deadline);
     }
 
     /// This device's codec session (capability report, canonical name).
@@ -130,22 +210,29 @@ impl DeviceWorker {
     }
 
     /// One request/reply exchange with transport-fault recovery: on an io
-    /// error over a reconnectable link, re-dial, replay the handshake, and
-    /// resend the *same* message (the PS courier deduplicates). Protocol
+    /// error over a reconnectable link, sleep per the seeded backoff
+    /// schedule, re-dial, replay the handshake, and resend the *same*
+    /// message (the PS courier deduplicates). The retry loop gives up once
+    /// its cumulative backoff sleep exceeds the policy deadline. Protocol
     /// `Abort` replies are returned as errors and never retried.
     fn rpc(&mut self, msg: Msg) -> Result<Msg> {
         let retriable = self.conn.is_reconnectable();
         let backup = if retriable { Some(msg.clone()) } else { None };
         let mut outcome = self.greet_and_exchange(msg);
         if let Some(backup) = backup {
-            let mut attempts = 0;
+            let mut attempt: u32 = 0;
+            let mut slept = Duration::ZERO;
             while let Err(e) = &outcome {
-                if !tcp::is_io_error(e) || attempts >= RECONNECT_ATTEMPTS {
+                if !tcp::is_io_error(e) || slept >= self.retry.deadline {
                     break;
                 }
-                attempts += 1;
+                attempt += 1;
+                let delay = self.retry.delay(attempt, &mut self.backoff_rng);
+                std::thread::sleep(delay);
+                slept += delay;
+                self.retry_attempts += 1;
+                self.backoff_s += delay.as_secs_f64();
                 self.greeted = false;
-                std::thread::sleep(std::time::Duration::from_millis(20 * attempts as u64));
                 if self.conn.reconnect().is_err() {
                     continue; // PS may still be tearing down the old handler
                 }
@@ -183,6 +270,13 @@ impl DeviceWorker {
         train: &Dataset,
     ) -> Result<StepRecord> {
         let t_step = Instant::now();
+        self.steps_run += 1;
+        if self.script.cut_steps.binary_search(&self.steps_run).is_ok() {
+            // scenario `cut[dev=K,step=N]`: the link dies at entry of this
+            // device's N-th step; the next request goes down the
+            // backoff/reconnect/replay path
+            self.conn.inject_cut();
+        }
         // backend time spent on this device (fwd/stats/bwd); the PS half's
         // time arrives in the Downlink reply
         let mut device_exec_s = 0.0;
@@ -274,6 +368,14 @@ impl DeviceWorker {
         let grad_wd = self.backend.device_bwd(&wd, &x, &g_hat)?;
         device_exec_s += t0.elapsed().as_secs_f64();
         self.wd_set = Some(wd); // return the buffer for the next step
+        if self.script.slow > 1.0 {
+            // scenario straggler: stretch this device's compute to `slow`×
+            // wall clock. Only step_s/exec_s see it — the deterministic
+            // metrics fields (loss, bits, ...) are untouched.
+            let extra = (device_exec_s * (self.script.slow - 1.0)).clamp(0.0, 5.0);
+            std::thread::sleep(Duration::from_secs_f64(extra));
+            device_exec_s += extra;
+        }
 
         // 7. commit: hand ∇w_d back as a ModelSync frame with the step
         //    report; the PS applies the update, writes the metrics record,

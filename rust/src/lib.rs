@@ -25,6 +25,7 @@ pub mod data;
 pub mod model;
 pub mod optim;
 pub mod runtime;
+pub mod scenario;
 pub mod tensor;
 pub mod testkit;
 pub mod transport;

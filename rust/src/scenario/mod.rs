@@ -1,0 +1,19 @@
+//! Seeded failure-scenario engine.
+//!
+//! `--scenario` strings parse into a [`ScenarioSpec`] (same bracketed
+//! grammar as the codec specs) and compile into a [`Timeline`]: one
+//! [`DeviceScript`] per device holding compute-delay multipliers, join /
+//! departure rounds, dropout windows, and deterministic socket cuts. The
+//! trainer injects cuts at the `Connection` layer, workers honor slowdowns
+//! and backoff, and the parameter server pre-completes the steps of absent
+//! devices so the bounded-staleness gate never deadlocks on a missing peer.
+//!
+//! Everything is keyed on the scenario seed — never wall clock — so the
+//! same spec yields the same event timeline and the same metrics, run
+//! after run. An empty spec is the calm scenario and changes nothing.
+
+pub mod spec;
+pub mod timeline;
+
+pub use spec::{Clause, ScenarioSpec};
+pub use timeline::{DeviceScript, Timeline};

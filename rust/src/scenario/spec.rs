@@ -1,0 +1,378 @@
+//! The seeded failure-scenario spec grammar.
+//!
+//! A scenario is a comma-separated list of clauses in the same bracketed
+//! style as the PR 4 codec specs:
+//!
+//! ```text
+//! seed=7,straggler[dev=2,slow=8x],dropout[p=0.05,rejoin=2r],cut[dev=1,step=40]
+//! ```
+//!
+//! Clauses:
+//!
+//! | clause                        | meaning                                      |
+//! |-------------------------------|----------------------------------------------|
+//! | `seed=N`                      | scenario RNG seed (default: the run seed)    |
+//! | `straggler[dev=K,slow=Sx]`    | device K computes S× slower (wall clock)     |
+//! | `straggler[p=P,slow=Sx]`      | each device straggles with probability P     |
+//! | `dropout[p=P,rejoin=Nr]`      | per-round dropout; an affected device sits   |
+//! |                               | out N rounds then rejoins                    |
+//! | `cut[dev=K,step=N]`           | cut K's socket at entry of its N-th step     |
+//! | `cut[dev=K,send=N]`           | cut K's socket after its N-th send (Hello=1) |
+//! | `wave[cohort=C,every=Nr]`     | devices join in cohorts of C, N rounds apart |
+//! | `depart[dev=K,round=T]`       | device K departs permanently before round T  |
+//!
+//! Parsing and the compiled timeline are fully deterministic: the same spec
+//! string and seed always produce the same per-device event timeline, and an
+//! empty spec compiles to a calm (no-op) timeline.
+
+use crate::util::error::Result;
+use crate::{bail, ensure, err};
+
+/// One parsed scenario clause. Numeric fields are validated again at
+/// compile time (where the fleet size is known).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Clause {
+    /// Compute-delay multiplier: `dev` pins one device, otherwise each
+    /// device draws Bernoulli(`p`) from its own seeded stream.
+    Straggler { dev: Option<usize>, p: f64, slow: f64 },
+    /// Per-round dropout with probability `p`; an affected device sits out
+    /// `rejoin` rounds, then re-enters through the normal handshake path.
+    Dropout { p: f64, rejoin: usize },
+    /// Deterministic socket cut: exactly one of `step` (entry of the
+    /// device's N-th protocol step) or `send` (after the N-th wire send,
+    /// Hello = send #1) is set.
+    Cut { dev: usize, step: Option<u64>, send: Option<u64> },
+    /// Staggered joins: device K enters at round `1 + (K / cohort) * every`.
+    Wave { cohort: usize, every: usize },
+    /// Permanent departure: the device participates in rounds `< round`.
+    Depart { dev: usize, round: usize },
+}
+
+/// A parsed `--scenario` spec: optional seed plus an ordered clause list.
+/// The default value is the empty (calm) scenario.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ScenarioSpec {
+    pub seed: Option<u64>,
+    pub clauses: Vec<Clause>,
+}
+
+impl ScenarioSpec {
+    /// Parse a spec string. The empty string is the calm scenario.
+    pub fn parse(s: &str) -> Result<ScenarioSpec> {
+        let s = s.trim();
+        let mut spec = ScenarioSpec::default();
+        if s.is_empty() {
+            return Ok(spec);
+        }
+        for item in split_top_level(s)? {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            if let Some(v) = item.strip_prefix("seed=") {
+                let n = v
+                    .parse::<u64>()
+                    .map_err(|_| err!("scenario seed {v:?} is not a number"))?;
+                spec.seed = Some(n);
+            } else {
+                spec.clauses.push(parse_clause(item)?);
+            }
+        }
+        Ok(spec)
+    }
+
+    /// True when the spec carries no clauses (a bare `seed=` is still calm).
+    pub fn is_empty(&self) -> bool {
+        self.clauses.is_empty()
+    }
+
+    /// Append a deterministic socket cut (the `--chaos-drop` compatibility
+    /// path routes through here).
+    pub fn push_cut(&mut self, dev: usize, send: u64) {
+        self.clauses.push(Clause::Cut { dev, step: None, send: Some(send) });
+    }
+}
+
+impl std::fmt::Display for ScenarioSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut first = true;
+        let mut sep = |f: &mut std::fmt::Formatter<'_>| -> std::fmt::Result {
+            if first {
+                first = false;
+                Ok(())
+            } else {
+                write!(f, ",")
+            }
+        };
+        if let Some(seed) = self.seed {
+            sep(f)?;
+            write!(f, "seed={seed}")?;
+        }
+        for c in &self.clauses {
+            sep(f)?;
+            match c {
+                Clause::Straggler { dev: Some(k), slow, .. } => {
+                    write!(f, "straggler[dev={k},slow={slow}x]")?
+                }
+                Clause::Straggler { dev: None, p, slow } => {
+                    write!(f, "straggler[p={p},slow={slow}x]")?
+                }
+                Clause::Dropout { p, rejoin } => write!(f, "dropout[p={p},rejoin={rejoin}r]")?,
+                Clause::Cut { dev, step: Some(n), .. } => write!(f, "cut[dev={dev},step={n}]")?,
+                Clause::Cut { dev, step: None, send } => {
+                    write!(f, "cut[dev={dev},send={}]", send.unwrap_or(0))?
+                }
+                Clause::Wave { cohort, every } => write!(f, "wave[cohort={cohort},every={every}r]")?,
+                Clause::Depart { dev, round } => write!(f, "depart[dev={dev},round={round}]")?,
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Split on commas that sit outside `[...]` brackets; rejects unbalanced
+/// brackets up front so clause parsing can assume well-formed pieces.
+fn split_top_level(s: &str) -> Result<Vec<&str>> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '[' => depth += 1,
+            ']' => {
+                ensure!(depth > 0, "scenario {s:?}: unbalanced ']'");
+                depth -= 1;
+            }
+            ',' if depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    ensure!(depth == 0, "scenario {s:?}: unbalanced '['");
+    out.push(&s[start..]);
+    Ok(out)
+}
+
+/// `key=value` argument list inside one clause's brackets; every key must
+/// be consumed or `finish` reports it as unknown.
+struct ClauseArgs {
+    pairs: Vec<(String, String)>,
+}
+
+impl ClauseArgs {
+    fn parse(clause: &str, inner: &str) -> Result<ClauseArgs> {
+        let mut pairs = Vec::new();
+        for a in inner.split(',') {
+            let a = a.trim();
+            if a.is_empty() {
+                continue;
+            }
+            let (k, v) = a
+                .split_once('=')
+                .ok_or_else(|| err!("scenario clause {clause:?}: argument {a:?} wants key=value"))?;
+            pairs.push((k.trim().to_string(), v.trim().to_string()));
+        }
+        Ok(ClauseArgs { pairs })
+    }
+
+    fn take(&mut self, key: &str) -> Option<String> {
+        let at = self.pairs.iter().position(|(k, _)| k == key)?;
+        Some(self.pairs.remove(at).1)
+    }
+
+    fn finish(self, clause: &str) -> Result<()> {
+        if let Some((k, _)) = self.pairs.first() {
+            bail!("scenario clause {clause:?}: unknown key {k:?}");
+        }
+        Ok(())
+    }
+}
+
+fn num_usize(clause: &str, key: &str, v: &str) -> Result<usize> {
+    v.parse::<usize>()
+        .map_err(|_| err!("scenario clause {clause:?}: {key}={v:?} is not a number"))
+}
+
+fn num_u64(clause: &str, key: &str, v: &str) -> Result<u64> {
+    v.parse::<u64>()
+        .map_err(|_| err!("scenario clause {clause:?}: {key}={v:?} is not a number"))
+}
+
+fn num_f64(clause: &str, key: &str, v: &str) -> Result<f64> {
+    v.parse::<f64>()
+        .map_err(|_| err!("scenario clause {clause:?}: {key}={v:?} is not a number"))
+}
+
+fn parse_clause(item: &str) -> Result<Clause> {
+    let (name, inner) = match item.find('[') {
+        Some(open) => {
+            ensure!(item.ends_with(']'), "scenario clause {item:?}: missing closing ']'");
+            (&item[..open], &item[open + 1..item.len() - 1])
+        }
+        None => (item, ""),
+    };
+    let mut args = ClauseArgs::parse(item, inner)?;
+    let clause = match name {
+        "straggler" => {
+            let dev = match args.take("dev") {
+                Some(v) => Some(num_usize(item, "dev", &v)?),
+                None => None,
+            };
+            let p = match args.take("p") {
+                Some(v) => num_f64(item, "p", &v)?,
+                None => 1.0,
+            };
+            ensure!(
+                dev.is_none() || p == 1.0,
+                "scenario clause {item:?}: give dev= or p=, not both"
+            );
+            ensure!(dev.is_some() || p < 1.0 || inner.contains("p="),
+                "scenario clause {item:?}: wants dev=K or p=P");
+            let slow = match args.take("slow") {
+                Some(v) => num_f64(item, "slow", v.trim_end_matches('x'))?,
+                None => 4.0,
+            };
+            ensure!(slow >= 1.0, "scenario clause {item:?}: slow={slow} must be >= 1");
+            ensure!((0.0..=1.0).contains(&p), "scenario clause {item:?}: p={p} not in [0, 1]");
+            Clause::Straggler { dev, p, slow }
+        }
+        "dropout" => {
+            let p = match args.take("p") {
+                Some(v) => num_f64(item, "p", &v)?,
+                None => bail!("scenario clause {item:?}: wants p=P"),
+            };
+            ensure!((0.0..=1.0).contains(&p), "scenario clause {item:?}: p={p} not in [0, 1]");
+            let rejoin = match args.take("rejoin") {
+                Some(v) => num_usize(item, "rejoin", v.trim_end_matches('r'))?,
+                None => 1,
+            };
+            ensure!(rejoin >= 1, "scenario clause {item:?}: rejoin must be >= 1");
+            Clause::Dropout { p, rejoin }
+        }
+        "cut" => {
+            let dev = match args.take("dev") {
+                Some(v) => num_usize(item, "dev", &v)?,
+                None => bail!("scenario clause {item:?}: wants dev=K"),
+            };
+            let step = match args.take("step") {
+                Some(v) => Some(num_u64(item, "step", &v)?),
+                None => None,
+            };
+            let send = match args.take("send") {
+                Some(v) => Some(num_u64(item, "send", &v)?),
+                None => None,
+            };
+            ensure!(
+                step.is_some() != send.is_some(),
+                "scenario clause {item:?}: wants exactly one of step=N or send=N"
+            );
+            ensure!(
+                step.unwrap_or(1) >= 1 && send.unwrap_or(1) >= 1,
+                "scenario clause {item:?}: step/send are 1-based"
+            );
+            Clause::Cut { dev, step, send }
+        }
+        "wave" => {
+            let cohort = match args.take("cohort") {
+                Some(v) => num_usize(item, "cohort", &v)?,
+                None => bail!("scenario clause {item:?}: wants cohort=C"),
+            };
+            let every = match args.take("every") {
+                Some(v) => num_usize(item, "every", v.trim_end_matches('r'))?,
+                None => bail!("scenario clause {item:?}: wants every=Nr"),
+            };
+            ensure!(cohort >= 1 && every >= 1, "scenario clause {item:?}: cohort/every must be >= 1");
+            Clause::Wave { cohort, every }
+        }
+        "depart" => {
+            let dev = match args.take("dev") {
+                Some(v) => num_usize(item, "dev", &v)?,
+                None => bail!("scenario clause {item:?}: wants dev=K"),
+            };
+            let round = match args.take("round") {
+                Some(v) => num_usize(item, "round", &v)?,
+                None => bail!("scenario clause {item:?}: wants round=T"),
+            };
+            ensure!(round >= 1, "scenario clause {item:?}: round is 1-based");
+            Clause::Depart { dev, round }
+        }
+        other => bail!(
+            "unknown scenario clause {other:?} (want straggler, dropout, cut, wave, depart or seed=N)"
+        ),
+    };
+    args.finish(item)?;
+    Ok(clause)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_is_calm() {
+        let s = ScenarioSpec::parse("").unwrap();
+        assert!(s.is_empty());
+        assert_eq!(s.seed, None);
+        let s = ScenarioSpec::parse("seed=9").unwrap();
+        assert!(s.is_empty());
+        assert_eq!(s.seed, Some(9));
+    }
+
+    #[test]
+    fn issue_example_parses() {
+        let s = ScenarioSpec::parse(
+            "seed=7,straggler[dev=2,slow=8x],dropout[p=0.05,rejoin=2r],cut[dev=1,step=40],\
+             wave[cohort=4,every=5r]",
+        )
+        .unwrap();
+        assert_eq!(s.seed, Some(7));
+        assert_eq!(s.clauses.len(), 4);
+        assert_eq!(s.clauses[0], Clause::Straggler { dev: Some(2), p: 1.0, slow: 8.0 });
+        assert_eq!(s.clauses[1], Clause::Dropout { p: 0.05, rejoin: 2 });
+        assert_eq!(s.clauses[2], Clause::Cut { dev: 1, step: Some(40), send: None });
+        assert_eq!(s.clauses[3], Clause::Wave { cohort: 4, every: 5 });
+    }
+
+    #[test]
+    fn display_roundtrips() {
+        for text in [
+            "seed=7,straggler[dev=2,slow=8x]",
+            "straggler[p=0.3,slow=2x],dropout[p=0.05,rejoin=2r]",
+            "cut[dev=1,send=13],cut[dev=0,step=4],depart[dev=3,round=5]",
+            "wave[cohort=2,every=3r]",
+        ] {
+            let spec = ScenarioSpec::parse(text).unwrap();
+            let printed = spec.to_string();
+            assert_eq!(ScenarioSpec::parse(&printed).unwrap(), spec, "{text} -> {printed}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "straggler[dev=2,slow=8x", // missing ]
+            "bogus[x=1]",              // unknown clause
+            "cut[dev=0]",              // neither step nor send
+            "cut[dev=0,step=1,send=2]",
+            "cut[step=3]",             // no dev
+            "dropout[p=1.5]",          // p out of range
+            "straggler[dev=1,typo=2]", // unknown key
+            "seed=abc",
+            "depart[dev=0,round=0]",   // rounds are 1-based
+            "wave[cohort=0,every=1r]",
+        ] {
+            assert!(ScenarioSpec::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn push_cut_matches_grammar() {
+        let mut s = ScenarioSpec::default();
+        s.push_cut(1, 13);
+        s.push_cut(0, 3);
+        assert_eq!(s.to_string(), "cut[dev=1,send=13],cut[dev=0,send=3]");
+        assert_eq!(ScenarioSpec::parse(&s.to_string()).unwrap(), s);
+    }
+}

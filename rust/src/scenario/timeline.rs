@@ -1,0 +1,278 @@
+//! Compile a [`ScenarioSpec`](crate::scenario::ScenarioSpec) into a
+//! deterministic per-device event timeline.
+//!
+//! Every stochastic clause draws from its own `(seed, purpose, device)`
+//! RNG stream, so adding a clause, reordering clauses, or resizing the
+//! fleet never perturbs the draws another clause/device sees. Nothing here
+//! touches the training RNGs: scenario randomness is a separate universe,
+//! and a calm timeline leaves the trajectory byte-identical.
+
+use crate::scenario::spec::{Clause, ScenarioSpec};
+use crate::util::error::Result;
+use crate::util::Rng;
+use crate::{bail, ensure};
+
+/// The compiled failure script for one device. `Default` is the calm
+/// script: full-speed, joined from round 1, never departs, no cuts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceScript {
+    /// Compute-delay multiplier (wall clock only); 1.0 = full speed.
+    pub slow: f64,
+    /// First round this device participates in (1 = from the start).
+    pub join_round: usize,
+    /// First round this device no longer participates in (0 = never departs).
+    pub depart_round: usize,
+    /// Dropout windows as half-open round ranges `[start, end)`.
+    pub outages: Vec<(usize, usize)>,
+    /// Cut the link at entry of these 1-based device-local step ordinals.
+    pub cut_steps: Vec<u64>,
+    /// Cut the link after these 1-based wire-send ordinals (Hello = 1).
+    pub cut_sends: Vec<u64>,
+}
+
+impl Default for DeviceScript {
+    fn default() -> DeviceScript {
+        DeviceScript {
+            slow: 1.0,
+            join_round: 1,
+            depart_round: 0,
+            outages: Vec::new(),
+            cut_steps: Vec::new(),
+            cut_sends: Vec::new(),
+        }
+    }
+}
+
+impl DeviceScript {
+    /// Does this device run its step in `round` (1-based)?
+    pub fn participates(&self, round: usize) -> bool {
+        if round < self.join_round {
+            return false;
+        }
+        if self.depart_round != 0 && round >= self.depart_round {
+            return false;
+        }
+        !self.outages.iter().any(|&(a, b)| round >= a && round < b)
+    }
+
+    /// True when the script changes nothing about the calm run.
+    pub fn is_neutral(&self) -> bool {
+        self == &DeviceScript::default()
+    }
+}
+
+/// The compiled fleet-wide timeline for one run.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    pub scripts: Vec<DeviceScript>,
+    pub seed: u64,
+    pub devices: usize,
+    pub rounds: usize,
+}
+
+/// Independent RNG stream per (seed, clause purpose, device).
+fn stream(seed: u64, purpose: u64, device: usize) -> Rng {
+    Rng::new(seed ^ purpose ^ (device as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+const PURPOSE_STRAGGLER: u64 = 0x57A6_617E_57A6_617E;
+const PURPOSE_DROPOUT: u64 = 0xD809_0D07_D809_0D07;
+
+impl Timeline {
+    /// Compile `spec` for a fleet of `devices` over `rounds` rounds. The
+    /// scenario seed defaults to `fallback_seed` (the run seed) so a bare
+    /// clause list is still reproducible per run config.
+    pub fn compile(
+        spec: &ScenarioSpec,
+        devices: usize,
+        rounds: usize,
+        fallback_seed: u64,
+    ) -> Result<Timeline> {
+        ensure!(devices > 0, "scenario timeline wants at least one device");
+        let seed = spec.seed.unwrap_or(fallback_seed);
+        let mut scripts = vec![DeviceScript::default(); devices];
+        let check_dev = |k: usize| -> Result<()> {
+            if k >= devices {
+                bail!("scenario names dev={k} but the fleet has {devices} device(s)");
+            }
+            Ok(())
+        };
+        for clause in &spec.clauses {
+            match clause {
+                Clause::Straggler { dev, p, slow } => match dev {
+                    Some(k) => {
+                        check_dev(*k)?;
+                        scripts[*k].slow = scripts[*k].slow.max(*slow);
+                    }
+                    None => {
+                        for (k, s) in scripts.iter_mut().enumerate() {
+                            let mut r = stream(seed, PURPOSE_STRAGGLER, k);
+                            if r.bernoulli(*p) {
+                                s.slow = s.slow.max(*slow);
+                            }
+                        }
+                    }
+                },
+                Clause::Dropout { p, rejoin } => {
+                    for (k, s) in scripts.iter_mut().enumerate() {
+                        let mut r = stream(seed, PURPOSE_DROPOUT, k);
+                        let mut t = 1usize;
+                        while t <= rounds {
+                            if r.bernoulli(*p) {
+                                s.outages.push((t, t + rejoin));
+                                t += rejoin;
+                            } else {
+                                t += 1;
+                            }
+                        }
+                    }
+                }
+                Clause::Cut { dev, step, send } => {
+                    check_dev(*dev)?;
+                    if let Some(n) = step {
+                        scripts[*dev].cut_steps.push(*n);
+                    }
+                    if let Some(n) = send {
+                        scripts[*dev].cut_sends.push(*n);
+                    }
+                }
+                Clause::Wave { cohort, every } => {
+                    for (k, s) in scripts.iter_mut().enumerate() {
+                        let join = 1 + (k / cohort) * every;
+                        s.join_round = s.join_round.max(join);
+                    }
+                }
+                Clause::Depart { dev, round } => {
+                    check_dev(*dev)?;
+                    let s = &mut scripts[*dev];
+                    s.depart_round =
+                        if s.depart_round == 0 { *round } else { s.depart_round.min(*round) };
+                }
+            }
+        }
+        for s in &mut scripts {
+            s.cut_steps.sort_unstable();
+            s.cut_steps.dedup();
+            s.cut_sends.sort_unstable();
+            s.cut_sends.dedup();
+        }
+        Ok(Timeline { scripts, seed, devices, rounds })
+    }
+
+    /// Schedule-local step indices (`l = (t-1)·K + k`) that no device will
+    /// run this schedule — the gate pre-completes them so the surviving
+    /// cohort is never blocked on an absent peer.
+    pub fn skipped_locals(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for t in 1..=self.rounds {
+            for (k, s) in self.scripts.iter().enumerate() {
+                if !s.participates(t) {
+                    out.push((t - 1) * self.devices + k);
+                }
+            }
+        }
+        out
+    }
+
+    /// Any deterministic socket cuts scheduled? (Cuts need a reconnectable
+    /// transport — the trainer rejects them on in-process channels.)
+    pub fn has_cuts(&self) -> bool {
+        self.scripts.iter().any(|s| !s.cut_steps.is_empty() || !s.cut_sends.is_empty())
+    }
+
+    /// True when every device runs the calm script.
+    pub fn is_calm(&self) -> bool {
+        self.scripts.iter().all(|s| s.is_neutral())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn compile(text: &str, devices: usize, rounds: usize) -> Timeline {
+        let spec = ScenarioSpec::parse(text).unwrap();
+        Timeline::compile(&spec, devices, rounds, 11).unwrap()
+    }
+
+    #[test]
+    fn empty_spec_compiles_calm() {
+        let tl = compile("", 4, 6);
+        assert!(tl.is_calm());
+        assert!(!tl.has_cuts());
+        assert!(tl.skipped_locals().is_empty());
+        for s in &tl.scripts {
+            for t in 1..=6 {
+                assert!(s.participates(t));
+            }
+        }
+    }
+
+    #[test]
+    fn compilation_is_deterministic_and_seed_sensitive() {
+        let a = compile("seed=7,dropout[p=0.3,rejoin=2r],straggler[p=0.5,slow=4x]", 8, 20);
+        let b = compile("seed=7,dropout[p=0.3,rejoin=2r],straggler[p=0.5,slow=4x]", 8, 20);
+        assert_eq!(a.scripts, b.scripts);
+        // a different seed should (overwhelmingly) give different draws
+        let c = compile("seed=8,dropout[p=0.3,rejoin=2r],straggler[p=0.5,slow=4x]", 8, 20);
+        assert_ne!(a.scripts, c.scripts);
+    }
+
+    #[test]
+    fn clause_order_does_not_cross_perturb_draws() {
+        // dropout draws must be identical whether or not a straggler clause
+        // precedes the dropout clause: streams are keyed per purpose.
+        let a = compile("seed=3,dropout[p=0.4,rejoin=1r]", 6, 12);
+        let b = compile("seed=3,straggler[p=0.5,slow=2x],dropout[p=0.4,rejoin=1r]", 6, 12);
+        for (sa, sb) in a.scripts.iter().zip(&b.scripts) {
+            assert_eq!(sa.outages, sb.outages);
+        }
+    }
+
+    #[test]
+    fn wave_staggers_cohorts() {
+        let tl = compile("wave[cohort=2,every=3r]", 5, 10);
+        assert_eq!(
+            tl.scripts.iter().map(|s| s.join_round).collect::<Vec<_>>(),
+            vec![1, 1, 4, 4, 7]
+        );
+        assert!(!tl.scripts[2].participates(3));
+        assert!(tl.scripts[2].participates(4));
+        // skipped locals cover exactly the pre-join rounds
+        let skipped = tl.skipped_locals();
+        assert!(skipped.contains(&2)); // dev 2, round 1
+        assert!(!skipped.contains(&(3 * 5 + 2))); // dev 2, round 4 runs
+    }
+
+    #[test]
+    fn depart_and_outages_gate_participation() {
+        let tl = compile("depart[dev=1,round=3]", 3, 5);
+        assert!(tl.scripts[1].participates(2));
+        assert!(!tl.scripts[1].participates(3));
+        assert!(!tl.scripts[1].participates(5));
+        assert_eq!(tl.skipped_locals(), vec![7, 10, 13]); // dev 1 in rounds 3..=5
+
+        let mut s = DeviceScript { outages: vec![(2, 4)], ..DeviceScript::default() };
+        assert!(s.participates(1));
+        assert!(!s.participates(2));
+        assert!(!s.participates(3));
+        assert!(s.participates(4));
+        s.depart_round = 5;
+        assert!(!s.participates(5));
+    }
+
+    #[test]
+    fn cuts_sort_and_dedup() {
+        let tl = compile("cut[dev=0,send=9],cut[dev=0,send=3],cut[dev=0,send=9],cut[dev=0,step=2]", 2, 4);
+        assert_eq!(tl.scripts[0].cut_sends, vec![3, 9]);
+        assert_eq!(tl.scripts[0].cut_steps, vec![2]);
+        assert!(tl.has_cuts());
+        assert!(Timeline::compile(
+            &ScenarioSpec::parse("cut[dev=5,send=1]").unwrap(),
+            2,
+            4,
+            0
+        )
+        .is_err());
+    }
+}

@@ -46,6 +46,11 @@ pub struct LinkReport {
     pub sync_up_frames: u64,
     pub sync_down_frames: u64,
     pub elapsed_s: f64,
+    /// Transport-fault retries the worker performed on this link (seeded
+    /// exponential backoff; 0 on a calm run).
+    pub retry_attempts: u64,
+    /// Wall time spent sleeping in backoff before those retries.
+    pub backoff_s: f64,
 }
 
 impl LinkReport {
@@ -60,6 +65,8 @@ impl LinkReport {
         self.sync_up_frames += other.sync_up_frames;
         self.sync_down_frames += other.sync_down_frames;
         self.elapsed_s += other.elapsed_s;
+        self.retry_attempts += other.retry_attempts;
+        self.backoff_s += other.backoff_s;
     }
 
     /// Aggregate per-device reports into the PS-side total, in device order
@@ -143,6 +150,10 @@ impl Link {
             sync_up_frames: self.sync_up_frames,
             sync_down_frames: self.sync_down_frames,
             elapsed_s: self.elapsed_s,
+            // the worker owns these counters and patches them into its
+            // report — the link model itself never retries
+            retry_attempts: 0,
+            backoff_s: 0.0,
         }
     }
 

@@ -10,7 +10,8 @@
 //! the bound never bites in practice — it exists to keep the contract
 //! honest).
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::time::Duration;
 
 use crate::transport::message::Msg;
 use crate::transport::Connection;
@@ -20,6 +21,8 @@ use crate::util::error::{Error, Result};
 pub struct InProcConn {
     tx: SyncSender<Msg>,
     rx: Receiver<Msg>,
+    /// per-recv deadline; `None` (default) blocks forever
+    deadline: Option<Duration>,
 }
 
 /// Create a connected pair of in-process endpoints with `depth` messages
@@ -27,7 +30,10 @@ pub struct InProcConn {
 pub fn inproc_pair(depth: usize) -> (InProcConn, InProcConn) {
     let (atx, brx) = sync_channel(depth);
     let (btx, arx) = sync_channel(depth);
-    (InProcConn { tx: atx, rx: arx }, InProcConn { tx: btx, rx: brx })
+    (
+        InProcConn { tx: atx, rx: arx, deadline: None },
+        InProcConn { tx: btx, rx: brx, deadline: None },
+    )
 }
 
 impl Connection for InProcConn {
@@ -38,9 +44,24 @@ impl Connection for InProcConn {
     }
 
     fn recv(&mut self) -> Result<Msg> {
-        self.rx
-            .recv()
-            .map_err(|_| Error::msg("transport io: in-process peer hung up on recv"))
+        match self.deadline {
+            None => self
+                .rx
+                .recv()
+                .map_err(|_| Error::msg("transport io: in-process peer hung up on recv")),
+            Some(d) => self.rx.recv_timeout(d).map_err(|e| match e {
+                RecvTimeoutError::Timeout => {
+                    Error::msg("transport io: in-process recv deadline expired")
+                }
+                RecvTimeoutError::Disconnected => {
+                    Error::msg("transport io: in-process peer hung up on recv")
+                }
+            }),
+        }
+    }
+
+    fn set_recv_deadline(&mut self, deadline: Option<Duration>) {
+        self.deadline = deadline.filter(|d| !d.is_zero());
     }
 }
 
@@ -74,5 +95,14 @@ mod tests {
     fn not_reconnectable() {
         let (a, _b) = inproc_pair(1);
         assert!(!a.is_reconnectable());
+    }
+
+    #[test]
+    fn recv_deadline_expires_as_a_transport_io_error() {
+        let (mut a, _b) = inproc_pair(1); // peer alive: expiry, not hangup
+        a.set_recv_deadline(Some(Duration::from_millis(5)));
+        let err = a.recv().unwrap_err().to_string();
+        assert!(err.contains("transport io"), "{err}");
+        assert!(err.contains("deadline"), "{err}");
     }
 }

@@ -297,6 +297,20 @@ impl Msg {
         }
     }
 
+    /// The device id a request speaks for, when it carries one — the PS
+    /// liveness tracker binds connections to devices through this.
+    pub fn device(&self) -> Option<u32> {
+        match self {
+            Msg::Hello { device, .. }
+            | Msg::StepStart { device, .. }
+            | Msg::Uplink { device, .. }
+            | Msg::Commit { device, .. }
+            | Msg::FetchModel { device }
+            | Msg::Bye { device } => Some(*device),
+            _ => None,
+        }
+    }
+
     /// Append the byte encoding (tag + fields, little-endian) to `out`.
     pub fn encode(&self, out: &mut Vec<u8>) {
         out.push(self.tag());

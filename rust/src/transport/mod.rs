@@ -58,6 +58,17 @@ pub trait Connection: Send {
     fn is_reconnectable(&self) -> bool {
         false
     }
+
+    /// Bound how long a single `recv` may block (`None` = wait forever).
+    /// A deadline expiry surfaces as a `"transport io"` error, so the
+    /// caller's retry/backoff path treats it like any other link fault.
+    /// Backends without timeout support ignore this.
+    fn set_recv_deadline(&mut self, _deadline: Option<std::time::Duration>) {}
+
+    /// Scenario fault injection: drop the underlying link now, so the next
+    /// operation fails with a `"transport io"` error. No-op on transports
+    /// that cannot be cut (in-process channels).
+    fn inject_cut(&mut self) {}
 }
 
 /// Which transport backend carries device<->PS messages.

@@ -51,11 +51,14 @@ pub struct TcpConn {
     /// reusable tx scratch — one flat buffer per connection, written with a
     /// single `write_all` so a message is never interleaved on the socket
     buf: Vec<u8>,
-    /// chaos hook: cut the socket right *after* this many successful sends
-    /// — the request is delivered but the reply is lost, the exact fault
-    /// the PS-side replay couriers exist for (exercised in tests/CI)
-    fault_after_sends: Option<u64>,
+    /// chaos hook: cut the socket right *after* each of these absolute
+    /// send ordinals (1-based, counted across reconnects) — the request is
+    /// delivered but the reply is lost, the exact fault the PS-side replay
+    /// couriers exist for (exercised in tests/CI). Sorted ascending.
+    fault_at_sends: Vec<u64>,
     sends: u64,
+    /// applied to the stream on every (re)dial; `None` = block forever
+    recv_deadline: Option<Duration>,
 }
 
 impl TcpConn {
@@ -67,8 +70,9 @@ impl TcpConn {
             peer: Some(addr.to_string()),
             limits,
             buf: Vec::new(),
-            fault_after_sends: None,
+            fault_at_sends: Vec::new(),
             sends: 0,
+            recv_deadline: None,
         })
     }
 
@@ -80,8 +84,9 @@ impl TcpConn {
             peer: None,
             limits,
             buf: Vec::new(),
-            fault_after_sends: None,
+            fault_at_sends: Vec::new(),
             sends: 0,
+            recv_deadline: None,
         }
     }
 
@@ -96,8 +101,16 @@ impl TcpConn {
     /// is lost, and the next operation here fails with a transport io
     /// error, as if the network died mid-exchange. One-shot.
     pub fn set_fault_after_sends(&mut self, n: u64) {
-        self.fault_after_sends = Some(n);
-        self.sends = 0;
+        self.fault_at_sends = vec![self.sends + n];
+    }
+
+    /// Arm multiple cut points at absolute send ordinals (1-based across
+    /// the connection's whole life, reconnects included; Hello = send #1).
+    /// The scenario engine's `cut[dev=K,send=N]` clauses land here.
+    pub fn set_fault_at_sends(&mut self, at: &[u64]) {
+        self.fault_at_sends = at.to_vec();
+        self.fault_at_sends.sort_unstable();
+        self.fault_at_sends.dedup();
     }
 
     fn stream(&mut self) -> Result<&mut TcpStream> {
@@ -122,10 +135,10 @@ impl Connection for TcpConn {
         let res = self.stream()?.write_all(&out).map_err(|e| io_err("send", e));
         if res.is_ok() {
             self.sends += 1;
-            if self.fault_after_sends == Some(self.sends) {
+            while matches!(self.fault_at_sends.first(), Some(&n) if n <= self.sends) {
                 // chaos hook: the request just left, now the link dies —
                 // the pending reply is lost and the next recv/send fails
-                self.fault_after_sends = None;
+                self.fault_at_sends.remove(0);
                 self.stream = None;
             }
         } else {
@@ -177,12 +190,31 @@ impl Connection for TcpConn {
         // brief pause: the far end needs a moment to tear down the dead
         // handler and get back to accept()
         std::thread::sleep(Duration::from_millis(10));
-        self.stream = Some(Self::dial(&addr)?);
+        let stream = Self::dial(&addr)?;
+        if let Some(d) = self.recv_deadline {
+            let _ = stream.set_read_timeout(Some(d));
+        }
+        self.stream = Some(stream);
         Ok(())
     }
 
     fn is_reconnectable(&self) -> bool {
         self.peer.is_some()
+    }
+
+    fn set_recv_deadline(&mut self, deadline: Option<Duration>) {
+        // Duration::ZERO means "no timeout" to set_read_timeout callers but
+        // is an invalid argument to the OS call — normalize it to None
+        self.recv_deadline = deadline.filter(|d| !d.is_zero());
+        if let Some(s) = self.stream.as_ref() {
+            let _ = s.set_read_timeout(self.recv_deadline);
+        }
+    }
+
+    fn inject_cut(&mut self) {
+        // a deadline expiry or cut leaves the frame stream unsynchronized,
+        // so the stream is dropped wholesale; the client re-dials
+        self.stream = None;
     }
 }
 

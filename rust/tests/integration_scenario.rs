@@ -1,0 +1,244 @@
+//! Integration: the seeded failure-scenario engine end to end.
+//!
+//! The contracts under test:
+//!  * an empty (or wall-clock-only) scenario is trajectory-neutral — the
+//!    deterministic step fields are byte-identical to a calm run;
+//!  * scheduled absences (depart/wave clauses) pre-complete their steps so
+//!    the surviving cohort finishes without deadlock, with exactly the
+//!    expected step count and a finite loss mean;
+//!  * the same `--scenario` spec twice reproduces the stream exactly, over
+//!    TCP, churn and all;
+//!  * the worker's seeded backoff surfaces its retry counters; and
+//!  * a peer that vanishes mid-step (PS handler death) is departed by the
+//!    liveness policy and the run completes degraded instead of wedging.
+
+use splitfc::config::{parse_scheme, TrainConfig};
+use splitfc::coordinator::Trainer;
+use splitfc::scenario::ScenarioSpec;
+use splitfc::transport::{Connection, Msg, TcpConn, TransportKind, WireLimits};
+use splitfc::util::Json;
+
+fn base_cfg(metrics: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::for_preset("tiny");
+    cfg.devices = 4;
+    cfg.rounds = 5;
+    cfg.n_train = 256;
+    cfg.n_test = 64;
+    cfg.eval_every = 0;
+    cfg.scheme = parse_scheme("splitfc", 4.0).unwrap();
+    cfg.up_bits_per_entry = 2.0;
+    cfg.down_bits_per_entry = 4.0;
+    cfg.seed = 11;
+    cfg.metrics_path = metrics.to_string();
+    cfg
+}
+
+fn metrics_file(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("splitfc_scen_{tag}_{}.jsonl", std::process::id()))
+}
+
+/// The deterministic fields of every step record (wall-clock fields
+/// excluded: stragglers stretch `step_s`/`exec_s` by design).
+fn step_fields(path: &std::path::Path) -> Vec<String> {
+    let text = std::fs::read_to_string(path).expect("metrics file");
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let j = Json::parse(line).expect("valid JSONL");
+        if j.get("g").is_none() {
+            continue; // the trailing summary record
+        }
+        let mut fields = Vec::new();
+        for key in [
+            "t", "k", "g", "loss", "train_acc", "up_bits", "down_bits", "up_nominal",
+            "down_nominal",
+        ] {
+            let v = j
+                .get(key)
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|| panic!("field {key} in {line}"));
+            fields.push(format!("{key}={v:?}"));
+        }
+        out.push(fields.join(" "));
+    }
+    out
+}
+
+fn run_with(cfg: TrainConfig) -> splitfc::coordinator::TrainSummary {
+    let mut tr = Trainer::new(cfg).unwrap();
+    tr.run().unwrap()
+}
+
+#[test]
+fn wall_clock_only_scenarios_are_trajectory_neutral() {
+    let ref_path = metrics_file("calm");
+    run_with(base_cfg(ref_path.to_str().unwrap()));
+    let want = step_fields(&ref_path);
+    assert_eq!(want.len(), 20);
+
+    // a straggler stretches wall time only; a bare seed changes nothing
+    for (tag, spec) in [
+        ("straggler", "straggler[dev=1,slow=2x]"),
+        ("seeded", "seed=12345"),
+    ] {
+        let path = metrics_file(tag);
+        let mut cfg = base_cfg(path.to_str().unwrap());
+        cfg.scenario = ScenarioSpec::parse(spec).unwrap();
+        let s = run_with(cfg);
+        assert_eq!(s.steps, 20, "{tag}: lost steps");
+        assert_eq!(s.departed, 0, "{tag}: nothing should depart");
+        assert_eq!(
+            step_fields(&path),
+            want,
+            "{tag}: scenario {spec:?} perturbed the deterministic trajectory"
+        );
+        std::fs::remove_file(path).ok();
+    }
+    std::fs::remove_file(ref_path).ok();
+}
+
+#[test]
+fn scheduled_departure_completes_with_the_surviving_cohort() {
+    // device 2 departs before round 3: 2 rounds x 4 devices + 3 rounds x 3
+    let mut cfg = base_cfg("");
+    cfg.scenario = ScenarioSpec::parse("depart[dev=2,round=3]").unwrap();
+    let s = run_with(cfg);
+    assert_eq!(s.steps, 17, "survivors must run every remaining step");
+    assert_eq!(s.departed, 0, "scheduled departures are not liveness departures");
+    assert!(
+        s.mean_loss_last_round.is_finite(),
+        "the absent device's NaN loss must not poison the mean"
+    );
+}
+
+#[test]
+fn wave_joins_stagger_cohorts() {
+    // cohorts of 2 join 2 rounds apart over 4 rounds: devices 0/1 run all 4
+    // rounds, devices 2/3 join at round 3 -> 8 + 4 steps
+    let mut cfg = base_cfg("");
+    cfg.rounds = 4;
+    cfg.scenario = ScenarioSpec::parse("wave[cohort=2,every=2r]").unwrap();
+    let s = run_with(cfg);
+    assert_eq!(s.steps, 12);
+    assert!(s.mean_loss_last_round.is_finite());
+}
+
+#[test]
+fn same_scenario_spec_reproduces_the_stream_over_tcp() {
+    // cut -> a reconnect; dropout -> seeded outages; depart -> a guaranteed
+    // scheduled absence (so the "<16 steps" check never hinges on the draws)
+    let spec =
+        "seed=7,cut[dev=0,step=2],dropout[p=0.2,rejoin=2r],depart[dev=3,round=4],straggler[p=0.5,slow=2x]";
+    let mut streams = Vec::new();
+    let mut steps = Vec::new();
+    for pass in 0..2 {
+        let path = metrics_file(&format!("det{pass}"));
+        let mut cfg = base_cfg(path.to_str().unwrap());
+        cfg.rounds = 4;
+        cfg.transport = TransportKind::Tcp;
+        cfg.scenario = ScenarioSpec::parse(spec).unwrap();
+        let s = run_with(cfg);
+        steps.push(s.steps);
+        streams.push(step_fields(&path));
+        std::fs::remove_file(path).ok();
+    }
+    assert_eq!(steps[0], steps[1], "same spec must schedule the same steps");
+    assert!(steps[0] < 16, "the dropout clause should cost some steps");
+    assert_eq!(
+        streams[0], streams[1],
+        "identical scenario seeds must give identical metrics streams"
+    );
+}
+
+#[test]
+fn backoff_retry_counters_surface_in_the_link_report() {
+    // cut device 1 after its 3rd send (the round-1 Uplink): the worker must
+    // recover through seeded backoff + reconnect, and say so in its report
+    let ref_path = metrics_file("retry_ref");
+    run_with(base_cfg(ref_path.to_str().unwrap()));
+    let want = step_fields(&ref_path);
+
+    let path = metrics_file("retry");
+    let mut cfg = base_cfg(path.to_str().unwrap());
+    cfg.transport = TransportKind::Tcp;
+    cfg.scenario.push_cut(1, 3);
+    let mut tr = Trainer::new(cfg).unwrap();
+    let s = tr.run().unwrap();
+    let rep = tr.link_report();
+    drop(tr);
+    assert_eq!(s.steps, 20, "the cut must not lose steps");
+    assert!(rep.retry_attempts >= 1, "the recovery must be counted as a retry");
+    assert!(rep.backoff_s > 0.0, "backoff sleep must be accounted");
+    assert_eq!(step_fields(&path), want, "recovery must stay trajectory-neutral");
+    std::fs::remove_file(ref_path).ok();
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn vanished_peer_is_departed_by_liveness_and_the_run_degrades() {
+    // Device 3 "joins" remotely, requests its first step, receives StepGo,
+    // and silently vanishes — the nastiest handler death: its serve loop
+    // exits on the dead socket with the step still in flight. The liveness
+    // policy must depart it and let the other 3 devices finish the run.
+    let mut cfg = base_cfg("");
+    cfg.rounds = 4;
+    cfg.transport = TransportKind::Tcp;
+    cfg.devices_remote = 1;
+    cfg.liveness_timeout_s = 1.0;
+    cfg.retry_deadline_s = 0.5; // only the fake peer faults; keep it short
+    let codec = cfg.scheme.build().unwrap();
+    let (codec_id, codec_version) = (codec.wire_id(), codec.wire_version());
+
+    let mut tr = Trainer::new(cfg).unwrap();
+    let addr = tr.listen_addr().expect("tcp trainer listens").to_string();
+    let peer_addr = addr.clone();
+    let peer = std::thread::spawn(move || {
+        let limits = WireLimits::new(1 << 22);
+        loop {
+            let mut conn = TcpConn::connect(&peer_addr, limits).expect("dial");
+            conn.send(Msg::Hello { device: 3, codec_id, codec_version }).expect("hello");
+            match conn.recv().expect("hello ack") {
+                Msg::HelloAck { err: Some(reason), .. } => panic!("rejected: {reason}"),
+                Msg::HelloAck { rounds, .. } if rounds != u32::MAX => {
+                    // the run is armed: enter step (t=1, l=3), then vanish
+                    conn.send(Msg::StepStart { device: 3, round: 1, local: 3 })
+                        .expect("step start");
+                    match conn.recv().expect("step go") {
+                        Msg::StepGo { .. } => {}
+                        other => panic!("expected StepGo, got {other:?}"),
+                    }
+                    return; // connection drops with the step in flight
+                }
+                Msg::HelloAck { .. } => {
+                    let _ = conn.send(Msg::Bye { device: 3 });
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+                other => panic!("expected HelloAck, got {other:?}"),
+            }
+        }
+    });
+
+    let s = tr.run().unwrap();
+    peer.join().unwrap();
+    assert_eq!(s.steps, 12, "the 3 survivors must finish all 4 rounds");
+    assert_eq!(s.departed, 1, "the vanished device must be recorded as departed");
+    assert!(s.mean_loss_last_round.is_finite());
+
+    // a departed device that comes back is turned away at the handshake
+    let mut conn = TcpConn::connect(&addr, WireLimits::new(1 << 22)).unwrap();
+    conn.send(Msg::Hello { device: 3, codec_id, codec_version }).unwrap();
+    match conn.recv().unwrap() {
+        Msg::HelloAck { err: Some(reason), .. } => {
+            assert!(reason.contains("departed"), "{reason}");
+        }
+        other => panic!("a departed device's hello must be rejected, got {other:?}"),
+    }
+}
+
+#[test]
+fn cut_clauses_require_a_reconnectable_transport() {
+    let mut cfg = base_cfg("");
+    cfg.scenario = ScenarioSpec::parse("cut[dev=0,step=2]").unwrap();
+    // inproc links cannot reconnect: the trainer must refuse up front
+    let err = Trainer::new(cfg).err().expect("cut on inproc must be rejected");
+    assert!(err.to_string().contains("tcp"), "{err}");
+}

@@ -108,7 +108,7 @@ fn tcp_reconnect_mid_training_is_trajectory_neutral() {
         let path = metrics_file(&format!("chaos_{tag}"));
         let mut cfg = base_cfg(path.to_str().unwrap());
         cfg.transport = TransportKind::Tcp;
-        cfg.chaos_drop = Some((1, cut_after));
+        cfg.scenario.push_cut(1, cut_after);
         let s = run_with(cfg);
         assert_eq!(s.steps, 20, "cut after send {cut_after} lost steps");
         let got = step_fields(&path);
