@@ -15,6 +15,10 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+echo "==> cargo test -q (SPLITFC_SIMD=off: scalar kernel table)"
+# the whole suite must pass identically with the vector kernels pinned off
+SPLITFC_SIMD=off cargo test -q
+
 echo "==> cargo check --features pjrt --all-targets"
 # the stub-gated PJRT path must keep compiling even though CI never runs it
 cargo check --features pjrt --all-targets
@@ -68,6 +72,24 @@ rm -f /tmp/splitfc_ci_scen_a.jsonl /tmp/splitfc_ci_scen_b.jsonl
 echo "==> chaos bench (quick): BENCH_chaos.json + determinism probe"
 # fails if a repeated scenario seed diverges
 cargo bench --bench bench_chaos -- --quick
+
+echo "==> SIMD determinism (full train, scalar vs vector kernels)"
+# the bit-exactness contract: SPLITFC_SIMD=off and the auto-detected AVX2
+# path must produce byte-identical training trajectories
+SPLITFC_SIMD=off cargo run --release --bin splitfc -- train --preset tiny \
+    --devices 2 --rounds 3 --scheme splitfc --r 8 --up-bpe 0.2 \
+    --metrics /tmp/splitfc_ci_simd_off.jsonl
+SPLITFC_SIMD=auto cargo run --release --bin splitfc -- train --preset tiny \
+    --devices 2 --rounds 3 --scheme splitfc --r 8 --up-bpe 0.2 \
+    --metrics /tmp/splitfc_ci_simd_on.jsonl
+cargo run --release --bin splitfc -- metrics-diff \
+    /tmp/splitfc_ci_simd_off.jsonl /tmp/splitfc_ci_simd_on.jsonl
+rm -f /tmp/splitfc_ci_simd_off.jsonl /tmp/splitfc_ci_simd_on.jsonl
+
+echo "==> SIMD kernel bench (quick): BENCH_simd.json + 2x gates on AVX2 hosts"
+# hard-asserts >= 2x on the matmul micro-kernel and the FWQ symbol quantize
+# loop when AVX2 is available; skips (and says so) elsewhere
+cargo bench --bench bench_simd -- --quick
 
 if [ "${SKIP_CLIPPY:-0}" = "1" ]; then
     echo "==> clippy skipped (SKIP_CLIPPY=1)"

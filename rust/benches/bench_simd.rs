@@ -1,0 +1,195 @@
+//! SIMD hot-path kernel microbenchmarks → BENCH_simd.json.
+//!
+//! Scalar-vs-AVX2 ns/op for the four dispatched kernel families on the
+//! paper-scale `B=64, D̄=8192` regime (serial — the SIMD win must be
+//! measured inside one thread, the thread pool multiplies it):
+//!
+//! 1. **matmul** — the MR-blocked kernel with the AVX2 micro-kernels vs the
+//!    blocked scalar table vs the naive `matmul_ref` oracle;
+//! 2. **column_stats** — per-row min/max/sum/sumsq accumulation;
+//! 3. **FWQ symbol quantize** — `fwq_quant_col` over D̄ contiguous columns
+//!    of B entries (the uplink symbol loop);
+//! 4. **FWQ symbol dequantize** — `fwq_dequant_col`, the decode mirror.
+//!
+//! Acceptance gates (hard asserts, AVX2 hosts only): the SIMD matmul must
+//! beat `matmul_ref` by ≥ 2x and the AVX2 `fwq_quant_col` must beat the
+//! scalar table by ≥ 2x. Hosts without AVX2 skip the vector rows and the
+//! gates, and say so in the JSON (`"skipped": true`).
+//!
+//! `-- --quick` shortens runs for CI smoke.
+
+use splitfc::bench::Bencher;
+use splitfc::tensor::column_stats;
+use splitfc::testkit::hetero_matrix;
+use splitfc::util::simd::{self, ColSrc, SimdMode};
+use splitfc::util::{par, Args, Json};
+
+const B: usize = 64;
+const DBAR: usize = 8192;
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.has_flag("quick");
+    let bench = if quick { Bencher::quick() } else { Bencher::default() };
+    par::set_threads(1);
+
+    let avx2 = simd::avx2_available();
+    println!(
+        "SIMD kernel benches (B={B}, D̄={DBAR}, serial): AVX2 {}",
+        if avx2 { "available" } else { "NOT available — vector rows skipped" }
+    );
+
+    // ---- 1. matmul: naive ref vs blocked scalar vs blocked AVX2 ----
+    // 64x256 · 256x1024 keeps one op in the low-ms range while still deep
+    // enough that the micro-kernel dominates
+    let (mk, mp) = (256usize, 1024usize);
+    let a = hetero_matrix(B, mk, 3);
+    let bm = hetero_matrix(mk, mp, 4);
+    let st_mm_ref = bench.run("matmul/naive-ref", || a.matmul_ref(&bm).data[0]);
+    println!("{}", st_mm_ref.report());
+    simd::force_mode(SimdMode::Off);
+    let st_mm_off = bench.run("matmul/blocked/simd=off", || a.matmul(&bm).data[0]);
+    println!("{}", st_mm_off.report());
+    let st_mm_avx = avx2.then(|| {
+        simd::force_mode(SimdMode::Avx2);
+        let st = bench.run("matmul/blocked/simd=avx2", || a.matmul(&bm).data[0]);
+        println!("{}", st.report());
+        st
+    });
+    let mm_speedup_ref = st_mm_avx.as_ref().map(|st| st_mm_ref.p50_s / st.p50_s);
+    let mm_speedup_scalar = st_mm_avx.as_ref().map(|st| st_mm_off.p50_s / st.p50_s);
+
+    // ---- 2. column_stats ----
+    let f = hetero_matrix(B, DBAR, 5);
+    simd::force_mode(SimdMode::Off);
+    let st_cs_off = bench.run("column_stats/simd=off", || column_stats(&f).min[0]);
+    println!("{}", st_cs_off.report());
+    let st_cs_avx = avx2.then(|| {
+        simd::force_mode(SimdMode::Avx2);
+        let st = bench.run("column_stats/simd=avx2", || column_stats(&f).min[0]);
+        println!("{}", st.report());
+        st
+    });
+    let cs_speedup = st_cs_avx.as_ref().map(|st| st_cs_off.p50_s / st.p50_s);
+
+    // ---- 3./4. FWQ symbol kernels, head to head on the tables ----
+    // D̄ contiguous columns of B entries: column c is src[c*B .. (c+1)*B]
+    // (compute-isolated; the strided access cost is the same for both
+    // tables and belongs to the caller's blocking, not the kernel)
+    let src = f.data.clone();
+    let (lo, span, q) = (-4.0f64, 8.0f64, 64u64);
+    let syms: Vec<u64> = (0..B * DBAR).map(|i| (i as u64).wrapping_mul(2_654_435_761) % q).collect();
+    let ks = simd::kernels_for(SimdMode::Off);
+
+    let mut out = vec![0u64; B];
+    let st_q_off = bench.run("fwq_quant_col/simd=off", || {
+        let mut acc = 0u64;
+        for c in 0..DBAR {
+            let col = ColSrc { src: &src, offset: c * B, stride: 1, scale: None };
+            (ks.fwq_quant_col)(col, B, lo, span, q, &mut out);
+            acc ^= out[0];
+        }
+        acc
+    });
+    println!("{}", st_q_off.report());
+
+    let mut dst = vec![0.0f32; B * DBAR];
+    let st_d_off = bench.run("fwq_dequant_col/simd=off", || {
+        for c in 0..DBAR {
+            (ks.fwq_dequant_col)(&syms[c * B..(c + 1) * B], lo, span, q, &mut dst, c * B, 1);
+        }
+        dst[0]
+    });
+    println!("{}", st_d_off.report());
+
+    let (st_q_avx, st_d_avx) = if avx2 {
+        let ka = simd::kernels_for(SimdMode::Avx2);
+        let st_q = bench.run("fwq_quant_col/simd=avx2", || {
+            let mut acc = 0u64;
+            for c in 0..DBAR {
+                let col = ColSrc { src: &src, offset: c * B, stride: 1, scale: None };
+                (ka.fwq_quant_col)(col, B, lo, span, q, &mut out);
+                acc ^= out[0];
+            }
+            acc
+        });
+        println!("{}", st_q.report());
+        let st_d = bench.run("fwq_dequant_col/simd=avx2", || {
+            for c in 0..DBAR {
+                (ka.fwq_dequant_col)(&syms[c * B..(c + 1) * B], lo, span, q, &mut dst, c * B, 1);
+            }
+            dst[0]
+        });
+        println!("{}", st_d.report());
+        (Some(st_q), Some(st_d))
+    } else {
+        (None, None)
+    };
+    let q_speedup = st_q_avx.as_ref().map(|st| st_q_off.p50_s / st.p50_s);
+    let d_speedup = st_d_avx.as_ref().map(|st| st_d_off.p50_s / st.p50_s);
+
+    // leave the process in auto mode (benches may grow follow-on sections)
+    simd::configure("auto").expect("auto");
+
+    let opt = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+    let j = Json::obj(vec![
+        ("bench", Json::str("simd_kernels")),
+        ("batch", Json::num(B as f64)),
+        ("dbar", Json::num(DBAR as f64)),
+        ("avx2_available", Json::Bool(avx2)),
+        ("skipped", Json::Bool(!avx2)),
+        (
+            "matmul_ns_per_op",
+            Json::obj(vec![
+                ("naive_ref", Json::num(st_mm_ref.p50_s * 1e9)),
+                ("blocked_scalar", Json::num(st_mm_off.p50_s * 1e9)),
+                ("blocked_avx2", opt(st_mm_avx.as_ref().map(|st| st.p50_s * 1e9))),
+                ("speedup_avx2_vs_ref", opt(mm_speedup_ref)),
+                ("speedup_avx2_vs_scalar", opt(mm_speedup_scalar)),
+            ]),
+        ),
+        (
+            "column_stats_ns_per_op",
+            Json::obj(vec![
+                ("scalar", Json::num(st_cs_off.p50_s * 1e9)),
+                ("avx2", opt(st_cs_avx.as_ref().map(|st| st.p50_s * 1e9))),
+                ("speedup", opt(cs_speedup)),
+            ]),
+        ),
+        (
+            "fwq_quant_ns_per_matrix",
+            Json::obj(vec![
+                ("scalar", Json::num(st_q_off.p50_s * 1e9)),
+                ("avx2", opt(st_q_avx.as_ref().map(|st| st.p50_s * 1e9))),
+                ("speedup", opt(q_speedup)),
+            ]),
+        ),
+        (
+            "fwq_dequant_ns_per_matrix",
+            Json::obj(vec![
+                ("scalar", Json::num(st_d_off.p50_s * 1e9)),
+                ("avx2", opt(st_d_avx.as_ref().map(|st| st.p50_s * 1e9))),
+                ("speedup", opt(d_speedup)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_simd.json", j.to_string_pretty()).expect("write BENCH_simd.json");
+    println!("[saved BENCH_simd.json]");
+
+    // ---- gates (AVX2 hosts only) ----
+    if avx2 {
+        let mm = mm_speedup_ref.unwrap_or(f64::NAN);
+        let fq = q_speedup.unwrap_or(f64::NAN);
+        assert!(
+            mm >= 2.0,
+            "AVX2 matmul speedup vs naive ref {mm:.2}x below the 2x acceptance gate"
+        );
+        assert!(
+            fq >= 2.0,
+            "AVX2 fwq_quant_col speedup {fq:.2}x below the 2x acceptance gate"
+        );
+        println!("2x SIMD gates: OK (matmul {mm:.2}x vs ref, fwq quant {fq:.2}x vs scalar)");
+    } else {
+        println!("SIMD gates skipped: host lacks AVX2 (scalar table is the only path)");
+    }
+}

@@ -129,6 +129,35 @@ impl BitWriter {
         }
     }
 
+    /// OR the low `nbits` of `value` into already-written bits starting at
+    /// absolute position `bit_offset`. The target bits must have been
+    /// written as zeros (the reserved-slot pattern: write a zero field,
+    /// stream past it, patch the real value in once known) — patching ORs,
+    /// it does not clear. Handles targets spanning the spilled-buffer /
+    /// pending-accumulator boundary.
+    pub fn patch_bits(&mut self, bit_offset: u64, value: u64, nbits: u32) {
+        debug_assert!(nbits <= 64);
+        debug_assert!(bit_offset + nbits as u64 <= self.bit_len());
+        let buf_bits = self.buf.len() as u64 * 8;
+        let mut off = bit_offset;
+        let mut v = value;
+        let mut remaining = nbits;
+        while remaining > 0 && off < buf_bits {
+            let byte = (off / 8) as usize;
+            let bit = (off % 8) as u32;
+            let take = (8 - bit).min(remaining);
+            let chunk = (v & ((1u64 << take) - 1)) as u8;
+            self.buf[byte] |= chunk << bit;
+            v >>= take;
+            off += take as u64;
+            remaining -= take;
+        }
+        if remaining > 0 {
+            // the rest of the target range is still in the accumulator
+            self.acc |= (v & ((1u64 << remaining) - 1)) << (off - buf_bits);
+        }
+    }
+
     pub fn into_bytes(mut self) -> Vec<u8> {
         self.flush_partial();
         self.buf
@@ -237,5 +266,41 @@ impl BitWriterRef {
 
     pub fn into_bytes(self) -> Vec<u8> {
         self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn patch_bits_matches_straight_line_write() {
+        // reserve-zero-then-patch must equal writing the value in place,
+        // across unaligned offsets and the buffer/accumulator boundary
+        for (pre, nbits, post) in
+            [(3u32, 40u32, 9u32), (0, 40, 0), (13, 40, 200), (64, 17, 5), (7, 63, 121)]
+        {
+            let mask = if nbits == 64 { u64::MAX } else { (1u64 << nbits) - 1 };
+            let val: u64 = 0xA5B1_2345_6789_ABCD & mask;
+            let mut patched = BitWriter::new();
+            let mut straight = BitWriter::new();
+            for i in 0..pre {
+                patched.write_bits(((i / 3) % 2) as u64, 1);
+                straight.write_bits(((i / 3) % 2) as u64, 1);
+            }
+            let at = patched.bit_len();
+            patched.write_bits(0, nbits);
+            straight.write_bits(val, nbits);
+            for i in 0..post {
+                patched.write_bits((i % 2) as u64, 1);
+                straight.write_bits((i % 2) as u64, 1);
+            }
+            patched.patch_bits(at, val, nbits);
+            assert_eq!(
+                patched.into_bytes(),
+                straight.into_bytes(),
+                "pre={pre} nbits={nbits} post={post}"
+            );
+        }
     }
 }

@@ -5,5 +5,7 @@ pub mod scalarq;
 pub mod topk;
 
 pub use fedlite::{fedlite_decode, fedlite_encode, FedLiteConfig};
-pub use scalarq::{qbar_levels, scalar_decode, scalar_encode, ScalarKind};
+pub use scalarq::{
+    qbar_levels, scalar_decode, scalar_decode_into, scalar_encode, scalar_encode_into, ScalarKind,
+};
 pub use topk::{sparsity_level, top_s_decode, top_s_encode, TopSConfig};

@@ -103,29 +103,88 @@ pub fn pq_params(values: &[f32], q: u64) -> (f64, f64) {
 
 /// Encode a dense matrix entry-wise with the given scalar quantizer at q
 /// levels. Wire: rows, cols, q (17b), kind params (f32s), radix codes.
+///
+/// Allocating wrapper over [`scalar_encode_into`].
 pub fn scalar_encode(f: &Matrix, kind: ScalarKind, q: u64, noise_seed: u64) -> (Vec<u8>, u64) {
-    let q = q.max(2);
     let mut w = BitWriter::new();
+    let mut codes = Vec::new();
+    scalar_encode_into(f, kind, q, noise_seed, &mut w, &mut codes, None);
+    let bits = w.bit_len();
+    (w.into_bytes(), bits)
+}
+
+/// Scatter `codes` (row-major over the gathered matrix) into the kept
+/// columns of the full-width reconstruction `rc`, dequantizing each code.
+/// The closure is FnMut so the NQ path can regenerate its noise stream in
+/// the decoder's exact (row-major index) order.
+fn scatter_recon(codes: &[u64], kept: &[usize], rc: &mut Matrix, mut deq: impl FnMut(u64) -> f32) {
+    let k = kept.len();
+    for (r, row_codes) in codes.chunks_exact(k).enumerate() {
+        let dst = &mut rc.data[r * rc.cols..(r + 1) * rc.cols];
+        for (&c, &kc) in row_codes.iter().zip(kept) {
+            dst[kc] = deq(c);
+        }
+    }
+}
+
+/// Streaming [`scalar_encode`]: the identical bit sequence goes straight
+/// into the caller's `w` (no intermediate byte buffer), symbols stage in the
+/// caller's `codes`, and — when `recon` is `Some((g_hat, kept))` — the
+/// decoder-exact reconstruction is scattered into the kept columns of
+/// `g_hat` in the same pass, so arena-backed codecs skip the
+/// decode-own-frame round trip.
+///
+/// Reconstruction fidelity rule: quantization uses the full-precision f64
+/// parameters (matching the historical `scalar_encode` bitstream), but
+/// dequantization for `recon` uses the f32-**roundtripped** parameters,
+/// because that is all the decoder ever sees on the wire.
+#[allow(clippy::too_many_arguments)]
+pub fn scalar_encode_into(
+    f: &Matrix,
+    kind: ScalarKind,
+    q: u64,
+    noise_seed: u64,
+    w: &mut BitWriter,
+    codes: &mut Vec<u64>,
+    mut recon: Option<(&mut Matrix, &[usize])>,
+) {
+    let q = q.max(2);
+    if let Some((rc, kept)) = recon.as_ref() {
+        assert_eq!(rc.rows, f.rows, "recon row mismatch");
+        assert_eq!(kept.len(), f.cols, "kept/gathered width mismatch");
+    }
     w.write_u32(f.rows as u32);
     w.write_u32(f.cols as u32);
     w.write_bits(q, 17);
-    let codes: Vec<u64> = match kind {
+    codes.clear();
+    match kind {
         ScalarKind::Eq => {
             let s = eq_params(&f.data, q);
             w.write_f32(s as f32);
-            f.data.iter().map(|&v| uniform_q(v as f64, -s, s, q)).collect()
+            codes.extend(f.data.iter().map(|&v| uniform_q(v as f64, -s, s, q)));
+            w.write_radix(codes, q);
+            if let Some((rc, kept)) = recon.as_mut() {
+                let sd = (s as f32) as f64;
+                scatter_recon(codes, kept, rc, |c| uniform_dq(c, -sd, sd, q) as f32);
+            }
         }
         ScalarKind::Pq => {
             let (alpha, s) = pq_params(&f.data, q);
             w.write_f32(alpha as f32);
             w.write_f32(s as f32);
-            f.data
-                .iter()
-                .map(|&v| {
-                    let t = (v as f64).signum() * (v as f64).abs().powf(alpha);
-                    uniform_q(t, -s, s, q)
-                })
-                .collect()
+            codes.extend(f.data.iter().map(|&v| {
+                let t = (v as f64).signum() * (v as f64).abs().powf(alpha);
+                uniform_q(t, -s, s, q)
+            }));
+            w.write_radix(codes, q);
+            if let Some((rc, kept)) = recon.as_mut() {
+                let ad = (alpha as f32) as f64;
+                let sd = (s as f32) as f64;
+                scatter_recon(codes, kept, rc, |c| {
+                    let dq = uniform_dq(c, -sd, sd, q);
+                    (dq.signum() * dq.abs().powf(1.0 / ad)) as f32
+                });
+            }
         }
         ScalarKind::Nq => {
             let maxabs = f.data.iter().fold(0f32, |a, &v| a.max(v.abs())) as f64;
@@ -133,55 +192,77 @@ pub fn scalar_encode(f: &Matrix, kind: ScalarKind, q: u64, noise_seed: u64) -> (
             w.write_f32(s as f32);
             let delta = 2.0 * s / (q as f64 - 1.0);
             let mut nrng = Rng::new(noise_seed);
-            f.data
-                .iter()
-                .map(|&v| {
-                    let n = (nrng.next_f64() - 0.5) * delta;
-                    uniform_q(v as f64 + n, -s, s, q)
-                })
-                .collect()
+            codes.extend(f.data.iter().map(|&v| {
+                let n = (nrng.next_f64() - 0.5) * delta;
+                uniform_q(v as f64 + n, -s, s, q)
+            }));
+            w.write_radix(codes, q);
+            if let Some((rc, kept)) = recon.as_mut() {
+                let sd = (s as f32) as f64;
+                let dd = 2.0 * sd / (q as f64 - 1.0);
+                let mut drng = Rng::new(noise_seed);
+                scatter_recon(codes, kept, rc, |c| {
+                    let n = (drng.next_f64() - 0.5) * dd;
+                    (uniform_dq(c, -sd, sd, q) - n) as f32
+                });
+            }
         }
-    };
-    w.write_radix(&codes, q);
-    let bits = w.bit_len();
-    (w.into_bytes(), bits)
+    }
 }
 
+/// Allocating wrapper over [`scalar_decode_into`].
 pub fn scalar_decode(bytes: &[u8], kind: ScalarKind, noise_seed: u64) -> Matrix {
+    let mut codes = Vec::new();
+    let mut out = Matrix::zeros(0, 0);
+    scalar_decode_into(bytes, kind, noise_seed, &mut codes, &mut out);
+    out
+}
+
+/// Scratch-reusing scalar decode: symbols stage in `codes`, the matrix is
+/// rebuilt in `out` (capacity reused) — zero steady-state allocations.
+pub fn scalar_decode_into(
+    bytes: &[u8],
+    kind: ScalarKind,
+    noise_seed: u64,
+    codes: &mut Vec<u64>,
+    out: &mut Matrix,
+) {
     let mut r = BitReader::new(bytes);
     let rows = r.read_u32() as usize;
     let cols = r.read_u32() as usize;
     let q = r.read_bits(17);
-    let mut out = Matrix::zeros(rows, cols);
+    out.rows = rows;
+    out.cols = cols;
+    out.data.clear();
+    out.data.resize(rows * cols, 0.0);
     match kind {
         ScalarKind::Eq => {
             let s = r.read_f32() as f64;
-            let codes = r.read_radix(rows * cols, q);
-            for (i, &c) in codes.iter().enumerate() {
-                out.data[i] = uniform_dq(c, -s, s, q) as f32;
+            r.read_radix_into(rows * cols, q, codes);
+            for (o, &c) in out.data.iter_mut().zip(codes.iter()) {
+                *o = uniform_dq(c, -s, s, q) as f32;
             }
         }
         ScalarKind::Pq => {
             let alpha = r.read_f32() as f64;
             let s = r.read_f32() as f64;
-            let codes = r.read_radix(rows * cols, q);
-            for (i, &c) in codes.iter().enumerate() {
+            r.read_radix_into(rows * cols, q, codes);
+            for (o, &c) in out.data.iter_mut().zip(codes.iter()) {
                 let dq = uniform_dq(c, -s, s, q);
-                out.data[i] = (dq.signum() * dq.abs().powf(1.0 / alpha)) as f32;
+                *o = (dq.signum() * dq.abs().powf(1.0 / alpha)) as f32;
             }
         }
         ScalarKind::Nq => {
             let s = r.read_f32() as f64;
             let delta = 2.0 * s / (q as f64 - 1.0);
-            let codes = r.read_radix(rows * cols, q);
+            r.read_radix_into(rows * cols, q, codes);
             let mut nrng = Rng::new(noise_seed);
-            for (i, &c) in codes.iter().enumerate() {
+            for (o, &c) in out.data.iter_mut().zip(codes.iter()) {
                 let n = (nrng.next_f64() - 0.5) * delta;
-                out.data[i] = (uniform_dq(c, -s, s, q) - n) as f32;
+                *o = (uniform_dq(c, -s, s, q) - n) as f32;
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -269,6 +350,44 @@ mod tests {
             let (b, _) = scalar_encode(&f, kind, 8, 0);
             let out = scalar_decode(&b, kind, 0);
             assert!(out.data.iter().all(|&v| v.abs() < 0.2));
+        }
+    }
+
+    #[test]
+    fn streaming_encode_is_byte_identical_and_recon_matches_decode() {
+        let b = 12;
+        let dbar = 40;
+        let full = gaussian(9, b, dbar, 1.5);
+        let kept: Vec<usize> = (0..dbar).filter(|i| i % 3 != 2).collect();
+        let f = full.gather_cols(&kept);
+        for kind in [ScalarKind::Pq, ScalarKind::Eq, ScalarKind::Nq] {
+            for q in [2u64, 9, 64] {
+                let (bytes_ref, bits_ref) = scalar_encode(&f, kind, q, 77);
+                let mut w = BitWriter::new();
+                let mut codes = Vec::new();
+                let mut recon = Matrix::zeros(b, dbar);
+                scalar_encode_into(
+                    &f,
+                    kind,
+                    q,
+                    77,
+                    &mut w,
+                    &mut codes,
+                    Some((&mut recon, &kept)),
+                );
+                assert_eq!(w.bit_len(), bits_ref, "{} q={q}", kind.name());
+                assert_eq!(w.into_bytes(), bytes_ref, "{} q={q}", kind.name());
+                // recon must be bit-exact with decode + scatter
+                let dec = scalar_decode(&bytes_ref, kind, 77);
+                let mut expect = Matrix::zeros(b, dbar);
+                dec.scatter_cols_into(&kept, &mut expect);
+                assert_eq!(recon, expect, "{} q={q}", kind.name());
+                // and the _into decoder matches the allocating one
+                let mut out = Matrix::zeros(0, 0);
+                let mut syms = Vec::new();
+                scalar_decode_into(&bytes_ref, kind, 77, &mut syms, &mut out);
+                assert_eq!(out, dec, "{} q={q}", kind.name());
+            }
         }
     }
 

@@ -11,9 +11,11 @@
 //! signatures and spin up a throwaway arena.
 
 use crate::bitio::{BitReader, BitWriter};
-use crate::compression::baselines::{qbar_levels, scalar_decode, scalar_encode, ScalarKind};
+use crate::compression::baselines::{
+    qbar_levels, scalar_decode, scalar_decode_into, scalar_encode, scalar_encode_into, ScalarKind,
+};
 use crate::compression::codec::{CodecParams, EncodedDownlink, GradMask};
-use crate::compression::quant::{fwq_decode_into, fwq_encode_view, ColView, FwqConfig};
+use crate::compression::quant::{fwq_decode_into, fwq_encode_view_recon, ColView, FwqConfig};
 use crate::compression::scratch::WireScratch;
 use crate::ensure;
 use crate::tensor::Matrix;
@@ -46,6 +48,33 @@ pub fn f32_undump_into(r: &mut BitReader, out: &mut Matrix) {
 pub fn write_blob(w: &mut BitWriter, bytes: &[u8], bits: u64) {
     w.write_bits(bits, 40);
     w.write_bytes(bytes);
+}
+
+/// An open blob slot in an outer bit stream — see [`begin_blob`].
+#[derive(Debug, Clone, Copy)]
+pub struct BlobSlot {
+    /// absolute bit offset of the 40-bit length field
+    len_at: u64,
+}
+
+/// Open a length-prefixed blob **in place**: reserves the 40-bit length
+/// field as zeros and lets the sub-codec stream its frame straight into `w`.
+/// Close with [`end_blob`], which zero-pads the body to a byte boundary and
+/// patches the true bit length into the reserved field — producing the exact
+/// bytes of encode-to-buffer + [`write_blob`], without the staging buffer or
+/// the memcpy.
+pub fn begin_blob(w: &mut BitWriter) -> BlobSlot {
+    let len_at = w.bit_len();
+    w.write_bits(0, 40);
+    BlobSlot { len_at }
+}
+
+/// Close a blob opened by [`begin_blob`] (see there for the layout claim).
+pub fn end_blob(w: &mut BitWriter, slot: BlobSlot) {
+    let bits = w.bit_len() - slot.len_at - 40;
+    let pad = (8 - (bits % 8) as u32) % 8;
+    w.write_bits(0, pad);
+    w.patch_bits(slot.len_at, bits, 40);
 }
 
 /// Inverse of [`write_blob`]: returns (bytes, declared bit length).
@@ -177,35 +206,43 @@ pub fn encode_downlink_styled_with(
             } else {
                 match style.columns {
                     ColumnQuant::Scalar { kind, r } => {
-                        let gt = g.gather_cols(kept);
+                        // gather into pooled staging, stream the frame into
+                        // the open blob slot, and reconstruct inline — no
+                        // intermediate byte buffer, no self-decode pass
                         let q = qbar_levels(c_ava, r.max(1.0), b, dbar);
-                        let (bytes, bits) = scalar_encode(&gt, kind, q, params.noise_seed ^ 1);
-                        write_blob(&mut w, &bytes, bits);
-                        let out = scalar_decode(&bytes, kind, params.noise_seed ^ 1);
+                        crate::util::reserve_total(&mut ws.stage.data, b * dbar);
+                        crate::util::reserve_total(&mut ws.scalar_syms, b * dbar);
                         let mut g_hat = ws.take_matrix(b, dbar);
-                        out.scatter_cols_into(kept, &mut g_hat);
-                        (g_hat, gt.len() as f64 * (q as f64).log2() + 96.0)
+                        let slot = begin_blob(&mut w);
+                        let nominal = {
+                            let WireScratch { stage, scalar_syms, .. } = &mut *ws;
+                            g.gather_cols_into(kept, stage);
+                            scalar_encode_into(
+                                stage,
+                                kind,
+                                q,
+                                params.noise_seed ^ 1,
+                                &mut w,
+                                scalar_syms,
+                                Some((&mut g_hat, kept.as_slice())),
+                            );
+                            stage.len() as f64 * (q as f64).log2() + 96.0
+                        };
+                        end_blob(&mut w, slot);
+                        (g_hat, nominal)
                     }
                     ColumnQuant::Fwq { use_mean, q_fixed } => {
                         let cfg = downlink_fwq_cfg(use_mean, q_fixed, b, c_ava, params);
-                        let mut wi = BitWriter::from_buf(ws.take_bytes());
-                        let info = fwq_encode_view(
+                        let mut g_hat = ws.take_matrix(b, dbar);
+                        let slot = begin_blob(&mut w);
+                        let info = fwq_encode_view_recon(
                             &ColView::unscaled(g, kept),
                             &cfg,
-                            &mut wi,
+                            &mut w,
                             &mut ws.fwq,
+                            &mut g_hat,
                         );
-                        let inner_bits = wi.bit_len();
-                        let inner = wi.into_bytes();
-                        write_blob(&mut w, &inner, inner_bits);
-                        crate::util::reserve_total(&mut ws.stage.data, b * dbar);
-                        {
-                            let WireScratch { fwq, stage, .. } = &mut *ws;
-                            fwq_decode_into(&inner, &cfg, fwq, stage);
-                        }
-                        ws.give_bytes(inner);
-                        let mut g_hat = ws.take_matrix(b, dbar);
-                        ws.stage.scatter_cols_into(kept, &mut g_hat);
+                        end_blob(&mut w, slot);
                         (g_hat, info.nominal_bits)
                     }
                 }
@@ -315,9 +352,14 @@ pub fn decode_downlink_styled_with(
             read_blob_into(&mut rd, &mut ws.blob);
             match style.columns {
                 ColumnQuant::Scalar { kind, .. } => {
-                    let gt_hat = scalar_decode(&ws.blob, kind, params.noise_seed ^ 1);
+                    crate::util::reserve_total(&mut ws.stage.data, b * dbar);
+                    crate::util::reserve_total(&mut ws.scalar_syms, b * dbar);
+                    {
+                        let WireScratch { blob, stage, scalar_syms, .. } = &mut *ws;
+                        scalar_decode_into(blob, kind, params.noise_seed ^ 1, scalar_syms, stage);
+                    }
                     let mut g_hat = ws.take_matrix(b, dbar);
-                    gt_hat.scatter_cols_into(kept, &mut g_hat);
+                    ws.stage.scatter_cols_into(kept, &mut g_hat);
                     Ok(g_hat)
                 }
                 ColumnQuant::Fwq { use_mean, q_fixed } => {
@@ -356,6 +398,51 @@ pub fn decode_downlink_styled_with(
                 }
             }
             Ok(g_hat)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blob_slot_matches_write_blob() {
+        // begin/end_blob must reproduce encode-to-buffer + write_blob bytes
+        // exactly, at aligned and unaligned outer positions, including the
+        // empty blob
+        for inner_len in [0usize, 1, 7, 13, 40, 129] {
+            for pre in [0u32, 3, 32] {
+                let mut wi = BitWriter::new();
+                for i in 0..inner_len {
+                    wi.write_bits((i % 2) as u64, 1);
+                    wi.write_bits((i * 37 % 251) as u64, 11);
+                }
+                let bits = wi.bit_len();
+                let bytes = wi.into_bytes();
+                let mut w_ref = BitWriter::new();
+                w_ref.write_bits(0x5, pre.min(3));
+                if pre == 32 {
+                    w_ref.write_bits(0xABCD_1234 >> 3, 29);
+                }
+                write_blob(&mut w_ref, &bytes, bits);
+                w_ref.write_bits(0x2A, 6);
+
+                let mut w = BitWriter::new();
+                w.write_bits(0x5, pre.min(3));
+                if pre == 32 {
+                    w.write_bits(0xABCD_1234 >> 3, 29);
+                }
+                let slot = begin_blob(&mut w);
+                for i in 0..inner_len {
+                    w.write_bits((i % 2) as u64, 1);
+                    w.write_bits((i * 37 % 251) as u64, 11);
+                }
+                end_blob(&mut w, slot);
+                w.write_bits(0x2A, 6);
+                assert_eq!(w.bit_len(), w_ref.bit_len(), "len={inner_len} pre={pre}");
+                assert_eq!(w.into_bytes(), w_ref.into_bytes(), "len={inner_len} pre={pre}");
+            }
         }
     }
 }

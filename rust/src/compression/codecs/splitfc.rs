@@ -16,18 +16,20 @@
 use std::sync::Mutex;
 
 use crate::bitio::{BitReader, BitWriter};
-use crate::compression::baselines::{qbar_levels, scalar_decode, scalar_encode, ScalarKind};
+use crate::compression::baselines::{
+    qbar_levels, scalar_decode_into, scalar_encode_into, ScalarKind,
+};
 use crate::compression::codec::{
     codec_id, Codec, CodecParams, CodecRequirements, DecodedUplink, EncodedDownlink,
     EncodedUplink, GradMask, Reclaim, SigmaStats,
 };
 use crate::compression::codecs::common::{
-    decode_downlink_styled_with, encode_downlink_styled_with, read_blob_into, write_blob,
-    ColumnQuant, DownlinkStyle,
+    begin_blob, decode_downlink_styled_with, encode_downlink_styled_with, end_blob,
+    read_blob_into, ColumnQuant, DownlinkStyle,
 };
 use crate::compression::dropout::{self, DropKind};
 use crate::compression::feedback::ErrorFeedback;
-use crate::compression::quant::{fwq_decode_into, fwq_encode_view, ColView, FwqConfig};
+use crate::compression::quant::{fwq_decode_into, fwq_encode_view_recon, ColView, FwqConfig};
 use crate::compression::scratch::WireScratch;
 use crate::ensure;
 use crate::tensor::{column_stats, normalized_sigma, Matrix};
@@ -201,40 +203,46 @@ impl SplitFcCodec {
                 (f_hat, delta_bits + 32.0 * n as f64, None)
             }
             FwqMode::Optimal { .. } | FwqMode::Fixed { .. } => {
+                // stream the FWQ frame straight into the open blob slot and
+                // reconstruct F̂ inline — no inner byte buffer, no
+                // decode-own-frame pass, no scatter memcpy
                 let cfg = cfg.expect("fwq config built above");
-                let mut wi = BitWriter::from_buf(ws.take_bytes());
+                let mut f_hat = ws.take_matrix(b, dbar);
+                let slot = begin_blob(&mut w);
                 let info = {
                     let WireScratch { plan, fwq, .. } = &mut *ws;
-                    fwq_encode_view(
+                    fwq_encode_view_recon(
                         &ColView::scaled(f, &plan.kept, &plan.scale),
                         &cfg,
-                        &mut wi,
+                        &mut w,
                         fwq,
+                        &mut f_hat,
                     )
                 };
-                let inner_bits = wi.bit_len();
-                let inner = wi.into_bytes();
-                write_blob(&mut w, &inner, inner_bits);
-                // reconstruction F̂: decode our own stream, scatter to B×D̄
-                crate::util::reserve_total(&mut ws.stage.data, b * dbar);
-                {
-                    let WireScratch { fwq, stage, .. } = &mut *ws;
-                    fwq_decode_into(&inner, &cfg, fwq, stage);
-                }
-                ws.give_bytes(inner);
-                let mut f_hat = ws.take_matrix(b, dbar);
-                ws.stage.scatter_cols_into(&ws.plan.kept, &mut f_hat);
+                end_blob(&mut w, slot);
                 (f_hat, delta_bits + info.nominal_bits, Some(info.m_star))
             }
             FwqMode::Scalar(kind) => {
-                let ft = f.gather_cols_scaled(&ws.plan.kept, &ws.plan.scale);
                 let q = qbar_levels(c_ava, r.max(1.0), b, dbar);
-                let (bytes, bits) = scalar_encode(&ft, kind, q, params.noise_seed);
-                write_blob(&mut w, &bytes, bits);
-                let out = scalar_decode(&bytes, kind, params.noise_seed);
+                crate::util::reserve_total(&mut ws.stage.data, b * dbar);
+                crate::util::reserve_total(&mut ws.scalar_syms, b * dbar);
                 let mut f_hat = ws.take_matrix(b, dbar);
-                out.scatter_cols_into(&ws.plan.kept, &mut f_hat);
-                let nominal = delta_bits + ft.len() as f64 * (q as f64).log2() + 96.0;
+                let slot = begin_blob(&mut w);
+                let nominal = {
+                    let WireScratch { plan, stage, scalar_syms, .. } = &mut *ws;
+                    f.gather_cols_scaled_into(&plan.kept, &plan.scale, stage);
+                    scalar_encode_into(
+                        stage,
+                        kind,
+                        q,
+                        params.noise_seed,
+                        &mut w,
+                        scalar_syms,
+                        Some((&mut f_hat, plan.kept.as_slice())),
+                    );
+                    delta_bits + stage.len() as f64 * (q as f64).log2() + 96.0
+                };
+                end_blob(&mut w, slot);
                 (f_hat, nominal, None)
             }
         };
@@ -399,10 +407,16 @@ impl Codec for SplitFcCodec {
                 f_hat
             }
             FwqMode::Scalar(kind) => {
+                crate::util::reserve_total(&mut ws.blob, (c_ava.max(0.0) / 4.0) as usize + 64);
                 read_blob_into(&mut rd, &mut ws.blob);
-                let dense = scalar_decode(&ws.blob, kind, params.noise_seed);
+                crate::util::reserve_total(&mut ws.stage.data, b * dbar);
+                crate::util::reserve_total(&mut ws.scalar_syms, b * dbar);
+                {
+                    let WireScratch { blob, stage, scalar_syms, .. } = &mut *ws;
+                    scalar_decode_into(blob, kind, params.noise_seed, scalar_syms, stage);
+                }
                 let mut f_hat = ws.take_matrix(b, dbar);
-                dense.scatter_cols_into(&kept, &mut f_hat);
+                ws.stage.scatter_cols_into(&kept, &mut f_hat);
                 f_hat
             }
         };

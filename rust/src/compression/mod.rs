@@ -42,6 +42,7 @@ pub use error::CodecError;
 pub use feedback::ErrorFeedback;
 pub use pipeline::{decode_uplink_splitfc, encode_downlink, encode_uplink, Scheme};
 pub use quant::{
-    fwq_decode, fwq_decode_into, fwq_encode, fwq_encode_view, ColView, FwqConfig, FwqScratch,
+    fwq_decode, fwq_decode_into, fwq_encode, fwq_encode_view, fwq_encode_view_recon, ColView,
+    FwqConfig, FwqScratch,
 };
 pub use scratch::WireScratch;

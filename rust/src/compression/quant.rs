@@ -143,6 +143,30 @@ impl<'a> ColView<'a> {
     pub fn col_iter(&self, j: usize) -> impl Iterator<Item = f32> + '_ {
         (0..self.m.rows).map(move |r| self.at(r, j))
     }
+
+    /// Strided-column descriptor for the SIMD kernel table — `at(r)` on the
+    /// result is bit-identical to `self.at(r, j)`.
+    #[inline]
+    pub(crate) fn col_src(&self, j: usize) -> crate::util::simd::ColSrc<'_> {
+        crate::util::simd::ColSrc {
+            src: &self.m.data,
+            offset: self.kept[j],
+            stride: self.m.cols,
+            scale: self.scale.map(|s| s[j]),
+        }
+    }
+
+    /// Source column index behind view column `j` (where inline
+    /// reconstruction scatters its dequantized values).
+    #[inline]
+    fn src_col(&self, j: usize) -> usize {
+        self.kept[j]
+    }
+
+    /// Width of the source matrix (the reconstruction target's column count).
+    fn src_width(&self) -> usize {
+        self.m.cols
+    }
 }
 
 /// One candidate-M quantization plan, built into reusable buffers.
@@ -570,8 +594,43 @@ pub fn fwq_encode_view(
     w: &mut BitWriter,
     fs: &mut FwqScratch,
 ) -> FwqInfo {
+    fwq_encode_view_core(v, cfg, w, fs, None)
+}
+
+/// [`fwq_encode_view`] plus **inline reconstruction**: the encoder already
+/// holds every quantized symbol, so instead of the codec re-decoding its own
+/// frame (a full parse + dequant pass over a staging blob), the dequantized
+/// matrix is scattered into `recon` — resized to B × source-width, kept
+/// columns written at their source positions, everything else zero — while
+/// the symbols stream out. The reconstruction is bit-identical to
+/// `fwq_decode_into` + column scatter: both sides derive levels from the
+/// serialized f32 endpoints/means through the same deterministic waterfill
+/// (locked by the `inline_recon_*` tests below).
+pub fn fwq_encode_view_recon(
+    v: &ColView,
+    cfg: &FwqConfig,
+    w: &mut BitWriter,
+    fs: &mut FwqScratch,
+    recon: &mut Matrix,
+) -> FwqInfo {
+    fwq_encode_view_core(v, cfg, w, fs, Some(recon))
+}
+
+fn fwq_encode_view_core(
+    v: &ColView,
+    cfg: &FwqConfig,
+    w: &mut BitWriter,
+    fs: &mut FwqScratch,
+    mut recon: Option<&mut Matrix>,
+) -> FwqInfo {
     let dhat = v.ncols();
     assert_eq!(v.rows(), cfg.batch);
+    if let Some(rc) = recon.as_deref_mut() {
+        rc.rows = cfg.batch;
+        rc.cols = v.src_width();
+        rc.data.clear();
+        rc.data.resize(cfg.batch * v.src_width(), 0.0);
+    }
     if dhat == 0 {
         return FwqInfo::empty();
     }
@@ -646,6 +705,18 @@ pub fn fwq_encode_view(
                 .map(|&c| quant_code(means[c] as f64, lo, span, q0v)),
         );
         w.write_radix(syms, q0v);
+        if let Some(rc) = recon.as_deref_mut() {
+            // mirror the decoder's mean fill: each mean column becomes the
+            // per-column constant dequant(code) — not the raw mean
+            let rw = rc.cols;
+            for (&c, &s) in plan.mean_cols.iter().zip(syms.iter()) {
+                let val = dequant(s, lo, span, q0v);
+                let sc = v.src_col(c);
+                for row in 0..cfg.batch {
+                    rc.data[row * rw + sc] = val;
+                }
+            }
+        }
     }
     // entry codes per two-stage column: symbols come straight off the view
     // (strided reads + on-the-fly rescale, no per-column copy).
@@ -660,27 +731,37 @@ pub fn fwq_encode_view(
         let span = (umax - umin) as f64 * d_ep;
         (lo, span)
     };
+    let kr = crate::util::simd::kernels();
     if nts > cols_per_chunk && par::threads() > 1 {
         let col_syms: Vec<Vec<u64>> = par::par_map_idx(nts, cols_per_chunk, |j| {
             let (lo, span) = col_lo_span(j);
             let qj = plan.levels[j];
-            v.col_iter(plan.two_stage[j])
-                .map(|x| quant_code(x as f64, lo, span, qj))
-                .collect()
+            let mut s = vec![0u64; cfg.batch];
+            (kr.fwq_quant_col)(v.col_src(plan.two_stage[j]), cfg.batch, lo, span, qj, &mut s);
+            s
         });
-        for (s, &qj) in col_syms.iter().zip(&plan.levels) {
+        for (j, (s, &qj)) in col_syms.iter().zip(&plan.levels).enumerate() {
             w.write_radix(s, qj);
+            if let Some(rc) = recon.as_deref_mut() {
+                let (lo, span) = col_lo_span(j);
+                let stride = rc.cols;
+                let sc = v.src_col(plan.two_stage[j]);
+                (kr.fwq_dequant_col)(s, lo, span, qj, &mut rc.data, sc, stride);
+            }
         }
     } else {
         for j in 0..nts {
             let (lo, span) = col_lo_span(j);
             let qj = plan.levels[j];
             syms.clear();
-            syms.extend(
-                v.col_iter(plan.two_stage[j])
-                    .map(|x| quant_code(x as f64, lo, span, qj)),
-            );
+            syms.resize(cfg.batch, 0);
+            (kr.fwq_quant_col)(v.col_src(plan.two_stage[j]), cfg.batch, lo, span, qj, syms);
             w.write_radix(syms, qj);
+            if let Some(rc) = recon.as_deref_mut() {
+                let stride = rc.cols;
+                let sc = v.src_col(plan.two_stage[j]);
+                (kr.fwq_dequant_col)(syms, lo, span, qj, &mut rc.data, sc, stride);
+            }
         }
     }
 
@@ -705,7 +786,7 @@ pub fn fwq_encode_view(
 }
 
 #[inline]
-fn quant_code(v: f64, lo: f64, span: f64, q: u64) -> u64 {
+pub(crate) fn quant_code(v: f64, lo: f64, span: f64, q: u64) -> u64 {
     if span <= 0.0 || q < 2 {
         return 0;
     }
@@ -714,7 +795,7 @@ fn quant_code(v: f64, lo: f64, span: f64, q: u64) -> u64 {
 }
 
 #[inline]
-fn dequant(code: u64, lo: f64, span: f64, q: u64) -> f32 {
+pub(crate) fn dequant(code: u64, lo: f64, span: f64, q: u64) -> f32 {
     if q < 2 || span <= 0.0 {
         return lo as f32;
     }
@@ -813,7 +894,9 @@ pub fn fwq_decode_into(bytes: &[u8], cfg: &FwqConfig, fs: &mut FwqScratch, out: 
             }
         }
     }
-    // entry codes
+    // entry codes (lanes = the 4 symbols of a column chunk — independent
+    // outputs, so the SIMD and scalar dequant agree bit-for-bit)
+    let kr = crate::util::simd::kernels();
     let mut j = 0usize;
     for c in 0..dhat {
         if !is_two[c] {
@@ -825,9 +908,7 @@ pub fn fwq_decode_into(bytes: &[u8], cfg: &FwqConfig, fs: &mut FwqScratch, out: 
         let qj = dec_levels[j];
         j += 1;
         r.read_radix_into(cfg.batch, qj, syms);
-        for b in 0..cfg.batch {
-            out.data[b * dhat + c] = dequant(syms[b], lo, span, qj);
-        }
+        (kr.fwq_dequant_col)(&syms[..cfg.batch], lo, span, qj, &mut out.data, c, dhat);
     }
 }
 
@@ -1143,5 +1224,66 @@ mod tests {
             fwq_decode_into(&reused, &c, &mut fs, &mut out);
             assert_eq!(out, fwq_decode(&fresh, &c), "round {round}");
         }
+    }
+
+    // ---- inline reconstruction vs the decode-own-frame path ----
+
+    fn scatter_to_source(dec: &Matrix, kept: &[usize], src_cols: usize) -> Matrix {
+        let mut out = Matrix::zeros(dec.rows, src_cols);
+        for r in 0..dec.rows {
+            for (j, &kc) in kept.iter().enumerate() {
+                out.data[r * src_cols + kc] = dec.at(r, j);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn inline_recon_matches_decode_scatter() {
+        let f = hetero(16, 48, 13);
+        let kept: Vec<usize> = (0..48).filter(|i| i % 4 != 1).collect();
+        let scale: Vec<f32> = kept.iter().map(|&i| 1.0 + (i % 7) as f32 * 0.13).collect();
+        for (bpe, use_mean) in [(0.2, true), (1.0, true), (4.0, true), (1.0, false)] {
+            let mut c = FwqConfig::paper_default(16, bpe * 16.0 * kept.len() as f64);
+            c.use_mean = use_mean;
+            let v = ColView::scaled(&f, &kept, &scale);
+            let mut w = BitWriter::new();
+            let mut fs = FwqScratch::default();
+            let mut recon = Matrix::zeros(0, 0);
+            fwq_encode_view_recon(&v, &c, &mut w, &mut fs, &mut recon);
+            let bytes = w.into_bytes();
+            // the stream is untouched by reconstruction
+            let mut w2 = BitWriter::new();
+            let mut fs2 = FwqScratch::default();
+            fwq_encode_view(&v, &c, &mut w2, &mut fs2);
+            assert_eq!(bytes, w2.into_bytes(), "bpe={bpe} use_mean={use_mean}");
+            // recon == what the decoder + kept-column scatter produces
+            let expect = scatter_to_source(&fwq_decode(&bytes, &c), &kept, 48);
+            assert_eq!(recon, expect, "bpe={bpe} use_mean={use_mean}");
+        }
+    }
+
+    #[test]
+    fn inline_recon_threaded_matches_serial() {
+        // wide enough (nts > 8192/B column chunk) to cross the parallel gate
+        let f = hetero(8, 2400, 14);
+        let kept: Vec<usize> = (0..2400).collect();
+        let c = FwqConfig::paper_default(8, 6.0 * 8.0 * 2400.0);
+        let v = ColView::unscaled(&f, &kept);
+        let encode = || {
+            let mut w = BitWriter::new();
+            let mut fs = FwqScratch::default();
+            let mut recon = Matrix::zeros(0, 0);
+            fwq_encode_view_recon(&v, &c, &mut w, &mut fs, &mut recon);
+            (w.into_bytes(), recon)
+        };
+        crate::util::par::set_threads(1);
+        let (b1, r1) = encode();
+        crate::util::par::set_threads(4);
+        let (b4, r4) = encode();
+        crate::util::par::set_threads(0);
+        assert_eq!(b1, b4);
+        assert_eq!(r1, r4);
+        assert_eq!(r1, scatter_to_source(&fwq_decode(&b1, &c), &kept, 2400));
     }
 }

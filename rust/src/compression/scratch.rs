@@ -52,6 +52,9 @@ pub struct WireScratch {
     pub stage: Matrix,
     /// blob staging for `read_blob_into`
     pub blob: Vec<u8>,
+    /// symbol staging for the streaming scalar-quantizer paths
+    /// (`scalar_encode_into` / `scalar_decode_into`)
+    pub scalar_syms: Vec<u64>,
     /// all-zero σ fallback for codecs whose dropout ignores the statistics
     /// (the worker passes `stats = None` when `needs_sigma` is false)
     pub sigma_zeros: Vec<f32>,

@@ -58,6 +58,11 @@ pub struct TrainConfig {
     /// worker threads for the parallel runtime; 0 = unset (the pool is left
     /// as configured, which defaults to one worker per available core)
     pub threads: usize,
+    /// SIMD kernel dispatch: "auto" (runtime-detect, the default), "avx2"
+    /// (request the vector table; degrades to scalar off-x86), or "off"
+    /// (pin the scalar kernels). Both tables are bit-identical — this knob
+    /// trades speed only, never trajectories.
+    pub simd: String,
     /// bounded-staleness window S in rounds: a device may run up to S rounds
     /// ahead of the slowest outstanding step (≤ S·K protocol steps in
     /// flight). 0 = strict sequential round-robin — byte-identical metrics
@@ -139,6 +144,7 @@ impl TrainConfig {
             link_latency_s: 0.0,
             metrics_path: String::new(),
             threads: 0,
+            simd: "auto".to_string(),
             staleness: 0,
             concurrent_devices: 0,
             per_device_opt: false,
@@ -191,6 +197,14 @@ impl TrainConfig {
         self.eval_every = args.get_usize("eval-every", self.eval_every);
         self.link_capacity_bps = args.get_f64("capacity-bps", self.link_capacity_bps);
         self.threads = args.get_usize("threads", self.threads);
+        // only an explicit flag touches the global dispatch mode — the
+        // default must not clobber an SPLITFC_SIMD env resolution
+        if let Some(v) = args.get("simd") {
+            if let Err(e) = crate::util::simd::configure(v) {
+                bail!("{e}");
+            }
+            self.simd = v.to_string();
+        }
         self.staleness = args.get_usize("staleness", self.staleness);
         self.concurrent_devices =
             args.get_usize("concurrent-devices", self.concurrent_devices);
@@ -268,6 +282,7 @@ impl TrainConfig {
             ("n_train", Json::num(self.n_train as f64)),
             ("n_test", Json::num(self.n_test as f64)),
             ("threads", Json::num(self.threads as f64)),
+            ("simd", Json::str(self.simd.clone())),
             ("staleness", Json::num(self.staleness as f64)),
             ("concurrent_devices", Json::num(self.concurrent_devices as f64)),
             ("per_device_opt", Json::Bool(self.per_device_opt)),
@@ -372,6 +387,23 @@ mod tests {
         let j = c.to_json();
         assert_eq!(j.req("q_ep").as_usize(), Some(64));
         assert_eq!(j.req("noise_seed").as_usize(), Some(12345));
+    }
+
+    #[test]
+    fn simd_flag_plumbs_through() {
+        let mut c = TrainConfig::for_preset("tiny");
+        assert_eq!(c.simd, "auto");
+        // pin, then restore auto — the knob mutates process-global dispatch
+        c.apply_overrides(&args("x --simd off")).unwrap();
+        assert_eq!(c.simd, "off");
+        assert_eq!(crate::util::simd::mode(), crate::util::simd::SimdMode::Off);
+        assert_eq!(c.to_json().req("simd").as_str(), Some("off"));
+        c.apply_overrides(&args("x --simd auto")).unwrap();
+        assert_eq!(
+            crate::util::simd::mode() == crate::util::simd::SimdMode::Avx2,
+            crate::util::simd::avx2_available()
+        );
+        assert!(c.apply_overrides(&args("x --simd sse9")).is_err());
     }
 
     #[test]

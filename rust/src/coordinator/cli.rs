@@ -17,6 +17,7 @@ USAGE:
                 [--rounds T] [--devices K]
                 [--seed N] [--eval-every E] [--metrics file.jsonl]
                 [--backend native|pjrt] [--artifacts DIR] [--threads N]
+                [--simd off|avx2|auto]
                 [--staleness S] [--concurrent-devices N] [--per-device-opt]
                 [--transport inproc|tcp] [--listen ADDR] [--devices-remote R]
                 [--fading-sigma X] [--scenario SPEC] [--rpc-deadline-s X]
@@ -50,6 +51,13 @@ SCHEMES (resolved through the codec registry; `codec-smoke` lists all):
   Out-of-core codecs registered via compression::register_codec resolve
   the same way. --q-ep / --noise-seed pin the FWQ endpoint levels and the
   NoisyQuant noise stream for reproducible runs.
+
+PERFORMANCE:
+  --simd off|avx2|auto    kernel dispatch for the hot loops (matmul, column
+                          stats, FWQ symbol pack/unpack). auto (default)
+                          runtime-detects AVX2; off pins the portable scalar
+                          kernels. The tables are bit-identical — metrics do
+                          not change, only speed (env: SPLITFC_SIMD)
 
 SCHEDULING:
   --staleness S           bounded-staleness window in rounds; 0 (default) is
@@ -110,6 +118,14 @@ pub fn main() {
     // untouched default is one worker per core
     if args.get("threads").is_some() {
         crate::util::par::set_threads(args.get_usize("threads", 0));
+    }
+    // pin SIMD dispatch before any kernel runs; subcommands without a
+    // TrainConfig (experiments, codec-smoke, benches) honor it too
+    if let Some(v) = args.get("simd") {
+        if let Err(e) = crate::util::simd::configure(v) {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
     }
     let code = match args.subcommand() {
         Some("train") => cmd_train(&args),

@@ -10,7 +10,7 @@
 //! loops survive as `*_ref` — the correctness oracle for the property tests
 //! and the serial baseline the perf benches measure against.
 
-use crate::util::par;
+use crate::util::{par, simd};
 
 /// Rows of the left operand per register micro-kernel.
 const MR: usize = 4;
@@ -142,8 +142,34 @@ impl Matrix {
     /// `gather_cols` fused with a per-kept-column scale — the FWDP encode
     /// path (gather kept columns, apply 1/(1-p_j)) in a single pass.
     pub fn gather_cols_scaled(&self, idx: &[usize], scale: &[f32]) -> Matrix {
-        assert_eq!(idx.len(), scale.len());
         let mut out = Matrix::zeros(self.rows, idx.len());
+        self.gather_cols_scaled_into(idx, scale, &mut out);
+        out
+    }
+
+    /// [`Matrix::gather_cols`] into a caller-owned matrix (resized in place,
+    /// capacity reused) — the arena-backed scalar-codec staging path.
+    pub fn gather_cols_into(&self, idx: &[usize], out: &mut Matrix) {
+        out.rows = self.rows;
+        out.cols = idx.len();
+        out.data.clear();
+        out.data.resize(self.rows * idx.len(), 0.0);
+        for r in 0..self.rows {
+            let src = self.row(r);
+            let dst = &mut out.data[r * idx.len()..(r + 1) * idx.len()];
+            for (j, &c) in idx.iter().enumerate() {
+                dst[j] = src[c];
+            }
+        }
+    }
+
+    /// [`Matrix::gather_cols_scaled`] into a caller-owned matrix.
+    pub fn gather_cols_scaled_into(&self, idx: &[usize], scale: &[f32], out: &mut Matrix) {
+        assert_eq!(idx.len(), scale.len());
+        out.rows = self.rows;
+        out.cols = idx.len();
+        out.data.clear();
+        out.data.resize(self.rows * idx.len(), 0.0);
         for r in 0..self.rows {
             let src = self.row(r);
             let dst = &mut out.data[r * idx.len()..(r + 1) * idx.len()];
@@ -151,7 +177,6 @@ impl Matrix {
                 dst[j] = src[c] * s;
             }
         }
-        out
     }
 
     /// Inverse of `gather_cols`: place our columns at positions `idx` of a
@@ -236,6 +261,24 @@ impl Matrix {
         let a = &self.data;
         let b = &other.data;
         let rb = block_rows(n, n * m * p);
+        if simd::mode() == simd::SimdMode::Avx2 {
+            // the nt inner loop runs along the reduction dimension, which the
+            // bit-exactness contract forbids vectorizing. Transpose `other`
+            // once and run the A·B kernel instead: out[i][j] accumulates its
+            // k-terms ascending from 0.0 either way (the nt `s += x*b[k]`
+            // chain and the mm `o += x*bk[j]` chain are the same sequence,
+            // KC tiling included), so this path is bit-identical to nt_block.
+            let mut bt = vec![0.0f32; m * p];
+            for (rr, brow) in b.chunks_exact(m).enumerate() {
+                for (kk, &v) in brow.iter().enumerate() {
+                    bt[kk * p + rr] = v;
+                }
+            }
+            par::par_chunks_mut(&mut out.data, rb * p, |blk, chunk| {
+                mm_block(a, m, &bt, p, chunk, blk * rb);
+            });
+            return out;
+        }
         par::par_chunks_mut(&mut out.data, rb * p, |blk, chunk| {
             nt_block(a, m, b, p, chunk, blk * rb);
         });
@@ -377,6 +420,7 @@ impl Matrix {
 /// output rows. All five slices have length `p`, so the indexing bounds-check
 /// folds away and the loop vectorizes.
 fn mm_block(a: &[f32], m: usize, b: &[f32], p: usize, out: &mut [f32], i0: usize) {
+    let kr = simd::kernels();
     let rows = out.len() / p;
     for k0 in (0..m).step_by(KC) {
         let k1 = (k0 + KC).min(m);
@@ -394,12 +438,7 @@ fn mm_block(a: &[f32], m: usize, b: &[f32], p: usize, out: &mut [f32], i0: usize
                 a0.iter().zip(a1).zip(a2).zip(a3).enumerate()
             {
                 let bk = &b[(k0 + k) * p..(k0 + k + 1) * p];
-                for j in 0..p {
-                    o0[j] += x0 * bk[j];
-                    o1[j] += x1 * bk[j];
-                    o2[j] += x2 * bk[j];
-                    o3[j] += x3 * bk[j];
-                }
+                (kr.mm4)(o0, o1, o2, o3, [x0, x1, x2, x3], bk);
             }
             i += MR;
         }
@@ -409,9 +448,7 @@ fn mm_block(a: &[f32], m: usize, b: &[f32], p: usize, out: &mut [f32], i0: usize
             let orow = &mut out[ii * p..(ii + 1) * p];
             for (k, &x) in ai.iter().enumerate() {
                 let bk = &b[(k0 + k) * p..(k0 + k + 1) * p];
-                for (o, &bj) in orow.iter_mut().zip(bk) {
-                    *o += x * bj;
-                }
+                (kr.axpy)(orow, x, bk);
             }
         }
     }
@@ -421,6 +458,7 @@ fn mm_block(a: &[f32], m: usize, b: &[f32], p: usize, out: &mut [f32], i0: usize
 /// columns `i0..` of the n×m `a`. Four rows of `a`/`b` are consumed per
 /// pass, so each output row is rewritten n/4 times instead of n.
 fn tn_block(a: &[f32], m: usize, b: &[f32], p: usize, out: &mut [f32], i0: usize, n: usize) {
+    let kr = simd::kernels();
     let rows = out.len() / p;
     let mut r = 0;
     while r + MR <= n {
@@ -434,9 +472,7 @@ fn tn_block(a: &[f32], m: usize, b: &[f32], p: usize, out: &mut [f32], i0: usize
             let x2 = a[(r + 2) * m + i0 + i];
             let x3 = a[(r + 3) * m + i0 + i];
             let orow = &mut out[i * p..(i + 1) * p];
-            for j in 0..p {
-                orow[j] += x0 * b0[j] + x1 * b1[j] + x2 * b2[j] + x3 * b3[j];
-            }
+            (kr.tn4)(orow, [x0, x1, x2, x3], b0, b1, b2, b3);
         }
         r += MR;
     }
@@ -445,9 +481,7 @@ fn tn_block(a: &[f32], m: usize, b: &[f32], p: usize, out: &mut [f32], i0: usize
         for i in 0..rows {
             let x = a[rr * m + i0 + i];
             let orow = &mut out[i * p..(i + 1) * p];
-            for (o, &bj) in orow.iter_mut().zip(brow) {
-                *o += x * bj;
-            }
+            (kr.axpy)(orow, x, brow);
         }
     }
 }

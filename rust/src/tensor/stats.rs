@@ -72,19 +72,12 @@ fn stats_for_cols(m: &Matrix, c0: usize, c1: usize) -> ColumnStats {
     let mut mx = vec![f32::NEG_INFINITY; d];
     let mut sum = vec![0.0f64; d];
     let mut sumsq = vec![0.0f64; d];
+    // lanes = feature columns: per column the fold order is row order in
+    // both kernel tables, so SIMD on/off is bit-identical
+    let kr = crate::util::simd::kernels();
     for r in 0..b {
         let row = &m.row(r)[c0..c1];
-        for c in 0..d {
-            let v = row[c];
-            if v < mn[c] {
-                mn[c] = v;
-            }
-            if v > mx[c] {
-                mx[c] = v;
-            }
-            sum[c] += v as f64;
-            sumsq[c] += (v as f64) * (v as f64);
-        }
+        (kr.stats_row)(row, &mut mn, &mut mx, &mut sum, &mut sumsq);
     }
     let mut mean = vec![0.0f32; d];
     let mut std = vec![0.0f32; d];

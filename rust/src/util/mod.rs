@@ -8,6 +8,7 @@ pub mod json;
 pub mod logging;
 pub mod par;
 pub mod rng;
+pub mod simd;
 pub mod sort;
 
 pub use cli::Args;

@@ -1,0 +1,552 @@
+//! Runtime-dispatched SIMD kernels for the four hottest inner loops:
+//! the MR-blocked matmul micro-kernels, per-row `column_stats`
+//! accumulation, and the FWQ symbol quantize / dequantize columns.
+//!
+//! # The bit-exactness contract
+//!
+//! Every kernel here has two implementations — a portable scalar loop (the
+//! reference) and an AVX2 path (`std::arch` x86_64 intrinsics behind
+//! `is_x86_feature_detected!`) — and the two are **bit-identical**, not just
+//! close. That holds because the vector paths obey two rules:
+//!
+//! 1. **Lanes run across independent outputs** (output columns, feature
+//!    columns, symbols) — never across a reduction dimension. Each lane
+//!    performs the scalar op sequence for its output verbatim, so no
+//!    floating-point reassociation happens.
+//! 2. **Separate mul + add, never FMA.** IEEE-754 add/sub/mul/div/convert
+//!    are exactly rounded, so per-lane results match the scalar ops bit for
+//!    bit; a fused multiply-add would not.
+//!
+//! The one non-trivial emulation is `f64::round` (half away from zero),
+//! which AVX2 lacks: we round to nearest-even and apply a conditioned
+//! half-step fix-up (see `fwq_quant_col`). Trajectory-level determinism is
+//! enforced by `splitfc metrics-diff` over full training runs with
+//! `SPLITFC_SIMD=off` vs `avx2` (ci.sh), plus the kernel-parity property
+//! tests in `rust/tests/prop_simd.rs`.
+//!
+//! # Dispatch
+//!
+//! The mode resolves **once** (first use) from the `SPLITFC_SIMD` env knob
+//! (`off` | `avx2` | anything-else ⇒ auto-detect), overridable via
+//! [`force_mode`] / [`configure`] (the `--simd` CLI flag). [`kernels`]
+//! returns a `'static` function-pointer table; hot loops hoist it out of
+//! their inner loops. On non-x86_64 targets the scalar table is the only
+//! one that exists.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::compression::quant::{dequant, quant_code};
+
+/// Which kernel table is active. The two modes produce bit-identical
+/// results; the choice is purely about speed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Portable scalar kernels only.
+    Off,
+    /// AVX2 vector kernels (x86_64, runtime-detected).
+    Avx2,
+}
+
+/// 0 = unresolved, 1 = off, 2 = avx2.
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+fn detect() -> SimdMode {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return SimdMode::Avx2;
+        }
+    }
+    SimdMode::Off
+}
+
+/// True when this host can run the AVX2 kernel table (runtime detection,
+/// independent of the currently forced mode).
+pub fn avx2_available() -> bool {
+    detect() == SimdMode::Avx2
+}
+
+/// The active mode, resolved once: `SPLITFC_SIMD=off` pins the scalar
+/// kernels, `=avx2` requests the vector table (degrading to `Off` when the
+/// host lacks AVX2), anything else auto-detects.
+pub fn mode() -> SimdMode {
+    match MODE.load(Ordering::Relaxed) {
+        1 => SimdMode::Off,
+        2 => SimdMode::Avx2,
+        _ => {
+            let m = match std::env::var("SPLITFC_SIMD").ok().as_deref() {
+                Some("off") => SimdMode::Off,
+                _ => detect(),
+            };
+            force_mode(m);
+            m
+        }
+    }
+}
+
+/// Pin the mode, overriding env/detection (tests, benches, `--simd`).
+/// Callers must not force [`SimdMode::Avx2`] on hosts where
+/// [`avx2_available`] is false.
+pub fn force_mode(m: SimdMode) {
+    MODE.store(
+        match m {
+            SimdMode::Off => 1,
+            SimdMode::Avx2 => 2,
+        },
+        Ordering::Relaxed,
+    );
+}
+
+/// Apply a `--simd off|avx2|auto` knob (config/CLI). `avx2` degrades to
+/// the scalar table on hosts without AVX2 rather than erroring: the two
+/// paths are bit-identical, so the request is about speed, not semantics.
+pub fn configure(s: &str) -> Result<(), String> {
+    match s {
+        "off" => force_mode(SimdMode::Off),
+        "avx2" | "auto" => force_mode(detect()),
+        other => return Err(format!("unknown --simd mode {other:?} (expected off|avx2|auto)")),
+    }
+    Ok(())
+}
+
+/// A strided source column for the FWQ symbol kernels: element `r` lives
+/// at `src[offset + r * stride]`, optionally scaled by a per-column factor
+/// (the σ-normalization of `ColView::scaled`) — the f32 multiply happens
+/// *before* widening to f64, exactly like `ColView::at`.
+#[derive(Clone, Copy)]
+pub struct ColSrc<'a> {
+    pub src: &'a [f32],
+    pub offset: usize,
+    pub stride: usize,
+    pub scale: Option<f32>,
+}
+
+impl ColSrc<'_> {
+    #[inline]
+    fn at(&self, r: usize) -> f32 {
+        let x = self.src[self.offset + r * self.stride];
+        match self.scale {
+            Some(s) => x * s,
+            None => x,
+        }
+    }
+}
+
+/// The dispatch table. All six kernels are leaf inner loops; the blocked /
+/// tiled / threaded structure around them lives at the call sites and is
+/// identical for both tables.
+pub struct Kernels {
+    /// matmul micro-kernel: `o{0..3}[j] += x[{0..3}] * bk[j]` over all `j`.
+    pub mm4: fn(&mut [f32], &mut [f32], &mut [f32], &mut [f32], [f32; 4], &[f32]),
+    /// single-row update: `o[j] += x * b[j]` (matmul/tn tail rows).
+    pub axpy: fn(&mut [f32], f32, &[f32]),
+    /// transposed-A micro-kernel:
+    /// `o[j] += x[0]*b0[j] + x[1]*b1[j] + x[2]*b2[j] + x[3]*b3[j]`.
+    pub tn4: fn(&mut [f32], [f32; 4], &[f32], &[f32], &[f32], &[f32]),
+    /// one row of `column_stats`: per column `c`, fold `row[c]` into
+    /// f32 min/max and f64 sum/sum-of-squares accumulators.
+    pub stats_row: fn(&[f32], &mut [f32], &mut [f32], &mut [f64], &mut [f64]),
+    /// FWQ symbol quantize of one strided column:
+    /// `out[r] = quant_code(col.at(r) as f64, lo, span, q)` for `r < rows`.
+    pub fwq_quant_col: fn(ColSrc, usize, f64, f64, u64, &mut [u64]),
+    /// FWQ symbol dequantize into a strided destination column:
+    /// `dst[offset + r*stride] = dequant(syms[r], lo, span, q)`.
+    pub fwq_dequant_col: fn(&[u64], f64, f64, u64, &mut [f32], usize, usize),
+}
+
+/// The table for the active [`mode`]. Resolve once per blocked kernel, not
+/// per element.
+#[inline]
+pub fn kernels() -> &'static Kernels {
+    kernels_for(mode())
+}
+
+/// The table for an explicit mode (benches and parity tests compare the
+/// two tables head to head without touching the global mode).
+pub fn kernels_for(m: SimdMode) -> &'static Kernels {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if m == SimdMode::Avx2 {
+            return &AVX2;
+        }
+    }
+    let _ = m;
+    &SCALAR
+}
+
+static SCALAR: Kernels = Kernels {
+    mm4: mm4_scalar,
+    axpy: axpy_scalar,
+    tn4: tn4_scalar,
+    stats_row: stats_row_scalar,
+    fwq_quant_col: fwq_quant_col_scalar,
+    fwq_dequant_col: fwq_dequant_col_scalar,
+};
+
+// ---- scalar kernels: the portable reference op sequences ----
+
+fn mm4_scalar(o0: &mut [f32], o1: &mut [f32], o2: &mut [f32], o3: &mut [f32], x: [f32; 4], bk: &[f32]) {
+    for (j, &b) in bk.iter().enumerate() {
+        o0[j] += x[0] * b;
+        o1[j] += x[1] * b;
+        o2[j] += x[2] * b;
+        o3[j] += x[3] * b;
+    }
+}
+
+fn axpy_scalar(o: &mut [f32], x: f32, b: &[f32]) {
+    for (o, &bj) in o.iter_mut().zip(b) {
+        *o += x * bj;
+    }
+}
+
+fn tn4_scalar(o: &mut [f32], x: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) {
+    for j in 0..o.len() {
+        o[j] += x[0] * b0[j] + x[1] * b1[j] + x[2] * b2[j] + x[3] * b3[j];
+    }
+}
+
+fn stats_row_scalar(row: &[f32], mn: &mut [f32], mx: &mut [f32], sum: &mut [f64], sumsq: &mut [f64]) {
+    for (c, &v) in row.iter().enumerate() {
+        if v < mn[c] {
+            mn[c] = v;
+        }
+        if v > mx[c] {
+            mx[c] = v;
+        }
+        sum[c] += v as f64;
+        sumsq[c] += (v as f64) * (v as f64);
+    }
+}
+
+fn fwq_quant_col_scalar(col: ColSrc, rows: usize, lo: f64, span: f64, q: u64, out: &mut [u64]) {
+    for (r, o) in out[..rows].iter_mut().enumerate() {
+        *o = quant_code(col.at(r) as f64, lo, span, q);
+    }
+}
+
+fn fwq_dequant_col_scalar(
+    syms: &[u64],
+    lo: f64,
+    span: f64,
+    q: u64,
+    dst: &mut [f32],
+    offset: usize,
+    stride: usize,
+) {
+    for (r, &s) in syms.iter().enumerate() {
+        dst[offset + r * stride] = dequant(s, lo, span, q);
+    }
+}
+
+// ---- AVX2 kernels (x86_64 only; selected strictly after runtime detection) ----
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Kernels = Kernels {
+    mm4: avx2::mm4,
+    axpy: avx2::axpy,
+    tn4: avx2::tn4,
+    stats_row: avx2::stats_row,
+    fwq_quant_col: avx2::fwq_quant_col,
+    fwq_dequant_col: avx2::fwq_dequant_col,
+};
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::ColSrc;
+    use std::arch::x86_64::*;
+
+    // Safe shims: `#[target_feature]` fns cannot coerce to fn pointers, so
+    // each table entry is a plain fn that enters the vectorized body.
+    // SAFETY (all shims): the AVX2 table is only reachable through
+    // `kernels_for(SimdMode::Avx2)`, which callers select after
+    // `is_x86_feature_detected!("avx2")` (see `mode` / `avx2_available`).
+
+    pub(super) fn mm4(o0: &mut [f32], o1: &mut [f32], o2: &mut [f32], o3: &mut [f32], x: [f32; 4], bk: &[f32]) {
+        unsafe { mm4_impl(o0, o1, o2, o3, x, bk) }
+    }
+
+    pub(super) fn axpy(o: &mut [f32], x: f32, b: &[f32]) {
+        unsafe { axpy_impl(o, x, b) }
+    }
+
+    pub(super) fn tn4(o: &mut [f32], x: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) {
+        unsafe { tn4_impl(o, x, b0, b1, b2, b3) }
+    }
+
+    pub(super) fn stats_row(row: &[f32], mn: &mut [f32], mx: &mut [f32], sum: &mut [f64], sumsq: &mut [f64]) {
+        unsafe { stats_row_impl(row, mn, mx, sum, sumsq) }
+    }
+
+    pub(super) fn fwq_quant_col(col: ColSrc, rows: usize, lo: f64, span: f64, q: u64, out: &mut [u64]) {
+        unsafe { fwq_quant_col_impl(col, rows, lo, span, q, out) }
+    }
+
+    pub(super) fn fwq_dequant_col(
+        syms: &[u64],
+        lo: f64,
+        span: f64,
+        q: u64,
+        dst: &mut [f32],
+        offset: usize,
+        stride: usize,
+    ) {
+        unsafe { fwq_dequant_col_impl(syms, lo, span, q, dst, offset, stride) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn mm4_impl(o0: &mut [f32], o1: &mut [f32], o2: &mut [f32], o3: &mut [f32], x: [f32; 4], bk: &[f32]) {
+        let p = bk.len();
+        let x0 = _mm256_set1_ps(x[0]);
+        let x1 = _mm256_set1_ps(x[1]);
+        let x2 = _mm256_set1_ps(x[2]);
+        let x3 = _mm256_set1_ps(x[3]);
+        let mut j = 0usize;
+        // lanes = output columns; per lane this is exactly `o += x * b`
+        // (separate mul + add: both exactly rounded, so bit-equal to scalar)
+        while j + 8 <= p {
+            let b = _mm256_loadu_ps(bk.as_ptr().add(j));
+            _mm256_storeu_ps(
+                o0.as_mut_ptr().add(j),
+                _mm256_add_ps(_mm256_loadu_ps(o0.as_ptr().add(j)), _mm256_mul_ps(x0, b)),
+            );
+            _mm256_storeu_ps(
+                o1.as_mut_ptr().add(j),
+                _mm256_add_ps(_mm256_loadu_ps(o1.as_ptr().add(j)), _mm256_mul_ps(x1, b)),
+            );
+            _mm256_storeu_ps(
+                o2.as_mut_ptr().add(j),
+                _mm256_add_ps(_mm256_loadu_ps(o2.as_ptr().add(j)), _mm256_mul_ps(x2, b)),
+            );
+            _mm256_storeu_ps(
+                o3.as_mut_ptr().add(j),
+                _mm256_add_ps(_mm256_loadu_ps(o3.as_ptr().add(j)), _mm256_mul_ps(x3, b)),
+            );
+            j += 8;
+        }
+        while j < p {
+            let b = bk[j];
+            o0[j] += x[0] * b;
+            o1[j] += x[1] * b;
+            o2[j] += x[2] * b;
+            o3[j] += x[3] * b;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_impl(o: &mut [f32], x: f32, b: &[f32]) {
+        let p = o.len().min(b.len());
+        let xv = _mm256_set1_ps(x);
+        let mut j = 0usize;
+        while j + 8 <= p {
+            let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+            _mm256_storeu_ps(
+                o.as_mut_ptr().add(j),
+                _mm256_add_ps(_mm256_loadu_ps(o.as_ptr().add(j)), _mm256_mul_ps(xv, bv)),
+            );
+            j += 8;
+        }
+        while j < p {
+            o[j] += x * b[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn tn4_impl(o: &mut [f32], x: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) {
+        let p = o.len();
+        let x0 = _mm256_set1_ps(x[0]);
+        let x1 = _mm256_set1_ps(x[1]);
+        let x2 = _mm256_set1_ps(x[2]);
+        let x3 = _mm256_set1_ps(x[3]);
+        let mut j = 0usize;
+        // per lane: o + (((x0*b0 + x1*b1) + x2*b2) + x3*b3) — the scalar
+        // expression's exact association
+        while j + 8 <= p {
+            let t = _mm256_add_ps(
+                _mm256_mul_ps(x0, _mm256_loadu_ps(b0.as_ptr().add(j))),
+                _mm256_mul_ps(x1, _mm256_loadu_ps(b1.as_ptr().add(j))),
+            );
+            let t = _mm256_add_ps(t, _mm256_mul_ps(x2, _mm256_loadu_ps(b2.as_ptr().add(j))));
+            let t = _mm256_add_ps(t, _mm256_mul_ps(x3, _mm256_loadu_ps(b3.as_ptr().add(j))));
+            _mm256_storeu_ps(
+                o.as_mut_ptr().add(j),
+                _mm256_add_ps(_mm256_loadu_ps(o.as_ptr().add(j)), t),
+            );
+            j += 8;
+        }
+        while j < p {
+            o[j] += x[0] * b0[j] + x[1] * b1[j] + x[2] * b2[j] + x[3] * b3[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn stats_row_impl(row: &[f32], mn: &mut [f32], mx: &mut [f32], sum: &mut [f64], sumsq: &mut [f64]) {
+        let d = row.len();
+        let mut c = 0usize;
+        // MINPS/MAXPS return the second operand on NaN or equality, which is
+        // exactly the scalar `if v < mn { mn = v }` / `if v > mx { mx = v }`
+        // keep-old behavior (including -0.0 vs 0.0 and NaN inputs)
+        while c + 4 <= d {
+            let v = _mm_loadu_ps(row.as_ptr().add(c));
+            _mm_storeu_ps(mn.as_mut_ptr().add(c), _mm_min_ps(v, _mm_loadu_ps(mn.as_ptr().add(c))));
+            _mm_storeu_ps(mx.as_mut_ptr().add(c), _mm_max_ps(v, _mm_loadu_ps(mx.as_ptr().add(c))));
+            let vd = _mm256_cvtps_pd(v);
+            _mm256_storeu_pd(
+                sum.as_mut_ptr().add(c),
+                _mm256_add_pd(_mm256_loadu_pd(sum.as_ptr().add(c)), vd),
+            );
+            _mm256_storeu_pd(
+                sumsq.as_mut_ptr().add(c),
+                _mm256_add_pd(_mm256_loadu_pd(sumsq.as_ptr().add(c)), _mm256_mul_pd(vd, vd)),
+            );
+            c += 4;
+        }
+        while c < d {
+            let v = row[c];
+            if v < mn[c] {
+                mn[c] = v;
+            }
+            if v > mx[c] {
+                mx[c] = v;
+            }
+            sum[c] += v as f64;
+            sumsq[c] += (v as f64) * (v as f64);
+            c += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn fwq_quant_col_impl(col: ColSrc, rows: usize, lo: f64, span: f64, q: u64, out: &mut [u64]) {
+        if span <= 0.0 || q < 2 {
+            for o in out[..rows].iter_mut() {
+                *o = 0;
+            }
+            return;
+        }
+        if q - 1 > i32::MAX as u64 {
+            // cvttpd_epi32 cannot produce codes past i32::MAX; level counts
+            // this large never occur under the 2^16/2^17 clamps, but stay
+            // correct anyway
+            super::fwq_quant_col_scalar(col, rows, lo, span, q, out);
+            return;
+        }
+        let s = col.scale.unwrap_or(1.0);
+        let vs = _mm_set1_ps(s);
+        let vlo = _mm256_set1_pd(lo);
+        let vspan = _mm256_set1_pd(span);
+        let vqm1 = _mm256_set1_pd((q - 1) as f64);
+        let half = _mm256_set1_pd(0.5);
+        let nhalf = _mm256_set1_pd(-0.5);
+        let one = _mm256_set1_pd(1.0);
+        let zero = _mm256_setzero_pd();
+        let mut r = 0usize;
+        while r + 4 <= rows {
+            let i = col.offset + r * col.stride;
+            let v = _mm_set_ps(
+                col.src[i + 3 * col.stride],
+                col.src[i + 2 * col.stride],
+                col.src[i + col.stride],
+                col.src[i],
+            );
+            // σ-scale in f32 before widening, exactly like `ColView::at`
+            let v = if col.scale.is_some() { _mm_mul_ps(v, vs) } else { v };
+            // t = (v - lo) / span * (q - 1): the scalar op order exactly
+            let t = _mm256_cvtps_pd(v);
+            let t = _mm256_mul_pd(_mm256_div_pd(_mm256_sub_pd(t, vlo), vspan), vqm1);
+            // f64::round (half AWAY from zero) from nearest-even + fix-up.
+            // d = t - rr is exact (Sterbenz for |t| >= 1, exact below 1,
+            // integral at/above 2^53), and the fix-up must be conditioned on
+            // the sign of t: at t=1.5 nearest-even already gives 2 (d=-0.5)
+            // and must NOT be decremented.
+            let rr = _mm256_round_pd::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(t);
+            let d = _mm256_sub_pd(t, rr);
+            let up = _mm256_and_pd(
+                _mm256_cmp_pd::<_CMP_EQ_OQ>(d, half),
+                _mm256_cmp_pd::<_CMP_GT_OQ>(t, zero),
+            );
+            let dn = _mm256_and_pd(
+                _mm256_cmp_pd::<_CMP_EQ_OQ>(d, nhalf),
+                _mm256_cmp_pd::<_CMP_LT_OQ>(t, zero),
+            );
+            let rr = _mm256_add_pd(rr, _mm256_and_pd(up, one));
+            let rr = _mm256_sub_pd(rr, _mm256_and_pd(dn, one));
+            // clamp in the float domain: maxpd(rr, 0) sends NaN to 0 exactly
+            // like `f64::max(NaN, 0.0)`, and min against q-1 matches the
+            // scalar `(t.max(0.0) as u64).min(q-1)` saturation for any
+            // overflow-range value; the clamped result is integral and
+            // <= i32::MAX, so truncating conversion is exact
+            let rr = _mm256_min_pd(_mm256_max_pd(rr, zero), vqm1);
+            let c = _mm256_cvttpd_epi32(rr);
+            let mut lanes = [0i32; 4];
+            _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, c);
+            out[r] = lanes[0] as u64;
+            out[r + 1] = lanes[1] as u64;
+            out[r + 2] = lanes[2] as u64;
+            out[r + 3] = lanes[3] as u64;
+            r += 4;
+        }
+        while r < rows {
+            out[r] = crate::compression::quant::quant_code(col.at(r) as f64, lo, span, q);
+            r += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn fwq_dequant_col_impl(
+        syms: &[u64],
+        lo: f64,
+        span: f64,
+        q: u64,
+        dst: &mut [f32],
+        offset: usize,
+        stride: usize,
+    ) {
+        let n = syms.len();
+        if q < 2 || span <= 0.0 {
+            let v = lo as f32;
+            let mut r = 0usize;
+            while r < n {
+                dst[offset + r * stride] = v;
+                r += 1;
+            }
+            return;
+        }
+        if q - 1 > i32::MAX as u64 {
+            super::fwq_dequant_col_scalar(syms, lo, span, q, dst, offset, stride);
+            return;
+        }
+        let vlo = _mm256_set1_pd(lo);
+        let vspan = _mm256_set1_pd(span);
+        let vqm1 = _mm256_set1_pd((q - 1) as f64);
+        let mut r = 0usize;
+        while r + 4 <= n {
+            // codes < q <= 2^31 so the i32 narrowing is lossless
+            let c = _mm_set_epi32(
+                syms[r + 3] as i32,
+                syms[r + 2] as i32,
+                syms[r + 1] as i32,
+                syms[r] as i32,
+            );
+            let cd = _mm256_cvtepi32_pd(c);
+            // lo + code * span / (q - 1): the scalar op order exactly;
+            // cvtpd_ps rounds to nearest like `as f32`
+            let val = _mm256_add_pd(vlo, _mm256_div_pd(_mm256_mul_pd(cd, vspan), vqm1));
+            let vf = _mm256_cvtpd_ps(val);
+            let mut lanes = [0f32; 4];
+            _mm_storeu_ps(lanes.as_mut_ptr(), vf);
+            let i = offset + r * stride;
+            dst[i] = lanes[0];
+            dst[i + stride] = lanes[1];
+            dst[i + 2 * stride] = lanes[2];
+            dst[i + 3 * stride] = lanes[3];
+            r += 4;
+        }
+        while r < n {
+            dst[offset + r * stride] = crate::compression::quant::dequant(syms[r], lo, span, q);
+            r += 1;
+        }
+    }
+}

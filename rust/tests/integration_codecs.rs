@@ -428,8 +428,10 @@ fn steady_state_codec_steps_are_allocation_free() {
     par::set_threads(1);
     let (f, stats, g) = fixtures();
     let down = CodecParams::new(B, D, 2.0);
-    // codecs whose sessions are fully arena-backed; scalar-quantizer rows
-    // (pq/eq/nq), tops and fedlite keep their allocating inner algorithms
+    // codecs whose sessions are fully arena-backed — including the
+    // scalar-quantizer splitfc rows (pq/eq/nq) now that their encode/decode
+    // streams through `scalar_{en,de}code_into`; tops and fedlite keep
+    // their allocating inner algorithms
     let zero_set = [
         "vanilla",
         "splitfc",
@@ -438,6 +440,9 @@ fn steady_state_codec_steps_are_allocation_free() {
         "splitfc-det",
         "splitfc-quant-only",
         "splitfc-no-mean",
+        "splitfc-ad+pq",
+        "splitfc-ad+eq",
+        "splitfc-ad+nq",
     ];
     for name in registered_names() {
         if name == "sign" {

@@ -1,0 +1,340 @@
+//! SIMD kernel parity: the AVX2 dispatch tables must be **bit-identical**
+//! to the scalar reference kernels — not merely close. Two layers:
+//!
+//! * whole-pipeline tests flip the global mode (`force_mode`) around full
+//!   `matmul` / `column_stats` / `fwq_encode` calls and compare outputs
+//!   bit for bit — these also pass trivially (Off vs Off) on hosts
+//!   without AVX2;
+//! * kernel-level tests pit `kernels_for(Off)` against
+//!   `kernels_for(Avx2)` head to head on crafted inputs (half-integer
+//!   rounding ties, NaN/±inf, denormals, ±0.0, degenerate spans, strided
+//!   columns, non-multiple-of-lane tails) — these are guarded by
+//!   `avx2_available()` because calling the AVX2 table on a host without
+//!   AVX2 is undefined behavior.
+//!
+//! Tests that touch the process-global mode serialize on a mutex and
+//! restore the previous mode even on panic, so the rest of the binary
+//! never observes a forced mode.
+
+use std::sync::Mutex;
+
+use splitfc::compression::{fwq_decode, fwq_encode, FwqConfig};
+use splitfc::tensor::{column_stats, Matrix};
+use splitfc::testkit::hetero_matrix;
+use splitfc::util::simd::{self, ColSrc, SimdMode};
+use splitfc::util::Rng;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with the global SIMD mode pinned to `m`, serialized against the
+/// other mode-flipping tests, restoring the prior mode afterwards (also on
+/// panic, so one failure doesn't cascade through the binary).
+fn with_mode<T>(m: SimdMode, f: impl FnOnce() -> T) -> T {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore(SimdMode);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            simd::force_mode(self.0);
+        }
+    }
+    let _restore = Restore(simd::mode());
+    simd::force_mode(m);
+    f()
+}
+
+/// The fastest mode this host can actually run.
+fn best_mode() -> SimdMode {
+    if simd::avx2_available() {
+        SimdMode::Avx2
+    } else {
+        SimdMode::Off
+    }
+}
+
+fn assert_bits_eq(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape mismatch");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: elem {i}: {x} vs {y}");
+    }
+}
+
+fn assert_close(a: &Matrix, b: &Matrix, tol: f32, what: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape mismatch");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "{what}: elem {i}: {x} vs {y}"
+        );
+    }
+}
+
+// ---- whole-pipeline bit-exactness across modes ----
+
+#[test]
+fn matmul_family_bit_exact_across_modes() {
+    // awkward shapes: odd columns, non-multiple-of-8 widths, tail rows
+    for &(m, k, p) in &[(1, 1, 1), (3, 5, 7), (4, 8, 16), (5, 9, 8), (13, 31, 17), (64, 33, 40)] {
+        let seed = (m * 1000 + k * 10 + p) as u64;
+        let a = hetero_matrix(m, k, seed);
+        let b = hetero_matrix(k, p, seed + 1);
+        let off = with_mode(SimdMode::Off, || a.matmul(&b));
+        let on = with_mode(best_mode(), || a.matmul(&b));
+        assert_bits_eq(&off, &on, &format!("matmul {m}x{k}·{k}x{p}"));
+        assert_close(&on, &a.matmul_ref(&b), 1e-4, "matmul vs ref");
+
+        let at = hetero_matrix(k, m, seed + 2);
+        let off = with_mode(SimdMode::Off, || at.matmul_tn(&b));
+        let on = with_mode(best_mode(), || at.matmul_tn(&b));
+        assert_bits_eq(&off, &on, &format!("matmul_tn {k}x{m}ᵀ·{k}x{p}"));
+        assert_close(&on, &at.matmul_tn_ref(&b), 1e-4, "matmul_tn vs ref");
+
+        let bt = hetero_matrix(p, k, seed + 3);
+        let off = with_mode(SimdMode::Off, || a.matmul_nt(&bt));
+        let on = with_mode(best_mode(), || a.matmul_nt(&bt));
+        assert_bits_eq(&off, &on, &format!("matmul_nt {m}x{k}·{p}x{k}ᵀ"));
+        assert_close(&on, &a.matmul_nt_ref(&bt), 1e-4, "matmul_nt vs ref");
+    }
+}
+
+#[test]
+fn column_stats_bit_exact_across_modes() {
+    // hetero has constant columns baked in (the 0-scale class); add a
+    // crafted matrix exercising denormals, ±0.0, and single-value columns
+    let mut cases = vec![hetero_matrix(16, 37, 11), hetero_matrix(8, 1030, 12), hetero_matrix(1, 9, 13)];
+    cases.push(Matrix::from_fn(6, 7, |r, c| match c {
+        0 => 1e-40,                                   // denormal column
+        1 => if r % 2 == 0 { -0.0 } else { 0.0 },     // signed-zero mix
+        2 => 3.25,                                    // constant (σ = 0)
+        3 => (r as f32 - 2.5) * 1e30,                 // huge magnitudes
+        4 => -(r as f32),                             // strictly decreasing
+        _ => (r as f32 * 0.1) - (c as f32),
+    }));
+    for (i, m) in cases.iter().enumerate() {
+        let off = with_mode(SimdMode::Off, || column_stats(m));
+        let on = with_mode(best_mode(), || column_stats(m));
+        for c in 0..m.cols {
+            assert_eq!(off.min[c].to_bits(), on.min[c].to_bits(), "case {i} min[{c}]");
+            assert_eq!(off.max[c].to_bits(), on.max[c].to_bits(), "case {i} max[{c}]");
+            assert_eq!(off.mean[c].to_bits(), on.mean[c].to_bits(), "case {i} mean[{c}]");
+            assert_eq!(off.std[c].to_bits(), on.std[c].to_bits(), "case {i} std[{c}]");
+        }
+    }
+}
+
+#[test]
+fn fwq_stream_and_decode_bit_exact_across_modes() {
+    let b = 16;
+    let d = 96;
+    let f = hetero_matrix(b, d, 21);
+    let configs = [
+        FwqConfig::paper_default(b, 4.0 * (b * d) as f64),
+        FwqConfig::paper_default(b, 0.5 * (b * d) as f64),
+        FwqConfig { q_fixed: Some(17), ..FwqConfig::paper_default(b, 4.0 * (b * d) as f64) },
+        FwqConfig { use_mean: false, ..FwqConfig::paper_default(b, 2.0 * (b * d) as f64) },
+    ];
+    for (i, cfg) in configs.iter().enumerate() {
+        let (bytes_off, bits_off, _) = with_mode(SimdMode::Off, || fwq_encode(&f, cfg));
+        let (bytes_on, bits_on, _) = with_mode(best_mode(), || fwq_encode(&f, cfg));
+        assert_eq!(bits_off, bits_on, "cfg {i}: bit length");
+        assert_eq!(bytes_off, bytes_on, "cfg {i}: encoded stream");
+        let dec_off = with_mode(SimdMode::Off, || fwq_decode(&bytes_off, cfg));
+        let dec_on = with_mode(best_mode(), || fwq_decode(&bytes_off, cfg));
+        assert_bits_eq(&dec_off, &dec_on, &format!("cfg {i}: decode"));
+    }
+    // degenerate: a constant matrix (every column collapses to its mean)
+    let flat = Matrix::from_fn(b, 24, |_, c| (c % 3) as f32);
+    let cfg = FwqConfig::paper_default(b, 2.0 * (b * 24) as f64);
+    let (bytes_off, _, _) = with_mode(SimdMode::Off, || fwq_encode(&flat, &cfg));
+    let (bytes_on, _, _) = with_mode(best_mode(), || fwq_encode(&flat, &cfg));
+    assert_eq!(bytes_off, bytes_on, "constant matrix stream");
+}
+
+#[test]
+fn configure_knob_parses_and_pins() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = simd::mode();
+    assert!(simd::configure("bogus").is_err());
+    simd::configure("off").unwrap();
+    assert_eq!(simd::mode(), SimdMode::Off);
+    simd::configure("auto").unwrap();
+    assert_eq!(simd::mode() == SimdMode::Avx2, simd::avx2_available());
+    simd::configure("avx2").unwrap(); // degrades to Off without AVX2
+    assert_eq!(simd::mode() == SimdMode::Avx2, simd::avx2_available());
+    simd::force_mode(prev);
+}
+
+// ---- kernel-level parity: AVX2 table vs scalar table, head to head ----
+// (no global state touched — the tables are compared directly)
+
+/// Crafted f32 inputs: rounding ties, specials, denormals, huge values.
+fn crafted_values() -> Vec<f32> {
+    vec![
+        0.5, -0.5, 1.5, -1.5, 2.5, -2.5, 3.5, 6.5, 0.499_999_97, -0.499_999_97, 0.0, -0.0, 1e-40,
+        -1e-40, 1e30, -1e30, f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 3.141_592_7, -2.718_281_8,
+    ]
+}
+
+#[test]
+fn fwq_quant_kernel_matches_scalar_oracle() {
+    if !simd::avx2_available() {
+        eprintln!("skipping: host lacks AVX2");
+        return;
+    }
+    let ks = simd::kernels_for(SimdMode::Off);
+    let ka = simd::kernels_for(SimdMode::Avx2);
+    let mut rng = Rng::new(31);
+    // lo = 0, span = q-1 makes t == v exactly: the half-integer inputs in
+    // crafted_values() then land precisely on round-half-away ties
+    let param_sets: &[(f64, f64, u64)] = &[
+        (0.0, 7.0, 8),
+        (-1.2, 3.7, 17),
+        (0.25, 1.0, 2),
+        (-4.0, 8.0, 256),
+        (-1.0, 2.0, 65_536),
+        (0.0, 0.0, 8),  // degenerate span
+        (2.0, -1.0, 8), // negative span
+        (0.0, 1.0, 1),  // q < 2
+    ];
+    for &(lo, span, q) in param_sets {
+        for &rows in &[1usize, 3, 4, 5, 7, 8, 31, 100] {
+            for &(offset, stride, scale) in
+                &[(0usize, 1usize, None), (3, 5, None), (2, 3, Some(0.3f32)), (0, 1, Some(2.5))]
+            {
+                let mut src = vec![0.0f32; offset + rows * stride + 1];
+                let crafted = crafted_values();
+                for (i, v) in src.iter_mut().enumerate() {
+                    *v = if i % 3 == 0 {
+                        crafted[i % crafted.len()]
+                    } else {
+                        rng.normal_f32(0.0, 2.0)
+                    };
+                }
+                let col = ColSrc { src: &src, offset, stride, scale };
+                let mut out_s = vec![u64::MAX; rows];
+                let mut out_a = vec![u64::MAX; rows];
+                (ks.fwq_quant_col)(col, rows, lo, span, q, &mut out_s);
+                (ka.fwq_quant_col)(col, rows, lo, span, q, &mut out_a);
+                assert_eq!(
+                    out_s, out_a,
+                    "quant mismatch: lo={lo} span={span} q={q} rows={rows} offset={offset} stride={stride} scale={scale:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fwq_dequant_kernel_matches_scalar_oracle() {
+    if !simd::avx2_available() {
+        eprintln!("skipping: host lacks AVX2");
+        return;
+    }
+    let ks = simd::kernels_for(SimdMode::Off);
+    let ka = simd::kernels_for(SimdMode::Avx2);
+    let param_sets: &[(f64, f64, u64)] =
+        &[(0.0, 7.0, 8), (-1.2, 3.7, 17), (0.25, 1.0, 2), (-4.0, 8.0, 256), (-1.0, 2.0, 65_536), (0.0, 0.0, 8), (5.0, 1.0, 1)];
+    for &(lo, span, q) in param_sets {
+        for &n in &[1usize, 2, 4, 5, 7, 8, 9, 33] {
+            let syms: Vec<u64> = (0..n as u64).map(|i| (i * 7919) % q.max(1)).collect();
+            for &(offset, stride) in &[(0usize, 1usize), (2, 3)] {
+                let mut dst_s = vec![f32::NAN; offset + n * stride + 1];
+                let mut dst_a = dst_s.clone();
+                (ks.fwq_dequant_col)(&syms, lo, span, q, &mut dst_s, offset, stride);
+                (ka.fwq_dequant_col)(&syms, lo, span, q, &mut dst_a, offset, stride);
+                for (i, (x, y)) in dst_s.iter().zip(&dst_a).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "dequant mismatch at {i}: lo={lo} span={span} q={q} n={n} offset={offset} stride={stride}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn matmul_micro_kernels_match_scalar() {
+    if !simd::avx2_available() {
+        eprintln!("skipping: host lacks AVX2");
+        return;
+    }
+    let ks = simd::kernels_for(SimdMode::Off);
+    let ka = simd::kernels_for(SimdMode::Avx2);
+    let mut rng = Rng::new(47);
+    let mut gen = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect() };
+    for p in 0..=33 {
+        let bk = gen(p);
+        let (b1, b2, b3) = (gen(p), gen(p), gen(p));
+        let x = [0.7f32, -1.3, 0.0, 2.5];
+        let base = gen(p);
+
+        let mut rows_s: Vec<Vec<f32>> = (0..4).map(|_| base.clone()).collect();
+        let mut rows_a = rows_s.clone();
+        {
+            let (s0, rest) = rows_s.split_at_mut(1);
+            let (s1, rest) = rest.split_at_mut(1);
+            let (s2, s3) = rest.split_at_mut(1);
+            (ks.mm4)(&mut s0[0], &mut s1[0], &mut s2[0], &mut s3[0], x, &bk);
+        }
+        {
+            let (s0, rest) = rows_a.split_at_mut(1);
+            let (s1, rest) = rest.split_at_mut(1);
+            let (s2, s3) = rest.split_at_mut(1);
+            (ka.mm4)(&mut s0[0], &mut s1[0], &mut s2[0], &mut s3[0], x, &bk);
+        }
+        for r in 0..4 {
+            for j in 0..p {
+                assert_eq!(rows_s[r][j].to_bits(), rows_a[r][j].to_bits(), "mm4 p={p} r={r} j={j}");
+            }
+        }
+
+        let mut o_s = base.clone();
+        let mut o_a = base.clone();
+        (ks.axpy)(&mut o_s, -0.9, &bk);
+        (ka.axpy)(&mut o_a, -0.9, &bk);
+        for j in 0..p {
+            assert_eq!(o_s[j].to_bits(), o_a[j].to_bits(), "axpy p={p} j={j}");
+        }
+
+        let mut o_s = base.clone();
+        let mut o_a = base;
+        (ks.tn4)(&mut o_s, x, &bk, &b1, &b2, &b3);
+        (ka.tn4)(&mut o_a, x, &bk, &b1, &b2, &b3);
+        for j in 0..p {
+            assert_eq!(o_s[j].to_bits(), o_a[j].to_bits(), "tn4 p={p} j={j}");
+        }
+    }
+}
+
+#[test]
+fn stats_row_kernel_matches_scalar() {
+    if !simd::avx2_available() {
+        eprintln!("skipping: host lacks AVX2");
+        return;
+    }
+    let ks = simd::kernels_for(SimdMode::Off);
+    let ka = simd::kernels_for(SimdMode::Avx2);
+    let mut rng = Rng::new(59);
+    let crafted = crafted_values();
+    for d in 0..=33 {
+        let row: Vec<f32> = (0..d)
+            .map(|i| if i % 4 == 0 { crafted[i % crafted.len()] } else { rng.normal_f32(0.0, 3.0) })
+            .collect();
+        let mn0 = vec![f32::INFINITY; d];
+        let mx0 = vec![f32::NEG_INFINITY; d];
+        let sum0: Vec<f64> = (0..d).map(|i| i as f64 * 0.25).collect();
+        let sq0: Vec<f64> = (0..d).map(|i| i as f64 * 0.5).collect();
+
+        let (mut mn_s, mut mx_s, mut sum_s, mut sq_s) = (mn0.clone(), mx0.clone(), sum0.clone(), sq0.clone());
+        let (mut mn_a, mut mx_a, mut sum_a, mut sq_a) = (mn0, mx0, sum0, sq0);
+        (ks.stats_row)(&row, &mut mn_s, &mut mx_s, &mut sum_s, &mut sq_s);
+        (ka.stats_row)(&row, &mut mn_a, &mut mx_a, &mut sum_a, &mut sq_a);
+        for c in 0..d {
+            assert_eq!(mn_s[c].to_bits(), mn_a[c].to_bits(), "stats min d={d} c={c}");
+            assert_eq!(mx_s[c].to_bits(), mx_a[c].to_bits(), "stats max d={d} c={c}");
+            assert_eq!(sum_s[c].to_bits(), sum_a[c].to_bits(), "stats sum d={d} c={c}");
+            assert_eq!(sq_s[c].to_bits(), sq_a[c].to_bits(), "stats sumsq d={d} c={c}");
+        }
+    }
+}
