@@ -91,6 +91,39 @@ echo "==> SIMD kernel bench (quick): BENCH_simd.json + 2x gates on AVX2 hosts"
 # loop when AVX2 is available; skips (and says so) elsewhere
 cargo bench --bench bench_simd -- --quick
 
+echo "==> checkpoint/resume smoke (SIGKILL mid-run, byte-identical --resume)"
+# 20 uninterrupted rounds vs 10 rounds + kill -9 + --resume into the same
+# metrics file, both over TCP loopback: metrics-diff must find zero drift
+CKDIR=/tmp/splitfc_ci_ckpt
+rm -rf "$CKDIR" /tmp/splitfc_ci_ckpt_ref.jsonl /tmp/splitfc_ci_ckpt_live.jsonl
+./target/release/splitfc train --preset tiny --devices 4 --rounds 20 \
+    --transport tcp --listen 127.0.0.1:0 \
+    --metrics /tmp/splitfc_ci_ckpt_ref.jsonl
+./target/release/splitfc train --preset tiny --devices 4 --rounds 20 \
+    --transport tcp --listen 127.0.0.1:0 \
+    --checkpoint-every 10 --checkpoint-dir "$CKDIR" \
+    --metrics /tmp/splitfc_ci_ckpt_live.jsonl &
+CKPID=$!
+for _ in $(seq 1 600); do
+    [ -f "$CKDIR/ckpt-r00010.splitfc" ] && break
+    sleep 0.1
+done
+[ -f "$CKDIR/ckpt-r00010.splitfc" ] || { echo "no snapshot appeared"; exit 1; }
+kill -9 "$CKPID" 2>/dev/null || true   # the run may have already finished
+wait "$CKPID" 2>/dev/null || true
+./target/release/splitfc ckpt inspect "$CKDIR/ckpt-r00010.splitfc"
+./target/release/splitfc train --preset tiny --devices 4 --rounds 20 \
+    --transport tcp --listen 127.0.0.1:0 \
+    --resume "$CKDIR/ckpt-r00010.splitfc" \
+    --metrics /tmp/splitfc_ci_ckpt_live.jsonl
+./target/release/splitfc metrics-diff \
+    /tmp/splitfc_ci_ckpt_ref.jsonl /tmp/splitfc_ci_ckpt_live.jsonl
+rm -rf "$CKDIR" /tmp/splitfc_ci_ckpt_ref.jsonl /tmp/splitfc_ci_ckpt_live.jsonl
+
+echo "==> checkpoint bench (quick): BENCH_ckpt.json + resume byte-identity probe"
+# fails non-zero if a resumed run's deterministic step fields diverge
+cargo bench --bench bench_ckpt -- --quick
+
 if [ "${SKIP_CLIPPY:-0}" = "1" ]; then
     echo "==> clippy skipped (SKIP_CLIPPY=1)"
 elif cargo clippy --version >/dev/null 2>&1; then

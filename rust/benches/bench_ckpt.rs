@@ -1,0 +1,171 @@
+//! Checkpoint subsystem bench: snapshot cost on the training path (wall
+//! overhead of `--checkpoint-every 1` vs no checkpointing), raw
+//! encode/load throughput and file size of a real snapshot, and the
+//! restart cost of `--resume` — plus a correctness probe (resume from the
+//! mid-run snapshot must reproduce the uninterrupted deterministic step
+//! fields exactly; the bench **fails** non-zero if it does not).
+//!
+//! Writes `BENCH_ckpt.json`; `-- --quick` shortens the run for CI.
+
+use std::time::Instant;
+
+use splitfc::checkpoint::Checkpoint;
+use splitfc::config::{parse_scheme, TrainConfig};
+use splitfc::coordinator::Trainer;
+use splitfc::util::{par, Args, Json, Result};
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("splitfc_bench_ckpt_{tag}_{}", std::process::id()))
+}
+
+fn cfg_for(rounds: usize, metrics: &str, dir: &str, every: usize) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::for_preset("tiny");
+    cfg.devices = 4;
+    cfg.rounds = rounds;
+    cfg.n_train = 256;
+    cfg.n_test = 64;
+    cfg.eval_every = 0;
+    cfg.seed = 11;
+    cfg.scheme = parse_scheme("splitfc[ad,R=4,fwq,ef]", 4.0)?;
+    cfg.up_bits_per_entry = 2.0;
+    cfg.down_bits_per_entry = 4.0;
+    cfg.metrics_path = metrics.to_string();
+    cfg.checkpoint_every = every;
+    cfg.checkpoint_dir = dir.to_string();
+    cfg.checkpoint_keep = rounds.max(1);
+    Ok(cfg)
+}
+
+/// Deterministic step fields of a metrics stream (wall-clock excluded).
+fn step_fields(path: &std::path::Path) -> Result<Vec<String>> {
+    const KEYS: [&str; 9] = [
+        "t", "k", "g", "loss", "train_acc", "up_bits", "down_bits", "up_nominal",
+        "down_nominal",
+    ];
+    let text =
+        std::fs::read_to_string(path).map_err(|e| splitfc::err!("metrics {path:?}: {e}"))?;
+    let mut rows = Vec::new();
+    for line in text.lines() {
+        let Ok(j) = Json::parse(line) else { continue };
+        if j.get("g").is_none() {
+            continue;
+        }
+        let mut fields = Vec::with_capacity(KEYS.len());
+        for k in KEYS {
+            let v = j
+                .get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| splitfc::err!("step record missing {k:?}"))?;
+            fields.push(format!("{k}={v:?}"));
+        }
+        rows.push(fields.join(" "));
+    }
+    Ok(rows)
+}
+
+fn timed_run(cfg: TrainConfig) -> Result<f64> {
+    let t0 = Instant::now();
+    let mut tr = Trainer::new(cfg)?;
+    tr.run()?;
+    drop(tr);
+    Ok(t0.elapsed().as_secs_f64())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let quick = args.has_flag("quick");
+    let inner_threads = par::thread_request(args.get_usize("threads", 1)).max(1);
+    par::set_threads(inner_threads);
+    let rounds = if quick { 4 } else { 10 };
+    let iters = if quick { 20 } else { 100 };
+
+    let ref_metrics = tmp_path("ref.jsonl");
+    let live_metrics = tmp_path("live.jsonl");
+    let dir = tmp_path("snaps");
+
+    // 1. training-path overhead: snapshot EVERY round vs never
+    let base_s = timed_run(cfg_for(rounds, ref_metrics.to_str().unwrap(), "", 0)?)?;
+    let ckpt_s = timed_run(cfg_for(
+        rounds,
+        live_metrics.to_str().unwrap(),
+        dir.to_str().unwrap(),
+        1,
+    )?)?;
+    let per_snapshot_s = (ckpt_s - base_s).max(0.0) / rounds as f64;
+    println!(
+        "train {rounds}r: base {base_s:.3}s, ckpt-every-1 {ckpt_s:.3}s \
+         -> {:.2} ms/snapshot",
+        per_snapshot_s * 1e3
+    );
+
+    // 2. raw snapshot encode/load throughput + size
+    let snap_path = dir.join(Checkpoint::file_name(rounds as u32 / 2));
+    let file_len = std::fs::metadata(&snap_path)
+        .map_err(|e| splitfc::err!("snapshot {snap_path:?}: {e}"))?
+        .len();
+    let ckpt = Checkpoint::load(&snap_path).map_err(|e| splitfc::err!("load: {e}"))?;
+    let t0 = Instant::now();
+    let mut encoded_len = 0usize;
+    for _ in 0..iters {
+        encoded_len = ckpt.encode().len();
+    }
+    let encode_s = t0.elapsed().as_secs_f64() / iters as f64;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        Checkpoint::load(&snap_path).map_err(|e| splitfc::err!("load: {e}"))?;
+    }
+    let load_s = t0.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "snapshot: {file_len} bytes, encode {:.3} ms, load+verify {:.3} ms",
+        encode_s * 1e3,
+        load_s * 1e3
+    );
+
+    // 3. restart cost + the correctness probe: resume from mid-run, same
+    // metrics file, stream must match the uninterrupted reference exactly
+    let want = step_fields(&ref_metrics)?;
+    let mut cfg = cfg_for(rounds, live_metrics.to_str().unwrap(), "", 0)?;
+    cfg.resume = snap_path.to_str().unwrap().to_string();
+    let t0 = Instant::now();
+    let mut tr = Trainer::new(cfg)?;
+    let restore_s = t0.elapsed().as_secs_f64();
+    tr.run()?;
+    drop(tr);
+    let got = step_fields(&live_metrics)?;
+    splitfc::ensure!(
+        got == want,
+        "resume probe: resumed stream diverged from the uninterrupted run \
+         ({} vs {} steps)",
+        got.len(),
+        want.len()
+    );
+    println!(
+        "resume: restore {:.1} ms, {} steps byte-identical after restart",
+        restore_s * 1e3,
+        got.len()
+    );
+
+    let j = Json::obj(vec![
+        ("bench", Json::str("ckpt")),
+        ("preset", Json::str("tiny")),
+        ("devices", Json::num(4.0)),
+        ("rounds", Json::num(rounds as f64)),
+        ("inner_threads", Json::num(par::threads() as f64)),
+        ("train_base_s", Json::num(base_s)),
+        ("train_ckpt_every_1_s", Json::num(ckpt_s)),
+        ("per_snapshot_s", Json::num(per_snapshot_s)),
+        ("snapshot_bytes", Json::num(file_len as f64)),
+        ("encoded_bytes", Json::num(encoded_len as f64)),
+        ("encode_s", Json::num(encode_s)),
+        ("load_verify_s", Json::num(load_s)),
+        ("resume_restore_s", Json::num(restore_s)),
+        ("resume_steps_identical", Json::num(want.len() as f64)),
+    ]);
+    std::fs::write("BENCH_ckpt.json", j.to_string_pretty()).expect("write BENCH_ckpt.json");
+    println!("[saved BENCH_ckpt.json]");
+
+    std::fs::remove_file(&ref_metrics).ok();
+    std::fs::remove_file(&live_metrics).ok();
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

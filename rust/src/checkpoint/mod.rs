@@ -1,0 +1,985 @@
+//! Versioned binary checkpoints of the full training state.
+//!
+//! A checkpoint captures everything a run needs to continue byte-identically
+//! after a process restart: both parameter sets and their ADAM slots, the
+//! shared Algorithm-1 RNG stream, the per-device run totals, every device's
+//! private state (its RNG streams, minibatch-loader shuffle position, codec
+//! session including the `splitfc[...,ef]` error-feedback residual — which
+//! is *training state*, not a cache — and its schedule position), and the
+//! PS-side codec sessions.
+//!
+//! **Format.** Extends the PR 6 `Msg`/`Frame` idiom: little-endian fields
+//! behind a self-describing envelope. The file layout is
+//!
+//! ```text
+//! magic "SPLITFCK" (8)  | format version (u16)
+//! header block:   u32 len | CkptHeader bytes | u32 crc32
+//! section table:  u32 count | per section: name (u32 len + bytes),
+//!                 u64 payload len, u32 crc32
+//! payloads, concatenated in table order
+//! ```
+//!
+//! The header carries the codec id/version, fleet shape, round, seed and a
+//! trajectory fingerprint, so `splitfc ckpt inspect` can describe a file —
+//! and `--resume` can reject a mismatched one — without touching a tensor.
+//! Every section is CRC-guarded; [`Checkpoint::decode`] verifies the magic,
+//! version and **all** CRCs before returning, so a corrupt or truncated
+//! file is rejected before any run state could be mutated from it.
+//!
+//! **Atomicity / retention.** [`Checkpoint::save`] writes to a `.tmp`
+//! sibling and renames into place, then prunes all but the newest
+//! `keep` snapshots — a crash mid-write never clobbers the previous good
+//! checkpoint.
+
+use std::path::{Path, PathBuf};
+
+use crate::compression::error::CodecError;
+use crate::coordinator::protocol::DeviceTotals;
+use crate::coordinator::server::{DeviceOptState, ServerSnap};
+use crate::data::loader::LoaderState;
+use crate::optim::adam::AdamState;
+use crate::transport::wire::ByteCursor;
+use crate::util::error::Error;
+use crate::util::rng::RngState;
+
+/// File magic: the first 8 bytes of every checkpoint.
+pub const MAGIC: &[u8; 8] = b"SPLITFCK";
+
+/// Current snapshot format version. Bump on any layout change; old readers
+/// reject newer files with a typed [`CkptError::WrongVersion`].
+pub const FORMAT_VERSION: u16 = 1;
+
+/// Typed checkpoint errors — `ckpt inspect` and `--resume` report these
+/// instead of panicking or half-loading state.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CkptError {
+    Io(String),
+    /// The file does not start with the `SPLITFCK` magic.
+    BadMagic,
+    /// The file's format version is newer than this binary supports.
+    WrongVersion { found: u16, supported: u16 },
+    /// The file ends before a declared field/section does.
+    Truncated { needed: u64, available: u64 },
+    /// A CRC mismatch or malformed field inside one section.
+    Corrupt { section: String, reason: String },
+    /// The checkpoint was taken under a different run configuration.
+    ConfigMismatch { field: String, ckpt: String, run: String },
+    /// The metrics file on disk does not line up with the snapshot.
+    MetricsMismatch { reason: String },
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::Io(e) => write!(f, "checkpoint io: {e}"),
+            CkptError::BadMagic => write!(f, "not a splitfc checkpoint (bad magic)"),
+            CkptError::WrongVersion { found, supported } => write!(
+                f,
+                "checkpoint format v{found} is not supported (this binary reads <= v{supported})"
+            ),
+            CkptError::Truncated { needed, available } => write!(
+                f,
+                "checkpoint truncated: needed {needed} bytes, {available} available"
+            ),
+            CkptError::Corrupt { section, reason } => {
+                write!(f, "checkpoint section {section:?} corrupt: {reason}")
+            }
+            CkptError::ConfigMismatch { field, ckpt, run } => write!(
+                f,
+                "checkpoint/config mismatch on {field}: checkpoint has {ckpt}, run has {run}"
+            ),
+            CkptError::MetricsMismatch { reason } => {
+                write!(f, "metrics file does not match checkpoint: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CkptError {}
+
+impl From<CkptError> for Error {
+    fn from(e: CkptError) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::io::Error> for CkptError {
+    fn from(e: std::io::Error) -> CkptError {
+        CkptError::Io(e.to_string())
+    }
+}
+
+type CkptResult<T> = std::result::Result<T, CkptError>;
+
+/// Map a bounds-checked cursor error into a section-tagged [`CkptError`].
+fn in_section<T>(section: &str, r: Result<T, CodecError>) -> CkptResult<T> {
+    r.map_err(|e| match e {
+        CodecError::TruncatedFrame { needed, available } => {
+            CkptError::Truncated { needed, available }
+        }
+        other => CkptError::Corrupt { section: section.to_string(), reason: other.to_string() },
+    })
+}
+
+/// CRC-32 (IEEE 802.3, reflected poly 0xEDB88320) — the same checksum gzip
+/// uses; hand-rolled bitwise since the offline registry has no crc crate.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+// ---- primitive field encoding (little-endian, PR 6 message idiom) ----
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_u32(out, b.len() as u32);
+    out.extend_from_slice(b);
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u64(out, xs.len() as u64);
+    out.reserve(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+fn put_u64s(out: &mut Vec<u8>, xs: &[u64]) {
+    put_u64(out, xs.len() as u64);
+    out.reserve(xs.len() * 8);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_rng(out: &mut Vec<u8>, st: &RngState) {
+    for w in st.s {
+        put_u64(out, w);
+    }
+    match st.gauss {
+        Some(z) => {
+            put_u8(out, 1);
+            put_f64(out, z);
+        }
+        None => put_u8(out, 0),
+    }
+}
+
+fn get_str(sec: &str, cur: &mut ByteCursor<'_>) -> CkptResult<String> {
+    let n = in_section(sec, cur.u32())? as usize;
+    let bytes = in_section(sec, cur.take(n))?;
+    String::from_utf8(bytes.to_vec()).map_err(|_| CkptError::Corrupt {
+        section: sec.to_string(),
+        reason: "non-utf8 string field".to_string(),
+    })
+}
+
+fn get_bytes(sec: &str, cur: &mut ByteCursor<'_>) -> CkptResult<Vec<u8>> {
+    let n = in_section(sec, cur.u32())? as usize;
+    Ok(in_section(sec, cur.take(n))?.to_vec())
+}
+
+fn get_f32s(sec: &str, cur: &mut ByteCursor<'_>) -> CkptResult<Vec<f32>> {
+    let n = in_section(sec, cur.u64())? as usize;
+    // bounds-check the count before allocating (adversarial length prefix)
+    let raw = in_section(sec, cur.take(n.checked_mul(4).unwrap_or(usize::MAX)))?;
+    Ok(raw.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
+}
+
+fn get_u64s(sec: &str, cur: &mut ByteCursor<'_>) -> CkptResult<Vec<u64>> {
+    let n = in_section(sec, cur.u64())? as usize;
+    let raw = in_section(sec, cur.take(n.checked_mul(8).unwrap_or(usize::MAX)))?;
+    Ok(raw
+        .chunks_exact(8)
+        .map(|b| u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+        .collect())
+}
+
+fn get_rng(sec: &str, cur: &mut ByteCursor<'_>) -> CkptResult<RngState> {
+    let mut s = [0u64; 4];
+    for w in &mut s {
+        *w = in_section(sec, cur.u64())?;
+    }
+    let gauss = match in_section(sec, cur.u8())? {
+        0 => None,
+        1 => Some(in_section(sec, cur.f64())?),
+        other => {
+            return Err(CkptError::Corrupt {
+                section: sec.to_string(),
+                reason: format!("bad rng gauss flag {other}"),
+            })
+        }
+    };
+    Ok(RngState { s, gauss })
+}
+
+// ---- header ----
+
+/// Self-describing run identity, readable without decoding any tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptHeader {
+    pub format: u16,
+    /// Versioned codec id of the run's scheme (`compression::codec_id`).
+    pub codec_id: u32,
+    pub codec_version: u16,
+    /// Canonical codec spec name, e.g. `splitfc[ad,R=8,fwq,ef]`.
+    pub scheme: String,
+    pub preset: String,
+    pub devices: u32,
+    pub rounds: u32,
+    /// The round this snapshot was taken after (watermark = round·devices).
+    pub round: u32,
+    pub seed: u64,
+    /// FNV-1a over every trajectory-determining config field
+    /// (`TrainConfig::trajectory_fingerprint`).
+    pub fingerprint: u64,
+    pub scenario: String,
+}
+
+impl CkptHeader {
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_u32(&mut out, self.codec_id);
+        put_u16(&mut out, self.codec_version);
+        put_str(&mut out, &self.scheme);
+        put_str(&mut out, &self.preset);
+        put_u32(&mut out, self.devices);
+        put_u32(&mut out, self.rounds);
+        put_u32(&mut out, self.round);
+        put_u64(&mut out, self.seed);
+        put_u64(&mut out, self.fingerprint);
+        put_str(&mut out, &self.scenario);
+        out
+    }
+
+    fn decode(format: u16, bytes: &[u8]) -> CkptResult<CkptHeader> {
+        const SEC: &str = "header";
+        let mut cur = ByteCursor::new(bytes);
+        let h = CkptHeader {
+            format,
+            codec_id: in_section(SEC, cur.u32())?,
+            codec_version: in_section(SEC, cur.u16())?,
+            scheme: get_str(SEC, &mut cur)?,
+            preset: get_str(SEC, &mut cur)?,
+            devices: in_section(SEC, cur.u32())?,
+            rounds: in_section(SEC, cur.u32())?,
+            round: in_section(SEC, cur.u32())?,
+            seed: in_section(SEC, cur.u64())?,
+            fingerprint: in_section(SEC, cur.u64())?,
+            scenario: get_str(SEC, &mut cur)?,
+        };
+        if !cur.is_empty() {
+            return Err(CkptError::Corrupt {
+                section: SEC.to_string(),
+                reason: format!("{} trailing bytes", cur.remaining()),
+            });
+        }
+        Ok(h)
+    }
+}
+
+// ---- device-side snapshot (travels over the protocol as a blob) ----
+
+/// Everything a `DeviceWorker` owns that determines its trajectory: its
+/// RNG streams, the loader's shuffle order/position, its codec session
+/// (EF residual) and its schedule position. Encoded to an opaque blob that
+/// rides `Commit` up and `HelloAck` back down, so remote devices checkpoint
+/// and restore through the PS without a side channel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSnap {
+    pub rng: RngState,
+    pub backoff_rng: RngState,
+    pub loader: LoaderState,
+    /// Opaque `Codec::export_session` bytes (device-side session).
+    pub codec: Vec<u8>,
+    /// Steps this worker has begun (drives scenario `cut[...,step=N]`).
+    pub steps_run: u64,
+}
+
+impl DeviceSnap {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_rng(&mut out, &self.rng);
+        put_rng(&mut out, &self.backoff_rng);
+        put_u64s(&mut out, &self.loader.indices);
+        put_u64(&mut out, self.loader.cursor);
+        put_u64(&mut out, self.loader.batch);
+        put_rng(&mut out, &self.loader.rng);
+        put_bytes(&mut out, &self.codec);
+        put_u64(&mut out, self.steps_run);
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> CkptResult<DeviceSnap> {
+        const SEC: &str = "device";
+        let mut cur = ByteCursor::new(bytes);
+        let rng = get_rng(SEC, &mut cur)?;
+        let backoff_rng = get_rng(SEC, &mut cur)?;
+        let indices = get_u64s(SEC, &mut cur)?;
+        let cursor = in_section(SEC, cur.u64())?;
+        let batch = in_section(SEC, cur.u64())?;
+        let loader_rng = get_rng(SEC, &mut cur)?;
+        let codec = get_bytes(SEC, &mut cur)?;
+        let steps_run = in_section(SEC, cur.u64())?;
+        if !cur.is_empty() {
+            return Err(CkptError::Corrupt {
+                section: SEC.to_string(),
+                reason: format!("{} trailing bytes", cur.remaining()),
+            });
+        }
+        Ok(DeviceSnap {
+            rng,
+            backoff_rng,
+            loader: LoaderState { indices, cursor, batch, rng: loader_rng },
+            codec,
+            steps_run,
+        })
+    }
+}
+
+// ---- sections ----
+
+/// Scheduler/metrics position: where the run resumes and what the metrics
+/// stream looked like at the snapshot barrier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedSnap {
+    /// Global step count at the barrier (`first_step + round·devices`):
+    /// every metrics record written so far carries `g` strictly below it.
+    pub boundary_g: u64,
+    /// Byte length of the metrics JSONL at the barrier — `--resume`
+    /// truncates the file back to this before appending.
+    pub metrics_len: u64,
+    pub totals: Vec<DeviceTotals>,
+}
+
+/// Per-device-link state held at the PS: the PS-side codec session and the
+/// latest device-side [`DeviceSnap`] blob (None if the device never
+/// committed a step, e.g. a scenario departure before its first turn).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct LinkSnap {
+    pub ps_session: Vec<u8>,
+    pub device: Option<Vec<u8>>,
+}
+
+fn encode_server(s: &ServerSnap) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_f32s(&mut out, &s.wd);
+    put_f32s(&mut out, &s.ws);
+    put_adam(&mut out, &s.opt_s);
+    match &s.opt_d {
+        DeviceOptState::Shared(a) => {
+            put_u8(&mut out, 0);
+            put_adam(&mut out, a);
+        }
+        DeviceOptState::PerDevice(opts) => {
+            put_u8(&mut out, 1);
+            put_u32(&mut out, opts.len() as u32);
+            for a in opts {
+                put_adam(&mut out, a);
+            }
+        }
+    }
+    put_rng(&mut out, &s.rng);
+    put_f64(&mut out, s.exec_s);
+    out
+}
+
+fn put_adam(out: &mut Vec<u8>, a: &AdamState) {
+    put_u64(out, a.t);
+    put_f32s(out, &a.m);
+    put_f32s(out, &a.v);
+}
+
+fn get_adam(sec: &str, cur: &mut ByteCursor<'_>) -> CkptResult<AdamState> {
+    Ok(AdamState {
+        t: in_section(sec, cur.u64())?,
+        m: get_f32s(sec, cur)?,
+        v: get_f32s(sec, cur)?,
+    })
+}
+
+fn decode_server(bytes: &[u8]) -> CkptResult<ServerSnap> {
+    const SEC: &str = "server";
+    let mut cur = ByteCursor::new(bytes);
+    let wd = get_f32s(SEC, &mut cur)?;
+    let ws = get_f32s(SEC, &mut cur)?;
+    let opt_s = get_adam(SEC, &mut cur)?;
+    let opt_d = match in_section(SEC, cur.u8())? {
+        0 => DeviceOptState::Shared(get_adam(SEC, &mut cur)?),
+        1 => {
+            let n = in_section(SEC, cur.u32())? as usize;
+            let mut opts = Vec::with_capacity(n.min(1 << 16));
+            for _ in 0..n {
+                opts.push(get_adam(SEC, &mut cur)?);
+            }
+            DeviceOptState::PerDevice(opts)
+        }
+        other => {
+            return Err(CkptError::Corrupt {
+                section: SEC.to_string(),
+                reason: format!("bad DeviceOpt tag {other}"),
+            })
+        }
+    };
+    let rng = get_rng(SEC, &mut cur)?;
+    let exec_s = in_section(SEC, cur.f64())?;
+    if !cur.is_empty() {
+        return Err(CkptError::Corrupt {
+            section: SEC.to_string(),
+            reason: format!("{} trailing bytes", cur.remaining()),
+        });
+    }
+    Ok(ServerSnap { wd, ws, opt_s, opt_d, rng, exec_s })
+}
+
+fn encode_sched(s: &SchedSnap) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u64(&mut out, s.boundary_g);
+    put_u64(&mut out, s.metrics_len);
+    put_u32(&mut out, s.totals.len() as u32);
+    for t in &s.totals {
+        put_u64(&mut out, t.up_bits);
+        put_u64(&mut out, t.down_bits);
+        put_u64(&mut out, t.steps as u64);
+        put_f32(&mut out, t.last_round_loss);
+        put_u8(&mut out, t.departed as u8);
+    }
+    out
+}
+
+fn decode_sched(bytes: &[u8]) -> CkptResult<SchedSnap> {
+    const SEC: &str = "sched";
+    let mut cur = ByteCursor::new(bytes);
+    let boundary_g = in_section(SEC, cur.u64())?;
+    let metrics_len = in_section(SEC, cur.u64())?;
+    let n = in_section(SEC, cur.u32())? as usize;
+    let mut totals = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        totals.push(DeviceTotals {
+            up_bits: in_section(SEC, cur.u64())?,
+            down_bits: in_section(SEC, cur.u64())?,
+            steps: in_section(SEC, cur.u64())? as usize,
+            last_round_loss: in_section(SEC, cur.f32())?,
+            departed: in_section(SEC, cur.u8())? != 0,
+        });
+    }
+    if !cur.is_empty() {
+        return Err(CkptError::Corrupt {
+            section: SEC.to_string(),
+            reason: format!("{} trailing bytes", cur.remaining()),
+        });
+    }
+    Ok(SchedSnap { boundary_g, metrics_len, totals })
+}
+
+fn encode_links(links: &[LinkSnap]) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u32(&mut out, links.len() as u32);
+    for l in links {
+        put_bytes(&mut out, &l.ps_session);
+        match &l.device {
+            Some(b) => {
+                put_u8(&mut out, 1);
+                put_bytes(&mut out, b);
+            }
+            None => put_u8(&mut out, 0),
+        }
+    }
+    out
+}
+
+fn decode_links(bytes: &[u8]) -> CkptResult<Vec<LinkSnap>> {
+    const SEC: &str = "links";
+    let mut cur = ByteCursor::new(bytes);
+    let n = in_section(SEC, cur.u32())? as usize;
+    let mut links = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        let ps_session = get_bytes(SEC, &mut cur)?;
+        let device = match in_section(SEC, cur.u8())? {
+            0 => None,
+            1 => Some(get_bytes(SEC, &mut cur)?),
+            other => {
+                return Err(CkptError::Corrupt {
+                    section: SEC.to_string(),
+                    reason: format!("bad device-blob flag {other}"),
+                })
+            }
+        };
+        links.push(LinkSnap { ps_session, device });
+    }
+    if !cur.is_empty() {
+        return Err(CkptError::Corrupt {
+            section: SEC.to_string(),
+            reason: format!("{} trailing bytes", cur.remaining()),
+        });
+    }
+    Ok(links)
+}
+
+// ---- the checkpoint itself ----
+
+/// One complete run snapshot, taken at a round barrier where the watermark
+/// has quiesced (no step in flight).
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub header: CkptHeader,
+    pub server: ServerSnap,
+    pub sched: SchedSnap,
+    pub links: Vec<LinkSnap>,
+}
+
+impl Checkpoint {
+    /// Canonical file name for a snapshot taken after `round`.
+    pub fn file_name(round: u32) -> String {
+        format!("ckpt-r{round:05}.splitfc")
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let header = self.header.encode();
+        let sections: [(&str, Vec<u8>); 3] = [
+            ("server", encode_server(&self.server)),
+            ("sched", encode_sched(&self.sched)),
+            ("links", encode_links(&self.links)),
+        ];
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        put_u16(&mut out, self.header.format);
+        put_u32(&mut out, header.len() as u32);
+        out.extend_from_slice(&header);
+        put_u32(&mut out, crc32(&header));
+        put_u32(&mut out, sections.len() as u32);
+        for (name, payload) in &sections {
+            put_str(&mut out, name);
+            put_u64(&mut out, payload.len() as u64);
+            put_u32(&mut out, crc32(payload));
+        }
+        for (_, payload) in &sections {
+            out.extend_from_slice(payload);
+        }
+        out
+    }
+
+    /// Decode and fully verify a snapshot: magic, format version, header
+    /// CRC, and every section CRC are checked **before** any section is
+    /// decoded, so a caller that only mutates state after a successful
+    /// return can never half-apply a corrupt file.
+    pub fn decode(bytes: &[u8]) -> CkptResult<Checkpoint> {
+        let (header, table, payload_base) = parse_envelope(bytes)?;
+        let mut sections = std::collections::HashMap::new();
+        let mut off = payload_base;
+        for entry in &table {
+            let end = off + entry.len as usize;
+            let payload = &bytes[off..end];
+            sections.insert(entry.name.clone(), payload);
+            off = end;
+        }
+        let need = |name: &str| {
+            sections.get(name).copied().ok_or_else(|| CkptError::Corrupt {
+                section: name.to_string(),
+                reason: "section missing".to_string(),
+            })
+        };
+        Ok(Checkpoint {
+            server: decode_server(need("server")?)?,
+            sched: decode_sched(need("sched")?)?,
+            links: decode_links(need("links")?)?,
+            header,
+        })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> CkptResult<Checkpoint> {
+        let bytes = std::fs::read(path.as_ref())?;
+        Checkpoint::decode(&bytes)
+    }
+
+    /// Atomically write this snapshot into `dir` (write `.tmp`, fsync,
+    /// rename) and prune all but the newest `keep` checkpoints. Returns
+    /// the final path.
+    pub fn save(&self, dir: impl AsRef<Path>, keep: usize) -> CkptResult<PathBuf> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let name = Self::file_name(self.header.round);
+        let tmp = dir.join(format!("{name}.tmp"));
+        let path = dir.join(&name);
+        let bytes = self.encode();
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, &path)?;
+        prune(dir, keep.max(1))?;
+        Ok(path)
+    }
+}
+
+/// Sorted list of checkpoint files in `dir` (oldest round first).
+pub fn list(dir: impl AsRef<Path>) -> CkptResult<Vec<PathBuf>> {
+    let mut found = Vec::new();
+    let entries = match std::fs::read_dir(dir.as_ref()) {
+        Ok(e) => e,
+        Err(_) => return Ok(found), // no directory yet: nothing retained
+    };
+    for entry in entries {
+        let p = entry?.path();
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name.starts_with("ckpt-r") && name.ends_with(".splitfc") {
+            found.push(p);
+        }
+    }
+    found.sort();
+    Ok(found)
+}
+
+fn prune(dir: &Path, keep: usize) -> CkptResult<()> {
+    let found = list(dir)?;
+    if found.len() > keep {
+        for p in &found[..found.len() - keep] {
+            std::fs::remove_file(p)?;
+        }
+    }
+    Ok(())
+}
+
+// ---- inspection (header + table only, tensors never decoded) ----
+
+#[derive(Debug, Clone)]
+pub struct SectionInfo {
+    pub name: String,
+    pub len: u64,
+    pub crc: u32,
+}
+
+/// What `splitfc ckpt inspect` prints: the header plus the section table,
+/// with every CRC verified against the raw payload ranges.
+#[derive(Debug, Clone)]
+pub struct CkptInfo {
+    pub header: CkptHeader,
+    pub sections: Vec<SectionInfo>,
+    pub file_len: u64,
+}
+
+/// Parse the envelope (magic, version, header, section table) and verify
+/// the header CRC and every section CRC over the raw byte ranges. Returns
+/// the header, the table, and the offset of the first payload byte.
+fn parse_envelope(bytes: &[u8]) -> CkptResult<(CkptHeader, Vec<SectionInfo>, usize)> {
+    let mut cur = ByteCursor::new(bytes);
+    let magic = in_section("envelope", cur.take(8))?;
+    if magic != MAGIC {
+        return Err(CkptError::BadMagic);
+    }
+    let format = in_section("envelope", cur.u16())?;
+    if format > FORMAT_VERSION {
+        return Err(CkptError::WrongVersion { found: format, supported: FORMAT_VERSION });
+    }
+    let hlen = in_section("envelope", cur.u32())? as usize;
+    let hbytes = in_section("envelope", cur.take(hlen))?.to_vec();
+    let hcrc = in_section("envelope", cur.u32())?;
+    if crc32(&hbytes) != hcrc {
+        return Err(CkptError::Corrupt {
+            section: "header".to_string(),
+            reason: format!("crc mismatch (stored {hcrc:#010x}, computed {:#010x})", crc32(&hbytes)),
+        });
+    }
+    let header = CkptHeader::decode(format, &hbytes)?;
+    let count = in_section("envelope", cur.u32())? as usize;
+    if count > 64 {
+        return Err(CkptError::Corrupt {
+            section: "envelope".to_string(),
+            reason: format!("implausible section count {count}"),
+        });
+    }
+    let mut table = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name = get_str("envelope", &mut cur)?;
+        let len = in_section("envelope", cur.u64())?;
+        let crc = in_section("envelope", cur.u32())?;
+        table.push(SectionInfo { name, len, crc });
+    }
+    let payload_base = bytes.len() - cur.remaining();
+    // verify every payload range before anyone decodes anything
+    let mut off = payload_base;
+    for entry in &table {
+        let len = usize::try_from(entry.len).map_err(|_| CkptError::Truncated {
+            needed: entry.len,
+            available: (bytes.len() - off) as u64,
+        })?;
+        let end = off.checked_add(len).filter(|&e| e <= bytes.len()).ok_or(
+            CkptError::Truncated {
+                needed: entry.len,
+                available: (bytes.len() - off) as u64,
+            },
+        )?;
+        let got = crc32(&bytes[off..end]);
+        if got != entry.crc {
+            return Err(CkptError::Corrupt {
+                section: entry.name.clone(),
+                reason: format!("crc mismatch (stored {:#010x}, computed {got:#010x})", entry.crc),
+            });
+        }
+        off = end;
+    }
+    if off != bytes.len() {
+        return Err(CkptError::Corrupt {
+            section: "envelope".to_string(),
+            reason: format!("{} trailing bytes after last section", bytes.len() - off),
+        });
+    }
+    Ok((header, table, payload_base))
+}
+
+/// Inspect a checkpoint file: header + section table + CRC verification,
+/// without decoding any tensor payload.
+pub fn inspect(path: impl AsRef<Path>) -> CkptResult<CkptInfo> {
+    let bytes = std::fs::read(path.as_ref())?;
+    let (header, sections, _) = parse_envelope(&bytes)?;
+    Ok(CkptInfo { header, sections, file_len: bytes.len() as u64 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            header: CkptHeader {
+                format: FORMAT_VERSION,
+                codec_id: 0xDEAD_BEEF,
+                codec_version: 3,
+                scheme: "splitfc[ad,R=8,fwq,ef]".to_string(),
+                preset: "tiny".to_string(),
+                devices: 2,
+                rounds: 9,
+                round: 4,
+                seed: 42,
+                fingerprint: 0x1234_5678_9ABC_DEF0,
+                scenario: "seed=7,straggler[dev=1,slow=4x]".to_string(),
+            },
+            server: ServerSnap {
+                wd: vec![1.0, -2.5, 0.0],
+                ws: vec![0.25; 5],
+                opt_s: AdamState { t: 7, m: vec![0.1; 5], v: vec![0.2; 5] },
+                opt_d: DeviceOptState::PerDevice(vec![
+                    AdamState { t: 3, m: vec![0.0; 3], v: vec![0.5; 3] },
+                    AdamState { t: 4, m: vec![1.0; 3], v: vec![2.0; 3] },
+                ]),
+                rng: RngState { s: [1, 2, 3, 4], gauss: Some(0.75) },
+                exec_s: 1.5,
+            },
+            sched: SchedSnap {
+                boundary_g: 8,
+                metrics_len: 1234,
+                totals: vec![
+                    DeviceTotals {
+                        up_bits: 100,
+                        down_bits: 200,
+                        steps: 4,
+                        last_round_loss: f32::NAN,
+                        departed: false,
+                    },
+                    DeviceTotals {
+                        up_bits: 300,
+                        down_bits: 400,
+                        steps: 4,
+                        last_round_loss: 0.5,
+                        departed: true,
+                    },
+                ],
+            },
+            links: vec![
+                LinkSnap { ps_session: vec![9, 8, 7], device: Some(vec![1, 2, 3, 4]) },
+                LinkSnap { ps_session: Vec::new(), device: None },
+            ],
+        }
+    }
+
+    fn assert_ckpt_eq(a: &Checkpoint, b: &Checkpoint) {
+        assert_eq!(a.header, b.header);
+        assert_eq!(a.server.wd, b.server.wd);
+        assert_eq!(a.server.ws, b.server.ws);
+        assert_eq!(a.server.opt_s, b.server.opt_s);
+        assert_eq!(a.server.opt_d, b.server.opt_d);
+        assert_eq!(a.server.rng, b.server.rng);
+        assert_eq!(a.server.exec_s, b.server.exec_s);
+        assert_eq!(a.sched.boundary_g, b.sched.boundary_g);
+        assert_eq!(a.sched.metrics_len, b.sched.metrics_len);
+        assert_eq!(a.sched.totals.len(), b.sched.totals.len());
+        for (x, y) in a.sched.totals.iter().zip(&b.sched.totals) {
+            assert_eq!(x.up_bits, y.up_bits);
+            assert_eq!(x.down_bits, y.down_bits);
+            assert_eq!(x.steps, y.steps);
+            assert_eq!(x.last_round_loss.to_bits(), y.last_round_loss.to_bits());
+            assert_eq!(x.departed, y.departed);
+        }
+        assert_eq!(a.links, b.links);
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // the canonical IEEE check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let c = sample();
+        let bytes = c.encode();
+        let d = Checkpoint::decode(&bytes).unwrap();
+        assert_ckpt_eq(&c, &d);
+    }
+
+    #[test]
+    fn device_snap_roundtrips() {
+        let snap = DeviceSnap {
+            rng: RngState { s: [5, 6, 7, 8], gauss: None },
+            backoff_rng: RngState { s: [9, 10, 11, 12], gauss: Some(-1.25) },
+            loader: LoaderState {
+                indices: vec![3, 1, 4, 1, 5],
+                cursor: 2,
+                batch: 8,
+                rng: RngState { s: [13, 14, 15, 16], gauss: None },
+            },
+            codec: vec![0xAB; 17],
+            steps_run: 42,
+        };
+        assert_eq!(DeviceSnap::decode(&snap.encode()).unwrap(), snap);
+    }
+
+    #[test]
+    fn bad_magic_is_typed() {
+        let mut bytes = sample().encode();
+        bytes[0] = b'X';
+        assert_eq!(Checkpoint::decode(&bytes).unwrap_err(), CkptError::BadMagic);
+    }
+
+    #[test]
+    fn wrong_version_is_typed() {
+        let mut bytes = sample().encode();
+        bytes[8] = 0xFF; // format version LE low byte
+        bytes[9] = 0x00;
+        assert!(matches!(
+            Checkpoint::decode(&bytes).unwrap_err(),
+            CkptError::WrongVersion { found: 255, supported: FORMAT_VERSION }
+        ));
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_detected() {
+        // CRC coverage: flipping any one byte of the file must be rejected
+        let good = sample().encode();
+        for i in 0..good.len() {
+            let mut bad = good.clone();
+            bad[i] ^= 0x5A;
+            assert!(
+                Checkpoint::decode(&bad).is_err(),
+                "byte flip at offset {i} went undetected"
+            );
+        }
+        assert!(Checkpoint::decode(&good).is_ok());
+    }
+
+    #[test]
+    fn truncation_at_every_byte_is_rejected() {
+        let good = sample().encode();
+        for cut in 0..good.len() {
+            let err = Checkpoint::decode(&good[..cut])
+                .expect_err("truncated checkpoint must not decode");
+            assert!(
+                matches!(
+                    err,
+                    CkptError::Truncated { .. } | CkptError::BadMagic | CkptError::Corrupt { .. }
+                ),
+                "cut={cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn save_is_atomic_and_retention_prunes() {
+        let dir = std::env::temp_dir()
+            .join(format!("splitfc_ckpt_test_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut c = sample();
+        for round in 1..=5u32 {
+            c.header.round = round;
+            c.save(&dir, 3).unwrap();
+        }
+        let kept = list(&dir).unwrap();
+        let names: Vec<String> = kept
+            .iter()
+            .map(|p| p.file_name().unwrap().to_str().unwrap().to_string())
+            .collect();
+        assert_eq!(
+            names,
+            vec!["ckpt-r00003.splitfc", "ckpt-r00004.splitfc", "ckpt-r00005.splitfc"]
+        );
+        // no stray .tmp files survive a completed save
+        assert!(std::fs::read_dir(&dir)
+            .unwrap()
+            .all(|e| !e.unwrap().path().to_str().unwrap().ends_with(".tmp")));
+        let loaded = Checkpoint::load(&kept[2]).unwrap();
+        assert_eq!(loaded.header.round, 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn inspect_reads_header_and_verifies_crcs() {
+        let dir = std::env::temp_dir()
+            .join(format!("splitfc_ckpt_inspect_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let c = sample();
+        let path = c.save(&dir, 3).unwrap();
+        let info = inspect(&path).unwrap();
+        assert_eq!(info.header, c.header);
+        let names: Vec<&str> = info.sections.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["server", "sched", "links"]);
+        assert_eq!(info.file_len, c.encode().len() as u64);
+        // corrupt one payload byte: inspect must flag the owning section
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        match inspect(&path).unwrap_err() {
+            CkptError::Corrupt { section, .. } => assert_eq!(section, "links"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

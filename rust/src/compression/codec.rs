@@ -277,6 +277,28 @@ pub trait Codec: Send + Sync {
         let _ = buffers;
     }
 
+    /// Serialize this session's cross-round state (e.g. the error-feedback
+    /// residual) for checkpointing. The bytes are opaque to the caller;
+    /// stateless codecs return empty (the default), so only sessions that
+    /// actually carry state pay for it.
+    fn export_session(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore a session from [`Codec::export_session`] bytes. The default
+    /// accepts only the stateless empty export; stateful codecs must
+    /// override both hooks together.
+    fn restore_session(&mut self, bytes: &[u8]) -> Result<()> {
+        ensure!(
+            bytes.is_empty(),
+            "codec {:?} has no session restore but the checkpoint carries \
+             {} bytes of session state",
+            self.name(),
+            bytes.len()
+        );
+        Ok(())
+    }
+
     /// Reject frames emitted by a different codec or wire version
     /// (decoders call this before touching the payload).
     fn check_frame(&self, frame: &Frame) -> Result<()> {

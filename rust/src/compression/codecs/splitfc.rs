@@ -33,7 +33,7 @@ use crate::compression::quant::{fwq_decode_into, fwq_encode_view_recon, ColView,
 use crate::compression::scratch::WireScratch;
 use crate::ensure;
 use crate::tensor::{column_stats, normalized_sigma, Matrix};
-use crate::transport::wire::{Frame, FrameKind};
+use crate::transport::wire::{ByteCursor, Frame, FrameKind};
 use crate::util::error::Result;
 use crate::util::Rng;
 
@@ -309,6 +309,82 @@ impl Codec for SplitFcCodec {
         self.scratch.get_mut().expect("codec scratch poisoned").reclaim(buffers);
     }
 
+    /// Session state for checkpointing: the error-feedback residual. As the
+    /// mask-encoded-sparsification line of work (arXiv:2408.13787) stresses,
+    /// the residual is *training state* — dropping it on restart biases the
+    /// very next gradient — so `splitfc[...,ef]` serializes it. Non-EF
+    /// configurations export empty (stateless).
+    fn export_session(&self) -> Vec<u8> {
+        let Some(decay) = self.ef_decay else { return Vec::new() };
+        let mut out = Vec::new();
+        match &self.ef {
+            None => out.push(0u8), // armed but no encode yet
+            Some(ef) => {
+                out.push(1u8);
+                out.extend_from_slice(&(ef.residual.rows as u64).to_le_bytes());
+                out.extend_from_slice(&(ef.residual.cols as u64).to_le_bytes());
+                out.extend_from_slice(&decay.to_bits().to_le_bytes());
+                out.reserve(ef.residual.data.len() * 4);
+                for &v in &ef.residual.data {
+                    out.extend_from_slice(&v.to_bits().to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    fn restore_session(&mut self, bytes: &[u8]) -> Result<()> {
+        if bytes.is_empty() {
+            ensure!(
+                self.ef_decay.is_none(),
+                "codec {:?} carries an error-feedback residual but the \
+                 checkpoint session state is empty",
+                self.name()
+            );
+            return Ok(());
+        }
+        ensure!(
+            self.ef_decay.is_some(),
+            "checkpoint carries error-feedback session state but codec {:?} \
+             has no EF armed",
+            self.name()
+        );
+        let mut cur = ByteCursor::new(bytes);
+        let ctx = |e: crate::compression::error::CodecError| {
+            crate::err!("splitfc session state: {e}")
+        };
+        match cur.u8().map_err(ctx)? {
+            0 => {
+                ensure!(cur.is_empty(), "splitfc session state: trailing bytes");
+                self.ef = None;
+            }
+            1 => {
+                let rows = cur.u64().map_err(ctx)? as usize;
+                let cols = cur.u64().map_err(ctx)? as usize;
+                let decay = cur.f32().map_err(ctx)?;
+                let n = rows
+                    .checked_mul(cols)
+                    .filter(|&n| n * 4 == cur.remaining())
+                    .ok_or_else(|| {
+                        crate::err!(
+                            "splitfc session state: residual shape {rows}x{cols} \
+                             does not match {} payload bytes",
+                            cur.remaining()
+                        )
+                    })?;
+                let mut ef = ErrorFeedback::new(rows, cols);
+                ef.decay = decay;
+                let raw = cur.take(n * 4).map_err(ctx)?;
+                for (dst, b) in ef.residual.data.iter_mut().zip(raw.chunks_exact(4)) {
+                    *dst = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+                }
+                self.ef = Some(ef);
+            }
+            other => crate::bail!("splitfc session state: bad flag {other}"),
+        }
+        Ok(())
+    }
+
     fn encode_uplink(
         &mut self,
         f: &Matrix,
@@ -471,6 +547,49 @@ mod tests {
         let ef = SplitFcCodec::paper_default(8.0).with_error_feedback(1.0);
         assert!(ef.requirements().stateful);
         assert_eq!(ef.name(), "splitfc[ad,R=8,fwq,ef]");
+    }
+
+    #[test]
+    fn session_state_roundtrips_the_ef_residual() {
+        // drive a real EF encode so the residual is non-trivial
+        let params = CodecParams::new(4, 8, 2.0);
+        let mut rng = Rng::new(5);
+        let mut f = Matrix::zeros(4, 8);
+        for (i, v) in f.data.iter_mut().enumerate() {
+            *v = (i as f32 * 0.37).sin();
+        }
+        let mut a = SplitFcCodec::new(Some(DropKind::Random), 2.0, FwqMode::NoQuant)
+            .with_error_feedback(0.9);
+        a.encode_uplink(&f, None, &params, &mut rng).unwrap();
+        let blob = a.export_session();
+        assert!(!blob.is_empty());
+        let mut b = SplitFcCodec::new(Some(DropKind::Random), 2.0, FwqMode::NoQuant)
+            .with_error_feedback(0.9);
+        b.restore_session(&blob).unwrap();
+        assert_eq!(
+            a.ef_residual_norm().unwrap().to_bits(),
+            b.ef_residual_norm().unwrap().to_bits()
+        );
+        // the restored session continues identically: same input + same RNG
+        // state must produce byte-identical frames
+        let mut ra = Rng::new(6);
+        let mut rb = Rng::new(6);
+        let ea = a.encode_uplink(&f, None, &params, &mut ra).unwrap();
+        let eb = b.encode_uplink(&f, None, &params, &mut rb).unwrap();
+        assert_eq!(ea.frame.payload, eb.frame.payload);
+
+        // an armed-but-unused session exports the 1-byte marker
+        let c = SplitFcCodec::paper_default(8.0).with_error_feedback(1.0);
+        assert_eq!(c.export_session(), vec![0u8]);
+        // a stateless session exports empty and rejects stateful blobs
+        let mut plain = SplitFcCodec::paper_default(8.0);
+        assert!(plain.export_session().is_empty());
+        assert!(plain.restore_session(&blob).is_err());
+        assert!(plain.restore_session(&[]).is_ok());
+        // truncated/garbled state is a typed error, not a panic
+        let mut d = SplitFcCodec::paper_default(8.0).with_error_feedback(1.0);
+        assert!(d.restore_session(&blob[..blob.len() - 3]).is_err());
+        assert!(d.restore_session(&[7u8]).is_err());
     }
 
     #[test]

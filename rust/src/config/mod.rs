@@ -108,6 +108,14 @@ pub struct TrainConfig {
     /// Must exceed the workers' retry deadline or a transient outage may
     /// be declared a departure while the device is still backing off.
     pub liveness_timeout_s: f64,
+    /// snapshot the full run state every this many rounds (0 = off)
+    pub checkpoint_every: usize,
+    /// directory checkpoints are written to (atomic write-then-rename)
+    pub checkpoint_dir: String,
+    /// retain only the newest this-many checkpoints (older ones pruned)
+    pub checkpoint_keep: usize,
+    /// resume from this checkpoint file ("" = fresh run)
+    pub resume: String,
 }
 
 impl TrainConfig {
@@ -158,6 +166,10 @@ impl TrainConfig {
             retry_cap_ms: 500,
             retry_deadline_s: 15.0,
             liveness_timeout_s: 0.0,
+            checkpoint_every: 0,
+            checkpoint_dir: "checkpoints".to_string(),
+            checkpoint_keep: 3,
+            resume: String::new(),
         }
     }
 
@@ -228,6 +240,14 @@ impl TrainConfig {
         self.retry_deadline_s = args.get_f64("retry-deadline-s", self.retry_deadline_s);
         self.liveness_timeout_s =
             args.get_f64("liveness-timeout-s", self.liveness_timeout_s);
+        self.checkpoint_every = args.get_usize("checkpoint-every", self.checkpoint_every);
+        if let Some(v) = args.get("checkpoint-dir") {
+            self.checkpoint_dir = v.to_string();
+        }
+        self.checkpoint_keep = args.get_usize("checkpoint-keep", self.checkpoint_keep);
+        if let Some(v) = args.get("resume") {
+            self.resume = v.to_string();
+        }
         // deprecated spelling of `--scenario "cut[dev=K,send=N]"`; kept for
         // script compatibility, now a comma list of device:send pairs that
         // appends to whatever --scenario already configured
@@ -292,7 +312,54 @@ impl TrainConfig {
             ("scenario", Json::str(self.scenario.to_string())),
             ("rpc_deadline_s", Json::num(self.rpc_deadline_s)),
             ("liveness_timeout_s", Json::num(self.liveness_timeout_s)),
+            ("checkpoint_every", Json::num(self.checkpoint_every as f64)),
+            ("checkpoint_dir", Json::str(self.checkpoint_dir.clone())),
+            ("resume", Json::str(self.resume.clone())),
         ])
+    }
+
+    /// FNV-1a digest of every trajectory-critical config field: two runs
+    /// with equal fingerprints follow byte-identical trajectories (at
+    /// staleness 0, where the shared Algorithm-1 stream rules), so a
+    /// checkpoint refuses to resume under a config whose fingerprint
+    /// differs. Knobs that only change speed, transport, or output plumbing
+    /// — threads, simd, concurrency, transport/listen, metrics path, eval
+    /// and checkpoint cadence, retry/liveness timing, link capacity/fading
+    /// (modeled time, never payload bytes) — are deliberately excluded.
+    pub fn trajectory_fingerprint(&self) -> u64 {
+        fn eat(mut h: u64, bytes: &[u8]) -> u64 {
+            for &b in bytes {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+            // field separator so adjacent fields cannot alias
+            h ^= 0x1F;
+            h.wrapping_mul(0x100_0000_01b3)
+        }
+        let partition: u8 = match self.partition {
+            PartitionKind::LabelShards => 0,
+            PartitionKind::Dirichlet => 1,
+            PartitionKind::Writers => 2,
+        };
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        h = eat(h, self.preset.as_bytes());
+        h = eat(h, self.backend.name().as_bytes());
+        h = eat(h, &(self.devices as u64).to_le_bytes());
+        h = eat(h, &(self.rounds as u64).to_le_bytes());
+        h = eat(h, &[partition]);
+        h = eat(h, &self.seed.to_le_bytes());
+        h = eat(h, &self.lr.to_bits().to_le_bytes());
+        h = eat(h, &self.up_bits_per_entry.to_bits().to_le_bytes());
+        h = eat(h, &self.down_bits_per_entry.to_bits().to_le_bytes());
+        h = eat(h, self.scheme.canonical_name().as_bytes());
+        h = eat(h, &self.q_ep.to_le_bytes());
+        h = eat(h, &self.noise_seed.to_le_bytes());
+        h = eat(h, &(self.n_train as u64).to_le_bytes());
+        h = eat(h, &(self.n_test as u64).to_le_bytes());
+        h = eat(h, &(self.staleness as u64).to_le_bytes());
+        h = eat(h, &[self.per_device_opt as u8]);
+        h = eat(h, self.scenario.to_string().as_bytes());
+        h
     }
 }
 
@@ -509,6 +576,65 @@ mod tests {
              cut[dev=0,send=6],cut[dev=1,send=9]"
         );
         assert!(c.apply_overrides(&args("x --scenario straggler[bogus=1]")).is_err());
+    }
+
+    #[test]
+    fn checkpoint_flags_plumb_through() {
+        let mut c = TrainConfig::for_preset("tiny");
+        assert_eq!(c.checkpoint_every, 0);
+        assert_eq!(c.checkpoint_dir, "checkpoints");
+        assert_eq!(c.checkpoint_keep, 3);
+        assert!(c.resume.is_empty());
+        c.apply_overrides(&args(
+            "x --checkpoint-every 5 --checkpoint-dir snaps --checkpoint-keep 2 \
+             --resume snaps/ckpt-r00005.splitfc",
+        ))
+        .unwrap();
+        assert_eq!(c.checkpoint_every, 5);
+        assert_eq!(c.checkpoint_dir, "snaps");
+        assert_eq!(c.checkpoint_keep, 2);
+        assert_eq!(c.resume, "snaps/ckpt-r00005.splitfc");
+        let j = c.to_json();
+        assert_eq!(j.req("checkpoint_every").as_usize(), Some(5));
+        assert_eq!(j.req("checkpoint_dir").as_str(), Some("snaps"));
+        assert_eq!(j.req("resume").as_str(), Some("snaps/ckpt-r00005.splitfc"));
+    }
+
+    #[test]
+    fn fingerprint_tracks_trajectory_critical_fields_only() {
+        let base = TrainConfig::for_preset("tiny");
+        let fp = base.trajectory_fingerprint();
+        // deterministic
+        assert_eq!(fp, TrainConfig::for_preset("tiny").trajectory_fingerprint());
+        // every trajectory-critical knob moves it
+        for mutate in [
+            (|c: &mut TrainConfig| c.seed = 99) as fn(&mut TrainConfig),
+            |c| c.devices += 1,
+            |c| c.rounds += 1,
+            |c| c.lr *= 2.0,
+            |c| c.up_bits_per_entry = 4.0,
+            |c| c.n_train += 1,
+            |c| c.per_device_opt = true,
+            |c| c.staleness = 1,
+            |c| c.partition = PartitionKind::Writers,
+            |c| c.scheme = parse_scheme("splitfc", 8.0).unwrap(),
+        ] {
+            let mut c = TrainConfig::for_preset("tiny");
+            mutate(&mut c);
+            assert_ne!(c.trajectory_fingerprint(), fp, "mutation must change fingerprint");
+        }
+        // speed/plumbing knobs must NOT move it — a resumed run may change
+        // them freely
+        let mut c = TrainConfig::for_preset("tiny");
+        c.threads = 7;
+        c.eval_every = 2;
+        c.metrics_path = "m.jsonl".into();
+        c.transport = TransportKind::Tcp;
+        c.checkpoint_every = 5;
+        c.resume = "x".into();
+        c.liveness_timeout_s = 9.0;
+        c.link_capacity_bps = 1e3;
+        assert_eq!(c.trajectory_fingerprint(), fp);
     }
 
     #[test]

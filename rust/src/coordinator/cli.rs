@@ -23,6 +23,8 @@ USAGE:
                 [--fading-sigma X] [--scenario SPEC] [--rpc-deadline-s X]
                 [--retry-base-ms N] [--retry-cap-ms N] [--retry-deadline-s X]
                 [--liveness-timeout-s X]
+                [--checkpoint-every N] [--checkpoint-dir DIR]
+                [--checkpoint-keep K] [--resume PATH]
   splitfc device --connect HOST:PORT --device K --preset P [--scheme S] ...
                 # device-side process for one remote device; preset, scheme,
                 # seed and fleet flags must match the server's `train` run
@@ -37,6 +39,9 @@ USAGE:
   splitfc latency-calc [--capacity-bps 10e6 --batch 256 --dbar 8192
                 --iters 100 --devices 100]
   splitfc inspect [--artifacts artifacts]
+  splitfc ckpt inspect PATH
+                # dump a checkpoint's self-describing header and section
+                # table without loading any tensors
   splitfc help
 
 SCHEMES (resolved through the codec registry; `codec-smoke` lists all):
@@ -106,6 +111,22 @@ SCENARIOS (seeded failure injection; same spec = same event timeline):
                           marked departed and the run degrades gracefully to
                           the surviving cohort (0 = wait forever); set it
                           above --retry-deadline-s
+
+CHECKPOINT & RESUME (byte-identical restart):
+  --checkpoint-every N    snapshot the full run state every N rounds at the
+                          round barrier (0 = off): server weights + ADAM
+                          slots, per-device state incl. loader order and
+                          codec sessions (error feedback), all RNG streams,
+                          totals and metrics watermark
+  --checkpoint-dir DIR    where snapshots land (default: checkpoints);
+                          written atomically (tmp + rename)
+  --checkpoint-keep K     retain the last K snapshots (default 3)
+  --resume PATH           restart from a snapshot: validates the header
+                          against the run config (named mismatch errors),
+                          restores every state stream, appends to --metrics
+                          after truncating post-snapshot records, and
+                          continues at the next round — the metrics stream
+                          is byte-identical to an uninterrupted run
 ";
 
 pub fn main() {
@@ -135,6 +156,7 @@ pub fn main() {
         Some("metrics-diff") => cmd_metrics_diff(&args),
         Some("latency-calc") => cmd_latency(&args),
         Some("inspect") => cmd_inspect(&args),
+        Some("ckpt") => cmd_ckpt(&args),
         Some("help") | None => {
             print!("{HELP}");
             Ok(())
@@ -343,6 +365,37 @@ fn cmd_latency(args: &Args) -> Result<()> {
     );
     for ratio in [160.0, 240.0, 320.0] {
         println!("  at {ratio:>4}x compression: {:.3e} s", t / ratio);
+    }
+    Ok(())
+}
+
+/// `splitfc ckpt inspect PATH`: print a checkpoint's self-describing
+/// envelope — magic, format version, codec identity, fleet shape, the
+/// per-section length/CRC table — without decoding a single tensor.
+/// Corrupt, truncated and future-format files fail with typed errors.
+fn cmd_ckpt(args: &Args) -> Result<()> {
+    let action = args.positional.get(1).map(|s| s.as_str());
+    let path = match (action, args.positional.get(2)) {
+        (Some("inspect"), Some(p)) => std::path::Path::new(p.as_str()),
+        _ => crate::bail!("usage: splitfc ckpt inspect PATH"),
+    };
+    let info = crate::checkpoint::inspect(path)?;
+    let h = &info.header;
+    println!("checkpoint {} ({} bytes)", path.display(), info.file_len);
+    println!("  format:      v{}", h.format);
+    println!("  codec:       id {} v{} ({})", h.codec_id, h.codec_version, h.scheme);
+    println!("  preset:      {}", h.preset);
+    println!("  fleet:       {} device(s), {} round(s)", h.devices, h.rounds);
+    println!("  round:       {} (resume starts at {})", h.round, h.round + 1);
+    println!("  seed:        {}", h.seed);
+    println!("  fingerprint: {:016x}", h.fingerprint);
+    println!(
+        "  scenario:    {}",
+        if h.scenario.is_empty() { "(calm)" } else { &h.scenario }
+    );
+    println!("  sections:");
+    for s in &info.sections {
+        println!("    {:<10} {:>10} bytes  crc32 {:08x}", s.name, s.len, s.crc);
     }
     Ok(())
 }

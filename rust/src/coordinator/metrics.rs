@@ -1,7 +1,9 @@
 //! Per-step metrics, summaries and JSONL emission.
 
-use std::io::Write;
+use std::io::{Seek, Write};
 
+use crate::checkpoint::CkptError;
+use crate::util::error::Result;
 use crate::util::Json;
 
 #[derive(Debug, Clone)]
@@ -107,6 +109,66 @@ impl MetricsWriter {
         MetricsWriter { out: Some(std::io::BufWriter::new(f)) }
     }
 
+    /// Reopen `path` for **appending** after `--resume` — the fix for the
+    /// historical truncate-on-open: `create` would have wiped the records
+    /// the interrupted run already earned. Verifies the file is at least as
+    /// long as when the checkpoint was taken (`expect_len`, captured after
+    /// a flush at the barrier), truncates everything past it — records the
+    /// killed run wrote after the snapshot, including a torn trailing line
+    /// — and cross-checks the surviving tail record's global step against
+    /// the checkpoint boundary (`boundary_g` = steps committed at it).
+    pub fn resume(path: &str, expect_len: u64, boundary_g: u64) -> Result<MetricsWriter> {
+        if path.is_empty() {
+            return Ok(MetricsWriter { out: None });
+        }
+        let mismatch = |reason: String| CkptError::MetricsMismatch { reason };
+        let f = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .map_err(|e| mismatch(format!("cannot open metrics file {path:?}: {e}")))?;
+        let len = f
+            .metadata()
+            .map_err(|e| mismatch(format!("cannot stat metrics file {path:?}: {e}")))?
+            .len();
+        if len < expect_len {
+            return Err(mismatch(format!(
+                "metrics file {path:?} is {len} bytes but the checkpoint recorded \
+                 {expect_len} — resuming into the wrong file would corrupt it"
+            ))
+            .into());
+        }
+        if len > expect_len {
+            f.set_len(expect_len)
+                .map_err(|e| mismatch(format!("cannot truncate {path:?}: {e}")))?;
+        }
+        if expect_len > 0 {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| mismatch(format!("cannot read {path:?}: {e}")))?;
+            let tail = text
+                .lines()
+                .rev()
+                .find(|l| !l.trim().is_empty())
+                .ok_or_else(|| mismatch(format!("metrics file {path:?} has no records")))?;
+            let j = Json::parse(tail).map_err(|e| {
+                mismatch(format!("metrics tail record is not valid JSON: {e}"))
+            })?;
+            if let Some(g) = j.get("g").and_then(|g| g.as_usize()) {
+                if g as u64 >= boundary_g {
+                    return Err(mismatch(format!(
+                        "metrics tail record has g={g}, but the checkpoint was taken \
+                         after step {boundary_g} boundary with g < {boundary_g}"
+                    ))
+                    .into());
+                }
+            }
+        }
+        let mut f = f;
+        f.seek(std::io::SeekFrom::End(0))
+            .map_err(|e| mismatch(format!("cannot seek {path:?}: {e}")))?;
+        Ok(MetricsWriter { out: Some(std::io::BufWriter::new(f)) })
+    }
+
     pub fn write(&mut self, j: &Json) {
         if let Some(out) = &mut self.out {
             writeln!(out, "{}", j.to_string_compact()).expect("metrics write");
@@ -173,5 +235,62 @@ mod tests {
         let mut w = MetricsWriter::create("");
         w.write(&Json::Null);
         w.flush();
+    }
+
+    fn step_line(g: usize) -> Json {
+        Json::obj(vec![("t", Json::num(1.0)), ("g", Json::num(g as f64))])
+    }
+
+    #[test]
+    fn resume_appends_after_truncating_post_checkpoint_records() {
+        let path = std::env::temp_dir().join("splitfc_metrics_resume_test.jsonl");
+        let p = path.to_str().unwrap();
+        let mut w = MetricsWriter::create(p);
+        w.write(&step_line(0));
+        w.write(&step_line(1));
+        w.flush();
+        let expect_len = std::fs::metadata(p).unwrap().len();
+        // the killed run wrote two more records after the snapshot, the
+        // second torn mid-line by the kill
+        w.write(&step_line(2));
+        w.flush();
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(p).unwrap();
+        f.write_all(b"{\"t\":1,\"g\":3,\"lo").unwrap();
+        drop(f);
+        drop(w);
+
+        let mut r = MetricsWriter::resume(p, expect_len, 2).unwrap();
+        r.write(&step_line(2));
+        r.flush();
+        let text = std::fs::read_to_string(p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "g=0, g=1 kept; post-checkpoint tail replaced");
+        assert!(lines[2].contains("\"g\":2"), "{}", lines[2]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resume_rejects_short_file_and_inconsistent_tail() {
+        let path = std::env::temp_dir().join("splitfc_metrics_resume_bad_test.jsonl");
+        let p = path.to_str().unwrap();
+        let mut w = MetricsWriter::create(p);
+        w.write(&step_line(0));
+        w.write(&step_line(1));
+        w.flush();
+        drop(w);
+        let len = std::fs::metadata(p).unwrap().len();
+        // shorter than the checkpoint recorded: wrong file
+        let e = MetricsWriter::resume(p, len + 100, 2).unwrap_err().to_string();
+        assert!(e.contains("metrics"), "{e}");
+        // tail g=1 not < boundary 1: records past the boundary are missing
+        let e = MetricsWriter::resume(p, len, 1).unwrap_err().to_string();
+        assert!(e.contains("g=1"), "{e}");
+        // consistent boundary passes and the file is untouched
+        MetricsWriter::resume(p, len, 2).unwrap();
+        assert_eq!(std::fs::metadata(p).unwrap().len(), len);
+        // empty path stays a no-op writer
+        MetricsWriter::resume("", 0, 0).unwrap();
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -28,6 +28,6 @@ pub mod worker;
 pub use metrics::{StepRecord, TrainSummary};
 pub use protocol::{PsEndpoint, RunGate};
 pub use scheduler::Scheduler;
-pub use server::{DeviceOpt, ParameterServer};
+pub use server::{DeviceOpt, DeviceOptState, ParameterServer, ServerSnap};
 pub use trainer::{build_parts, run_remote_device, FleetParts, Trainer};
 pub use worker::{DeviceWorker, RetryPolicy};

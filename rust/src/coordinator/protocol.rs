@@ -28,6 +28,7 @@
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::checkpoint::LinkSnap;
 use crate::compression::{Codec, CodecParams, Reclaim};
 use crate::coordinator::metrics::StepRecord;
 use crate::coordinator::server::ParameterServer;
@@ -69,7 +70,10 @@ struct GateState {
     /// staleness window in steps (S·K); 0 = strict round-robin
     window: usize,
     eval_every: usize,
-    /// last round whose eval barrier has been released
+    /// snapshot cadence in rounds; checkpoint barriers gate step entry
+    /// exactly like eval barriers so the fleet quiesces at the boundary
+    ckpt_every: usize,
+    /// last round whose eval/checkpoint barrier has been released
     eval_done_round: usize,
     aborted: bool,
 }
@@ -99,6 +103,7 @@ impl RunGate {
                 watermark: 0,
                 window: 0,
                 eval_every: 0,
+                ckpt_every: 0,
                 eval_done_round: 0,
                 aborted: false,
             }),
@@ -107,7 +112,7 @@ impl RunGate {
     }
 
     /// Arm the gate for a run of `total_steps` schedule-local steps.
-    pub fn begin(&self, total_steps: usize, window: usize, eval_every: usize) {
+    pub fn begin(&self, total_steps: usize, window: usize, eval_every: usize, ckpt_every: usize) {
         let mut st = self.state.lock().unwrap();
         st.active = true;
         st.done.clear();
@@ -115,6 +120,7 @@ impl RunGate {
         st.watermark = 0;
         st.window = window;
         st.eval_every = eval_every;
+        st.ckpt_every = ckpt_every;
         st.eval_done_round = 0;
         st.aborted = false;
         self.cv.notify_all();
@@ -139,7 +145,8 @@ impl RunGate {
             if st.aborted {
                 return Err(crate::err!("scheduler aborted (another worker failed)"));
             }
-            let gate_round = eval_gate(round, st.eval_every);
+            let gate_round =
+                eval_gate(round, st.eval_every).max(eval_gate(round, st.ckpt_every));
             if st.watermark + st.window >= local && st.eval_done_round >= gate_round {
                 return Ok(());
             }
@@ -290,7 +297,7 @@ struct Courier {
 
 /// Per-device totals accumulated PS-side at `Commit` (so they exist even
 /// for devices on remote processes).
-#[derive(Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DeviceTotals {
     pub up_bits: u64,
     pub down_bits: u64,
@@ -353,6 +360,16 @@ pub struct PsEndpoint {
     run: Mutex<RunInfo>,
     /// expected ∇w_d payload length (bytes) for `Commit` validation
     nd_bytes: usize,
+    /// latest per-device state blob, refreshed at every `Commit` while
+    /// checkpointing and replayed to devices that re-`Hello` after a resume
+    dev_states: Vec<Mutex<Option<Vec<u8>>>>,
+    /// snapshot cadence in rounds (0 = no checkpointing); set before the
+    /// endpoint is shared
+    ckpt_every: usize,
+    /// schedule round the next run starts at: 1 fresh, `round + 1` resumed
+    first_round: usize,
+    /// run totals restored from a checkpoint, seeded into `begin_run`
+    resume_totals: Option<Vec<DeviceTotals>>,
 }
 
 impl PsEndpoint {
@@ -378,7 +395,67 @@ impl PsEndpoint {
             liveness: Mutex::new((0..devices).map(|_| DevLive::fresh()).collect()),
             run: Mutex::new(RunInfo { rounds: usize::MAX, first_step: 0 }),
             nd_bytes: nd_params * 4,
+            dev_states: (0..devices).map(|_| Mutex::new(None)).collect(),
+            ckpt_every: 0,
+            first_round: 1,
+            resume_totals: None,
         }
+    }
+
+    /// Enable checkpointing: devices are told (via the handshake) to attach
+    /// their state blob at every `Commit`, and snapshot barriers gate step
+    /// entry every `ckpt_every` rounds. Call before sharing the endpoint.
+    pub fn set_checkpoint(&mut self, ckpt_every: usize) {
+        self.ckpt_every = ckpt_every;
+    }
+
+    /// Schedule round the next run starts at (1 unless resumed).
+    pub fn first_round(&self) -> usize {
+        self.first_round
+    }
+
+    /// Prime the endpoint with a restored checkpoint taken after `round`
+    /// completed rounds: the next [`PsEndpoint::begin_run`] pre-completes
+    /// those rounds and seeds their totals, the PS-side codec sessions are
+    /// restored, and devices that (re-)`Hello` receive their state blob
+    /// through the handshake. Call before sharing the endpoint — a failure
+    /// here aborts startup before any run state exists.
+    pub fn prime_resume(
+        &mut self,
+        round: usize,
+        totals: Vec<DeviceTotals>,
+        links: &[LinkSnap],
+    ) -> Result<()> {
+        crate::ensure!(round >= 1, "cannot resume from a checkpoint at round 0");
+        crate::ensure!(
+            totals.len() == self.devices && links.len() == self.devices,
+            "checkpoint fleet shape mismatch: {} totals / {} links for {} devices",
+            totals.len(),
+            links.len(),
+            self.devices
+        );
+        for (d, link) in links.iter().enumerate() {
+            self.codecs[d]
+                .lock()
+                .unwrap()
+                .restore_session(&link.ps_session)
+                .map_err(|e| crate::err!("device {d} PS codec session: {e}"))?;
+            *self.dev_states[d].lock().unwrap() = link.device.clone();
+        }
+        self.first_round = round + 1;
+        self.resume_totals = Some(totals);
+        Ok(())
+    }
+
+    /// Per-link checkpoint state: the PS codec session plus the latest
+    /// device blob, in device order.
+    pub fn export_links(&self) -> Vec<LinkSnap> {
+        (0..self.devices)
+            .map(|d| LinkSnap {
+                ps_session: self.codecs[d].lock().unwrap().export_session(),
+                device: self.dev_states[d].lock().unwrap().clone(),
+            })
+            .collect()
     }
 
     pub fn devices(&self) -> usize {
@@ -390,10 +467,23 @@ impl PsEndpoint {
     /// and pre-complete `skips` — schedule-local steps the scenario
     /// timeline says no device will run (departures, delayed joins,
     /// dropout windows).
-    pub fn begin_run(&self, rounds: usize, first_step: usize, eval_every: usize, skips: &[usize]) {
+    /// `eval_every` / `ckpt_every` arm the gate's round barriers — pass 0
+    /// when the caller serves that boundary inline (the sequential driver).
+    pub fn begin_run(
+        &self,
+        rounds: usize,
+        first_step: usize,
+        eval_every: usize,
+        ckpt_every: usize,
+        skips: &[usize],
+    ) {
         *self.run.lock().unwrap() = RunInfo { rounds, first_step };
-        for t in self.totals.lock().unwrap().iter_mut() {
-            *t = DeviceTotals::default();
+        {
+            let mut totals = self.totals.lock().unwrap();
+            match &self.resume_totals {
+                Some(seed) => totals.clone_from(seed),
+                None => totals.iter_mut().for_each(|t| *t = DeviceTotals::default()),
+            }
         }
         for c in &self.couriers {
             *c.lock().unwrap() = Courier::default();
@@ -402,7 +492,20 @@ impl PsEndpoint {
             l.departed = false;
             l.last_seen = Instant::now();
         }
-        self.gate.begin(rounds * self.devices, self.staleness * self.devices, eval_every);
+        self.gate.begin(
+            rounds * self.devices,
+            self.staleness * self.devices,
+            eval_every,
+            ckpt_every,
+        );
+        // resume: the checkpointed rounds are already committed — their
+        // schedule-local steps pre-complete and their barriers are released
+        let resumed = self.first_round - 1;
+        if resumed > 0 {
+            let done: Vec<usize> = (0..resumed * self.devices).collect();
+            self.gate.skip(&done);
+            self.gate.eval_done(resumed);
+        }
         self.gate.skip(skips);
     }
 
@@ -410,6 +513,12 @@ impl PsEndpoint {
     /// fold them in device order so float sums stay deterministic).
     pub fn finish_run(&self) -> Vec<DeviceTotals> {
         self.gate.finish();
+        self.totals.lock().unwrap().clone()
+    }
+
+    /// The per-device totals as of now — read at a quiesced checkpoint
+    /// barrier, where they are exact.
+    pub fn totals_snapshot(&self) -> Vec<DeviceTotals> {
         self.totals.lock().unwrap().clone()
     }
 
@@ -590,8 +699,14 @@ impl PsEndpoint {
                 }
                 Ok(Some(reply))
             }
-            Msg::Commit { device, round, local, grad, report } => {
+            Msg::Commit { device, round, local, grad, report, state } => {
                 self.check_device(device)?;
+                if let Some(blob) = state {
+                    // freshest post-step device state; a duplicate Commit
+                    // after a reconnect carries the identical blob, so
+                    // re-stashing is harmless
+                    *self.dev_states[device as usize].lock().unwrap() = Some(blob);
+                }
                 let mut courier = self.couriers[device as usize].lock().unwrap();
                 if courier.last_committed == Some(local) {
                     return Ok(Some(Msg::CommitAck)); // duplicate after reconnect
@@ -655,33 +770,45 @@ impl PsEndpoint {
 
     fn handle_hello(&self, device: u32, codec_id: u32, codec_version: u16) -> Msg {
         let rounds = self.run.lock().unwrap().rounds;
-        let ack = |err: Option<String>| Msg::HelloAck {
+        let ack = |state: Option<Vec<u8>>, err: Option<String>| Msg::HelloAck {
             devices: self.devices as u32,
             rounds: rounds.min(u32::MAX as usize) as u32,
             staleness: self.staleness as u32,
+            first_round: self.first_round as u32,
+            ckpt_every: self.ckpt_every as u32,
+            state,
             err,
         };
         if device as usize >= self.devices {
-            return ack(Some(format!(
-                "device index {device} out of range (fleet has {})",
-                self.devices
-            )));
+            return ack(
+                None,
+                Some(format!(
+                    "device index {device} out of range (fleet has {})",
+                    self.devices
+                )),
+            );
         }
         if self.liveness.lock().unwrap()[device as usize].departed {
-            return ack(Some(format!(
-                "device {device} was marked departed after a liveness timeout; \
-                 the run proceeded without it"
-            )));
+            return ack(
+                None,
+                Some(format!(
+                    "device {device} was marked departed after a liveness timeout; \
+                     the run proceeded without it"
+                )),
+            );
         }
         let codec = self.codecs[device as usize].lock().unwrap();
         let (want_id, want_ver) = (codec.wire_id(), codec.wire_version());
         if (codec_id, codec_version) != (want_id, want_ver) {
-            return ack(Some(format!(
-                "codec mismatch: device speaks {codec_id:#010x} v{codec_version}, \
-                 server session is {want_id:#010x} v{want_ver}"
-            )));
+            return ack(
+                None,
+                Some(format!(
+                    "codec mismatch: device speaks {codec_id:#010x} v{codec_version}, \
+                     server session is {want_id:#010x} v{want_ver}"
+                )),
+            );
         }
-        ack(None)
+        ack(self.dev_states[device as usize].lock().unwrap().clone(), None)
     }
 
     fn check_device(&self, device: u32) -> Result<()> {
@@ -705,7 +832,7 @@ mod tests {
 
     fn armed_gate(total: usize, window: usize, eval_every: usize) -> RunGate {
         let g = RunGate::new();
-        g.begin(total, window, eval_every);
+        g.begin(total, window, eval_every, 0);
         g
     }
 
@@ -764,9 +891,32 @@ mod tests {
         let g = armed_gate(2, 0, 0);
         g.finish();
         assert!(g.wait_start(1, 1).is_ok(), "finished gate must not block");
-        g.begin(2, 0, 0);
+        g.begin(2, 0, 0, 0);
         g.complete(0);
         assert_eq!(g.watermark(), 1);
+    }
+
+    #[test]
+    fn checkpoint_barrier_gates_step_entry_like_eval() {
+        // 1 device, window large enough that the watermark never blocks;
+        // ckpt_every = 2 must still hold round 3 until barrier 2 releases
+        let g = RunGate::new();
+        g.begin(6, 100, 0, 2);
+        g.complete(0);
+        g.complete(1);
+        assert!(!g.wait_watermark_for(3, Duration::from_millis(5)).unwrap());
+        // round 3 is gated on the checkpoint barrier at round 2
+        let blocked = std::sync::atomic::AtomicBool::new(true);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                g.wait_start(2, 3).unwrap();
+                blocked.store(false, std::sync::atomic::Ordering::SeqCst);
+            });
+            std::thread::sleep(Duration::from_millis(20));
+            assert!(blocked.load(std::sync::atomic::Ordering::SeqCst));
+            g.eval_done(2);
+        });
+        assert!(!blocked.load(std::sync::atomic::Ordering::SeqCst));
     }
 
     #[test]

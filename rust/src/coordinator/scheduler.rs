@@ -48,6 +48,12 @@ pub struct Scheduler {
     pub concurrency: usize,
     /// evaluate every this many rounds (0 = only at the end)
     pub eval_every: usize,
+    /// snapshot every this many rounds (0 = no checkpointing); the
+    /// snapshot itself is taken by the hook passed to [`Scheduler::run`]
+    pub ckpt_every: usize,
+    /// first round to drive (1 on a fresh run, checkpoint round + 1 after
+    /// a resume — the endpoint pre-completes the earlier rounds)
+    pub first_round: usize,
     /// schedule-local steps no device will run (scenario departures,
     /// delayed joins, dropout windows) — pre-completed at `begin_run`
     pub skips: Vec<usize>,
@@ -83,10 +89,11 @@ fn drive_devices(
     chunk: &mut [DeviceWorker],
     train: &Dataset,
     first_step: usize,
+    first_round: usize,
     rounds: usize,
     devices: usize,
 ) -> Result<()> {
-    for t in 1..=rounds {
+    for t in first_round..=rounds {
         for w in chunk.iter_mut() {
             if !w.script().participates(t) {
                 continue; // scenario: not joined yet, dropped out, or departed
@@ -109,10 +116,39 @@ fn drive_devices(
     Ok(())
 }
 
+/// The round barriers a run must serve: every eval and checkpoint boundary
+/// in `(first_round - 1, rounds]`, sorted and deduplicated (a round that is
+/// both evaluates first, then snapshots, then releases once).
+fn barrier_rounds(
+    first_round: usize,
+    rounds: usize,
+    eval_every: usize,
+    ckpt_every: usize,
+) -> Vec<usize> {
+    let mut out = Vec::new();
+    for every in [eval_every, ckpt_every] {
+        if every == 0 {
+            continue;
+        }
+        let mut t = every;
+        while t <= rounds {
+            if t >= first_round {
+                out.push(t);
+            }
+            t += every;
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
 impl Scheduler {
     /// Train `rounds` rounds over the endpoint's fleet; local devices are
     /// driven by `workers`, remote devices (if any) connect over the
-    /// listening transport and are awaited at the watermark.
+    /// listening transport and are awaited at the watermark. `snapshot` is
+    /// the checkpoint hook, called with the boundary round at every
+    /// `ckpt_every` multiple while the fleet is quiesced at the barrier.
     pub fn run(
         &self,
         endpoint: &PsEndpoint,
@@ -120,18 +156,26 @@ impl Scheduler {
         workers: &mut [DeviceWorker],
         train: &Dataset,
         test: &Dataset,
+        snapshot: Option<&(dyn Fn(usize) -> Result<()> + Sync)>,
     ) -> Result<TrainSummary> {
         let t0 = Instant::now();
         let devices = endpoint.devices();
         let sequential = self.concurrency <= 1 && workers.len() == devices;
-        // the sequential driver evaluates inline between rounds, so its
-        // gate needs no eval barriers
-        let eval_gate_every = if sequential { 0 } else { self.eval_every };
-        endpoint.begin_run(self.rounds, self.first_step, eval_gate_every, &self.skips);
+        // the sequential driver evaluates and snapshots inline between
+        // rounds, so its gate needs no barriers
+        let (eval_gate_every, ckpt_gate_every) =
+            if sequential { (0, 0) } else { (self.eval_every, self.ckpt_every) };
+        endpoint.begin_run(
+            self.rounds,
+            self.first_step,
+            eval_gate_every,
+            ckpt_gate_every,
+            &self.skips,
+        );
         let res = if sequential {
-            self.run_sequential(server, workers, devices, train, test)
+            self.run_sequential(server, workers, devices, train, test, snapshot)
         } else {
-            self.run_concurrent(endpoint, server, workers, devices, train, test)
+            self.run_concurrent(endpoint, server, workers, devices, train, test, snapshot)
         };
         let totals = endpoint.finish_run();
         let mut summary = res?;
@@ -167,9 +211,10 @@ impl Scheduler {
         devices: usize,
         train: &Dataset,
         test: &Dataset,
+        snapshot: Option<&(dyn Fn(usize) -> Result<()> + Sync)>,
     ) -> Result<TrainSummary> {
         let mut summary = TrainSummary::default();
-        for t in 1..=self.rounds {
+        for t in self.first_round..=self.rounds {
             for w in workers.iter_mut() {
                 if !w.script().participates(t) {
                     continue; // scenario: not joined yet, dropped out, or departed
@@ -192,6 +237,11 @@ impl Scheduler {
                 summary.eval_history.push((t, acc));
                 log_info!("round {t}: eval acc {:.4}", acc);
             }
+            if self.ckpt_every > 0 && t % self.ckpt_every == 0 {
+                if let Some(hook) = snapshot {
+                    hook(t).with_context(|| format!("checkpoint at round {t}"))?;
+                }
+            }
         }
         Ok(summary)
     }
@@ -209,11 +259,12 @@ impl Scheduler {
         devices: usize,
         train: &Dataset,
         test: &Dataset,
+        snapshot: Option<&(dyn Fn(usize) -> Result<()> + Sync)>,
     ) -> Result<TrainSummary> {
         let conc = self.concurrency.max(1);
         let chunk_len = ((workers.len() + conc - 1) / conc).max(1);
-        let (rounds, eval_every) = (self.rounds, self.eval_every);
-        let first_step = self.first_step;
+        let (rounds, eval_every, ckpt_every) = (self.rounds, self.eval_every, self.ckpt_every);
+        let (first_step, first_round) = (self.first_step, self.first_round);
         let liveness = self.liveness;
         let gate = &endpoint.gate;
 
@@ -228,7 +279,8 @@ impl Scheduler {
                 .map(|chunk| {
                     s.spawn(move || {
                         let mut guard = AbortOnDrop { gate, armed: true };
-                        let res = drive_devices(chunk, train, first_step, rounds, devices);
+                        let res =
+                            drive_devices(chunk, train, first_step, first_round, rounds, devices);
                         guard.armed = res.is_err();
                         res
                     })
@@ -247,19 +299,19 @@ impl Scheduler {
                 });
             }
 
-            // eval rounds are barriers: wait for the boundary watermark,
-            // evaluate the frozen snapshot, release the next round
-            if eval_every > 0 {
-                let mut t = eval_every;
-                while t <= rounds {
-                    if gate.wait_watermark(t * devices).is_err() {
-                        break; // a worker aborted; its error is joined below
-                    }
+            // eval and checkpoint rounds are barriers: wait for the
+            // boundary watermark (the fleet quiesces — no step of a later
+            // round may start), evaluate / snapshot the frozen state, then
+            // release the next round
+            for t in barrier_rounds(first_round, rounds, eval_every, ckpt_every) {
+                if gate.wait_watermark(t * devices).is_err() {
+                    break; // a worker aborted; its error is joined below
+                }
+                if eval_every > 0 && t % eval_every == 0 {
                     match server.evaluate(test) {
                         Ok(acc) => {
                             eval_history.push((t, acc));
                             log_info!("round {t}: eval acc {:.4}", acc);
-                            gate.eval_done(t);
                         }
                         Err(e) => {
                             eval_err = Some(e);
@@ -267,8 +319,17 @@ impl Scheduler {
                             break;
                         }
                     }
-                    t += eval_every;
                 }
+                if ckpt_every > 0 && t % ckpt_every == 0 {
+                    if let Some(hook) = snapshot {
+                        if let Err(e) = hook(t) {
+                            eval_err = Some(e);
+                            gate.abort();
+                            break;
+                        }
+                    }
+                }
+                gate.eval_done(t);
             }
 
             let joined: Vec<_> = handles
@@ -324,5 +385,16 @@ mod tests {
         assert!(mean_loss(&[]).is_nan());
         let m = mean_loss(&[1.0, 2.0, 4.0]);
         assert!((m - (7.0 / 3.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn barrier_rounds_unions_eval_and_checkpoint_boundaries() {
+        assert_eq!(barrier_rounds(1, 10, 0, 0), Vec::<usize>::new());
+        assert_eq!(barrier_rounds(1, 10, 4, 0), vec![4, 8]);
+        assert_eq!(barrier_rounds(1, 10, 0, 3), vec![3, 6, 9]);
+        // shared boundary 6 served once
+        assert_eq!(barrier_rounds(1, 12, 4, 6), vec![4, 6, 8, 12]);
+        // resume from round 6: earlier boundaries are already released
+        assert_eq!(barrier_rounds(7, 12, 4, 6), vec![8, 12]);
     }
 }

@@ -23,10 +23,11 @@ use std::time::Instant;
 use crate::coordinator::metrics::MetricsWriter;
 use crate::data::Dataset;
 use crate::model::{ParamSet, PresetInfo};
-use crate::optim::{Adam, Optimizer};
+use crate::optim::{Adam, AdamState, Optimizer};
 use crate::runtime::{Backend, ServerOutput};
 use crate::tensor::Matrix;
 use crate::util::error::Result;
+use crate::util::rng::RngState;
 use crate::util::{Json, Rng};
 
 /// PS-held ADAM state for the device-side model. Algorithm 1 shares one
@@ -44,6 +45,25 @@ impl DeviceOpt {
             DeviceOpt::PerDevice(opts) => opts[device].step(params, grad),
         }
     }
+}
+
+/// Serializable [`DeviceOpt`] state, mirroring its shared/per-device shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeviceOptState {
+    Shared(AdamState),
+    PerDevice(Vec<AdamState>),
+}
+
+/// The serializable PS state: both parameter sets, both optimizers, the
+/// shared Algorithm-1 RNG stream, and the cumulative backend time.
+#[derive(Debug, Clone)]
+pub struct ServerSnap {
+    pub wd: Vec<f32>,
+    pub ws: Vec<f32>,
+    pub opt_s: AdamState,
+    pub opt_d: DeviceOptState,
+    pub rng: RngState,
+    pub exec_s: f64,
 }
 
 /// Everything behind the PS lock: both parameter sets, both optimizers, and
@@ -158,6 +178,84 @@ impl ParameterServer {
     /// Run `f` with exclusive access to the legacy shared RNG stream.
     pub fn with_rng<T>(&self, f: impl FnOnce(&mut Rng) -> T) -> T {
         f(&mut self.rng.lock().unwrap())
+    }
+
+    /// Snapshot the full PS state for checkpointing. Taken at a quiesced
+    /// round barrier, so the lock sees no step mid-flight.
+    pub fn export_snap(&self) -> ServerSnap {
+        let st = self.state.lock().unwrap();
+        let opt_d = match &st.opt_d {
+            DeviceOpt::Shared(a) => DeviceOptState::Shared(a.export_state()),
+            DeviceOpt::PerDevice(opts) => {
+                DeviceOptState::PerDevice(opts.iter().map(Adam::export_state).collect())
+            }
+        };
+        ServerSnap {
+            wd: st.wd.data.clone(),
+            ws: st.ws.data.clone(),
+            opt_s: st.opt_s.export_state(),
+            opt_d,
+            rng: self.rng.lock().unwrap().export_state(),
+            exec_s: st.exec_s,
+        }
+    }
+
+    /// Overwrite the full PS state from a snapshot, validating every shape
+    /// against the live run (a snapshot from a different preset or
+    /// `--per-device-opt` setting is rejected before any field is touched).
+    pub fn restore_snap(&self, snap: &ServerSnap) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        crate::ensure!(
+            snap.wd.len() == st.wd.data.len() && snap.ws.len() == st.ws.data.len(),
+            "checkpoint model shapes ({}/{}) do not match the run ({}/{})",
+            snap.wd.len(),
+            snap.ws.len(),
+            st.wd.data.len(),
+            st.ws.data.len()
+        );
+        match (&snap.opt_d, &st.opt_d) {
+            (DeviceOptState::Shared(_), DeviceOpt::Shared(_)) => {}
+            (DeviceOptState::PerDevice(a), DeviceOpt::PerDevice(b)) => {
+                crate::ensure!(
+                    a.len() == b.len(),
+                    "checkpoint has {} per-device optimizer slots, the run has {}",
+                    a.len(),
+                    b.len()
+                );
+            }
+            _ => crate::bail!(
+                "checkpoint optimizer layout does not match --per-device-opt"
+            ),
+        }
+        // validate every moment-vector shape up front, so the mutation below
+        // is all-or-nothing
+        let d_adams: Vec<&AdamState> = match &snap.opt_d {
+            DeviceOptState::Shared(a) => vec![a],
+            DeviceOptState::PerDevice(v) => v.iter().collect(),
+        };
+        crate::ensure!(
+            snap.opt_s.m.len() == st.ws.data.len()
+                && snap.opt_s.v.len() == st.ws.data.len()
+                && d_adams.iter().all(|a| {
+                    a.m.len() == st.wd.data.len() && a.v.len() == st.wd.data.len()
+                }),
+            "checkpoint optimizer moment shapes do not match the run's models"
+        );
+        st.opt_s.restore_state(&snap.opt_s)?;
+        match (&snap.opt_d, &mut st.opt_d) {
+            (DeviceOptState::Shared(a), DeviceOpt::Shared(opt)) => opt.restore_state(a)?,
+            (DeviceOptState::PerDevice(snaps), DeviceOpt::PerDevice(opts)) => {
+                for (s, o) in snaps.iter().zip(opts.iter_mut()) {
+                    o.restore_state(s)?;
+                }
+            }
+            _ => unreachable!("layout validated above"),
+        }
+        st.wd.data.copy_from_slice(&snap.wd);
+        st.ws.data.copy_from_slice(&snap.ws);
+        st.exec_s = snap.exec_s;
+        self.rng.lock().unwrap().restore_state(&snap.rng);
+        Ok(())
     }
 
     /// Add worker-side backend execution time to the run total.
@@ -317,6 +415,35 @@ mod tests {
         // the returned execution time is the same one added to the run total
         assert!(dt > 0.0);
         assert!((srv.exec_s() - dt).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snap_roundtrip_restores_exactly() {
+        let a = tiny_server(true);
+        let n = a.snapshot_device_params().n_params();
+        a.apply_device_grad(0, &vec![0.5; n]);
+        a.apply_device_grad(2, &vec![-0.25; n]);
+        a.with_rng(|r| r.next_u64());
+        let snap = a.export_snap();
+        let b = tiny_server(true);
+        b.restore_snap(&snap).unwrap();
+        assert_eq!(
+            a.snapshot_device_params().data,
+            b.snapshot_device_params().data
+        );
+        assert_eq!(a.snapshot_models().1.data, b.snapshot_models().1.data);
+        // both RNG streams continue identically after restore
+        assert_eq!(a.with_rng(|r| r.next_u64()), b.with_rng(|r| r.next_u64()));
+        // identical gradients keep the trajectories locked together
+        a.apply_device_grad(1, &vec![1.0; n]);
+        b.apply_device_grad(1, &vec![1.0; n]);
+        assert_eq!(
+            a.snapshot_device_params().data,
+            b.snapshot_device_params().data
+        );
+        // an optimizer-layout mismatch is rejected
+        let c = tiny_server(false);
+        assert!(c.restore_snap(&snap).is_err());
     }
 
     #[test]

@@ -27,6 +27,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use crate::checkpoint::{Checkpoint, CkptError, CkptHeader, SchedSnap, FORMAT_VERSION};
 use crate::compression::{Codec, CodecParams};
 use crate::config::{PartitionKind, TrainConfig};
 use crate::coordinator::metrics::{MetricsWriter, StepRecord, TrainSummary};
@@ -62,6 +63,8 @@ pub struct Trainer {
     timeline: Timeline,
     /// global index tag for facade-driven (manual) steps
     steps_taken: usize,
+    /// the run codec's (wire id, wire version) — stamped into checkpoints
+    codec_wire: (u32, u16),
     /// bound address of the TCP listener (`--transport tcp` only)
     listen_addr: Option<String>,
     /// tells the acceptor loop to wind down on drop
@@ -260,7 +263,31 @@ impl Trainer {
             limits,
         } = build_parts(&cfg)?;
 
-        let metrics = MetricsWriter::create(&cfg.metrics_path);
+        // one codec *session* per device on EACH side of the link:
+        // device-side sessions own uplink-encode state (error feedback),
+        // PS-side sessions own uplink-decode/downlink-encode state —
+        // instances are never shared across links or across the wire
+        let ps_codecs: Vec<Box<dyn Codec>> = (0..cfg.devices)
+            .map(|_| cfg.scheme.build())
+            .collect::<Result<Vec<_>>>()?;
+        let codec_wire = (ps_codecs[0].wire_id(), ps_codecs[0].wire_version());
+
+        // `--resume`: load + fully validate the checkpoint before touching
+        // anything on disk or in memory — a corrupt / truncated /
+        // wrong-version / mismatched-config file aborts here with no state
+        // mutated (the metrics file included)
+        let resume_ckpt = if cfg.resume.is_empty() {
+            None
+        } else {
+            Some(load_resume(&cfg, codec_wire)?)
+        };
+
+        let metrics = match &resume_ckpt {
+            None => MetricsWriter::create(&cfg.metrics_path),
+            Some(c) => {
+                MetricsWriter::resume(&cfg.metrics_path, c.sched.metrics_len, c.sched.boundary_g)?
+            }
+        };
         let server = Arc::new(ParameterServer::new(
             backend.clone(),
             wd,
@@ -271,21 +298,20 @@ impl Trainer {
             shared_rng,
             metrics,
         ));
-        // one codec *session* per device on EACH side of the link:
-        // device-side sessions own uplink-encode state (error feedback),
-        // PS-side sessions own uplink-decode/downlink-encode state —
-        // instances are never shared across links or across the wire
-        let ps_codecs: Vec<Box<dyn Codec>> = (0..cfg.devices)
-            .map(|_| cfg.scheme.build())
-            .collect::<Result<Vec<_>>>()?;
-        let endpoint = Arc::new(PsEndpoint::new(
+        let mut endpoint = PsEndpoint::new(
             server.clone(),
             cfg.staleness,
             up_params.clone(),
             down_params.clone(),
             ps_codecs,
             preset.nd_params,
-        ));
+        );
+        endpoint.set_checkpoint(cfg.checkpoint_every);
+        if let Some(c) = &resume_ckpt {
+            server.restore_snap(&c.server)?;
+            endpoint.prime_resume(c.header.round as usize, c.sched.totals.clone(), &c.links)?;
+        }
+        let endpoint = Arc::new(endpoint);
 
         let stop = Arc::new(AtomicBool::new(false));
         let mut handles: Vec<JoinHandle<()>> = Vec::new();
@@ -367,6 +393,7 @@ impl Trainer {
             test,
             timeline,
             steps_taken: 0,
+            codec_wire,
             listen_addr,
             stop,
             handles,
@@ -404,6 +431,10 @@ impl Trainer {
     /// (shared encode stream, updates applied in call order).
     pub fn step(&mut self, round: usize, device: usize) -> Result<StepRecord> {
         ensure!(device < self.workers.len(), "device {device} is not local");
+        ensure!(
+            self.endpoint.first_round() == 1,
+            "manual stepping after --resume is not supported"
+        );
         self.endpoint.begin_manual();
         let g = self.steps_taken;
         self.steps_taken += 1;
@@ -428,18 +459,62 @@ impl Trainer {
         let sched = Scheduler {
             rounds: self.cfg.rounds,
             first_step: self.steps_taken,
+            first_round: self.endpoint.first_round(),
             staleness: self.cfg.staleness,
             concurrency: self.cfg.resolved_concurrency(),
             eval_every: self.cfg.eval_every,
+            ckpt_every: self.cfg.checkpoint_every,
             skips: self.timeline.skipped_locals(),
             liveness,
         };
+        // snapshot authority lives here: at a checkpoint barrier the
+        // watermark has quiesced, every Commit (and its device-state blob)
+        // up to the boundary is applied, and nothing for later rounds has
+        // started — so one closure can capture the entire run
+        let (server, endpoint) = (self.server.clone(), self.endpoint.clone());
+        let (cfg, codec_wire, first_step) = (self.cfg.clone(), self.codec_wire, self.steps_taken);
+        let snapshot_hook = move |round: usize| -> Result<()> {
+            server.flush_metrics();
+            let metrics_len = if cfg.metrics_path.is_empty() {
+                0
+            } else {
+                std::fs::metadata(&cfg.metrics_path).map(|m| m.len()).unwrap_or(0)
+            };
+            let ckpt = Checkpoint {
+                header: CkptHeader {
+                    format: FORMAT_VERSION,
+                    codec_id: codec_wire.0,
+                    codec_version: codec_wire.1,
+                    scheme: cfg.scheme.canonical_name(),
+                    preset: cfg.preset.clone(),
+                    devices: cfg.devices as u32,
+                    rounds: cfg.rounds as u32,
+                    round: round as u32,
+                    seed: cfg.seed,
+                    fingerprint: cfg.trajectory_fingerprint(),
+                    scenario: cfg.scenario.to_string(),
+                },
+                server: server.export_snap(),
+                sched: SchedSnap {
+                    boundary_g: (first_step + round * cfg.devices) as u64,
+                    metrics_len,
+                    totals: endpoint.totals_snapshot(),
+                },
+                links: endpoint.export_links(),
+            };
+            let path = ckpt.save(&cfg.checkpoint_dir, cfg.checkpoint_keep)?;
+            crate::log_info!("checkpoint round {round} -> {}", path.display());
+            Ok(())
+        };
+        let hook: Option<&(dyn Fn(usize) -> Result<()> + Sync)> =
+            if self.cfg.checkpoint_every > 0 { Some(&snapshot_hook) } else { None };
         let summary = sched.run(
             &self.endpoint,
             &self.server,
             &mut self.workers,
             &self.train,
             &self.test,
+            hook,
         )?;
         self.steps_taken += summary.steps;
         self.server.write_metrics(&summary.to_json());
@@ -452,6 +527,63 @@ impl Trainer {
         ensure!(device < self.workers.len(), "device {device} is not local");
         self.workers[device].probe_features(&self.train)
     }
+}
+
+/// Load and fully validate a `--resume` checkpoint against the current
+/// config. Every check is named, so a mismatch tells the operator exactly
+/// which flag disagrees with the snapshot; nothing — file, metrics, model
+/// state — is mutated before this returns `Ok`.
+fn load_resume(cfg: &TrainConfig, codec_wire: (u32, u16)) -> Result<Checkpoint> {
+    let ckpt = Checkpoint::load(&cfg.resume)?;
+    let h = &ckpt.header;
+    let check = |field: &str, same: bool, in_ckpt: String, in_run: String| -> Result<()> {
+        if same {
+            Ok(())
+        } else {
+            Err(CkptError::ConfigMismatch {
+                field: field.into(),
+                ckpt: in_ckpt,
+                run: in_run,
+            }
+            .into())
+        }
+    };
+    check("preset", h.preset == cfg.preset, h.preset.clone(), cfg.preset.clone())?;
+    check(
+        "devices",
+        h.devices as usize == cfg.devices,
+        h.devices.to_string(),
+        cfg.devices.to_string(),
+    )?;
+    check(
+        "rounds",
+        h.rounds as usize == cfg.rounds,
+        h.rounds.to_string(),
+        cfg.rounds.to_string(),
+    )?;
+    check("seed", h.seed == cfg.seed, h.seed.to_string(), cfg.seed.to_string())?;
+    let scheme = cfg.scheme.canonical_name();
+    check("scheme", h.scheme == scheme, h.scheme.clone(), scheme)?;
+    check(
+        "codec",
+        (h.codec_id, h.codec_version) == codec_wire,
+        format!("{}v{}", h.codec_id, h.codec_version),
+        format!("{}v{}", codec_wire.0, codec_wire.1),
+    )?;
+    let fp = cfg.trajectory_fingerprint();
+    check(
+        "fingerprint",
+        h.fingerprint == fp,
+        format!("{:016x}", h.fingerprint),
+        format!("{fp:016x}"),
+    )?;
+    ensure!(
+        h.round >= 1 && (h.round as usize) < cfg.rounds,
+        "checkpoint at round {} leaves nothing to resume (run has {} rounds)",
+        h.round,
+        cfg.rounds
+    );
+    Ok(ckpt)
 }
 
 impl Drop for Trainer {
@@ -520,8 +652,10 @@ pub fn run_remote_device(cfg: &TrainConfig, device: usize, addr: &str) -> Result
     } = build_parts(cfg)?;
     let codec = cfg.scheme.build()?;
 
-    // pre-flight: wait for the PS to arm the run
-    let (devices, rounds) = wait_for_run(addr, limits, device, codec.as_ref())?;
+    // pre-flight: wait for the PS to arm the run; a resumed PS reports the
+    // first round still to execute, so re-joining devices skip completed
+    // work and pick their restored state up at the first real handshake
+    let (devices, rounds, first_round) = wait_for_run(addr, limits, device, codec.as_ref())?;
     ensure!(
         devices == cfg.devices,
         "fleet-size mismatch: server has {devices} devices, local config has {}",
@@ -556,7 +690,7 @@ pub fn run_remote_device(cfg: &TrainConfig, device: usize, addr: &str) -> Result
         Box::new(conn),
     );
     arm_worker(&mut worker, cfg, &timeline);
-    for t in 1..=rounds {
+    for t in first_round..=rounds {
         if !worker.script().participates(t) {
             continue; // scenario: not joined yet, dropped out, or departed
         }
@@ -567,13 +701,13 @@ pub fn run_remote_device(cfg: &TrainConfig, device: usize, addr: &str) -> Result
 }
 
 /// Poll `Hello` on short-lived connections until the PS reports an armed
-/// run (finite round count); returns (fleet size, rounds).
+/// run (finite round count); returns (fleet size, rounds, first round).
 fn wait_for_run(
     addr: &str,
     limits: WireLimits,
     device: usize,
     codec: &dyn Codec,
-) -> Result<(usize, usize)> {
+) -> Result<(usize, usize, usize)> {
     for _ in 0..600 {
         let mut conn = TcpConn::connect(addr, limits)?;
         conn.send(Msg::Hello {
@@ -585,10 +719,14 @@ fn wait_for_run(
             Msg::HelloAck { err: Some(reason), .. } => {
                 return Err(crate::err!("handshake rejected: {reason}"));
             }
-            Msg::HelloAck { devices, rounds, .. } => {
+            Msg::HelloAck { devices, rounds, first_round, .. } => {
                 let _ = conn.send(Msg::Bye { device: device as u32 });
                 if rounds != u32::MAX {
-                    return Ok((devices as usize, rounds as usize));
+                    return Ok((
+                        devices as usize,
+                        rounds as usize,
+                        (first_round as usize).max(1),
+                    ));
                 }
             }
             other => return Err(crate::err!("expected HelloAck, got {}", other.name())),

@@ -27,6 +27,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::checkpoint::DeviceSnap;
 use crate::compression::{Codec, CodecParams, GradMask, Reclaim, SigmaStats};
 use crate::coordinator::metrics::StepRecord;
 use crate::coordinator::protocol::model_sync_frame;
@@ -111,6 +112,14 @@ pub struct DeviceWorker {
     script: DeviceScript,
     /// protocol steps started on this worker (1-based; drives `cut_steps`)
     steps_run: u64,
+    /// snapshot cadence the PS announced in the handshake (0 = none); when
+    /// set, every `Commit` carries this worker's encoded [`DeviceSnap`]
+    ckpt_every: usize,
+    /// schedule round the run starts at (1 fresh, checkpoint round + 1)
+    first_round: usize,
+    /// a restored state blob is applied only at the *first* handshake —
+    /// reconnect re-greets must not rewind a worker that has advanced
+    restored: bool,
 }
 
 impl DeviceWorker {
@@ -148,7 +157,44 @@ impl DeviceWorker {
             backoff_s: 0.0,
             script: DeviceScript::default(),
             steps_run: 0,
+            ckpt_every: 0,
+            first_round: 1,
+            restored: false,
         }
+    }
+
+    /// Schedule round the run starts at, learned from the handshake (1
+    /// unless the PS resumed from a checkpoint).
+    pub fn first_round(&self) -> usize {
+        self.first_round
+    }
+
+    /// Everything local to this device that a checkpoint must capture,
+    /// encoded as a [`DeviceSnap`] blob: both RNG streams, the loader
+    /// position, the codec session (e.g. the error-feedback residual),
+    /// and the step counter driving scenario cuts.
+    pub fn export_state(&self) -> Vec<u8> {
+        DeviceSnap {
+            rng: self.rng.export_state(),
+            backoff_rng: self.backoff_rng.export_state(),
+            loader: self.loader.export_state(),
+            codec: self.codec.export_session(),
+            steps_run: self.steps_run,
+        }
+        .encode()
+    }
+
+    /// Restore this worker from a [`DeviceSnap`] blob (the handshake's
+    /// `state` field). Validates fully before mutating anything.
+    fn apply_state(&mut self, blob: &[u8]) -> Result<()> {
+        let snap = DeviceSnap::decode(blob)?;
+        let loader = MiniBatchLoader::from_state(&snap.loader)?;
+        self.codec.restore_session(&snap.codec)?;
+        self.loader = loader;
+        self.rng = Rng::from_state(&snap.rng);
+        self.backoff_rng = Rng::from_state(&snap.backoff_rng);
+        self.steps_run = snap.steps_run;
+        Ok(())
     }
 
     /// This device's link accounting (uplink/downlink bits, frames, modeled
@@ -201,8 +247,18 @@ impl DeviceWorker {
             Msg::HelloAck { err: Some(reason), .. } => {
                 Err(crate::err!("handshake rejected: {reason}"))
             }
-            Msg::HelloAck { .. } => {
+            Msg::HelloAck { first_round, ckpt_every, state, .. } => {
                 self.greeted = true;
+                self.first_round = (first_round as usize).max(1);
+                self.ckpt_every = ckpt_every as usize;
+                if !self.restored {
+                    // first handshake only: a re-greet after a reconnect
+                    // must not rewind state that advanced since the stash
+                    self.restored = true;
+                    if let Some(blob) = state {
+                        self.apply_state(&blob)?;
+                    }
+                }
                 Ok(())
             }
             other => Err(crate::err!("expected HelloAck, got {}", other.name())),
@@ -406,12 +462,18 @@ impl DeviceWorker {
             step_s: rec.step_s,
             device_exec_s,
         };
+        // while checkpointing, every Commit carries this worker's post-step
+        // state blob so the PS always holds fresh device state at a
+        // snapshot barrier; the bytes ride the control channel and are
+        // never counted by the link model, so metrics stay identical
+        let state = (self.ckpt_every > 0).then(|| self.export_state());
         match self.rpc(Msg::Commit {
             device: self.device as u32,
             round: round as u32,
             local: local as u64,
             grad: grad_frame,
             report,
+            state,
         })? {
             Msg::CommitAck => {}
             other => return Err(crate::err!("expected CommitAck, got {}", other.name())),

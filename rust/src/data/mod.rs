@@ -7,6 +7,6 @@ pub mod loader;
 pub mod partition;
 pub mod synth;
 
-pub use loader::MiniBatchLoader;
+pub use loader::{LoaderState, MiniBatchLoader};
 pub use partition::{dirichlet_partition, label_shards, writer_groups};
 pub use synth::{Dataset, SynthSpec};

@@ -18,6 +18,7 @@
 
 pub mod bench;
 pub mod bitio;
+pub mod checkpoint;
 pub mod compression;
 pub mod config;
 pub mod coordinator;

@@ -8,7 +8,7 @@
 pub mod adam;
 pub mod sgd;
 
-pub use adam::Adam;
+pub use adam::{Adam, AdamState};
 pub use sgd::Sgd;
 
 /// A stateful first-order optimizer over a flat f32 parameter vector.

@@ -53,7 +53,20 @@ pub enum Msg {
     /// device codec session's frame stamp; the PS rejects a mismatch.
     Hello { device: u32, codec_id: u32, codec_version: u16 },
     /// PS -> device handshake reply; `err` is `Some` on rejection.
-    HelloAck { devices: u32, rounds: u32, staleness: u32, err: Option<String> },
+    /// `first_round` is where the schedule begins (1 on a fresh run,
+    /// `checkpoint round + 1` after `--resume`); `ckpt_every` tells the
+    /// device whether to attach its state blob at `Commit`; `state` is the
+    /// device's restored [`DeviceSnap`](crate::checkpoint::DeviceSnap)
+    /// encoding when the PS holds one for it.
+    HelloAck {
+        devices: u32,
+        rounds: u32,
+        staleness: u32,
+        first_round: u32,
+        ckpt_every: u32,
+        state: Option<Vec<u8>>,
+        err: Option<String>,
+    },
     /// Device -> PS: request entry for schedule-local step `local` of
     /// `round`. Blocks server-side in the staleness/eval gate.
     StepStart { device: u32, round: u32, local: u64 },
@@ -83,8 +96,18 @@ pub enum Msg {
         down_nominal: f64,
     },
     /// Device -> PS: the device-model gradient (`ModelSync` frame, little-
-    /// endian f32) and the step report. Completes the step.
-    Commit { device: u32, round: u32, local: u64, grad: Frame, report: StepReport },
+    /// endian f32) and the step report. Completes the step. `state` is the
+    /// device's post-step checkpoint blob, attached whenever the run
+    /// checkpoints (`ckpt_every > 0` in the handshake) so the PS always
+    /// holds the freshest device state at a snapshot barrier.
+    Commit {
+        device: u32,
+        round: u32,
+        local: u64,
+        grad: Frame,
+        report: StepReport,
+        state: Option<Vec<u8>>,
+    },
     /// PS -> device: step committed (watermark advanced).
     CommitAck,
     /// Device -> PS: request a fresh w_d snapshot (diagnostics/probes).
@@ -108,6 +131,30 @@ fn get_str(cur: &mut ByteCursor<'_>) -> Result<String, CodecError> {
     String::from_utf8(bytes.to_vec()).map_err(|_| CodecError::MalformedHeader {
         reason: "non-UTF-8 string field".to_string(),
     })
+}
+
+fn put_opt_bytes(out: &mut Vec<u8>, bytes: &Option<Vec<u8>>) {
+    match bytes {
+        None => out.push(0),
+        Some(b) => {
+            out.push(1);
+            out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+            out.extend_from_slice(b);
+        }
+    }
+}
+
+fn get_opt_bytes(cur: &mut ByteCursor<'_>) -> Result<Option<Vec<u8>>, CodecError> {
+    match cur.u8()? {
+        0 => Ok(None),
+        1 => {
+            let n = cur.u32()? as usize;
+            Ok(Some(cur.take(n)?.to_vec()))
+        }
+        other => Err(CodecError::MalformedHeader {
+            reason: format!("bad byte-blob flag {other}"),
+        }),
+    }
 }
 
 fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
@@ -320,10 +367,13 @@ impl Msg {
                 out.extend_from_slice(&codec_id.to_le_bytes());
                 out.extend_from_slice(&codec_version.to_le_bytes());
             }
-            Msg::HelloAck { devices, rounds, staleness, err } => {
+            Msg::HelloAck { devices, rounds, staleness, first_round, ckpt_every, state, err } => {
                 out.extend_from_slice(&devices.to_le_bytes());
                 out.extend_from_slice(&rounds.to_le_bytes());
                 out.extend_from_slice(&staleness.to_le_bytes());
+                out.extend_from_slice(&first_round.to_le_bytes());
+                out.extend_from_slice(&ckpt_every.to_le_bytes());
+                put_opt_bytes(out, state);
                 match err {
                     None => out.push(0),
                     Some(e) => {
@@ -357,12 +407,13 @@ impl Msg {
                 out.extend_from_slice(&server_exec_s.to_bits().to_le_bytes());
                 out.extend_from_slice(&down_nominal.to_bits().to_le_bytes());
             }
-            Msg::Commit { device, round, local, grad, report } => {
+            Msg::Commit { device, round, local, grad, report, state } => {
                 out.extend_from_slice(&device.to_le_bytes());
                 out.extend_from_slice(&round.to_le_bytes());
                 out.extend_from_slice(&local.to_le_bytes());
                 grad.write_to(out);
                 put_report(out, report);
+                put_opt_bytes(out, state);
             }
             Msg::CommitAck => {}
             Msg::FetchModel { device } => {
@@ -396,6 +447,9 @@ impl Msg {
                 let devices = cur.u32()?;
                 let rounds = cur.u32()?;
                 let staleness = cur.u32()?;
+                let first_round = cur.u32()?;
+                let ckpt_every = cur.u32()?;
+                let state = get_opt_bytes(&mut cur)?;
                 let err = match cur.u8()? {
                     0 => None,
                     1 => Some(get_str(&mut cur)?),
@@ -405,7 +459,7 @@ impl Msg {
                         })
                     }
                 };
-                Msg::HelloAck { devices, rounds, staleness, err }
+                Msg::HelloAck { devices, rounds, staleness, first_round, ckpt_every, state, err }
             }
             3 => Msg::StepStart {
                 device: cur.u32()?,
@@ -438,6 +492,7 @@ impl Msg {
                 local: cur.u64()?,
                 grad: Frame::read_from(&mut cur, limits)?,
                 report: get_report(&mut cur)?,
+                state: get_opt_bytes(&mut cur)?,
             },
             8 => Msg::CommitAck,
             9 => Msg::FetchModel { device: cur.u32()? },
@@ -484,11 +539,35 @@ mod tests {
             devices: 4,
             rounds: 9,
             staleness: 1,
+            first_round: 6,
+            ckpt_every: 5,
+            state: Some(vec![0xDE, 0xAD, 0xBE]),
             err: Some("codec mismatch".into()),
         }) {
-            Msg::HelloAck { devices: 4, rounds: 9, staleness: 1, err: Some(e) } => {
+            Msg::HelloAck {
+                devices: 4,
+                rounds: 9,
+                staleness: 1,
+                first_round: 6,
+                ckpt_every: 5,
+                state: Some(st),
+                err: Some(e),
+            } => {
+                assert_eq!(st, vec![0xDE, 0xAD, 0xBE]);
                 assert_eq!(e, "codec mismatch");
             }
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(&Msg::HelloAck {
+            devices: 2,
+            rounds: 3,
+            staleness: 0,
+            first_round: 1,
+            ckpt_every: 0,
+            state: None,
+            err: None,
+        }) {
+            Msg::HelloAck { first_round: 1, ckpt_every: 0, state: None, err: None, .. } => {}
             other => panic!("{other:?}"),
         }
         assert!(matches!(roundtrip(&Msg::CommitAck), Msg::CommitAck));
@@ -558,9 +637,11 @@ mod tests {
             local: 11,
             grad,
             report: report.clone(),
+            state: Some(vec![1, 2, 3, 4, 5]),
         }) {
-            Msg::Commit { device: 2, round: 3, local: 11, report: r, .. } => {
+            Msg::Commit { device: 2, round: 3, local: 11, report: r, state: Some(st), .. } => {
                 assert_eq!(r, report);
+                assert_eq!(st, vec![1, 2, 3, 4, 5]);
             }
             other => panic!("{other:?}"),
         }

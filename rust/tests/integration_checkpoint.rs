@@ -1,0 +1,298 @@
+//! Integration: the checkpoint/resume subsystem end to end.
+//!
+//! The contracts under test:
+//!  * checkpointing is metrics-neutral — a run that snapshots every N
+//!    rounds emits byte-identical deterministic step fields to one that
+//!    never snapshots;
+//!  * `--resume` from a round-barrier snapshot replays the remainder of
+//!    the run byte-identically into the *same* metrics file (append after
+//!    truncating post-snapshot records) — inproc and TCP, calm and under
+//!    `--scenario`;
+//!  * corrupt, truncated, wrong-version, wrong-config and
+//!    nothing-left-to-resume checkpoints are rejected with typed errors
+//!    **before any state is mutated** (the metrics file is untouched);
+//!  * `checkpoint::inspect` describes a file without decoding tensors; and
+//!  * retention keeps only the newest `--checkpoint-keep` snapshots.
+
+use splitfc::checkpoint::{self, Checkpoint};
+use splitfc::config::{parse_scheme, TrainConfig};
+use splitfc::coordinator::Trainer;
+use splitfc::scenario::ScenarioSpec;
+use splitfc::transport::TransportKind;
+use splitfc::util::Json;
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("splitfc_ckpt_{tag}_{}", std::process::id()))
+}
+
+/// Base fleet: tiny preset, 4 devices, 6 rounds, the error-feedback codec
+/// variant (its residual is the session state a resume must not lose).
+fn base_cfg(metrics: &str, ckpt_dir: &str, ckpt_every: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::for_preset("tiny");
+    cfg.devices = 4;
+    cfg.rounds = 6;
+    cfg.n_train = 256;
+    cfg.n_test = 64;
+    cfg.eval_every = 3;
+    cfg.seed = 11;
+    cfg.scheme = parse_scheme("splitfc[ad,R=4,fwq,ef]", 4.0).unwrap();
+    cfg.up_bits_per_entry = 2.0;
+    cfg.down_bits_per_entry = 4.0;
+    cfg.metrics_path = metrics.to_string();
+    cfg.checkpoint_every = ckpt_every;
+    cfg.checkpoint_dir = ckpt_dir.to_string();
+    cfg
+}
+
+/// The deterministic fields of every step record (wall-clock excluded).
+fn step_fields(path: &std::path::Path) -> Vec<String> {
+    let text = std::fs::read_to_string(path).expect("metrics file");
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let j = Json::parse(line).expect("valid JSONL");
+        if j.get("g").is_none() {
+            continue; // the trailing summary record
+        }
+        let mut fields = Vec::new();
+        for key in [
+            "t", "k", "g", "loss", "train_acc", "up_bits", "down_bits", "up_nominal",
+            "down_nominal",
+        ] {
+            let v = j
+                .get(key)
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|| panic!("field {key} in {line}"));
+            fields.push(format!("{key}={v:?}"));
+        }
+        out.push(fields.join(" "));
+    }
+    out
+}
+
+fn run_with(cfg: TrainConfig) -> splitfc::coordinator::TrainSummary {
+    let mut tr = Trainer::new(cfg).unwrap();
+    tr.run().unwrap()
+}
+
+fn ckpt_file(dir: &std::path::Path, round: u32) -> std::path::PathBuf {
+    dir.join(Checkpoint::file_name(round))
+}
+
+#[test]
+fn resume_is_byte_identical_inproc() {
+    let ref_path = tmp_path("inproc_ref.jsonl");
+    let live_path = tmp_path("inproc_live.jsonl");
+    let dir = tmp_path("inproc_dir");
+
+    // reference: uninterrupted, never snapshots
+    run_with(base_cfg(ref_path.to_str().unwrap(), "", 0));
+    let want = step_fields(&ref_path);
+    assert_eq!(want.len(), 24);
+
+    // snapshotting every 2 rounds must not perturb a single field
+    let s = run_with(base_cfg(live_path.to_str().unwrap(), dir.to_str().unwrap(), 2));
+    assert_eq!(s.steps, 24);
+    assert_eq!(step_fields(&live_path), want, "checkpointing perturbed the trajectory");
+    for r in [2u32, 4, 6] {
+        assert!(ckpt_file(&dir, r).exists(), "missing snapshot for round {r}");
+    }
+
+    // "kill" after round 4: resume from its snapshot into the SAME metrics
+    // file — rounds 5..6 replay and the stream is byte-identical again
+    let mut cfg = base_cfg(live_path.to_str().unwrap(), "", 0);
+    cfg.resume = ckpt_file(&dir, 4).to_str().unwrap().to_string();
+    let s = run_with(cfg);
+    assert_eq!(s.steps, 24, "resumed summary must count the whole run");
+    assert_eq!(step_fields(&live_path), want, "resume diverged from the uninterrupted run");
+
+    std::fs::remove_file(&ref_path).ok();
+    std::fs::remove_file(&live_path).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_is_byte_identical_over_tcp_concurrent() {
+    let ref_path = tmp_path("tcp_ref.jsonl");
+    let live_path = tmp_path("tcp_live.jsonl");
+    let dir = tmp_path("tcp_dir");
+
+    let mut cfg = base_cfg(ref_path.to_str().unwrap(), "", 0);
+    cfg.transport = TransportKind::Tcp;
+    cfg.concurrent_devices = 2;
+    run_with(cfg);
+    let want = step_fields(&ref_path);
+    assert_eq!(want.len(), 24);
+
+    let mut cfg = base_cfg(live_path.to_str().unwrap(), dir.to_str().unwrap(), 3);
+    cfg.transport = TransportKind::Tcp;
+    cfg.concurrent_devices = 2;
+    run_with(cfg);
+    assert_eq!(step_fields(&live_path), want);
+
+    // resume from the round-3 barrier, still TCP + concurrent workers
+    let mut cfg = base_cfg(live_path.to_str().unwrap(), dir.to_str().unwrap(), 3);
+    cfg.transport = TransportKind::Tcp;
+    cfg.concurrent_devices = 2;
+    cfg.resume = ckpt_file(&dir, 3).to_str().unwrap().to_string();
+    let s = run_with(cfg);
+    assert_eq!(s.steps, 24);
+    assert_eq!(step_fields(&live_path), want, "TCP resume diverged");
+
+    std::fs::remove_file(&ref_path).ok();
+    std::fs::remove_file(&live_path).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_is_byte_identical_under_scenario() {
+    // straggler stretches wall time; depart removes device 3 after the
+    // resume point — the restored run must reproduce both exactly
+    let spec = "seed=7,straggler[dev=1,slow=2x],depart[dev=3,round=5]";
+    let ref_path = tmp_path("scen_ref.jsonl");
+    let live_path = tmp_path("scen_live.jsonl");
+    let dir = tmp_path("scen_dir");
+
+    let mut cfg = base_cfg(ref_path.to_str().unwrap(), "", 0);
+    cfg.scenario = ScenarioSpec::parse(spec).unwrap();
+    let s = run_with(cfg);
+    assert_eq!(s.steps, 22, "device 3 sits out rounds 5 and 6");
+    let want = step_fields(&ref_path);
+
+    let mut cfg = base_cfg(live_path.to_str().unwrap(), dir.to_str().unwrap(), 2);
+    cfg.scenario = ScenarioSpec::parse(spec).unwrap();
+    run_with(cfg);
+    assert_eq!(step_fields(&live_path), want);
+
+    let mut cfg = base_cfg(live_path.to_str().unwrap(), "", 0);
+    cfg.scenario = ScenarioSpec::parse(spec).unwrap();
+    cfg.resume = ckpt_file(&dir, 4).to_str().unwrap().to_string();
+    let s = run_with(cfg);
+    assert_eq!(s.steps, 22);
+    assert_eq!(step_fields(&live_path), want, "scenario resume diverged");
+
+    std::fs::remove_file(&ref_path).ok();
+    std::fs::remove_file(&live_path).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn retention_keeps_only_the_newest_snapshots() {
+    let dir = tmp_path("keep_dir");
+    let mut cfg = base_cfg("", dir.to_str().unwrap(), 2);
+    cfg.checkpoint_keep = 1;
+    run_with(cfg);
+    let found = checkpoint::list(&dir).unwrap();
+    assert_eq!(found.len(), 1, "keep=1 must prune older snapshots: {found:?}");
+    assert_eq!(found[0], ckpt_file(&dir, 6));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn inspect_describes_a_snapshot_without_decoding_tensors() {
+    let dir = tmp_path("inspect_dir");
+    run_with(base_cfg("", dir.to_str().unwrap(), 2));
+    let path = ckpt_file(&dir, 4);
+    let info = checkpoint::inspect(&path).unwrap();
+    assert_eq!(info.header.format, checkpoint::FORMAT_VERSION);
+    assert_eq!(info.header.round, 4);
+    assert_eq!(info.header.devices, 4);
+    assert_eq!(info.header.rounds, 6);
+    assert_eq!(info.header.seed, 11);
+    assert_eq!(info.header.preset, "tiny");
+    let names: Vec<&str> = info.sections.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(names, ["server", "sched", "links"]);
+    assert_eq!(info.file_len, std::fs::metadata(&path).unwrap().len());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn invalid_checkpoints_are_rejected_before_any_state_mutated() {
+    let metrics = tmp_path("reject.jsonl");
+    let dir = tmp_path("reject_dir");
+    let mut cfg = base_cfg(metrics.to_str().unwrap(), dir.to_str().unwrap(), 2);
+    cfg.devices = 2;
+    cfg.rounds = 4;
+    run_with(cfg);
+    let good = ckpt_file(&dir, 2);
+    let metrics_before = std::fs::read(&metrics).unwrap();
+    let good_bytes = std::fs::read(&good).unwrap();
+
+    // resume attempts below must fail BEFORE the metrics file is touched
+    let resume_cfg = |resume: &std::path::Path| {
+        let mut cfg = base_cfg(metrics.to_str().unwrap(), "", 0);
+        cfg.devices = 2;
+        cfg.rounds = 4;
+        cfg.resume = resume.to_str().unwrap().to_string();
+        cfg
+    };
+    let expect_reject = |tag: &str, path: &std::path::Path, needle: &str| {
+        let err = Trainer::new(resume_cfg(path)).err().unwrap_or_else(|| {
+            panic!("{tag}: a bad checkpoint must be rejected");
+        });
+        let msg = err.to_string();
+        assert!(msg.contains(needle), "{tag}: {msg:?} should mention {needle:?}");
+        assert_eq!(
+            std::fs::read(&metrics).unwrap(),
+            metrics_before,
+            "{tag}: the metrics file was mutated by a rejected resume"
+        );
+    };
+
+    // corrupt: flip one payload byte — a section CRC must catch it
+    let bad = tmp_path("flip.splitfc");
+    let mut bytes = good_bytes.clone();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x40;
+    std::fs::write(&bad, &bytes).unwrap();
+    expect_reject("byte flip", &bad, "corrupt");
+
+    // truncated mid-payload
+    std::fs::write(&bad, &good_bytes[..good_bytes.len() - 7]).unwrap();
+    expect_reject("truncation", &bad, "truncated");
+
+    // a future format version must be refused, not misparsed
+    let mut bytes = good_bytes.clone();
+    bytes[8] = 0x63; // the u16 format field follows the 8-byte magic
+    std::fs::write(&bad, &bytes).unwrap();
+    expect_reject("future version", &bad, "not supported");
+
+    // not a checkpoint at all
+    let mut bytes = good_bytes.clone();
+    bytes[0] = b'X';
+    std::fs::write(&bad, &bytes).unwrap();
+    expect_reject("bad magic", &bad, "magic");
+
+    // config mismatches are named: the differing flag, not a hash dump
+    {
+        let mut cfg = resume_cfg(&good);
+        cfg.seed = 12;
+        let msg = Trainer::new(cfg).err().expect("seed mismatch").to_string();
+        assert!(msg.contains("seed"), "{msg}");
+    }
+    {
+        // lr is trajectory-critical but not a named header field: the
+        // fingerprint is the catch-all
+        let mut cfg = resume_cfg(&good);
+        cfg.lr *= 2.0;
+        let msg = Trainer::new(cfg).err().expect("lr mismatch").to_string();
+        assert!(msg.contains("fingerprint"), "{msg}");
+    }
+    assert_eq!(std::fs::read(&metrics).unwrap(), metrics_before);
+
+    // the final-round snapshot has nothing left to replay
+    {
+        let msg = Trainer::new(resume_cfg(&ckpt_file(&dir, 4)))
+            .err()
+            .expect("nothing to resume")
+            .to_string();
+        assert!(msg.contains("nothing to resume"), "{msg}");
+    }
+
+    // inspect rejects the corrupt file too (typed, no panic)
+    std::fs::write(&bad, &good_bytes[..20]).unwrap();
+    assert!(checkpoint::inspect(&bad).is_err());
+
+    std::fs::remove_file(&bad).ok();
+    std::fs::remove_file(&metrics).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
