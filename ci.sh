@@ -120,6 +120,49 @@ wait "$CKPID" 2>/dev/null || true
     /tmp/splitfc_ci_ckpt_ref.jsonl /tmp/splitfc_ci_ckpt_live.jsonl
 rm -rf "$CKDIR" /tmp/splitfc_ci_ckpt_ref.jsonl /tmp/splitfc_ci_ckpt_live.jsonl
 
+echo "==> elastic-fleet recovery smoke (kill -9 the PS under live devices, same-port --resume)"
+# four real `splitfc device` processes stay up while their PS is SIGKILLed
+# at the round-4 barrier; a new PS incarnation rebinds the SAME port
+# (SO_REUSEADDR) with --resume, the devices reconnect into it, and the
+# finished metrics stream must be byte-identical to an uninterrupted
+# reference. The scenario cuts every device's link right after the barrier
+# so the kill always lands on a quiesced PS.
+RCDIR=/tmp/splitfc_ci_recov
+rm -rf "$RCDIR" /tmp/splitfc_ci_recov_ref.jsonl /tmp/splitfc_ci_recov.jsonl
+RADDR="127.0.0.1:$(( 20000 + ($$ % 20000) ))"
+RSCEN="seed=7,cut[dev=0,step=5],cut[dev=1,step=5],cut[dev=2,step=5],cut[dev=3,step=5]"
+RCOMMON="--preset tiny --devices 4 --rounds 8 --seed 11"
+RRETRY="--retry-base-ms 3000 --retry-cap-ms 6000 --retry-deadline-s 120"
+./target/release/splitfc train $RCOMMON --metrics /tmp/splitfc_ci_recov_ref.jsonl
+./target/release/splitfc train $RCOMMON --transport tcp --listen "$RADDR" \
+    --devices-remote 4 --scenario "$RSCEN" $RRETRY \
+    --checkpoint-every 4 --checkpoint-dir "$RCDIR" \
+    --metrics /tmp/splitfc_ci_recov.jsonl &
+RCPID=$!
+RDEVPIDS=()
+for K in 0 1 2 3; do
+    ./target/release/splitfc device --connect "$RADDR" --device "$K" \
+        $RCOMMON --scenario "$RSCEN" $RRETRY &
+    RDEVPIDS+=($!)
+done
+for _ in $(seq 1 600); do
+    [ -f "$RCDIR/ckpt-r00004.splitfc" ] && break
+    sleep 0.1
+done
+[ -f "$RCDIR/ckpt-r00004.splitfc" ] || { echo "no snapshot appeared"; exit 1; }
+kill -9 "$RCPID" 2>/dev/null
+wait "$RCPID" 2>/dev/null || true
+./target/release/splitfc ckpt inspect --json "$RCDIR/ckpt-r00004.splitfc"
+./target/release/splitfc train $RCOMMON --transport tcp --listen "$RADDR" \
+    --devices-remote 4 --scenario "$RSCEN" $RRETRY \
+    --checkpoint-every 4 --checkpoint-dir "$RCDIR" \
+    --resume "$RCDIR/ckpt-r00004.splitfc" \
+    --metrics /tmp/splitfc_ci_recov.jsonl
+for P in "${RDEVPIDS[@]}"; do wait "$P"; done
+./target/release/splitfc metrics-diff \
+    /tmp/splitfc_ci_recov_ref.jsonl /tmp/splitfc_ci_recov.jsonl
+rm -rf "$RCDIR" /tmp/splitfc_ci_recov_ref.jsonl /tmp/splitfc_ci_recov.jsonl
+
 echo "==> checkpoint bench (quick): BENCH_ckpt.json + resume byte-identity probe"
 # fails non-zero if a resumed run's deterministic step fields diverge
 cargo bench --bench bench_ckpt -- --quick

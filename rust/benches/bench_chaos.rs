@@ -1,8 +1,10 @@
 //! Failure-scenario engine bench: training throughput, step-latency tails,
 //! and accuracy-vs-round under calm, straggler and churn scenarios on the
 //! tiny preset over TCP loopback — plus a FWQ-vs-fixed-quantization
-//! comparison under a slow link with a straggler, and a determinism probe
-//! (the same `--scenario` spec twice must reproduce the deterministic step
+//! comparison under a slow link with a straggler, an MTTR sweep (a mid-run
+//! `pscrash` with live devices, reporting restarts / time-to-recover /
+//! replay absorbed), and determinism probes (the same `--scenario` spec
+//! twice — churn AND pscrash — must reproduce the deterministic step
 //! fields exactly; the bench **fails** non-zero if it does not).
 //!
 //! Writes `BENCH_chaos.json`; `-- --quick` shortens the run for CI.
@@ -158,6 +160,79 @@ fn run_quantizer_cmp(rounds: usize) -> Result<Vec<Json>> {
     Ok(rows)
 }
 
+/// MTTR sweep: crash + restart the PS in-process at the mid-run barrier,
+/// live TCP devices riding it out through their reconnect loops, and
+/// report the run's recovery telemetry.
+fn run_recovery(rounds: usize) -> Result<Json> {
+    let crash_at = (rounds / 2).max(1);
+    let spec = format!("pscrash[round={crash_at}]");
+    let path = tmp_path("recovery");
+    let dir =
+        std::env::temp_dir().join(format!("splitfc_bench_chaos_ckpt_{}", std::process::id()));
+    let mut cfg = cfg_for(rounds, &spec)?;
+    cfg.metrics_path = path.to_str().unwrap().to_string();
+    cfg.checkpoint_every = crash_at;
+    cfg.checkpoint_dir = dir.to_str().unwrap().to_string();
+    let scheduled = cfg.rounds * cfg.devices;
+    let mut tr = Trainer::new(cfg)?;
+    let s = tr.run()?;
+    let rep = tr.link_report();
+    drop(tr);
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_dir_all(&dir).ok();
+    println!(
+        "recovery  : {}/{} steps in {:.3}s, {} restart(s), MTTR {:.4}s, \
+         {} step(s) replayed, retries {}",
+        s.steps, scheduled, s.wall_s, s.ps_restarts, s.recover_s, s.steps_replayed,
+        rep.retry_attempts
+    );
+    Ok(Json::obj(vec![
+        ("scenario", Json::str("recovery")),
+        ("spec", Json::str(spec)),
+        ("steps", Json::num(s.steps as f64)),
+        ("steps_scheduled", Json::num(scheduled as f64)),
+        ("wall_s", Json::num(s.wall_s)),
+        ("final_acc", Json::num(s.final_acc as f64)),
+        ("ps_restarts", Json::num(s.ps_restarts as f64)),
+        ("recover_s", Json::num(s.recover_s)),
+        ("steps_replayed", Json::num(s.steps_replayed as f64)),
+        ("retry_attempts", Json::num(rep.retry_attempts as f64)),
+    ]))
+}
+
+/// Determinism probe for server-side chaos: two runs of the same pscrash
+/// spec must reproduce the stream exactly — the crash fires at the same
+/// barrier and the restore path is bit-faithful.
+fn probe_pscrash_determinism(rounds: usize) -> Result<()> {
+    let crash_at = (rounds / 2).max(1);
+    let spec = format!("pscrash[round={crash_at}]");
+    let mut streams = Vec::new();
+    for pass in 0..2 {
+        let path = tmp_path(&format!("psdet{pass}"));
+        let dir = std::env::temp_dir()
+            .join(format!("splitfc_bench_chaos_psdet{pass}_{}", std::process::id()));
+        let mut cfg = cfg_for(rounds, &spec)?;
+        cfg.metrics_path = path.to_str().unwrap().to_string();
+        cfg.checkpoint_every = crash_at;
+        cfg.checkpoint_dir = dir.to_str().unwrap().to_string();
+        let mut tr = Trainer::new(cfg)?;
+        tr.run()?;
+        drop(tr);
+        streams.push(step_fields(&path)?);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    splitfc::ensure!(
+        streams[0] == streams[1],
+        "pscrash determinism probe: two runs of {spec:?} diverged"
+    );
+    println!(
+        "pscrash determinism probe ok ({} steps identical across two runs of {spec:?})",
+        streams[0].len()
+    );
+    Ok(())
+}
+
 /// Determinism probe: the same churn spec twice must yield identical
 /// deterministic step fields (same seeds ⇒ same timeline ⇒ same stream).
 fn probe_determinism(scenario: &str, rounds: usize) -> Result<()> {
@@ -195,11 +270,13 @@ fn main() -> Result<()> {
 
     let churn = "seed=7,cut[dev=0,step=2],dropout[p=0.15,rejoin=2r]";
     probe_determinism(churn, rounds)?;
+    probe_pscrash_determinism(rounds)?;
 
     let mut rows = Vec::new();
     rows.push(run_scenario("calm", "", rounds)?);
     rows.push(run_scenario("straggler", "seed=7,straggler[dev=1,slow=4x]", rounds)?);
     rows.push(run_scenario("churn", churn, rounds)?);
+    rows.push(run_recovery(rounds)?);
 
     let quant = run_quantizer_cmp(rounds)?;
 

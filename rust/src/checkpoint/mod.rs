@@ -677,6 +677,27 @@ fn prune(dir: &Path, keep: usize) -> CkptResult<()> {
     Ok(())
 }
 
+/// Remove stale `ckpt-r*.splitfc.tmp` files from `dir`. A crash between
+/// [`Checkpoint::save`]'s write and its rename leaks the `.tmp` sibling
+/// forever; the trainer sweeps at startup so they cannot accumulate.
+/// Returns how many were removed; a missing directory sweeps nothing.
+pub fn sweep_tmp(dir: impl AsRef<Path>) -> CkptResult<usize> {
+    let entries = match std::fs::read_dir(dir.as_ref()) {
+        Ok(e) => e,
+        Err(_) => return Ok(0),
+    };
+    let mut swept = 0;
+    for entry in entries {
+        let p = entry?.path();
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name.starts_with("ckpt-r") && name.ends_with(".splitfc.tmp") {
+            std::fs::remove_file(&p)?;
+            swept += 1;
+        }
+    }
+    Ok(swept)
+}
+
 // ---- inspection (header + table only, tensors never decoded) ----
 
 #[derive(Debug, Clone)]
@@ -956,6 +977,31 @@ mod tests {
             .all(|e| !e.unwrap().path().to_str().unwrap().ends_with(".tmp")));
         let loaded = Checkpoint::load(&kept[2]).unwrap();
         assert_eq!(loaded.header.round, 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_tmp_removes_only_stale_partial_writes() {
+        let dir = std::env::temp_dir()
+            .join(format!("splitfc_ckpt_sweep_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        // a missing directory sweeps nothing (and is not an error)
+        assert_eq!(sweep_tmp(&dir).unwrap(), 0);
+
+        let c = sample();
+        let good = c.save(&dir, 3).unwrap();
+        // plant the debris a crash between write and rename leaves behind,
+        // plus an unrelated file the sweep must not touch
+        let stale = dir.join("ckpt-r00009.splitfc.tmp");
+        std::fs::write(&stale, b"half-written").unwrap();
+        let other = dir.join("notes.txt");
+        std::fs::write(&other, b"keep me").unwrap();
+
+        assert_eq!(sweep_tmp(&dir).unwrap(), 1);
+        assert!(!stale.exists(), "stale .tmp must be removed");
+        assert!(good.exists(), "real checkpoints must survive the sweep");
+        assert!(other.exists(), "unrelated files must survive the sweep");
+        assert_eq!(sweep_tmp(&dir).unwrap(), 0, "second sweep finds nothing");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -25,9 +25,14 @@ USAGE:
                 [--liveness-timeout-s X]
                 [--checkpoint-every N] [--checkpoint-dir DIR]
                 [--checkpoint-keep K] [--resume PATH]
-  splitfc device --connect HOST:PORT --device K --preset P [--scheme S] ...
+  splitfc device --connect HOST:PORT[,HOST:PORT...] --device K --preset P
+                [--scheme S] ...
                 # device-side process for one remote device; preset, scheme,
-                # seed and fleet flags must match the server's `train` run
+                # seed and fleet flags must match the server's `train` run.
+                # Extra --connect addresses are fallback parameter servers:
+                # when the primary dies the device's reconnect loop rotates
+                # through them and migrates mid-run (the adopting PS restores
+                # the device's state from its loaded snapshot)
   splitfc experiment <fig1|fig3|fig4|fig5|table1|table2|table3|all>
                 [--presets mnist,cifar,celeba] [--rounds T] [--devices K]
                 [--threads N] ...
@@ -39,9 +44,9 @@ USAGE:
   splitfc latency-calc [--capacity-bps 10e6 --batch 256 --dbar 8192
                 --iters 100 --devices 100]
   splitfc inspect [--artifacts artifacts]
-  splitfc ckpt inspect PATH
+  splitfc ckpt inspect PATH [--json]
                 # dump a checkpoint's self-describing header and section
-                # table without loading any tensors
+                # table without loading any tensors (--json for scripts)
   splitfc help
 
 SCHEMES (resolved through the codec registry; `codec-smoke` lists all):
@@ -88,7 +93,8 @@ SCENARIOS (seeded failure injection; same spec = same event timeline):
   --scenario SPEC         comma list of clauses in the codec-spec style, e.g.
                             seed=7,straggler[dev=2,slow=8x],
                             dropout[p=0.05,rejoin=2r],cut[dev=1,step=40],
-                            wave[cohort=4,every=5r],depart[dev=3,round=4]
+                            wave[cohort=4,every=5r],depart[dev=3,round=4],
+                            pscrash[round=2]
                           straggler  slow one device (dev=K) or a seeded
                                      random subset (p=P) by the slow= factor
                           dropout    per-round seeded dropout; affected
@@ -98,6 +104,12 @@ SCENARIOS (seeded failure injection; same spec = same event timeline):
                                      Hello is send #1); needs --transport tcp
                           wave       staggered joins in cohorts
                           depart     permanent departure before round T
+                          pscrash    crash + restart the PS at the round=T
+                                     checkpoint barrier (or the first barrier
+                                     after send=N step replies); needs
+                                     --transport tcp and --checkpoint-every;
+                                     devices ride it out via their reconnect
+                                     loops and the trajectory is unchanged
                           seed=N     scenario RNG (default: --seed); scenario
                                      draws never touch the training RNG
   --chaos-drop K:N[,K:N]  deprecated; same as --scenario cut[dev=K,send=N]
@@ -201,14 +213,23 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-///// Device-side entrypoint for one remote device: rebuild the fleet parts
+/// Device-side entrypoint for one remote device: rebuild the fleet parts
 /// from the same flags as the server's `train` run, dial it, and drive
-/// this device through every round.
+/// this device through every round. `--connect` takes a comma-separated
+/// ordered address list — the tail entries are fallback parameter servers
+/// the device migrates to when the one it is on dies.
 fn cmd_device(args: &Args) -> Result<()> {
-    let addr = match args.get("connect") {
-        Some(a) => a.to_string(),
-        None => crate::bail!("device needs --connect HOST:PORT"),
+    let addrs: Vec<String> = match args.get("connect") {
+        Some(a) => a
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        None => Vec::new(),
     };
+    if addrs.is_empty() {
+        crate::bail!("device needs --connect HOST:PORT[,HOST:PORT...]");
+    }
     let device = args.get_usize("device", usize::MAX);
     if device == usize::MAX {
         crate::bail!("device needs --device K (this process's device index)");
@@ -217,8 +238,12 @@ fn cmd_device(args: &Args) -> Result<()> {
     let mut cfg = TrainConfig::for_preset(&preset);
     cfg.apply_overrides(args)?;
     cfg.transport = TransportKind::Tcp;
-    println!("device {device} dialing {addr} ({})", cfg.to_json().to_string_compact());
-    let rep = run_remote_device(&cfg, device, &addr)?;
+    println!(
+        "device {device} dialing {} ({})",
+        addrs.join(", "),
+        cfg.to_json().to_string_compact()
+    );
+    let rep = run_remote_device(&cfg, device, &addrs)?;
     println!(
         "device {device} done: up {} bits, down {} bits, modeled transfer time {:.2}s",
         rep.up_bits, rep.down_bits, rep.elapsed_s
@@ -377,10 +402,42 @@ fn cmd_ckpt(args: &Args) -> Result<()> {
     let action = args.positional.get(1).map(|s| s.as_str());
     let path = match (action, args.positional.get(2)) {
         (Some("inspect"), Some(p)) => std::path::Path::new(p.as_str()),
-        _ => crate::bail!("usage: splitfc ckpt inspect PATH"),
+        _ => crate::bail!("usage: splitfc ckpt inspect PATH [--json]"),
     };
     let info = crate::checkpoint::inspect(path)?;
     let h = &info.header;
+    if args.has_flag("json") {
+        use crate::util::Json;
+        let sections = info
+            .sections
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::str(s.name.clone())),
+                    ("len", Json::num(s.len as f64)),
+                    ("crc", Json::str(format!("{:08x}", s.crc))),
+                ])
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("path", Json::str(path.display().to_string())),
+            ("file_len", Json::num(info.file_len as f64)),
+            ("format", Json::num(h.format as f64)),
+            ("codec_id", Json::num(h.codec_id as f64)),
+            ("codec_version", Json::num(h.codec_version as f64)),
+            ("scheme", Json::str(h.scheme.clone())),
+            ("preset", Json::str(h.preset.clone())),
+            ("devices", Json::num(h.devices as f64)),
+            ("rounds", Json::num(h.rounds as f64)),
+            ("round", Json::num(h.round as f64)),
+            ("seed", Json::num(h.seed as f64)),
+            ("fingerprint", Json::str(format!("{:016x}", h.fingerprint))),
+            ("scenario", Json::str(h.scenario.clone())),
+            ("sections", Json::Arr(sections)),
+        ]);
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
     println!("checkpoint {} ({} bytes)", path.display(), info.file_len);
     println!("  format:      v{}", h.format);
     println!("  codec:       id {} v{} ({})", h.codec_id, h.codec_version, h.scheme);

@@ -59,6 +59,15 @@ pub struct TrainSummary {
     pub exec_s: f64,
     /// modeled transfer time over the simulated link
     pub link_s: f64,
+    /// PS incarnations beyond the first: in-process `pscrash[...]`
+    /// restarts plus a process-level `--resume` (0 on undisturbed runs)
+    pub ps_restarts: usize,
+    /// cumulative wall time from each PS restart to the first step message
+    /// handled afterwards — the run's observed time-to-recover
+    pub recover_s: f64,
+    /// replay absorbed after recovery: duplicate requests answered from
+    /// the couriers plus metrics records rolled back by `--resume`
+    pub steps_replayed: usize,
 }
 
 impl TrainSummary {
@@ -77,6 +86,9 @@ impl TrainSummary {
             ("wall_s", Json::num(self.wall_s)),
             ("exec_s", Json::num(self.exec_s)),
             ("link_s", Json::num(self.link_s)),
+            ("ps_restarts", Json::num(self.ps_restarts as f64)),
+            ("recover_s", Json::num(self.recover_s)),
+            ("steps_replayed", Json::num(self.steps_replayed as f64)),
             (
                 "eval_history",
                 Json::Arr(
@@ -97,16 +109,20 @@ impl TrainSummary {
 /// `ParameterServer`, so records from parallel device workers never tear.
 pub struct MetricsWriter {
     out: Option<std::io::BufWriter<std::fs::File>>,
+    /// complete step records [`MetricsWriter::resume`] rolled back — the
+    /// steps the interrupted run had written past the checkpoint barrier,
+    /// which the resumed run replays (recovery telemetry)
+    pub truncated_records: usize,
 }
 
 impl MetricsWriter {
     pub fn create(path: &str) -> MetricsWriter {
         if path.is_empty() {
-            return MetricsWriter { out: None };
+            return MetricsWriter { out: None, truncated_records: 0 };
         }
         let f = std::fs::File::create(path)
             .unwrap_or_else(|e| panic!("cannot create metrics file {path:?}: {e}"));
-        MetricsWriter { out: Some(std::io::BufWriter::new(f)) }
+        MetricsWriter { out: Some(std::io::BufWriter::new(f)), truncated_records: 0 }
     }
 
     /// Reopen `path` for **appending** after `--resume` — the fix for the
@@ -119,7 +135,7 @@ impl MetricsWriter {
     /// the checkpoint boundary (`boundary_g` = steps committed at it).
     pub fn resume(path: &str, expect_len: u64, boundary_g: u64) -> Result<MetricsWriter> {
         if path.is_empty() {
-            return Ok(MetricsWriter { out: None });
+            return Ok(MetricsWriter { out: None, truncated_records: 0 });
         }
         let mismatch = |reason: String| CkptError::MetricsMismatch { reason };
         let f = std::fs::OpenOptions::new()
@@ -138,7 +154,19 @@ impl MetricsWriter {
             ))
             .into());
         }
+        let mut truncated_records = 0;
         if len > expect_len {
+            // count the complete step records being rolled back: they are
+            // the steps the resumed run will replay (a torn trailing line
+            // is debris, not a step)
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| mismatch(format!("cannot read {path:?}: {e}")))?;
+            if (expect_len as usize) <= text.len() {
+                truncated_records = text[expect_len as usize..]
+                    .lines()
+                    .filter(|l| Json::parse(l).map(|j| j.get("g").is_some()).unwrap_or(false))
+                    .count();
+            }
             f.set_len(expect_len)
                 .map_err(|e| mismatch(format!("cannot truncate {path:?}: {e}")))?;
         }
@@ -166,7 +194,7 @@ impl MetricsWriter {
         let mut f = f;
         f.seek(std::io::SeekFrom::End(0))
             .map_err(|e| mismatch(format!("cannot seek {path:?}: {e}")))?;
-        Ok(MetricsWriter { out: Some(std::io::BufWriter::new(f)) })
+        Ok(MetricsWriter { out: Some(std::io::BufWriter::new(f)), truncated_records })
     }
 
     pub fn write(&mut self, j: &Json) {

@@ -25,6 +25,7 @@
 //! `Uplink` arrives, so a step re-granted after a disconnect re-exports
 //! the identical state — byte-identity survives arbitrary mid-step cuts.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -342,6 +343,27 @@ struct RunInfo {
     first_step: usize,
 }
 
+/// Recovery telemetry surfaced in the run summary and the MTTR bench row.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RecoveryStats {
+    /// PS incarnations beyond the first: in-process `pscrash[...]`
+    /// restarts plus a process-level `--resume`.
+    pub ps_restarts: usize,
+    /// Cumulative wall time from each restart to the first step message
+    /// handled afterwards — the run's observed time-to-recover.
+    pub recover_s: f64,
+    /// Replay absorbed after recovery: duplicate requests answered from
+    /// the couriers plus metrics records rolled back by `--resume`.
+    pub steps_replayed: usize,
+}
+
+#[derive(Default)]
+struct RecoveryState {
+    stats: RecoveryStats,
+    /// armed by a restart, consumed by the next handled step message
+    pending: Option<Instant>,
+}
+
 /// The parameter server's message-level endpoint: protocol handlers +
 /// per-device sessions, independent of which transport carries the bytes.
 pub struct PsEndpoint {
@@ -370,6 +392,11 @@ pub struct PsEndpoint {
     first_round: usize,
     /// run totals restored from a checkpoint, seeded into `begin_run`
     resume_totals: Option<Vec<DeviceTotals>>,
+    /// restart/MTTR/replay bookkeeping (see [`RecoveryStats`])
+    recovery: Mutex<RecoveryState>,
+    /// step replies (StepGo/Downlink/CommitAck) written to a connection —
+    /// the ordinal the scenario `pscrash[send=N]` form triggers on
+    step_sends: AtomicU64,
 }
 
 impl PsEndpoint {
@@ -399,6 +426,8 @@ impl PsEndpoint {
             ckpt_every: 0,
             first_round: 1,
             resume_totals: None,
+            recovery: Mutex::new(RecoveryState::default()),
+            step_sends: AtomicU64::new(0),
         }
     }
 
@@ -445,6 +474,82 @@ impl PsEndpoint {
         self.first_round = round + 1;
         self.resume_totals = Some(totals);
         Ok(())
+    }
+
+    /// Restore the endpoint mid-run from a just-reloaded checkpoint, after
+    /// an in-process PS crash (`pscrash[...]`): PS codec sessions and
+    /// device state blobs come back from the snapshot, totals roll back to
+    /// the barrier values, and every courier resets — exactly the state a
+    /// freshly-resumed process would build. The gate needs no re-arm:
+    /// crashes fire only at quiesced checkpoint barriers, where the
+    /// watermark already equals `round · devices`. Increments
+    /// `ps_restarts` and starts the time-to-recover clock.
+    pub fn crash_restore(&self, totals: Vec<DeviceTotals>, links: &[LinkSnap]) -> Result<()> {
+        crate::ensure!(
+            totals.len() == self.devices && links.len() == self.devices,
+            "checkpoint fleet shape mismatch: {} totals / {} links for {} devices",
+            totals.len(),
+            links.len(),
+            self.devices
+        );
+        for (d, link) in links.iter().enumerate() {
+            self.codecs[d]
+                .lock()
+                .unwrap()
+                .restore_session(&link.ps_session)
+                .map_err(|e| crate::err!("device {d} PS codec session: {e}"))?;
+            *self.dev_states[d].lock().unwrap() = link.device.clone();
+        }
+        self.totals.lock().unwrap().clone_from(&totals);
+        for c in &self.couriers {
+            *c.lock().unwrap() = Courier::default();
+        }
+        self.note_restart();
+        Ok(())
+    }
+
+    /// Record a PS restart (in-process crash, or a process-level `--resume`
+    /// — the trainer calls this after priming one) and start the
+    /// time-to-recover clock; the next handled step message stops it.
+    pub fn note_restart(&self) {
+        let mut r = self.recovery.lock().unwrap();
+        r.stats.ps_restarts += 1;
+        r.pending = Some(Instant::now());
+    }
+
+    /// Fold externally-observed replay into the telemetry (the trainer adds
+    /// the metrics records a `--resume` rolled back).
+    pub fn add_replayed(&self, n: usize) {
+        self.recovery.lock().unwrap().stats.steps_replayed += n;
+    }
+
+    /// Read the recovery telemetry; a clock still pending (crash with no
+    /// step handled afterwards) is closed at readout.
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        let mut r = self.recovery.lock().unwrap();
+        if let Some(t0) = r.pending.take() {
+            r.stats.recover_s += t0.elapsed().as_secs_f64();
+        }
+        r.stats
+    }
+
+    fn note_step_activity(&self) {
+        let mut r = self.recovery.lock().unwrap();
+        if let Some(t0) = r.pending.take() {
+            r.stats.recover_s += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    fn note_replayed(&self) {
+        self.recovery.lock().unwrap().stats.steps_replayed += 1;
+    }
+
+    /// Cumulative step replies (StepGo/Downlink/CommitAck) written to a
+    /// connection. Counted at quiesced barriers this is deterministic, so
+    /// `pscrash[send=N]` (crash at the first checkpoint barrier with at
+    /// least N step replies out) replays exactly across identical runs.
+    pub fn step_sends(&self) -> u64 {
+        self.step_sends.load(Ordering::Relaxed)
     }
 
     /// Per-link checkpoint state: the PS codec session plus the latest
@@ -567,8 +672,13 @@ impl PsEndpoint {
                 Err(e) => Msg::Abort { reason: e.to_string() },
             };
             let fatal = matches!(reply, Msg::Abort { .. });
+            let step_reply =
+                matches!(reply, Msg::StepGo { .. } | Msg::Downlink { .. } | Msg::CommitAck);
             if conn.send(reply).is_err() || fatal {
                 break;
+            }
+            if step_reply {
+                self.step_sends.fetch_add(1, Ordering::Relaxed);
             }
         }
         if let Some(dev) = bound {
@@ -654,6 +764,7 @@ impl PsEndpoint {
             }
             Msg::StepStart { device, round, local } => {
                 self.check_device(device)?;
+                self.note_step_activity();
                 self.gate.wait_start(local as usize, round as usize)?;
                 let wd = self.server.snapshot_device_params();
                 let rng = if self.staleness == 0 {
@@ -668,9 +779,12 @@ impl PsEndpoint {
             Msg::Uplink { device, local, frame, labels, mask, up_nominal, rng } => {
                 let _ = up_nominal; // reported again in the Commit StepReport
                 self.check_device(device)?;
+                self.note_step_activity();
                 let mut courier = self.couriers[device as usize].lock().unwrap();
                 if courier.cached_uplink_local == Some(local) {
                     if let Some(cached) = courier.cached_downlink.clone() {
+                        drop(courier);
+                        self.note_replayed();
                         return Ok(Some(cached)); // duplicate after reconnect
                     }
                 }
@@ -707,8 +821,11 @@ impl PsEndpoint {
                     // re-stashing is harmless
                     *self.dev_states[device as usize].lock().unwrap() = Some(blob);
                 }
+                self.note_step_activity();
                 let mut courier = self.couriers[device as usize].lock().unwrap();
                 if courier.last_committed == Some(local) {
+                    drop(courier);
+                    self.note_replayed();
                     return Ok(Some(Msg::CommitAck)); // duplicate after reconnect
                 }
                 crate::ensure!(

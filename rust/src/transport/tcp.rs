@@ -41,12 +41,97 @@ pub fn is_io_error(err: &Error) -> bool {
     err.to_string().contains(IO)
 }
 
+/// Bind a listener with `SO_REUSEADDR` set, so an immediately-restarted PS
+/// can rebind its port while connections from the previous incarnation
+/// still sit in TIME_WAIT — a plain bind would die with AddrInUse and turn
+/// every crash recovery into a port lottery. Falls back to the std bind
+/// when the platform or address form rules the raw-socket path out.
+pub fn bind_reuse(addr: &str) -> Result<std::net::TcpListener> {
+    #[cfg(unix)]
+    if let Ok(sa) = addr.parse::<std::net::SocketAddrV4>() {
+        return bind_reuse_v4(sa);
+    }
+    std::net::TcpListener::bind(addr).map_err(|e| io_err("bind", e))
+}
+
+/// The crate is dependency-free, so the tiny libc surface this needs is
+/// declared by hand: socket / setsockopt(SO_REUSEADDR) / bind / listen,
+/// then the fd is adopted by `TcpListener`.
+#[cfg(unix)]
+fn bind_reuse_v4(sa: std::net::SocketAddrV4) -> Result<std::net::TcpListener> {
+    use std::os::unix::io::FromRawFd;
+
+    const AF_INET: i32 = 2;
+    const SOCK_STREAM: i32 = 1;
+    const SOL_SOCKET: i32 = 1;
+    const SO_REUSEADDR: i32 = 2;
+
+    /// `struct sockaddr_in`; port and address in network byte order.
+    #[repr(C)]
+    struct SockaddrIn {
+        sin_family: u16,
+        sin_port: u16,
+        sin_addr: u32,
+        sin_zero: [u8; 8],
+    }
+
+    extern "C" {
+        fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        fn setsockopt(
+            fd: i32,
+            level: i32,
+            name: i32,
+            value: *const std::ffi::c_void,
+            len: u32,
+        ) -> i32;
+        fn bind(fd: i32, addr: *const SockaddrIn, len: u32) -> i32;
+        fn listen(fd: i32, backlog: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    let os_err = |what: &str| io_err(what, std::io::Error::last_os_error());
+    unsafe {
+        let fd = socket(AF_INET, SOCK_STREAM, 0);
+        if fd < 0 {
+            return Err(os_err("socket"));
+        }
+        let fail = |what: &str| {
+            let e = os_err(what);
+            close(fd);
+            Err(e)
+        };
+        let one: i32 = 1;
+        if setsockopt(fd, SOL_SOCKET, SO_REUSEADDR, &one as *const i32 as *const _, 4) != 0 {
+            return fail("setsockopt(SO_REUSEADDR)");
+        }
+        let sin = SockaddrIn {
+            sin_family: AF_INET as u16,
+            sin_port: sa.port().to_be(),
+            // from_ne_bytes: the u32's memory bytes ARE the octets, which
+            // is exactly network byte order regardless of host endianness
+            sin_addr: u32::from_ne_bytes(sa.ip().octets()),
+            sin_zero: [0; 8],
+        };
+        if bind(fd, &sin, std::mem::size_of::<SockaddrIn>() as u32) != 0 {
+            return fail("bind");
+        }
+        if listen(fd, 128) != 0 {
+            return fail("listen");
+        }
+        Ok(std::net::TcpListener::from_raw_fd(fd))
+    }
+}
+
 /// A TCP connection speaking the control-frame protocol.
 pub struct TcpConn {
     stream: Option<TcpStream>,
-    /// dial address; `Some` on client-side connections, which makes them
-    /// reconnectable. Server-accepted sockets cannot re-dial their peer.
-    peer: Option<String>,
+    /// dial addresses; non-empty on client-side connections, which makes
+    /// them reconnectable. `peers[peer_at]` is the live address; when it
+    /// stops answering, `reconnect()` rotates through the fallbacks, which
+    /// is how a device migrates to a standby PS mid-run. Server-accepted
+    /// sockets have no dial address and cannot reconnect.
+    peers: Vec<String>,
+    peer_at: usize,
     limits: WireLimits,
     /// reusable tx scratch — one flat buffer per connection, written with a
     /// single `write_all` so a message is never interleaved on the socket
@@ -64,16 +149,34 @@ pub struct TcpConn {
 impl TcpConn {
     /// Dial `addr` (client side — reconnectable).
     pub fn connect(addr: &str, limits: WireLimits) -> Result<TcpConn> {
-        let stream = Self::dial(addr)?;
-        Ok(TcpConn {
-            stream: Some(stream),
-            peer: Some(addr.to_string()),
-            limits,
-            buf: Vec::new(),
-            fault_at_sends: Vec::new(),
-            sends: 0,
-            recv_deadline: None,
-        })
+        Self::connect_any(std::slice::from_ref(&addr.to_string()), limits)
+    }
+
+    /// Dial the first reachable address in `addrs`; the others stay armed
+    /// as fallbacks that `reconnect()` rotates through (device migration).
+    pub fn connect_any(addrs: &[String], limits: WireLimits) -> Result<TcpConn> {
+        if addrs.is_empty() {
+            return Err(Error::msg("connect_any wants at least one address"));
+        }
+        let mut last = None;
+        for (at, addr) in addrs.iter().enumerate() {
+            match Self::dial(addr) {
+                Ok(stream) => {
+                    return Ok(TcpConn {
+                        stream: Some(stream),
+                        peers: addrs.to_vec(),
+                        peer_at: at,
+                        limits,
+                        buf: Vec::new(),
+                        fault_at_sends: Vec::new(),
+                        sends: 0,
+                        recv_deadline: None,
+                    })
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap())
     }
 
     /// Adopt an accepted socket (server side — not reconnectable).
@@ -81,7 +184,8 @@ impl TcpConn {
         let _ = stream.set_nodelay(true);
         TcpConn {
             stream: Some(stream),
-            peer: None,
+            peers: Vec::new(),
+            peer_at: 0,
             limits,
             buf: Vec::new(),
             fault_at_sends: Vec::new(),
@@ -183,23 +287,34 @@ impl Connection for TcpConn {
     }
 
     fn reconnect(&mut self) -> Result<()> {
-        let addr = self
-            .peer
-            .clone()
-            .ok_or_else(|| Error::msg("server-side connection cannot reconnect"))?;
+        if self.peers.is_empty() {
+            return Err(Error::msg("server-side connection cannot reconnect"));
+        }
         // brief pause: the far end needs a moment to tear down the dead
         // handler and get back to accept()
         std::thread::sleep(Duration::from_millis(10));
-        let stream = Self::dial(&addr)?;
-        if let Some(d) = self.recv_deadline {
-            let _ = stream.set_read_timeout(Some(d));
+        // try the live peer first, then rotate through the fallbacks; a
+        // refused dial hands the device to the next PS on the list
+        let mut last = None;
+        for i in 0..self.peers.len() {
+            let at = (self.peer_at + i) % self.peers.len();
+            match Self::dial(&self.peers[at]) {
+                Ok(stream) => {
+                    if let Some(d) = self.recv_deadline {
+                        let _ = stream.set_read_timeout(Some(d));
+                    }
+                    self.peer_at = at;
+                    self.stream = Some(stream);
+                    return Ok(());
+                }
+                Err(e) => last = Some(e),
+            }
         }
-        self.stream = Some(stream);
-        Ok(())
+        Err(last.unwrap())
     }
 
     fn is_reconnectable(&self) -> bool {
-        self.peer.is_some()
+        !self.peers.is_empty()
     }
 
     fn set_recv_deadline(&mut self, deadline: Option<Duration>) {
@@ -246,6 +361,9 @@ mod tests {
                                 devices: device + 1,
                                 rounds: 0,
                                 staleness: 0,
+                                first_round: 1,
+                                ckpt_every: 0,
+                                state: None,
                                 err: None,
                             });
                         }
@@ -279,6 +397,88 @@ mod tests {
         }
         conn.send(Msg::Bye { device: 9 }).unwrap();
         server.join().unwrap();
+    }
+
+    #[test]
+    fn reconnect_rotates_to_a_fallback_address() {
+        // a dead address (bound once, then released -> refused) and a live
+        // server: the exact shape of a device migrating off a crashed PS
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let live_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let live = live_listener.local_addr().unwrap().to_string();
+        let srv = std::thread::spawn(move || {
+            // two sequential connections: the fallback dial, then the
+            // post-cut reconnect
+            for _ in 0..2 {
+                let (sock, _) = live_listener.accept().unwrap();
+                let mut conn = TcpConn::from_stream(sock, limits());
+                while let Ok(msg) = conn.recv() {
+                    match msg {
+                        Msg::Hello { device, .. } => {
+                            let _ = conn.send(Msg::HelloAck {
+                                devices: device + 1,
+                                rounds: 0,
+                                staleness: 0,
+                                first_round: 1,
+                                ckpt_every: 0,
+                                state: None,
+                                err: None,
+                            });
+                        }
+                        Msg::Bye { .. } => break,
+                        other => panic!("{other:?}"),
+                    }
+                }
+            }
+        });
+
+        let addrs = vec![dead, live];
+        let mut conn = TcpConn::connect_any(&addrs, limits()).unwrap();
+        assert!(conn.is_reconnectable());
+        conn.send(Msg::Hello { device: 1, codec_id: 1, codec_version: 1 }).unwrap();
+        match conn.recv().unwrap() {
+            Msg::HelloAck { devices: 2, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        conn.send(Msg::Bye { device: 1 }).unwrap();
+
+        // cut the link: reconnect must stay on the live peer it rotated to,
+        // not start over from the dead head of the list and give up
+        conn.inject_cut();
+        conn.reconnect().unwrap();
+        conn.send(Msg::Hello { device: 2, codec_id: 1, codec_version: 1 }).unwrap();
+        match conn.recv().unwrap() {
+            Msg::HelloAck { devices: 3, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        conn.send(Msg::Bye { device: 2 }).unwrap();
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn bind_reuse_rebinds_a_port_with_lingering_connections() {
+        let l1 = bind_reuse("127.0.0.1:0").unwrap();
+        let addr = l1.local_addr().unwrap().to_string();
+        // establish a connection and close the server side first, leaving
+        // the 4-tuple in TIME_WAIT on the listener's port — the state a
+        // crashed-and-restarted PS has to rebind through
+        let client = std::thread::spawn({
+            let addr = addr.clone();
+            move || {
+                let mut c = TcpStream::connect(addr).unwrap();
+                let mut b = [0u8; 1];
+                let _ = c.read(&mut b); // until the server closes
+            }
+        });
+        let (sock, _) = l1.accept().unwrap();
+        drop(sock);
+        client.join().unwrap();
+        drop(l1);
+        let l2 = bind_reuse(&addr).expect("immediate rebind must not AddrInUse");
+        assert_eq!(l2.local_addr().unwrap().to_string(), addr);
     }
 
     #[test]

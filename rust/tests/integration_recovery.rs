@@ -1,0 +1,365 @@
+//! Integration: the elastic-fleet recovery surface end to end.
+//!
+//! The contracts under test:
+//!  * a PS killed with SIGKILL at a round barrier — live TCP devices still
+//!    running — restarts with `--resume` on the same port and the fleet
+//!    completes the run with metrics byte-identical to an uninterrupted
+//!    reference (the devices ride out the crash in their reconnect loops);
+//!  * a device started with a fallback `--connect` list migrates to a
+//!    *different* PS mid-run and the handover is invisible: finite loss,
+//!    full step accounting, identical trajectory;
+//!  * the in-process `pscrash[round=T]` / `pscrash[send=N]` scenario
+//!    clauses are deterministic (same spec ⇒ identical metrics) and
+//!    trajectory-neutral (identical to a calm run);
+//!  * a checkpoint written under a pscrash scenario refuses a calm-config
+//!    resume with a typed fingerprint error, before any state is mutated.
+
+use std::io::Read as _;
+use std::time::{Duration, Instant};
+
+use splitfc::checkpoint::Checkpoint;
+use splitfc::config::{parse_scheme, TrainConfig};
+use splitfc::coordinator::{run_remote_device, Trainer};
+use splitfc::scenario::ScenarioSpec;
+use splitfc::transport::TransportKind;
+use splitfc::util::Json;
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("splitfc_recov_{tag}_{}", std::process::id()))
+}
+
+/// Reserve a concrete loopback address: bind an ephemeral port, read it
+/// back, release it. The PS must listen on a *known* port so a restarted
+/// incarnation (and the devices' fallback lists) can find it again.
+fn free_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").expect("reserve port");
+    let addr = l.local_addr().expect("local addr").to_string();
+    drop(l);
+    addr
+}
+
+/// Base fleet: tiny preset, 4 devices, 6 rounds, the error-feedback codec
+/// (its residual is session state a recovery must not lose).
+fn base_cfg(metrics: &str, ckpt_dir: &str, ckpt_every: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::for_preset("tiny");
+    cfg.devices = 4;
+    cfg.rounds = 6;
+    cfg.n_train = 256;
+    cfg.n_test = 64;
+    cfg.eval_every = 3;
+    cfg.seed = 11;
+    cfg.scheme = parse_scheme("splitfc[ad,R=4,fwq,ef]", 4.0).unwrap();
+    cfg.up_bits_per_entry = 2.0;
+    cfg.down_bits_per_entry = 4.0;
+    cfg.metrics_path = metrics.to_string();
+    cfg.checkpoint_every = ckpt_every;
+    cfg.checkpoint_dir = ckpt_dir.to_string();
+    cfg
+}
+
+/// The deterministic fields of every step record (wall-clock excluded).
+fn step_fields(path: &std::path::Path) -> Vec<String> {
+    let text = std::fs::read_to_string(path).expect("metrics file");
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let j = Json::parse(line).expect("valid JSONL");
+        if j.get("g").is_none() {
+            continue; // the trailing summary record
+        }
+        let mut fields = Vec::new();
+        for key in [
+            "t", "k", "g", "loss", "train_acc", "up_bits", "down_bits", "up_nominal",
+            "down_nominal",
+        ] {
+            let v = j
+                .get(key)
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|| panic!("field {key} in {line}"));
+            fields.push(format!("{key}={v:?}"));
+        }
+        out.push(fields.join(" "));
+    }
+    out
+}
+
+/// The run-summary record the PS appends after the last step.
+fn summary_json(path: &std::path::Path) -> Json {
+    let text = std::fs::read_to_string(path).expect("metrics file");
+    text.lines()
+        .rev()
+        .find_map(|l| {
+            let j = Json::parse(l).ok()?;
+            j.get("ps_restarts").map(|_| j.clone())
+        })
+        .expect("summary record with recovery telemetry")
+}
+
+fn run_with(cfg: TrainConfig) -> splitfc::coordinator::TrainSummary {
+    let mut tr = Trainer::new(cfg).unwrap();
+    tr.run().unwrap()
+}
+
+/// Every device severs its own link at the start of its round-6 step, then
+/// sits in seeded backoff (base 3 s) — a guaranteed quiet window after the
+/// round-5 checkpoint barrier in which SIGKILL lands on a quiesced PS.
+const KILL_WINDOW_SPEC: &str =
+    "seed=7,cut[dev=0,step=6],cut[dev=1,step=6],cut[dev=2,step=6],cut[dev=3,step=6]";
+
+/// A real PS process (`splitfc train`), all four devices joining remotely.
+fn ps_command(listen: &str, metrics: &std::path::Path, dir: &std::path::Path) -> std::process::Command {
+    let mut c = std::process::Command::new(env!("CARGO_BIN_EXE_splitfc"));
+    c.args([
+        "train",
+        "--preset",
+        "tiny",
+        "--devices",
+        "4",
+        "--rounds",
+        "6",
+        "--n-train",
+        "256",
+        "--n-test",
+        "64",
+        "--eval-every",
+        "3",
+        "--seed",
+        "11",
+        "--scheme",
+        "splitfc[ad,R=4,fwq,ef]",
+        "--up-bpe",
+        "2.0",
+        "--down-bpe",
+        "4.0",
+        "--transport",
+        "tcp",
+        "--devices-remote",
+        "4",
+        "--checkpoint-every",
+        "5",
+        "--scenario",
+        KILL_WINDOW_SPEC,
+        "--retry-base-ms",
+        "3000",
+        "--retry-cap-ms",
+        "6000",
+        "--retry-deadline-s",
+        "120",
+    ]);
+    c.arg("--listen").arg(listen);
+    c.arg("--metrics").arg(metrics);
+    c.arg("--checkpoint-dir").arg(dir);
+    c.stdout(std::process::Stdio::null());
+    c.stderr(std::process::Stdio::piped());
+    c
+}
+
+/// The matching device-side config for in-test `run_remote_device` threads.
+fn device_cfg() -> TrainConfig {
+    let mut cfg = base_cfg("", "", 0);
+    cfg.transport = TransportKind::Tcp;
+    cfg.scenario = ScenarioSpec::parse(KILL_WINDOW_SPEC).unwrap();
+    cfg.retry_base_ms = 3000;
+    cfg.retry_cap_ms = 6000;
+    cfg.retry_deadline_s = 120.0;
+    cfg
+}
+
+fn wait_until(what: &str, deadline: Duration, mut done: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !done() {
+        assert!(t0.elapsed() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Wait for a spawned PS to exit cleanly, surfacing its stderr on failure.
+fn expect_exit(tag: &str, mut child: std::process::Child) {
+    let t0 = Instant::now();
+    let status = loop {
+        match child.try_wait().expect("try_wait") {
+            Some(s) => break s,
+            None if t0.elapsed() > Duration::from_secs(180) => {
+                let _ = child.kill();
+                panic!("{tag}: PS did not finish within 180s");
+            }
+            None => std::thread::sleep(Duration::from_millis(20)),
+        }
+    };
+    let mut err = String::new();
+    if let Some(mut pipe) = child.stderr.take() {
+        let _ = pipe.read_to_string(&mut err);
+    }
+    assert!(status.success(), "{tag}: PS failed ({status}): {err}");
+}
+
+/// (a) SIGKILL at the round-5 barrier, restart with `--resume` on the SAME
+/// port: the four live device threads reconnect into the resumed run and
+/// the metrics stream is byte-identical to an uninterrupted reference.
+#[test]
+fn ps_kill9_at_a_barrier_resumes_byte_identically_under_live_devices() {
+    let ref_path = tmp_path("kill_ref.jsonl");
+    let metrics = tmp_path("kill.jsonl");
+    let dir = tmp_path("kill_dir");
+    run_with(base_cfg(ref_path.to_str().unwrap(), "", 0));
+    let want = step_fields(&ref_path);
+    assert_eq!(want.len(), 24);
+
+    let listen = free_addr();
+    let mut ps1 = ps_command(&listen, &metrics, &dir).spawn().expect("spawn PS1");
+    let devices: Vec<_> = (0..4)
+        .map(|k| {
+            let cfg = device_cfg();
+            let addrs = vec![listen.clone()];
+            std::thread::spawn(move || run_remote_device(&cfg, k, &addrs))
+        })
+        .collect();
+
+    // the round-5 snapshot appearing == the barrier has quiesced; every
+    // device has already cut its own link for round 6 and sits in ≥1.5 s
+    // of backoff, so the SIGKILL below hits an idle PS
+    let snap = dir.join(Checkpoint::file_name(5));
+    wait_until("the round-5 checkpoint", Duration::from_secs(120), || snap.exists());
+    ps1.kill().expect("SIGKILL PS1");
+    let _ = ps1.wait();
+
+    // restart on the SAME port (SO_REUSEADDR) with --resume; the devices'
+    // retry loops re-Hello into the resumed run
+    let mut cmd = ps_command(&listen, &metrics, &dir);
+    cmd.arg("--resume").arg(&snap);
+    let ps2 = cmd.spawn().expect("spawn PS2");
+    for (k, h) in devices.into_iter().enumerate() {
+        let rep = h.join().unwrap().unwrap_or_else(|e| panic!("device {k} died: {e}"));
+        assert!(rep.up_bits > 0, "device {k} accounted no uplink traffic");
+        assert!(rep.retry_attempts > 0, "device {k} never exercised its retry loop");
+    }
+    expect_exit("resume", ps2);
+
+    assert_eq!(step_fields(&metrics), want, "recovery diverged from the uninterrupted run");
+    let s = summary_json(&metrics);
+    assert_eq!(s.get("ps_restarts").and_then(|v| v.as_f64()), Some(1.0));
+    assert!(
+        s.get("recover_s").and_then(|v| v.as_f64()).unwrap() >= 0.0,
+        "time-to-recover must be reported"
+    );
+
+    std::fs::remove_file(&ref_path).ok();
+    std::fs::remove_file(&metrics).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// (b) Device migration: the devices carry a fallback address list, the
+/// primary PS dies at the barrier, and its successor — listening on a
+/// DIFFERENT port — adopts them from its loaded snapshot. The handover
+/// must be invisible to the trajectory.
+#[test]
+fn devices_migrate_to_a_second_ps_mid_run() {
+    let ref_path = tmp_path("mig_ref.jsonl");
+    let metrics = tmp_path("mig.jsonl");
+    let dir = tmp_path("mig_dir");
+    run_with(base_cfg(ref_path.to_str().unwrap(), "", 0));
+    let want = step_fields(&ref_path);
+
+    let (addr_a, addr_b) = (free_addr(), free_addr());
+    let mut ps1 = ps_command(&addr_a, &metrics, &dir).spawn().expect("spawn PS1");
+    let devices: Vec<_> = (0..4)
+        .map(|k| {
+            let cfg = device_cfg();
+            let addrs = vec![addr_a.clone(), addr_b.clone()];
+            std::thread::spawn(move || run_remote_device(&cfg, k, &addrs))
+        })
+        .collect();
+
+    let snap = dir.join(Checkpoint::file_name(5));
+    wait_until("the round-5 checkpoint", Duration::from_secs(120), || snap.exists());
+    ps1.kill().expect("SIGKILL PS1");
+    let _ = ps1.wait();
+
+    let mut cmd = ps_command(&addr_b, &metrics, &dir);
+    cmd.arg("--resume").arg(&snap);
+    let ps2 = cmd.spawn().expect("spawn PS2");
+    for (k, h) in devices.into_iter().enumerate() {
+        let rep = h.join().unwrap().unwrap_or_else(|e| panic!("device {k} died: {e}"));
+        assert!(rep.up_bits > 0 && rep.down_bits > 0, "device {k}: step accounting broken");
+    }
+    expect_exit("migration", ps2);
+
+    // full step accounting, finite losses, and the exact trajectory
+    let got = step_fields(&metrics);
+    assert_eq!(got.len(), 24, "migrated fleet must complete all 24 steps");
+    assert_eq!(got, want, "migration perturbed the trajectory");
+
+    std::fs::remove_file(&ref_path).ok();
+    std::fs::remove_file(&metrics).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// (c) Deterministic server-side chaos: `pscrash[round=T]` and
+/// `pscrash[send=N]` runs are reproducible AND trajectory-neutral — the
+/// in-process crash restores from the just-written snapshot through the
+/// real CRC-checked decode path, so metrics match a calm run exactly.
+#[test]
+fn pscrash_scenario_is_deterministic_and_trajectory_neutral() {
+    let calm_path = tmp_path("pscrash_calm.jsonl");
+    run_with(base_cfg(calm_path.to_str().unwrap(), "", 0));
+    let want = step_fields(&calm_path);
+
+    let crash_run = |tag: &str, spec: &str| -> (Vec<String>, splitfc::coordinator::TrainSummary) {
+        let metrics = tmp_path(&format!("pscrash_{tag}.jsonl"));
+        let dir = tmp_path(&format!("pscrash_{tag}_dir"));
+        let mut cfg = base_cfg(metrics.to_str().unwrap(), dir.to_str().unwrap(), 2);
+        cfg.transport = TransportKind::Tcp;
+        cfg.scenario = ScenarioSpec::parse(spec).unwrap();
+        let s = run_with(cfg);
+        let fields = step_fields(&metrics);
+        std::fs::remove_file(&metrics).ok();
+        std::fs::remove_dir_all(&dir).ok();
+        (fields, s)
+    };
+
+    let (a, sa) = crash_run("r2_a", "pscrash[round=2]");
+    let (b, sb) = crash_run("r2_b", "pscrash[round=2]");
+    assert_eq!(a, b, "pscrash[round=2] must be deterministic across runs");
+    assert_eq!(a, want, "an in-process PS crash must not perturb the trajectory");
+    assert_eq!(sa.ps_restarts, 1, "exactly one restart per pscrash clause");
+    assert_eq!(sb.ps_restarts, 1);
+    assert!(sa.recover_s >= 0.0 && sa.recover_s.is_finite());
+
+    // the send-ordinal form fires at the first barrier past the threshold
+    let (c, sc) = crash_run("s1", "pscrash[send=1]");
+    assert_eq!(c, want, "pscrash[send=N] must be trajectory-neutral too");
+    assert_eq!(sc.ps_restarts, 1);
+
+    std::fs::remove_file(&calm_path).ok();
+}
+
+/// (d) A snapshot written under a pscrash scenario names a different
+/// trajectory than a calm config: resuming it without the scenario must
+/// fail with the typed fingerprint mismatch, leaving the metrics file
+/// untouched.
+#[test]
+fn pscrash_checkpoint_refuses_a_calm_resume_without_mutating_state() {
+    let metrics = tmp_path("refuse.jsonl");
+    let dir = tmp_path("refuse_dir");
+    let mut cfg = base_cfg(metrics.to_str().unwrap(), dir.to_str().unwrap(), 2);
+    cfg.transport = TransportKind::Tcp;
+    cfg.scenario = ScenarioSpec::parse("pscrash[round=2]").unwrap();
+    run_with(cfg);
+    let snap = dir.join(Checkpoint::file_name(4));
+    assert!(snap.exists());
+    let metrics_before = std::fs::read(&metrics).unwrap();
+
+    // calm config, same everything else: only the scenario (and therefore
+    // the fingerprint) differs
+    let mut cfg = base_cfg(metrics.to_str().unwrap(), "", 0);
+    cfg.resume = snap.to_str().unwrap().to_string();
+    let msg = Trainer::new(cfg).err().expect("calm resume must be refused").to_string();
+    assert!(msg.contains("fingerprint"), "want a fingerprint mismatch, got: {msg}");
+    assert_eq!(
+        std::fs::read(&metrics).unwrap(),
+        metrics_before,
+        "a refused resume must not touch the metrics file"
+    );
+
+    std::fs::remove_file(&metrics).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}

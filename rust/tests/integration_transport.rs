@@ -138,7 +138,8 @@ fn remote_device_process_joins_over_tcp_byte_identically() {
     let addr = tr.listen_addr().expect("tcp trainer listens").to_string();
     let mut remote_cfg = base_cfg("");
     remote_cfg.transport = TransportKind::Tcp;
-    let remote = std::thread::spawn(move || run_remote_device(&remote_cfg, 3, &addr));
+    let remote =
+        std::thread::spawn(move || run_remote_device(&remote_cfg, 3, std::slice::from_ref(&addr)));
     let s = tr.run().unwrap();
     let rep = remote.join().unwrap().expect("remote device run");
     assert_eq!(s.steps, 20, "PS must count the remote device's commits");
